@@ -1,0 +1,71 @@
+//! Complex Mars-yard mission on the cycle-accurate FPGA simulator.
+//!
+//! ```bash
+//! cargo run --release --example mars_complex_mission
+//! ```
+//!
+//! Trains the complex-environment MLP (20-4-1, A=40, |S|=1800 — the paper's
+//! complex configuration) on the 60×30 Mars-yard traverse, comparing the
+//! fixed- and floating-point datapaths on *identical* terrain and seeds:
+//! modeled on-device time, energy (Tables 6–8) and the learning outcome.
+
+use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::env::{ComplexRoverEnv, Environment};
+use qfpga::fpga::power::{power_w, PowerCoeffs};
+use qfpga::nn::params::QNetParams;
+use qfpga::qlearn::backend::FpgaSimBackend;
+use qfpga::qlearn::{train, NeuralQLearner, Policy};
+use qfpga::util::Rng;
+
+const EPISODES: usize = 60;
+const MAX_STEPS: usize = 150;
+const SEED: u64 = 485; // XC7VX485T
+
+fn run(prec: Precision) -> qfpga::error::Result<()> {
+    let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+    let mut rng = Rng::seeded(SEED);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    let backend = FpgaSimBackend::new(net, prec, params, Hyper::default());
+    let mut learner = NeuralQLearner::new(backend, Policy::default_training());
+
+    let mut env = ComplexRoverEnv::new(SEED);
+    assert_eq!(env.state_space(), 1800, "paper's |S|");
+    let mut train_rng = Rng::seeded(SEED ^ 1);
+    let report = train(&mut learner, &mut env, EPISODES, MAX_STEPS, &mut train_rng)
+        ?;
+
+    let acc = learner.backend.accelerator();
+    let stats = acc.stats();
+    let modeled_ms = acc.modeled_time_us() / 1e3;
+    let watts = power_w(&net, prec, &PowerCoeffs::default());
+    let energy_j = watts * acc.modeled_time_us() / 1e6;
+    let (first, last) = report.first_last_mean_reward(15);
+
+    println!("--- {} datapath ---", prec.as_str());
+    println!(
+        "  {} q-updates + {} action-selection sweeps = {} modeled cycles",
+        stats.updates, stats.forwards, stats.cycles
+    );
+    println!(
+        "  on-device time {modeled_ms:.2} ms @150 MHz; power {watts:.1} W; energy {energy_j:.4} J"
+    );
+    println!(
+        "  host wall {:.1}s; learning: first-15 {first:+.3} -> last-15 {last:+.3}",
+        report.wall_seconds
+    );
+    Ok(())
+}
+
+fn main() -> qfpga::error::Result<()> {
+    println!(
+        "complex Mars-yard mission: MLP 20-4-1, A=40, {EPISODES} episodes × ≤{MAX_STEPS} steps"
+    );
+    run(Precision::Fixed)?;
+    run(Precision::Float)?;
+    println!(
+        "shape check (paper Tables 6/8): fixed is ~44× faster per update (3.49 vs 155 µs \
+         modeled) and draws ~1.3× less power — energy favors fixed point overwhelmingly."
+    );
+    println!("mars_complex_mission OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser on the
+rust side (HloModuleProto::from_text_file) reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Writes one `<name>.hlo.txt` per artifact plus `manifest.json`, the contract
+consumed by rust/src/runtime/artifact.rs (shapes, dtypes, argument order,
+hyper-parameters, fixed-point format, LUT spec).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import ArtifactSpec, all_artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unpacks a tuple, even for single results).
+
+    Two printer options are load-bearing for the xla_extension 0.5.1 parser
+    on the rust side:
+
+    * ``print_large_constants=True`` — the default printer elides arrays
+      above a size threshold as ``constant({...})``, and the old parser
+      silently fills such constants with garbage. Our sigmoid/derivative
+      ROMs are 1024-entry constants, so they MUST be printed in full.
+    * ``print_metadata=False`` — jax >= 0.8 emits ``source_end_line`` etc.
+      in op metadata, attributes the 0.5.1 text parser rejects outright.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _shape_entry(name: str, s: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_artifact(spec: ArtifactSpec, outdir: pathlib.Path) -> dict:
+    fn = model.build_fn(spec)
+    in_specs = model.input_specs(spec)
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{spec.name}.hlo.txt"
+    (outdir / fname).write_text(text)
+
+    out_shapes = jax.eval_shape(fn, *in_specs)
+    entry = {
+        "file": fname,
+        "kind": spec.kind,
+        "arch": spec.net.arch,
+        "env": spec.net.env,
+        "precision": spec.precision,
+        "d": spec.net.d,
+        "h": spec.net.h,
+        "a": spec.net.a,
+        "batch": spec.batch,
+        "hyper": dataclasses.asdict(spec.hyper),
+        "fixed": dataclasses.asdict(spec.fixed) if spec.fixed else None,
+        "lut": dataclasses.asdict(spec.lut),
+        "inputs": [_shape_entry(n, s)
+                   for n, s in zip(model.input_names(spec), in_specs)],
+        "outputs": [_shape_entry(n, s)
+                    for n, s in zip(model.output_names(spec), out_shapes)],
+    }
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts",
+                    help="directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to build")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    specs = all_artifacts()
+    if args.only:
+        keys = args.only.split(",")
+        specs = [s for s in specs if any(k in s.name for k in keys)]
+
+    manifest = {"version": 1, "artifacts": {}}
+    for spec in specs:
+        entry = lower_artifact(spec, outdir)
+        manifest["artifacts"][spec.name] = entry
+        print(f"  wrote {entry['file']:45s} "
+              f"({len(entry['inputs'])} in / {len(entry['outputs'])} out)")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts "
+          f"to {outdir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

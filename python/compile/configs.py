@@ -1,0 +1,143 @@
+"""Experiment configurations shared by L1 kernels, L2 models and aot.py.
+
+Mirrors the paper's four architecture/environment combinations (Section 5):
+
+* simple environment  — state+action vector D = 6 (4 state dims + 2 action
+  dims), A = 6 actions per state.
+* complex environment — D = 20, A = 40, |S| = 1800.
+* perceptron — single neuron (D -> 1).
+* MLP        — one hidden layer of 4 neurons (D -> 4 -> 1); 11 total "neurons"
+  simple (6+4+1), 25 complex (20+4+1), matching the paper's counts.
+
+The rust side (rust/src/config.rs) carries the same presets; the AOT manifest
+(artifacts/manifest.json) is the contract between the two.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+HIDDEN = 4  # paper: "4 hidden layer neurons"
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSpec:
+    """Qm.n fixed point: `word` total bits (incl. sign), `frac` fraction bits.
+
+    Default Q(18,12): 18-bit words feed the DSP48E1 18x25 multiplier directly
+    (see DESIGN.md section 7.2); 12 fraction bits keep sigmoid-LUT quantization
+    below the LSB of the table.
+    """
+
+    word: int = 18
+    frac: int = 12
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.word - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.word - 1))
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class LutSpec:
+    """Sigmoid ROM: `size` entries sampled uniformly over [-xmax, xmax].
+
+    Mirrors the paper's look-up-table activation (Section 3): inputs are
+    clipped to the table range and mapped to the nearest entry.
+    """
+
+    size: int = 1024
+    xmax: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    """Q-learning hyper-parameters (paper Eq. 4, 8, 9)."""
+
+    alpha: float = 0.5  # Q-error scaling (Eq. 8)
+    gamma: float = 0.9  # discount
+    lr: float = 0.25    # C, the backprop learning factor (Eq. 9/13)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """One paper configuration: architecture x environment."""
+
+    name: str
+    arch: str  # "perceptron" | "mlp"
+    env: str   # "simple" | "complex"
+    d: int     # state+action vector width
+    h: int     # hidden neurons (0 for perceptron)
+    a: int     # actions per state
+
+    @property
+    def n_params(self) -> int:
+        if self.arch == "perceptron":
+            return self.d + 1
+        return self.d * self.h + self.h + self.h + 1
+
+
+SIMPLE = dict(env="simple", d=6, a=6)
+COMPLEX = dict(env="complex", d=20, a=40)
+
+CONFIGS = {
+    "perceptron_simple": NetConfig(name="perceptron_simple", arch="perceptron", h=0, **SIMPLE),
+    "perceptron_complex": NetConfig(name="perceptron_complex", arch="perceptron", h=0, **COMPLEX),
+    "mlp_simple": NetConfig(name="mlp_simple", arch="mlp", h=HIDDEN, **SIMPLE),
+    "mlp_complex": NetConfig(name="mlp_complex", arch="mlp", h=HIDDEN, **COMPLEX),
+}
+
+PRECISIONS = ("float", "fixed")
+
+DEFAULT_FIXED = FixedSpec()
+DEFAULT_LUT = LutSpec()
+DEFAULT_HYPER = Hyper()
+
+# Batched-training artifact: one XLA call applies this many sequential
+# Q-updates (lax.scan) — amortizes PJRT dispatch on the rust hot path.
+SCAN_BATCH = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """Fully-resolved description of one AOT artifact."""
+
+    net: NetConfig
+    precision: str                 # "float" | "fixed"
+    kind: str                      # "forward" | "qupdate" | "train_batch"
+    fixed: Optional[FixedSpec]
+    lut: LutSpec
+    hyper: Hyper
+    batch: int = 1
+
+    @property
+    def name(self) -> str:
+        return f"{self.net.name}_{self.precision}_{self.kind}"
+
+
+def all_artifacts(kinds=("forward", "qupdate", "train_batch")) -> list[ArtifactSpec]:
+    specs = []
+    for net in CONFIGS.values():
+        for prec in PRECISIONS:
+            fixed = DEFAULT_FIXED if prec == "fixed" else None
+            for kind in kinds:
+                specs.append(
+                    ArtifactSpec(
+                        net=net,
+                        precision=prec,
+                        kind=kind,
+                        fixed=fixed,
+                        lut=DEFAULT_LUT,
+                        hyper=DEFAULT_HYPER,
+                        batch=SCAN_BATCH if kind == "train_batch" else 1,
+                    )
+                )
+    return specs

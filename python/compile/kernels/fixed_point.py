@@ -1,0 +1,54 @@
+"""Qm.n fixed-point emulation used by the fixed-precision kernels.
+
+The paper's fixed-point datapath (Section 3, Tables 1-8) is modelled as
+fake-quantization: every value that would live in an 18-bit register on the
+FPGA is rounded to the Q(word, frac) grid and saturated. Arithmetic between
+quantizations is exact (float32 holds the <= 2*frac-bit products of the tiny
+nets here), so the sequence
+
+    q(q(a) * q(b))         ==  DSP48 multiply + round
+    q(sum_i q(a_i * b_i))  ==  wide accumulator + single round
+
+matches the integer datapath in rust/src/fixed/ to <= 1 LSB (the rust side
+uses the same round-half-even convention; see tests/test_fixed_vs_ref.py and
+rust tests `fixed::tests::matches_python_convention`).
+
+All helpers are jnp-traceable and run inside Pallas interpret-mode kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs import FixedSpec
+
+
+def quantize(x: jnp.ndarray, spec: FixedSpec) -> jnp.ndarray:
+    """Round `x` to the Q(word, frac) grid with saturation.
+
+    jnp.round implements round-half-even, matching the rust implementation
+    (`Fixed::from_f64`). Result stays float32 but only takes representable
+    values k / 2^frac with qmin <= k <= qmax.
+    """
+    scaled = jnp.round(x * spec.scale)
+    scaled = jnp.clip(scaled, float(spec.qmin), float(spec.qmax))
+    return scaled / spec.scale
+
+
+def qmul(a: jnp.ndarray, b: jnp.ndarray, spec: FixedSpec) -> jnp.ndarray:
+    """Fixed-point multiply: exact product, single rounding (DSP48 semantics)."""
+    return quantize(a * b, spec)
+
+
+def qdot(x: jnp.ndarray, w: jnp.ndarray, spec: FixedSpec) -> jnp.ndarray:
+    """MAC chain x @ w with a wide accumulator and one final rounding.
+
+    Matches the paper's multiplier+accumulator block (Fig. 4): products are
+    kept at full 2*frac precision in the accumulator; only the accumulator
+    output is rounded back to Q(word, frac).
+    """
+    return quantize(jnp.matmul(x, w), spec)
+
+
+def qadd(a: jnp.ndarray, b: jnp.ndarray, spec: FixedSpec) -> jnp.ndarray:
+    return quantize(a + b, spec)

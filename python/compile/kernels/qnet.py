@@ -1,0 +1,274 @@
+"""L1 — Pallas kernels for the Q-learning accelerator hot path.
+
+Two kernels per configuration, mirroring the paper's two hardware blocks:
+
+* `forward` — the feed-forward step (Fig. 4 / Fig. 9): Q-values for all A
+  actions of one state. Used on the action-selection path.
+* `qupdate` — the fused full Q-update (Fig. 6-8, 10): both feed-forward
+  sweeps (current + next state), error capture (Eq. 8), and backpropagation
+  with the delta / delta-W generators (Eq. 7, 9-14), in ONE kernel launch.
+  One launch == one paper "Q-update", the unit all the paper's tables are
+  expressed in.
+
+Hardware adaptation (DESIGN.md section 8): the paper streams one state-action
+vector at a time through a MAC + sigmoid-ROM pipeline with all weights
+resident in BRAM/FF. On TPU the analogue is: the whole parameter set and the
+(A, D) activation tile are VMEM-resident for the duration of the kernel
+(BlockSpecs map full arrays, no grid), the A serial dot products become one
+(A, D) @ (D, H) MXU matmul, the sigmoid ROM becomes a VMEM-resident gather
+table (passed to the kernel as an input operand — the Pallas analogue of
+BRAM init data), and the paper's "separate resources" for delta and delta-W
+generation become a fused epilogue (outer products on the MXU).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is exactly what the
+rust runtime loads. Real-TPU performance is estimated analytically in
+DESIGN.md section 9 / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+
+from ..configs import FixedSpec, Hyper, LutSpec, NetConfig
+from . import fixed_point as fxp
+from . import sigmoid as sg
+
+
+def _quant_fn(fixed: Optional[FixedSpec]):
+    if fixed is None:
+        return lambda x: x
+    return lambda x: fxp.quantize(x, fixed)
+
+
+class _Activation:
+    """Activation plumbing for kernel bodies.
+
+    Pallas kernels may not capture array constants, so the sigmoid /
+    derivative ROMs are threaded through the kernel as *input operands*
+    (`extra_inputs`, appended after the regular inputs). `bind` consumes the
+    corresponding refs inside the kernel body and returns (f, fprime)
+    callables over loaded VMEM values.
+    """
+
+    def __init__(self, lut: Optional[LutSpec], fixed: Optional[FixedSpec],
+                 need_deriv: bool):
+        self.lut = lut
+        self.qz = _quant_fn(fixed)
+        self.need_deriv = need_deriv
+        if lut is None:
+            self.extra_inputs: tuple = ()
+        else:
+            tabs = [self.qz(jnp.asarray(sg.build_sigmoid_table(lut)))]
+            if need_deriv:
+                tabs.append(self.qz(jnp.asarray(sg.build_deriv_table(lut))))
+            self.extra_inputs = tuple(tabs)
+
+    @property
+    def n_extra(self) -> int:
+        return len(self.extra_inputs)
+
+    def bind(self, table_refs):
+        qz, lut = self.qz, self.lut
+        if lut is None:
+            f = lambda x: qz(sg.sigmoid_exact(x))
+            fp = lambda x: qz(sg.sigmoid_deriv_exact(x))
+            return f, fp
+        table = table_refs[0][...]
+        f = lambda x: sg.lut_lookup(table, x, lut)
+        if not self.need_deriv:
+            return f, None
+        dtable = table_refs[1][...]
+        fp = lambda x: sg.lut_lookup(dtable, x, lut)
+        return f, fp
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward kernels
+# ---------------------------------------------------------------------------
+
+def make_forward(cfg: NetConfig,
+                 fixed: Optional[FixedSpec] = None,
+                 lut: Optional[LutSpec] = None,
+                 a: Optional[int] = None):
+    """Build the feed-forward pallas_call: (params, sa) -> q (A,).
+
+    `a` overrides the action-batch size (defaults to cfg.a) so tests can
+    sweep shapes.
+    """
+    a = cfg.a if a is None else a
+    qz = _quant_fn(fixed)
+    act = _Activation(lut, fixed, need_deriv=False)
+    out = jax.ShapeDtypeStruct((a,), jnp.float32)
+
+    if cfg.arch == "perceptron":
+        def body(sa_ref, w_ref, b_ref, *rest):
+            (*tabs, q_ref) = rest
+            f, _ = act.bind(tabs)
+            # Eq. 5/6 over the whole action batch: one (A,D)@(D,1) MXU tile.
+            sa, w, b = qz(sa_ref[...]), qz(w_ref[...]), qz(b_ref[...])
+            pre = qz(jnp.matmul(sa, w)[:, 0] + b[0])  # MAC array + bias
+            q_ref[...] = f(pre)                       # sigmoid ROM read
+    else:
+        def body(sa_ref, w1_ref, b1_ref, w2_ref, b2_ref, *rest):
+            (*tabs, q_ref) = rest
+            f, _ = act.bind(tabs)
+            # Fig. 9: two MAC stages with a sigmoid ROM between and after.
+            sa = qz(sa_ref[...])
+            w1, b1 = qz(w1_ref[...]), qz(b1_ref[...])
+            w2, b2 = qz(w2_ref[...]), qz(b2_ref[...])
+            pre1 = qz(jnp.matmul(sa, w1) + b1)        # (A, H) hidden MACs
+            hid = f(pre1)
+            pre2 = qz(jnp.matmul(hid, w2)[:, 0] + b2[0])
+            q_ref[...] = f(pre2)
+
+    call = pl.pallas_call(body, out_shape=out, interpret=True)
+
+    def forward(params, sa):
+        return call(sa, *params, *act.extra_inputs)
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# Fused Q-update kernels
+# ---------------------------------------------------------------------------
+
+def make_qupdate(cfg: NetConfig,
+                 hyper: Hyper,
+                 fixed: Optional[FixedSpec] = None,
+                 lut: Optional[LutSpec] = None,
+                 a: Optional[int] = None):
+    """Build the fused Q-update pallas_call.
+
+    Returns `update(params, sa_cur, sa_next, action, reward)` ->
+    `(new_params, q_cur, q_next, q_err)` where action is an int32 scalar and
+    reward a float32 scalar (shape-() or (1,) accepted).
+    """
+    a = cfg.a if a is None else a
+    qz = _quant_fn(fixed)
+    act = _Activation(lut, fixed, need_deriv=True)
+
+    if cfg.arch == "perceptron":
+        out = (
+            jax.ShapeDtypeStruct((cfg.d, 1), jnp.float32),  # w'
+            jax.ShapeDtypeStruct((1,), jnp.float32),        # b'
+            jax.ShapeDtypeStruct((a,), jnp.float32),        # q_cur
+            jax.ShapeDtypeStruct((a,), jnp.float32),        # q_next
+            jax.ShapeDtypeStruct((1,), jnp.float32),        # q_err
+        )
+
+        def body(sa_cur_ref, sa_next_ref, action_ref, reward_ref,
+                 w_ref, b_ref, *rest):
+            (*tabs, wo_ref, bo_ref, qcur_ref, qnext_ref, qerr_ref) = rest
+            f, fp = act.bind(tabs)
+            sa_cur, sa_next = qz(sa_cur_ref[...]), qz(sa_next_ref[...])
+            w, b = qz(w_ref[...]), qz(b_ref[...])
+            a_idx = action_ref[0]
+            reward = reward_ref[0]
+
+            # Feed-forward sweep 1 (current state) — Fig. 4, filling the
+            # "current state" FIFO of Fig. 6.
+            pre_c = qz(jnp.matmul(sa_cur, w)[:, 0] + b[0])
+            q_cur = f(pre_c)
+            # Sweep 2 (next state) — the "next state" FIFO.
+            pre_n = qz(jnp.matmul(sa_next, w)[:, 0] + b[0])
+            q_next = f(pre_n)
+
+            # Error capture block (Fig. 5, Eq. 8).
+            q_sa = jnp.take(q_cur, a_idx)
+            target = qz(reward + qz(hyper.gamma * jnp.max(q_next)))
+            err = qz(hyper.alpha * qz(target - q_sa))
+
+            # Backprop block (Eq. 7, 9, 10).
+            delta = qz(fp(jnp.take(pre_c, a_idx)) * err)
+            x = jnp.take(sa_cur, a_idx, axis=0)
+            dw = qz(hyper.lr * qz(x * delta))
+            db = qz(hyper.lr * delta)
+
+            wo_ref[...] = qz(w + dw[:, None])
+            bo_ref[...] = qz(b + db[None])
+            qcur_ref[...] = q_cur
+            qnext_ref[...] = q_next
+            qerr_ref[...] = err[None]
+
+        n_params = 2
+    else:
+        out = (
+            jax.ShapeDtypeStruct((cfg.d, cfg.h), jnp.float32),  # w1'
+            jax.ShapeDtypeStruct((cfg.h,), jnp.float32),        # b1'
+            jax.ShapeDtypeStruct((cfg.h, 1), jnp.float32),      # w2'
+            jax.ShapeDtypeStruct((1,), jnp.float32),            # b2'
+            jax.ShapeDtypeStruct((a,), jnp.float32),            # q_cur
+            jax.ShapeDtypeStruct((a,), jnp.float32),            # q_next
+            jax.ShapeDtypeStruct((1,), jnp.float32),            # q_err
+        )
+
+        def body(sa_cur_ref, sa_next_ref, action_ref, reward_ref,
+                 w1_ref, b1_ref, w2_ref, b2_ref, *rest):
+            (*tabs, w1o_ref, b1o_ref, w2o_ref, b2o_ref,
+             qcur_ref, qnext_ref, qerr_ref) = rest
+            f, fp = act.bind(tabs)
+            sa_cur, sa_next = qz(sa_cur_ref[...]), qz(sa_next_ref[...])
+            w1, b1 = qz(w1_ref[...]), qz(b1_ref[...])
+            w2, b2 = qz(w2_ref[...]), qz(b2_ref[...])
+            a_idx = action_ref[0]
+            reward = reward_ref[0]
+
+            # Sweep 1: current state (internals kept for backprop).
+            pre1_c = qz(jnp.matmul(sa_cur, w1) + b1)      # (A, H)
+            hid_c = f(pre1_c)
+            pre2_c = qz(jnp.matmul(hid_c, w2)[:, 0] + b2[0])
+            q_cur = f(pre2_c)
+            # Sweep 2: next state.
+            pre1_n = qz(jnp.matmul(sa_next, w1) + b1)
+            hid_n = f(pre1_n)
+            pre2_n = qz(jnp.matmul(hid_n, w2)[:, 0] + b2[0])
+            q_next = f(pre2_n)
+
+            # Error capture (Eq. 8).
+            q_sa = jnp.take(q_cur, a_idx)
+            target = qz(reward + qz(hyper.gamma * jnp.max(q_next)))
+            err = qz(hyper.alpha * qz(target - q_sa))
+
+            # Backprop (Eq. 11-14) — delta generator then delta-W generator,
+            # the "separate resources" of Fig. 10 fused as one epilogue.
+            s2 = jnp.take(pre2_c, a_idx)                # output pre-activation
+            o1 = jnp.take(hid_c, a_idx, axis=0)         # (H,)
+            s1 = jnp.take(pre1_c, a_idx, axis=0)        # (H,)
+            x = jnp.take(sa_cur, a_idx, axis=0)         # (D,)
+
+            d2 = qz(fp(s2) * err)                       # Eq. 11
+            d1 = qz(fp(s1) * qz(d2 * w2[:, 0]))         # Eq. 12
+            dw2 = qz(hyper.lr * qz(o1 * d2))            # Eq. 13 (hidden->out)
+            db2 = qz(hyper.lr * d2)
+            dw1 = qz(hyper.lr * qz(x[:, None] * d1[None, :]))  # outer product
+            db1 = qz(hyper.lr * d1)
+
+            w1o_ref[...] = qz(w1 + dw1)                 # Eq. 14
+            b1o_ref[...] = qz(b1 + db1)
+            w2o_ref[...] = qz(w2 + dw2[:, None])
+            b2o_ref[...] = qz(b2 + db2[None])
+            qcur_ref[...] = q_cur
+            qnext_ref[...] = q_next
+            qerr_ref[...] = err[None]
+
+        n_params = 4
+
+    call = pl.pallas_call(body, out_shape=out, interpret=True)
+
+    def update(params, sa_cur, sa_next, action, reward):
+        action = jnp.asarray(action, jnp.int32).reshape((1,))
+        reward = jnp.asarray(reward, jnp.float32).reshape((1,))
+        res = call(sa_cur, sa_next, action, reward, *params,
+                   *act.extra_inputs)
+        new_params = tuple(res[:n_params])
+        q_cur, q_next, q_err = res[n_params], res[n_params + 1], res[n_params + 2]
+        return new_params, q_cur, q_next, q_err[0]
+
+    return update

@@ -1,0 +1,212 @@
+"""Pure-jnp reference ("oracle") for the Q-learning accelerator math.
+
+Implements the paper's equations directly, with no Pallas:
+
+* Eq. 5/6 — perceptron feed-forward (weighted sum + sigmoid),
+* Eq. 7/8 — Q-error capture and output delta,
+* Eq. 9/10 — perceptron weight update,
+* Eq. 11-14 — MLP backpropagation (output delta, hidden deltas, weight
+  updates via the delta / delta-W generators of Fig. 10).
+
+Every Pallas kernel in qnet.py is tested against these functions
+(python/tests/), and the rust CPU baseline (rust/src/nn/) and the FPGA
+datapath simulator (rust/src/fpga/) reproduce the same chain of operations —
+see rust integration test `backend_equiv`.
+
+Conventions
+-----------
+* `sa` is the (A, D) matrix of state-action encodings: row i is the input
+  vector for evaluating action i in the given state. The paper runs the
+  feed-forward block A times serially; evaluating the A rows as one batch is
+  the same math (DESIGN.md section 7.5).
+* Perceptron params: (w (D,1), b (1,)). MLP params: (w1 (D,H), b1 (H,),
+  w2 (H,1), b2 (1,)).
+* `fixed=None` -> float32 datapath; `fixed=FixedSpec` -> every register
+  value is fake-quantized to the Q(word,frac) grid (see fixed_point.py).
+* `lut=None` -> exact sigmoid; `lut=LutSpec` -> ROM lookup for both the
+  activation and its derivative, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import FixedSpec, Hyper, LutSpec, NetConfig
+from . import fixed_point as fxp
+from . import sigmoid as sg
+
+
+# ---------------------------------------------------------------------------
+# Activation plumbing
+# ---------------------------------------------------------------------------
+
+def make_activation(lut: Optional[LutSpec], fixed: Optional[FixedSpec]):
+    """Return (f, fprime) callables matching the configured datapath.
+
+    With a LUT the table entries themselves are quantized when the datapath
+    is fixed point — the ROM stores Q(word,frac) words on the FPGA.
+    """
+    if lut is None:
+        f, fp = sg.sigmoid_exact, sg.sigmoid_deriv_exact
+        if fixed is None:
+            return f, fp
+        return (lambda x: fxp.quantize(f(x), fixed),
+                lambda x: fxp.quantize(fp(x), fixed))
+
+    table = jnp.asarray(sg.build_sigmoid_table(lut))
+    dtable = jnp.asarray(sg.build_deriv_table(lut))
+    if fixed is not None:
+        table = fxp.quantize(table, fixed)
+        dtable = fxp.quantize(dtable, fixed)
+    return (lambda x: sg.lut_lookup(table, x, lut),
+            lambda x: sg.lut_lookup(dtable, x, lut))
+
+
+def _q(x, fixed):
+    return x if fixed is None else fxp.quantize(x, fixed)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: NetConfig, key: jax.Array, scale: float = 0.5):
+    """Small random weights; biases zero (paper does not specify init)."""
+    if cfg.arch == "perceptron":
+        return (
+            scale * jax.random.normal(key, (cfg.d, 1), jnp.float32),
+            jnp.zeros((1,), jnp.float32),
+        )
+    k1, k2 = jax.random.split(key)
+    return (
+        scale * jax.random.normal(k1, (cfg.d, cfg.h), jnp.float32),
+        jnp.zeros((cfg.h,), jnp.float32),
+        scale * jax.random.normal(k2, (cfg.h, 1), jnp.float32),
+        jnp.zeros((1,), jnp.float32),
+    )
+
+
+def param_shapes(cfg: NetConfig):
+    if cfg.arch == "perceptron":
+        return ((cfg.d, 1), (1,))
+    return ((cfg.d, cfg.h), (cfg.h,), (cfg.h, 1), (1,))
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (Eq. 5, 6 / Fig. 4, 9)
+# ---------------------------------------------------------------------------
+
+def forward_full(cfg: NetConfig, params, sa,
+                 fixed: Optional[FixedSpec] = None,
+                 lut: Optional[LutSpec] = None):
+    """Feed-forward returning internals needed by backprop.
+
+    Returns a dict with:
+      q     (A,)   — Q-values (post-sigmoid output)
+      pre2  (A,)   — output-layer pre-activations (sigma)
+      hid   (A, H) — hidden activations (MLP only)
+      pre1  (A, H) — hidden pre-activations (MLP only)
+    """
+    f, _ = make_activation(lut, fixed)
+    sa = _q(sa, fixed)
+    if cfg.arch == "perceptron":
+        w, b = (_q(p, fixed) for p in params)
+        pre = _q(jnp.matmul(sa, w)[:, 0] + b[0], fixed)
+        return {"q": f(pre), "pre2": pre}
+    w1, b1, w2, b2 = (_q(p, fixed) for p in params)
+    pre1 = _q(jnp.matmul(sa, w1) + b1, fixed)
+    hid = f(pre1)
+    pre2 = _q(jnp.matmul(hid, w2)[:, 0] + b2[0], fixed)
+    return {"q": f(pre2), "pre2": pre2, "hid": hid, "pre1": pre1}
+
+
+def forward(cfg: NetConfig, params, sa,
+            fixed: Optional[FixedSpec] = None,
+            lut: Optional[LutSpec] = None):
+    """Q-values for all A actions: the paper's feed-forward step run A times."""
+    return forward_full(cfg, params, sa, fixed, lut)["q"]
+
+
+# ---------------------------------------------------------------------------
+# Q-update (Eq. 4, 7-14 / Fig. 5-7, 10)
+# ---------------------------------------------------------------------------
+
+def q_error(q_cur_a, q_next_max, reward, hyper: Hyper,
+            fixed: Optional[FixedSpec] = None):
+    """Eq. 8: Q_error = alpha * (r + gamma * opt Q(t+1) - Q(s,a))."""
+    target = _q(reward + _q(hyper.gamma * q_next_max, fixed), fixed)
+    return _q(hyper.alpha * _q(target - q_cur_a, fixed), fixed)
+
+
+def qupdate(cfg: NetConfig, params, sa_cur, sa_next, action, reward,
+            hyper: Hyper,
+            fixed: Optional[FixedSpec] = None,
+            lut: Optional[LutSpec] = None):
+    """One full paper Q-update: two feed-forward sweeps, error, backprop.
+
+    `action` is the index (int32 scalar) of the action taken in the current
+    state; `reward` a float scalar. Returns (new_params, aux) with aux
+    carrying q_cur (A,), q_next (A,), q_err ().
+    """
+    _, fprime = make_activation(lut, fixed)
+
+    cur = forward_full(cfg, params, sa_cur, fixed, lut)
+    nxt = forward_full(cfg, params, sa_next, fixed, lut)
+    q_cur, q_next = cur["q"], nxt["q"]
+
+    err = q_error(q_cur[action], jnp.max(q_next), reward, hyper, fixed)
+
+    x = _q(sa_cur, fixed)[action]  # (D,) input row of the taken action
+    lr = hyper.lr
+
+    if cfg.arch == "perceptron":
+        w, b = (_q(p, fixed) for p in params)
+        # Eq. 7: delta = f'(sigma) * Q_error
+        delta = _q(fprime(cur["pre2"][action]) * err, fixed)
+        # Eq. 9/10: dW = C * O * delta (O here is the input x_i), W += dW
+        dw = _q(lr * _q(x * delta, fixed), fixed)
+        db = _q(lr * delta, fixed)
+        new = (_q(w + dw[:, None], fixed), _q(b + db[None], fixed))
+        aux = {"q_cur": q_cur, "q_next": q_next, "q_err": err}
+        return new, aux
+
+    w1, b1, w2, b2 = (_q(p, fixed) for p in params)
+    o1 = cur["hid"][action]          # (H,) hidden activations for taken action
+    s1 = cur["pre1"][action]         # (H,) hidden pre-activations
+    s2 = cur["pre2"][action]         # ()  output pre-activation
+
+    # Eq. 11: output delta
+    d2 = _q(fprime(s2) * err, fixed)
+    # Eq. 12: hidden deltas — delta_i = f'(sigma_i) * sum_j delta_j W_ij
+    d1 = _q(fprime(s1) * _q(d2 * w2[:, 0], fixed), fixed)
+    # Eq. 13/14: delta-W generators + update
+    dw2 = _q(lr * _q(o1 * d2, fixed), fixed)           # (H,)
+    db2 = _q(lr * d2, fixed)                           # ()
+    dw1 = _q(lr * _q(jnp.outer(x, d1), fixed), fixed)  # (D, H)
+    db1 = _q(lr * d1, fixed)                           # (H,)
+
+    new = (
+        _q(w1 + dw1, fixed),
+        _q(b1 + db1, fixed),
+        _q(w2 + dw2[:, None], fixed),
+        _q(b2 + db2[None], fixed),
+    )
+    aux = {"q_cur": q_cur, "q_next": q_next, "q_err": err}
+    return new, aux
+
+
+# ---------------------------------------------------------------------------
+# Convenience: numpy transition generator for tests
+# ---------------------------------------------------------------------------
+
+def random_transition(cfg: NetConfig, rng: np.random.Generator):
+    """A random (sa_cur, sa_next, action, reward) tuple with paper shapes."""
+    sa_cur = rng.uniform(-1, 1, (cfg.a, cfg.d)).astype(np.float32)
+    sa_next = rng.uniform(-1, 1, (cfg.a, cfg.d)).astype(np.float32)
+    action = np.int32(rng.integers(0, cfg.a))
+    reward = np.float32(rng.uniform(-1, 1))
+    return sa_cur, sa_next, action, reward

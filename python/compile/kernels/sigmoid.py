@@ -1,0 +1,53 @@
+"""Sigmoid activation and its derivative, both exact and ROM/LUT forms.
+
+The paper (Section 3) implements the activation with a look-up table of
+pre-calculated sigmoid values stored in ROM, and a second LUT for the
+derivative used during backpropagation ("The derivative of the sigmoid is
+also implemented using a Look-up Table (ROM)"). We mirror that: a `size`-entry
+table sampled uniformly over [-xmax, xmax], nearest-entry lookup, inputs
+clipped to the table range.
+
+Tables are built once at trace time and become HLO constants, i.e. the ROM
+contents are baked into the artifact exactly like FPGA block-RAM init data.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import LutSpec
+
+
+def sigmoid_exact(x: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def sigmoid_deriv_exact(x: jnp.ndarray) -> jnp.ndarray:
+    s = sigmoid_exact(x)
+    return s * (1.0 - s)
+
+
+def build_sigmoid_table(lut: LutSpec) -> np.ndarray:
+    """ROM contents: sigmoid sampled at `size` points over [-xmax, xmax]."""
+    grid = np.linspace(-lut.xmax, lut.xmax, lut.size, dtype=np.float64)
+    return (1.0 / (1.0 + np.exp(-grid))).astype(np.float32)
+
+
+def build_deriv_table(lut: LutSpec) -> np.ndarray:
+    """ROM contents for f'(sigma), indexed by pre-activation sigma."""
+    grid = np.linspace(-lut.xmax, lut.xmax, lut.size, dtype=np.float64)
+    s = 1.0 / (1.0 + np.exp(-grid))
+    return (s * (1.0 - s)).astype(np.float32)
+
+
+def lut_index(x: jnp.ndarray, lut: LutSpec) -> jnp.ndarray:
+    """Address generator: clip to table range, map to nearest entry."""
+    xc = jnp.clip(x, -lut.xmax, lut.xmax)
+    idx = jnp.round((xc + lut.xmax) / (2.0 * lut.xmax) * (lut.size - 1))
+    return idx.astype(jnp.int32)
+
+
+def lut_lookup(table: jnp.ndarray, x: jnp.ndarray, lut: LutSpec) -> jnp.ndarray:
+    """ROM read: one BRAM access per element on the FPGA."""
+    return jnp.take(table, lut_index(x, lut), axis=0)

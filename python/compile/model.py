@@ -1,0 +1,165 @@
+"""L2 — JAX compute graphs for every AOT artifact.
+
+Each paper configuration (perceptron/MLP x simple/complex x float/fixed)
+gets three graphs, all calling the L1 Pallas kernels (kernels/qnet.py):
+
+* `forward`     — action-selection path: Q-values for all A actions.
+* `qupdate`     — one full Q-update (the unit of Tables 1-6).
+* `train_batch` — `SCAN_BATCH` sequential Q-updates under one `lax.scan`,
+  so the rust hot loop can amortize PJRT dispatch overhead across a whole
+  mini-trajectory (DESIGN.md section 9, L2 perf item).
+
+Argument and result conventions (the contract with rust/src/runtime/ —
+recorded machine-readably in artifacts/manifest.json):
+
+* parameters first, then data inputs; scalars travel as shape-(1,) arrays;
+* results are emitted as a tuple (lowered with return_tuple=True), updated
+  parameters first.
+
+Hyper-parameters (alpha, gamma, lr) and the activation ROM contents are
+baked into the artifact as constants, exactly like block-RAM init data in
+the paper's bitstream.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ArtifactSpec
+from .kernels import qnet, ref
+
+
+def _n_params(spec: ArtifactSpec) -> int:
+    return 2 if spec.net.arch == "perceptron" else 4
+
+
+def param_specs(spec: ArtifactSpec):
+    return [jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in ref.param_shapes(spec.net)]
+
+
+def input_specs(spec: ArtifactSpec) -> Sequence[jax.ShapeDtypeStruct]:
+    """Example-argument shapes used for AOT lowering, in call order."""
+    cfg, b = spec.net, spec.batch
+    ps = param_specs(spec)
+    sa = (cfg.a, cfg.d)
+    f32, i32 = jnp.float32, jnp.int32
+    if spec.kind == "forward":
+        return [*ps, jax.ShapeDtypeStruct(sa, f32)]
+    if spec.kind == "qupdate":
+        return [*ps,
+                jax.ShapeDtypeStruct(sa, f32),
+                jax.ShapeDtypeStruct(sa, f32),
+                jax.ShapeDtypeStruct((1,), i32),
+                jax.ShapeDtypeStruct((1,), f32)]
+    if spec.kind == "train_batch":
+        return [*ps,
+                jax.ShapeDtypeStruct((b, *sa), f32),
+                jax.ShapeDtypeStruct((b, *sa), f32),
+                jax.ShapeDtypeStruct((b,), i32),
+                jax.ShapeDtypeStruct((b,), f32)]
+    raise ValueError(f"unknown kind {spec.kind}")
+
+
+def output_names(spec: ArtifactSpec) -> Sequence[str]:
+    pn = (["w", "b"] if spec.net.arch == "perceptron"
+          else ["w1", "b1", "w2", "b2"])
+    if spec.kind == "forward":
+        return ["q"]
+    if spec.kind == "qupdate":
+        return [*pn, "q_cur", "q_next", "q_err"]
+    return [*pn, "q_err_batch"]
+
+
+def input_names(spec: ArtifactSpec) -> Sequence[str]:
+    pn = (["w", "b"] if spec.net.arch == "perceptron"
+          else ["w1", "b1", "w2", "b2"])
+    if spec.kind == "forward":
+        return [*pn, "sa"]
+    if spec.kind == "qupdate":
+        return [*pn, "sa_cur", "sa_next", "action", "reward"]
+    return [*pn, "sa_cur", "sa_next", "actions", "rewards"]
+
+
+def build_fn(spec: ArtifactSpec) -> Callable[..., Tuple[jnp.ndarray, ...]]:
+    """The traceable python function for one artifact."""
+    cfg, fixed, lut, hyper = spec.net, spec.fixed, spec.lut, spec.hyper
+    n = _n_params(spec)
+
+    if spec.kind == "forward":
+        fwd = qnet.make_forward(cfg, fixed=fixed, lut=lut)
+
+        def forward_fn(*args):
+            params, sa = args[:n], args[n]
+            return (fwd(params, sa),)
+
+        return forward_fn
+
+    upd = qnet.make_qupdate(cfg, hyper, fixed=fixed, lut=lut)
+
+    if spec.kind == "qupdate":
+        def qupdate_fn(*args):
+            params = args[:n]
+            sa_cur, sa_next, action, reward = args[n:]
+            new_params, q_cur, q_next, q_err = upd(
+                params, sa_cur, sa_next, action[0], reward[0])
+            return (*new_params, q_cur, q_next, q_err[None])
+
+        return qupdate_fn
+
+    def train_batch_fn(*args):
+        params = args[:n]
+        sa_cur, sa_next, actions, rewards = args[n:]
+
+        def step(p, xs):
+            sc, sn, a, r = xs
+            new_p, _, _, q_err = upd(p, sc, sn, a, r)
+            return new_p, q_err
+
+        new_params, q_errs = jax.lax.scan(
+            step, params, (sa_cur, sa_next, actions, rewards))
+        return (*new_params, q_errs)
+
+    return train_batch_fn
+
+
+def reference_fn(spec: ArtifactSpec) -> Callable[..., Tuple[jnp.ndarray, ...]]:
+    """Same contract as build_fn but implemented with the pure-jnp oracle —
+    used by tests to validate whole artifacts, not just kernels."""
+    cfg, fixed, lut, hyper = spec.net, spec.fixed, spec.lut, spec.hyper
+    n = _n_params(spec)
+
+    if spec.kind == "forward":
+        def fwd(*args):
+            return (ref.forward(cfg, args[:n], args[n], fixed=fixed, lut=lut),)
+        return fwd
+
+    def one(params, sa_cur, sa_next, action, reward):
+        return ref.qupdate(cfg, params, sa_cur, sa_next, action, reward,
+                           hyper, fixed=fixed, lut=lut)
+
+    if spec.kind == "qupdate":
+        def qupd(*args):
+            params = args[:n]
+            sa_cur, sa_next, action, reward = args[n:]
+            new_params, aux = one(params, sa_cur, sa_next, action[0], reward[0])
+            return (*new_params, aux["q_cur"], aux["q_next"], aux["q_err"][None])
+        return qupd
+
+    def batch(*args):
+        params = args[:n]
+        sa_cur, sa_next, actions, rewards = args[n:]
+
+        def step(p, xs):
+            sc, sn, a, r = xs
+            new_p, aux = one(p, sc, sn, a, r)
+            return new_p, aux["q_err"]
+
+        new_params, q_errs = jax.lax.scan(
+            step, params, (sa_cur, sa_next, actions, rewards))
+        return (*new_params, q_errs)
+
+    return batch

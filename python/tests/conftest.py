@@ -1,0 +1,51 @@
+"""Shared fixtures for the kernel/model test-suite."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile.configs import (
+    CONFIGS,
+    DEFAULT_FIXED,
+    DEFAULT_HYPER,
+    DEFAULT_LUT,
+    FixedSpec,
+    LutSpec,
+    NetConfig,
+)
+
+
+@pytest.fixture(params=list(CONFIGS.keys()))
+def net_cfg(request) -> NetConfig:
+    return CONFIGS[request.param]
+
+
+@pytest.fixture(params=["float", "fixed"])
+def precision(request) -> str:
+    return request.param
+
+
+@pytest.fixture
+def fixed_spec(precision) -> FixedSpec | None:
+    return DEFAULT_FIXED if precision == "fixed" else None
+
+
+@pytest.fixture(params=["lut", "exact"])
+def lut_spec(request) -> LutSpec | None:
+    return DEFAULT_LUT if request.param == "lut" else None
+
+
+@pytest.fixture
+def hyper():
+    return DEFAULT_HYPER
+
+
+@pytest.fixture
+def rng() -> np.random.Generator:
+    return np.random.default_rng(0xC0FFEE)
+
+
+@pytest.fixture
+def key() -> jax.Array:
+    return jax.random.PRNGKey(7)

@@ -1,0 +1,119 @@
+"""Unit + hypothesis tests for the Qm.n fake-quantization helpers.
+
+The rust implementation (rust/src/fixed/) must follow exactly these
+conventions; rust test `fixed::tests::matches_python_convention` pins the
+same vectors from VECTORS below.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.configs import FixedSpec
+from compile.kernels import fixed_point as fxp
+
+Q18_12 = FixedSpec(word=18, frac=12)
+Q16_8 = FixedSpec(word=16, frac=8)
+
+# Shared convention vectors: (spec, input, expected) — mirrored in rust.
+VECTORS = [
+    (Q18_12, 0.0, 0.0),
+    (Q18_12, 1.0, 1.0),
+    (Q18_12, -1.0, -1.0),
+    (Q18_12, 0.5, 0.5),
+    # round-half-even: 0.5 * 2^12 + 0.5 -> 2048.5 rounds to 2048 (even)
+    (Q18_12, (2048.5 / 4096.0), 2048.0 / 4096.0),
+    (Q18_12, (2049.5 / 4096.0), 2050.0 / 4096.0),
+    # saturation: Q(18,12) max = (2^17 - 1) / 2^12
+    (Q18_12, 100.0, (2**17 - 1) / 4096.0),
+    (Q18_12, -100.0, -(2**17) / 4096.0),
+]
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("spec,x,want", VECTORS)
+    def test_vectors(self, spec, x, want):
+        got = float(fxp.quantize(jnp.float32(x), spec))
+        assert got == pytest.approx(want, abs=1e-9)
+
+    def test_idempotent(self):
+        x = jnp.linspace(-3, 3, 101)
+        q1 = fxp.quantize(x, Q18_12)
+        q2 = fxp.quantize(q1, Q18_12)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+    def test_grid_membership(self):
+        x = jnp.asarray(np.random.default_rng(1).uniform(-20, 20, 1000),
+                        dtype=jnp.float32)
+        q = np.asarray(fxp.quantize(x, Q18_12))
+        scaled = q * Q18_12.scale
+        np.testing.assert_array_equal(scaled, np.round(scaled))
+        assert scaled.max() <= Q18_12.qmax
+        assert scaled.min() >= Q18_12.qmin
+
+    @given(st.floats(min_value=-1e6, max_value=1e6,
+                     allow_nan=False, allow_infinity=False))
+    @settings(max_examples=200, deadline=None)
+    def test_error_bound_or_saturated(self, x):
+        spec = Q18_12
+        q = float(fxp.quantize(jnp.float32(x), spec))
+        lsb = 1.0 / spec.scale
+        xf = float(jnp.float32(x))
+        if spec.qmin / spec.scale <= xf <= spec.qmax / spec.scale:
+            assert abs(q - xf) <= 0.5 * lsb + abs(xf) * 1e-6
+        else:
+            assert q in (spec.qmin / spec.scale, spec.qmax / spec.scale)
+
+    @given(st.integers(min_value=-(2**17), max_value=2**17 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_representable_values_are_fixpoints(self, k):
+        x = jnp.float32(k / Q18_12.scale)
+        q = float(fxp.quantize(x, Q18_12))
+        assert q == float(x)
+
+
+class TestOps:
+    def test_qmul_single_rounding(self):
+        a = fxp.quantize(jnp.float32(0.3), Q18_12)
+        b = fxp.quantize(jnp.float32(0.7), Q18_12)
+        got = float(fxp.qmul(a, b, Q18_12))
+        want = float(fxp.quantize(a * b, Q18_12))
+        assert got == want
+
+    def test_qdot_wide_accumulator(self):
+        """qdot rounds once at the end (DSP48 accumulator), which differs
+        from rounding every partial sum."""
+        rng = np.random.default_rng(3)
+        x = fxp.quantize(jnp.asarray(rng.uniform(-1, 1, (1, 16)), jnp.float32),
+                         Q18_12)
+        w = fxp.quantize(jnp.asarray(rng.uniform(-1, 1, (16, 1)), jnp.float32),
+                         Q18_12)
+        got = float(fxp.qdot(x, w, Q18_12)[0, 0])
+        want = float(fxp.quantize(jnp.matmul(x, w), Q18_12)[0, 0])
+        assert got == want
+
+    @given(st.lists(st.floats(-2, 2), min_size=1, max_size=32))
+    @settings(max_examples=100, deadline=None)
+    def test_qadd_commutative(self, xs):
+        a = fxp.quantize(jnp.asarray(xs, jnp.float32), Q18_12)
+        b = fxp.quantize(jnp.asarray(xs[::-1], jnp.float32), Q18_12)
+        ab = np.asarray(fxp.qadd(a, b, Q18_12))
+        ba = np.asarray(fxp.qadd(b, a, Q18_12))
+        np.testing.assert_array_equal(ab, ba)
+
+
+class TestSpecProperties:
+    def test_qmax_qmin(self):
+        assert Q18_12.qmax == 131071
+        assert Q18_12.qmin == -131072
+        assert Q18_12.scale == 4096.0
+
+    @pytest.mark.parametrize("word,frac", [(8, 4), (16, 8), (18, 12),
+                                           (24, 16), (32, 24)])
+    def test_range_monotone_in_word(self, word, frac):
+        s = FixedSpec(word=word, frac=frac)
+        assert s.qmax / s.scale > 0
+        assert s.qmin / s.scale < 0
+        assert s.qmax == -s.qmin - 1

@@ -1,0 +1,109 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""Hypothesis sweeps: the Pallas kernels must match ref.py for *arbitrary*
+shapes (A, D, H), precisions and transitions, not just the four paper
+configurations."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import (
+    DEFAULT_FIXED,
+    DEFAULT_HYPER,
+    DEFAULT_LUT,
+    FixedSpec,
+    Hyper,
+    LutSpec,
+    NetConfig,
+)
+from compile.kernels import qnet, ref
+
+ATOL = 1e-6
+
+
+def _cfg(arch, d, h, a):
+    return NetConfig(name=f"hyp_{arch}_{d}_{h}_{a}", arch=arch,
+                     env="hyp", d=d, h=h, a=a)
+
+
+def _rand_params(cfg, rng):
+    if cfg.arch == "perceptron":
+        return (rng.uniform(-1, 1, (cfg.d, 1)).astype(np.float32),
+                rng.uniform(-1, 1, (1,)).astype(np.float32))
+    return (rng.uniform(-1, 1, (cfg.d, cfg.h)).astype(np.float32),
+            rng.uniform(-1, 1, (cfg.h,)).astype(np.float32),
+            rng.uniform(-1, 1, (cfg.h, 1)).astype(np.float32),
+            rng.uniform(-1, 1, (1,)).astype(np.float32))
+
+
+arch_st = st.sampled_from(["perceptron", "mlp"])
+dim_st = st.integers(min_value=1, max_value=32)
+hid_st = st.integers(min_value=1, max_value=8)
+act_st = st.integers(min_value=1, max_value=48)
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+prec_st = st.sampled_from([None, DEFAULT_FIXED, FixedSpec(word=16, frac=8)])
+lut_st = st.sampled_from([None, DEFAULT_LUT, LutSpec(size=128, xmax=4.0)])
+
+
+@given(arch=arch_st, d=dim_st, h=hid_st, a=act_st, seed=seed_st,
+       fixed=prec_st, lut=lut_st)
+@settings(max_examples=40, deadline=None)
+def test_forward_shape_sweep(arch, d, h, a, seed, fixed, lut):
+    cfg = _cfg(arch, d, h, a)
+    rng = np.random.default_rng(seed)
+    params = _rand_params(cfg, rng)
+    sa = rng.uniform(-2, 2, (a, d)).astype(np.float32)
+
+    fwd = qnet.make_forward(cfg, fixed=fixed, lut=lut, a=a)
+    got = np.asarray(fwd(params, sa))
+    want = np.asarray(ref.forward(cfg, params, sa, fixed=fixed, lut=lut))
+    assert got.shape == (a,)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+@given(arch=arch_st, d=dim_st, h=hid_st, a=act_st, seed=seed_st,
+       fixed=prec_st,
+       alpha=st.floats(0.0, 1.0), gamma=st.floats(0.0, 1.0),
+       lr=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_qupdate_shape_and_hyper_sweep(arch, d, h, a, seed, fixed,
+                                       alpha, gamma, lr):
+    cfg = _cfg(arch, d, h, a)
+    hyper = Hyper(alpha=np.float32(alpha), gamma=np.float32(gamma),
+                  lr=np.float32(lr))
+    rng = np.random.default_rng(seed)
+    params = _rand_params(cfg, rng)
+    sa_cur = rng.uniform(-2, 2, (a, d)).astype(np.float32)
+    sa_next = rng.uniform(-2, 2, (a, d)).astype(np.float32)
+    action = np.int32(rng.integers(0, a))
+    reward = np.float32(rng.uniform(-2, 2))
+
+    upd = qnet.make_qupdate(cfg, hyper, fixed=fixed, lut=DEFAULT_LUT, a=a)
+    new_p, q_cur, q_next, q_err = upd(params, sa_cur, sa_next, action, reward)
+    want_p, aux = ref.qupdate(cfg, params, sa_cur, sa_next, action, reward,
+                              hyper, fixed=fixed, lut=DEFAULT_LUT)
+
+    for got_w, want_w in zip(new_p, want_p):
+        np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                                   atol=ATOL)
+    np.testing.assert_allclose(np.asarray(q_cur), np.asarray(aux["q_cur"]),
+                               atol=ATOL)
+    np.testing.assert_allclose(np.asarray(q_next), np.asarray(aux["q_next"]),
+                               atol=ATOL)
+    np.testing.assert_allclose(float(q_err), float(aux["q_err"]), atol=ATOL)
+
+
+@given(arch=arch_st, seed=seed_st)
+@settings(max_examples=10, deadline=None)
+def test_qupdate_is_pure(arch, seed):
+    """Two invocations with identical inputs give identical outputs — no
+    hidden state in the kernel wrapper."""
+    cfg = _cfg(arch, 6, 4, 6)
+    rng = np.random.default_rng(seed)
+    params = _rand_params(cfg, rng)
+    t = ref.random_transition(cfg, rng)
+    upd = qnet.make_qupdate(cfg, DEFAULT_HYPER)
+    p1, _, _, e1 = upd(params, *t)
+    p2, _, _, e2 = upd(params, *t)
+    assert float(e1) == float(e2)
+    for a_, b_ in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a_), np.asarray(b_))

@@ -1,0 +1,142 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Every (architecture, environment, precision, activation) combination is
+checked: feed-forward and the fused Q-update must match ref.py exactly
+(same op chain -> bitwise-identical float32 in interpret mode; we assert to
+1e-6 to stay robust against benign reassociation).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import DEFAULT_HYPER
+from compile.kernels import qnet, ref
+
+ATOL = 1e-6
+
+
+def _params(net_cfg, key):
+    return ref.init_params(net_cfg, key)
+
+
+class TestForward:
+    def test_matches_ref(self, net_cfg, fixed_spec, lut_spec, key, rng):
+        params = _params(net_cfg, key)
+        sa = rng.uniform(-1, 1, (net_cfg.a, net_cfg.d)).astype(np.float32)
+
+        fwd = qnet.make_forward(net_cfg, fixed=fixed_spec, lut=lut_spec)
+        got = np.asarray(fwd(params, sa))
+        want = np.asarray(ref.forward(net_cfg, params, sa,
+                                      fixed=fixed_spec, lut=lut_spec))
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_output_range_is_sigmoid(self, net_cfg, fixed_spec, lut_spec,
+                                     key, rng):
+        params = _params(net_cfg, key)
+        sa = rng.uniform(-4, 4, (net_cfg.a, net_cfg.d)).astype(np.float32)
+        fwd = qnet.make_forward(net_cfg, fixed=fixed_spec, lut=lut_spec)
+        q = np.asarray(fwd(params, sa))
+        assert q.shape == (net_cfg.a,)
+        assert np.all(q >= 0.0) and np.all(q <= 1.0)
+
+    def test_jit_compatible(self, net_cfg, key, rng):
+        params = _params(net_cfg, key)
+        sa = rng.uniform(-1, 1, (net_cfg.a, net_cfg.d)).astype(np.float32)
+        fwd = jax.jit(qnet.make_forward(net_cfg))
+        got = np.asarray(fwd(params, jnp.asarray(sa)))
+        want = np.asarray(ref.forward(net_cfg, params, sa))
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+class TestQUpdate:
+    def test_matches_ref(self, net_cfg, fixed_spec, lut_spec, key, rng):
+        params = _params(net_cfg, key)
+        sa_cur, sa_next, action, reward = ref.random_transition(net_cfg, rng)
+
+        upd = qnet.make_qupdate(net_cfg, DEFAULT_HYPER,
+                                fixed=fixed_spec, lut=lut_spec)
+        new_p, q_cur, q_next, q_err = upd(params, sa_cur, sa_next,
+                                          action, reward)
+        want_p, aux = ref.qupdate(net_cfg, params, sa_cur, sa_next,
+                                  action, reward, DEFAULT_HYPER,
+                                  fixed=fixed_spec, lut=lut_spec)
+
+        for got_w, want_w in zip(new_p, want_p):
+            np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                                       atol=ATOL)
+        np.testing.assert_allclose(np.asarray(q_cur), np.asarray(aux["q_cur"]),
+                                   atol=ATOL)
+        np.testing.assert_allclose(np.asarray(q_next), np.asarray(aux["q_next"]),
+                                   atol=ATOL)
+        np.testing.assert_allclose(float(q_err), float(aux["q_err"]), atol=ATOL)
+
+    def test_only_taken_action_row_changes_perceptron_sign(self, key, rng):
+        """Weight update direction must follow the Q-error sign (Eq. 9/10)."""
+        from compile.configs import CONFIGS
+        cfg = CONFIGS["perceptron_simple"]
+        params = _params(cfg, key)
+        sa_cur, sa_next, action, _ = ref.random_transition(cfg, rng)
+        sa_cur = np.abs(sa_cur)  # positive inputs -> dW sign == delta sign
+
+        upd = qnet.make_qupdate(cfg, DEFAULT_HYPER)
+        # Large positive reward -> positive error -> weights move up.
+        _, _, _, e_pos = upd(params, sa_cur, sa_next, action, np.float32(5.0))
+        new_p, _, _, e_neg = upd(params, sa_cur, sa_next, action,
+                                 np.float32(-5.0))
+        assert float(e_pos) > 0
+        assert float(e_neg) < 0
+        w_new = np.asarray(new_p[0])[:, 0]
+        w_old = np.asarray(params[0])[:, 0]
+        # negative error with positive inputs moves weights down
+        assert np.all(w_new <= w_old + ATOL)
+
+    def test_repeated_updates_reduce_qerror(self, net_cfg, key, rng):
+        """Driving the same transition repeatedly must shrink |Q_error| —
+        the learning loop actually learns (paper Section 2 state-flow).
+
+        gamma=0 makes the target stationary (pure r), and a small init keeps
+        the sigmoid out of its saturated tails so the perceptron can move."""
+        from compile.configs import Hyper
+        params = _params(net_cfg, key)
+        params = tuple(0.2 * np.asarray(p) for p in params)
+        sa_cur, sa_next, action, _ = ref.random_transition(net_cfg, rng)
+        reward = np.float32(0.8)
+        hyper = Hyper(alpha=1.0, gamma=0.0, lr=0.5)
+        upd = jax.jit(qnet.make_qupdate(net_cfg, hyper))
+
+        errs = []
+        for _ in range(150):
+            params, _, _, q_err = upd(params, sa_cur, sa_next, action, reward)
+            errs.append(abs(float(q_err)))
+        assert errs[-1] < errs[0] * 0.5, errs[:5] + errs[-5:]
+
+    def test_zero_alpha_freezes_learning(self, net_cfg, key, rng):
+        """alpha = 0 -> Q never updates (paper Section 2 remark)."""
+        from compile.configs import Hyper
+        params = _params(net_cfg, key)
+        sa_cur, sa_next, action, reward = ref.random_transition(net_cfg, rng)
+        upd = qnet.make_qupdate(net_cfg, Hyper(alpha=0.0, gamma=0.9, lr=0.25))
+        new_p, _, _, q_err = upd(params, sa_cur, sa_next, action, reward)
+        assert float(q_err) == 0.0
+        for got_w, old_w in zip(new_p, params):
+            np.testing.assert_array_equal(np.asarray(got_w), np.asarray(old_w))
+
+
+class TestFixedVsFloat:
+    def test_fixed_tracks_float_within_lsb_budget(self, net_cfg, key, rng):
+        """Q(18,12) forward must track float within a small multiple of the
+        LSB for these tiny nets (paper Section 5: word length trades accuracy
+        for power)."""
+        from compile.configs import DEFAULT_FIXED
+        params = _params(net_cfg, key)
+        sa = rng.uniform(-1, 1, (net_cfg.a, net_cfg.d)).astype(np.float32)
+        f = qnet.make_forward(net_cfg)
+        g = qnet.make_forward(net_cfg, fixed=DEFAULT_FIXED)
+        qf = np.asarray(f(params, sa))
+        qx = np.asarray(g(params, sa))
+        lsb = 1.0 / DEFAULT_FIXED.scale
+        # error accumulates over D MACs + 2 activations; budget is generous
+        assert np.max(np.abs(qf - qx)) < 64 * lsb

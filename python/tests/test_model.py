@@ -1,0 +1,129 @@
+"""L2 artifact-graph tests: build_fn vs reference_fn for every artifact,
+manifest consistency, and scan-batch semantics (a train_batch call must equal
+`batch` sequential qupdate calls)."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.configs import SCAN_BATCH, all_artifacts
+from compile.kernels import ref
+
+ATOL = 1e-6
+
+SPECS = all_artifacts()
+SPEC_IDS = [s.name for s in SPECS]
+
+
+def _example_inputs(spec, rng, key):
+    cfg = spec.net
+    params = [np.asarray(p) for p in ref.init_params(cfg, key)]
+    if spec.kind == "forward":
+        sa = rng.uniform(-1, 1, (cfg.a, cfg.d)).astype(np.float32)
+        return [*params, sa]
+    if spec.kind == "qupdate":
+        sa_cur, sa_next, action, reward = ref.random_transition(cfg, rng)
+        return [*params, sa_cur, sa_next,
+                np.asarray([action], np.int32),
+                np.asarray([reward], np.float32)]
+    b = spec.batch
+    sa_cur = rng.uniform(-1, 1, (b, cfg.a, cfg.d)).astype(np.float32)
+    sa_next = rng.uniform(-1, 1, (b, cfg.a, cfg.d)).astype(np.float32)
+    actions = rng.integers(0, cfg.a, (b,)).astype(np.int32)
+    rewards = rng.uniform(-1, 1, (b,)).astype(np.float32)
+    return [*params, sa_cur, sa_next, actions, rewards]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=SPEC_IDS)
+def test_build_fn_matches_reference_fn(spec, rng, key):
+    inputs = _example_inputs(spec, rng, key)
+    got = model.build_fn(spec)(*inputs)
+    want = model.reference_fn(spec)(*inputs)
+    assert len(got) == len(want)
+    for name, g, w in zip(model.output_names(spec), got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=ATOL, err_msg=f"{spec.name}:{name}")
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=SPEC_IDS)
+def test_shapes_match_declared_specs(spec, rng, key):
+    inputs = _example_inputs(spec, rng, key)
+    declared_in = model.input_specs(spec)
+    assert len(inputs) == len(declared_in)
+    for x, s in zip(inputs, declared_in):
+        assert tuple(x.shape) == tuple(s.shape)
+        assert x.dtype == s.dtype
+    outs = model.build_fn(spec)(*inputs)
+    declared_out = jax.eval_shape(model.build_fn(spec), *declared_in)
+    for o, s in zip(outs, declared_out):
+        assert tuple(np.asarray(o).shape) == tuple(s.shape)
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [s for s in SPECS if s.kind == "train_batch" and s.net.env == "simple"],
+    ids=lambda s: s.name)
+def test_train_batch_equals_sequential_qupdates(spec, rng, key):
+    """lax.scan over the fused kernel == driving qupdate in a python loop."""
+    from compile.kernels import qnet
+    inputs = _example_inputs(spec, rng, key)
+    n = 2 if spec.net.arch == "perceptron" else 4
+    params = tuple(inputs[:n])
+    sa_cur, sa_next, actions, rewards = inputs[n:]
+
+    batch_out = model.build_fn(spec)(*inputs)
+    batch_params, q_errs = batch_out[:n], batch_out[n]
+
+    upd = qnet.make_qupdate(spec.net, spec.hyper, fixed=spec.fixed,
+                            lut=spec.lut)
+    p = params
+    seq_errs = []
+    for i in range(spec.batch):
+        p, _, _, e = upd(p, sa_cur[i], sa_next[i], actions[i], rewards[i])
+        seq_errs.append(float(e))
+
+    for g, w in zip(batch_params, p):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(q_errs), seq_errs, atol=ATOL)
+
+
+class TestManifest:
+    """artifacts/manifest.json is the rust contract — validate it whenever
+    the artifacts have been built (make artifacts)."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = pathlib.Path(__file__).parents[2] / "artifacts" / "manifest.json"
+        if not path.exists():
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        return json.loads(path.read_text())
+
+    def test_all_specs_present(self, manifest):
+        names = set(manifest["artifacts"])
+        assert {s.name for s in SPECS} <= names
+
+    def test_entries_consistent(self, manifest):
+        for spec in SPECS:
+            e = manifest["artifacts"][spec.name]
+            assert e["kind"] == spec.kind
+            assert e["a"] == spec.net.a
+            assert e["d"] == spec.net.d
+            assert [i["name"] for i in e["inputs"]] == \
+                list(model.input_names(spec))
+            assert [o["name"] for o in e["outputs"]] == \
+                list(model.output_names(spec))
+            if spec.kind == "train_batch":
+                assert e["batch"] == SCAN_BATCH
+
+    def test_hlo_files_exist_and_parse_shapes(self, manifest):
+        root = pathlib.Path(__file__).parents[2] / "artifacts"
+        for spec in SPECS:
+            e = manifest["artifacts"][spec.name]
+            text = (root / e["file"]).read_text()
+            assert "ENTRY" in text and "HloModule" in text

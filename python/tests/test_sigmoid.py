@@ -1,0 +1,95 @@
+"""Sigmoid ROM (LUT) tests — accuracy vs table size, the paper's Section 3
+remark: "The size of ROM plays a major role in the accuracy of the output
+value."  The X2 ablation (EXPERIMENTS.md) uses the same sweep.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.configs import LutSpec
+from compile.kernels import sigmoid as sg
+
+
+class TestTables:
+    def test_table_endpoints(self):
+        lut = LutSpec(size=1024, xmax=8.0)
+        t = sg.build_sigmoid_table(lut)
+        assert t.shape == (1024,)
+        assert t[0] == pytest.approx(1 / (1 + np.exp(8.0)), abs=1e-6)
+        assert t[-1] == pytest.approx(1 / (1 + np.exp(-8.0)), abs=1e-6)
+
+    def test_table_monotone(self):
+        t = sg.build_sigmoid_table(LutSpec(size=512, xmax=6.0))
+        assert np.all(np.diff(t) > 0)
+
+    def test_deriv_table_peak_at_center(self):
+        lut = LutSpec(size=1025, xmax=8.0)  # odd -> exact center sample
+        d = sg.build_deriv_table(lut)
+        assert np.argmax(d) == 512
+        assert d[512] == pytest.approx(0.25, abs=1e-6)
+
+    def test_deriv_symmetric(self):
+        d = sg.build_deriv_table(LutSpec(size=1024, xmax=8.0))
+        np.testing.assert_allclose(d, d[::-1], atol=1e-7)
+
+
+class TestLookup:
+    def test_exact_at_grid_points(self):
+        lut = LutSpec(size=257, xmax=4.0)
+        t = jnp.asarray(sg.build_sigmoid_table(lut))
+        grid = jnp.linspace(-4.0, 4.0, 257)
+        got = np.asarray(sg.lut_lookup(t, grid, lut))
+        np.testing.assert_allclose(got, np.asarray(t), atol=1e-7)
+
+    def test_clipping_beyond_range(self):
+        lut = LutSpec(size=64, xmax=2.0)
+        t = jnp.asarray(sg.build_sigmoid_table(lut))
+        lo = float(sg.lut_lookup(t, jnp.float32(-100.0), lut))
+        hi = float(sg.lut_lookup(t, jnp.float32(100.0), lut))
+        assert lo == pytest.approx(float(t[0]))
+        assert hi == pytest.approx(float(t[-1]))
+
+    @pytest.mark.parametrize("size,budget", [(64, 0.07), (256, 0.02),
+                                             (1024, 0.006), (4096, 0.0025)])
+    def test_accuracy_improves_with_rom_size(self, size, budget):
+        """X2 ablation shape: max |LUT - exact| shrinks as ROM grows."""
+        lut = LutSpec(size=size, xmax=8.0)
+        t = jnp.asarray(sg.build_sigmoid_table(lut))
+        x = jnp.linspace(-8.0, 8.0, 10_001)
+        approx = np.asarray(sg.lut_lookup(t, x, lut))
+        exact = np.asarray(sg.sigmoid_exact(x))
+        assert np.max(np.abs(approx - exact)) < budget
+
+    @given(st.floats(min_value=-50, max_value=50,
+                     allow_nan=False, allow_infinity=False))
+    @settings(max_examples=200, deadline=None)
+    def test_lookup_within_half_step(self, x):
+        """Nearest-entry lookup error <= sigmoid'(x)*step/2 + table quant."""
+        lut = LutSpec(size=2048, xmax=8.0)
+        t = jnp.asarray(sg.build_sigmoid_table(lut))
+        got = float(sg.lut_lookup(t, jnp.float32(x), lut))
+        xc = float(np.clip(x, -8.0, 8.0))
+        step = 16.0 / 2047
+        # worst-case slope of sigmoid is 1/4
+        assert abs(got - 1 / (1 + np.exp(-xc))) <= 0.25 * step / 2 + 1e-5
+
+    @given(st.floats(-8, 8), st.floats(-8, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_lookup_monotone(self, a, b):
+        lut = LutSpec(size=512, xmax=8.0)
+        t = jnp.asarray(sg.build_sigmoid_table(lut))
+        fa = float(sg.lut_lookup(t, jnp.float32(a), lut))
+        fb = float(sg.lut_lookup(t, jnp.float32(b), lut))
+        if a <= b:
+            assert fa <= fb + 1e-9
+        else:
+            assert fb <= fa + 1e-9
+
+    def test_index_int32(self):
+        lut = LutSpec(size=1024, xmax=8.0)
+        idx = sg.lut_index(jnp.asarray([-9.0, 0.0, 9.0]), lut)
+        assert idx.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(idx), [0, 512, 1023])

@@ -1,0 +1,107 @@
+//! Bench: per-Q-update latency of the three backends on identical
+//! workloads, across all four paper configurations and both precisions —
+//! plus the microbatch (scan-chained train_batch) ablation.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench backends
+//! ```
+//!
+//! This is the *measured-on-host* companion to the modeled Tables 3–6: the
+//! FPGA-sim rows here show the simulator's host cost (it is a simulator; its
+//! *modeled* device time is what Tables 3–6 report), and the XLA rows show
+//! the deployment path's real latency including PJRT dispatch.
+
+mod common;
+
+use common::{bench, print_header, print_result};
+use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::coordinator::sweep::Workload;
+use qfpga::nn::params::QNetParams;
+use qfpga::qlearn::backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+use qfpga::runtime::Runtime;
+use qfpga::util::Rng;
+
+fn run_backend<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: usize) {
+    let step = w.net.a * w.net.d;
+    let n = w.len();
+    let mut i = 0usize;
+    let r = bench(name, iters / 10 + 1, iters, || {
+        let k = i % n;
+        backend
+            .update(
+                &w.sa_cur[k * step..(k + 1) * step],
+                &w.sa_next[k * step..(k + 1) * step],
+                w.actions[k],
+                w.rewards[k],
+            )
+            .expect("update");
+        i += 1;
+    });
+    print_result(&r);
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 200 } else { 2_000 };
+    let runtime = Runtime::from_default_dir().ok();
+    if runtime.is_none() {
+        println!("NOTE: artifacts not built; xla rows skipped (run `make artifacts`)");
+    }
+
+    print_header("per-Q-update latency (measured on this host)");
+    for net in NetConfig::all() {
+        let w = Workload::synthetic(net, 512, 11);
+        for prec in [Precision::Fixed, Precision::Float] {
+            let mut rng = Rng::seeded(0xF00D);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+
+            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            run_backend(&format!("cpu       {} {}", net.name(), prec.as_str()), &mut cpu, &w, iters);
+
+            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            run_backend(&format!("fpga-sim  {} {}", net.name(), prec.as_str()), &mut sim, &w, iters);
+
+            if let Some(rt) = &runtime {
+                let mut xla = XlaBackend::new(rt, net, prec, params).expect("backend");
+                run_backend(&format!("xla       {} {}", net.name(), prec.as_str()), &mut xla, &w, iters);
+            }
+        }
+    }
+
+    // ---- microbatch ablation: per-update cost via train_batch ------------
+    if let Some(rt) = &runtime {
+        print_header("microbatch ablation (XLA train_batch, per-update cost)");
+        for net in NetConfig::all() {
+            let mut rng = Rng::seeded(0xF00D);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+            let mut xla = XlaBackend::new(rt, net, Precision::Fixed, params).expect("backend");
+            let b = xla.preferred_batch();
+            let w = Workload::synthetic(net, b * 8, 13);
+            let step = net.a * net.d;
+            let mut k = 0usize;
+            let r = bench(
+                &format!("xla batch={b} {} fixed", net.name()),
+                2,
+                (iters / b).max(20),
+                || {
+                    let lo = (k % 8) * b;
+                    xla.update_batch(
+                        &w.sa_cur[lo * step..(lo + b) * step],
+                        &w.sa_next[lo * step..(lo + b) * step],
+                        &w.actions[lo..lo + b],
+                        &w.rewards[lo..lo + b],
+                    )
+                    .expect("batch");
+                    k += 1;
+                },
+            );
+            println!(
+                "{:<44} {:>10.2} µs/batch = {:>8.2} µs/update ({:.0} updates/s)",
+                r.name,
+                r.mean_us,
+                r.mean_us / b as f64,
+                1e6 / (r.mean_us / b as f64)
+            );
+        }
+    }
+}

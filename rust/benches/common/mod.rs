@@ -1,0 +1,61 @@
+//! Minimal benchmark harness (criterion is not vendored in this offline
+//! image): warmup + N timed iterations, reporting mean / median / p95 and a
+//! simple throughput figure. Deterministic inputs via `qfpga::util::Rng`.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> f64 {
+        1e6 / self.mean_us
+    }
+}
+
+/// Run `f` for `warmup + iters` iterations, timing the last `iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut lat = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: lat.iter().sum::<f64>() / iters as f64,
+        median_us: lat[iters / 2],
+        p95_us: lat[((iters as f64 * 0.95) as usize).min(iters - 1)],
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>12}",
+        "case", "mean µs", "median µs", "p95 µs", "ops/s"
+    );
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.2} {:>10.2} {:>10.2} {:>12.0}",
+        r.name,
+        r.mean_us,
+        r.median_us,
+        r.p95_us,
+        r.per_second()
+    );
+}

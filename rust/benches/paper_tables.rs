@@ -1,0 +1,61 @@
+//! Bench: regenerate every paper table (T1–T8 + headline + ablations) with
+//! the measured host-CPU rows — the full reproduction in one run.
+//!
+//! ```bash
+//! cargo bench --bench paper_tables
+//! ```
+//!
+//! FPGA rows come from the structural cycle/power models (the paper's own
+//! numbers are simulation-derived too); CPU rows are measured on this host
+//! with the same workload driver the coordinator uses.
+
+use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::coordinator::measure_backend;
+use qfpga::coordinator::sweep::Workload;
+use qfpga::nn::params::QNetParams;
+use qfpga::qlearn::backend::CpuBackend;
+use qfpga::report::{self, CompletionInputs};
+use qfpga::util::Rng;
+
+fn measured_cpu_us(net: NetConfig, n: usize) -> f64 {
+    let mut rng = Rng::seeded(0xBEEF);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+    let workload = Workload::synthetic(net, n, 3);
+    measure_backend(&mut backend, &workload, n / 10)
+        .expect("measure")
+        .median_us
+}
+
+fn main() {
+    // allow `cargo bench -- --quick`
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 300 } else { 3_000 };
+
+    println!("### Paper tables, regenerated (ours vs paper) ###");
+    println!("{}", report::table1());
+    println!("{}", report::table2());
+
+    for (arch, env) in [
+        (Arch::Perceptron, EnvKind::Simple),
+        (Arch::Perceptron, EnvKind::Complex),
+        (Arch::Mlp, EnvKind::Simple),
+        (Arch::Mlp, EnvKind::Complex),
+    ] {
+        let cpu = measured_cpu_us(NetConfig::new(arch, env), n);
+        let t = report::table_completion(arch, env, CompletionInputs {
+            measured_cpu_us: Some(cpu),
+        });
+        println!("{t}");
+        if let Some(w) = t.worst_ratio() {
+            println!("  worst paper-row ratio: {w:.2}×\n");
+        }
+    }
+
+    println!("{}", report::table_power(EnvKind::Simple));
+    println!("{}", report::table_power(EnvKind::Complex));
+    println!("{}", report::headline());
+    println!("{}", report::ablation_pipelining());
+    println!("{}", report::ablation_lut_rom());
+    println!("{}", report::ablation_wordlen());
+}

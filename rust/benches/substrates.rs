@@ -1,0 +1,134 @@
+//! Bench: microbenchmarks of every substrate on the hot path — the
+//! profiling foundation for the §Perf pass (EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo bench --bench substrates
+//! ```
+
+mod common;
+
+use common::{bench, print_header, print_result};
+use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::env::{ComplexRoverEnv, Environment, SimpleRoverEnv, Terrain};
+use qfpga::fixed::{tensor, Fixed, FixedSpec};
+use qfpga::fpga::datapath::Transition;
+use qfpga::fpga::FpgaAccelerator;
+use qfpga::nn::activation::{Activation, LutSpec, SigmoidLut};
+use qfpga::nn::params::QNetParams;
+use qfpga::nn::qupdate::{self, Datapath};
+use qfpga::util::{Json, Rng};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 500 } else { 20_000 };
+
+    // ---------------------------------------------------------- fixed point
+    print_header("fixed-point substrate");
+    let q = FixedSpec::default();
+    let mut rng = Rng::seeded(1);
+    let xs = tensor::quantize_slice(&rng.vec_f32(64, -1.0, 1.0), q);
+    let ws = tensor::quantize_slice(&rng.vec_f32(64, -1.0, 1.0), q);
+    let mut acc_out = Fixed::zero(q);
+    print_result(&bench("fixed dot-64 (wide accumulator)", 100, iters, || {
+        acc_out = tensor::dot(&xs, &ws, q);
+    }));
+    let mut f = Fixed::from_f64(0.3, q);
+    print_result(&bench("fixed mul+add chain", 100, iters, || {
+        f = f.mul(Fixed::from_f64(0.99, q)).add(Fixed::from_f64(0.001, q));
+    }));
+    std::hint::black_box((acc_out, f));
+
+    // -------------------------------------------------------------- sigmoid
+    print_header("sigmoid ROM");
+    let lut = SigmoidLut::build(LutSpec::default(), None);
+    let probes = rng.vec_f32(256, -8.0, 8.0);
+    let mut s = 0f32;
+    print_result(&bench("lut lookup ×256", 100, iters / 4, || {
+        for &x in &probes {
+            s += lut.lookup(x);
+        }
+    }));
+    print_result(&bench("exact sigmoid ×256", 100, iters / 4, || {
+        for &x in &probes {
+            s += qfpga::nn::activation::sigmoid(x);
+        }
+    }));
+    std::hint::black_box(s);
+
+    // ------------------------------------------------------------------ nn
+    print_header("nn forward/qupdate (complex MLP, the largest config)");
+    let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    let sa = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+    let sa2 = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+    for (label, prec) in [("float", None), ("fixed", Some(FixedSpec::default()))] {
+        let dp = Datapath::new(prec, Activation::lut_default(prec));
+        print_result(&bench(&format!("nn forward {label}"), 50, iters / 4, || {
+            std::hint::black_box(qupdate::forward(&net, &params, &sa, &dp).unwrap());
+        }));
+        print_result(&bench(&format!("nn qupdate {label}"), 50, iters / 4, || {
+            std::hint::black_box(
+                qupdate::qupdate(&net, &params, &sa, &sa2, 3, 0.5, &Hyper::default(), &dp)
+                    .unwrap(),
+            );
+        }));
+    }
+
+    // ------------------------------------------------------------- fpga sim
+    print_header("fpga datapath simulator (host cost of simulation)");
+    for prec in [Precision::Fixed, Precision::Float] {
+        let mut acc = FpgaAccelerator::paper(net, prec, &params, Hyper::default());
+        print_result(&bench(&format!("fpga-sim qupdate {}", prec.as_str()), 50, iters / 4, || {
+            std::hint::black_box(
+                acc.qupdate(&Transition { sa_cur: &sa, sa_next: &sa2, action: 3, reward: 0.5 })
+                    .unwrap(),
+            );
+        }));
+    }
+
+    // ---------------------------------------------------------- environments
+    print_header("environments");
+    let mut simple = SimpleRoverEnv::new(3);
+    let mut enc6 = vec![0f32; 6 * 6];
+    print_result(&bench("simple env step+encode_all", 100, iters, || {
+        if simple.is_done() {
+            simple.reset();
+        }
+        simple.step(0);
+        simple.encode_all(&mut enc6);
+    }));
+    let mut complex = ComplexRoverEnv::new(3);
+    let mut enc20 = vec![0f32; 40 * 20];
+    print_result(&bench("complex env step+encode_all", 100, iters / 4, || {
+        if complex.is_done() {
+            complex.reset();
+        }
+        complex.step(11);
+        complex.encode_all(&mut enc20);
+    }));
+    print_result(&bench("terrain generate 60x30", 5, (iters / 100).max(20), || {
+        std::hint::black_box(Terrain::generate(60, 30, 0.08, 5, 9));
+    }));
+
+    // ------------------------------------------------------------------ json
+    print_header("manifest json");
+    let manifest_path = qfpga::runtime::default_artifact_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        print_result(&bench("parse manifest.json", 5, (iters / 100).max(20), || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        }));
+    }
+
+    // --------------------------------------------------------------- runtime
+    if let Ok(rt) = qfpga::runtime::Runtime::from_default_dir() {
+        print_header("PJRT runtime");
+        let t0 = std::time::Instant::now();
+        let n = rt.warm_up().unwrap();
+        println!(
+            "compile all {} artifacts: {:.1} ms total ({:.1} ms each)",
+            n,
+            t0.elapsed().as_secs_f64() * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3 / n as f64
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Experiment / system configuration, mirroring `python/compile/configs.py`.
+//!
+//! The four paper configurations (Section 5):
+//!
+//! | name               | arch       | D  | H | A  |
+//! |--------------------|------------|----|---|----|
+//! | perceptron_simple  | perceptron | 6  | – | 6  |
+//! | perceptron_complex | perceptron | 20 | – | 40 |
+//! | mlp_simple         | MLP        | 6  | 4 | 6  |
+//! | mlp_complex        | MLP        | 20 | 4 | 40 |
+//!
+//! `D` is the state+action vector width, `H` the hidden-layer size
+//! (“4 hidden layer neurons”), `A` the number of actions per state.
+
+use crate::error::{Error, Result};
+
+/// Paper hidden-layer width.
+pub const HIDDEN: usize = 4;
+
+/// Network architecture (paper Sections 3 and 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Single neuron (Section 3).
+    Perceptron,
+    /// Multilayer perceptron with one hidden layer (Section 4).
+    Mlp,
+}
+
+impl Arch {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Arch::Perceptron => "perceptron",
+            Arch::Mlp => "mlp",
+        }
+    }
+}
+
+impl std::str::FromStr for Arch {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "perceptron" | "neuron" => Ok(Arch::Perceptron),
+            "mlp" => Ok(Arch::Mlp),
+            other => Err(Error::Config(format!("unknown arch `{other}`"))),
+        }
+    }
+}
+
+/// Environment class (paper Section 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EnvKind {
+    /// D = 6 (4 state + 2 action dims), A = 6.
+    Simple,
+    /// D = 20, A = 40, |S| = 1800.
+    Complex,
+}
+
+impl EnvKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EnvKind::Simple => "simple",
+            EnvKind::Complex => "complex",
+        }
+    }
+}
+
+impl std::str::FromStr for EnvKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "simple" => Ok(EnvKind::Simple),
+            "complex" => Ok(EnvKind::Complex),
+            other => Err(Error::Config(format!("unknown env `{other}`"))),
+        }
+    }
+}
+
+/// Arithmetic mode of the datapath (the paper's central comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Q(word, frac) fixed point on DSP48-style MACs.
+    Fixed,
+    /// Single-precision floating point on LogiCORE-style FP cores.
+    Float,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::Fixed => "fixed",
+            Precision::Float => "float",
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fixed" => Ok(Precision::Fixed),
+            "float" | "floating" => Ok(Precision::Float),
+            other => Err(Error::Config(format!("unknown precision `{other}`"))),
+        }
+    }
+}
+
+/// One paper network/environment combination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NetConfig {
+    pub arch: Arch,
+    pub env: EnvKind,
+    /// State+action vector width.
+    pub d: usize,
+    /// Hidden neurons (0 for the perceptron).
+    pub h: usize,
+    /// Actions per state.
+    pub a: usize,
+}
+
+impl NetConfig {
+    pub const fn new(arch: Arch, env: EnvKind) -> Self {
+        let (d, a) = match env {
+            EnvKind::Simple => (6, 6),
+            EnvKind::Complex => (20, 40),
+        };
+        let h = match arch {
+            Arch::Perceptron => 0,
+            Arch::Mlp => HIDDEN,
+        };
+        NetConfig { arch, env, d, h, a }
+    }
+
+    /// All four paper configurations.
+    pub fn all() -> [NetConfig; 4] {
+        [
+            NetConfig::new(Arch::Perceptron, EnvKind::Simple),
+            NetConfig::new(Arch::Perceptron, EnvKind::Complex),
+            NetConfig::new(Arch::Mlp, EnvKind::Simple),
+            NetConfig::new(Arch::Mlp, EnvKind::Complex),
+        ]
+    }
+
+    /// Canonical name, matching the python configs and artifact files.
+    pub fn name(&self) -> String {
+        format!("{}_{}", self.arch.as_str(), self.env.as_str())
+    }
+
+    /// Total trainable parameters (weights + biases).
+    pub fn n_params(&self) -> usize {
+        match self.arch {
+            Arch::Perceptron => self.d + 1,
+            Arch::Mlp => self.d * self.h + self.h + self.h + 1,
+        }
+    }
+
+    /// Total “neurons” in the paper's counting (inputs + hidden + output):
+    /// 11 for the simple MLP, 25 for the complex MLP.
+    pub fn n_neurons(&self) -> usize {
+        match self.arch {
+            Arch::Perceptron => self.d + 1,
+            Arch::Mlp => self.d + self.h + 1,
+        }
+    }
+}
+
+/// Q-learning hyper-parameters (paper Eq. 4, 8, 9). Must match the values
+/// baked into the AOT artifacts (see `artifacts/manifest.json`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyper {
+    /// Q-error scaling α (Eq. 8).
+    pub alpha: f32,
+    /// Discount γ.
+    pub gamma: f32,
+    /// Backprop learning factor C (Eq. 9/13).
+    pub lr: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { alpha: 0.5, gamma: 0.9, lr: 0.25 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dimensions() {
+        let ps = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        assert_eq!((ps.d, ps.a, ps.h), (6, 6, 0));
+        let pc = NetConfig::new(Arch::Perceptron, EnvKind::Complex);
+        assert_eq!((pc.d, pc.a), (20, 40));
+    }
+
+    #[test]
+    fn paper_neuron_counts() {
+        // “11 neurons in a simple environment and 25 neurons in a complex
+        // environment with 4 hidden layer neurons” (Section 5).
+        assert_eq!(NetConfig::new(Arch::Mlp, EnvKind::Simple).n_neurons(), 11);
+        assert_eq!(NetConfig::new(Arch::Mlp, EnvKind::Complex).n_neurons(), 25);
+    }
+
+    #[test]
+    fn param_counts() {
+        assert_eq!(NetConfig::new(Arch::Perceptron, EnvKind::Simple).n_params(), 7);
+        assert_eq!(NetConfig::new(Arch::Mlp, EnvKind::Simple).n_params(), 6 * 4 + 4 + 4 + 1);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for cfg in NetConfig::all() {
+            let arch: Arch = cfg.arch.as_str().parse().unwrap();
+            let env: EnvKind = cfg.env.as_str().parse().unwrap();
+            assert_eq!(NetConfig::new(arch, env), cfg);
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!("gpu".parse::<Arch>().is_err());
+        assert!("medium".parse::<EnvKind>().is_err());
+        assert!("double".parse::<Precision>().is_err());
+    }
+}

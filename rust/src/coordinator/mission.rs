@@ -1,0 +1,186 @@
+//! Single-rover mission: configuration + runner.
+
+use crate::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use crate::env::make_env;
+use crate::error::Result;
+use crate::nn::params::QNetParams;
+use crate::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, XlaBackend};
+use crate::qlearn::trainer::{train, TrainReport};
+use crate::qlearn::{NeuralQLearner, Policy};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Everything needed to run one rover mission.
+#[derive(Debug, Clone)]
+pub struct MissionConfig {
+    pub arch: Arch,
+    pub env: EnvKind,
+    pub precision: Precision,
+    pub backend: BackendKind,
+    pub episodes: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+    pub hyper: Hyper,
+    /// Use the scan-chained train_batch artifact (XLA backend only).
+    pub microbatch: bool,
+}
+
+impl Default for MissionConfig {
+    fn default() -> Self {
+        MissionConfig {
+            arch: Arch::Mlp,
+            env: EnvKind::Simple,
+            precision: Precision::Fixed,
+            backend: BackendKind::Cpu,
+            episodes: 200,
+            max_steps: 200,
+            seed: 7,
+            hyper: Hyper::default(),
+            microbatch: false,
+        }
+    }
+}
+
+impl MissionConfig {
+    pub fn net(&self) -> NetConfig {
+        NetConfig::new(self.arch, self.env)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}/{} on {} ({} episodes, seed {})",
+            self.backend.as_str(),
+            self.arch.as_str(),
+            self.precision.as_str(),
+            self.env.as_str(),
+            self.episodes,
+            self.seed
+        )
+    }
+}
+
+/// Mission outcome: the training report plus backend-side accounting.
+#[derive(Debug, Clone)]
+pub struct MissionReport {
+    pub config_desc: String,
+    pub train: TrainReport,
+    /// FPGA-sim only: modeled on-device time for all updates, µs.
+    pub fpga_modeled_us: Option<f64>,
+    /// FPGA-sim only: total modeled cycles.
+    pub fpga_cycles: Option<u64>,
+}
+
+impl MissionReport {
+    /// Mission success signal: late-training mean reward minus early.
+    pub fn learning_delta(&self) -> f32 {
+        let (first, last) = self.train.first_last_mean_reward(20);
+        last - first
+    }
+}
+
+/// Run one mission. Builds the environment, the requested backend and the
+/// learner, then trains. `runtime` is required for the XLA backend and may
+/// be `None` otherwise.
+pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<MissionReport> {
+    let net = cfg.net();
+    let mut env = make_env(cfg.env, cfg.seed);
+    let mut rng = Rng::seeded(cfg.seed ^ 0xA5A5_5A5A);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    let policy = Policy::default_training();
+
+    // The backends are distinct concrete types (and !Send), so dispatch
+    // monomorphically and merge afterwards.
+    let (train_report, fpga_modeled_us, fpga_cycles) = match cfg.backend {
+        BackendKind::Cpu => {
+            let backend = CpuBackend::new(net, cfg.precision, params, cfg.hyper);
+            let mut learner = NeuralQLearner::new(backend, policy);
+            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
+            (r, None, None)
+        }
+        BackendKind::Xla => {
+            let rt = runtime.ok_or_else(|| {
+                crate::error::Error::Config("XLA backend needs a Runtime".into())
+            })?;
+            let backend = XlaBackend::new(rt, net, cfg.precision, params)?;
+            let mut learner = NeuralQLearner::new(backend, policy);
+            if cfg.microbatch {
+                learner = learner.with_microbatch();
+            }
+            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
+            (r, None, None)
+        }
+        BackendKind::FpgaSim => {
+            let backend = FpgaSimBackend::new(net, cfg.precision, params, cfg.hyper);
+            let mut learner = NeuralQLearner::new(backend, policy);
+            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
+            let acc = learner.backend.accelerator();
+            let us = acc.modeled_time_us();
+            let cycles = acc.stats().cycles;
+            (r, Some(us), Some(cycles))
+        }
+    };
+
+    Ok(MissionReport {
+        config_desc: cfg.describe(),
+        train: train_report,
+        fpga_modeled_us,
+        fpga_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_mission_runs_and_learns_shape() {
+        let cfg = MissionConfig {
+            episodes: 30,
+            max_steps: 60,
+            backend: BackendKind::Cpu,
+            precision: Precision::Float,
+            ..Default::default()
+        };
+        let r = run_mission(&cfg, None).unwrap();
+        assert_eq!(r.train.episodes.len(), 30);
+        assert!(r.fpga_cycles.is_none());
+    }
+
+    #[test]
+    fn fpga_mission_reports_model_time() {
+        let cfg = MissionConfig {
+            episodes: 5,
+            max_steps: 30,
+            backend: BackendKind::FpgaSim,
+            precision: Precision::Fixed,
+            ..Default::default()
+        };
+        let r = run_mission(&cfg, None).unwrap();
+        let cycles = r.fpga_cycles.unwrap();
+        assert!(cycles > 0);
+        assert!(r.fpga_modeled_us.unwrap() > 0.0);
+        // fixed MLP: 13A+3 = 81 cycles per update, plus forward sweeps
+        assert!(cycles as f64 >= r.train.total_updates as f64 * 81.0);
+    }
+
+    #[test]
+    fn xla_backend_without_runtime_is_config_error() {
+        let cfg = MissionConfig { backend: BackendKind::Xla, ..Default::default() };
+        assert!(run_mission(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn missions_are_reproducible() {
+        let cfg = MissionConfig {
+            episodes: 8,
+            max_steps: 40,
+            backend: BackendKind::Cpu,
+            ..Default::default()
+        };
+        let a = run_mission(&cfg, None).unwrap();
+        let b = run_mission(&cfg, None).unwrap();
+        for (x, y) in a.train.episodes.iter().zip(&b.train.episodes) {
+            assert_eq!(x.total_reward, y.total_reward);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Mission coordinator — the L3 runtime that the paper's accelerator plugs
+//! into onboard a rover.
+//!
+//! The paper's contribution is the accelerator datapath; the coordinator is
+//! the thin-but-real system around it: mission configuration, the episode
+//! scheduler, multi-rover orchestration (one worker thread per rover, since
+//! PJRT clients have thread affinity), telemetry aggregation, and the
+//! workload sweep harness the table generators and benches drive.
+//!
+//! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner.
+//! * [`scheduler`] — multi-rover leader: spawns workers, collects reports.
+//! * [`telemetry`] — learning curves, aggregate statistics, JSON export.
+//! * [`sweep`] — fixed-workload latency measurement across backends (the
+//!   measured side of Tables 3–6).
+
+pub mod mission;
+pub mod scheduler;
+pub mod sweep;
+pub mod telemetry;
+
+pub use mission::{run_mission, MissionConfig, MissionReport};
+pub use scheduler::{run_fleet, FleetReport};
+pub use sweep::{measure_backend, WorkloadTiming};

@@ -1,0 +1,144 @@
+//! Multi-rover fleet scheduler.
+//!
+//! A leader thread spawns one worker per rover. Workers are fully isolated
+//! (own environment instance, own backend, own PJRT runtime when using the
+//! XLA backend — the client is thread-affine) and stream their reports back
+//! over an mpsc channel. This mirrors the paper's stated future work
+//! (“apply this technology on single and multi-robot platforms”).
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::error::{Error, Result};
+use crate::qlearn::backend::BackendKind;
+use crate::runtime::Runtime;
+
+use super::mission::{run_mission, MissionConfig, MissionReport};
+
+/// Aggregated fleet outcome.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub rovers: Vec<MissionReport>,
+    pub wall_seconds: f64,
+}
+
+impl FleetReport {
+    /// Mean of the per-rover learning deltas.
+    pub fn mean_learning_delta(&self) -> f32 {
+        if self.rovers.is_empty() {
+            return 0.0;
+        }
+        self.rovers.iter().map(|r| r.learning_delta()).sum::<f32>() / self.rovers.len() as f32
+    }
+
+    /// Total environment steps executed across the fleet.
+    pub fn total_steps(&self) -> usize {
+        self.rovers.iter().map(|r| r.train.total_steps).sum()
+    }
+
+    /// Aggregate Q-update throughput (updates/s summed over rovers).
+    pub fn aggregate_updates_per_second(&self) -> f64 {
+        self.rovers
+            .iter()
+            .map(|r| r.train.total_updates as f64)
+            .sum::<f64>()
+            / self.wall_seconds.max(1e-9)
+    }
+}
+
+/// Run `n_rovers` missions in parallel. Each rover gets `base.seed + i` so
+/// terrains and trajectories differ while staying reproducible.
+pub fn run_fleet(base: &MissionConfig, n_rovers: usize) -> Result<FleetReport> {
+    if n_rovers == 0 {
+        return Err(Error::Config("fleet needs at least one rover".into()));
+    }
+    let start = std::time::Instant::now();
+    let (tx, rx) = mpsc::channel::<(usize, Result<MissionReport>)>();
+
+    let mut handles = Vec::with_capacity(n_rovers);
+    for i in 0..n_rovers {
+        let tx = tx.clone();
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(i as u64);
+        handles.push(
+            thread::Builder::new()
+                .name(format!("rover-{i}"))
+                .spawn(move || {
+                    // XLA backend: build a thread-local runtime (PJRT client
+                    // affinity); other backends need none.
+                    let report = match cfg.backend {
+                        BackendKind::Xla => Runtime::from_default_dir()
+                            .and_then(|rt| run_mission(&cfg, Some(&rt))),
+                        _ => run_mission(&cfg, None),
+                    };
+                    let _ = tx.send((i, report));
+                })
+                .map_err(|e| Error::Config(format!("spawn rover-{i}: {e}")))?,
+        );
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<MissionReport>> = (0..n_rovers).map(|_| None).collect();
+    for (i, report) in rx {
+        slots[i] = Some(report?);
+    }
+    for h in handles {
+        h.join().map_err(|_| Error::Config("rover thread panicked".into()))?;
+    }
+
+    let rovers: Vec<MissionReport> = slots
+        .into_iter()
+        .map(|s| s.ok_or_else(|| Error::Config("missing rover report".into())))
+        .collect::<Result<_>>()?;
+
+    Ok(FleetReport { rovers, wall_seconds: start.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn quick_cfg() -> MissionConfig {
+        MissionConfig {
+            episodes: 6,
+            max_steps: 40,
+            backend: BackendKind::Cpu,
+            precision: Precision::Float,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_runs_all_rovers() {
+        let r = run_fleet(&quick_cfg(), 3).unwrap();
+        assert_eq!(r.rovers.len(), 3);
+        assert!(r.total_steps() > 0);
+        assert!(r.aggregate_updates_per_second() > 0.0);
+    }
+
+    #[test]
+    fn rovers_have_distinct_trajectories() {
+        let r = run_fleet(&quick_cfg(), 2).unwrap();
+        let a: f32 = r.rovers[0].train.episodes.iter().map(|e| e.total_reward).sum();
+        let b: f32 = r.rovers[1].train.episodes.iter().map(|e| e.total_reward).sum();
+        assert_ne!(a, b, "different seeds must give different trajectories");
+    }
+
+    #[test]
+    fn empty_fleet_rejected() {
+        assert!(run_fleet(&quick_cfg(), 0).is_err());
+    }
+
+    #[test]
+    fn fleet_is_reproducible() {
+        let a = run_fleet(&quick_cfg(), 2).unwrap();
+        let b = run_fleet(&quick_cfg(), 2).unwrap();
+        for (x, y) in a.rovers.iter().zip(&b.rovers) {
+            assert_eq!(
+                x.train.episodes.last().unwrap().total_reward,
+                y.train.episodes.last().unwrap().total_reward
+            );
+        }
+    }
+}

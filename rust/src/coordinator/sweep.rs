@@ -1,0 +1,147 @@
+//! Fixed-workload latency measurement — the measured side of Tables 3–6.
+//!
+//! The paper compares per-Q-update completion time across implementations.
+//! This harness drives an identical pre-generated transition workload
+//! through any [`QBackend`] and reports wall-clock statistics, so the CPU
+//! rows of Tables 3–6 are *measured on this host* while the FPGA rows come
+//! from the cycle model — exactly the paper's methodology (its CPU numbers
+//! were measured, its FPGA numbers simulated).
+
+use std::time::Instant;
+
+use crate::config::NetConfig;
+use crate::error::Result;
+use crate::qlearn::backend::QBackend;
+use crate::util::Rng;
+
+/// A pre-generated workload of `n` transitions for one configuration.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub net: NetConfig,
+    pub sa_cur: Vec<f32>,
+    pub sa_next: Vec<f32>,
+    pub actions: Vec<usize>,
+    pub rewards: Vec<f32>,
+}
+
+impl Workload {
+    /// Deterministic synthetic workload (uniform encodings in [−1, 1], the
+    /// range the environments produce).
+    pub fn synthetic(net: NetConfig, n: usize, seed: u64) -> Workload {
+        let mut rng = Rng::seeded(seed);
+        let step = net.a * net.d;
+        Workload {
+            net,
+            sa_cur: rng.vec_f32(n * step, -1.0, 1.0),
+            sa_next: rng.vec_f32(n * step, -1.0, 1.0),
+            actions: (0..n).map(|_| rng.below(net.a)).collect(),
+            rewards: rng.vec_f32(n, -1.0, 1.0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+}
+
+/// Wall-clock timing of a workload on one backend.
+#[derive(Debug, Clone)]
+pub struct WorkloadTiming {
+    pub backend_name: String,
+    pub updates: usize,
+    pub total_seconds: f64,
+    /// Mean per-update latency, µs.
+    pub mean_us: f64,
+    /// Median per-update latency, µs (robust to scheduler noise).
+    pub median_us: f64,
+    /// Throughput, kQ-updates/s — the paper's Tables 1–2 unit.
+    pub kq_per_s: f64,
+}
+
+/// Drive the whole workload through `backend`, timing each update.
+/// `warmup` updates are run first and excluded (JIT caches, branch
+/// predictors, PJRT warm path).
+pub fn measure_backend<B: QBackend>(
+    backend: &mut B,
+    workload: &Workload,
+    warmup: usize,
+) -> Result<WorkloadTiming> {
+    let step = workload.net.a * workload.net.d;
+    let n = workload.len();
+    assert!(n > warmup, "workload smaller than warmup");
+
+    let mut lat_us = Vec::with_capacity(n - warmup);
+    let total_start = Instant::now();
+    let mut measured_seconds = 0.0f64;
+
+    for i in 0..n {
+        let sa_cur = &workload.sa_cur[i * step..(i + 1) * step];
+        let sa_next = &workload.sa_next[i * step..(i + 1) * step];
+        let t0 = Instant::now();
+        backend.update(sa_cur, sa_next, workload.actions[i], workload.rewards[i])?;
+        let dt = t0.elapsed();
+        if i >= warmup {
+            lat_us.push(dt.as_secs_f64() * 1e6);
+            measured_seconds += dt.as_secs_f64();
+        }
+    }
+    let _total = total_start.elapsed();
+
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let updates = lat_us.len();
+    let mean_us = lat_us.iter().sum::<f64>() / updates as f64;
+    let median_us = lat_us[updates / 2];
+
+    Ok(WorkloadTiming {
+        backend_name: backend.name(),
+        updates,
+        total_seconds: measured_seconds,
+        mean_us,
+        median_us,
+        kq_per_s: updates as f64 / measured_seconds / 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind, Hyper, Precision};
+    use crate::nn::params::QNetParams;
+    use crate::qlearn::backend::CpuBackend;
+
+    #[test]
+    fn synthetic_workload_shapes() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let w = Workload::synthetic(net, 32, 1);
+        assert_eq!(w.len(), 32);
+        assert_eq!(w.sa_cur.len(), 32 * net.a * net.d);
+        assert!(w.actions.iter().all(|&a| a < net.a));
+    }
+
+    #[test]
+    fn synthetic_workload_deterministic() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let a = Workload::synthetic(net, 8, 9);
+        let b = Workload::synthetic(net, 8, 9);
+        assert_eq!(a.sa_cur, b.sa_cur);
+        assert_eq!(a.actions, b.actions);
+    }
+
+    #[test]
+    fn measure_cpu_backend() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(61);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let w = Workload::synthetic(net, 64, 2);
+        let t = measure_backend(&mut backend, &w, 8).unwrap();
+        assert_eq!(t.updates, 56);
+        assert!(t.mean_us > 0.0);
+        assert!(t.median_us <= t.mean_us * 10.0);
+        assert!(t.kq_per_s > 0.0);
+    }
+}

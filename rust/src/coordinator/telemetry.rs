@@ -1,0 +1,143 @@
+//! Mission telemetry: learning curves, aggregates, JSON export.
+//!
+//! The rover downlink budget is tiny, so telemetry is structured and
+//! compact: per-episode scalars plus windowed aggregates, serializable with
+//! the in-repo JSON writer.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::qlearn::trainer::TrainReport;
+use crate::util::Json;
+
+/// Windowed learning-curve summary of a training run.
+#[derive(Debug, Clone)]
+pub struct LearningCurve {
+    /// Window size used for smoothing.
+    pub window: usize,
+    /// (episode, smoothed reward) samples.
+    pub points: Vec<(usize, f32)>,
+}
+
+impl LearningCurve {
+    pub fn from_report(report: &TrainReport, window: usize, max_points: usize) -> LearningCurve {
+        let smoothed = report.reward_curve(window);
+        let n = smoothed.len();
+        let stride = (n / max_points.max(1)).max(1);
+        let points = smoothed
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % stride == 0 || *i == n - 1)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        LearningCurve { window, points }
+    }
+
+    /// Render as a compact ASCII sparkline block for mission logs.
+    pub fn ascii(&self, width: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let vals: Vec<f32> = self.points.iter().map(|&(_, v)| v).collect();
+        let (lo, hi) = vals
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(1e-6);
+        let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let stride = (vals.len() / width.max(1)).max(1);
+        vals.iter()
+            .step_by(stride)
+            .map(|&v| glyphs[(((v - lo) / span) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+/// Serialize a training report (+curve) to JSON.
+pub fn report_to_json(report: &TrainReport) -> Json {
+    let episodes = report
+        .episodes
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("episode", Json::Num(e.episode as f64)),
+                ("steps", Json::Num(e.steps as f64)),
+                ("reward", Json::Num(e.total_reward as f64)),
+                ("mean_abs_q_err", Json::Num(e.mean_abs_q_err as f64)),
+                ("epsilon", Json::Num(e.epsilon as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("backend", Json::Str(report.backend_name.clone())),
+        ("total_steps", Json::Num(report.total_steps as f64)),
+        ("total_updates", Json::Num(report.total_updates as f64)),
+        ("wall_seconds", Json::Num(report.wall_seconds)),
+        ("updates_per_second", Json::Num(report.updates_per_second())),
+        ("episodes", Json::Arr(episodes)),
+    ])
+}
+
+/// Write a report to disk as JSON.
+pub fn write_report(report: &TrainReport, path: &Path) -> Result<()> {
+    std::fs::write(path, report_to_json(report).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qlearn::trainer::EpisodeStats;
+
+    fn fake_report(n: usize) -> TrainReport {
+        TrainReport {
+            episodes: (0..n)
+                .map(|i| EpisodeStats {
+                    episode: i,
+                    steps: 10,
+                    total_reward: i as f32 / n as f32,
+                    mean_abs_q_err: 0.1,
+                    epsilon: 0.3,
+                })
+                .collect(),
+            total_steps: 10 * n,
+            total_updates: (10 * n) as u64,
+            wall_seconds: 1.0,
+            backend_name: "test".into(),
+        }
+    }
+
+    #[test]
+    fn curve_subsamples() {
+        let c = LearningCurve::from_report(&fake_report(1000), 10, 50);
+        assert!(c.points.len() <= 52);
+        assert_eq!(c.points.last().unwrap().0, 999);
+    }
+
+    #[test]
+    fn ascii_sparkline_monotone_data() {
+        let c = LearningCurve::from_report(&fake_report(64), 1, 64);
+        let s = c.ascii(16);
+        assert!(!s.is_empty());
+        let chars: Vec<char> = s.chars().collect();
+        assert!(chars.first().unwrap() <= chars.last().unwrap());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = report_to_json(&fake_report(3));
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("backend").unwrap(), "test");
+        assert_eq!(parsed.req_arr("episodes").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn write_report_creates_file() {
+        let dir = std::env::temp_dir().join("qfpga_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        write_report(&fake_report(2), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+}

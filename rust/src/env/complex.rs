@@ -1,0 +1,335 @@
+//! The paper's “complex environment”: D = 20, A = 40, |S| = 1800.
+//!
+//! A 60×30 Mars-yard traverse (60·30 = 1800 cells = the paper's state-space
+//! size). The rover senses hazard distance along all 8 headings (ray-cast
+//! “navcam” sensors), knows the bearing/range to the nearest science target,
+//! and commands one of 40 actions = 8 headings × 5 speed levels (speed 0 =
+//! turn in place; heading-0/speed-0 doubles as “sample”).
+
+use crate::config::{Arch, EnvKind, NetConfig};
+use crate::util::Rng;
+
+use super::encoding::ActionCode;
+use super::gridworld::{Grid, MoveOutcome, Pose};
+use super::terrain::Terrain;
+use super::traits::{Environment, StepResult};
+
+const W: usize = 60;
+const H: usize = 30;
+const MAX_STEPS: usize = 400;
+const SENSOR_RANGE: usize = 8;
+const N_SCIENCE: usize = 5;
+
+/// Complex Mars-yard traverse environment.
+pub struct ComplexRoverEnv {
+    grid: Grid,
+    pristine: Terrain,
+    pose: Pose,
+    battery: f32,
+    steps: usize,
+    collected: usize,
+    done: bool,
+    episodes: u64,
+    seed: u64,
+    /// Cached 16 state dims, recomputed once per state change. `encode_all`
+    /// evaluates A = 40 action encodings per step; without the cache each
+    /// would redo the ray casts and the nearest-science scan (the dominant
+    /// cost on the coordinator hot path — see EXPERIMENTS.md §Perf).
+    state_feat: [f32; 16],
+}
+
+impl ComplexRoverEnv {
+    pub fn new(seed: u64) -> Self {
+        let terrain = Terrain::generate(W, H, 0.08, N_SCIENCE, seed.wrapping_add(101));
+        let mut env = ComplexRoverEnv {
+            grid: Grid::new(terrain.clone()),
+            pristine: terrain,
+            pose: Pose::origin(),
+            battery: 1.0,
+            steps: 0,
+            collected: 0,
+            done: false,
+            episodes: 0,
+            seed,
+            state_feat: [0.0; 16],
+        };
+        env.reset();
+        env
+    }
+
+    /// Recompute the cached state features (after every state change).
+    fn refresh_state_features(&mut self) {
+        let mut f = [0f32; 16];
+        f[0] = self.pose.x as f32 / (W - 1) as f32 * 2.0 - 1.0;
+        f[1] = self.pose.y as f32 / (H - 1) as f32 * 2.0 - 1.0;
+        let (s, c) = self.pose.heading_sincos();
+        f[2] = s;
+        f[3] = c;
+        f[4] = self.battery * 2.0 - 1.0;
+        for h in 0..8 {
+            f[5 + h] = self.grid.ray_hazard_distance(&self.pose, h, SENSOR_RANGE) * 2.0 - 1.0;
+        }
+        let (gs, gc, gd) = self.goal_vector();
+        f[13] = gs;
+        f[14] = gc;
+        f[15] = gd;
+        self.state_feat = f;
+    }
+
+    pub fn pose(&self) -> Pose {
+        self.pose
+    }
+
+    pub fn collected(&self) -> usize {
+        self.collected
+    }
+
+    pub fn battery(&self) -> f32 {
+        self.battery
+    }
+
+    fn goal_vector(&self) -> (f32, f32, f32) {
+        // (sin bearing, cos bearing, normalized distance) to nearest target
+        match self.grid.terrain.nearest_science(self.pose.x, self.pose.y) {
+            None => (0.0, 0.0, -1.0),
+            Some((tx, ty)) => {
+                let dx = tx as f32 - self.pose.x as f32;
+                let dy = ty as f32 - self.pose.y as f32;
+                let dist = (dx * dx + dy * dy).sqrt();
+                let max_d = ((W * W + H * H) as f32).sqrt();
+                if dist < 0.5 {
+                    (0.0, 0.0, 2.0 * (dist / max_d) - 1.0)
+                } else {
+                    (dx / dist, dy / dist, 2.0 * (dist / max_d) - 1.0)
+                }
+            }
+        }
+    }
+
+    fn spend(&mut self, amount: f32) -> bool {
+        self.battery = (self.battery - amount).max(0.0);
+        if self.battery == 0.0 {
+            self.done = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Potential φ(s) = −0.02 · distance-to-nearest-science (potential-based
+    /// shaping; see SimpleRoverEnv::potential).
+    fn potential(&self) -> f32 {
+        match self.grid.terrain.nearest_science(self.pose.x, self.pose.y) {
+            None => 0.0,
+            Some((tx, ty)) => {
+                let dx = tx as f32 - self.pose.x as f32;
+                let dy = ty as f32 - self.pose.y as f32;
+                -0.02 * (dx * dx + dy * dy).sqrt()
+            }
+        }
+    }
+}
+
+/// Discount used for potential-based shaping (matches `Hyper::default`).
+const SHAPING_GAMMA: f32 = 0.9;
+
+impl Environment for ComplexRoverEnv {
+    fn net_config(&self) -> NetConfig {
+        NetConfig::new(Arch::Perceptron, EnvKind::Complex) // D/A only
+    }
+
+    fn state_space(&self) -> usize {
+        W * H // = 1800, the paper's state-space size
+    }
+
+    fn state_id(&self) -> usize {
+        self.grid.cell_id(&self.pose)
+    }
+
+    fn reset(&mut self) {
+        self.grid = Grid::new(self.pristine.clone());
+        let mut rng = Rng::seeded(self.seed ^ (self.episodes << 23));
+        loop {
+            let x = rng.below(W / 3);
+            let y = rng.below(H);
+            if !self.grid.terrain.is_hazard(x, y) && !self.grid.terrain.is_science(x, y) {
+                self.pose = Pose { x, y, heading: rng.below(8) };
+                break;
+            }
+        }
+        self.battery = 1.0;
+        self.steps = 0;
+        self.collected = 0;
+        self.done = false;
+        self.episodes += 1;
+        self.refresh_state_features();
+    }
+
+    fn encode_sa(&self, action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 20);
+        // 16 state dims (cached — recomputed once per state change)
+        out[..16].copy_from_slice(&self.state_feat);
+        // 4 action dims
+        ActionCode::complex(action, &mut out[16..20]);
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.done, "step() after terminal state");
+        assert!(action < 40, "complex action {action} out of range");
+        self.steps += 1;
+        let (heading, speed) = ActionCode::complex_parts(action);
+        let phi_before = self.potential();
+        let mut reward = -0.01;
+
+        if ActionCode::complex_is_sample(action) {
+            if self.grid.terrain.is_science(self.pose.x, self.pose.y) {
+                self.grid.terrain.clear_science(self.pose.x, self.pose.y);
+                self.collected += 1;
+                reward += 1.0;
+                if self.grid.terrain.science_remaining() == 0 {
+                    self.done = true; // full mission success
+                    reward += 1.0;
+                }
+            } else {
+                reward -= 0.1;
+            }
+            if self.spend(0.01) {
+                reward -= 0.5;
+            }
+        } else if speed == 0 {
+            // turn in place toward `heading`
+            self.pose.heading = heading;
+            if self.spend(0.005) {
+                reward -= 0.5;
+            }
+        } else {
+            let before = (self.pose.x, self.pose.y);
+            match self.grid.advance(&mut self.pose, heading, speed) {
+                MoveOutcome::Moved => {
+                    // energy scales with distance and climbed slope
+                    let slope = self.grid.terrain.slope(before, (self.pose.x, self.pose.y));
+                    if self.spend(0.005 * speed as f32 + 0.02 * slope) {
+                        reward -= 0.5;
+                    }
+                }
+                MoveOutcome::Edge => {
+                    reward -= 0.05;
+                    if self.spend(0.005) {
+                        reward -= 0.5;
+                    }
+                }
+                MoveOutcome::Hazard => {
+                    reward -= 1.0;
+                    self.done = true;
+                }
+            }
+        }
+
+        // potential-based shaping (policy-invariant)
+        reward += SHAPING_GAMMA * self.potential() - phi_before;
+
+        if self.steps >= MAX_STEPS {
+            self.done = true;
+        }
+        self.refresh_state_features();
+        StepResult { reward, done: self.done }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn name(&self) -> &'static str {
+        "complex-mars-yard-60x30"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_paper() {
+        let env = ComplexRoverEnv::new(1);
+        assert_eq!(env.d(), 20);
+        assert_eq!(env.n_actions(), 40);
+        assert_eq!(env.state_space(), 1800); // the paper's |S|
+    }
+
+    #[test]
+    fn encode_bounded() {
+        let env = ComplexRoverEnv::new(2);
+        let mut out = vec![0f32; 40 * 20];
+        env.encode_all(&mut out);
+        for v in out {
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ComplexRoverEnv::new(3);
+        let mut b = ComplexRoverEnv::new(3);
+        for action in [7, 12, 3, 22, 17, 9] {
+            let ra = a.step(action);
+            let rb = b.step(action);
+            assert_eq!(ra, rb);
+            if ra.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_collects_targets() {
+        let mut env = ComplexRoverEnv::new(4);
+        // place the rover directly on the nearest science target (test has
+        // module access to the pose) and sample
+        let (tx, ty) = env.grid.terrain.nearest_science(env.pose.x, env.pose.y).unwrap();
+        env.pose.x = tx;
+        env.pose.y = ty;
+        let r = env.step(0); // sample action
+        assert!(r.reward > 0.5, "reward {}", r.reward);
+        assert_eq!(env.collected(), 1);
+        // sampling on a non-science cell is penalized
+        env.reset();
+        assert!(!env.grid.terrain.is_science(env.pose.x, env.pose.y));
+        let r2 = env.step(0);
+        assert!(r2.reward < 0.0);
+        assert_eq!(env.collected(), 0);
+    }
+
+    #[test]
+    fn turn_in_place_changes_heading_only() {
+        let mut env = ComplexRoverEnv::new(5);
+        let p0 = env.pose();
+        env.step(3 * 5); // heading 3, speed 0 -> turn
+        let p1 = env.pose();
+        assert_eq!((p0.x, p0.y), (p1.x, p1.y));
+        assert_eq!(p1.heading, 3);
+    }
+
+    #[test]
+    fn episode_always_terminates() {
+        let mut env = ComplexRoverEnv::new(6);
+        let mut n = 0;
+        while !env.is_done() {
+            env.step(2 * 5 + 4); // drive east fast
+            n += 1;
+            assert!(n <= MAX_STEPS);
+        }
+    }
+
+    #[test]
+    fn state_id_tracks_cell() {
+        let mut env = ComplexRoverEnv::new(7);
+        let id0 = env.state_id();
+        assert!(id0 < 1800);
+        env.step(2 * 5 + 2); // move east 2
+        let id1 = env.state_id();
+        assert!(id1 < 1800);
+        if !env.is_done() {
+            assert_ne!(id0, id1);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Action-code encodings: map discrete action ids into the low-dimensional
+//! continuous action slice of the state-action vector.
+//!
+//! The paper gives the action-code widths (2 dims in the simple
+//! environment, part of the 20-dim vector in the complex one) but not the
+//! encoding itself; we use smooth, bounded codes (sin/cos for directions,
+//! normalized magnitudes) so nearby actions have nearby codes — the property
+//! a function-approximating Q-net needs to generalize.
+
+/// Encoding of one discrete action into `width` floats in [−1, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActionCode;
+
+impl ActionCode {
+    /// Simple environment: 6 actions -> 2 dims.
+    ///
+    /// Actions: 0 forward, 1 reverse, 2 turn-left, 3 turn-right,
+    /// 4 sample, 5 idle/recharge.
+    /// dim0 = category (move −1, turn 0, task +1), dim1 = polarity.
+    pub fn simple(action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 2);
+        let (cat, pol) = match action {
+            0 => (-1.0, 1.0),  // forward
+            1 => (-1.0, -1.0), // reverse
+            2 => (0.0, -1.0),  // turn left
+            3 => (0.0, 1.0),   // turn right
+            4 => (1.0, 1.0),   // sample
+            5 => (1.0, -1.0),  // idle / recharge
+            _ => panic!("simple action {action} out of range"),
+        };
+        out[0] = cat;
+        out[1] = pol;
+    }
+
+    /// Complex environment: 40 actions = 8 headings × 5 speeds -> 4 dims:
+    /// (sin θ, cos θ, speed/4 scaled to [−1,1], drive-vs-sample flag).
+    /// Speed 0 of heading 0 doubles as the “sample” action; all other
+    /// speed-0 variants are “hold” (turn in place to that heading).
+    pub fn complex(action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 4);
+        let (heading, speed) = Self::complex_parts(action);
+        let theta = heading as f32 * std::f32::consts::FRAC_PI_4;
+        out[0] = theta.sin();
+        out[1] = theta.cos();
+        out[2] = speed as f32 / 4.0 * 2.0 - 1.0;
+        out[3] = if Self::complex_is_sample(action) { 1.0 } else { -1.0 };
+    }
+
+    /// Decompose a complex action id into (heading 0..8, speed 0..5).
+    #[inline]
+    pub fn complex_parts(action: usize) -> (usize, usize) {
+        debug_assert!(action < 40, "complex action {action} out of range");
+        (action / 5, action % 5)
+    }
+
+    /// Whether a complex action is the sampling action (heading 0, speed 0).
+    #[inline]
+    pub fn complex_is_sample(action: usize) -> bool {
+        action == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_codes_distinct_and_bounded() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..6 {
+            let mut out = [0f32; 2];
+            ActionCode::simple(a, &mut out);
+            for v in out {
+                assert!((-1.0..=1.0).contains(&v));
+            }
+            assert!(seen.insert(format!("{out:?}")), "duplicate code for {a}");
+        }
+    }
+
+    #[test]
+    fn complex_codes_distinct_and_bounded() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..40 {
+            let mut out = [0f32; 4];
+            ActionCode::complex(a, &mut out);
+            for v in out {
+                assert!((-1.0..=1.0).contains(&v), "action {a}: {v}");
+            }
+            assert!(
+                seen.insert(format!("{:?}", out.map(|v| (v * 1e4) as i32))),
+                "duplicate code for {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn complex_parts_roundtrip() {
+        for a in 0..40 {
+            let (h, s) = ActionCode::complex_parts(a);
+            assert_eq!(h * 5 + s, a);
+            assert!(h < 8 && s < 5);
+        }
+        assert!(ActionCode::complex_is_sample(0));
+        assert!(!ActionCode::complex_is_sample(5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn simple_action_out_of_range_panics() {
+        let mut out = [0f32; 2];
+        ActionCode::simple(6, &mut out);
+    }
+}

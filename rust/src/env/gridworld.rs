@@ -1,0 +1,192 @@
+//! Shared gridworld machinery: rover pose, headings, movement.
+
+use super::terrain::Terrain;
+
+/// 8-connected compass headings, clockwise from north.
+pub const HEADINGS: [(i32, i32); 8] = [
+    (0, -1),  // N
+    (1, -1),  // NE
+    (1, 0),   // E
+    (1, 1),   // SE
+    (0, 1),   // S
+    (-1, 1),  // SW
+    (-1, 0),  // W
+    (-1, -1), // NW
+];
+
+/// Rover pose on the grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pose {
+    pub x: usize,
+    pub y: usize,
+    /// Index into [`HEADINGS`].
+    pub heading: usize,
+}
+
+impl Pose {
+    pub fn origin() -> Self {
+        Pose { x: 0, y: 0, heading: 2 } // facing east
+    }
+
+    /// Unit direction of the current heading.
+    pub fn dir(&self) -> (i32, i32) {
+        HEADINGS[self.heading % 8]
+    }
+
+    /// sin/cos encoding of the heading (continuous, wrap-free).
+    pub fn heading_sincos(&self) -> (f32, f32) {
+        let theta = self.heading as f32 * std::f32::consts::FRAC_PI_4;
+        (theta.sin(), theta.cos())
+    }
+}
+
+/// A grid the rover moves on (wraps [`Terrain`] with movement rules).
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub terrain: Terrain,
+}
+
+/// Result of attempting a move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoveOutcome {
+    Moved,
+    /// Blocked by the map edge — pose unchanged.
+    Edge,
+    /// Entered a hazard cell (move happens; the environment decides the
+    /// penalty / termination).
+    Hazard,
+}
+
+impl Grid {
+    pub fn new(terrain: Terrain) -> Self {
+        Grid { terrain }
+    }
+
+    pub fn width(&self) -> usize {
+        self.terrain.width
+    }
+
+    pub fn height(&self) -> usize {
+        self.terrain.height
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.terrain.width * self.terrain.height
+    }
+
+    /// Discrete cell id of a pose (the tabular state id base).
+    pub fn cell_id(&self, pose: &Pose) -> usize {
+        pose.y * self.width() + pose.x
+    }
+
+    /// Try to move `steps` cells along `heading`. Clips at map edges:
+    /// returns `Moved` if at least one cell of progress was made, `Edge` if
+    /// blocked immediately, `Hazard` as soon as a hazard cell is entered.
+    pub fn advance(&self, pose: &mut Pose, heading: usize, steps: usize) -> MoveOutcome {
+        pose.heading = heading % 8;
+        let (dx, dy) = HEADINGS[pose.heading];
+        let mut moved = false;
+        for _ in 0..steps {
+            let nx = pose.x as i32 + dx;
+            let ny = pose.y as i32 + dy;
+            if nx < 0 || ny < 0 || nx >= self.width() as i32 || ny >= self.height() as i32 {
+                break;
+            }
+            pose.x = nx as usize;
+            pose.y = ny as usize;
+            if self.terrain.is_hazard(pose.x, pose.y) {
+                return MoveOutcome::Hazard;
+            }
+            moved = true;
+        }
+        if moved {
+            MoveOutcome::Moved
+        } else {
+            MoveOutcome::Edge
+        }
+    }
+
+    /// Ray-cast from the pose along a heading: distance (in cells, capped at
+    /// `range`) to the first hazard or edge, normalized to [0,1].
+    /// This models the rover's terrain sensors (navcam/radar rays).
+    pub fn ray_hazard_distance(&self, pose: &Pose, heading: usize, range: usize) -> f32 {
+        let (dx, dy) = HEADINGS[heading % 8];
+        let (mut x, mut y) = (pose.x as i32, pose.y as i32);
+        for step in 1..=range {
+            x += dx;
+            y += dy;
+            if x < 0 || y < 0 || x >= self.width() as i32 || y >= self.height() as i32 {
+                return step as f32 / range as f32;
+            }
+            if self.terrain.is_hazard(x as usize, y as usize) {
+                return step as f32 / range as f32;
+            }
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_grid(w: usize, h: usize) -> Grid {
+        Grid::new(Terrain::generate(w, h, 0.0, 0, 1))
+    }
+
+    #[test]
+    fn advance_moves_and_respects_edges() {
+        let g = flat_grid(5, 5);
+        let mut p = Pose::origin();
+        assert_eq!(g.advance(&mut p, 2, 3), MoveOutcome::Moved); // east
+        assert_eq!((p.x, p.y), (3, 0));
+        assert_eq!(g.advance(&mut p, 2, 10), MoveOutcome::Moved); // clipped at edge
+        assert_eq!((p.x, p.y), (4, 0));
+        assert_eq!(g.advance(&mut p, 2, 1), MoveOutcome::Edge);
+        assert_eq!((p.x, p.y), (4, 0));
+        assert_eq!(g.advance(&mut p, 0, 1), MoveOutcome::Edge); // north off map
+    }
+
+    #[test]
+    fn hazard_detection() {
+        let mut t = Terrain::generate(5, 1, 0.0, 0, 2);
+        t.hazard[2] = true; // cell (2,0)
+        let g = Grid::new(t);
+        let mut p = Pose::origin();
+        assert_eq!(g.advance(&mut p, 2, 4), MoveOutcome::Hazard);
+        assert_eq!((p.x, p.y), (2, 0)); // stopped in the hazard cell
+    }
+
+    #[test]
+    fn ray_distances() {
+        let mut t = Terrain::generate(10, 1, 0.0, 0, 3);
+        t.hazard[4] = true;
+        let g = Grid::new(t);
+        let p = Pose::origin();
+        let d = g.ray_hazard_distance(&p, 2, 8); // east: hazard at 4 cells
+        assert!((d - 0.5).abs() < 1e-6);
+        let d_clear = g.ray_hazard_distance(&p, 4, 8); // south: immediate edge
+        assert!((d_clear - 1.0 / 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heading_sincos_unit_norm() {
+        for h in 0..8 {
+            let p = Pose { x: 0, y: 0, heading: h };
+            let (s, c) = p.heading_sincos();
+            assert!((s * s + c * c - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cell_ids_unique() {
+        let g = flat_grid(6, 4);
+        let mut seen = std::collections::HashSet::new();
+        for y in 0..4 {
+            for x in 0..6 {
+                assert!(seen.insert(g.cell_id(&Pose { x, y, heading: 0 })));
+            }
+        }
+        assert_eq!(seen.len(), 24);
+    }
+}

@@ -1,0 +1,39 @@
+//! Rover environments — the paper's “simple” and “complex” environments.
+//!
+//! The paper specifies only the interface dimensions (Section 5):
+//!
+//! * simple:  state+action vector D = 6 (4 state dims + 2 action dims),
+//!   A = 6 actions per state;
+//! * complex: D = 20, A = 40, |S| = 1800.
+//!
+//! Any environment with those dimensions exercises the identical accelerator
+//! datapath, so we build what the paper's introduction motivates: planetary
+//! rover navigation with terrain hazards, science targets and an energy
+//! budget (MSL/AEGIS-style target seeking). [`SimpleRoverEnv`] is a small
+//! ridge-crossing gridworld; [`ComplexRoverEnv`] is a 60×30 Mars-yard
+//! traverse (60·30 = 1800 = |S|) with ray-cast terrain sensing and 8
+//! headings × 5 speed levels = 40 actions.
+
+mod complex;
+mod encoding;
+mod gridworld;
+mod simple;
+mod terrain;
+mod traits;
+
+pub use complex::ComplexRoverEnv;
+pub use encoding::ActionCode;
+pub use gridworld::{Grid, Pose};
+pub use simple::SimpleRoverEnv;
+pub use terrain::Terrain;
+pub use traits::{Environment, StepResult};
+
+use crate::config::EnvKind;
+
+/// Construct the paper environment of the given kind with a seed.
+pub fn make_env(kind: EnvKind, seed: u64) -> Box<dyn Environment> {
+    match kind {
+        EnvKind::Simple => Box::new(SimpleRoverEnv::new(seed)),
+        EnvKind::Complex => Box::new(ComplexRoverEnv::new(seed)),
+    }
+}

@@ -1,0 +1,194 @@
+//! Procedural Mars-yard terrain: seeded value-noise elevation, hazard mask
+//! and science targets. Deterministic for a given seed so every experiment
+//! is reproducible.
+
+use crate::util::Rng;
+
+/// A rectangular terrain patch.
+#[derive(Debug, Clone)]
+pub struct Terrain {
+    pub width: usize,
+    pub height: usize,
+    /// Elevation in [0, 1], row-major.
+    pub elevation: Vec<f32>,
+    /// Hazard cells (craters, sand traps) the rover must avoid.
+    pub hazard: Vec<bool>,
+    /// Science-target cells (AEGIS-style laser targets).
+    pub science: Vec<bool>,
+}
+
+impl Terrain {
+    /// Generate terrain with roughly `hazard_frac` hazards and
+    /// `n_science` science targets, none of them on the start cell (0,0).
+    pub fn generate(
+        width: usize,
+        height: usize,
+        hazard_frac: f64,
+        n_science: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(width >= 2 && height >= 1, "terrain too small");
+        let mut rng = Rng::seeded(seed);
+
+        // Coarse value-noise: random lattice, bilinear upsample, two octaves.
+        let elevation = Self::value_noise(width, height, &mut rng);
+
+        let mut hazard = vec![false; width * height];
+        let mut placed = 0usize;
+        let target_hazards = ((width * height) as f64 * hazard_frac) as usize;
+        while placed < target_hazards {
+            let idx = rng.below(width * height);
+            // keep the start region clear
+            if idx == 0 || hazard[idx] {
+                continue;
+            }
+            hazard[idx] = true;
+            placed += 1;
+        }
+
+        let mut science = vec![false; width * height];
+        let mut placed = 0usize;
+        while placed < n_science {
+            let idx = rng.below(width * height);
+            if idx == 0 || hazard[idx] || science[idx] {
+                continue;
+            }
+            science[idx] = true;
+            placed += 1;
+        }
+
+        Terrain { width, height, elevation, hazard, science }
+    }
+
+    fn value_noise(width: usize, height: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0f32; width * height];
+        for (octave, amp) in [(4usize, 0.7f32), (8, 0.3)] {
+            let gw = octave + 1;
+            let gh = octave + 1;
+            let lattice: Vec<f32> = rng.vec_f32(gw * gh, 0.0, 1.0);
+            for y in 0..height {
+                for x in 0..width {
+                    let fx = x as f32 / (width - 1).max(1) as f32 * (gw - 1) as f32;
+                    let fy = y as f32 / (height - 1).max(1) as f32 * (gh - 1) as f32;
+                    let (x0, y0) = (fx as usize, fy as usize);
+                    let (x1, y1) = ((x0 + 1).min(gw - 1), (y0 + 1).min(gh - 1));
+                    let (tx, ty) = (fx - x0 as f32, fy - y0 as f32);
+                    let v00 = lattice[y0 * gw + x0];
+                    let v10 = lattice[y0 * gw + x1];
+                    let v01 = lattice[y1 * gw + x0];
+                    let v11 = lattice[y1 * gw + x1];
+                    let v = v00 * (1.0 - tx) * (1.0 - ty)
+                        + v10 * tx * (1.0 - ty)
+                        + v01 * (1.0 - tx) * ty
+                        + v11 * tx * ty;
+                    out[y * width + x] += amp * v;
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        debug_assert!(x < self.width && y < self.height);
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn elevation_at(&self, x: usize, y: usize) -> f32 {
+        self.elevation[self.idx(x, y)]
+    }
+
+    #[inline]
+    pub fn is_hazard(&self, x: usize, y: usize) -> bool {
+        self.hazard[self.idx(x, y)]
+    }
+
+    #[inline]
+    pub fn is_science(&self, x: usize, y: usize) -> bool {
+        self.science[self.idx(x, y)]
+    }
+
+    /// Remove a science target once sampled.
+    pub fn clear_science(&mut self, x: usize, y: usize) {
+        let i = self.idx(x, y);
+        self.science[i] = false;
+    }
+
+    /// Slope magnitude between two cells (for energy cost / hazard checks).
+    pub fn slope(&self, from: (usize, usize), to: (usize, usize)) -> f32 {
+        (self.elevation_at(to.0, to.1) - self.elevation_at(from.0, from.1)).abs()
+    }
+
+    /// Nearest science target to `(x, y)` (euclidean), if any remain.
+    pub fn nearest_science(&self, x: usize, y: usize) -> Option<(usize, usize)> {
+        let mut best: Option<((usize, usize), f32)> = None;
+        for ty in 0..self.height {
+            for tx in 0..self.width {
+                if self.science[self.idx(tx, ty)] {
+                    let dx = tx as f32 - x as f32;
+                    let dy = ty as f32 - y as f32;
+                    let d2 = dx * dx + dy * dy;
+                    if best.map_or(true, |(_, b)| d2 < b) {
+                        best = Some(((tx, ty), d2));
+                    }
+                }
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+
+    pub fn science_remaining(&self) -> usize {
+        self.science.iter().filter(|&&s| s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Terrain::generate(30, 20, 0.1, 5, 42);
+        let b = Terrain::generate(30, 20, 0.1, 5, 42);
+        assert_eq!(a.elevation, b.elevation);
+        assert_eq!(a.hazard, b.hazard);
+        assert_eq!(a.science, b.science);
+        let c = Terrain::generate(30, 20, 0.1, 5, 43);
+        assert_ne!(a.hazard, c.hazard);
+    }
+
+    #[test]
+    fn start_cell_clear() {
+        for seed in 0..20 {
+            let t = Terrain::generate(10, 10, 0.2, 3, seed);
+            assert!(!t.hazard[0], "seed {seed}");
+            assert!(!t.science[0], "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn counts_respected() {
+        let t = Terrain::generate(40, 25, 0.1, 7, 7);
+        assert_eq!(t.science_remaining(), 7);
+        let hazards = t.hazard.iter().filter(|&&h| h).count();
+        assert_eq!(hazards, (40.0f64 * 25.0 * 0.1) as usize);
+    }
+
+    #[test]
+    fn elevation_bounded() {
+        let t = Terrain::generate(30, 30, 0.0, 0, 3);
+        for &e in &t.elevation {
+            assert!((0.0..=1.0).contains(&e));
+        }
+    }
+
+    #[test]
+    fn nearest_science_finds_target() {
+        let mut t = Terrain::generate(10, 10, 0.0, 1, 11);
+        let (tx, ty) = t.nearest_science(0, 0).unwrap();
+        assert!(t.is_science(tx, ty));
+        t.clear_science(tx, ty);
+        assert_eq!(t.nearest_science(0, 0), None);
+    }
+}

@@ -1,0 +1,66 @@
+//! Environment interface consumed by the Q-learning core and coordinator.
+
+use crate::config::NetConfig;
+
+/// Outcome of one environment step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepResult {
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// A discrete-action environment whose state-action pairs encode into the
+/// fixed-width vectors the accelerator consumes.
+///
+/// The contract mirrors the paper's Section 2 state-flow: the learner asks
+/// for the encodings of **all** A actions in the current state (one
+/// feed-forward sweep), selects an action, steps, and repeats in the next
+/// state.
+pub trait Environment: Send {
+    /// Network/interface dimensions this environment targets.
+    fn net_config(&self) -> NetConfig;
+
+    /// Number of actions per state (A).
+    fn n_actions(&self) -> usize {
+        self.net_config().a
+    }
+
+    /// State+action encoding width (D).
+    fn d(&self) -> usize {
+        self.net_config().d
+    }
+
+    /// Size of the discrete state space |S| (for the tabular baseline;
+    /// the paper quotes 1800 for the complex environment).
+    fn state_space(&self) -> usize;
+
+    /// Discrete id of the current state, in `0..state_space()`.
+    fn state_id(&self) -> usize;
+
+    /// Reset to a start state (deterministic given the constructor seed
+    /// and reset count).
+    fn reset(&mut self);
+
+    /// Encode (current state, action) into `out` (length D, values ⊂ [−1,1]
+    /// so they are representable in Q(18,12) without saturation).
+    fn encode_sa(&self, action: usize, out: &mut [f32]);
+
+    /// Encode all A actions of the current state into `out` (row-major
+    /// (A, D)) — the input tile of one feed-forward sweep.
+    fn encode_all(&self, out: &mut [f32]) {
+        let (a_n, d) = (self.n_actions(), self.d());
+        debug_assert_eq!(out.len(), a_n * d);
+        for a in 0..a_n {
+            self.encode_sa(a, &mut out[a * d..(a + 1) * d]);
+        }
+    }
+
+    /// Apply `action`; returns the reward and terminal flag.
+    fn step(&mut self, action: usize) -> StepResult;
+
+    /// Whether the current episode has terminated.
+    fn is_done(&self) -> bool;
+
+    /// Human-readable name for logs/telemetry.
+    fn name(&self) -> &'static str;
+}

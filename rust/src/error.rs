@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+/// Convenience alias used across the crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Errors surfaced by the qfpga library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Failure inside the XLA/PJRT runtime (compile, execute, transfer).
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Artifact directory / manifest problems.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Mismatch between an artifact's declared interface and what the
+    /// caller supplied (wrong shape, arity, dtype, ...).
+    #[error("interface mismatch: {0}")]
+    Interface(String),
+
+    /// Invalid experiment or system configuration.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Environment misuse (invalid action id, step after terminal, ...).
+    #[error("environment: {0}")]
+    Env(String),
+
+    /// FPGA model inconsistency (e.g. design does not fit the device).
+    #[error("fpga model: {0}")]
+    Fpga(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper for interface errors.
+    pub fn interface(msg: impl Into<String>) -> Self {
+        Error::Interface(msg.into())
+    }
+}

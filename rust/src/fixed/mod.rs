@@ -1,0 +1,31 @@
+//! Qm.n fixed-point arithmetic — the paper's fixed datapath substrate.
+//!
+//! The paper's headline result (Tables 1–6) hinges on replacing floating
+//! point with fixed point so the datapath maps onto DSP48 MACs. This module
+//! provides:
+//!
+//! * [`FixedSpec`] — a Q(word, frac) format description (default Q(18,12),
+//!   chosen so words feed the DSP48E1 18-bit multiplier port directly);
+//! * [`Fixed`] — a saturating fixed-point value with round-half-even
+//!   conversion, matching `python/compile/kernels/fixed_point.py`;
+//! * [`Acc`] — the wide MAC accumulator (2·frac fraction bits, i128 width)
+//!   modelling the DSP48 accumulation chain: products accumulate exactly and
+//!   are rounded **once** on readout;
+//! * [`tensor`] — slice/matrix helpers used by the NN baseline and the FPGA
+//!   datapath simulator.
+//!
+//! Cross-layer contract: the python side fake-quantizes in float32 while
+//! this module uses true integer words. For the value ranges exercised here
+//! (|x| ≤ 32, word ≤ 24) both representations are exact in f32/f64 and agree
+//! to the bit; `tests/backend_equiv.rs` and the pinned vectors below enforce
+//! the shared convention (round-half-even, saturate at ±2^(word−1)).
+
+mod quant;
+mod spec;
+mod value;
+
+pub mod tensor;
+
+pub use quant::Quantizer;
+pub use spec::FixedSpec;
+pub use value::{Acc, Fixed};

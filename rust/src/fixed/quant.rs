@@ -1,0 +1,109 @@
+//! Fast fake-quantizer for the f32 datapaths.
+//!
+//! [`Fixed::from_f32`] routes through f64 (the canonical convention used by
+//! the integer datapath). The NN fake-quant path calls a quantizer once per
+//! register value on the hot loop, so this precomputes the constants and
+//! stays entirely in f32 — which also matches the python/XLA float32
+//! fake-quant (`jnp.round(x * scale)`) bit-for-bit, where the f64 route can
+//! differ by one LSB at rounding ties. §Perf: ~2.3× on the fixed-mode CPU
+//! backend (EXPERIMENTS.md).
+
+use super::FixedSpec;
+
+/// Precomputed Q(word, frac) fake-quantizer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    scale: f32,
+    inv_scale: f32,
+    qmin: f32,
+    qmax: f32,
+    spec: FixedSpec,
+}
+
+impl Quantizer {
+    pub fn new(spec: FixedSpec) -> Self {
+        Quantizer {
+            scale: spec.scale() as f32,
+            inv_scale: (1.0 / spec.scale()) as f32,
+            qmin: spec.qmin() as f32,
+            qmax: spec.qmax() as f32,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> FixedSpec {
+        self.spec
+    }
+
+    /// Quantize one value: scale, round-half-even, saturate — all in f32,
+    /// matching `jnp.round(x * 2^frac).clip(...) / 2^frac`.
+    #[inline(always)]
+    pub fn q(&self, x: f32) -> f32 {
+        let scaled = (x * self.scale).round_ties_even();
+        scaled.clamp(self.qmin, self.qmax) * self.inv_scale
+    }
+
+    /// Quantize straight to the raw integer word (for the integer
+    /// datapath's input registers — avoids the f64 round trip of
+    /// `Fixed::from_f32` on the per-element hot path).
+    #[inline(always)]
+    pub fn to_raw(&self, x: f32) -> i64 {
+        (x * self.scale).round_ties_even().clamp(self.qmin, self.qmax) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Fixed;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_f64_convention_on_typical_range() {
+        let spec = FixedSpec::default();
+        let q = Quantizer::new(spec);
+        let mut rng = Rng::seeded(7);
+        let mut tie_diffs = 0usize;
+        for _ in 0..50_000 {
+            let x = rng.f32_range(-40.0, 40.0);
+            let fast = q.q(x);
+            let slow = Fixed::from_f32(x, spec).to_f32();
+            // the f32 path may resolve a rounding tie differently than the
+            // f64 path when x*scale lands exactly on .5 after f32 rounding;
+            // anything larger than one LSB is a bug
+            if fast != slow {
+                assert!(
+                    (fast - slow).abs() <= spec.lsb() as f32,
+                    "{x}: fast {fast} vs slow {slow}"
+                );
+                tie_diffs += 1;
+            }
+        }
+        assert!(tie_diffs < 100, "too many tie mismatches: {tie_diffs}");
+    }
+
+    #[test]
+    fn saturates() {
+        let q = Quantizer::new(FixedSpec::default());
+        assert_eq!(q.q(1e9), FixedSpec::default().max_value() as f32);
+        assert_eq!(q.q(-1e9), FixedSpec::default().min_value() as f32);
+    }
+
+    #[test]
+    fn idempotent() {
+        let q = Quantizer::new(FixedSpec::new(16, 8));
+        for i in -1000..1000 {
+            let x = i as f32 * 0.013;
+            assert_eq!(q.q(q.q(x)), q.q(x));
+        }
+    }
+
+    #[test]
+    fn exact_on_grid_values() {
+        let q = Quantizer::new(FixedSpec::default());
+        for k in [-4096i32, -1, 0, 1, 2048, 131071] {
+            let x = k as f32 / 4096.0;
+            assert_eq!(q.q(x), x);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Q(word, frac) format description.
+
+use crate::error::{Error, Result};
+
+/// A signed fixed-point format with `word` total bits (including sign) and
+/// `frac` fraction bits — “Q(word, frac)”.
+///
+/// The paper (Section 5) notes that “the fixed point word length and
+/// fraction length plays a major role in trading off accuracy with power
+/// consumption”; the X3 ablation sweeps this spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedSpec {
+    /// Total bits, including sign. 2 ..= 63.
+    pub word: u32,
+    /// Fraction bits. < word.
+    pub frac: u32,
+}
+
+impl Default for FixedSpec {
+    /// Q(18,12): 18-bit words drive the DSP48E1 18×25 multiplier directly.
+    fn default() -> Self {
+        FixedSpec { word: 18, frac: 12 }
+    }
+}
+
+impl FixedSpec {
+    pub const fn new(word: u32, frac: u32) -> Self {
+        FixedSpec { word, frac }
+    }
+
+    /// Validate the format (word within machine limits, frac < word).
+    pub fn validate(&self) -> Result<()> {
+        if self.word < 2 || self.word > 63 {
+            return Err(Error::Config(format!(
+                "fixed word length {} out of range 2..=63",
+                self.word
+            )));
+        }
+        if self.frac >= self.word {
+            return Err(Error::Config(format!(
+                "fraction bits {} must be < word length {}",
+                self.frac, self.word
+            )));
+        }
+        Ok(())
+    }
+
+    /// Largest representable raw integer: 2^(word−1) − 1.
+    #[inline]
+    pub const fn qmax(&self) -> i64 {
+        (1i64 << (self.word - 1)) - 1
+    }
+
+    /// Smallest representable raw integer: −2^(word−1).
+    #[inline]
+    pub const fn qmin(&self) -> i64 {
+        -(1i64 << (self.word - 1))
+    }
+
+    /// 2^frac as f64.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1i64 << self.frac) as f64
+    }
+
+    /// Value of one least-significant bit.
+    #[inline]
+    pub fn lsb(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        self.qmax() as f64 / self.scale()
+    }
+
+    /// Smallest (most negative) representable value.
+    #[inline]
+    pub fn min_value(&self) -> f64 {
+        self.qmin() as f64 / self.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q18_12_constants() {
+        let s = FixedSpec::default();
+        assert_eq!(s.qmax(), 131_071);
+        assert_eq!(s.qmin(), -131_072);
+        assert_eq!(s.scale(), 4096.0);
+        assert_eq!(s.lsb(), 1.0 / 4096.0);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(FixedSpec::new(18, 12).validate().is_ok());
+        assert!(FixedSpec::new(1, 0).validate().is_err());
+        assert!(FixedSpec::new(64, 12).validate().is_err());
+        assert!(FixedSpec::new(16, 16).validate().is_err());
+        assert!(FixedSpec::new(16, 17).validate().is_err());
+    }
+
+    #[test]
+    fn range_symmetry() {
+        for (w, f) in [(8u32, 4u32), (16, 8), (18, 12), (24, 16), (32, 24)] {
+            let s = FixedSpec::new(w, f);
+            assert_eq!(s.qmax(), -s.qmin() - 1);
+            assert!(s.max_value() > 0.0 && s.min_value() < 0.0);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Slice / matrix helpers over [`Fixed`] used by the NN baseline and the
+//! FPGA datapath simulator.
+
+use super::{Acc, Fixed, FixedSpec};
+
+/// Quantize an f32 slice onto the grid.
+pub fn quantize_slice(xs: &[f32], spec: FixedSpec) -> Vec<Fixed> {
+    xs.iter().map(|&x| Fixed::from_f32(x, spec)).collect()
+}
+
+/// Dequantize back to f32.
+pub fn to_f32_vec(xs: &[Fixed]) -> Vec<f32> {
+    xs.iter().map(Fixed::to_f32).collect()
+}
+
+/// Fixed-point dot product with a single final rounding (wide accumulator).
+pub fn dot(x: &[Fixed], w: &[Fixed], spec: FixedSpec) -> Fixed {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = Acc::new(spec);
+    for (a, b) in x.iter().zip(w) {
+        acc.mac(*a, *b);
+    }
+    acc.finish()
+}
+
+/// Dot product plus bias, one rounding: the paper's MAC block (Fig. 4).
+pub fn dot_bias(x: &[Fixed], w: &[Fixed], b: Fixed, spec: FixedSpec) -> Fixed {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = Acc::new(spec);
+    for (a, ww) in x.iter().zip(w) {
+        acc.mac(*a, *ww);
+    }
+    acc.add_value(b);
+    acc.finish()
+}
+
+/// y = x · W + b for a row-major W of shape (d, h): h wide accumulators,
+/// one rounding per output — the parallel-MAC hidden layer.
+pub fn matvec_bias(
+    x: &[Fixed],
+    w: &[Fixed],
+    b: &[Fixed],
+    d: usize,
+    h: usize,
+    spec: FixedSpec,
+) -> Vec<Fixed> {
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(w.len(), d * h);
+    debug_assert_eq!(b.len(), h);
+    let mut out = Vec::with_capacity(h);
+    for j in 0..h {
+        let mut acc = Acc::new(spec);
+        for i in 0..d {
+            acc.mac(x[i], w[i * h + j]);
+        }
+        acc.add_value(b[j]);
+        out.push(acc.finish());
+    }
+    out
+}
+
+/// Max over a slice (the error-capture block's comparator chain).
+pub fn max(xs: &[Fixed]) -> Fixed {
+    debug_assert!(!xs.is_empty());
+    let mut m = xs[0];
+    for &x in &xs[1..] {
+        if x.raw() > m.raw() {
+            m = x;
+        }
+    }
+    m
+}
+
+/// Index of the maximum (action selection on the fixed datapath).
+pub fn argmax(xs: &[Fixed]) -> usize {
+    debug_assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if x.raw() > xs[best].raw() {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q: FixedSpec = FixedSpec::new(18, 12);
+
+    #[test]
+    fn dot_matches_scalar_chain() {
+        let x = quantize_slice(&[0.5, -0.25, 1.0], Q);
+        let w = quantize_slice(&[1.0, 2.0, -0.5], Q);
+        let d = dot(&x, &w, Q);
+        assert_eq!(d.to_f64(), 0.5 - 0.5 - 0.5);
+    }
+
+    #[test]
+    fn matvec_matches_dots() {
+        let x = quantize_slice(&[0.1, 0.2, 0.3, 0.4], Q);
+        let w = quantize_slice(&(0..8).map(|i| i as f32 * 0.1).collect::<Vec<_>>(), Q);
+        let b = quantize_slice(&[0.5, -0.5], Q);
+        let y = matvec_bias(&x, &w, &b, 4, 2, Q);
+        for j in 0..2 {
+            let col: Vec<Fixed> = (0..4).map(|i| w[i * 2 + j]).collect();
+            let want = dot_bias(&x, &col, b[j], Q);
+            assert_eq!(y[j], want);
+        }
+    }
+
+    #[test]
+    fn max_and_argmax() {
+        let xs = quantize_slice(&[0.1, 0.9, -0.4, 0.9, 0.2], Q);
+        assert_eq!(max(&xs), Fixed::from_f64(0.9, Q));
+        assert_eq!(argmax(&xs), 1); // first max wins
+    }
+
+    #[test]
+    fn roundtrip() {
+        let xs = [0.125f32, -0.75, 3.0, -3.0];
+        let q = quantize_slice(&xs, Q);
+        assert_eq!(to_f32_vec(&q), xs.to_vec());
+    }
+}

@@ -1,0 +1,261 @@
+//! Fixed-point scalar value and the wide MAC accumulator.
+
+use super::FixedSpec;
+
+/// A fixed-point value: raw integer word interpreted as `raw / 2^frac`.
+///
+/// `Fixed` deliberately carries its [`FixedSpec`] so mixed-format bugs are
+/// caught in debug builds (`debug_assert!`) while the release hot path stays
+/// branch-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fixed {
+    raw: i64,
+    spec: FixedSpec,
+}
+
+#[inline]
+fn round_half_even(x: f64) -> i64 {
+    // `round_ties_even` matches numpy/jax `round` used on the python side.
+    x.round_ties_even() as i64
+}
+
+impl Fixed {
+    /// Quantize a float to the grid: scale, round-half-even, saturate.
+    #[inline]
+    pub fn from_f64(x: f64, spec: FixedSpec) -> Self {
+        let scaled = round_half_even(x * spec.scale());
+        let raw = scaled.clamp(spec.qmin(), spec.qmax());
+        Fixed { raw, spec }
+    }
+
+    #[inline]
+    pub fn from_f32(x: f32, spec: FixedSpec) -> Self {
+        // Match python: jnp.round operates on the f32 product; promoting the
+        // f32 input to f64 first is exact, so one shared path suffices.
+        Self::from_f64(x as f64, spec)
+    }
+
+    /// Construct from a raw integer word (saturating).
+    #[inline]
+    pub fn from_raw(raw: i64, spec: FixedSpec) -> Self {
+        Fixed { raw: raw.clamp(spec.qmin(), spec.qmax()), spec }
+    }
+
+    #[inline]
+    pub fn zero(spec: FixedSpec) -> Self {
+        Fixed { raw: 0, spec }
+    }
+
+    #[inline]
+    pub fn raw(&self) -> i64 {
+        self.raw
+    }
+
+    #[inline]
+    pub fn spec(&self) -> FixedSpec {
+        self.spec
+    }
+
+    #[inline]
+    pub fn to_f64(&self) -> f64 {
+        self.raw as f64 / self.spec.scale()
+    }
+
+    #[inline]
+    pub fn to_f32(&self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    /// Saturating addition (single adder stage).
+    #[inline]
+    pub fn add(&self, rhs: Fixed) -> Fixed {
+        debug_assert_eq!(self.spec, rhs.spec);
+        Fixed::from_raw(self.raw + rhs.raw, self.spec)
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sub(&self, rhs: Fixed) -> Fixed {
+        debug_assert_eq!(self.spec, rhs.spec);
+        Fixed::from_raw(self.raw - rhs.raw, self.spec)
+    }
+
+    /// Fixed-point multiply: exact 2·frac-bit product, one rounding back to
+    /// frac bits (round-half-even on the dropped bits), saturate — DSP48
+    /// multiplier followed by the rounding stage.
+    #[inline]
+    pub fn mul(&self, rhs: Fixed) -> Fixed {
+        debug_assert_eq!(self.spec, rhs.spec);
+        let prod = self.raw as i128 * rhs.raw as i128; // 2*frac fraction bits
+        Fixed::from_raw(round_q(prod, self.spec.frac), self.spec)
+    }
+
+    /// Negation (saturating: −qmin saturates to qmax).
+    #[inline]
+    pub fn neg(&self) -> Fixed {
+        Fixed::from_raw(-self.raw, self.spec)
+    }
+}
+
+/// Round a 2·frac-fraction-bit integer down to frac fraction bits with
+/// round-half-even, mirroring `round(x * 2^frac) / 2^frac` on exact values.
+#[inline]
+fn round_q(wide: i128, frac: u32) -> i64 {
+    let div = 1i128 << frac;
+    let q = wide >> frac; // floor division (arithmetic shift)
+    let rem = wide - (q << frac);
+    let half = div / 2;
+    let rounded = if rem > half {
+        q + 1
+    } else if rem < half {
+        q
+    } else {
+        // exactly half: round to even
+        if q & 1 == 0 {
+            q
+        } else {
+            q + 1
+        }
+    };
+    rounded as i64
+}
+
+/// Wide MAC accumulator: holds 2·frac fraction bits in i128, so a whole dot
+/// product accumulates exactly and is rounded **once** on readout. This is
+/// the DSP48 accumulation-chain semantics the python oracle's `qdot`
+/// reproduces (see kernels/fixed_point.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Acc {
+    wide: i128,
+    spec: FixedSpec,
+}
+
+impl Acc {
+    #[inline]
+    pub fn new(spec: FixedSpec) -> Self {
+        Acc { wide: 0, spec }
+    }
+
+    /// Accumulate the exact product a·b (no intermediate rounding).
+    #[inline]
+    pub fn mac(&mut self, a: Fixed, b: Fixed) {
+        debug_assert_eq!(a.spec(), self.spec);
+        debug_assert_eq!(b.spec(), self.spec);
+        self.wide += a.raw() as i128 * b.raw() as i128;
+    }
+
+    /// Add a frac-bit value (e.g. the bias) by widening it to 2·frac bits.
+    #[inline]
+    pub fn add_value(&mut self, v: Fixed) {
+        debug_assert_eq!(v.spec(), self.spec);
+        self.wide += (v.raw() as i128) << self.spec.frac;
+    }
+
+    /// Round once back to the Q(word, frac) grid and saturate.
+    #[inline]
+    pub fn finish(self) -> Fixed {
+        Fixed::from_raw(round_q(self.wide, self.spec.frac), self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q: FixedSpec = FixedSpec::new(18, 12);
+
+    /// Pinned convention vectors, shared with
+    /// python/tests/test_fixed_point.py::VECTORS.
+    #[test]
+    fn matches_python_convention() {
+        let cases: &[(f64, f64)] = &[
+            (0.0, 0.0),
+            (1.0, 1.0),
+            (-1.0, -1.0),
+            (0.5, 0.5),
+            // round-half-even at the grid midpoint
+            (2048.5 / 4096.0, 2048.0 / 4096.0),
+            (2049.5 / 4096.0, 2050.0 / 4096.0),
+            // saturation
+            (100.0, 131071.0 / 4096.0),
+            (-100.0, -131072.0 / 4096.0),
+        ];
+        for &(x, want) in cases {
+            let got = Fixed::from_f64(x, Q).to_f64();
+            assert_eq!(got, want, "quantize({x})");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        for i in -2000..2000 {
+            let x = i as f64 * 0.01;
+            let q1 = Fixed::from_f64(x, Q);
+            let q2 = Fixed::from_f64(q1.to_f64(), Q);
+            assert_eq!(q1, q2);
+        }
+    }
+
+    #[test]
+    fn mul_single_rounding() {
+        let a = Fixed::from_f64(0.3, Q);
+        let b = Fixed::from_f64(0.7, Q);
+        let got = a.mul(b);
+        // exact product of the quantized values, rounded once
+        let want = Fixed::from_f64(a.to_f64() * b.to_f64(), Q);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mul_negative_rounding() {
+        // rounding of negative products must also be round-half-even
+        for (x, y) in [(-0.3, 0.7), (0.3, -0.7), (-0.3, -0.7), (-1.5, 1.5)] {
+            let a = Fixed::from_f64(x, Q);
+            let b = Fixed::from_f64(y, Q);
+            let want = Fixed::from_f64(a.to_f64() * b.to_f64(), Q);
+            assert_eq!(a.mul(b), want, "{x} * {y}");
+        }
+    }
+
+    #[test]
+    fn acc_matches_single_rounding_of_exact_dot() {
+        let xs: Vec<Fixed> = (0..16)
+            .map(|i| Fixed::from_f64(0.1 * i as f64 - 0.8, Q))
+            .collect();
+        let ws: Vec<Fixed> = (0..16)
+            .map(|i| Fixed::from_f64(0.05 * i as f64 - 0.4, Q))
+            .collect();
+        let mut acc = Acc::new(Q);
+        let mut exact = 0.0f64;
+        for (x, w) in xs.iter().zip(&ws) {
+            acc.mac(*x, *w);
+            exact += x.to_f64() * w.to_f64();
+        }
+        assert_eq!(acc.finish(), Fixed::from_f64(exact, Q));
+    }
+
+    #[test]
+    fn acc_bias_widening() {
+        let mut acc = Acc::new(Q);
+        acc.add_value(Fixed::from_f64(0.25, Q));
+        acc.mac(Fixed::from_f64(0.5, Q), Fixed::from_f64(0.5, Q));
+        assert_eq!(acc.finish().to_f64(), 0.5);
+    }
+
+    #[test]
+    fn saturating_arithmetic() {
+        let max = Fixed::from_raw(Q.qmax(), Q);
+        assert_eq!(max.add(max).raw(), Q.qmax());
+        let min = Fixed::from_raw(Q.qmin(), Q);
+        assert_eq!(min.add(min).raw(), Q.qmin());
+        assert_eq!(min.neg().raw(), Q.qmax()); // −qmin saturates
+        assert_eq!(max.mul(max).raw(), Q.qmax()); // 32*32 >> range
+    }
+
+    #[test]
+    fn sub_basic() {
+        let a = Fixed::from_f64(1.5, Q);
+        let b = Fixed::from_f64(0.25, Q);
+        assert_eq!(a.sub(b).to_f64(), 1.25);
+    }
+}

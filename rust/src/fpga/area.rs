@@ -1,0 +1,174 @@
+//! Resource (area) model: LUT/FF/DSP/BRAM counts for each accelerator
+//! configuration, checked against the Virtex-7 485T capacity.
+//!
+//! Derivation (paper Fig. 4–10, "fine-grained parallelism"):
+//!
+//! * **Fixed feed-forward**: one DSP48 multiplier per weight of a layer
+//!   stage (D per perceptron / per hidden neuron; H at the MLP output), a
+//!   balanced adder tree (fan-in − 1 adders + bias), one sigmoid+derivative
+//!   ROM pair per neuron.
+//! * **Fixed backprop**: the δ and ΔW generators are "done using separate
+//!   resources" (Section 4) — one multiplier per weight again, plus the
+//!   update adders.
+//! * **Float**: one LogiCORE MAC chain (mul + add) per layer for the
+//!   perceptron, H parallel chains for the MLP hidden layer, one backprop
+//!   chain, two auxiliary multipliers and a comparator. Area is dominated
+//!   by the FP cores and nearly independent of D (the chains are serial).
+//! * Both: two Q-value FIFOs, control FSM per block (3 blocks).
+
+use crate::config::{Arch, NetConfig, Precision};
+use crate::error::{Error, Result};
+
+use super::device::Virtex7;
+use super::units::{cost, Resources};
+
+/// Count the resources of one accelerator instance.
+pub fn accelerator_resources(cfg: &NetConfig, prec: Precision) -> Resources {
+    let d = cfg.d as u64;
+    let h = cfg.h as u64;
+    let mut r = Resources::default();
+
+    match prec {
+        Precision::Fixed => {
+            match cfg.arch {
+                Arch::Perceptron => {
+                    // feed-forward: D multipliers, D adders (tree + bias), ROM
+                    r.add(cost::FX_MUL.scaled(d));
+                    r.add(cost::FX_ADD.scaled(d));
+                    r.add(cost::SIGMOID_ROM);
+                    // backprop: δ (1 mul) + ΔW (D+1 mul) + update adders
+                    r.add(cost::FX_MUL.scaled(d + 2));
+                    r.add(cost::FX_ADD.scaled(d + 1));
+                }
+                Arch::Mlp => {
+                    // hidden: H neurons × (D mul + D add + ROM)
+                    r.add(cost::FX_MUL.scaled(d * h));
+                    r.add(cost::FX_ADD.scaled(d * h));
+                    r.add(cost::SIGMOID_ROM.scaled(h));
+                    // output: H mul + H add + ROM
+                    r.add(cost::FX_MUL.scaled(h));
+                    r.add(cost::FX_ADD.scaled(h));
+                    r.add(cost::SIGMOID_ROM);
+                    // backprop: δ2 (1) + δ1 (2H) + ΔW2 (H+1) + ΔW1 (DH+H)
+                    r.add(cost::FX_MUL.scaled(1 + 2 * h + h + 1 + d * h + h));
+                    r.add(cost::FX_ADD.scaled(d * h + 2 * h + 1));
+                }
+            }
+        }
+        Precision::Float => {
+            let chains = match cfg.arch {
+                Arch::Perceptron => 1 + 1, // forward chain + backprop chain
+                Arch::Mlp => h + 1 + 1,    // hidden chains + output + backprop
+            };
+            r.add(cost::FP_MUL.scaled(chains));
+            r.add(cost::FP_ADD.scaled(chains));
+            // δ generators: two extra multipliers
+            r.add(cost::FP_MUL.scaled(2));
+            // error-capture comparator
+            r.add(cost::FP_CMP);
+            // ROMs (sigmoid + derivative), shared per layer
+            let roms = match cfg.arch {
+                Arch::Perceptron => 1,
+                Arch::Mlp => 2,
+            };
+            r.add(cost::SIGMOID_ROM.scaled(roms));
+        }
+    }
+
+    // common: two Q-FIFOs + control FSMs for the three blocks
+    r.add(cost::FIFO.scaled(2));
+    r.add(cost::CONTROL.scaled(3));
+    r
+}
+
+/// Utilization of the target device, as fractions in [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+    pub bram36: f64,
+}
+
+impl Utilization {
+    pub fn max_fraction(&self) -> f64 {
+        self.luts.max(self.ffs).max(self.dsps).max(self.bram36)
+    }
+}
+
+/// Compute utilization and fail if the design does not fit.
+pub fn check_fit(cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> Result<Utilization> {
+    let r = accelerator_resources(cfg, prec);
+    let u = Utilization {
+        luts: r.luts as f64 / dev.luts as f64,
+        ffs: r.ffs as f64 / dev.ffs as f64,
+        dsps: r.dsps as f64 / dev.dsps as f64,
+        bram36: r.bram36 as f64 / dev.bram36 as f64,
+    };
+    if u.max_fraction() > 1.0 {
+        return Err(Error::Fpga(format!(
+            "{}/{:?} does not fit the device: {u:?}",
+            cfg.name(),
+            prec
+        )));
+    }
+    Ok(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvKind;
+
+    #[test]
+    fn all_paper_configs_fit_the_485t() {
+        let dev = Virtex7::default();
+        for cfg in NetConfig::all() {
+            for prec in [Precision::Fixed, Precision::Float] {
+                let u = check_fit(&cfg, prec, &dev).unwrap();
+                assert!(
+                    u.max_fraction() < 0.25,
+                    "{}/{prec:?}: {u:?} — these tiny nets must be far below capacity",
+                    cfg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_area_scales_with_network_size() {
+        let simple = accelerator_resources(
+            &NetConfig::new(Arch::Mlp, EnvKind::Simple),
+            Precision::Fixed,
+        );
+        let complex = accelerator_resources(
+            &NetConfig::new(Arch::Mlp, EnvKind::Complex),
+            Precision::Fixed,
+        );
+        assert!(complex.dsps > 2 * simple.dsps);
+        assert!(complex.luts > simple.luts);
+    }
+
+    #[test]
+    fn float_area_dominated_by_fp_cores_not_fanin() {
+        let simple = accelerator_resources(
+            &NetConfig::new(Arch::Perceptron, EnvKind::Simple),
+            Precision::Float,
+        );
+        let complex = accelerator_resources(
+            &NetConfig::new(Arch::Perceptron, EnvKind::Complex),
+            Precision::Float,
+        );
+        // serial chains: area does not grow with D
+        assert_eq!(simple.luts, complex.luts);
+        assert_eq!(simple.dsps, complex.dsps);
+    }
+
+    #[test]
+    fn float_uses_far_more_lut_than_fixed_for_small_nets() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let fx = accelerator_resources(&cfg, Precision::Fixed);
+        let fp = accelerator_resources(&cfg, Precision::Float);
+        assert!(fp.luts > 2 * fx.luts, "{} vs {}", fp.luts, fx.luts);
+    }
+}

@@ -1,0 +1,85 @@
+//! Control FSM: the phase sequence of Fig. 6 (perceptron) / Fig. 8 (MLP).
+//!
+//! The datapath simulator executes this schedule; tests assert the phase
+//! order and per-phase cycle charges stay consistent with [`TimingModel`].
+
+use crate::config::{NetConfig, Precision};
+
+use super::timing::TimingModel;
+
+/// FSM phases of one Q-update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Feed-forward sweep over the current state's actions (fills FIFO 1).
+    FeedForwardCurrent,
+    /// Feed-forward sweep over the next state's actions (fills FIFO 2).
+    FeedForwardNext,
+    /// FIFO drain + max scan + Eq. 8.
+    ErrorCapture,
+    /// δ/ΔW generation and weight write-back (Eq. 7, 9–14).
+    Backprop,
+    /// Update complete, weights committed.
+    Idle,
+}
+
+/// One scheduled phase with its cycle charge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledPhase {
+    pub phase: Phase,
+    pub cycles: u64,
+}
+
+/// The full Q-update schedule for a configuration.
+pub fn qupdate_schedule(
+    timing: &TimingModel,
+    cfg: &NetConfig,
+    prec: Precision,
+) -> Vec<ScheduledPhase> {
+    let b = timing.qupdate(cfg, prec);
+    vec![
+        ScheduledPhase { phase: Phase::FeedForwardCurrent, cycles: b.ff_current },
+        ScheduledPhase { phase: Phase::FeedForwardNext, cycles: b.ff_next },
+        ScheduledPhase { phase: Phase::ErrorCapture, cycles: b.error_capture },
+        ScheduledPhase { phase: Phase::Backprop, cycles: b.backprop },
+        ScheduledPhase { phase: Phase::Idle, cycles: 0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+
+    #[test]
+    fn phase_order_is_the_papers() {
+        let t = TimingModel::default();
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let sched = qupdate_schedule(&t, &cfg, Precision::Fixed);
+        let phases: Vec<Phase> = sched.iter().map(|s| s.phase).collect();
+        assert_eq!(
+            phases,
+            vec![
+                Phase::FeedForwardCurrent,
+                Phase::FeedForwardNext,
+                Phase::ErrorCapture,
+                Phase::Backprop,
+                Phase::Idle
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_cycles_match_breakdown() {
+        let t = TimingModel::default();
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            for prec in [Precision::Fixed, Precision::Float] {
+                let cfg = NetConfig::new(arch, EnvKind::Complex);
+                let total: u64 = qupdate_schedule(&t, &cfg, prec)
+                    .iter()
+                    .map(|s| s.cycles)
+                    .sum();
+                assert_eq!(total, t.qupdate(&cfg, prec).total());
+            }
+        }
+    }
+}

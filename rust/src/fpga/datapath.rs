@@ -1,0 +1,627 @@
+//! The accelerator datapath: bit-accurate execution + cycle accounting.
+//!
+//! [`FpgaAccelerator`] holds the network weights on-chip (18-bit words in
+//! “BRAM/FF” for fixed point, f32 for the float variant), streams
+//! state-action vectors through the MAC + sigmoid-ROM pipeline, buffers
+//! Q-values in the two FIFOs of Fig. 6/8, and runs the error-capture and
+//! backprop blocks of Fig. 5/10.
+//!
+//! * **Fixed mode** computes with true integer Q(word,frac) arithmetic:
+//!   wide DSP48-style accumulators ([`crate::fixed::Acc`]), one rounding per
+//!   register write — the datapath the paper synthesizes.
+//! * **Float mode** computes in IEEE f32 (LogiCORE cores are IEEE), which is
+//!   numerically identical to the CPU/XLA float path; only the *timing*
+//!   differs.
+//!
+//! Every call returns its cycle charge from the structural
+//! [`TimingModel`], and the accelerator accumulates lifetime counters used
+//! by the benches and the mission telemetry.
+
+use crate::config::{Hyper, NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::fixed::{tensor, Acc, Fixed, FixedSpec, Quantizer};
+use crate::nn::activation::LutSpec;
+use crate::nn::params::QNetParams;
+use crate::nn::qupdate::QUpdateOutput;
+
+use super::device::Virtex7;
+use super::fifo::Fifo;
+use super::timing::{CycleBreakdown, TimingModel};
+
+/// Sigmoid + derivative ROM holding fixed-point words.
+#[derive(Debug, Clone)]
+struct FixedRom {
+    spec: LutSpec,
+    table: Vec<Fixed>,
+    dtable: Vec<Fixed>,
+}
+
+impl FixedRom {
+    fn build(spec: LutSpec, q: FixedSpec) -> Self {
+        let n = spec.size;
+        let mut table = Vec::with_capacity(n);
+        let mut dtable = Vec::with_capacity(n);
+        for i in 0..n {
+            let x = -spec.xmax as f64 + (2.0 * spec.xmax as f64) * i as f64 / (n - 1) as f64;
+            let s = 1.0 / (1.0 + (-x).exp());
+            table.push(Fixed::from_f64(s, q));
+            dtable.push(Fixed::from_f64(s * (1.0 - s), q));
+        }
+        FixedRom { spec, table, dtable }
+    }
+
+    #[inline]
+    fn f(&self, x: Fixed) -> Fixed {
+        self.table[self.spec.index(x.to_f32())]
+    }
+
+    #[inline]
+    fn fprime(&self, x: Fixed) -> Fixed {
+        self.dtable[self.spec.index(x.to_f32())]
+    }
+}
+
+/// On-chip weight store, fixed mode.
+#[derive(Debug, Clone)]
+enum FixedParams {
+    Perceptron { w: Vec<Fixed>, b: Fixed },
+    Mlp { w1: Vec<Fixed>, b1: Vec<Fixed>, w2: Vec<Fixed>, b2: Fixed },
+}
+
+impl FixedParams {
+    fn quantize(p: &QNetParams, q: FixedSpec) -> Self {
+        match p {
+            QNetParams::Perceptron { w, b } => FixedParams::Perceptron {
+                w: tensor::quantize_slice(w, q),
+                b: Fixed::from_f32(*b, q),
+            },
+            QNetParams::Mlp { w1, b1, w2, b2 } => FixedParams::Mlp {
+                w1: tensor::quantize_slice(w1, q),
+                b1: tensor::quantize_slice(b1, q),
+                w2: tensor::quantize_slice(w2, q),
+                b2: Fixed::from_f32(*b2, q),
+            },
+        }
+    }
+
+    fn dequantize(&self) -> QNetParams {
+        match self {
+            FixedParams::Perceptron { w, b } => QNetParams::Perceptron {
+                w: tensor::to_f32_vec(w),
+                b: b.to_f32(),
+            },
+            FixedParams::Mlp { w1, b1, w2, b2 } => QNetParams::Mlp {
+                w1: tensor::to_f32_vec(w1),
+                b1: tensor::to_f32_vec(b1),
+                w2: tensor::to_f32_vec(w2),
+                b2: b2.to_f32(),
+            },
+        }
+    }
+}
+
+/// Lifetime statistics (for telemetry and the benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccelStats {
+    pub updates: u64,
+    pub forwards: u64,
+    pub cycles: u64,
+}
+
+/// Cycle-accurate Q-learning accelerator instance.
+pub struct FpgaAccelerator {
+    cfg: NetConfig,
+    precision: Precision,
+    qspec: FixedSpec,
+    /// Fast input-register quantizer (hot path: A·D conversions per sweep).
+    quant: Quantizer,
+    hyper: Hyper,
+    timing: TimingModel,
+    device: Virtex7,
+    // datapath state
+    fixed_params: Option<FixedParams>,
+    float_params: Option<QNetParams>,
+    rom: FixedRom,
+    stats: AccelStats,
+    // scratch (avoids per-update allocation on the hot path)
+    scratch_q: Vec<Fixed>,
+    scratch_pre: Vec<Fixed>,
+    scratch_hid: Vec<Fixed>,
+}
+
+/// A single transition to learn from.
+#[derive(Debug, Clone)]
+pub struct Transition<'a> {
+    /// (A, D) row-major encodings of all actions in the current state.
+    pub sa_cur: &'a [f32],
+    /// (A, D) encodings for the next state.
+    pub sa_next: &'a [f32],
+    pub action: usize,
+    pub reward: f32,
+}
+
+impl FpgaAccelerator {
+    /// Instantiate the accelerator with initial weights.
+    pub fn new(
+        cfg: NetConfig,
+        precision: Precision,
+        params: &QNetParams,
+        hyper: Hyper,
+        timing: TimingModel,
+    ) -> Self {
+        let qspec = FixedSpec::default();
+        let quant = Quantizer::new(qspec);
+        let rom = FixedRom::build(LutSpec::default(), qspec);
+        let (fixed_params, float_params) = match precision {
+            Precision::Fixed => (Some(FixedParams::quantize(params, qspec)), None),
+            Precision::Float => (None, Some(params.clone())),
+        };
+        FpgaAccelerator {
+            scratch_q: Vec::with_capacity(cfg.a),
+            scratch_pre: Vec::with_capacity(cfg.a),
+            scratch_hid: Vec::with_capacity(cfg.a * cfg.h.max(1)),
+            cfg,
+            precision,
+            qspec,
+            quant,
+            hyper,
+            timing,
+            device: Virtex7::default(),
+            fixed_params,
+            float_params,
+            rom,
+            stats: AccelStats::default(),
+        }
+    }
+
+    /// Paper-default accelerator.
+    pub fn paper(cfg: NetConfig, precision: Precision, params: &QNetParams, hyper: Hyper) -> Self {
+        Self::new(cfg, precision, params, hyper, TimingModel::default())
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn stats(&self) -> AccelStats {
+        self.stats
+    }
+
+    pub fn device(&self) -> &Virtex7 {
+        &self.device
+    }
+
+    pub fn timing(&self) -> &TimingModel {
+        &self.timing
+    }
+
+    /// Current weights, dequantized to f32 (telemetry / checkpointing).
+    pub fn params(&self) -> QNetParams {
+        match self.precision {
+            Precision::Fixed => self.fixed_params.as_ref().unwrap().dequantize(),
+            Precision::Float => self.float_params.as_ref().unwrap().clone(),
+        }
+    }
+
+    /// Load new weights (e.g. from a checkpoint or the XLA trainer).
+    pub fn load_params(&mut self, params: &QNetParams) {
+        match self.precision {
+            Precision::Fixed => {
+                self.fixed_params = Some(FixedParams::quantize(params, self.qspec))
+            }
+            Precision::Float => self.float_params = Some(params.clone()),
+        }
+    }
+
+    /// Wall-clock the accelerator *would* take on the Virtex-7, in µs.
+    pub fn modeled_time_us(&self) -> f64 {
+        self.device.cycles_to_us(self.stats.cycles)
+    }
+
+    // ------------------------------------------------------------- forward
+
+    /// One feed-forward sweep: Q-values for all A actions.
+    /// Returns the values and the cycle charge.
+    pub fn forward(&mut self, sa: &[f32]) -> Result<(Vec<f32>, u64)> {
+        self.check_sa(sa)?;
+        let q = match self.precision {
+            Precision::Fixed => {
+                let mut out = Vec::with_capacity(self.cfg.a);
+                self.fixed_sweep(sa, &mut out, None, None)?;
+                out.iter().map(Fixed::to_f32).collect()
+            }
+            Precision::Float => self.float_forward(sa)?.q,
+        };
+        let cycles = self.timing.forward_cycles(&self.cfg, self.precision);
+        self.stats.forwards += 1;
+        self.stats.cycles += cycles;
+        Ok((q, cycles))
+    }
+
+    // ------------------------------------------------------------- qupdate
+
+    /// One full Q-update (the paper's unit of work).
+    pub fn qupdate(&mut self, t: &Transition) -> Result<(QUpdateOutput, CycleBreakdown)> {
+        self.check_sa(t.sa_cur)?;
+        self.check_sa(t.sa_next)?;
+        if t.action >= self.cfg.a {
+            return Err(Error::Env(format!(
+                "action {} out of range 0..{}",
+                t.action, self.cfg.a
+            )));
+        }
+        let out = match self.precision {
+            Precision::Fixed => self.fixed_qupdate(t)?,
+            Precision::Float => self.float_qupdate(t)?,
+        };
+        let breakdown = self.timing.qupdate(&self.cfg, self.precision);
+        self.stats.updates += 1;
+        self.stats.cycles += breakdown.total();
+        Ok((out, breakdown))
+    }
+
+    fn check_sa(&self, sa: &[f32]) -> Result<()> {
+        if sa.len() != self.cfg.a * self.cfg.d {
+            return Err(Error::interface(format!(
+                "sa length {} != A*D = {}",
+                sa.len(),
+                self.cfg.a * self.cfg.d
+            )));
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- fixed path
+
+    /// One sweep through the fixed datapath. Optionally records
+    /// pre-activations and hidden activations (needed for backprop on the
+    /// current state).
+    fn fixed_sweep(
+        &mut self,
+        sa: &[f32],
+        q_out: &mut Vec<Fixed>,
+        mut pre_out: Option<&mut Vec<Fixed>>,
+        mut hid_out: Option<&mut Vec<Fixed>>,
+    ) -> Result<()> {
+        let (a_n, d, h) = (self.cfg.a, self.cfg.d, self.cfg.h);
+        let q = self.qspec;
+        q_out.clear();
+        match self.fixed_params.as_ref().expect("fixed params") {
+            FixedParams::Perceptron { w, b } => {
+                for ai in 0..a_n {
+                    // input registers quantize the encoded vector
+                    let mut acc = Acc::new(q);
+                    for i in 0..d {
+                        // input registers: fast f32->raw quantization
+                        let x = Fixed::from_raw(self.quant.to_raw(sa[ai * d + i]), q);
+                        acc.mac(x, w[i]); // parallel DSP48 multipliers
+                    }
+                    acc.add_value(*b);
+                    let pre = acc.finish(); // adder tree + single rounding
+                    if let Some(p) = pre_out.as_deref_mut() {
+                        p.push(pre);
+                    }
+                    q_out.push(self.rom.f(pre)); // sigmoid ROM read
+                }
+            }
+            FixedParams::Mlp { w1, b1, w2, b2 } => {
+                for ai in 0..a_n {
+                    // hidden layer: H parallel MAC columns
+                    let mut hid_row = Vec::with_capacity(h);
+                    for j in 0..h {
+                        let mut acc = Acc::new(q);
+                        for i in 0..d {
+                            let x = Fixed::from_raw(self.quant.to_raw(sa[ai * d + i]), q);
+                            acc.mac(x, w1[i * h + j]);
+                        }
+                        acc.add_value(b1[j]);
+                        let pre1 = acc.finish();
+                        if let Some(p) = pre_out.as_deref_mut() {
+                            p.push(pre1);
+                        }
+                        let o = self.rom.f(pre1);
+                        if let Some(hh) = hid_out.as_deref_mut() {
+                            hh.push(o);
+                        }
+                        hid_row.push(o);
+                    }
+                    // output layer
+                    let mut acc = Acc::new(q);
+                    for j in 0..h {
+                        acc.mac(hid_row[j], w2[j]);
+                    }
+                    acc.add_value(*b2);
+                    let pre2 = acc.finish();
+                    if let Some(p) = pre_out.as_deref_mut() {
+                        p.push(pre2); // layout: per action, H hidden then 1 output
+                    }
+                    q_out.push(self.rom.f(pre2));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn fixed_qupdate(&mut self, t: &Transition) -> Result<QUpdateOutput> {
+        let (a_n, d, h) = (self.cfg.a, self.cfg.d, self.cfg.h);
+        let q = self.qspec;
+        let hyper = self.hyper;
+
+        // ---- two feed-forward sweeps, Q-values through the FIFOs --------
+        let mut fifo_cur: Fifo<Fixed> = Fifo::new(a_n);
+        let mut fifo_next: Fifo<Fixed> = Fifo::new(a_n);
+
+        let mut q_cur = std::mem::take(&mut self.scratch_q);
+        let mut pre = std::mem::take(&mut self.scratch_pre);
+        let mut hid = std::mem::take(&mut self.scratch_hid);
+        pre.clear();
+        hid.clear();
+        self.fixed_sweep(t.sa_cur, &mut q_cur, Some(&mut pre), Some(&mut hid))?;
+        for &v in &q_cur {
+            fifo_cur.push(v)?;
+        }
+        let mut q_next = Vec::with_capacity(a_n);
+        self.fixed_sweep(t.sa_next, &mut q_next, None, None)?;
+        for &v in &q_next {
+            fifo_next.push(v)?;
+        }
+
+        // ---- error capture (Fig. 5): drain FIFOs, max scan, Eq. 8 -------
+        let drained_next = fifo_next.drain_all()?;
+        let q_next_max = tensor::max(&drained_next);
+        let drained_cur = fifo_cur.drain_all()?;
+        let q_sa = drained_cur[t.action];
+
+        let gamma = Fixed::from_f32(hyper.gamma, q);
+        let alpha = Fixed::from_f32(hyper.alpha, q);
+        let lr = Fixed::from_f32(hyper.lr, q);
+        let reward = Fixed::from_f32(t.reward, q);
+        let target = reward.add(gamma.mul(q_next_max));
+        let err = alpha.mul(target.sub(q_sa));
+
+        // ---- backprop block (Eq. 7, 9–14) --------------------------------
+        let x_row: Vec<Fixed> = (0..d)
+            .map(|i| Fixed::from_raw(self.quant.to_raw(t.sa_cur[t.action * d + i]), q))
+            .collect();
+
+        match self.fixed_params.as_mut().expect("fixed params") {
+            FixedParams::Perceptron { w, b } => {
+                let sigma = pre[t.action];
+                let delta = self.rom.fprime(sigma).mul(err); // Eq. 7
+                for i in 0..d {
+                    let dw = lr.mul(x_row[i].mul(delta)); // Eq. 9
+                    w[i] = w[i].add(dw); // Eq. 10
+                }
+                *b = b.add(lr.mul(delta));
+            }
+            FixedParams::Mlp { w1, b1, w2, b2 } => {
+                // pre layout per action: H hidden pre-activations, then the
+                // output pre-activation
+                let base = t.action * (h + 1);
+                let s1 = &pre[base..base + h];
+                let s2 = pre[base + h];
+                let o1 = &hid[t.action * h..(t.action + 1) * h];
+
+                let d2 = self.rom.fprime(s2).mul(err); // Eq. 11
+                let mut d1 = Vec::with_capacity(h);
+                for j in 0..h {
+                    // Eq. 12
+                    d1.push(self.rom.fprime(s1[j]).mul(d2.mul(w2[j])));
+                }
+                for j in 0..h {
+                    let dw2 = lr.mul(o1[j].mul(d2)); // Eq. 13
+                    w2[j] = w2[j].add(dw2); // Eq. 14
+                }
+                *b2 = b2.add(lr.mul(d2));
+                for i in 0..d {
+                    for j in 0..h {
+                        let dw1 = lr.mul(x_row[i].mul(d1[j]));
+                        w1[i * h + j] = w1[i * h + j].add(dw1);
+                    }
+                }
+                for j in 0..h {
+                    b1[j] = b1[j].add(lr.mul(d1[j]));
+                }
+            }
+        }
+
+        let out = QUpdateOutput {
+            params: self.fixed_params.as_ref().unwrap().dequantize(),
+            q_cur: q_cur.iter().map(Fixed::to_f32).collect(),
+            q_next: q_next.iter().map(Fixed::to_f32).collect(),
+            q_err: err.to_f32(),
+        };
+        // return scratch buffers
+        self.scratch_q = q_cur;
+        self.scratch_pre = pre;
+        self.scratch_hid = hid;
+        Ok(out)
+    }
+
+    // --------------------------------------------------------- float path
+
+    fn float_datapath(&self) -> crate::nn::qupdate::Datapath {
+        // LogiCORE FP cores are IEEE-754; the sigmoid is still a ROM.
+        crate::nn::qupdate::Datapath::new(
+            None,
+            crate::nn::activation::Activation::lut_default(None),
+        )
+    }
+
+    fn float_forward(&self, sa: &[f32]) -> Result<crate::nn::qupdate::ForwardTrace> {
+        crate::nn::qupdate::forward_full(
+            &self.cfg,
+            self.float_params.as_ref().expect("float params"),
+            sa,
+            &self.float_datapath(),
+        )
+    }
+
+    fn float_qupdate(&mut self, t: &Transition) -> Result<QUpdateOutput> {
+        let out = crate::nn::qupdate::qupdate(
+            &self.cfg,
+            self.float_params.as_ref().expect("float params"),
+            t.sa_cur,
+            t.sa_next,
+            t.action,
+            t.reward,
+            &self.hyper,
+            &self.float_datapath(),
+        )?;
+        self.float_params = Some(out.params.clone());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::nn::activation::Activation;
+    use crate::nn::qupdate::{self, Datapath};
+    use crate::util::Rng;
+
+    fn setup(arch: Arch, env: EnvKind, prec: Precision) -> (NetConfig, QNetParams, FpgaAccelerator) {
+        let cfg = NetConfig::new(arch, env);
+        let mut rng = Rng::seeded(11);
+        let params = QNetParams::init(&cfg, 0.4, &mut rng);
+        let acc = FpgaAccelerator::paper(cfg, prec, &params, Hyper::default());
+        (cfg, params, acc)
+    }
+
+    fn transition(cfg: &NetConfig, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, usize, f32) {
+        (
+            rng.vec_f32(cfg.a * cfg.d, -1.0, 1.0),
+            rng.vec_f32(cfg.a * cfg.d, -1.0, 1.0),
+            rng.below(cfg.a),
+            rng.f32_range(-1.0, 1.0),
+        )
+    }
+
+    #[test]
+    fn float_mode_matches_cpu_nn_exactly() {
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            let (cfg, params, mut acc) = setup(arch, EnvKind::Simple, Precision::Float);
+            let mut rng = Rng::seeded(12);
+            let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+            let (out, _) = acc
+                .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                .unwrap();
+            let dp = Datapath::new(None, Activation::lut_default(None));
+            let want =
+                qupdate::qupdate(&cfg, &params, &sa_cur, &sa_next, action, reward,
+                                 &Hyper::default(), &dp)
+                    .unwrap();
+            assert_eq!(out.q_err, want.q_err);
+            assert_eq!(out.params, want.params);
+            assert_eq!(out.q_cur, want.q_cur);
+        }
+    }
+
+    #[test]
+    fn fixed_mode_tracks_fakequant_nn_within_lsb_budget() {
+        // integer datapath vs f32 fake-quant: a few LSB of divergence is
+        // expected (f32 rounds 36-bit products); assert a tight budget.
+        let lsb = FixedSpec::default().lsb() as f32;
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            for env in [EnvKind::Simple, EnvKind::Complex] {
+                let (cfg, params, mut acc) = setup(arch, env, Precision::Fixed);
+                let mut rng = Rng::seeded(13);
+                let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+                let (out, _) = acc
+                    .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                    .unwrap();
+                let dp = Datapath::new(
+                    Some(FixedSpec::default()),
+                    Activation::lut_default(Some(FixedSpec::default())),
+                );
+                let want = qupdate::qupdate(&cfg, &params, &sa_cur, &sa_next, action, reward,
+                                            &Hyper::default(), &dp)
+                    .unwrap();
+                assert!(
+                    (out.q_err - want.q_err).abs() <= 4.0 * lsb,
+                    "{arch:?}/{env:?}: q_err {} vs {}",
+                    out.q_err,
+                    want.q_err
+                );
+                assert!(
+                    out.params.max_abs_diff(&want.params) <= 4.0 * lsb,
+                    "{arch:?}/{env:?}: params diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_outputs_are_quantized_in_fixed_mode() {
+        let (cfg, _, mut acc) = setup(Arch::Mlp, EnvKind::Simple, Precision::Fixed);
+        let mut rng = Rng::seeded(14);
+        let sa = rng.vec_f32(cfg.a * cfg.d, -1.0, 1.0);
+        let (q, cycles) = acc.forward(&sa).unwrap();
+        assert_eq!(q.len(), cfg.a);
+        assert_eq!(cycles, TimingModel::default().forward_cycles(&cfg, Precision::Fixed));
+        let spec = FixedSpec::default();
+        for v in q {
+            let back = Fixed::from_f32(v, spec).to_f32();
+            assert_eq!(v, back, "Q-value not on the Q(18,12) grid");
+        }
+    }
+
+    #[test]
+    fn cycle_counters_accumulate() {
+        let (cfg, _, mut acc) = setup(Arch::Perceptron, EnvKind::Simple, Precision::Fixed);
+        let mut rng = Rng::seeded(15);
+        let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+        let per_update = TimingModel::default().qupdate(&cfg, Precision::Fixed).total();
+        for i in 1..=5u64 {
+            acc.qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                .unwrap();
+            assert_eq!(acc.stats().updates, i);
+            assert_eq!(acc.stats().cycles, i * per_update);
+        }
+        // 7A+1 at A=6 → 43 cycles per update
+        assert_eq!(per_update, 43);
+    }
+
+    #[test]
+    fn learning_happens_on_fixed_datapath() {
+        let (cfg, _, mut acc) = setup(Arch::Mlp, EnvKind::Simple, Precision::Fixed);
+        let mut rng = Rng::seeded(16);
+        let (sa_cur, sa_next, _, _) = transition(&cfg, &mut rng);
+        let mut first = None;
+        let mut last = 0f32;
+        // stationary target: repeated updates must reduce |q_err|
+        for _ in 0..200 {
+            let (out, _) = acc
+                .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action: 1, reward: 0.9 })
+                .unwrap();
+            last = out.q_err.abs();
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap(), "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (_, _, mut acc) = setup(Arch::Perceptron, EnvKind::Simple, Precision::Fixed);
+        let short = vec![0f32; 5];
+        assert!(acc.forward(&short).is_err());
+        let ok = vec![0f32; 36];
+        assert!(acc
+            .qupdate(&Transition { sa_cur: &ok, sa_next: &ok, action: 99, reward: 0.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn load_params_roundtrip_float() {
+        let (cfg, params, mut acc) = setup(Arch::Mlp, EnvKind::Simple, Precision::Float);
+        assert_eq!(acc.params(), params);
+        let zero = QNetParams::zeros(&cfg);
+        acc.load_params(&zero);
+        assert_eq!(acc.params(), zero);
+    }
+}

@@ -1,0 +1,67 @@
+//! Target device: Xilinx Virtex-7 XC7VX485T (the MSL-heritage space-grade
+//! Virtex family part the paper simulates).
+
+/// Device capacity (XC7VX485T datasheet, DS180).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Virtex7 {
+    /// 6-input LUTs.
+    pub luts: u64,
+    /// Flip-flops.
+    pub ffs: u64,
+    /// DSP48E1 slices.
+    pub dsps: u64,
+    /// 36 Kb block RAMs.
+    pub bram36: u64,
+    /// Design clock in Hz (the paper simulates at 150 MHz).
+    pub clock_hz: f64,
+}
+
+impl Default for Virtex7 {
+    fn default() -> Self {
+        Virtex7 {
+            luts: 303_600,
+            ffs: 607_200,
+            dsps: 2_800,
+            bram36: 1_030,
+            clock_hz: 150.0e6,
+        }
+    }
+}
+
+impl Virtex7 {
+    /// Seconds per clock cycle.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// Convert a cycle count to microseconds.
+    pub fn cycles_to_us(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz * 1e6
+    }
+
+    /// Q-updates per second for a per-update cycle count, in kQ/s
+    /// (the paper's throughput unit).
+    pub fn throughput_kq_s(&self, cycles_per_update: u64) -> f64 {
+        self.clock_hz / cycles_per_update as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_constants() {
+        let d = Virtex7::default();
+        assert_eq!(d.dsps, 2800);
+        assert_eq!(d.clock_hz, 150.0e6);
+    }
+
+    #[test]
+    fn conversions() {
+        let d = Virtex7::default();
+        assert!((d.cycles_to_us(150) - 1.0).abs() < 1e-12);
+        // paper: 64 cycles (A = 9, fixed perceptron) -> 2.34 MQ/s
+        assert!((d.throughput_kq_s(64) - 2343.75).abs() < 0.01);
+    }
+}

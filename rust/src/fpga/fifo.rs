@@ -1,0 +1,141 @@
+//! FIFO Q-value buffers (Fig. 6/8: one for the current state's Q-values,
+//! one for the next state's).
+//!
+//! A bounded ring buffer with explicit overflow/underflow detection and
+//! high-water tracking — the structural invariants (`capacity == A`, drained
+//! exactly once per update) are asserted by the datapath and property tests.
+
+use crate::error::{Error, Result};
+
+/// Bounded FIFO with usage statistics.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    buf: Vec<Option<T>>,
+    head: usize,
+    len: usize,
+    high_water: usize,
+    pushes: u64,
+    pops: u64,
+}
+
+impl<T: Clone> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "fifo capacity must be positive");
+        Fifo {
+            buf: vec![None; capacity],
+            head: 0,
+            len: 0,
+            high_water: 0,
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    /// Deepest occupancy ever observed (sizing validation).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn counts(&self) -> (u64, u64) {
+        (self.pushes, self.pops)
+    }
+
+    /// Push; errors on overflow (a hardware FIFO would drop or stall —
+    /// either is a design bug here).
+    pub fn push(&mut self, v: T) -> Result<()> {
+        if self.is_full() {
+            return Err(Error::Fpga("FIFO overflow".into()));
+        }
+        let tail = (self.head + self.len) % self.buf.len();
+        self.buf[tail] = Some(v);
+        self.len += 1;
+        self.high_water = self.high_water.max(self.len);
+        self.pushes += 1;
+        Ok(())
+    }
+
+    /// Pop; errors on underflow.
+    pub fn pop(&mut self) -> Result<T> {
+        if self.is_empty() {
+            return Err(Error::Fpga("FIFO underflow".into()));
+        }
+        let v = self.buf[self.head].take().expect("occupied slot");
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        self.pops += 1;
+        Ok(v)
+    }
+
+    /// Drain everything in order.
+    pub fn drain_all(&mut self) -> Result<Vec<T>> {
+        let mut out = Vec::with_capacity(self.len);
+        while !self.is_empty() {
+            out.push(self.pop()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        assert!(f.is_full());
+        assert_eq!(f.drain_all().unwrap(), vec![0, 1, 2, 3]);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn overflow_underflow() {
+        let mut f = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert!(f.push(3).is_err());
+        f.pop().unwrap();
+        f.pop().unwrap();
+        assert!(f.pop().is_err());
+    }
+
+    #[test]
+    fn wraparound() {
+        let mut f = Fifo::new(3);
+        for round in 0..10 {
+            f.push(round).unwrap();
+            assert_eq!(f.pop().unwrap(), round);
+        }
+        assert_eq!(f.counts(), (10, 10));
+    }
+
+    #[test]
+    fn high_water_tracking() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        f.drain_all().unwrap();
+        f.push(0).unwrap();
+        assert_eq!(f.high_water(), 5);
+    }
+}

@@ -1,0 +1,40 @@
+//! Cycle-accurate simulator of the paper's FPGA Q-learning accelerator.
+//!
+//! The paper evaluates its architecture with Xilinx tools on a Virtex-7
+//! 485T; no RTL is published. This module rebuilds the accelerator from the
+//! paper's block diagrams and equations, at the fidelity the paper's own
+//! evaluation used (simulation):
+//!
+//! * [`device`] — Virtex-7 XC7VX485T capacity and the 150 MHz clock.
+//! * [`units`] — functional-unit timing/resource models: 1-cycle pipelined
+//!   DSP48 fixed MACs, multi-cycle LogiCORE-class FP cores, BRAM sigmoid
+//!   ROMs, FIFO Q-buffers.
+//! * [`timing`] — the structural cycle model of the control FSM (Fig. 6/8).
+//!   For the fixed-point perceptron it reproduces the paper's stated law
+//!   `cycles = 7A + 1` *exactly* (unit-tested), giving 2.34 MQ/s at A = 9
+//!   and 0.53 MQ/s at A = 40 at 150 MHz — the Table 1 values.
+//! * [`datapath`] — [`FpgaAccelerator`]: executes Q-updates **bit-accurately**
+//!   (true integer Q(18,12) arithmetic in fixed mode via [`crate::fixed`],
+//!   IEEE f32 in float mode) while charging cycles per the timing model.
+//! * [`control`] — the FSM phase schedule (trace used by tests/debug).
+//! * [`area`] — LUT/FF/DSP/BRAM counts vs device capacity.
+//! * [`power`] — XPower-style power estimate (static + activity-weighted
+//!   dynamic), calibrated against the paper's Tables 7–8 operating points.
+//!
+//! Fidelity note: fixed-mode numerics use a *wide integer accumulator*
+//! (exact DSP48 semantics). The python/XLA fixed path fake-quantizes in
+//! float32, which can differ by ~1 LSB on accumulations; cross-backend
+//! tests budget a few LSB accordingly (see `tests/backend_equiv.rs`).
+
+pub mod area;
+pub mod control;
+pub mod datapath;
+pub mod device;
+pub mod fifo;
+pub mod power;
+pub mod timing;
+pub mod units;
+
+pub use datapath::FpgaAccelerator;
+pub use device::Virtex7;
+pub use timing::{CycleBreakdown, TimingModel};

@@ -1,0 +1,160 @@
+//! Power model — regenerates the paper's Tables 7 and 8.
+//!
+//! XPower-style decomposition at the 150 MHz operating point:
+//!
+//! ```text
+//! P = P_static + P_clock/config + Σ_resources (count × per-unit dynamic)
+//!            + P_data-movement(A·D)
+//! ```
+//!
+//! CALIBRATION. The paper reports only four operating points (Tables 7–8:
+//! simple MLP 5.6 W fixed / 7.1 W float; complex MLP 7.1 W fixed / 10 W
+//! float) and gives no resource-level breakdown, so the per-unit
+//! coefficients below are calibrated to land the model inside the paper's
+//! band while keeping physically sensible proportions (FP cores toggle
+//! hardest, then DSP MACs, BRAM, fabric). What the model *predicts* rather
+//! than fits — and what the T7/T8 reproduction checks — is the **shape**:
+//! float > fixed at the same design point (paper: 1.3×), complex > simple,
+//! and pipelining (X1) trading power for throughput. The calibrated
+//! absolute values agree with the paper within ~25%; see EXPERIMENTS.md.
+
+use crate::config::{NetConfig, Precision};
+
+use super::area::accelerator_resources;
+use super::device::Virtex7;
+use super::timing::TimingModel;
+
+/// Per-unit dynamic power at 150 MHz (calibrated; see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerCoeffs {
+    /// Device static power, W (XC7VX485T typical).
+    pub static_w: f64,
+    /// Clock tree + configuration + I/O baseline at 150 MHz, W.
+    pub clock_base_w: f64,
+    /// Per-LUT dynamic, W.
+    pub per_lut: f64,
+    /// Per-FF dynamic, W.
+    pub per_ff: f64,
+    /// Per-DSP48 dynamic, W.
+    pub per_dsp: f64,
+    /// Per-BRAM36 dynamic, W.
+    pub per_bram: f64,
+    /// Extra per-DSP dynamic for FP cores (wide mantissa datapaths), W —
+    /// applied to the whole design only in float mode.
+    pub fp_core_extra: f64,
+    /// Data-movement term: W per (A·D) element streamed per update.
+    pub per_stream_elem: f64,
+}
+
+impl Default for PowerCoeffs {
+    fn default() -> Self {
+        PowerCoeffs {
+            static_w: 0.24,
+            clock_base_w: 4.30,
+            per_lut: 0.10e-3,
+            per_ff: 0.03e-3,
+            per_dsp: 4.0e-3,
+            per_bram: 40.0e-3,
+            fp_core_extra: 40.0e-3,
+            per_stream_elem: 2.0e-3,
+        }
+    }
+}
+
+/// Power estimate for one configuration, W.
+pub fn power_w(cfg: &NetConfig, prec: Precision, coeffs: &PowerCoeffs) -> f64 {
+    let r = accelerator_resources(cfg, prec);
+    let mut p = coeffs.static_w + coeffs.clock_base_w;
+    p += r.luts as f64 * coeffs.per_lut;
+    p += r.ffs as f64 * coeffs.per_ff;
+    p += r.dsps as f64 * coeffs.per_dsp;
+    p += r.bram36 as f64 * coeffs.per_bram;
+    if prec == Precision::Float {
+        // FP cores burn disproportionate dynamic power per DSP
+        p += r.dsps as f64 * coeffs.fp_core_extra;
+    }
+    // streaming the (A, D) tile through input registers + FIFOs
+    p += (cfg.a * cfg.d) as f64 * coeffs.per_stream_elem;
+    p
+}
+
+/// Energy per Q-update, µJ (power × modeled completion time) — the metric
+/// the paper's Section 5 says actually matters for comparisons.
+pub fn energy_per_update_uj(
+    cfg: &NetConfig,
+    prec: Precision,
+    coeffs: &PowerCoeffs,
+    timing: &TimingModel,
+    dev: &Virtex7,
+) -> f64 {
+    power_w(cfg, prec, coeffs) * timing.completion_us(cfg, prec, dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+
+    fn mlp(env: EnvKind) -> NetConfig {
+        NetConfig::new(Arch::Mlp, env)
+    }
+
+    /// Tables 7–8 shape: float > fixed by roughly the paper's 1.3×.
+    #[test]
+    fn float_costs_more_power_than_fixed() {
+        let c = PowerCoeffs::default();
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            let fx = power_w(&mlp(env), Precision::Fixed, &c);
+            let fp = power_w(&mlp(env), Precision::Float, &c);
+            let ratio = fp / fx;
+            assert!(
+                (1.1..=1.8).contains(&ratio),
+                "{env:?}: {fp:.2} / {fx:.2} = {ratio:.2}"
+            );
+        }
+    }
+
+    /// Complex designs draw more than simple ones at both precisions.
+    #[test]
+    fn complex_costs_more_than_simple() {
+        let c = PowerCoeffs::default();
+        for prec in [Precision::Fixed, Precision::Float] {
+            let s = power_w(&mlp(EnvKind::Simple), prec, &c);
+            let x = power_w(&mlp(EnvKind::Complex), prec, &c);
+            assert!(x > s, "{prec:?}: {x:.2} <= {s:.2}");
+        }
+    }
+
+    /// Calibration lands inside the paper's band (Tables 7–8, ±35%).
+    #[test]
+    fn within_paper_band() {
+        let c = PowerCoeffs::default();
+        let anchors = [
+            (EnvKind::Simple, Precision::Fixed, 5.6),
+            (EnvKind::Simple, Precision::Float, 7.1),
+            (EnvKind::Complex, Precision::Fixed, 7.1),
+            (EnvKind::Complex, Precision::Float, 10.0),
+        ];
+        for (env, prec, paper_w) in anchors {
+            let w = power_w(&mlp(env), prec, &c);
+            let ratio = w / paper_w;
+            assert!(
+                (0.65..=1.35).contains(&ratio),
+                "{env:?}/{prec:?}: model {w:.2} W vs paper {paper_w} W"
+            );
+        }
+    }
+
+    /// Energy favors fixed point overwhelmingly (power × time both win).
+    #[test]
+    fn fixed_wins_energy_per_update() {
+        let c = PowerCoeffs::default();
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            let e_fx = energy_per_update_uj(&mlp(env), Precision::Fixed, &c, &t, &dev);
+            let e_fp = energy_per_update_uj(&mlp(env), Precision::Float, &c, &t, &dev);
+            assert!(e_fp > 5.0 * e_fx, "{env:?}: {e_fp:.2} vs {e_fx:.2}");
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Structural cycle model of the accelerator control FSM (Fig. 6 / Fig. 8).
+//!
+//! One Q-update executes four phases (paper Section 2 state-flow):
+//!
+//! 1. feed-forward sweep over all A actions of the current state,
+//! 2. feed-forward sweep over all A actions of the next state,
+//! 3. error capture: drain the two Q-FIFOs, max-scan the next-state values,
+//!    apply Eq. 8,
+//! 4. backpropagation: δ and ΔW generation + weight write-back.
+//!
+//! # Fixed point (fine-grained parallel datapath)
+//!
+//! DSP48 multipliers are 1-cycle and cheap, so every weight gets its own
+//! multiplier; one action is evaluated per layer stage in 3 cycles:
+//! (1) all multipliers fire, (2) balanced adder tree + bias, (3) sigmoid ROM
+//! read (FIFO write overlaps). Hence per sweep:
+//!
+//! * perceptron: 3 cycles/action → `3A`
+//! * MLP: hidden stage (all H neurons in parallel) + output stage → `6A`
+//!
+//! Error capture pops one FIFO entry per cycle with a comparator: `A`.
+//! Backprop is fully parallel: 1 cycle for the perceptron (Eq. 7/9/10 in
+//! one registered stage); 3 cycles for the MLP (δ_out → δ_hidden → parallel
+//! ΔW + write-back, Eq. 11–14).
+//!
+//! **Fixed perceptron total: `3A + 3A + A + 1 = 7A + 1` — exactly the law
+//! the paper states in Section 3**, giving 2.34 MQ/s at A = 9 and
+//! 0.53 MQ/s at A = 40 at 150 MHz (Table 1). Fixed MLP total: `13A + 3`.
+//!
+//! # Floating point (resource-limited serial datapath)
+//!
+//! LogiCORE FP cores are multi-cycle and large, so one MAC chain serves each
+//! layer, elements pipelined at the adder latency (the accumulation carries
+//! a loop dependence): per action `fp_mul + D·fp_add + fp_to_fx + rom`.
+//! The MLP instantiates one chain per hidden neuron (H ≤ 4 chains fit
+//! comfortably) so layers contribute additively, not multiplicatively.
+//! See `float_*` methods for the full derivation; EXPERIMENTS.md compares
+//! each derived count against the paper's Tables 3–6.
+//!
+//! # Pipelined variant (X1 ablation)
+//!
+//! The paper's conclusion proposes “introducing pipelining in the data
+//! path”. With `pipelined = true` the fixed datapath accepts a new action
+//! every cycle (II = 1), filling a 3-stage (perceptron) or 6-stage (MLP)
+//! pipe, and error capture overlaps the second sweep.
+
+use crate::config::{Arch, NetConfig, Precision};
+
+use super::device::Virtex7;
+use super::units::FuTimings;
+
+/// Cycle cost of one Q-update, by phase.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CycleBreakdown {
+    pub ff_current: u64,
+    pub ff_next: u64,
+    pub error_capture: u64,
+    pub backprop: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.ff_current + self.ff_next + self.error_capture + self.backprop
+    }
+}
+
+/// The structural timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingModel {
+    pub fu: FuTimings,
+    /// X1 ablation: action-level pipelining (paper future work).
+    pub pipelined: bool,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel { fu: FuTimings::default(), pipelined: false }
+    }
+}
+
+impl TimingModel {
+    pub fn pipelined() -> Self {
+        TimingModel { fu: FuTimings::default(), pipelined: true }
+    }
+
+    /// Per-action cycles of one feed-forward layer stage, fixed point:
+    /// parallel multiply, adder tree + bias, sigmoid ROM.
+    fn fx_stage(&self) -> u64 {
+        self.fu.fx_mul + self.fu.fx_tree + self.fu.rom_read
+    }
+
+    /// Per-action cycles of one feed-forward layer in float: serial MAC
+    /// chain (fill `fp_mul`, then one element per `fp_add`) + ROM addressing.
+    fn fp_layer(&self, fan_in: u64) -> u64 {
+        self.fu.fp_mul + self.fu.fp_add * fan_in + self.fu.fp_to_fx + self.fu.rom_read
+    }
+
+    /// One feed-forward sweep over all A actions.
+    pub fn forward_cycles(&self, cfg: &NetConfig, prec: Precision) -> u64 {
+        let a = cfg.a as u64;
+        let d = cfg.d as u64;
+        let h = cfg.h as u64;
+        match prec {
+            Precision::Fixed => {
+                let stages = match cfg.arch {
+                    Arch::Perceptron => 1,
+                    Arch::Mlp => 2,
+                };
+                let depth = stages * self.fx_stage();
+                if self.pipelined {
+                    // II = 1: fill the pipe once, then one action per cycle
+                    a + depth - 1
+                } else {
+                    a * depth
+                }
+            }
+            Precision::Float => {
+                // serial MAC chains: no action-level overlap is possible
+                // (the single chain is busy for the whole action)
+                let per_action = match cfg.arch {
+                    Arch::Perceptron => self.fp_layer(d),
+                    Arch::Mlp => self.fp_layer(d) + self.fp_layer(h),
+                };
+                a * per_action
+            }
+        }
+    }
+
+    /// Error-capture phase: drain FIFOs, max-scan, Eq. 8.
+    pub fn error_cycles(&self, cfg: &NetConfig, prec: Precision) -> u64 {
+        let a = cfg.a as u64;
+        match prec {
+            Precision::Fixed => a * (self.fu.fifo_rw.max(self.fu.fx_cmp)),
+            Precision::Float => a * self.fu.fp_cmp,
+        }
+    }
+
+    /// Backpropagation phase (Eq. 7, 9–14).
+    pub fn backprop_cycles(&self, cfg: &NetConfig, prec: Precision) -> u64 {
+        let d = cfg.d as u64;
+        let h = cfg.h as u64;
+        match prec {
+            Precision::Fixed => match cfg.arch {
+                // one registered stage: parallel δ + ΔW + write-back
+                Arch::Perceptron => 1,
+                // δ_out → δ_hidden → parallel ΔW/write-back
+                Arch::Mlp => 3,
+            },
+            Precision::Float => {
+                let delta = self.fu.fp_to_fx + self.fu.rom_read + self.fu.fp_mul;
+                match cfg.arch {
+                    Arch::Perceptron => {
+                        // serial ΔW chain over D weights + bias
+                        let dw = 2 * self.fu.fp_mul + self.fu.fp_add * (d + 1);
+                        delta + dw
+                    }
+                    Arch::Mlp => {
+                        // δ1 (H parallel): mul, addr+rom, mul
+                        let d1 = 2 * self.fu.fp_mul + self.fu.fp_to_fx + self.fu.rom_read;
+                        let dw2 = 2 * self.fu.fp_mul + self.fu.fp_add * (h + 1);
+                        // H parallel columns, serial over D+1 rows
+                        let dw1 = 2 * self.fu.fp_mul + self.fu.fp_add * (d + 1);
+                        delta + d1 + dw2 + dw1
+                    }
+                }
+            }
+        }
+    }
+
+    /// Full Q-update cycle breakdown.
+    pub fn qupdate(&self, cfg: &NetConfig, prec: Precision) -> CycleBreakdown {
+        let ff = self.forward_cycles(cfg, prec);
+        let mut err = self.error_cycles(cfg, prec);
+        if self.pipelined && prec == Precision::Fixed {
+            // error capture overlaps the tail of the second sweep: only the
+            // final compare + Eq. 8 stage remains exposed
+            err = self.fx_stage();
+        }
+        CycleBreakdown {
+            ff_current: ff,
+            ff_next: ff,
+            error_capture: err,
+            backprop: self.backprop_cycles(cfg, prec),
+        }
+    }
+
+    /// Completion time in µs for one Q-update (paper Tables 3–6).
+    pub fn completion_us(&self, cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> f64 {
+        dev.cycles_to_us(self.qupdate(cfg, prec).total())
+    }
+
+    /// Throughput in kQ/s (paper Tables 1–2).
+    pub fn throughput_kq_s(&self, cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> f64 {
+        dev.throughput_kq_s(self.qupdate(cfg, prec).total())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvKind;
+
+    fn cfg(arch: Arch, env: EnvKind) -> NetConfig {
+        NetConfig::new(arch, env)
+    }
+
+    /// The paper's Section 3 law, verbatim: “total number of clock cycles to
+    /// update a single Q value equals 7A + 1”.
+    #[test]
+    fn fixed_perceptron_follows_7a_plus_1() {
+        let t = TimingModel::default();
+        for a in [1usize, 6, 9, 40, 64] {
+            let mut c = cfg(Arch::Perceptron, EnvKind::Simple);
+            c.a = a;
+            assert_eq!(t.qupdate(&c, Precision::Fixed).total(), 7 * a as u64 + 1);
+        }
+    }
+
+    /// Table 1 anchor points: “for an action size equal to 9, the total
+    /// number of Q-values computed per second equals 2.34 million … and
+    /// 0.53 Million for a complex environment [A = 40]”.
+    #[test]
+    fn table1_throughput_anchors() {
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        let mut c9 = cfg(Arch::Perceptron, EnvKind::Simple);
+        c9.a = 9;
+        let kq9 = t.throughput_kq_s(&c9, Precision::Fixed, &dev);
+        assert!((kq9 - 2340.0).abs() / 2340.0 < 0.01, "{kq9}");
+
+        let c40 = cfg(Arch::Perceptron, EnvKind::Complex);
+        let kq40 = t.throughput_kq_s(&c40, Precision::Fixed, &dev);
+        assert!((kq40 - 530.0).abs() / 530.0 < 0.01, "{kq40}");
+    }
+
+    /// Table 4 anchor: complex fixed perceptron 1.8 µs.
+    #[test]
+    fn table4_completion_anchor() {
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        let us = t.completion_us(&cfg(Arch::Perceptron, EnvKind::Complex),
+                                 Precision::Fixed, &dev);
+        assert!((us - 1.87).abs() < 0.1, "{us}");
+    }
+
+    /// Shape: float is dramatically slower than fixed everywhere, and the
+    /// gap widens with the serial fan-in (paper Tables 3–6).
+    #[test]
+    fn float_much_slower_than_fixed() {
+        let t = TimingModel::default();
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            for env in [EnvKind::Simple, EnvKind::Complex] {
+                let c = cfg(arch, env);
+                let fx = t.qupdate(&c, Precision::Fixed).total();
+                let fp = t.qupdate(&c, Precision::Float).total();
+                assert!(fp > 10 * fx, "{arch:?}/{env:?}: {fp} vs {fx}");
+            }
+        }
+        // the serial-MAC model widens the gap on the complex env
+        let gap_simple = t.qupdate(&cfg(Arch::Perceptron, EnvKind::Simple), Precision::Float).total()
+            as f64
+            / t.qupdate(&cfg(Arch::Perceptron, EnvKind::Simple), Precision::Fixed).total() as f64;
+        let gap_complex = t.qupdate(&cfg(Arch::Perceptron, EnvKind::Complex), Precision::Float).total()
+            as f64
+            / t.qupdate(&cfg(Arch::Perceptron, EnvKind::Complex), Precision::Fixed).total() as f64;
+        assert!(gap_complex > gap_simple);
+    }
+
+    /// Shape: MLP costs more than the perceptron at equal precision/env.
+    #[test]
+    fn mlp_costs_more_than_perceptron() {
+        let t = TimingModel::default();
+        for prec in [Precision::Fixed, Precision::Float] {
+            for env in [EnvKind::Simple, EnvKind::Complex] {
+                let p = t.qupdate(&cfg(Arch::Perceptron, env), prec).total();
+                let m = t.qupdate(&cfg(Arch::Mlp, env), prec).total();
+                assert!(m > p, "{prec:?}/{env:?}");
+            }
+        }
+    }
+
+    /// Paper-band check for the float completion times (Tables 3–6 give
+    /// 7.7 / 102 / 13 / 107 µs; the structural model must land within 2×).
+    #[test]
+    fn float_completion_in_paper_band() {
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        let anchors = [
+            (Arch::Perceptron, EnvKind::Simple, 7.7),
+            (Arch::Perceptron, EnvKind::Complex, 102.0),
+            (Arch::Mlp, EnvKind::Simple, 13.0),
+            (Arch::Mlp, EnvKind::Complex, 107.0),
+        ];
+        for (arch, env, paper_us) in anchors {
+            let us = t.completion_us(&cfg(arch, env), Precision::Float, &dev);
+            let ratio = us / paper_us;
+            assert!(
+                (0.5..=2.0).contains(&ratio),
+                "{arch:?}/{env:?}: model {us:.1} µs vs paper {paper_us} µs (ratio {ratio:.2})"
+            );
+        }
+    }
+
+    /// X1 ablation: pipelining must help fixed point substantially.
+    #[test]
+    fn pipelining_speeds_up_fixed() {
+        let base = TimingModel::default();
+        let pipe = TimingModel::pipelined();
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            let c = cfg(arch, EnvKind::Complex);
+            let b = base.qupdate(&c, Precision::Fixed).total();
+            let p = pipe.qupdate(&c, Precision::Fixed).total();
+            assert!(p * 2 < b, "{arch:?}: {p} vs {b}");
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let t = TimingModel::default();
+        let b = t.qupdate(&cfg(Arch::Mlp, EnvKind::Complex), Precision::Float);
+        assert_eq!(
+            b.total(),
+            b.ff_current + b.ff_next + b.error_capture + b.backprop
+        );
+        assert_eq!(b.ff_current, b.ff_next);
+    }
+}

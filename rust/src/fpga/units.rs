@@ -1,0 +1,142 @@
+//! Functional-unit models: latency, initiation interval and resource cost.
+//!
+//! The fixed-vs-float gap in the paper's tables is driven entirely by these
+//! unit characteristics:
+//!
+//! * **Fixed point**: DSP48E1 multipliers are 1-cycle at 150 MHz and cheap,
+//!   so the design instantiates one multiplier *per input weight* (the
+//!   paper's “fine-grained parallelism”) plus a 1-cycle balanced adder tree
+//!   and a 1-cycle sigmoid ROM read.
+//! * **Floating point**: LogiCORE FP cores are multi-cycle and large
+//!   (hundreds of LUTs + several DSPs each), so only one MAC chain fits per
+//!   layer and elements are processed serially, pipelined at the adder's
+//!   initiation interval.
+//!
+//! Default latencies are LogiCORE Floating-Point Operator (v7.x)-class
+//! values for a 150 MHz Virtex-7 design: multiplier 8 cycles, adder 11
+//! cycles. The sigmoid is a LUT in both modes (paper Section 3); in float
+//! mode indexing costs a float→fixed address conversion.
+
+/// Timing/size characteristics of the datapath's functional units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FuTimings {
+    /// Fixed multiply (DSP48), cycles.
+    pub fx_mul: u64,
+    /// One balanced adder-tree level (fixed), cycles. The paper's datapath
+    /// registers the whole tree + bias in a single stage.
+    pub fx_tree: u64,
+    /// Sigmoid/derivative ROM read, cycles (BRAM synchronous read).
+    pub rom_read: u64,
+    /// Floating multiply latency, cycles.
+    pub fp_mul: u64,
+    /// Floating add latency, cycles (also the serial MAC initiation
+    /// interval — the accumulator carries a loop dependence).
+    pub fp_add: u64,
+    /// Floating compare, cycles (error-capture max scan in float mode).
+    pub fp_cmp: u64,
+    /// Float→fixed conversion for ROM addressing, cycles.
+    pub fp_to_fx: u64,
+    /// Fixed compare, cycles.
+    pub fx_cmp: u64,
+    /// FIFO push/pop, cycles (overlapped with compute when pipelined).
+    pub fifo_rw: u64,
+}
+
+impl Default for FuTimings {
+    fn default() -> Self {
+        FuTimings {
+            fx_mul: 1,
+            fx_tree: 1,
+            rom_read: 1,
+            fp_mul: 8,
+            fp_add: 11,
+            fp_cmp: 2,
+            fp_to_fx: 2,
+            fx_cmp: 1,
+            fifo_rw: 1,
+        }
+    }
+}
+
+/// Resource footprint of one unit instance (DS180/LogiCORE-class numbers).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// BRAM36 equivalents (two 18 Kb halves).
+    pub bram36: u64,
+}
+
+impl Resources {
+    pub const fn new(luts: u64, ffs: u64, dsps: u64, bram36: u64) -> Self {
+        Resources { luts, ffs, dsps, bram36 }
+    }
+
+    pub fn add(&mut self, other: Resources) {
+        self.luts += other.luts;
+        self.ffs += other.ffs;
+        self.dsps += other.dsps;
+        self.bram36 += other.bram36;
+    }
+
+    pub fn scaled(&self, n: u64) -> Resources {
+        Resources {
+            luts: self.luts * n,
+            ffs: self.ffs * n,
+            dsps: self.dsps * n,
+            bram36: self.bram36 * n,
+        }
+    }
+}
+
+/// Per-instance resource costs.
+pub mod cost {
+    use super::Resources;
+
+    /// Fixed 18×18 multiplier: one DSP48E1 + routing registers.
+    pub const FX_MUL: Resources = Resources::new(10, 40, 1, 0);
+    /// Fixed adder (one tree node), 18-bit.
+    pub const FX_ADD: Resources = Resources::new(20, 18, 0, 0);
+    /// Sigmoid + derivative ROM pair (1024 × 18 bit each → one BRAM36).
+    pub const SIGMOID_ROM: Resources = Resources::new(30, 20, 0, 1);
+    /// FIFO Q-buffer (A ≤ 64 entries × 18/32 bit → LUTRAM + control).
+    pub const FIFO: Resources = Resources::new(80, 60, 0, 0);
+    /// LogiCORE single-precision multiplier.
+    pub const FP_MUL: Resources = Resources::new(700, 850, 3, 0);
+    /// LogiCORE single-precision adder.
+    pub const FP_ADD: Resources = Resources::new(850, 950, 2, 0);
+    /// Float comparator.
+    pub const FP_CMP: Resources = Resources::new(120, 80, 0, 0);
+    /// Control FSM + address generators per block.
+    pub const CONTROL: Resources = Resources::new(350, 420, 0, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reflect_fixed_vs_float_gap() {
+        let t = FuTimings::default();
+        assert_eq!(t.fx_mul, 1);
+        assert!(t.fp_mul > 4 * t.fx_mul);
+        assert!(t.fp_add > t.fp_mul / 2);
+    }
+
+    #[test]
+    fn resource_accumulation() {
+        let mut r = Resources::default();
+        r.add(cost::FX_MUL.scaled(6));
+        r.add(cost::SIGMOID_ROM);
+        assert_eq!(r.dsps, 6);
+        assert_eq!(r.bram36, 1);
+        assert_eq!(r.luts, 6 * 10 + 30);
+    }
+
+    #[test]
+    fn fp_cores_dwarf_fixed_units() {
+        assert!(cost::FP_MUL.luts > 20 * cost::FX_MUL.luts);
+        assert!(cost::FP_ADD.dsps >= 2);
+    }
+}

@@ -1,0 +1,328 @@
+//! `qfpga` — CLI for the FPGA Q-learning accelerator reproduction.
+//!
+//! Subcommands:
+//!
+//! * `report [--table N|--headline|--ablation X|--all]` — regenerate the
+//!   paper's tables (with paper-vs-ours ratios).
+//! * `train  [--arch A --env E --precision P --backend B --episodes N]` —
+//!   run one rover mission and print its learning curve.
+//! * `fleet  [--rovers N ...]` — multi-rover mission via the scheduler.
+//! * `sweep  [--updates N]` — measured per-update latency for every
+//!   backend × configuration (the measured side of Tables 3–6).
+//! * `validate` — cross-backend numeric equivalence over random workloads.
+//! * `info` — artifact manifest + device/model summary.
+
+use std::process::ExitCode;
+
+use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::coordinator::sweep::Workload;
+use qfpga::coordinator::telemetry::LearningCurve;
+use qfpga::coordinator::{measure_backend, run_fleet, run_mission, MissionConfig};
+use qfpga::error::Result;
+use qfpga::fpga::{TimingModel, Virtex7};
+use qfpga::nn::params::QNetParams;
+use qfpga::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, XlaBackend};
+use qfpga::report;
+use qfpga::report::CompletionInputs;
+use qfpga::runtime::Runtime;
+use qfpga::util::cli::Args;
+use qfpga::util::Rng;
+
+const USAGE: &str = "\
+qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
+
+USAGE: qfpga <report|train|fleet|sweep|validate|info> [options]
+
+  report    --table 1..8 | --headline | --ablation pipeline|lut|wordlen | --all
+            [--no-measure]        skip measuring the host-CPU rows
+  train     --arch perceptron|mlp --env simple|complex --precision fixed|float
+            --backend cpu|xla|fpga-sim --episodes N --max-steps N --seed S
+            [--microbatch]
+  fleet     --rovers N            plus all `train` options
+  sweep     --updates N           per-update latency, all backends/configs
+  validate  --updates N           cross-backend numeric equivalence
+  info                            artifacts, device, cycle model summary
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["all", "headline", "measure", "microbatch", "no-measure"])?;
+    match args.positional().first().map(String::as_str) {
+        Some("report") => cmd_report(&args),
+        Some("train") => cmd_train(&args),
+        Some("fleet") => cmd_fleet(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn mission_config(args: &Args) -> Result<MissionConfig> {
+    Ok(MissionConfig {
+        arch: args.get_or("arch", "mlp").parse::<Arch>()?,
+        env: args.get_or("env", "simple").parse::<EnvKind>()?,
+        precision: args.get_or("precision", "fixed").parse::<Precision>()?,
+        backend: args.get_or("backend", "cpu").parse::<BackendKind>()?,
+        episodes: args.get_parse("episodes", 200usize)?,
+        max_steps: args.get_parse("max-steps", 200usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+        hyper: Hyper::default(),
+        microbatch: args.flag("microbatch"),
+    })
+}
+
+/// Median per-update latency of the float CPU backend for a config, µs.
+fn measure_cpu_us(net: NetConfig) -> Result<f64> {
+    let mut rng = Rng::seeded(0xBEEF);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+    let workload = Workload::synthetic(net, 2_000, 3);
+    Ok(measure_backend(&mut backend, &workload, 200)?.median_us)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let measure = !args.flag("no-measure");
+    let completion = |arch, env| -> Result<()> {
+        let inputs = CompletionInputs {
+            measured_cpu_us: if measure {
+                Some(measure_cpu_us(NetConfig::new(arch, env))?)
+            } else {
+                None
+            },
+        };
+        println!("{}", report::table_completion(arch, env, inputs));
+        Ok(())
+    };
+
+    let table = args.get("table");
+    let ablation = args.get("ablation");
+    let all =
+        args.flag("all") || (table.is_none() && ablation.is_none() && !args.flag("headline"));
+
+    if let Some(t) = table {
+        match t {
+            "1" => println!("{}", report::table1()),
+            "2" => println!("{}", report::table2()),
+            "3" => completion(Arch::Perceptron, EnvKind::Simple)?,
+            "4" => completion(Arch::Perceptron, EnvKind::Complex)?,
+            "5" => completion(Arch::Mlp, EnvKind::Simple)?,
+            "6" => completion(Arch::Mlp, EnvKind::Complex)?,
+            "7" => println!("{}", report::table_power(EnvKind::Simple)),
+            "8" => println!("{}", report::table_power(EnvKind::Complex)),
+            "energy" => println!("{}", report::energy_table()),
+            other => return Err(qfpga::error::Error::Config(format!("no table `{other}`"))),
+        }
+        return Ok(());
+    }
+    if let Some(a) = ablation {
+        match a {
+            "pipeline" => println!("{}", report::ablation_pipelining()),
+            "lut" => println!("{}", report::ablation_lut_rom()),
+            "wordlen" => println!("{}", report::ablation_wordlen()),
+            other => return Err(qfpga::error::Error::Config(format!("no ablation `{other}`"))),
+        }
+        return Ok(());
+    }
+    if args.flag("headline") && !all {
+        println!("{}", report::headline());
+        return Ok(());
+    }
+
+    // --all
+    println!("{}", report::table1());
+    println!("{}", report::table2());
+    completion(Arch::Perceptron, EnvKind::Simple)?;
+    completion(Arch::Perceptron, EnvKind::Complex)?;
+    completion(Arch::Mlp, EnvKind::Simple)?;
+    completion(Arch::Mlp, EnvKind::Complex)?;
+    println!("{}", report::table_power(EnvKind::Simple));
+    println!("{}", report::table_power(EnvKind::Complex));
+    println!("{}", report::energy_table());
+    println!("{}", report::headline());
+    println!("{}", report::ablation_pipelining());
+    println!("{}", report::ablation_lut_rom());
+    println!("{}", report::ablation_wordlen());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = mission_config(args)?;
+    println!("mission: {}", cfg.describe());
+    let runtime = match cfg.backend {
+        BackendKind::Xla => Some(Runtime::from_default_dir()?),
+        _ => None,
+    };
+    let report = run_mission(&cfg, runtime.as_ref())?;
+    let (first, last) = report.train.first_last_mean_reward(20);
+    let curve = LearningCurve::from_report(&report.train, 10, 60);
+    println!("reward curve   {}", curve.ascii(60));
+    println!(
+        "episodes {}  steps {}  updates {}  wall {:.2}s  ({:.0} updates/s)",
+        report.train.episodes.len(),
+        report.train.total_steps,
+        report.train.total_updates,
+        report.train.wall_seconds,
+        report.train.updates_per_second()
+    );
+    println!(
+        "mean reward: first-20 {first:.3} -> last-20 {last:.3} (Δ {:+.3})",
+        last - first
+    );
+    if let (Some(us), Some(cycles)) = (report.fpga_modeled_us, report.fpga_cycles) {
+        println!(
+            "fpga model: {cycles} cycles = {:.1} ms on the Virtex-7 @150 MHz",
+            us / 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = mission_config(args)?;
+    let rovers = args.get_parse("rovers", 4usize)?;
+    println!("fleet: {} × [{}]", rovers, cfg.describe());
+    let report = run_fleet(&cfg, rovers)?;
+    for (i, r) in report.rovers.iter().enumerate() {
+        let (first, last) = r.train.first_last_mean_reward(20);
+        println!(
+            "  rover-{i}: steps {:>6}  reward {first:.3} -> {last:.3}",
+            r.train.total_steps
+        );
+    }
+    println!(
+        "fleet total: {} steps, {:.0} updates/s aggregate, mean Δreward {:+.3}, wall {:.2}s",
+        report.total_steps(),
+        report.aggregate_updates_per_second(),
+        report.mean_learning_delta(),
+        report.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let n = args.get_parse("updates", 1_000usize)?;
+    let warmup = (n / 10).max(10);
+    let runtime = Runtime::from_default_dir().ok();
+    if runtime.is_none() {
+        println!("(artifacts not built; skipping the xla backend)");
+    }
+    println!(
+        "{:<38} {:>10} {:>10} {:>12}",
+        "backend", "mean µs", "median µs", "kQ/s"
+    );
+    for net in NetConfig::all() {
+        let workload = Workload::synthetic(net, n + warmup, 11);
+        for prec in [Precision::Fixed, Precision::Float] {
+            let mut rng = Rng::seeded(0xF00D);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+
+            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            print_timing(measure_backend(&mut cpu, &workload, warmup)?);
+
+            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            print_timing(measure_backend(&mut sim, &workload, warmup)?);
+
+            if let Some(rt) = &runtime {
+                let mut xla = XlaBackend::new(rt, net, prec, params)?;
+                print_timing(measure_backend(&mut xla, &workload, warmup)?);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn print_timing(t: qfpga::coordinator::WorkloadTiming) {
+    println!(
+        "{:<38} {:>10.2} {:>10.2} {:>12.1}",
+        t.backend_name, t.mean_us, t.median_us, t.kq_per_s
+    );
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use qfpga::qlearn::backend::QBackend;
+    let n = args.get_parse("updates", 50usize)?;
+    let rt = Runtime::from_default_dir()?;
+    let mut worst: f64 = 0.0;
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let mut rng = Rng::seeded(0xCAFE);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+            let w = Workload::synthetic(net, n, 21);
+            let mut xla = XlaBackend::new(&rt, net, prec, params.clone())?;
+            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut sim = FpgaSimBackend::new(net, prec, params, Hyper::default());
+            let step = net.a * net.d;
+            let mut max_diff = 0f64;
+            for i in 0..n {
+                let sc = &w.sa_cur[i * step..(i + 1) * step];
+                let sn = &w.sa_next[i * step..(i + 1) * step];
+                let e1 = xla.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+                let e2 = cpu.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+                let e3 = sim.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+                max_diff = max_diff.max((e1 - e2).abs()).max((e1 - e3).abs());
+            }
+            println!(
+                "{:<28} {:<6} max |Δq_err| over {n} updates: {max_diff:.2e}",
+                net.name(),
+                prec.as_str()
+            );
+            worst = worst.max(max_diff);
+        }
+    }
+    let budget = 4.0 / 4096.0; // 4 LSB of Q(18,12)
+    if worst > budget {
+        return Err(qfpga::error::Error::Config(format!(
+            "cross-backend divergence {worst:.2e} exceeds budget {budget:.2e}"
+        )));
+    }
+    println!("OK: all backends agree within {budget:.2e}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dev = Virtex7::default();
+    println!("device: Virtex-7 XC7VX485T @ {:.0} MHz", dev.clock_hz / 1e6);
+    println!(
+        "  {} LUT / {} FF / {} DSP48 / {} BRAM36",
+        dev.luts, dev.ffs, dev.dsps, dev.bram36
+    );
+    let t = TimingModel::default();
+    println!("cycle model (per Q-update):");
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let b = t.qupdate(&net, prec);
+            println!(
+                "  {:<22} {:<6} {:>7} cycles = {:>9.2} µs",
+                net.name(),
+                prec.as_str(),
+                b.total(),
+                dev.cycles_to_us(b.total())
+            );
+        }
+    }
+    match Runtime::from_default_dir() {
+        Ok(rt) => {
+            println!(
+                "artifacts: {} modules in {} (platform {})",
+                rt.manifest().artifacts.len(),
+                rt.manifest().dir.display(),
+                rt.platform()
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Sigmoid activation: exact form and the paper's ROM/LUT form.
+//!
+//! “We utilize a Look-up Table approach, which stores the pre-calculated
+//! values of the sigmoid values. … The derivative of the sigmoid is also
+//! implemented using a Look-up Table (ROM)” (paper, Section 3).
+
+use crate::fixed::{Fixed, FixedSpec};
+
+/// Exact logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Exact sigmoid derivative expressed in the pre-activation σ.
+#[inline]
+pub fn sigmoid_deriv(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 - s)
+}
+
+/// ROM geometry: `size` entries sampled uniformly over [−xmax, xmax].
+/// Must match `python/compile/configs.py::LutSpec`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LutSpec {
+    pub size: usize,
+    pub xmax: f32,
+}
+
+impl Default for LutSpec {
+    fn default() -> Self {
+        LutSpec { size: 1024, xmax: 8.0 }
+    }
+}
+
+impl LutSpec {
+    /// Address generator: clip to range, map to nearest entry
+    /// (round-half-even, matching `jnp.round`).
+    #[inline]
+    pub fn index(&self, x: f32) -> usize {
+        let xc = x.clamp(-self.xmax, self.xmax);
+        let pos =
+            (xc + self.xmax) as f64 / (2.0 * self.xmax as f64) * (self.size - 1) as f64;
+        pos.round_ties_even() as usize
+    }
+
+    /// ROM word count for both tables (sigmoid + derivative).
+    pub fn total_entries(&self) -> usize {
+        2 * self.size
+    }
+}
+
+/// The pair of ROMs: sigmoid values and derivative values, pre-computed at
+/// build time (on the FPGA: BRAM init data; in the artifacts: HLO constants).
+#[derive(Debug, Clone)]
+pub struct SigmoidLut {
+    pub spec: LutSpec,
+    table: Vec<f32>,
+    dtable: Vec<f32>,
+}
+
+impl SigmoidLut {
+    /// Build the ROMs; with `fixed` set the stored words are quantized to
+    /// the datapath grid, as they would be in an 18-bit-wide BRAM.
+    pub fn build(spec: LutSpec, fixed: Option<FixedSpec>) -> Self {
+        let n = spec.size;
+        let mut table = Vec::with_capacity(n);
+        let mut dtable = Vec::with_capacity(n);
+        for i in 0..n {
+            // f64 grid math matches numpy's linspace closely enough that the
+            // stored f32 words agree bit-for-bit for all tested specs.
+            let x = -spec.xmax as f64
+                + (2.0 * spec.xmax as f64) * i as f64 / (n - 1) as f64;
+            let s = 1.0 / (1.0 + (-x).exp());
+            let (mut v, mut d) = (s as f32, (s * (1.0 - s)) as f32);
+            if let Some(q) = fixed {
+                v = Fixed::from_f32(v, q).to_f32();
+                d = Fixed::from_f32(d, q).to_f32();
+            }
+            table.push(v);
+            dtable.push(d);
+        }
+        SigmoidLut { spec, table, dtable }
+    }
+
+    /// One BRAM read: f(σ).
+    #[inline]
+    pub fn lookup(&self, x: f32) -> f32 {
+        self.table[self.spec.index(x)]
+    }
+
+    /// One BRAM read: f′(σ).
+    #[inline]
+    pub fn lookup_deriv(&self, x: f32) -> f32 {
+        self.dtable[self.spec.index(x)]
+    }
+
+    /// Maximum absolute error of the stored table vs the exact sigmoid,
+    /// evaluated on a dense probe grid — the X2 ablation metric.
+    pub fn max_abs_error(&self, probes: usize) -> f32 {
+        let mut worst = 0f32;
+        for i in 0..probes {
+            let x = -self.spec.xmax
+                + 2.0 * self.spec.xmax * i as f32 / (probes - 1) as f32;
+            let err = (self.lookup(x) - sigmoid(x)).abs();
+            worst = worst.max(err);
+        }
+        worst
+    }
+}
+
+/// Datapath activation selector.
+#[derive(Debug, Clone)]
+pub enum Activation {
+    /// Exact sigmoid (ablation reference).
+    Exact,
+    /// ROM lookup — the paper's implementation.
+    Lut(SigmoidLut),
+}
+
+impl Activation {
+    /// Default paper activation for a given precision.
+    pub fn lut_default(fixed: Option<FixedSpec>) -> Self {
+        Activation::Lut(SigmoidLut::build(LutSpec::default(), fixed))
+    }
+
+    #[inline]
+    pub fn f(&self, x: f32) -> f32 {
+        match self {
+            Activation::Exact => sigmoid(x),
+            Activation::Lut(l) => l.lookup(x),
+        }
+    }
+
+    #[inline]
+    pub fn fprime(&self, x: f32) -> f32 {
+        match self {
+            Activation::Exact => sigmoid_deriv(x),
+            Activation::Lut(l) => l.lookup_deriv(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sigmoid_values() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!((sigmoid(8.0) - 0.99966466).abs() < 1e-6);
+        assert!((sigmoid_deriv(0.0) - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn index_endpoints_and_center() {
+        let spec = LutSpec { size: 1024, xmax: 8.0 };
+        assert_eq!(spec.index(-100.0), 0);
+        assert_eq!(spec.index(100.0), 1023);
+        // center: 511.5 rounds half-even to 512 (matches python test)
+        assert_eq!(spec.index(0.0), 512);
+    }
+
+    #[test]
+    fn lut_monotone_and_bounded() {
+        let lut = SigmoidLut::build(LutSpec::default(), None);
+        let mut prev = -1.0f32;
+        for i in 0..200 {
+            let x = -10.0 + i as f32 * 0.1;
+            let v = lut.lookup(x);
+            assert!(v >= prev - 1e-7, "monotone at {x}");
+            assert!((0.0..=1.0).contains(&v));
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn rom_size_improves_accuracy() {
+        // X2 ablation shape (same budgets as the python test).
+        for (size, budget) in [(64, 0.07f32), (256, 0.02), (1024, 0.006), (4096, 0.0025)] {
+            let lut = SigmoidLut::build(LutSpec { size, xmax: 8.0 }, None);
+            assert!(
+                lut.max_abs_error(10_001) < budget,
+                "size {size}: {} >= {budget}",
+                lut.max_abs_error(10_001)
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_table_on_grid() {
+        let q = FixedSpec::new(18, 12);
+        let lut = SigmoidLut::build(LutSpec { size: 128, xmax: 8.0 }, Some(q));
+        for i in 0..128 {
+            let x = -8.0 + 16.0 * i as f32 / 127.0;
+            let v = lut.lookup(x);
+            let back = Fixed::from_f32(v, q).to_f32();
+            assert_eq!(v, back, "entry {i} not on the Q(18,12) grid");
+        }
+    }
+
+    #[test]
+    fn deriv_peak_at_center() {
+        let lut = SigmoidLut::build(LutSpec { size: 1025, xmax: 8.0 }, None);
+        assert!((lut.lookup_deriv(0.0) - 0.25).abs() < 1e-6);
+        assert!(lut.lookup_deriv(7.9) < 0.01);
+    }
+}

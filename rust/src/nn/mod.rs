@@ -1,0 +1,21 @@
+//! Pure-Rust reference network — the paper's CPU baseline (Tables 3–6).
+//!
+//! Implements exactly the op chain of the python oracle
+//! (`python/compile/kernels/ref.py`): feed-forward (Eq. 5/6), error capture
+//! (Eq. 8) and backpropagation (Eq. 7, 9–14), in float32 with optional
+//! fake-quantization to a [`crate::fixed::FixedSpec`] grid after every
+//! register-level operation.
+//!
+//! Three roles:
+//! 1. the measured CPU baseline for the completion-time tables,
+//! 2. the host-side oracle the XLA artifacts are validated against
+//!    (`tests/backend_equiv.rs`),
+//! 3. the numeric core reused by the FPGA datapath simulator in float mode.
+
+pub mod activation;
+pub mod params;
+pub mod qupdate;
+
+pub use activation::{sigmoid, sigmoid_deriv, Activation, LutSpec, SigmoidLut};
+pub use params::QNetParams;
+pub use qupdate::{forward, forward_full, q_error, qupdate, Datapath, ForwardTrace, QUpdateOutput};

@@ -1,0 +1,268 @@
+//! Network parameters, in the exact layout of the AOT artifacts.
+//!
+//! * Perceptron: `w` (D×1, flat length D), `b` (scalar).
+//! * MLP: `w1` (D×H row-major), `b1` (H), `w2` (H×1, flat length H),
+//!   `b2` (scalar).
+
+use std::path::Path;
+
+use crate::config::{Arch, NetConfig};
+use crate::error::{Error, Result};
+use crate::util::{Json, Rng};
+
+/// Parameters of a Q-network, matching the artifact tensor layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QNetParams {
+    Perceptron {
+        /// Input weights, length D.
+        w: Vec<f32>,
+        /// Bias.
+        b: f32,
+    },
+    Mlp {
+        /// Hidden weights, row-major (D, H).
+        w1: Vec<f32>,
+        /// Hidden biases, length H.
+        b1: Vec<f32>,
+        /// Output weights, length H.
+        w2: Vec<f32>,
+        /// Output bias.
+        b2: f32,
+    },
+}
+
+impl QNetParams {
+    /// Random init: weights ~ scale·N(0,1)-ish uniform, biases zero
+    /// (the paper does not specify an init; this matches ref.init_params'
+    /// spirit — small symmetric weights, zero biases).
+    pub fn init(cfg: &NetConfig, scale: f32, rng: &mut Rng) -> Self {
+        let mut draw = |n: usize| -> Vec<f32> { rng.vec_f32(n, -scale, scale) };
+        match cfg.arch {
+            Arch::Perceptron => QNetParams::Perceptron { w: draw(cfg.d), b: 0.0 },
+            Arch::Mlp => QNetParams::Mlp {
+                w1: draw(cfg.d * cfg.h),
+                b1: vec![0.0; cfg.h],
+                w2: draw(cfg.h),
+                b2: 0.0,
+            },
+        }
+    }
+
+    /// Zero-initialized parameters.
+    pub fn zeros(cfg: &NetConfig) -> Self {
+        match cfg.arch {
+            Arch::Perceptron => QNetParams::Perceptron { w: vec![0.0; cfg.d], b: 0.0 },
+            Arch::Mlp => QNetParams::Mlp {
+                w1: vec![0.0; cfg.d * cfg.h],
+                b1: vec![0.0; cfg.h],
+                w2: vec![0.0; cfg.h],
+                b2: 0.0,
+            },
+        }
+    }
+
+    pub fn arch(&self) -> Arch {
+        match self {
+            QNetParams::Perceptron { .. } => Arch::Perceptron,
+            QNetParams::Mlp { .. } => Arch::Mlp,
+        }
+    }
+
+    /// Number of parameter tensors as passed to the artifacts (2 or 4).
+    pub fn n_tensors(&self) -> usize {
+        match self {
+            QNetParams::Perceptron { .. } => 2,
+            QNetParams::Mlp { .. } => 4,
+        }
+    }
+
+    /// Total scalar parameter count.
+    pub fn n_scalars(&self) -> usize {
+        match self {
+            QNetParams::Perceptron { w, .. } => w.len() + 1,
+            QNetParams::Mlp { w1, b1, w2, .. } => w1.len() + b1.len() + w2.len() + 1,
+        }
+    }
+
+    /// Flatten into per-tensor vectors in artifact order.
+    pub fn to_tensors(&self) -> Vec<Vec<f32>> {
+        match self {
+            QNetParams::Perceptron { w, b } => vec![w.clone(), vec![*b]],
+            QNetParams::Mlp { w1, b1, w2, b2 } => {
+                vec![w1.clone(), b1.clone(), w2.clone(), vec![*b2]]
+            }
+        }
+    }
+
+    /// Rebuild from per-tensor vectors in artifact order.
+    pub fn from_tensors(cfg: &NetConfig, tensors: &[Vec<f32>]) -> Result<Self> {
+        let bad = |msg: &str| Error::interface(format!("params from_tensors: {msg}"));
+        match cfg.arch {
+            Arch::Perceptron => {
+                if tensors.len() != 2 {
+                    return Err(bad("expected 2 tensors"));
+                }
+                if tensors[0].len() != cfg.d || tensors[1].len() != 1 {
+                    return Err(bad("perceptron tensor shapes"));
+                }
+                Ok(QNetParams::Perceptron { w: tensors[0].clone(), b: tensors[1][0] })
+            }
+            Arch::Mlp => {
+                if tensors.len() != 4 {
+                    return Err(bad("expected 4 tensors"));
+                }
+                if tensors[0].len() != cfg.d * cfg.h
+                    || tensors[1].len() != cfg.h
+                    || tensors[2].len() != cfg.h
+                    || tensors[3].len() != 1
+                {
+                    return Err(bad("mlp tensor shapes"));
+                }
+                Ok(QNetParams::Mlp {
+                    w1: tensors[0].clone(),
+                    b1: tensors[1].clone(),
+                    w2: tensors[2].clone(),
+                    b2: tensors[3][0],
+                })
+            }
+        }
+    }
+
+    /// Serialize to JSON (mission checkpointing / cross-run hand-off).
+    pub fn to_json(&self) -> Json {
+        let tensors = self
+            .to_tensors()
+            .into_iter()
+            .map(|t| Json::from_f32s(&t))
+            .collect();
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch().as_str().to_string())),
+            ("tensors", Json::Arr(tensors)),
+        ])
+    }
+
+    /// Deserialize from JSON produced by [`QNetParams::to_json`].
+    pub fn from_json(cfg: &NetConfig, j: &Json) -> Result<Self> {
+        let arch: Arch = j.req_str("arch")?.parse()?;
+        if arch != cfg.arch {
+            return Err(Error::interface(format!(
+                "checkpoint arch {} != config arch {}",
+                arch.as_str(),
+                cfg.arch.as_str()
+            )));
+        }
+        let tensors = j
+            .req_arr("tensors")?
+            .iter()
+            .map(|t| {
+                t.as_arr()
+                    .ok_or_else(|| Error::interface("tensor not an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|x| x as f32)
+                            .ok_or_else(|| Error::interface("non-numeric weight"))
+                    })
+                    .collect::<Result<Vec<f32>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_tensors(cfg, &tensors)
+    }
+
+    /// Write a checkpoint file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint file.
+    pub fn load(cfg: &NetConfig, path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(cfg, &Json::parse(&text)?)
+    }
+
+    /// Max |Δ| between two parameter sets (convergence / equivalence metric).
+    pub fn max_abs_diff(&self, other: &QNetParams) -> f32 {
+        let a = self.to_tensors();
+        let b = other.to_tensors();
+        let mut worst = 0f32;
+        for (ta, tb) in a.iter().zip(&b) {
+            for (x, y) in ta.iter().zip(tb) {
+                worst = worst.max((x - y).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvKind;
+
+    #[test]
+    fn tensors_roundtrip() {
+        let mut rng = Rng::seeded(1);
+        for cfg in NetConfig::all() {
+            let p = QNetParams::init(&cfg, 0.5, &mut rng);
+            let t = p.to_tensors();
+            let back = QNetParams::from_tensors(&cfg, &t).unwrap();
+            assert_eq!(p, back);
+            assert_eq!(p.n_scalars(), cfg.n_params());
+        }
+    }
+
+    #[test]
+    fn from_tensors_validates_shapes() {
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let bad = vec![vec![0.0; 3]; 4];
+        assert!(QNetParams::from_tensors(&cfg, &bad).is_err());
+        let wrong_arity = vec![vec![0.0; 6]];
+        assert!(QNetParams::from_tensors(&cfg, &wrong_arity).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let a = QNetParams::init(&cfg, 0.5, &mut Rng::seeded(9));
+        let b = QNetParams::init(&cfg, 0.5, &mut Rng::seeded(9));
+        assert_eq!(a, b);
+        let c = QNetParams::init(&cfg, 0.5, &mut Rng::seeded(10));
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn json_checkpoint_roundtrip() {
+        let mut rng = Rng::seeded(77);
+        for cfg in NetConfig::all() {
+            let p = QNetParams::init(&cfg, 0.5, &mut rng);
+            let j = p.to_json();
+            let back = QNetParams::from_json(&cfg, &j).unwrap();
+            // JSON round-trips f32 through f64 text — exact for f32 values
+            assert!(p.max_abs_diff(&back) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_and_arch_check() {
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let p = QNetParams::init(&cfg, 0.5, &mut Rng::seeded(78));
+        let dir = std::env::temp_dir().join("qfpga_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mlp.json");
+        p.save(&path).unwrap();
+        let back = QNetParams::load(&cfg, &path).unwrap();
+        assert!(p.max_abs_diff(&back) < 1e-6);
+        // wrong arch must be rejected
+        let wrong = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        assert!(QNetParams::load(&wrong, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn max_abs_diff_zero_on_self() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let p = QNetParams::zeros(&cfg);
+        assert_eq!(p.max_abs_diff(&p), 0.0);
+    }
+}

@@ -1,0 +1,373 @@
+//! Feed-forward + Q-update numeric core (the CPU baseline datapath).
+//!
+//! Mirrors `python/compile/kernels/ref.py` operation-for-operation so the
+//! three backends (XLA artifact, this module, FPGA simulator) can be
+//! cross-validated. All math is f32 with optional fake-quantization after
+//! every register-level value, exactly like the python oracle.
+
+use crate::config::{Hyper, NetConfig};
+use crate::error::{Error, Result};
+use crate::fixed::{FixedSpec, Quantizer};
+
+use super::activation::Activation;
+use super::params::QNetParams;
+
+/// Datapath configuration: arithmetic grid + activation implementation.
+#[derive(Debug, Clone)]
+pub struct Datapath {
+    /// `None` -> float32; `Some(spec)` -> fake-quantized fixed point.
+    pub precision: Option<FixedSpec>,
+    pub activation: Activation,
+    /// Precomputed fast quantizer (kept in sync with `precision`).
+    quantizer: Option<Quantizer>,
+}
+
+impl Datapath {
+    /// Build a datapath; use this (not a struct literal) so the precomputed
+    /// quantizer stays in sync with `precision`.
+    pub fn new(precision: Option<FixedSpec>, activation: Activation) -> Self {
+        Datapath { precision, activation, quantizer: precision.map(Quantizer::new) }
+    }
+
+    /// Paper-default datapath for a precision: LUT sigmoid, Q(18,12) grid
+    /// when fixed.
+    pub fn paper(fixed: Option<FixedSpec>) -> Self {
+        Self::new(fixed, Activation::lut_default(fixed))
+    }
+
+    /// Quantize one register value (identity in float mode).
+    #[inline(always)]
+    pub fn q(&self, x: f32) -> f32 {
+        match &self.quantizer {
+            None => x,
+            Some(q) => q.q(x),
+        }
+    }
+}
+
+/// Feed-forward internals needed by backprop (python `forward_full`).
+#[derive(Debug, Clone, Default)]
+pub struct ForwardTrace {
+    /// Q-values, length A.
+    pub q: Vec<f32>,
+    /// Output pre-activations σ, length A.
+    pub pre2: Vec<f32>,
+    /// Hidden activations, row-major (A, H). Empty for the perceptron.
+    pub hid: Vec<f32>,
+    /// Hidden pre-activations, row-major (A, H). Empty for the perceptron.
+    pub pre1: Vec<f32>,
+}
+
+/// Result of one full Q-update.
+#[derive(Debug, Clone)]
+pub struct QUpdateOutput {
+    pub params: QNetParams,
+    pub q_cur: Vec<f32>,
+    pub q_next: Vec<f32>,
+    pub q_err: f32,
+}
+
+#[inline]
+#[allow(dead_code)] // kept as the scalar-path reference for dot-product reviews
+fn dot_q(dp: &Datapath, x: &[f32], w: &[f32]) -> f32 {
+    // f32 accumulation in index order, matching jnp.matmul closely enough
+    // for the 1e-6 cross-checks; rounded once afterwards in fixed mode.
+    let mut acc = 0f32;
+    for (a, b) in x.iter().zip(w) {
+        acc += a * b;
+    }
+    dp.q(acc)
+}
+
+/// Feed-forward for all A actions; `sa` is row-major (A, D).
+pub fn forward_full(
+    cfg: &NetConfig,
+    params: &QNetParams,
+    sa: &[f32],
+    dp: &Datapath,
+) -> Result<ForwardTrace> {
+    let (a_n, d) = (cfg.a, cfg.d);
+    if sa.len() != a_n * d {
+        return Err(Error::interface(format!(
+            "sa length {} != A*D = {}",
+            sa.len(),
+            a_n * d
+        )));
+    }
+    let qz = |x: f32| dp.q(x);
+    let sa_q: Vec<f32> = sa.iter().map(|&x| qz(x)).collect();
+
+    match params {
+        QNetParams::Perceptron { w, b } => {
+            if w.len() != d {
+                return Err(Error::interface("perceptron weight length != D"));
+            }
+            let w_q: Vec<f32> = w.iter().map(|&x| qz(x)).collect();
+            let b_q = qz(*b);
+            let mut trace = ForwardTrace {
+                q: Vec::with_capacity(a_n),
+                pre2: Vec::with_capacity(a_n),
+                ..Default::default()
+            };
+            for ai in 0..a_n {
+                let x = &sa_q[ai * d..(ai + 1) * d];
+                // Eq. 5: σ = Σ x_i w_i (+ bias); one rounding (MAC block)
+                let mut acc = 0f32;
+                for (xi, wi) in x.iter().zip(&w_q) {
+                    acc += xi * wi;
+                }
+                let pre = qz(acc + b_q);
+                trace.pre2.push(pre);
+                // Eq. 6: firing rate through the sigmoid ROM
+                trace.q.push(dp.activation.f(pre));
+            }
+            Ok(trace)
+        }
+        QNetParams::Mlp { w1, b1, w2, b2 } => {
+            let h = cfg.h;
+            if w1.len() != d * h || b1.len() != h || w2.len() != h {
+                return Err(Error::interface("mlp parameter shapes"));
+            }
+            let w1_q: Vec<f32> = w1.iter().map(|&x| qz(x)).collect();
+            let b1_q: Vec<f32> = b1.iter().map(|&x| qz(x)).collect();
+            let w2_q: Vec<f32> = w2.iter().map(|&x| qz(x)).collect();
+            let b2_q = qz(*b2);
+            let mut trace = ForwardTrace {
+                q: Vec::with_capacity(a_n),
+                pre2: Vec::with_capacity(a_n),
+                hid: Vec::with_capacity(a_n * h),
+                pre1: Vec::with_capacity(a_n * h),
+            };
+            for ai in 0..a_n {
+                let x = &sa_q[ai * d..(ai + 1) * d];
+                // hidden layer: H parallel MAC columns
+                let mut hid_row = Vec::with_capacity(h);
+                for j in 0..h {
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += x[i] * w1_q[i * h + j];
+                    }
+                    let pre = qz(acc + b1_q[j]);
+                    trace.pre1.push(pre);
+                    let o = dp.activation.f(pre);
+                    trace.hid.push(o);
+                    hid_row.push(o);
+                }
+                // output layer
+                let pre2 = {
+                    let mut acc = 0f32;
+                    for j in 0..h {
+                        acc += hid_row[j] * w2_q[j];
+                    }
+                    qz(acc + b2_q)
+                };
+                trace.pre2.push(pre2);
+                trace.q.push(dp.activation.f(pre2));
+            }
+            Ok(trace)
+        }
+    }
+}
+
+/// Q-values only (action-selection path).
+pub fn forward(
+    cfg: &NetConfig,
+    params: &QNetParams,
+    sa: &[f32],
+    dp: &Datapath,
+) -> Result<Vec<f32>> {
+    Ok(forward_full(cfg, params, sa, dp)?.q)
+}
+
+/// Eq. 8: Q_error = α·(r + γ·max_a′ Q(s′,a′) − Q(s,a)).
+pub fn q_error(dp: &Datapath, hyper: &Hyper, q_sa: f32, q_next_max: f32, reward: f32) -> f32 {
+    let target = dp.q(reward + dp.q(hyper.gamma * q_next_max));
+    dp.q(hyper.alpha * dp.q(target - q_sa))
+}
+
+/// One full paper Q-update (two sweeps + error capture + backprop).
+#[allow(clippy::too_many_arguments)]
+pub fn qupdate(
+    cfg: &NetConfig,
+    params: &QNetParams,
+    sa_cur: &[f32],
+    sa_next: &[f32],
+    action: usize,
+    reward: f32,
+    hyper: &Hyper,
+    dp: &Datapath,
+) -> Result<QUpdateOutput> {
+    if action >= cfg.a {
+        return Err(Error::Env(format!("action {action} out of range 0..{}", cfg.a)));
+    }
+    let qz = |x: f32| dp.q(x);
+
+    let cur = forward_full(cfg, params, sa_cur, dp)?;
+    let nxt = forward_full(cfg, params, sa_next, dp)?;
+
+    let q_next_max = nxt.q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let err = q_error(dp, hyper, cur.q[action], q_next_max, reward);
+
+    let d = cfg.d;
+    let x_row: Vec<f32> = sa_cur[action * d..(action + 1) * d]
+        .iter()
+        .map(|&x| qz(x))
+        .collect();
+    let lr = hyper.lr;
+
+    let new_params = match params {
+        QNetParams::Perceptron { w, b } => {
+            let w_q: Vec<f32> = w.iter().map(|&x| qz(x)).collect();
+            let b_q = qz(*b);
+            // Eq. 7: δ = f′(σ)·Q_error
+            let delta = qz(dp.activation.fprime(cur.pre2[action]) * err);
+            // Eq. 9/10: ΔW = C·O·δ ; W += ΔW
+            let mut w_new = Vec::with_capacity(d);
+            for i in 0..d {
+                let dw = qz(lr * qz(x_row[i] * delta));
+                w_new.push(qz(w_q[i] + dw));
+            }
+            let db = qz(lr * delta);
+            QNetParams::Perceptron { w: w_new, b: qz(b_q + db) }
+        }
+        QNetParams::Mlp { w1, b1, w2, b2 } => {
+            let h = cfg.h;
+            let w1_q: Vec<f32> = w1.iter().map(|&x| qz(x)).collect();
+            let b1_q: Vec<f32> = b1.iter().map(|&x| qz(x)).collect();
+            let w2_q: Vec<f32> = w2.iter().map(|&x| qz(x)).collect();
+            let b2_q = qz(*b2);
+
+            let s2 = cur.pre2[action];
+            let o1 = &cur.hid[action * h..(action + 1) * h];
+            let s1 = &cur.pre1[action * h..(action + 1) * h];
+
+            // Eq. 11: output delta
+            let d2 = qz(dp.activation.fprime(s2) * err);
+            // Eq. 12: hidden deltas  δ_i = f′(σ_i)·(δ_out·W_i)
+            let d1: Vec<f32> = (0..h)
+                .map(|j| qz(dp.activation.fprime(s1[j]) * qz(d2 * w2_q[j])))
+                .collect();
+            // Eq. 13/14: ΔW generators + in-place update
+            let mut w2_new = Vec::with_capacity(h);
+            for j in 0..h {
+                let dw2 = qz(lr * qz(o1[j] * d2));
+                w2_new.push(qz(w2_q[j] + dw2));
+            }
+            let b2_new = qz(b2_q + qz(lr * d2));
+            let mut w1_new = vec![0f32; d * h];
+            for i in 0..d {
+                for j in 0..h {
+                    let dw1 = qz(lr * qz(x_row[i] * d1[j]));
+                    w1_new[i * h + j] = qz(w1_q[i * h + j] + dw1);
+                }
+            }
+            let b1_new: Vec<f32> =
+                (0..h).map(|j| qz(b1_q[j] + qz(lr * d1[j]))).collect();
+            QNetParams::Mlp { w1: w1_new, b1: b1_new, w2: w2_new, b2: b2_new }
+        }
+    };
+
+    Ok(QUpdateOutput { params: new_params, q_cur: cur.q, q_next: nxt.q, q_err: err })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::util::Rng;
+
+    fn rand_sa(cfg: &NetConfig, rng: &mut Rng) -> Vec<f32> {
+        rng.vec_f32(cfg.a * cfg.d, -1.0, 1.0)
+    }
+
+    fn paper_dp(fixed: bool) -> Datapath {
+        Datapath::paper(fixed.then(FixedSpec::default))
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::seeded(2);
+        for cfg in NetConfig::all() {
+            let params = QNetParams::init(&cfg, 0.5, &mut rng);
+            let sa = rand_sa(&cfg, &mut rng);
+            let t = forward_full(&cfg, &params, &sa, &paper_dp(false)).unwrap();
+            assert_eq!(t.q.len(), cfg.a);
+            assert_eq!(t.pre2.len(), cfg.a);
+            if cfg.arch == Arch::Mlp {
+                assert_eq!(t.hid.len(), cfg.a * cfg.h);
+            }
+            for q in &t.q {
+                assert!((0.0..=1.0).contains(q));
+            }
+        }
+    }
+
+    #[test]
+    fn qupdate_moves_q_toward_target() {
+        // γ=0, fixed reward: repeated updates shrink |q_err| (learning works)
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut rng = Rng::seeded(3);
+        let mut params = QNetParams::init(&cfg, 0.2, &mut rng);
+        let sa_cur = rand_sa(&cfg, &mut rng);
+        let sa_next = rand_sa(&cfg, &mut rng);
+        let hyper = Hyper { alpha: 1.0, gamma: 0.0, lr: 0.5 };
+        let dp = paper_dp(false);
+
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..150 {
+            let out = qupdate(&cfg, &params, &sa_cur, &sa_next, 2, 0.8, &hyper, &dp).unwrap();
+            params = out.params;
+            last = out.q_err.abs();
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn zero_alpha_freezes() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(4);
+        let params = QNetParams::init(&cfg, 0.5, &mut rng);
+        let sa_cur = rand_sa(&cfg, &mut rng);
+        let sa_next = rand_sa(&cfg, &mut rng);
+        let hyper = Hyper { alpha: 0.0, gamma: 0.9, lr: 0.25 };
+        let out = qupdate(&cfg, &params, &sa_cur, &sa_next, 0, 1.0, &hyper, &paper_dp(false))
+            .unwrap();
+        assert_eq!(out.q_err, 0.0);
+        assert_eq!(out.params, params);
+    }
+
+    #[test]
+    fn fixed_tracks_float_within_budget() {
+        let mut rng = Rng::seeded(5);
+        for cfg in NetConfig::all() {
+            let params = QNetParams::init(&cfg, 0.5, &mut rng);
+            let sa = rand_sa(&cfg, &mut rng);
+            let qf = forward(&cfg, &params, &sa, &paper_dp(false)).unwrap();
+            let qx = forward(&cfg, &params, &sa, &paper_dp(true)).unwrap();
+            let lsb = FixedSpec::default().lsb() as f32;
+            for (f, x) in qf.iter().zip(&qx) {
+                assert!((f - x).abs() < 64.0 * lsb, "{f} vs {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_action_rejected() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let params = QNetParams::zeros(&cfg);
+        let sa = vec![0.0; cfg.a * cfg.d];
+        let r = qupdate(&cfg, &params, &sa, &sa, cfg.a, 0.0, &Hyper::default(),
+                        &paper_dp(false));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn wrong_sa_length_rejected() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let params = QNetParams::zeros(&cfg);
+        let sa = vec![0.0; 5];
+        assert!(forward(&cfg, &params, &sa, &paper_dp(false)).is_err());
+    }
+}

@@ -1,0 +1,394 @@
+//! Compute backends behind one trait — the heart of the reproduction.
+//!
+//! The paper's evaluation compares *the same Q-update workload* on an FPGA
+//! (fixed/float) against a CPU. [`QBackend`] makes that comparison honest
+//! here: the mission coordinator, the benches and the table generators all
+//! drive identical transitions through whichever backend is under test.
+//!
+//! | backend | compute | role |
+//! |---|---|---|
+//! | [`XlaBackend`]     | AOT Pallas/HLO via PJRT | deployment path (L1/L2 artifacts) |
+//! | [`CpuBackend`]     | pure-Rust `nn`          | the paper's CPU baseline |
+//! | [`FpgaSimBackend`] | cycle-accurate `fpga`   | the paper's accelerator |
+//!
+//! Backends are deliberately **not** `Send` (the PJRT client has thread
+//! affinity); the coordinator builds one per worker thread.
+
+use std::rc::Rc;
+
+use crate::config::{Hyper, NetConfig, Precision};
+use crate::error::Result;
+use crate::fixed::FixedSpec;
+use crate::fpga::datapath::Transition;
+use crate::fpga::{FpgaAccelerator, TimingModel};
+use crate::nn::activation::Activation;
+use crate::nn::params::QNetParams;
+use crate::nn::qupdate::{self, Datapath};
+use crate::runtime::{ArtifactKind, Executor, Runtime};
+
+/// Identifier for constructing backends generically (CLI, sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Xla,
+    Cpu,
+    FpgaSim,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Cpu => "cpu",
+            BackendKind::FpgaSim => "fpga-sim",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(BackendKind::Xla),
+            "cpu" => Ok(BackendKind::Cpu),
+            "fpga" | "fpga-sim" => Ok(BackendKind::FpgaSim),
+            other => Err(crate::error::Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// A Q-function evaluator + learner.
+pub trait QBackend {
+    /// Interface dimensions.
+    fn net(&self) -> &NetConfig;
+
+    /// Short name for logs/tables.
+    fn name(&self) -> String;
+
+    /// Q-values for all A actions of one state ((A, D) row-major input).
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>>;
+
+    /// One Q-update; returns the Q-error (Eq. 8).
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32>;
+
+    /// Current parameters (checkpointing / cross-backend hand-off).
+    fn params(&self) -> QNetParams;
+
+    /// Replace parameters.
+    fn load_params(&mut self, params: &QNetParams);
+
+    /// Apply a *sequence* of transitions in one call, if the backend has a
+    /// fused path (default: loop over `update`). Inputs are flattened
+    /// (B·A·D) with per-step actions/rewards; returns per-step Q-errors.
+    fn update_batch(
+        &mut self,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+    ) -> Result<Vec<f32>> {
+        let step = self.net().a * self.net().d;
+        let mut errs = Vec::with_capacity(actions.len());
+        for i in 0..actions.len() {
+            errs.push(self.update(
+                &sa_cur[i * step..(i + 1) * step],
+                &sa_next[i * step..(i + 1) * step],
+                actions[i],
+                rewards[i],
+            )?);
+        }
+        Ok(errs)
+    }
+
+    /// Preferred flush size for `update_batch` (1 = no fused path).
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------- CPU
+
+/// Pure-Rust reference backend — the paper's CPU baseline.
+pub struct CpuBackend {
+    net: NetConfig,
+    params: QNetParams,
+    hyper: Hyper,
+    dp: Datapath,
+    prec: Precision,
+}
+
+impl CpuBackend {
+    pub fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
+        let fixed = match prec {
+            Precision::Fixed => Some(FixedSpec::default()),
+            Precision::Float => None,
+        };
+        let dp = Datapath::new(fixed, Activation::lut_default(fixed));
+        CpuBackend { net, params, hyper, dp, prec }
+    }
+}
+
+impl QBackend for CpuBackend {
+    fn net(&self) -> &NetConfig {
+        &self.net
+    }
+
+    fn name(&self) -> String {
+        format!("cpu/{}/{}", self.net.name(), self.prec.as_str())
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        qupdate::forward(&self.net, &self.params, sa, &self.dp)
+    }
+
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32> {
+        let out = qupdate::qupdate(
+            &self.net, &self.params, sa_cur, sa_next, action, reward, &self.hyper, &self.dp,
+        )?;
+        self.params = out.params;
+        Ok(out.q_err)
+    }
+
+    fn params(&self) -> QNetParams {
+        self.params.clone()
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        self.params = params.clone();
+    }
+}
+
+// ---------------------------------------------------------------------- XLA
+
+/// Compiled-artifact backend: the deployment path. Holds the forward,
+/// qupdate and train_batch executors for one configuration.
+pub struct XlaBackend {
+    net: NetConfig,
+    prec: Precision,
+    params: QNetParams,
+    forward: Rc<Executor>,
+    qupdate: Rc<Executor>,
+    train_batch: Rc<Executor>,
+}
+
+impl XlaBackend {
+    pub fn new(rt: &Runtime, net: NetConfig, prec: Precision, params: QNetParams) -> Result<Self> {
+        Ok(XlaBackend {
+            forward: rt.select(&net, prec, ArtifactKind::Forward)?,
+            qupdate: rt.select(&net, prec, ArtifactKind::QUpdate)?,
+            train_batch: rt.select(&net, prec, ArtifactKind::TrainBatch)?,
+            net,
+            prec,
+            params,
+        })
+    }
+
+    /// Hyper-parameters are baked into the artifact; expose them.
+    pub fn hyper(&self) -> Hyper {
+        self.qupdate.meta().hyper
+    }
+}
+
+impl QBackend for XlaBackend {
+    fn net(&self) -> &NetConfig {
+        &self.net
+    }
+
+    fn name(&self) -> String {
+        format!("xla/{}/{}", self.net.name(), self.prec.as_str())
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        self.forward.run_forward(&self.params, sa)
+    }
+
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32> {
+        let out = self
+            .qupdate
+            .run_qupdate(&self.params, sa_cur, sa_next, action, reward)?;
+        self.params = out.params;
+        Ok(out.q_err)
+    }
+
+    fn update_batch(
+        &mut self,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = self.train_batch.meta().batch;
+        if actions.len() != b {
+            // fall back to the generic per-step path for ragged tails
+            let step = self.net.a * self.net.d;
+            let mut errs = Vec::with_capacity(actions.len());
+            for i in 0..actions.len() {
+                errs.push(self.update(
+                    &sa_cur[i * step..(i + 1) * step],
+                    &sa_next[i * step..(i + 1) * step],
+                    actions[i],
+                    rewards[i],
+                )?);
+            }
+            return Ok(errs);
+        }
+        let acts: Vec<i32> = actions.iter().map(|&a| a as i32).collect();
+        let (params, errs) =
+            self.train_batch
+                .run_train_batch(&self.params, sa_cur, sa_next, &acts, rewards)?;
+        self.params = params;
+        Ok(errs)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.train_batch.meta().batch
+    }
+
+    fn params(&self) -> QNetParams {
+        self.params.clone()
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        self.params = params.clone();
+    }
+}
+
+// ----------------------------------------------------------------- FPGA sim
+
+/// Cycle-accurate accelerator backend.
+pub struct FpgaSimBackend {
+    acc: FpgaAccelerator,
+}
+
+impl FpgaSimBackend {
+    pub fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
+        FpgaSimBackend { acc: FpgaAccelerator::paper(net, prec, &params, hyper) }
+    }
+
+    pub fn with_timing(
+        net: NetConfig,
+        prec: Precision,
+        params: QNetParams,
+        hyper: Hyper,
+        timing: TimingModel,
+    ) -> Self {
+        FpgaSimBackend { acc: FpgaAccelerator::new(net, prec, &params, hyper, timing) }
+    }
+
+    /// The underlying accelerator (cycle counters, power model hooks).
+    pub fn accelerator(&self) -> &FpgaAccelerator {
+        &self.acc
+    }
+}
+
+impl QBackend for FpgaSimBackend {
+    fn net(&self) -> &NetConfig {
+        self.acc.config()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "fpga-sim/{}/{}",
+            self.acc.config().name(),
+            self.acc.precision().as_str()
+        )
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.acc.forward(sa)?.0)
+    }
+
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32> {
+        let (out, _) = self
+            .acc
+            .qupdate(&Transition { sa_cur, sa_next, action, reward })?;
+        Ok(out.q_err)
+    }
+
+    fn params(&self) -> QNetParams {
+        self.acc.params()
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        self.acc.load_params(params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::util::Rng;
+
+    #[test]
+    fn cpu_and_fpga_sim_track_each_other_float() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut rng = Rng::seeded(21);
+        let params = QNetParams::init(&net, 0.4, &mut rng);
+        let mut cpu = CpuBackend::new(net, Precision::Float, params.clone(), Hyper::default());
+        let mut sim = FpgaSimBackend::new(net, Precision::Float, params, Hyper::default());
+
+        for _ in 0..5 {
+            let sa_cur = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let action = rng.below(net.a);
+            let reward = rng.f32_range(-1.0, 1.0);
+            let e1 = cpu.update(&sa_cur, &sa_next, action, reward).unwrap();
+            let e2 = sim.update(&sa_cur, &sa_next, action, reward).unwrap();
+            assert_eq!(e1, e2); // identical IEEE arithmetic
+        }
+        assert_eq!(cpu.params().max_abs_diff(&sim.params()), 0.0);
+    }
+
+    #[test]
+    fn default_update_batch_equals_sequential() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(22);
+        let params = QNetParams::init(&net, 0.4, &mut rng);
+        let mut a = CpuBackend::new(net, Precision::Float, params.clone(), Hyper::default());
+        let mut b = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+
+        let n = 7;
+        let step = net.a * net.d;
+        let sa_cur = rng.vec_f32(n * step, -1.0, 1.0);
+        let sa_next = rng.vec_f32(n * step, -1.0, 1.0);
+        let actions: Vec<usize> = (0..n).map(|_| rng.below(net.a)).collect();
+        let rewards = rng.vec_f32(n, -1.0, 1.0);
+
+        let batch = a.update_batch(&sa_cur, &sa_next, &actions, &rewards).unwrap();
+        let mut seq = Vec::new();
+        for i in 0..n {
+            seq.push(
+                b.update(
+                    &sa_cur[i * step..(i + 1) * step],
+                    &sa_next[i * step..(i + 1) * step],
+                    actions[i],
+                    rewards[i],
+                )
+                .unwrap(),
+            );
+        }
+        assert_eq!(batch, seq);
+        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("fpga".parse::<BackendKind>().unwrap(), BackendKind::FpgaSim);
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_through_backends() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+        let mut rng = Rng::seeded(23);
+        let params = QNetParams::init(&net, 0.4, &mut rng);
+        let mut cpu = CpuBackend::new(net, Precision::Float, QNetParams::zeros(&net), Hyper::default());
+        cpu.load_params(&params);
+        assert_eq!(cpu.params(), params);
+    }
+}

@@ -1,0 +1,28 @@
+//! Q-learning core (paper Section 2).
+//!
+//! * [`policy`] — action-selection policies (ε-greedy with decay, softmax,
+//!   greedy).
+//! * [`backend`] — the [`backend::QBackend`] trait and its three
+//!   implementations: XLA artifact (PJRT), pure-Rust CPU, FPGA simulator.
+//!   Every experiment in the paper reduces to “drive the same workload
+//!   through a different backend”.
+//! * [`neural`] — the neural Q-learner: feed-forward action selection +
+//!   per-transition Q-updates, with an optional microbatch mode that flushes
+//!   transitions through the scan-chained `train_batch` artifact.
+//! * [`tabular`] — classic Q-table learner (Watkins), the paper-era
+//!   baseline the neural learner is compared against.
+//! * [`trainer`] — episode loop and training statistics.
+//! * [`replay`] — transition buffer backing the microbatch mode.
+
+pub mod backend;
+pub mod neural;
+pub mod policy;
+pub mod replay;
+pub mod tabular;
+pub mod trainer;
+
+pub use backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+pub use neural::NeuralQLearner;
+pub use policy::Policy;
+pub use tabular::TabularQ;
+pub use trainer::{train, EpisodeStats, TrainReport};

@@ -1,0 +1,202 @@
+//! Neural Q-learner: the paper's Section 2 state-flow over a [`QBackend`].
+//!
+//! Per step: (1) feed-forward all A actions of the current state,
+//! (2) select an action via the policy, (3) step the environment,
+//! (4) Q-update from the observed transition (the backend runs both sweeps,
+//! error capture and backprop internally — one “Q-update” in paper terms).
+//!
+//! `batch > 1` enables microbatch mode: transitions accumulate in a FIFO
+//! and flush through `update_batch` (the scan-chained XLA artifact). The
+//! policy then acts on weights that lag by up to `batch − 1` updates — a
+//! throughput/recency trade-off quantified in the `backends` bench.
+
+use crate::env::Environment;
+use crate::error::Result;
+use crate::util::Rng;
+
+use super::backend::QBackend;
+use super::policy::Policy;
+use super::replay::{StoredTransition, TransitionBuffer};
+
+/// Per-step diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutcome {
+    pub action: usize,
+    pub reward: f32,
+    pub done: bool,
+    /// Q-error of the update (None while buffered in microbatch mode).
+    pub q_err: Option<f32>,
+}
+
+/// The learner.
+pub struct NeuralQLearner<B: QBackend> {
+    pub backend: B,
+    pub policy: Policy,
+    batch: usize,
+    buffer: TransitionBuffer,
+    // scratch encodings (no allocation in the step loop)
+    sa_cur: Vec<f32>,
+    sa_next: Vec<f32>,
+    updates: u64,
+    flushes: u64,
+}
+
+impl<B: QBackend> NeuralQLearner<B> {
+    pub fn new(backend: B, policy: Policy) -> Self {
+        let n = backend.net().a * backend.net().d;
+        NeuralQLearner {
+            backend,
+            policy,
+            batch: 1,
+            buffer: TransitionBuffer::new(),
+            sa_cur: vec![0.0; n],
+            sa_next: vec![0.0; n],
+            updates: 0,
+            flushes: 0,
+        }
+    }
+
+    /// Enable microbatch mode with the backend's preferred flush size.
+    pub fn with_microbatch(mut self) -> Self {
+        self.batch = self.backend.preferred_batch().max(1);
+        self
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// One interaction step against `env`.
+    pub fn step(&mut self, env: &mut dyn Environment, rng: &mut Rng) -> Result<StepOutcome> {
+        env.encode_all(&mut self.sa_cur);
+        let q = self.backend.q_values(&self.sa_cur)?;
+        let action = self.policy.select(&q, rng);
+        let result = env.step(action);
+        env.encode_all(&mut self.sa_next);
+
+        let q_err = if self.batch <= 1 {
+            self.updates += 1;
+            Some(self.backend.update(&self.sa_cur, &self.sa_next, action, result.reward)?)
+        } else {
+            self.buffer.push(StoredTransition {
+                sa_cur: self.sa_cur.clone(),
+                sa_next: self.sa_next.clone(),
+                action,
+                reward: result.reward,
+            });
+            if self.buffer.len() >= self.batch {
+                self.flush()?;
+            }
+            None
+        };
+
+        Ok(StepOutcome { action, reward: result.reward, done: result.done, q_err })
+    }
+
+    /// Flush any buffered transitions (microbatch mode). Called
+    /// automatically at batch boundaries and at episode end.
+    pub fn flush(&mut self) -> Result<Vec<f32>> {
+        if self.buffer.is_empty() {
+            return Ok(Vec::new());
+        }
+        let net = *self.backend.net();
+        let mut all_errs = Vec::new();
+        while !self.buffer.is_empty() {
+            let b = self.buffer.drain_flat(self.batch, &net)?;
+            let errs = self.backend.update_batch(&b.sa_cur, &b.sa_next, &b.actions, &b.rewards)?;
+            self.updates += errs.len() as u64;
+            self.flushes += 1;
+            all_errs.extend(errs);
+        }
+        Ok(all_errs)
+    }
+
+    /// End-of-episode housekeeping: flush buffered transitions, decay ε.
+    pub fn end_episode(&mut self) -> Result<()> {
+        self.flush()?;
+        self.policy.end_episode();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Hyper, NetConfig, Precision};
+    use crate::env::SimpleRoverEnv;
+    use crate::nn::params::QNetParams;
+    use crate::qlearn::backend::CpuBackend;
+
+    fn learner(policy: Policy) -> NeuralQLearner<CpuBackend> {
+        let env = SimpleRoverEnv::new(1);
+        let net = NetConfig { a: env.n_actions(), d: env.d(), ..env.net_config() };
+        let mut rng = Rng::seeded(31);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        NeuralQLearner::new(
+            CpuBackend::new(net, Precision::Float, params, Hyper::default()),
+            policy,
+        )
+    }
+
+    #[test]
+    fn steps_produce_updates() {
+        let mut env = SimpleRoverEnv::new(1);
+        let mut l = learner(Policy::default_training());
+        let mut rng = Rng::seeded(32);
+        for _ in 0..10 {
+            let out = l.step(&mut env, &mut rng).unwrap();
+            assert!(out.q_err.is_some());
+            if out.done {
+                break;
+            }
+        }
+        assert!(l.updates() > 0);
+    }
+
+    #[test]
+    fn episode_end_decays_epsilon() {
+        let mut l = learner(Policy::EpsilonGreedy { eps: 0.5, decay: 0.5, min: 0.0 });
+        l.end_episode().unwrap();
+        assert_eq!(l.policy.epsilon(), 0.25);
+    }
+
+    #[test]
+    fn microbatch_defers_updates_then_flushes() {
+        let mut env = SimpleRoverEnv::new(2);
+        let mut l = learner(Policy::default_training());
+        l.batch = 4; // CpuBackend has no fused path; force buffering
+        let mut rng = Rng::seeded(33);
+        for i in 0..3 {
+            let out = l.step(&mut env, &mut rng).unwrap();
+            assert!(out.q_err.is_none(), "step {i} updated early");
+            assert!(!out.done);
+        }
+        assert_eq!(l.updates(), 0);
+        let out = l.step(&mut env, &mut rng).unwrap();
+        assert!(out.q_err.is_none()); // errors come back via the flush
+        assert_eq!(l.updates(), 4);
+        assert_eq!(l.flushes(), 1);
+    }
+
+    #[test]
+    fn end_episode_flushes_partial_batch() {
+        let mut env = SimpleRoverEnv::new(3);
+        let mut l = learner(Policy::default_training());
+        l.batch = 8;
+        let mut rng = Rng::seeded(34);
+        for _ in 0..3 {
+            l.step(&mut env, &mut rng).unwrap();
+        }
+        assert_eq!(l.updates(), 0);
+        l.end_episode().unwrap();
+        assert_eq!(l.updates(), 3);
+    }
+}

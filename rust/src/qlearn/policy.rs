@@ -1,0 +1,142 @@
+//! Action-selection policies over Q-values (paper Eq. 2: the action policy
+//! picks the argmax; exploration policies wrap it).
+
+use crate::util::Rng;
+
+/// Exploration policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// Always the argmax (Eq. 2).
+    Greedy,
+    /// With probability ε explore uniformly; ε decays multiplicatively per
+    /// episode to `min`.
+    EpsilonGreedy { eps: f32, decay: f32, min: f32 },
+    /// Boltzmann exploration with temperature τ.
+    Softmax { temp: f32 },
+}
+
+impl Policy {
+    /// Standard training policy: ε 0.3 → 0.02, decay 0.995.
+    pub fn default_training() -> Policy {
+        Policy::EpsilonGreedy { eps: 0.3, decay: 0.995, min: 0.02 }
+    }
+
+    /// Pick an action given Q-values.
+    pub fn select(&self, q: &[f32], rng: &mut Rng) -> usize {
+        debug_assert!(!q.is_empty());
+        match self {
+            Policy::Greedy => argmax(q),
+            Policy::EpsilonGreedy { eps, .. } => {
+                if rng.f32() < *eps {
+                    rng.below(q.len())
+                } else {
+                    argmax(q)
+                }
+            }
+            Policy::Softmax { temp } => {
+                let t = temp.max(1e-6);
+                let m = q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f32> = q.iter().map(|&v| ((v - m) / t).exp()).collect();
+                let total: f32 = weights.iter().sum();
+                let mut x = rng.f32() * total;
+                for (i, w) in weights.iter().enumerate() {
+                    x -= w;
+                    if x <= 0.0 {
+                        return i;
+                    }
+                }
+                q.len() - 1
+            }
+        }
+    }
+
+    /// Per-episode decay (ε-greedy only).
+    pub fn end_episode(&mut self) {
+        if let Policy::EpsilonGreedy { eps, decay, min } = self {
+            *eps = (*eps * *decay).max(*min);
+        }
+    }
+
+    /// Current exploration rate (for telemetry).
+    pub fn epsilon(&self) -> f32 {
+        match self {
+            Policy::Greedy => 0.0,
+            Policy::EpsilonGreedy { eps, .. } => *eps,
+            Policy::Softmax { temp } => *temp,
+        }
+    }
+}
+
+/// First-max argmax (matches the fixed-datapath comparator chain).
+pub fn argmax(q: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in q.iter().enumerate() {
+        if *v > q[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let mut rng = Rng::seeded(1);
+        let q = [0.1, 0.9, 0.5];
+        for _ in 0..10 {
+            assert_eq!(Policy::Greedy.select(&q, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn epsilon_explores_and_decays() {
+        let mut rng = Rng::seeded(2);
+        let mut p = Policy::EpsilonGreedy { eps: 1.0, decay: 0.5, min: 0.1 };
+        let q = [1.0, 0.0, 0.0, 0.0];
+        let picks: Vec<usize> = (0..200).map(|_| p.select(&q, &mut rng)).collect();
+        // ε = 1: uniform → all arms visited
+        for a in 0..4 {
+            assert!(picks.contains(&a), "arm {a} never explored");
+        }
+        for _ in 0..10 {
+            p.end_episode();
+        }
+        assert_eq!(p.epsilon(), 0.1); // clamped at min
+    }
+
+    #[test]
+    fn epsilon_zero_is_greedy() {
+        let mut rng = Rng::seeded(3);
+        let p = Policy::EpsilonGreedy { eps: 0.0, decay: 1.0, min: 0.0 };
+        let q = [0.0, 0.0, 0.7];
+        for _ in 0..50 {
+            assert_eq!(p.select(&q, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn softmax_prefers_higher_q() {
+        let mut rng = Rng::seeded(4);
+        let p = Policy::Softmax { temp: 0.1 };
+        let q = [0.0, 1.0];
+        let n1 = (0..1000).filter(|_| p.select(&q, &mut rng) == 1).count();
+        assert!(n1 > 950, "{n1}");
+    }
+
+    #[test]
+    fn softmax_high_temp_is_near_uniform() {
+        let mut rng = Rng::seeded(5);
+        let p = Policy::Softmax { temp: 100.0 };
+        let q = [0.0, 1.0];
+        let n1 = (0..2000).filter(|_| p.select(&q, &mut rng) == 1).count();
+        assert!((800..1200).contains(&n1), "{n1}");
+    }
+
+    #[test]
+    fn argmax_first_wins_ties() {
+        assert_eq!(argmax(&[0.5, 0.5, 0.1]), 0);
+    }
+}

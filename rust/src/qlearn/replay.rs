@@ -1,0 +1,138 @@
+//! Transition buffer backing the microbatch training mode.
+//!
+//! The scan-chained `train_batch` artifact applies B sequential Q-updates in
+//! one XLA call, amortizing dispatch overhead. The learner accumulates
+//! encoded transitions here and flushes whenever `len() == batch`.
+//! (Unlike DQN-style replay this buffer is FIFO and consumed in order — the
+//! paper's algorithm is strictly online.)
+
+use crate::config::NetConfig;
+use crate::error::{Error, Result};
+
+/// One encoded transition.
+#[derive(Debug, Clone)]
+pub struct StoredTransition {
+    pub sa_cur: Vec<f32>,
+    pub sa_next: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+}
+
+/// FIFO transition accumulator with flat-buffer drain.
+#[derive(Debug, Default)]
+pub struct TransitionBuffer {
+    items: Vec<StoredTransition>,
+}
+
+impl TransitionBuffer {
+    pub fn new() -> Self {
+        TransitionBuffer { items: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push(&mut self, t: StoredTransition) {
+        self.items.push(t);
+    }
+
+    /// Drain up to `n` transitions into flat (B·A·D) buffers.
+    pub fn drain_flat(&mut self, n: usize, net: &NetConfig) -> Result<FlatBatch> {
+        let take = n.min(self.items.len());
+        let step = net.a * net.d;
+        let mut out = FlatBatch {
+            sa_cur: Vec::with_capacity(take * step),
+            sa_next: Vec::with_capacity(take * step),
+            actions: Vec::with_capacity(take),
+            rewards: Vec::with_capacity(take),
+        };
+        for t in self.items.drain(..take) {
+            if t.sa_cur.len() != step || t.sa_next.len() != step {
+                return Err(Error::interface("stored transition has wrong encoding size"));
+            }
+            out.sa_cur.extend_from_slice(&t.sa_cur);
+            out.sa_next.extend_from_slice(&t.sa_next);
+            out.actions.push(t.action);
+            out.rewards.push(t.reward);
+        }
+        Ok(out)
+    }
+}
+
+/// Flattened batch ready for `QBackend::update_batch`.
+#[derive(Debug, Clone)]
+pub struct FlatBatch {
+    pub sa_cur: Vec<f32>,
+    pub sa_next: Vec<f32>,
+    pub actions: Vec<usize>,
+    pub rewards: Vec<f32>,
+}
+
+impl FlatBatch {
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+
+    fn tr(v: f32, net: &NetConfig) -> StoredTransition {
+        StoredTransition {
+            sa_cur: vec![v; net.a * net.d],
+            sa_next: vec![-v; net.a * net.d],
+            action: 1,
+            reward: v,
+        }
+    }
+
+    #[test]
+    fn drain_preserves_order_and_layout() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut buf = TransitionBuffer::new();
+        for i in 0..5 {
+            buf.push(tr(i as f32, &net));
+        }
+        let batch = buf.drain_flat(3, &net).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(batch.rewards, vec![0.0, 1.0, 2.0]);
+        let step = net.a * net.d;
+        assert_eq!(batch.sa_cur.len(), 3 * step);
+        assert_eq!(batch.sa_cur[step], 1.0); // second transition's block
+    }
+
+    #[test]
+    fn drain_more_than_available() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut buf = TransitionBuffer::new();
+        buf.push(tr(1.0, &net));
+        let batch = buf.drain_flat(10, &net).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_transitions() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut buf = TransitionBuffer::new();
+        buf.push(StoredTransition {
+            sa_cur: vec![0.0; 3],
+            sa_next: vec![0.0; 3],
+            action: 0,
+            reward: 0.0,
+        });
+        assert!(buf.drain_flat(1, &net).is_err());
+    }
+}

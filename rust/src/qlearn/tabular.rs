@@ -1,0 +1,210 @@
+//! Tabular Q-learning (Watkins & Dayan 1992, the paper's reference [1]) —
+//! the baseline the neural accelerator replaces.
+//!
+//! “Q-learning with neural networks eliminates the usage of the Q-table as
+//! the neural network acts as a Q-function solver” (paper Section 2). The
+//! table is kept here as the algorithmic baseline: it converges on small
+//! state spaces but needs |S|·A storage (1800·40 words for the complex
+//! environment) and generalizes not at all — the motivation for the NN.
+
+use crate::env::Environment;
+use crate::util::Rng;
+
+use super::policy::Policy;
+
+/// Dense Q-table learner.
+#[derive(Debug, Clone)]
+pub struct TabularQ {
+    q: Vec<f32>,
+    n_states: usize,
+    n_actions: usize,
+    pub alpha: f32,
+    pub gamma: f32,
+    pub policy: Policy,
+}
+
+impl TabularQ {
+    pub fn new(n_states: usize, n_actions: usize, alpha: f32, gamma: f32, policy: Policy) -> Self {
+        TabularQ {
+            q: vec![0.0; n_states * n_actions],
+            n_states,
+            n_actions,
+            alpha,
+            gamma,
+            policy,
+        }
+    }
+
+    /// Table sized for an environment.
+    pub fn for_env(env: &dyn Environment, alpha: f32, gamma: f32, policy: Policy) -> Self {
+        Self::new(env.state_space(), env.n_actions(), alpha, gamma, policy)
+    }
+
+    #[inline]
+    pub fn q(&self, s: usize, a: usize) -> f32 {
+        debug_assert!(s < self.n_states && a < self.n_actions);
+        self.q[s * self.n_actions + a]
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    /// Q-values of all actions in a state.
+    pub fn q_row(&self, s: usize) -> &[f32] {
+        &self.q[s * self.n_actions..(s + 1) * self.n_actions]
+    }
+
+    /// Memory footprint in bytes (for the DESIGN.md storage comparison).
+    pub fn table_bytes(&self) -> usize {
+        self.q.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Eq. 4: Q(s,a) += α·(r + γ·max_a′ Q(s′,a′) − Q(s,a)).
+    pub fn update(&mut self, s: usize, a: usize, reward: f32, s_next: usize, done: bool) -> f32 {
+        let q_next_max = if done {
+            0.0
+        } else {
+            self.q_row(s_next).iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        };
+        let idx = s * self.n_actions + a;
+        let err = self.alpha * (reward + self.gamma * q_next_max - self.q[idx]);
+        self.q[idx] += err;
+        err
+    }
+
+    /// One interaction step; returns (reward, done).
+    pub fn step(&mut self, env: &mut dyn Environment, rng: &mut Rng) -> (f32, bool) {
+        let s = env.state_id();
+        let action = self.policy.select(self.q_row(s), rng);
+        let r = env.step(action);
+        let s2 = env.state_id();
+        self.update(s, action, r.reward, s2, r.done);
+        (r.reward, r.done)
+    }
+
+    /// Train for `episodes`; returns total reward per episode.
+    pub fn train(&mut self, env: &mut dyn Environment, episodes: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(episodes);
+        for _ in 0..episodes {
+            env.reset();
+            let mut total = 0.0;
+            while !env.is_done() {
+                let (r, done) = self.step(env, rng);
+                total += r;
+                if done {
+                    break;
+                }
+            }
+            self.policy.end_episode();
+            out.push(total);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::SimpleRoverEnv;
+
+    /// A deterministic 4-state chain: action 1 advances (reward 0, final
+    /// +1), action 0 stays (reward 0). Optimal Q fits in closed form.
+    struct Chain {
+        s: usize,
+        done: bool,
+    }
+
+    impl Environment for Chain {
+        fn net_config(&self) -> crate::config::NetConfig {
+            let mut c = crate::config::NetConfig::new(
+                crate::config::Arch::Perceptron,
+                crate::config::EnvKind::Simple,
+            );
+            c.a = 2;
+            c.d = 2;
+            c
+        }
+        fn state_space(&self) -> usize {
+            4
+        }
+        fn state_id(&self) -> usize {
+            self.s
+        }
+        fn reset(&mut self) {
+            self.s = 0;
+            self.done = false;
+        }
+        fn encode_sa(&self, _a: usize, out: &mut [f32]) {
+            out.fill(0.0);
+        }
+        fn step(&mut self, action: usize) -> crate::env::StepResult {
+            if action == 1 {
+                self.s += 1;
+            }
+            if self.s == 3 {
+                self.done = true;
+                return crate::env::StepResult { reward: 1.0, done: true };
+            }
+            crate::env::StepResult { reward: 0.0, done: false }
+        }
+        fn is_done(&self) -> bool {
+            self.done
+        }
+        fn name(&self) -> &'static str {
+            "chain"
+        }
+    }
+
+    #[test]
+    fn converges_on_chain() {
+        let mut env = Chain { s: 0, done: false };
+        let mut t = TabularQ::new(4, 2, 0.5, 0.9, Policy::EpsilonGreedy {
+            eps: 0.3,
+            decay: 0.99,
+            min: 0.05,
+        });
+        let mut rng = Rng::seeded(41);
+        t.train(&mut env, 300, &mut rng);
+        // optimal: Q(s, advance) = γ^(2-s); Q(2,1) = 1
+        assert!((t.q(2, 1) - 1.0).abs() < 0.05, "{}", t.q(2, 1));
+        assert!((t.q(1, 1) - 0.9).abs() < 0.1, "{}", t.q(1, 1));
+        assert!(t.q(0, 1) > t.q(0, 0), "advance must beat stay");
+    }
+
+    #[test]
+    fn update_is_eq4() {
+        let mut t = TabularQ::new(2, 2, 0.5, 0.9, Policy::Greedy);
+        t.q[2] = 1.0; // Q(1, 0)
+        let err = t.update(0, 0, 0.5, 1, false);
+        // err = 0.5*(0.5 + 0.9*1.0 - 0) = 0.7
+        assert!((err - 0.7).abs() < 1e-6);
+        assert!((t.q(0, 0) - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_update_ignores_next_state() {
+        let mut t = TabularQ::new(2, 2, 1.0, 0.9, Policy::Greedy);
+        t.q[2] = 100.0;
+        t.update(0, 0, 1.0, 1, true);
+        assert!((t.q(0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn learns_something_on_simple_rover() {
+        let mut env = SimpleRoverEnv::new(5);
+        let mut t = TabularQ::for_env(&env, 0.3, 0.9, Policy::default_training());
+        let mut rng = Rng::seeded(42);
+        let rewards = t.train(&mut env, 120, &mut rng);
+        let early: f32 = rewards[..30].iter().sum::<f32>() / 30.0;
+        let late: f32 = rewards[rewards.len() - 30..].iter().sum::<f32>() / 30.0;
+        assert!(late >= early - 0.5, "late {late} much worse than early {early}");
+    }
+
+    #[test]
+    fn table_size_matches_complex_env_spec() {
+        // paper: |S| = 1800, A = 40
+        let t = TabularQ::new(1800, 40, 0.5, 0.9, Policy::Greedy);
+        assert_eq!(t.table_bytes(), 1800 * 40 * 4);
+    }
+}

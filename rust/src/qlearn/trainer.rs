@@ -1,0 +1,177 @@
+//! Episode loop + training statistics for the neural learner.
+
+use std::time::Instant;
+
+use crate::env::Environment;
+use crate::error::Result;
+use crate::util::Rng;
+
+use super::backend::QBackend;
+use super::neural::NeuralQLearner;
+
+/// Statistics of one episode.
+#[derive(Debug, Clone, Copy)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub steps: usize,
+    pub total_reward: f32,
+    pub mean_abs_q_err: f32,
+    pub epsilon: f32,
+}
+
+/// Full training run report.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub episodes: Vec<EpisodeStats>,
+    pub total_steps: usize,
+    pub total_updates: u64,
+    pub wall_seconds: f64,
+    pub backend_name: String,
+}
+
+impl TrainReport {
+    /// Moving average of episode reward (window `w`).
+    pub fn reward_curve(&self, w: usize) -> Vec<f32> {
+        moving_avg(&self.episodes.iter().map(|e| e.total_reward).collect::<Vec<_>>(), w)
+    }
+
+    /// Mean reward over the first / last `n` episodes — the learning signal.
+    pub fn first_last_mean_reward(&self, n: usize) -> (f32, f32) {
+        let rewards: Vec<f32> = self.episodes.iter().map(|e| e.total_reward).collect();
+        let n = n.min(rewards.len());
+        let first = rewards[..n].iter().sum::<f32>() / n as f32;
+        let last = rewards[rewards.len() - n..].iter().sum::<f32>() / n as f32;
+        (first, last)
+    }
+
+    /// Q-updates per second achieved during training (end-to-end, including
+    /// the environment) — comparable across backends.
+    pub fn updates_per_second(&self) -> f64 {
+        self.total_updates as f64 / self.wall_seconds.max(1e-9)
+    }
+}
+
+fn moving_avg(xs: &[f32], w: usize) -> Vec<f32> {
+    let w = w.max(1);
+    xs.iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let lo = i.saturating_sub(w - 1);
+            xs[lo..=i].iter().sum::<f32>() / (i - lo + 1) as f32
+        })
+        .collect()
+}
+
+/// Train `learner` on `env` for `episodes` episodes, capping episodes at
+/// `max_steps` interaction steps.
+pub fn train<B: QBackend>(
+    learner: &mut NeuralQLearner<B>,
+    env: &mut dyn Environment,
+    episodes: usize,
+    max_steps: usize,
+    rng: &mut Rng,
+) -> Result<TrainReport> {
+    let start = Instant::now();
+    let mut stats = Vec::with_capacity(episodes);
+    let mut total_steps = 0usize;
+
+    for episode in 0..episodes {
+        env.reset();
+        let mut total_reward = 0f32;
+        let mut err_sum = 0f32;
+        let mut err_n = 0usize;
+        let mut steps = 0usize;
+
+        while !env.is_done() && steps < max_steps {
+            let out = learner.step(env, rng)?;
+            total_reward += out.reward;
+            if let Some(e) = out.q_err {
+                err_sum += e.abs();
+                err_n += 1;
+            }
+            steps += 1;
+            if out.done {
+                break;
+            }
+        }
+        learner.end_episode()?;
+        total_steps += steps;
+        stats.push(EpisodeStats {
+            episode,
+            steps,
+            total_reward,
+            mean_abs_q_err: if err_n > 0 { err_sum / err_n as f32 } else { 0.0 },
+            epsilon: learner.policy.epsilon(),
+        });
+    }
+
+    Ok(TrainReport {
+        backend_name: learner.backend.name(),
+        episodes: stats,
+        total_steps,
+        total_updates: learner.updates(),
+        wall_seconds: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Hyper, Precision};
+    use crate::env::SimpleRoverEnv;
+    use crate::nn::params::QNetParams;
+    use crate::qlearn::backend::CpuBackend;
+    use crate::qlearn::policy::Policy;
+
+    fn quick_train(episodes: usize, seed: u64) -> TrainReport {
+        let mut env = SimpleRoverEnv::new(seed);
+        let net = env.net_config();
+        let mut rng = Rng::seeded(seed);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        let backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let mut learner = NeuralQLearner::new(backend, Policy::default_training());
+        train(&mut learner, &mut env, episodes, 100, &mut rng).unwrap()
+    }
+
+    #[test]
+    fn report_accounts_all_episodes_and_steps() {
+        let r = quick_train(10, 51);
+        assert_eq!(r.episodes.len(), 10);
+        assert_eq!(r.total_steps, r.episodes.iter().map(|e| e.steps).sum::<usize>());
+        assert_eq!(r.total_updates as usize, r.total_steps); // batch=1
+        assert!(r.wall_seconds > 0.0);
+        assert!(r.updates_per_second() > 0.0);
+    }
+
+    #[test]
+    fn epsilon_decays_across_episodes() {
+        let r = quick_train(20, 52);
+        assert!(r.episodes.last().unwrap().epsilon < r.episodes[0].epsilon);
+    }
+
+    #[test]
+    fn reward_curve_windows() {
+        let r = quick_train(8, 53);
+        let c = r.reward_curve(3);
+        assert_eq!(c.len(), 8);
+        // first entry is just the first reward
+        assert!((c[0] - r.episodes[0].total_reward).abs() < 1e-6);
+    }
+
+    #[test]
+    fn moving_avg_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let m = moving_avg(&xs, 2);
+        assert_eq!(m, vec![1.0, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let a = quick_train(5, 54);
+        let b = quick_train(5, 54);
+        for (x, y) in a.episodes.iter().zip(&b.episodes) {
+            assert_eq!(x.total_reward, y.total_reward);
+            assert_eq!(x.steps, y.steps);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Table data model + plain-text rendering.
+
+use std::fmt;
+
+/// One table row: our value vs the paper's.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub label: String,
+    pub ours: f64,
+    /// The paper's published value, if it reports one for this row.
+    pub paper: Option<f64>,
+}
+
+impl TableRow {
+    pub fn new(label: impl Into<String>, ours: f64, paper: Option<f64>) -> TableRow {
+        TableRow { label: label.into(), ours, paper }
+    }
+
+    /// ours / paper (reproduction ratio; 1.0 = exact).
+    pub fn ratio(&self) -> Option<f64> {
+        self.paper.map(|p| self.ours / p)
+    }
+}
+
+/// A regenerated paper table.
+#[derive(Debug, Clone)]
+pub struct PaperTable {
+    /// Experiment id from DESIGN.md (e.g. "T3").
+    pub id: &'static str,
+    pub title: String,
+    /// Unit of the value column.
+    pub unit: &'static str,
+    pub rows: Vec<TableRow>,
+    /// Methodology / discrepancy notes printed under the table.
+    pub notes: Vec<String>,
+}
+
+impl PaperTable {
+    pub fn new(id: &'static str, title: impl Into<String>, unit: &'static str) -> PaperTable {
+        PaperTable { id, title: title.into(), unit, rows: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn row(mut self, label: impl Into<String>, ours: f64, paper: Option<f64>) -> Self {
+        self.rows.push(TableRow::new(label, ours, paper));
+        self
+    }
+
+    pub fn note(mut self, n: impl Into<String>) -> Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    /// Worst |log-ratio| across rows with paper values — the headline
+    /// reproduction-quality scalar for EXPERIMENTS.md.
+    pub fn worst_ratio(&self) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter_map(TableRow::ratio)
+            .map(|r| if r >= 1.0 { r } else { 1.0 / r })
+            .fold(None, |acc, r| Some(acc.map_or(r, |a: f64| a.max(r))))
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+impl fmt::Display for PaperTable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "[{}] {}", self.id, self.title)?;
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .max()
+            .unwrap_or(10)
+            .max(12);
+        writeln!(
+            f,
+            "  {:<label_w$}  {:>12}  {:>12}  {:>7}",
+            "row",
+            format!("ours ({})", self.unit),
+            "paper",
+            "ratio"
+        )?;
+        writeln!(f, "  {:-<label_w$}  {:->12}  {:->12}  {:->7}", "", "", "", "")?;
+        for r in &self.rows {
+            let paper = r.paper.map(fmt_value).unwrap_or_else(|| "—".into());
+            let ratio = r
+                .ratio()
+                .map(|x| format!("{x:.2}×"))
+                .unwrap_or_else(|| "—".into());
+            writeln!(
+                f,
+                "  {:<label_w$}  {:>12}  {:>12}  {:>7}",
+                r.label,
+                fmt_value(r.ours),
+                paper,
+                ratio
+            )?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_worst() {
+        let t = PaperTable::new("T0", "test", "µs")
+            .row("a", 2.0, Some(1.0))
+            .row("b", 0.5, Some(1.0))
+            .row("c", 1.0, None);
+        assert_eq!(t.rows[0].ratio(), Some(2.0));
+        assert_eq!(t.worst_ratio(), Some(2.0)); // both a and b are 2× off
+    }
+
+    #[test]
+    fn renders_all_rows_and_notes() {
+        let t = PaperTable::new("T1", "Throughput", "kQ/s")
+            .row("fixed simple", 3488.0, Some(2340.0))
+            .note("paper quotes A=9");
+        let s = t.to_string();
+        assert!(s.contains("fixed simple"));
+        assert!(s.contains("note: paper quotes A=9"));
+        assert!(s.contains("1.49×"));
+    }
+
+    #[test]
+    fn empty_paper_prints_dash() {
+        let t = PaperTable::new("T2", "x", "u").row("only-ours", 1.0, None);
+        assert!(t.to_string().contains("—"));
+        assert_eq!(t.worst_ratio(), None);
+    }
+}

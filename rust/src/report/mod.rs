@@ -1,0 +1,15 @@
+//! Paper-table regeneration (Tables 1–8, headline claims, ablations).
+//!
+//! Each generator returns a [`PaperTable`] carrying our value, the paper's
+//! published value and their ratio, so every claim is checkable at a
+//! glance. `qfpga report` prints them; `cargo bench --bench paper_tables`
+//! regenerates the measured rows; EXPERIMENTS.md records the outcome.
+
+pub mod format;
+pub mod tables;
+
+pub use format::{PaperTable, TableRow};
+pub use tables::{
+    ablation_lut_rom, ablation_pipelining, ablation_wordlen, energy_table, headline, table1,
+    table2, table_completion, table_power, CompletionInputs,
+};

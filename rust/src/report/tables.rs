@@ -1,0 +1,362 @@
+//! Generators for every table/claim in the paper's evaluation (Section 5),
+//! plus the ablations called out in DESIGN.md (X1–X3).
+
+use crate::config::{Arch, EnvKind, NetConfig, Precision};
+use crate::fixed::FixedSpec;
+use crate::fpga::area::check_fit;
+use crate::fpga::power::{energy_per_update_uj, power_w, PowerCoeffs};
+use crate::fpga::{TimingModel, Virtex7};
+use crate::nn::activation::{LutSpec, SigmoidLut};
+
+use super::format::PaperTable;
+
+fn model() -> (TimingModel, Virtex7) {
+    (TimingModel::default(), Virtex7::default())
+}
+
+// ------------------------------------------------------------- Tables 1 & 2
+
+/// Table 1: single-neuron (perceptron) throughput.
+pub fn table1() -> PaperTable {
+    let (t, dev) = model();
+    let simple = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+    let mut a9 = simple;
+    a9.a = 9;
+    let complex = NetConfig::new(Arch::Perceptron, EnvKind::Complex);
+
+    PaperTable::new("T1", "Perceptron throughput (Table 1)", "kQ/s")
+        .row(
+            "fixed simple (A=6)",
+            t.throughput_kq_s(&simple, Precision::Fixed, &dev),
+            None,
+        )
+        .row(
+            "fixed simple (A=9, paper's anchor)",
+            t.throughput_kq_s(&a9, Precision::Fixed, &dev),
+            Some(2340.0),
+        )
+        .row(
+            "float simple",
+            t.throughput_kq_s(&simple, Precision::Float, &dev),
+            Some(290.0),
+        )
+        .row(
+            "fixed complex (A=40)",
+            t.throughput_kq_s(&complex, Precision::Fixed, &dev),
+            Some(530.0),
+        )
+        .row(
+            "float complex",
+            t.throughput_kq_s(&complex, Precision::Float, &dev),
+            Some(10.0),
+        )
+        .note("paper's 2.34 MQ/s quote is self-consistent only with A=9 (7·9+1=64 cycles \
+               @150 MHz), while Section 5 defines the simple env with A=6 — both rows shown")
+}
+
+/// Table 2: MLP throughput.
+pub fn table2() -> PaperTable {
+    let (t, dev) = model();
+    let simple = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+    let complex = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+
+    PaperTable::new("T2", "MLP throughput (Table 2)", "kQ/s")
+        .row(
+            "fixed simple",
+            t.throughput_kq_s(&simple, Precision::Fixed, &dev),
+            Some(1060.0),
+        )
+        .row(
+            "float simple",
+            t.throughput_kq_s(&simple, Precision::Float, &dev),
+            Some(745.0),
+        )
+        .row(
+            "fixed complex",
+            t.throughput_kq_s(&complex, Precision::Fixed, &dev),
+            Some(247.0),
+        )
+        .row(
+            "float complex",
+            t.throughput_kq_s(&complex, Precision::Float, &dev),
+            Some(9.0),
+        )
+        .note("the paper's own Tables 2 and 5 disagree: 745 kQ/s (Table 2) implies 1.3 µs \
+               per update, but Table 5 reports 13 µs (≈77 kQ/s) for the same float simple \
+               MLP; our structural model reproduces the Table 5 figure")
+}
+
+// --------------------------------------------------------------- Tables 3–6
+
+/// Inputs for a completion-time table: the measured host-CPU latency (µs)
+/// and the paper's CPU constant (µs).
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionInputs {
+    /// Median per-update latency measured on this host (float CPU backend),
+    /// µs. `None` prints the model-only rows.
+    pub measured_cpu_us: Option<f64>,
+}
+
+/// Paper constants for Tables 3–6.
+fn paper_completion(arch: Arch, env: EnvKind) -> (f64, f64, f64) {
+    // (fixed µs, float µs, cpu µs)
+    match (arch, env) {
+        (Arch::Perceptron, EnvKind::Simple) => (0.4, 7.7, 20.0),
+        (Arch::Perceptron, EnvKind::Complex) => (1.8, 102.0, 172.0),
+        (Arch::Mlp, EnvKind::Simple) => (0.9, 13.0, 20.0),
+        (Arch::Mlp, EnvKind::Complex) => (4.0, 107.0, 172.0),
+    }
+}
+
+fn completion_id(arch: Arch, env: EnvKind) -> (&'static str, &'static str) {
+    match (arch, env) {
+        (Arch::Perceptron, EnvKind::Simple) => ("T3", "Simple neuron (Table 3)"),
+        (Arch::Perceptron, EnvKind::Complex) => ("T4", "Complex neuron (Table 4)"),
+        (Arch::Mlp, EnvKind::Simple) => ("T5", "Simple MLP (Table 5)"),
+        (Arch::Mlp, EnvKind::Complex) => ("T6", "Complex MLP (Table 6)"),
+    }
+}
+
+/// Tables 3–6: completion time per Q-update + advantage over CPU.
+pub fn table_completion(arch: Arch, env: EnvKind, inputs: CompletionInputs) -> PaperTable {
+    let (t, dev) = model();
+    let net = NetConfig::new(arch, env);
+    let (id, title) = completion_id(arch, env);
+    let (paper_fx, paper_fp, paper_cpu) = paper_completion(arch, env);
+
+    let fx = t.completion_us(&net, Precision::Fixed, &dev);
+    let fp = t.completion_us(&net, Precision::Float, &dev);
+
+    let mut table = PaperTable::new(id, title, "µs")
+        .row("FPGA Virtex-7, fixed (model)", fx, Some(paper_fx))
+        .row("FPGA Virtex-7, floating (model)", fp, Some(paper_fp))
+        .row("CPU (paper's i5 2.3 GHz)", paper_cpu, Some(paper_cpu))
+        // the paper's Advantage column, with its own CPU baseline
+        .row("advantage: fixed vs paper CPU", paper_cpu / fx, Some(paper_cpu / paper_fx))
+        .row("advantage: float vs paper CPU", paper_cpu / fp, Some(paper_cpu / paper_fp));
+
+    if let Some(cpu) = inputs.measured_cpu_us {
+        // this host is a ~2020s core, far faster than the 2017 i5 — shown
+        // without a paper ratio (different baselines are not comparable)
+        table = table
+            .row("CPU (this host, measured)", cpu, None)
+            .row("advantage: fixed vs host CPU", cpu / fx, None);
+    }
+    table.note("FPGA rows from the structural cycle model at 150 MHz; the paper's FPGA \
+                numbers are likewise simulation-derived (Xilinx tools)")
+}
+
+// --------------------------------------------------------------- Tables 7–8
+
+/// Tables 7 (simple MLP) and 8 (complex MLP): power at 150 MHz.
+pub fn table_power(env: EnvKind) -> PaperTable {
+    let coeffs = PowerCoeffs::default();
+    let net = NetConfig::new(Arch::Mlp, env);
+    let (id, title, paper_fx, paper_fp) = match env {
+        EnvKind::Simple => ("T7", "Power, simple MLP (Table 7)", 5.6, 7.1),
+        EnvKind::Complex => ("T8", "Power, complex MLP (Table 8)", 7.1, 10.0),
+    };
+    let fx = power_w(&net, Precision::Fixed, &coeffs);
+    let fp = power_w(&net, Precision::Float, &coeffs);
+    let dev = Virtex7::default();
+    let u_fx = check_fit(&net, Precision::Fixed, &dev).map(|u| u.max_fraction()).unwrap_or(1.0);
+    let u_fp = check_fit(&net, Precision::Float, &dev).map(|u| u.max_fraction()).unwrap_or(1.0);
+
+    PaperTable::new(id, title, "W")
+        .row("FPGA Virtex-7, fixed", fx, Some(paper_fx))
+        .row("FPGA Virtex-7, floating", fp, Some(paper_fp))
+        .row("advantage (float/fixed)", fp / fx, Some(paper_fp / paper_fx))
+        .note(format!(
+            "device utilization: fixed {:.1}%, float {:.1}% of the 485T \
+             (coefficients calibrated per fpga::power docs)",
+            u_fx * 100.0,
+            u_fp * 100.0
+        ))
+}
+
+/// Energy per Q-update — “the energy values is what that is most useful
+/// for comparisons” (paper Section 5, which could not measure it on real
+/// hardware; the model can).
+pub fn energy_table() -> PaperTable {
+    let coeffs = PowerCoeffs::default();
+    let (t, dev) = model();
+    let mut table = PaperTable::new(
+        "E1",
+        "Energy per Q-update (paper Section 5's preferred metric)",
+        "µJ",
+    );
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let e = energy_per_update_uj(&net, prec, &coeffs, &t, &dev);
+            table = table.row(format!("{} {}", net.name(), prec.as_str()), e, None);
+        }
+    }
+    table.note("power model × modeled completion time; fixed point wins both factors, \
+                so its energy advantage exceeds its speed advantage")
+}
+
+// ----------------------------------------------------------------- headline
+
+/// H1: the abstract's speedup claims (“up to 43-fold [MLP] / 95-fold
+/// [neuron] … compared to a conventional Intel i5 2.3 GHz CPU”).
+pub fn headline() -> PaperTable {
+    let (t, dev) = model();
+    let neuron = NetConfig::new(Arch::Perceptron, EnvKind::Complex);
+    let mlp = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+    // paper CPU constants (its own baseline)
+    let cpu = 172.0;
+    let neuron_speedup = cpu / t.completion_us(&neuron, Precision::Fixed, &dev);
+    let mlp_speedup = cpu / t.completion_us(&mlp, Precision::Fixed, &dev);
+
+    PaperTable::new("H1", "Headline speedups vs the paper's CPU baseline", "×")
+        .row("single neuron, complex, fixed", neuron_speedup, Some(95.0))
+        .row("MLP, complex, fixed", mlp_speedup, Some(43.0))
+        .note("paper Table 4/6 'Advantage' column; our FPGA time from the cycle model, \
+               CPU time fixed to the paper's 172 µs so the ratio isolates the FPGA model")
+}
+
+// ---------------------------------------------------------------- ablations
+
+/// X1: datapath pipelining (the paper's stated future work).
+pub fn ablation_pipelining() -> PaperTable {
+    let base = TimingModel::default();
+    let pipe = TimingModel::pipelined();
+    let dev = Virtex7::default();
+    let mut t = PaperTable::new("X1", "Ablation: action-pipelined fixed datapath", "µs");
+    for net in NetConfig::all() {
+        let b = base.completion_us(&net, Precision::Fixed, &dev);
+        let p = pipe.completion_us(&net, Precision::Fixed, &dev);
+        t = t
+            .row(format!("{} baseline", net.name()), b, None)
+            .row(format!("{} pipelined", net.name()), p, None);
+    }
+    t.note("paper Section 6: “power consumption can be further reduced by introducing \
+            pipelining in the data path” — here pipelining buys throughput at equal clock")
+}
+
+/// X2: sigmoid-ROM size vs activation accuracy (paper Section 3 remark).
+pub fn ablation_lut_rom() -> PaperTable {
+    let mut t = PaperTable::new("X2", "Ablation: sigmoid ROM size vs max |error|", "abs err");
+    for size in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let lut = SigmoidLut::build(LutSpec { size, xmax: 8.0 }, None);
+        t = t.row(format!("{size} entries"), lut.max_abs_error(20_001) as f64, None);
+    }
+    t.note("paper: “The size of ROM plays a major role in the accuracy of the output \
+            value” — error halves per doubling, as expected for nearest-entry lookup")
+}
+
+/// X3: fixed-point word/fraction length vs quantization error (paper
+/// Section 5: word length trades accuracy against power).
+pub fn ablation_wordlen() -> PaperTable {
+    use crate::nn::params::QNetParams;
+    use crate::nn::qupdate::{forward, Datapath};
+    use crate::nn::activation::Activation;
+    use crate::util::Rng;
+
+    let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+    let mut rng = Rng::seeded(77);
+    let params = QNetParams::init(&net, 0.4, &mut rng);
+    let sa = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+    let float_dp = Datapath::new(None, Activation::lut_default(None));
+    let q_ref = forward(&net, &params, &sa, &float_dp).expect("forward");
+
+    let mut t = PaperTable::new("X3", "Ablation: fixed word length vs Q-value error", "abs err");
+    for (w, f) in [(8u32, 4u32), (12, 8), (16, 8), (18, 12), (24, 16), (32, 24)] {
+        let spec = FixedSpec::new(w, f);
+        let dp = Datapath::new(Some(spec), Activation::lut_default(Some(spec)));
+        let q = forward(&net, &params, &sa, &dp).expect("forward");
+        let err = q
+            .iter()
+            .zip(&q_ref)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        t = t.row(format!("Q({w},{f})"), err as f64, None);
+    }
+    t.note("error vs the float datapath on the complex MLP; Q(18,12) is the default \
+            (DSP48-friendly) and sits below the sigmoid-LUT error floor")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_anchor_rows_accurate() {
+        let t = table1();
+        // A=9 anchor within 1%
+        let a9 = &t.rows[1];
+        assert!((a9.ratio().unwrap() - 1.0).abs() < 0.01, "{a9:?}");
+        // complex fixed within 1%
+        let cfx = &t.rows[3];
+        assert!((cfx.ratio().unwrap() - 1.0).abs() < 0.01, "{cfx:?}");
+    }
+
+    #[test]
+    fn completion_tables_within_2x_of_paper() {
+        for (arch, env) in [
+            (Arch::Perceptron, EnvKind::Simple),
+            (Arch::Perceptron, EnvKind::Complex),
+            (Arch::Mlp, EnvKind::Simple),
+            (Arch::Mlp, EnvKind::Complex),
+        ] {
+            let t = table_completion(arch, env, CompletionInputs { measured_cpu_us: None });
+            // FPGA model rows (first two) stay within 2.5× of the paper
+            for row in &t.rows[..2] {
+                let r = row.ratio().unwrap();
+                let r = if r < 1.0 { 1.0 / r } else { r };
+                assert!(r < 2.5, "{arch:?}/{env:?} {}: ratio {r}", row.label);
+            }
+        }
+    }
+
+    #[test]
+    fn power_tables_shape() {
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            let t = table_power(env);
+            assert!(t.rows[1].ours > t.rows[0].ours, "float must cost more");
+            let adv = &t.rows[2];
+            assert!((1.05..=1.9).contains(&adv.ours), "{}", adv.ours);
+        }
+    }
+
+    #[test]
+    fn headline_order_of_magnitude() {
+        let t = headline();
+        // neuron headline: paper 95×; our model 172/1.87 ≈ 92×
+        assert!((t.rows[0].ratio().unwrap() - 1.0).abs() < 0.25, "{:?}", t.rows[0]);
+        // MLP headline: paper 43×; ours differs only via the MLP cycle model
+        let r = t.rows[1].ratio().unwrap();
+        assert!((0.4..=2.5).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn energy_table_fixed_dominates() {
+        let t = energy_table();
+        assert_eq!(t.rows.len(), 8);
+        for pair in t.rows.chunks(2) {
+            // fixed row then float row per config
+            assert!(
+                pair[1].ours > 5.0 * pair[0].ours,
+                "{} vs {}",
+                pair[0].label,
+                pair[1].label
+            );
+        }
+    }
+
+    #[test]
+    fn ablations_have_expected_shape() {
+        let lut = ablation_lut_rom();
+        // error strictly decreases with ROM size
+        for w in lut.rows.windows(2) {
+            assert!(w[1].ours < w[0].ours, "{:?}", w);
+        }
+        let word = ablation_wordlen();
+        // widest format must beat the narrowest
+        assert!(word.rows.last().unwrap().ours < word.rows[0].ours);
+        let pipe = ablation_pipelining();
+        for pair in pipe.rows.chunks(2) {
+            assert!(pair[1].ours < pair[0].ours, "pipelining must help");
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact manifest model — the machine-readable rust↔python contract.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered HLO module: argument order, shapes, dtypes, the baked
+//! hyper-parameters, fixed-point format and sigmoid-ROM geometry. This
+//! module parses and validates it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// Tensor element type used by the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unsupported dtype `{other}`"))),
+        }
+    }
+}
+
+/// One input/output tensor declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Artifact("bad shape entry".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: DType::parse(j.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// The three graph kinds emitted per configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Action-selection path: Q-values for all A actions.
+    Forward,
+    /// One full Q-update.
+    QUpdate,
+    /// `batch` scan-chained Q-updates in one call.
+    TrainBatch,
+}
+
+impl ArtifactKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::Forward => "forward",
+            ArtifactKind::QUpdate => "qupdate",
+            ArtifactKind::TrainBatch => "train_batch",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "forward" => Ok(ArtifactKind::Forward),
+            "qupdate" => Ok(ArtifactKind::QUpdate),
+            "train_batch" => Ok(ArtifactKind::TrainBatch),
+            other => Err(Error::Artifact(format!("unknown kind `{other}`"))),
+        }
+    }
+}
+
+/// Everything the runtime needs to know about one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub net: NetConfig,
+    pub precision: Precision,
+    pub batch: usize,
+    pub hyper: Hyper,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// Number of parameter tensors at the head of the input list.
+    pub fn n_param_tensors(&self) -> usize {
+        match self.net.arch {
+            Arch::Perceptron => 2,
+            Arch::Mlp => 4,
+        }
+    }
+
+    fn parse(name: &str, j: &Json, dir: &Path) -> Result<ArtifactMeta> {
+        let arch: Arch = j.req_str("arch")?.parse()?;
+        let env: EnvKind = j.req_str("env")?.parse()?;
+        let net = NetConfig::new(arch, env);
+        // cross-check declared dims against the canonical config
+        let (d, h, a) = (
+            j.req_usize("d")?,
+            j.req_usize("h")?,
+            j.req_usize("a")?,
+        );
+        if (net.d, net.h, net.a) != (d, h, a) {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest dims ({d},{h},{a}) != canonical {:?}",
+                (net.d, net.h, net.a)
+            )));
+        }
+        let hyper_j = j.req("hyper")?;
+        let hyper = Hyper {
+            alpha: hyper_j.req_f64("alpha")? as f32,
+            gamma: hyper_j.req_f64("gamma")? as f32,
+            lr: hyper_j.req_f64("lr")? as f32,
+        };
+        let inputs = j
+            .req_arr("inputs")?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .req_arr("outputs")?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            file: dir.join(j.req_str("file")?),
+            kind: ArtifactKind::parse(j.req_str("kind")?)?,
+            net,
+            precision: j.req_str("precision")?.parse()?,
+            batch: j.req_usize("batch")?,
+            hyper,
+            inputs,
+            outputs,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut artifacts = BTreeMap::new();
+        let obj = j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("`artifacts` not an object".into()))?;
+        for (name, entry) in obj {
+            let meta = ArtifactMeta::parse(name, entry, dir)?;
+            if !meta.file.exists() {
+                return Err(Error::Artifact(format!(
+                    "{name}: missing HLO file {}",
+                    meta.file.display()
+                )));
+            }
+            artifacts.insert(name.clone(), meta);
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Canonical artifact name for a configuration.
+    pub fn artifact_name(net: &NetConfig, prec: Precision, kind: ArtifactKind) -> String {
+        format!("{}_{}_{}", net.name(), prec.as_str(), kind.as_str())
+    }
+
+    /// Look up by configuration.
+    pub fn select(
+        &self,
+        net: &NetConfig,
+        prec: Precision,
+        kind: ArtifactKind,
+    ) -> Result<&ArtifactMeta> {
+        let name = Self::artifact_name(net, prec, kind);
+        self.artifacts
+            .get(&name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact `{name}` in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(m.artifacts.len() >= 24, "{}", m.artifacts.len());
+    }
+
+    #[test]
+    fn selects_all_paper_configs() {
+        let Some(m) = manifest() else { return };
+        for net in NetConfig::all() {
+            for prec in [Precision::Fixed, Precision::Float] {
+                for kind in [ArtifactKind::Forward, ArtifactKind::QUpdate, ArtifactKind::TrainBatch]
+                {
+                    let meta = m.select(&net, prec, kind).unwrap();
+                    assert_eq!(meta.kind, kind);
+                    assert_eq!(meta.net, net);
+                    // params head the input list
+                    assert!(meta.inputs.len() > meta.n_param_tensors());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qupdate_interface_shapes() {
+        let Some(m) = manifest() else { return };
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let meta = m.select(&net, Precision::Float, ArtifactKind::QUpdate).unwrap();
+        let names: Vec<&str> = meta.inputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["w1", "b1", "w2", "b2", "sa_cur", "sa_next", "action", "reward"]);
+        assert_eq!(meta.inputs[4].shape, vec![net.a, net.d]);
+        assert_eq!(meta.inputs[6].dtype, DType::I32);
+        let out_names: Vec<&str> = meta.outputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(out_names, ["w1", "b1", "w2", "b2", "q_cur", "q_next", "q_err"]);
+    }
+
+    #[test]
+    fn missing_dir_is_clear_error() {
+        let err = Manifest::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn artifact_names_are_canonical() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Complex);
+        assert_eq!(
+            Manifest::artifact_name(&net, Precision::Fixed, ArtifactKind::TrainBatch),
+            "perceptron_complex_fixed_train_batch"
+        );
+    }
+}

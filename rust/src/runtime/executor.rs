@@ -1,0 +1,210 @@
+//! One compiled artifact: shape-checked execution + typed call helpers.
+
+use crate::config::NetConfig;
+use crate::error::{Error, Result};
+use crate::nn::params::QNetParams;
+use crate::nn::qupdate::QUpdateOutput;
+
+use super::artifact::{ArtifactKind, ArtifactMeta, DType};
+
+/// A borrowed input tensor.
+#[derive(Debug, Clone, Copy)]
+pub enum TensorValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl TensorValue<'_> {
+    fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(s) => s.len(),
+            TensorValue::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            TensorValue::F32(_) => DType::F32,
+            TensorValue::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A compiled, ready-to-execute artifact. Not `Send` (PJRT client affinity);
+/// create one per worker thread via [`super::Runtime`].
+pub struct Executor {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Load the HLO text, compile on the given client.
+    pub fn compile(client: &xla::PjRtClient, meta: ArtifactMeta) -> Result<Executor> {
+        let path = meta.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", meta.name)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {}: {e}", meta.name)))?;
+        Ok(Executor { meta, exe })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with shape/dtype validation. Returns one `Vec<f32>` per
+    /// declared output (all our artifacts produce f32 outputs).
+    pub fn run_raw(&self, inputs: &[TensorValue]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::interface(format!(
+                "{}: got {} inputs, artifact declares {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (value, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if value.len() != spec.elements() {
+                return Err(Error::interface(format!(
+                    "{}: input `{}` has {} elements, expected {} (shape {:?})",
+                    self.meta.name,
+                    spec.name,
+                    value.len(),
+                    spec.elements(),
+                    spec.shape
+                )));
+            }
+            if value.dtype() != spec.dtype {
+                return Err(Error::interface(format!(
+                    "{}: input `{}` dtype mismatch",
+                    self.meta.name, spec.name
+                )));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match value {
+                TensorValue::F32(s) => xla::Literal::vec1(s),
+                TensorValue::I32(s) => xla::Literal::vec1(s),
+            };
+            literals.push(lit.reshape(&dims)?);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True: always a tuple, even single results
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::interface(format!(
+                "{}: got {} outputs, artifact declares {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.meta.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != spec.elements() {
+                return Err(Error::interface(format!(
+                    "{}: output `{}` has {} elements, expected {}",
+                    self.meta.name,
+                    spec.name,
+                    v.len(),
+                    spec.elements()
+                )));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    fn check_kind(&self, kind: ArtifactKind) -> Result<()> {
+        if self.meta.kind != kind {
+            return Err(Error::interface(format!(
+                "{} is a {:?} artifact, not {kind:?}",
+                self.meta.name, self.meta.kind
+            )));
+        }
+        Ok(())
+    }
+
+    fn net(&self) -> &NetConfig {
+        &self.meta.net
+    }
+
+    /// Forward artifact: Q-values for all A actions.
+    pub fn run_forward(&self, params: &QNetParams, sa: &[f32]) -> Result<Vec<f32>> {
+        self.check_kind(ArtifactKind::Forward)?;
+        let tensors = params.to_tensors();
+        let mut inputs: Vec<TensorValue> = tensors.iter().map(|t| TensorValue::F32(t)).collect();
+        inputs.push(TensorValue::F32(sa));
+        let mut out = self.run_raw(&inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Q-update artifact: one full update. Returns the new parameters and
+    /// the diagnostic vectors.
+    pub fn run_qupdate(
+        &self,
+        params: &QNetParams,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        action: usize,
+        reward: f32,
+    ) -> Result<QUpdateOutput> {
+        self.check_kind(ArtifactKind::QUpdate)?;
+        if action >= self.net().a {
+            return Err(Error::Env(format!("action {action} out of range")));
+        }
+        let tensors = params.to_tensors();
+        let action_buf = [action as i32];
+        let reward_buf = [reward];
+        let mut inputs: Vec<TensorValue> = tensors.iter().map(|t| TensorValue::F32(t)).collect();
+        inputs.push(TensorValue::F32(sa_cur));
+        inputs.push(TensorValue::F32(sa_next));
+        inputs.push(TensorValue::I32(&action_buf));
+        inputs.push(TensorValue::F32(&reward_buf));
+
+        let out = self.run_raw(&inputs)?;
+        let n = self.meta.n_param_tensors();
+        let new_params = QNetParams::from_tensors(self.net(), &out[..n])?;
+        Ok(QUpdateOutput {
+            params: new_params,
+            q_cur: out[n].clone(),
+            q_next: out[n + 1].clone(),
+            q_err: out[n + 2][0],
+        })
+    }
+
+    /// Train-batch artifact: `batch` chained updates in one XLA call.
+    /// Returns the new parameters and the per-step Q-errors.
+    pub fn run_train_batch(
+        &self,
+        params: &QNetParams,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[i32],
+        rewards: &[f32],
+    ) -> Result<(QNetParams, Vec<f32>)> {
+        self.check_kind(ArtifactKind::TrainBatch)?;
+        let b = self.meta.batch;
+        if actions.len() != b || rewards.len() != b {
+            return Err(Error::interface(format!(
+                "train_batch expects exactly {b} transitions"
+            )));
+        }
+        let tensors = params.to_tensors();
+        let mut inputs: Vec<TensorValue> = tensors.iter().map(|t| TensorValue::F32(t)).collect();
+        inputs.push(TensorValue::F32(sa_cur));
+        inputs.push(TensorValue::F32(sa_next));
+        inputs.push(TensorValue::I32(actions));
+        inputs.push(TensorValue::F32(rewards));
+
+        let out = self.run_raw(&inputs)?;
+        let n = self.meta.n_param_tensors();
+        let new_params = QNetParams::from_tensors(self.net(), &out[..n])?;
+        Ok((new_params, out[n].clone()))
+    }
+}

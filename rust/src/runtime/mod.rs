@@ -1,0 +1,36 @@
+//! XLA/PJRT runtime — loads and executes the AOT artifacts.
+//!
+//! The deployment path of the three-layer architecture: python lowers the
+//! Pallas/JAX graphs to HLO **text** once (`make artifacts`); this module
+//! loads the text with `HloModuleProto::from_text_file`, compiles it on the
+//! PJRT CPU client, and executes it from the rust hot path. Python never
+//! runs at request time.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` model: shapes, dtypes,
+//!   argument order, baked hyper-parameters (the rust↔python contract).
+//! * [`executor`] — one compiled artifact + typed call helpers
+//!   (`run_forward`, `run_qupdate`, `run_train_batch`).
+//! * [`registry`] — a per-thread runtime: PJRT client + lazily compiled
+//!   executor cache, keyed by artifact name.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so
+//! a [`registry::Runtime`] must stay on the thread that created it. The
+//! coordinator gives each worker its own `Runtime` (CPU clients are cheap);
+//! see `coordinator::backend`.
+
+pub mod artifact;
+pub mod executor;
+pub mod registry;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, DType, Manifest, TensorSpec};
+pub use executor::{Executor, TensorValue};
+pub use registry::Runtime;
+
+/// Default artifact directory, relative to the crate root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // honor $QFPGA_ARTIFACTS when set (tests, deployments)
+    if let Ok(dir) = std::env::var("QFPGA_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,86 @@
+//! Per-thread runtime: PJRT client + compiled-executor cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::config::{NetConfig, Precision};
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactKind, Manifest};
+use super::executor::Executor;
+
+/// A PJRT CPU client plus the manifest and a lazy compile cache.
+///
+/// Not `Send`: PJRT client handles have thread affinity in the `xla` crate.
+/// Workers each build their own `Runtime` (compilation of these small
+/// modules takes milliseconds; see the `substrates` bench).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executor>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Xla(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create a runtime over the default artifact directory.
+    pub fn from_default_dir() -> Result<Runtime> {
+        Runtime::new(&super::default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executors compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Get (compile on first use) the executor for an artifact name.
+    pub fn executor(&self, name: &str) -> Result<Rc<Executor>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact `{name}`")))?
+            .clone();
+        let exe = Rc::new(Executor::compile(&self.client, meta)?);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Get the executor for a configuration.
+    pub fn select(
+        &self,
+        net: &NetConfig,
+        prec: Precision,
+        kind: ArtifactKind,
+    ) -> Result<Rc<Executor>> {
+        self.executor(&Manifest::artifact_name(net, prec, kind))
+    }
+
+    /// Eagerly compile every artifact (deployment warm-up).
+    pub fn warm_up(&self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for name in &names {
+            self.executor(name)?;
+        }
+        Ok(names.len())
+    }
+}

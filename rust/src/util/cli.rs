@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, positionals.
+//!
+//! Intentionally minimal (flight-software style): no derive magic, explicit
+//! lookups, helpful errors.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` separator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("option --{name} requires a value"))
+                    })?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("option --{name}: cannot parse `{v}`"))
+            }),
+        }
+    }
+
+    /// Required option.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::Config(format!("missing required option --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags).unwrap()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = parse("train --env simple --steps 100 --verbose file.txt", &["verbose"]);
+        assert_eq!(a.positional(), ["train", "file.txt"]);
+        assert_eq!(a.get("env"), Some("simple"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--env=complex --seed=7", &[]);
+        assert_eq!(a.get("env"), Some("complex"));
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--steps".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("--steps banana", &[]);
+        assert!(a.get_parse("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse("-- --not-an-option", &[]);
+        assert_eq!(a.positional(), ["--not-an-option"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", &[]);
+        assert_eq!(a.get_or("env", "simple"), "simple");
+        assert!(a.require("env").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Zero-dependency utility substrates.
+//!
+//! The deployment target (radiation-hardened flight software) motivates a
+//! minimal dependency footprint, so the pieces usually pulled from crates.io
+//! are built in-repo: a seedable PRNG ([`rng`]), a small JSON
+//! parser/writer for the artifact manifest ([`json`]), and a tiny CLI
+//! argument parser ([`cli`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,145 @@
+//! Artifact pipeline integrity: manifest ↔ HLO files ↔ executors.
+//!
+//! Complements `backend_equiv` (numerics) with structural checks on the
+//! build pipeline itself: every declared artifact exists, parses, compiles,
+//! and honors its declared interface; hyper-parameters baked into the
+//! artifacts match the rust defaults; failure modes are clean errors.
+
+use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::nn::params::QNetParams;
+use qfpga::runtime::{default_artifact_dir, ArtifactKind, Manifest, Runtime};
+use qfpga::util::{Json, Rng};
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+#[test]
+fn every_config_has_all_three_kinds() {
+    let Some(m) = manifest() else { return };
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            for kind in [ArtifactKind::Forward, ArtifactKind::QUpdate, ArtifactKind::TrainBatch] {
+                let meta = m.select(&net, prec, kind).unwrap();
+                assert!(meta.file.exists());
+                assert_eq!(meta.precision, prec);
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_files_have_full_constants_and_no_metadata() {
+    // regression for the two xla_extension-0.5.1 parser hazards (aot.py):
+    // elided large constants (`constant({...})`) execute as garbage, and
+    // `source_end_line` metadata fails to parse at all.
+    let Some(m) = manifest() else { return };
+    for meta in m.artifacts.values() {
+        let text = std::fs::read_to_string(&meta.file).unwrap();
+        assert!(
+            !text.contains("constant({...})"),
+            "{}: elided constant would mis-execute under xla_extension 0.5.1",
+            meta.name
+        );
+        assert!(
+            !text.contains("source_end_line"),
+            "{}: jax>=0.8 metadata breaks the 0.5.1 text parser",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn baked_hyper_matches_rust_default() {
+    let Some(m) = manifest() else { return };
+    let default = Hyper::default();
+    for meta in m.artifacts.values() {
+        assert_eq!(meta.hyper, default, "{}", meta.name);
+    }
+}
+
+#[test]
+fn declared_shapes_are_consistent() {
+    let Some(m) = manifest() else { return };
+    for meta in m.artifacts.values() {
+        let net = meta.net;
+        let n = meta.n_param_tensors();
+        // parameter tensors lead, then the data inputs
+        assert!(meta.inputs.len() > n, "{}", meta.name);
+        // every qupdate output set starts with the updated parameters
+        if meta.kind == ArtifactKind::QUpdate {
+            assert_eq!(meta.outputs.len(), n + 3, "{}", meta.name);
+            let q_cur = &meta.outputs[n];
+            assert_eq!(q_cur.shape, vec![net.a], "{}", meta.name);
+        }
+        if meta.kind == ArtifactKind::TrainBatch {
+            assert_eq!(meta.outputs.len(), n + 1, "{}", meta.name);
+            assert_eq!(meta.outputs[n].shape, vec![meta.batch], "{}", meta.name);
+        }
+    }
+}
+
+#[test]
+fn executors_compile_and_run_for_every_artifact() {
+    let Some(_) = manifest() else { return };
+    let rt = Runtime::from_default_dir().unwrap();
+    let n = rt.warm_up().unwrap();
+    assert!(n >= 24);
+    // run one forward per config to prove the compiled modules execute
+    let mut rng = Rng::seeded(71);
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let exe = rt.select(&net, prec, ArtifactKind::Forward).unwrap();
+            let params = QNetParams::init(&net, 0.2, &mut rng);
+            let sa = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let q = exe.run_forward(&params, &sa).unwrap();
+            assert_eq!(q.len(), net.a);
+            assert!(q.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)));
+        }
+    }
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_cleanly() {
+    let dir = std::env::temp_dir().join("qfpga_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("json parse error"), "{err}");
+
+    // valid json, wrong version
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 99, "artifacts": {}}"#).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_rejects_missing_hlo_file() {
+    let Some(m) = manifest() else { return };
+    // copy the manifest into a temp dir without the HLO files
+    let dir = std::env::temp_dir().join("qfpga_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = default_artifact_dir().join("manifest.json");
+    std::fs::copy(src, dir.join("manifest.json")).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing HLO file"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    drop(m);
+}
+
+#[test]
+fn manifest_json_is_valid_and_versioned() {
+    let dir = default_artifact_dir();
+    let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.req_usize("version").unwrap(), 1);
+}

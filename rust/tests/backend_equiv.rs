@@ -1,0 +1,233 @@
+//! X4 cross-backend equivalence: the three compute backends must agree.
+//!
+//! * XLA artifact (Pallas kernel lowered to HLO, executed via PJRT)
+//! * pure-Rust NN (`qfpga::nn`, the CPU baseline)
+//! * FPGA datapath simulator (`qfpga::fpga`)
+//!
+//! Float paths must agree to f32 round-off; fixed paths to a small LSB
+//! budget (the integer datapath accumulates exactly where the f32
+//! fake-quant path rounds; see fpga module docs).
+//!
+//! These tests skip silently when `artifacts/` has not been built — run
+//! `make artifacts` first for full coverage (CI always does).
+
+use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::fixed::FixedSpec;
+use qfpga::fpga::datapath::Transition;
+use qfpga::fpga::FpgaAccelerator;
+use qfpga::nn::activation::Activation;
+use qfpga::nn::params::QNetParams;
+use qfpga::nn::qupdate::{self, Datapath};
+use qfpga::runtime::{ArtifactKind, Runtime};
+use qfpga::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = qfpga::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn dp(prec: Precision) -> Datapath {
+    let fixed = match prec {
+        Precision::Fixed => Some(FixedSpec::default()),
+        Precision::Float => None,
+    };
+    Datapath::new(fixed, Activation::lut_default(fixed))
+}
+
+fn tolerance(prec: Precision) -> f32 {
+    match prec {
+        // fixed: python fake-quant (f32) vs rust fake-quant (f64 rounding)
+        // can differ by one grid step at rounding boundaries
+        Precision::Fixed => 2.0 * FixedSpec::default().lsb() as f32,
+        Precision::Float => 2e-6,
+    }
+}
+
+#[test]
+fn xla_forward_matches_rust_nn() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(100);
+    for net in NetConfig::all() {
+        for prec in [Precision::Float, Precision::Fixed] {
+            let exe = rt.select(&net, prec, ArtifactKind::Forward).unwrap();
+            let params = QNetParams::init(&net, 0.4, &mut rng);
+            let sa = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+
+            let got = exe.run_forward(&params, &sa).unwrap();
+            let want = qupdate::forward(&net, &params, &sa, &dp(prec)).unwrap();
+
+            assert_eq!(got.len(), net.a);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= tolerance(prec),
+                    "{}/{prec:?} q[{i}]: xla {g} vs nn {w}",
+                    net.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_qupdate_matches_rust_nn() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(101);
+    for net in NetConfig::all() {
+        for prec in [Precision::Float, Precision::Fixed] {
+            let exe = rt.select(&net, prec, ArtifactKind::QUpdate).unwrap();
+            let params = QNetParams::init(&net, 0.4, &mut rng);
+            let sa_cur = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let action = rng.below(net.a);
+            let reward = rng.f32_range(-1.0, 1.0);
+
+            let got = exe
+                .run_qupdate(&params, &sa_cur, &sa_next, action, reward)
+                .unwrap();
+            let want = qupdate::qupdate(
+                &net, &params, &sa_cur, &sa_next, action, reward,
+                &Hyper::default(), &dp(prec),
+            )
+            .unwrap();
+
+            let tol = tolerance(prec);
+            assert!(
+                (got.q_err - want.q_err).abs() <= tol,
+                "{}/{prec:?} q_err: {} vs {}",
+                net.name(),
+                got.q_err,
+                want.q_err
+            );
+            assert!(
+                got.params.max_abs_diff(&want.params) <= tol,
+                "{}/{prec:?}: params diverged by {}",
+                net.name(),
+                got.params.max_abs_diff(&want.params)
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_train_batch_matches_sequential_qupdates() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(102);
+    for net in NetConfig::all() {
+        let prec = Precision::Float;
+        let batch_exe = rt.select(&net, prec, ArtifactKind::TrainBatch).unwrap();
+        let b = batch_exe.meta().batch;
+        let params = QNetParams::init(&net, 0.4, &mut rng);
+        let sa_cur = rng.vec_f32(b * net.a * net.d, -1.0, 1.0);
+        let sa_next = rng.vec_f32(b * net.a * net.d, -1.0, 1.0);
+        let actions: Vec<i32> = (0..b).map(|_| rng.below(net.a) as i32).collect();
+        let rewards = rng.vec_f32(b, -1.0, 1.0);
+
+        let (batch_params, q_errs) = batch_exe
+            .run_train_batch(&params, &sa_cur, &sa_next, &actions, &rewards)
+            .unwrap();
+
+        // sequential oracle
+        let mut p = params;
+        let step = net.a * net.d;
+        let mut want_errs = Vec::with_capacity(b);
+        for i in 0..b {
+            let out = qupdate::qupdate(
+                &net,
+                &p,
+                &sa_cur[i * step..(i + 1) * step],
+                &sa_next[i * step..(i + 1) * step],
+                actions[i] as usize,
+                rewards[i],
+                &Hyper::default(),
+                &dp(prec),
+            )
+            .unwrap();
+            p = out.params;
+            want_errs.push(out.q_err);
+        }
+
+        assert_eq!(q_errs.len(), b);
+        for (i, (g, w)) in q_errs.iter().zip(&want_errs).enumerate() {
+            assert!((g - w).abs() <= 1e-5, "{} err[{i}]: {g} vs {w}", net.name());
+        }
+        assert!(
+            batch_params.max_abs_diff(&p) <= 1e-5,
+            "{}: batch params diverged",
+            net.name()
+        );
+    }
+}
+
+#[test]
+fn fpga_sim_matches_xla_within_lsb_budget() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(103);
+    for net in NetConfig::all() {
+        for prec in [Precision::Float, Precision::Fixed] {
+            let exe = rt.select(&net, prec, ArtifactKind::QUpdate).unwrap();
+            let params = QNetParams::init(&net, 0.4, &mut rng);
+            let sa_cur = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+            let action = rng.below(net.a);
+            let reward = rng.f32_range(-1.0, 1.0);
+
+            let xla_out = exe
+                .run_qupdate(&params, &sa_cur, &sa_next, action, reward)
+                .unwrap();
+
+            let mut acc = FpgaAccelerator::paper(net, prec, &params, Hyper::default());
+            let (sim_out, _) = acc
+                .qupdate(&Transition {
+                    sa_cur: &sa_cur,
+                    sa_next: &sa_next,
+                    action,
+                    reward,
+                })
+                .unwrap();
+
+            // integer datapath vs float32 fake-quant: budget a few LSB
+            let tol = match prec {
+                Precision::Fixed => 4.0 * FixedSpec::default().lsb() as f32,
+                Precision::Float => 2e-6,
+            };
+            assert!(
+                (sim_out.q_err - xla_out.q_err).abs() <= tol,
+                "{}/{prec:?} q_err: sim {} vs xla {}",
+                net.name(),
+                sim_out.q_err,
+                xla_out.q_err
+            );
+            assert!(
+                sim_out.params.max_abs_diff(&xla_out.params) <= tol,
+                "{}/{prec:?} params diverged",
+                net.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let net = NetConfig::all()[0];
+    let exe = rt.select(&net, Precision::Float, ArtifactKind::Forward).unwrap();
+    let params = QNetParams::zeros(&net);
+    let bad_sa = vec![0f32; 3];
+    assert!(exe.run_forward(&params, &bad_sa).is_err());
+    // wrong kind
+    assert!(exe.run_qupdate(&params, &bad_sa, &bad_sa, 0, 0.0).is_err());
+}
+
+#[test]
+fn runtime_caches_compiled_executors() {
+    let Some(rt) = runtime() else { return };
+    let net = NetConfig::all()[0];
+    assert_eq!(rt.compiled_count(), 0);
+    let _a = rt.select(&net, Precision::Float, ArtifactKind::Forward).unwrap();
+    let _b = rt.select(&net, Precision::Float, ArtifactKind::Forward).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+}

@@ -1,0 +1,257 @@
+//! Property-based tests over the substrate invariants.
+//!
+//! The proptest crate is not vendored in this offline image, so properties
+//! are driven by a seeded random sweep (`qfpga::util::Rng`) with enough
+//! cases to give the same practical coverage; every failure reports the
+//! case seed for deterministic reproduction.
+
+use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::env::make_env;
+use qfpga::fixed::{tensor, Acc, Fixed, FixedSpec};
+use qfpga::fpga::fifo::Fifo;
+use qfpga::fpga::{TimingModel, Virtex7};
+use qfpga::nn::activation::{LutSpec, SigmoidLut};
+use qfpga::nn::params::QNetParams;
+use qfpga::qlearn::backend::{CpuBackend, QBackend};
+use qfpga::util::{Json, Rng};
+
+const CASES: usize = 300;
+
+// ------------------------------------------------------------- fixed point
+
+#[test]
+fn prop_quantize_is_idempotent_and_bounded() {
+    let mut rng = Rng::seeded(9001);
+    for case in 0..CASES {
+        let word = rng.range(4, 32) as u32;
+        let frac = rng.range(1, word as usize) as u32;
+        let spec = FixedSpec::new(word, frac);
+        let x = rng.f32_range(-1e5, 1e5) as f64;
+        let q = Fixed::from_f64(x, spec);
+        // idempotent
+        assert_eq!(Fixed::from_f64(q.to_f64(), spec), q, "case {case}: {spec:?} {x}");
+        // bounded
+        assert!(q.to_f64() <= spec.max_value() && q.to_f64() >= spec.min_value());
+        // error bound when in range
+        if x <= spec.max_value() && x >= spec.min_value() {
+            assert!(
+                (q.to_f64() - x).abs() <= spec.lsb() / 2.0 + 1e-12,
+                "case {case}: {spec:?} {x} -> {}",
+                q.to_f64()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_wide_accumulator_equals_exact_dot_rounded_once() {
+    let spec = FixedSpec::default();
+    let mut rng = Rng::seeded(9002);
+    for case in 0..CASES {
+        let n = rng.range(1, 64);
+        let xs = tensor::quantize_slice(&rng.vec_f32(n, -2.0, 2.0), spec);
+        let ws = tensor::quantize_slice(&rng.vec_f32(n, -2.0, 2.0), spec);
+        let mut acc = Acc::new(spec);
+        let mut exact = 0f64;
+        for (x, w) in xs.iter().zip(&ws) {
+            acc.mac(*x, *w);
+            exact += x.to_f64() * w.to_f64();
+        }
+        assert_eq!(
+            acc.finish(),
+            Fixed::from_f64(exact, spec),
+            "case {case}, n = {n}"
+        );
+    }
+}
+
+#[test]
+fn prop_fixed_mul_commutative_and_single_rounded() {
+    let spec = FixedSpec::default();
+    let mut rng = Rng::seeded(9003);
+    for case in 0..CASES {
+        let a = Fixed::from_f64(rng.f32_range(-4.0, 4.0) as f64, spec);
+        let b = Fixed::from_f64(rng.f32_range(-4.0, 4.0) as f64, spec);
+        assert_eq!(a.mul(b), b.mul(a), "case {case}");
+        assert_eq!(a.mul(b), Fixed::from_f64(a.to_f64() * b.to_f64(), spec), "case {case}");
+    }
+}
+
+// ------------------------------------------------------------------- fifo
+
+#[test]
+fn prop_fifo_behaves_like_vecdeque() {
+    let mut rng = Rng::seeded(9004);
+    for case in 0..100 {
+        let cap = rng.range(1, 64);
+        let mut fifo: Fifo<u64> = Fifo::new(cap);
+        let mut model = std::collections::VecDeque::new();
+        for _ in 0..500 {
+            if rng.chance(0.55) {
+                let v = rng.next_u64();
+                let ok = fifo.push(v).is_ok();
+                assert_eq!(ok, model.len() < cap, "case {case}: push admissibility");
+                if ok {
+                    model.push_back(v);
+                }
+            } else {
+                let got = fifo.pop().ok();
+                assert_eq!(got, model.pop_front(), "case {case}: pop value");
+            }
+            assert_eq!(fifo.len(), model.len());
+        }
+    }
+}
+
+// ------------------------------------------------------------ environments
+
+#[test]
+fn prop_environment_contract() {
+    // For any env kind, any action sequence: encodings bounded, state ids
+    // within |S|, episodes terminate, rewards finite.
+    let mut rng = Rng::seeded(9005);
+    for case in 0..40 {
+        let kind = if rng.chance(0.5) { EnvKind::Simple } else { EnvKind::Complex };
+        let mut env = make_env(kind, rng.next_u64());
+        let a_n = env.n_actions();
+        let d = env.d();
+        let mut enc = vec![0f32; a_n * d];
+        let mut steps = 0usize;
+        while !env.is_done() {
+            assert!(env.state_id() < env.state_space(), "case {case}");
+            env.encode_all(&mut enc);
+            for &v in &enc {
+                assert!(v.is_finite() && (-1.0..=1.0).contains(&v), "case {case}: {v}");
+            }
+            let r = env.step(rng.below(a_n));
+            assert!(r.reward.is_finite() && r.reward.abs() < 10.0, "case {case}: {}", r.reward);
+            steps += 1;
+            assert!(steps <= 500, "case {case}: episode failed to terminate");
+        }
+        env.reset();
+        assert!(!env.is_done(), "case {case}: reset must clear terminal");
+    }
+}
+
+// ------------------------------------------------------------- Q-learning
+
+#[test]
+fn prop_qupdate_direction_matches_error_sign() {
+    // After one update on (s, a), re-evaluating Q(s, a) moves toward the
+    // target (or stays, under saturation): sign(Q' − Q) == sign(q_err) or 0.
+    let mut rng = Rng::seeded(9006);
+    for case in 0..150 {
+        let arch = if rng.chance(0.5) { Arch::Perceptron } else { Arch::Mlp };
+        let net = NetConfig::new(arch, EnvKind::Simple);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        let mut backend =
+            CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let sa_cur = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+        let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
+        let action = rng.below(net.a);
+        let reward = rng.f32_range(-1.0, 1.0);
+
+        let q_before = backend.q_values(&sa_cur).unwrap()[action];
+        let err = backend.update(&sa_cur, &sa_next, action, reward).unwrap();
+        let q_after = backend.q_values(&sa_cur).unwrap()[action];
+        let dq = q_after - q_before;
+        if err.abs() > 1e-4 && dq.abs() > 1e-6 {
+            assert_eq!(
+                dq.signum(),
+                err.signum(),
+                "case {case}: q moved {dq} against error {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_timing_model_monotone_in_a_and_d() {
+    // More actions or wider inputs never make an update cheaper.
+    let t = TimingModel::default();
+    let mut rng = Rng::seeded(9007);
+    for case in 0..CASES {
+        let arch = if rng.chance(0.5) { Arch::Perceptron } else { Arch::Mlp };
+        let mut small = NetConfig::new(arch, EnvKind::Simple);
+        small.a = rng.range(1, 32);
+        small.d = rng.range(1, 32);
+        let mut big = small;
+        big.a = small.a + rng.range(1, 16);
+        big.d = small.d + rng.range(1, 16);
+        for prec in [Precision::Fixed, Precision::Float] {
+            assert!(
+                t.qupdate(&big, prec).total() >= t.qupdate(&small, prec).total(),
+                "case {case}: {arch:?}/{prec:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_throughput_inverse_of_completion() {
+    let t = TimingModel::default();
+    let dev = Virtex7::default();
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let us = t.completion_us(&net, prec, &dev);
+            let kq = t.throughput_kq_s(&net, prec, &dev);
+            assert!((kq * us / 1e3 - 1.0).abs() < 1e-9, "{net:?}/{prec:?}");
+        }
+    }
+}
+
+// -------------------------------------------------------------- sigmoid LUT
+
+#[test]
+fn prop_lut_monotone_any_size() {
+    let mut rng = Rng::seeded(9008);
+    for case in 0..60 {
+        let size = rng.range(16, 4096);
+        let xmax = rng.f32_range(2.0, 16.0);
+        let lut = SigmoidLut::build(LutSpec { size, xmax }, None);
+        let mut xs = rng.vec_f32(64, -20.0, 20.0);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = -1.0f32;
+        for &x in &xs {
+            let v = lut.lookup(x);
+            assert!(v >= prev - 1e-7, "case {case}: size {size}, x {x}");
+            prev = v;
+        }
+    }
+}
+
+// --------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut rng = Rng::seeded(9009);
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.f64() * 2e6 - 1e6).round() / 8.0),
+        3 => {
+            let n = rng.below(12);
+            Json::Str((0..n).map(|_| random_char(rng)).collect())
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}_{}", rng.below(100)), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn random_char(rng: &mut Rng) -> char {
+    const POOL: &[char] = &['a', 'Z', '0', ' ', '"', '\\', '\n', '\t', 'é', '✓', '{', '}'];
+    POOL[rng.below(POOL.len())]
+}
