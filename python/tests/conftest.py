@@ -1,9 +1,16 @@
 """Shared fixtures for the kernel/model test-suite."""
 
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 
 import jax
+
+# make `compile.*` importable when pytest is invoked from the repo root
+# (CI runs `pytest python/tests`), not just from python/
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from compile.configs import (
     CONFIGS,

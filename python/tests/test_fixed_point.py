@@ -7,6 +7,8 @@ same vectors from VECTORS below.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property sweeps need hypothesis; offline images skip
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -4,6 +4,9 @@ shapes (A, D, H), precisions and transitions, not just the four paper
 configurations."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property sweeps need hypothesis; offline images skip
 from hypothesis import given, settings, strategies as st
 
 from compile.configs import (

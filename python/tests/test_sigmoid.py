@@ -5,6 +5,8 @@ value."  The X2 ablation (EXPERIMENTS.md) uses the same sweep.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property sweeps need hypothesis; offline images skip
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

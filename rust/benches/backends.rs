@@ -1,27 +1,33 @@
 //! Bench: per-Q-update latency of the three backends on identical
 //! workloads, across all four paper configurations and both precisions —
-//! plus the microbatch (scan-chained train_batch) ablation.
+//! stepwise (`update`) vs batched (`update_batch`) side by side.
 //!
 //! ```bash
 //! make artifacts && cargo bench --bench backends
 //! ```
 //!
-//! This is the *measured-on-host* companion to the modeled Tables 3–6: the
-//! FPGA-sim rows here show the simulator's host cost (it is a simulator; its
-//! *modeled* device time is what Tables 3–6 report), and the XLA rows show
-//! the deployment path's real latency including PJRT dispatch.
+//! This is the *measured-on-host* companion to the modeled Tables 3–6 and
+//! B1: the FPGA-sim rows here show the simulator's host cost (its *modeled*
+//! device time is what the tables report), and the XLA rows show the
+//! deployment path's real latency including PJRT dispatch. The batched rows
+//! drive the native `update_batch` paths: vectorized reused buffers on the
+//! CPU, pipelined multi-transition execution on the FPGA sim, and the
+//! scan-chained `train_batch` artifact on XLA.
 
 mod common;
 
-use common::{bench, print_header, print_result};
+use common::{bench, print_header, print_result, BenchResult};
 use qfpga::config::{Hyper, NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
 use qfpga::nn::params::QNetParams;
 use qfpga::qlearn::backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+use qfpga::qlearn::replay::FlatBatch;
 use qfpga::runtime::Runtime;
 use qfpga::util::Rng;
 
-fn run_backend<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: usize) {
+const BATCH: usize = 32;
+
+fn run_backend<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: usize) -> BenchResult {
     let step = w.net.a * w.net.d;
     let n = w.len();
     let mut i = 0usize;
@@ -38,6 +44,28 @@ fn run_backend<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: us
         i += 1;
     });
     print_result(&r);
+    r
+}
+
+/// Time `update_batch` over pre-built batches; returns mean µs **per update**.
+fn run_batched<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: usize) -> f64 {
+    let batches: Vec<FlatBatch> = (0..w.len() / BATCH)
+        .map(|k| w.flat_batch(k * BATCH, BATCH))
+        .collect();
+    let mut k = 0usize;
+    let r = bench(name, 2, (iters / BATCH).max(10), || {
+        backend.update_batch(&batches[k % batches.len()]).expect("batch");
+        k += 1;
+    });
+    let per_update = r.mean_us / BATCH as f64;
+    println!(
+        "{:<44} {:>10.2} µs/batch = {:>8.2} µs/update ({:.0} updates/s)",
+        r.name,
+        r.mean_us,
+        per_update,
+        1e6 / per_update
+    );
+    per_update
 }
 
 fn main() {
@@ -68,39 +96,92 @@ fn main() {
         }
     }
 
-    // ---- microbatch ablation: per-update cost via train_batch ------------
+    // ---- batched vs stepwise: the update_batch fast path ------------------
+    print_header(&format!("batched vs stepwise updates/s (B = {BATCH})"));
+    for net in NetConfig::all() {
+        let w = Workload::synthetic(net, 512, 11);
+        for prec in [Precision::Fixed, Precision::Float] {
+            let mut rng = Rng::seeded(0xF00D);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+
+            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let stepwise = run_backend(
+                &format!("cpu  step {} {}", net.name(), prec.as_str()),
+                &mut cpu,
+                &w,
+                iters,
+            );
+            let batched = run_batched(
+                &format!("cpu batch {} {}", net.name(), prec.as_str()),
+                &mut cpu,
+                &w,
+                iters,
+            );
+            println!(
+                "{:<44} {:>10.2}× stepwise",
+                format!("cpu speedup {} {}", net.name(), prec.as_str()),
+                stepwise.mean_us / batched
+            );
+
+            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            let sim_step = run_backend(
+                &format!("sim  step {} {}", net.name(), prec.as_str()),
+                &mut sim,
+                &w,
+                iters,
+            );
+            let sim_batch = run_batched(
+                &format!("sim batch {} {}", net.name(), prec.as_str()),
+                &mut sim,
+                &w,
+                iters,
+            );
+            println!(
+                "{:<44} {:>10.2}× stepwise (host); modeled device speedup in table B1",
+                format!("sim speedup {} {}", net.name(), prec.as_str()),
+                sim_step.mean_us / sim_batch
+            );
+        }
+    }
+
+    // ---- XLA microbatch: per-update cost via the train_batch artifact ----
     if let Some(rt) = &runtime {
-        print_header("microbatch ablation (XLA train_batch, per-update cost)");
+        print_header("xla batched vs stepwise (scan-chained train_batch artifact)");
         for net in NetConfig::all() {
             let mut rng = Rng::seeded(0xF00D);
             let params = QNetParams::init(&net, 0.3, &mut rng);
             let mut xla = XlaBackend::new(rt, net, Precision::Fixed, params).expect("backend");
+            // size the workload from the artifact's native batch so every
+            // timed flush hits the scan-chained path (a ragged tail would
+            // silently fall back to the stepwise artifact)
             let b = xla.preferred_batch();
             let w = Workload::synthetic(net, b * 8, 13);
-            let step = net.a * net.d;
+            let stepwise = run_backend(
+                &format!("xla  step {} fixed", net.name()),
+                &mut xla,
+                &w,
+                iters,
+            );
+            let batches: Vec<FlatBatch> =
+                (0..8).map(|k| w.flat_batch(k * b, b)).collect();
             let mut k = 0usize;
             let r = bench(
                 &format!("xla batch={b} {} fixed", net.name()),
                 2,
                 (iters / b).max(20),
                 || {
-                    let lo = (k % 8) * b;
-                    xla.update_batch(
-                        &w.sa_cur[lo * step..(lo + b) * step],
-                        &w.sa_next[lo * step..(lo + b) * step],
-                        &w.actions[lo..lo + b],
-                        &w.rewards[lo..lo + b],
-                    )
-                    .expect("batch");
+                    xla.update_batch(&batches[k % batches.len()]).expect("batch");
                     k += 1;
                 },
             );
+            let per_update = r.mean_us / b as f64;
             println!(
-                "{:<44} {:>10.2} µs/batch = {:>8.2} µs/update ({:.0} updates/s)",
+                "{:<44} {:>10.2} µs/batch = {:>8.2} µs/update ({:.0} updates/s, {:.2}× stepwise)",
                 r.name,
                 r.mean_us,
-                r.mean_us / b as f64,
-                1e6 / (r.mean_us / b as f64)
+                per_update,
+                1e6 / per_update,
+                stepwise.mean_us / per_update
             );
         }
     }

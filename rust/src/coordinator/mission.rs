@@ -21,8 +21,12 @@ pub struct MissionConfig {
     pub max_steps: usize,
     pub seed: u64,
     pub hyper: Hyper,
-    /// Use the scan-chained train_batch artifact (XLA backend only).
+    /// Flush transitions through the backend's *preferred* batch size
+    /// (the scan-chained artifact on XLA, the native fast paths elsewhere).
     pub microbatch: bool,
+    /// Explicit per-rover flush size for `update_batch` (1 = stepwise).
+    /// Ignored when `microbatch` is set.
+    pub batch: usize,
 }
 
 impl Default for MissionConfig {
@@ -37,6 +41,7 @@ impl Default for MissionConfig {
             seed: 7,
             hyper: Hyper::default(),
             microbatch: false,
+            batch: 1,
         }
     }
 }
@@ -88,12 +93,27 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
     let params = QNetParams::init(&net, 0.3, &mut rng);
     let policy = Policy::default_training();
 
+    // batching policy shared by all backends: `microbatch` selects the
+    // backend's preferred flush size, `batch` pins an explicit one
+    fn apply_batch<B: crate::qlearn::QBackend>(
+        learner: NeuralQLearner<B>,
+        cfg: &MissionConfig,
+    ) -> NeuralQLearner<B> {
+        if cfg.microbatch {
+            learner.with_microbatch()
+        } else if cfg.batch > 1 {
+            learner.with_batch(cfg.batch)
+        } else {
+            learner
+        }
+    }
+
     // The backends are distinct concrete types (and !Send), so dispatch
     // monomorphically and merge afterwards.
     let (train_report, fpga_modeled_us, fpga_cycles) = match cfg.backend {
         BackendKind::Cpu => {
             let backend = CpuBackend::new(net, cfg.precision, params, cfg.hyper);
-            let mut learner = NeuralQLearner::new(backend, policy);
+            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
             let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
             (r, None, None)
         }
@@ -102,16 +122,13 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
                 crate::error::Error::Config("XLA backend needs a Runtime".into())
             })?;
             let backend = XlaBackend::new(rt, net, cfg.precision, params)?;
-            let mut learner = NeuralQLearner::new(backend, policy);
-            if cfg.microbatch {
-                learner = learner.with_microbatch();
-            }
+            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
             let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
             (r, None, None)
         }
         BackendKind::FpgaSim => {
             let backend = FpgaSimBackend::new(net, cfg.precision, params, cfg.hyper);
-            let mut learner = NeuralQLearner::new(backend, policy);
+            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
             let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
             let acc = learner.backend.accelerator();
             let us = acc.modeled_time_us();
@@ -161,6 +178,44 @@ mod tests {
         assert!(r.fpga_modeled_us.unwrap() > 0.0);
         // fixed MLP: 13A+3 = 81 cycles per update, plus forward sweeps
         assert!(cycles as f64 >= r.train.total_updates as f64 * 81.0);
+    }
+
+    #[test]
+    fn batched_mission_learns_from_every_step() {
+        for backend in [BackendKind::Cpu, BackendKind::FpgaSim] {
+            let cfg = MissionConfig {
+                episodes: 10,
+                max_steps: 50,
+                backend,
+                batch: 8,
+                ..Default::default()
+            };
+            let r = run_mission(&cfg, None).unwrap();
+            // episode-end flushes guarantee updates == steps
+            assert_eq!(
+                r.train.total_updates as usize, r.train.total_steps,
+                "{backend:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_fpga_mission_charges_fewer_cycles_than_stepwise() {
+        let stepwise = MissionConfig {
+            episodes: 8,
+            max_steps: 40,
+            backend: BackendKind::FpgaSim,
+            ..Default::default()
+        };
+        let batched = MissionConfig { batch: 8, ..stepwise.clone() };
+        let a = run_mission(&stepwise, None).unwrap();
+        let b = run_mission(&batched, None).unwrap();
+        // identical action-selection forward counts are not guaranteed
+        // (policies see differently-timed weights), but the batched
+        // datapath must model strictly fewer cycles *per update*
+        let per_a = a.fpga_cycles.unwrap() as f64 / a.train.total_updates as f64;
+        let per_b = b.fpga_cycles.unwrap() as f64 / b.train.total_updates as f64;
+        assert!(per_b < per_a, "{per_b} >= {per_a}");
     }
 
     #[test]

@@ -20,4 +20,4 @@ pub mod telemetry;
 
 pub use mission::{run_mission, MissionConfig, MissionReport};
 pub use scheduler::{run_fleet, FleetReport};
-pub use sweep::{measure_backend, WorkloadTiming};
+pub use sweep::{measure_backend, measure_backend_batched, WorkloadTiming};

@@ -10,8 +10,9 @@
 use std::time::Instant;
 
 use crate::config::NetConfig;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::qlearn::backend::QBackend;
+use crate::qlearn::replay::FlatBatch;
 use crate::util::Rng;
 
 /// A pre-generated workload of `n` transitions for one configuration.
@@ -46,6 +47,20 @@ impl Workload {
     pub fn is_empty(&self) -> bool {
         self.actions.is_empty()
     }
+
+    /// Copy transitions `[lo, lo+n)` (clamped to the workload) into a
+    /// [`FlatBatch`] for `QBackend::update_batch`.
+    pub fn flat_batch(&self, lo: usize, n: usize) -> FlatBatch {
+        let step = self.net.a * self.net.d;
+        let hi = (lo + n).min(self.len());
+        let lo = lo.min(hi);
+        FlatBatch {
+            sa_cur: self.sa_cur[lo * step..hi * step].to_vec(),
+            sa_next: self.sa_next[lo * step..hi * step].to_vec(),
+            actions: self.actions[lo..hi].to_vec(),
+            rewards: self.rewards[lo..hi].to_vec(),
+        }
+    }
 }
 
 /// Wall-clock timing of a workload on one backend.
@@ -72,7 +87,11 @@ pub fn measure_backend<B: QBackend>(
 ) -> Result<WorkloadTiming> {
     let step = workload.net.a * workload.net.d;
     let n = workload.len();
-    assert!(n > warmup, "workload smaller than warmup");
+    if n <= warmup {
+        return Err(Error::Config(format!(
+            "workload of {n} transitions is smaller than warmup {warmup}"
+        )));
+    }
 
     let mut lat_us = Vec::with_capacity(n - warmup);
     let total_start = Instant::now();
@@ -98,6 +117,60 @@ pub fn measure_backend<B: QBackend>(
 
     Ok(WorkloadTiming {
         backend_name: backend.name(),
+        updates,
+        total_seconds: measured_seconds,
+        mean_us,
+        median_us,
+        kq_per_s: updates as f64 / measured_seconds / 1e3,
+    })
+}
+
+/// Drive the workload through `backend.update_batch` in `batch`-sized
+/// chunks, timing each flush. Batches are materialized up front so the
+/// timed region measures only the backend. Reported `mean_us`/`median_us`
+/// are **per update** (per-flush time ÷ flush size), comparable directly
+/// with [`measure_backend`].
+pub fn measure_backend_batched<B: QBackend>(
+    backend: &mut B,
+    workload: &Workload,
+    warmup: usize,
+    batch: usize,
+) -> Result<WorkloadTiming> {
+    if batch == 0 {
+        return Err(Error::Config("batch size must be positive".into()));
+    }
+    let n = workload.len();
+    if n <= warmup + batch {
+        return Err(Error::Config(format!(
+            "workload of {n} transitions is smaller than warmup {warmup} + one batch {batch}"
+        )));
+    }
+
+    let batches: Vec<FlatBatch> = (0..n / batch)
+        .map(|k| workload.flat_batch(k * batch, batch))
+        .collect();
+    let warmup_batches = warmup.div_ceil(batch).min(batches.len() - 1);
+
+    let mut lat_us = Vec::with_capacity(batches.len() - warmup_batches);
+    let mut measured_seconds = 0.0f64;
+    for (k, b) in batches.iter().enumerate() {
+        let t0 = Instant::now();
+        backend.update_batch(b)?;
+        let dt = t0.elapsed();
+        if k >= warmup_batches {
+            lat_us.push(dt.as_secs_f64() * 1e6 / batch as f64);
+            measured_seconds += dt.as_secs_f64();
+        }
+    }
+
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let flushes = lat_us.len();
+    let updates = flushes * batch;
+    let mean_us = lat_us.iter().sum::<f64>() / flushes as f64;
+    let median_us = lat_us[flushes / 2];
+
+    Ok(WorkloadTiming {
+        backend_name: format!("{} [batch={batch}]", backend.name()),
         updates,
         total_seconds: measured_seconds,
         mean_us,
@@ -143,5 +216,34 @@ mod tests {
         assert!(t.mean_us > 0.0);
         assert!(t.median_us <= t.mean_us * 10.0);
         assert!(t.kq_per_s > 0.0);
+    }
+
+    #[test]
+    fn flat_batch_slices_and_clamps() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let w = Workload::synthetic(net, 10, 5);
+        let step = net.a * net.d;
+        let b = w.flat_batch(2, 4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.sa_cur, w.sa_cur[2 * step..6 * step].to_vec());
+        assert_eq!(b.actions, w.actions[2..6].to_vec());
+        assert!(b.validate(&net).is_ok());
+        // tail clamp
+        assert_eq!(w.flat_batch(8, 10).len(), 2);
+        assert!(w.flat_batch(10, 4).is_empty());
+    }
+
+    #[test]
+    fn measure_batched_cpu_backend() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(62);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let w = Workload::synthetic(net, 128, 2);
+        let t = measure_backend_batched(&mut backend, &w, 16, 8).unwrap();
+        assert!(t.backend_name.contains("batch=8"));
+        assert_eq!(t.updates % 8, 0);
+        assert!(t.updates >= 8);
+        assert!(t.mean_us > 0.0 && t.kq_per_s > 0.0);
     }
 }

@@ -1,38 +1,66 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the offline flight
+//! image carries no proc-macro dependencies (see `util` module docs for the
+//! zero-dependency rationale).
+
+use std::fmt;
 
 /// Convenience alias used across the crate.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Errors surfaced by the qfpga library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Failure inside the XLA/PJRT runtime (compile, execute, transfer).
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Artifact directory / manifest problems.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Mismatch between an artifact's declared interface and what the
     /// caller supplied (wrong shape, arity, dtype, ...).
-    #[error("interface mismatch: {0}")]
     Interface(String),
 
     /// Invalid experiment or system configuration.
-    #[error("config: {0}")]
     Config(String),
 
     /// Environment misuse (invalid action id, step after terminal, ...).
-    #[error("environment: {0}")]
     Env(String),
 
     /// FPGA model inconsistency (e.g. design does not fit the device).
-    #[error("fpga model: {0}")]
     Fpga(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Interface(m) => write!(f, "interface mismatch: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Env(m) => write!(f, "environment: {m}"),
+            Error::Fpga(m) => write!(f, "fpga model: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -45,5 +73,26 @@ impl Error {
     /// Helper for interface errors.
     pub fn interface(msg: impl Into<String>) -> Self {
         Error::Interface(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config: x");
+        assert_eq!(Error::interface("y").to_string(), "interface mismatch: y");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(io.to_string().starts_with("io: "));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "f").into();
+        assert!(e.source().is_some());
+        assert!(Error::Config("x".into()).source().is_none());
     }
 }

@@ -105,6 +105,8 @@ impl FixedParams {
 pub struct AccelStats {
     pub updates: u64,
     pub forwards: u64,
+    /// Batched `qupdate_batch` calls (each covers ≥1 update).
+    pub batches: u64,
     pub cycles: u64,
 }
 
@@ -262,6 +264,68 @@ impl FpgaAccelerator {
         self.stats.updates += 1;
         self.stats.cycles += breakdown.total();
         Ok((out, breakdown))
+    }
+
+    /// Apply a batch of transitions back-to-back — the paper's proposed
+    /// datapath pipelining (Section 6) realized for multi-transition
+    /// streams. Numerics are **identical** to calling [`Self::qupdate`] per
+    /// transition (the weight chain is inherently sequential); the cycle
+    /// charge uses [`TimingModel::qupdate_batch_cycles`], where the control
+    /// FSM streams transitions through the action-pipelined MAC array and
+    /// overlaps error capture with the sweep tail.
+    ///
+    /// Inputs are flattened (B·A·D) row-major; returns one Q-error per
+    /// transition and charges the batch's cycle cost once.
+    pub fn qupdate_batch(
+        &mut self,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+    ) -> Result<Vec<f32>> {
+        let step = self.cfg.a * self.cfg.d;
+        let b = actions.len();
+        if rewards.len() != b || sa_cur.len() != b * step || sa_next.len() != b * step {
+            return Err(Error::interface(format!(
+                "batch shapes: {} actions, {} rewards, {}/{} encoded elements (step {step})",
+                b,
+                rewards.len(),
+                sa_cur.len(),
+                sa_next.len()
+            )));
+        }
+        // validate every action before touching the weights: a rejected
+        // batch must leave the accelerator untouched
+        for &a in actions {
+            if a >= self.cfg.a {
+                return Err(Error::Env(format!(
+                    "action {a} out of range 0..{}",
+                    self.cfg.a
+                )));
+            }
+        }
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let mut errs = Vec::with_capacity(b);
+        for k in 0..b {
+            let t = Transition {
+                sa_cur: &sa_cur[k * step..(k + 1) * step],
+                sa_next: &sa_next[k * step..(k + 1) * step],
+                action: actions[k],
+                reward: rewards[k],
+            };
+            let out = match self.precision {
+                Precision::Fixed => self.fixed_qupdate(&t)?,
+                Precision::Float => self.float_qupdate(&t)?,
+            };
+            errs.push(out.q_err);
+        }
+        let cycles = self.timing.qupdate_batch_cycles(&self.cfg, self.precision, b);
+        self.stats.updates += b as u64;
+        self.stats.batches += 1;
+        self.stats.cycles += cycles;
+        Ok(errs)
     }
 
     fn check_sa(&self, sa: &[f32]) -> Result<()> {
@@ -614,6 +678,64 @@ mod tests {
         assert!(acc
             .qupdate(&Transition { sa_cur: &ok, sa_next: &ok, action: 99, reward: 0.0 })
             .is_err());
+    }
+
+    #[test]
+    fn batched_qupdate_matches_stepwise_and_charges_pipelined_cycles() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let (cfg, params, mut batched) = setup(Arch::Mlp, EnvKind::Simple, prec);
+            let mut stepwise = FpgaAccelerator::paper(cfg, prec, &params, Hyper::default());
+            let mut rng = Rng::seeded(17);
+            let n = 6;
+            let step = cfg.a * cfg.d;
+            let sa_cur = rng.vec_f32(n * step, -1.0, 1.0);
+            let sa_next = rng.vec_f32(n * step, -1.0, 1.0);
+            let actions: Vec<usize> = (0..n).map(|_| rng.below(cfg.a)).collect();
+            let rewards = rng.vec_f32(n, -1.0, 1.0);
+
+            let got = batched.qupdate_batch(&sa_cur, &sa_next, &actions, &rewards).unwrap();
+            let mut want = Vec::new();
+            for i in 0..n {
+                let (out, _) = stepwise
+                    .qupdate(&Transition {
+                        sa_cur: &sa_cur[i * step..(i + 1) * step],
+                        sa_next: &sa_next[i * step..(i + 1) * step],
+                        action: actions[i],
+                        reward: rewards[i],
+                    })
+                    .unwrap();
+                want.push(out.q_err);
+            }
+            // numerics: identical datapath, identical bits
+            assert_eq!(got, want, "{prec:?}");
+            assert_eq!(
+                batched.params().max_abs_diff(&stepwise.params()),
+                0.0,
+                "{prec:?}"
+            );
+            // accounting: the batched charge follows the batch cycle model
+            let expect = TimingModel::default().qupdate_batch_cycles(&cfg, prec, n);
+            assert_eq!(batched.stats().cycles, expect, "{prec:?}");
+            assert_eq!(batched.stats().updates, n as u64);
+            assert_eq!(batched.stats().batches, 1);
+        }
+    }
+
+    #[test]
+    fn batched_qupdate_validates_before_mutating() {
+        let (cfg, _, mut acc) = setup(Arch::Perceptron, EnvKind::Simple, Precision::Fixed);
+        let before = acc.params();
+        let step = cfg.a * cfg.d;
+        let sa = vec![0.25f32; 2 * step];
+        // second action out of range: nothing may be applied
+        let r = acc.qupdate_batch(&sa, &sa, &[0, cfg.a], &[0.1, 0.2]);
+        assert!(r.is_err());
+        assert_eq!(acc.stats().updates, 0);
+        assert_eq!(acc.stats().cycles, 0);
+        assert_eq!(acc.params().max_abs_diff(&before), 0.0);
+        // empty batch: no-op
+        assert!(acc.qupdate_batch(&[], &[], &[], &[]).unwrap().is_empty());
+        assert_eq!(acc.stats().batches, 0);
     }
 
     #[test]

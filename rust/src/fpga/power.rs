@@ -90,6 +90,26 @@ pub fn energy_per_update_uj(
     power_w(cfg, prec, coeffs) * timing.completion_us(cfg, prec, dev)
 }
 
+/// Energy per Q-update on the **batched** datapath, µJ. The pipelined MAC
+/// array keeps the same power envelope (the same units toggle, just with
+/// fewer idle cycles), so fewer cycles per update translate directly into
+/// less energy per update — the paper's Section 6 expectation that
+/// "power consumption can be further reduced by introducing pipelining".
+/// `b` must be nonzero.
+pub fn batched_energy_per_update_uj(
+    cfg: &NetConfig,
+    prec: Precision,
+    coeffs: &PowerCoeffs,
+    timing: &TimingModel,
+    dev: &Virtex7,
+    b: usize,
+) -> f64 {
+    debug_assert!(b > 0);
+    let us_per_update =
+        dev.cycles_to_us(timing.qupdate_batch_cycles(cfg, prec, b)) / b as f64;
+    power_w(cfg, prec, coeffs) * us_per_update
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +162,23 @@ mod tests {
                 (0.65..=1.35).contains(&ratio),
                 "{env:?}/{prec:?}: model {w:.2} W vs paper {paper_w} W"
             );
+        }
+    }
+
+    /// Batched execution lowers fixed-point energy per update and leaves
+    /// float unchanged (its serial chains cannot pipeline).
+    #[test]
+    fn batching_cuts_fixed_energy_only() {
+        let c = PowerCoeffs::default();
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            let fx = energy_per_update_uj(&mlp(env), Precision::Fixed, &c, &t, &dev);
+            let fx_b = batched_energy_per_update_uj(&mlp(env), Precision::Fixed, &c, &t, &dev, 32);
+            assert!(fx_b < fx, "{env:?}: batched {fx_b} >= stepwise {fx}");
+            let fp = energy_per_update_uj(&mlp(env), Precision::Float, &c, &t, &dev);
+            let fp_b = batched_energy_per_update_uj(&mlp(env), Precision::Float, &c, &t, &dev, 32);
+            assert!((fp_b - fp).abs() < 1e-9, "{env:?}: float changed");
         }
     }
 

@@ -184,6 +184,63 @@ impl TimingModel {
         }
     }
 
+    /// Cycles for `b` Q-updates streamed back-to-back through the **batched
+    /// datapath** — the paper's Section 6 pipelining proposal realized for
+    /// multi-transition streams.
+    ///
+    /// Fixed point: the MAC array accepts a new action every cycle (II = 1)
+    /// and the *two* feed-forward sweeps of one update share the pre-update
+    /// weights, so the second sweep enters the pipe right behind the first
+    /// (one fill per update, not per sweep); the error-capture comparator
+    /// consumes Q-values as they stream out, leaving only its final stage
+    /// exposed. The weight write-back of update *i* must complete before
+    /// the sweeps of update *i+1* (the scan dependence), so updates
+    /// themselves remain serial:
+    ///
+    /// ```text
+    /// per-update = (2A + depth − 1) + fx_stage + backprop
+    /// ```
+    ///
+    /// Float: the serial LogiCORE MAC chains leave no action-level overlap
+    /// to exploit (the chain is busy for the whole action), so batching
+    /// buys nothing on-device — cycles are `b ×` the stepwise cost. This
+    /// asymmetry widens the paper's fixed-vs-float gap under batching.
+    pub fn qupdate_batch_cycles(&self, cfg: &NetConfig, prec: Precision, b: usize) -> u64 {
+        if b == 0 {
+            return 0;
+        }
+        let n = b as u64;
+        match prec {
+            Precision::Fixed => {
+                let a = cfg.a as u64;
+                let stages = match cfg.arch {
+                    Arch::Perceptron => 1,
+                    Arch::Mlp => 2,
+                };
+                let depth = stages * self.fx_stage();
+                let per = (2 * a + depth - 1) + self.fx_stage()
+                    + self.backprop_cycles(cfg, prec);
+                n * per
+            }
+            Precision::Float => n * self.qupdate(cfg, prec).total(),
+        }
+    }
+
+    /// Steady-state throughput of the batched datapath, kQ/s.
+    pub fn batch_throughput_kq_s(
+        &self,
+        cfg: &NetConfig,
+        prec: Precision,
+        b: usize,
+        dev: &Virtex7,
+    ) -> f64 {
+        let cycles = self.qupdate_batch_cycles(cfg, prec, b);
+        if cycles == 0 {
+            return 0.0;
+        }
+        dev.clock_hz * b as f64 / cycles as f64 / 1e3
+    }
+
     /// Completion time in µs for one Q-update (paper Tables 3–6).
     pub fn completion_us(&self, cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> f64 {
         dev.cycles_to_us(self.qupdate(cfg, prec).total())
@@ -312,6 +369,51 @@ mod tests {
             let p = pipe.qupdate(&c, Precision::Fixed).total();
             assert!(p * 2 < b, "{arch:?}: {p} vs {b}");
         }
+    }
+
+    /// The batched datapath must beat the stepwise one in fixed point on
+    /// every paper configuration, and match it exactly in float (serial
+    /// chains cannot pipeline).
+    #[test]
+    fn batched_beats_stepwise_fixed_matches_float() {
+        let t = TimingModel::default();
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            for env in [EnvKind::Simple, EnvKind::Complex] {
+                let c = cfg(arch, env);
+                for b in [1usize, 8, 32, 256] {
+                    let step_total = b as u64 * t.qupdate(&c, Precision::Fixed).total();
+                    let batch_total = t.qupdate_batch_cycles(&c, Precision::Fixed, b);
+                    assert!(
+                        batch_total < step_total,
+                        "{arch:?}/{env:?} b={b}: {batch_total} >= {step_total}"
+                    );
+                    assert_eq!(
+                        t.qupdate_batch_cycles(&c, Precision::Float, b),
+                        b as u64 * t.qupdate(&c, Precision::Float).total(),
+                        "{arch:?}/{env:?} b={b}: float batching must be neutral"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Batched throughput: ≥2× over stepwise for the fixed perceptron, and
+    /// linear in the batch (per-update cost is batch-size independent).
+    #[test]
+    fn batch_throughput_shape() {
+        let t = TimingModel::default();
+        let dev = Virtex7::default();
+        let c = cfg(Arch::Perceptron, EnvKind::Complex);
+        let stepwise = t.throughput_kq_s(&c, Precision::Fixed, &dev);
+        let batched = t.batch_throughput_kq_s(&c, Precision::Fixed, 32, &dev);
+        assert!(batched > 2.0 * stepwise, "{batched} vs {stepwise}");
+        // linearity: kQ/s is independent of b
+        let b8 = t.batch_throughput_kq_s(&c, Precision::Fixed, 8, &dev);
+        let b64 = t.batch_throughput_kq_s(&c, Precision::Fixed, 64, &dev);
+        assert!((b8 - b64).abs() < 1e-9, "{b8} vs {b64}");
+        // degenerate inputs
+        assert_eq!(t.qupdate_batch_cycles(&c, Precision::Fixed, 0), 0);
+        assert_eq!(t.batch_throughput_kq_s(&c, Precision::Fixed, 0, &dev), 0.0);
     }
 
     #[test]

@@ -33,14 +33,17 @@ qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 20
 
 USAGE: qfpga <report|train|fleet|sweep|validate|info> [options]
 
-  report    --table 1..8 | --headline | --ablation pipeline|lut|wordlen | --all
+  report    --table 1..8|batch | --headline | --ablation pipeline|lut|wordlen | --all
             [--no-measure]        skip measuring the host-CPU rows
+            [--batch B]           batch size for the B1 batched-datapath table
   train     --arch perceptron|mlp --env simple|complex --precision fixed|float
             --backend cpu|xla|fpga-sim --episodes N --max-steps N --seed S
-            [--microbatch]
-  fleet     --rovers N            plus all `train` options
+            [--microbatch]        flush at the backend's preferred batch size
+            [--batch B]           flush through update_batch every B steps
+  fleet     --rovers N            plus all `train` options (incl. --batch)
   sweep     --updates N           per-update latency, all backends/configs
-  validate  --updates N           cross-backend numeric equivalence
+            [--batch B]           also measure the batched update_batch path
+  validate  --updates N           cross-backend + batch/stepwise equivalence
   info                            artifacts, device, cycle model summary
 ";
 
@@ -81,6 +84,7 @@ fn mission_config(args: &Args) -> Result<MissionConfig> {
         seed: args.get_parse("seed", 7u64)?,
         hyper: Hyper::default(),
         microbatch: args.flag("microbatch"),
+        batch: args.get_parse("batch", 1usize)?,
     })
 }
 
@@ -123,6 +127,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "7" => println!("{}", report::table_power(EnvKind::Simple)),
             "8" => println!("{}", report::table_power(EnvKind::Complex)),
             "energy" => println!("{}", report::energy_table()),
+            "batch" => println!("{}", report::table_batch(args.get_parse("batch", 16usize)?)),
             other => return Err(qfpga::error::Error::Config(format!("no table `{other}`"))),
         }
         return Ok(());
@@ -151,6 +156,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     println!("{}", report::table_power(EnvKind::Simple));
     println!("{}", report::table_power(EnvKind::Complex));
     println!("{}", report::energy_table());
+    println!("{}", report::table_batch(args.get_parse("batch", 16usize)?));
     println!("{}", report::headline());
     println!("{}", report::ablation_pipelining());
     println!("{}", report::ablation_lut_rom());
@@ -213,8 +219,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use qfpga::coordinator::measure_backend_batched;
     let n = args.get_parse("updates", 1_000usize)?;
-    let warmup = (n / 10).max(10);
+    let batch = args.get_parse("batch", 0usize)?;
+    let warmup = (n / 10).max(10).max(2 * batch);
     let runtime = Runtime::from_default_dir().ok();
     if runtime.is_none() {
         println!("(artifacts not built; skipping the xla backend)");
@@ -231,13 +239,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
             let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
             print_timing(measure_backend(&mut cpu, &workload, warmup)?);
+            if batch > 1 {
+                print_timing(measure_backend_batched(&mut cpu, &workload, warmup, batch)?);
+            }
 
             let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
             print_timing(measure_backend(&mut sim, &workload, warmup)?);
+            if batch > 1 {
+                print_timing(measure_backend_batched(&mut sim, &workload, warmup, batch)?);
+            }
 
             if let Some(rt) = &runtime {
                 let mut xla = XlaBackend::new(rt, net, prec, params)?;
                 print_timing(measure_backend(&mut xla, &workload, warmup)?);
+                if batch > 1 {
+                    print_timing(measure_backend_batched(&mut xla, &workload, warmup, batch)?);
+                }
             }
         }
     }
@@ -254,7 +271,59 @@ fn print_timing(t: qfpga::coordinator::WorkloadTiming) {
 fn cmd_validate(args: &Args) -> Result<()> {
     use qfpga::qlearn::backend::QBackend;
     let n = args.get_parse("updates", 50usize)?;
-    let rt = Runtime::from_default_dir()?;
+
+    // ---- local conformance (no artifacts needed): the native batch paths
+    // must reproduce the stepwise paths on identical transition streams
+    println!("batch-vs-stepwise conformance (native update_batch paths):");
+    let mut worst_batch: f64 = 0.0;
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let mut rng = Rng::seeded(0xCAFE);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+            let w = Workload::synthetic(net, n, 21);
+            let batch = w.flat_batch(0, n);
+            let step = net.a * net.d;
+
+            let mut cpu_step = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut cpu_batch = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut sim_step = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut sim_batch = FpgaSimBackend::new(net, prec, params, Hyper::default());
+
+            let cpu_errs = cpu_batch.update_batch(&batch)?;
+            let sim_errs = sim_batch.update_batch(&batch)?;
+            let mut max_diff = 0f64;
+            for i in 0..n {
+                let sc = &w.sa_cur[i * step..(i + 1) * step];
+                let sn = &w.sa_next[i * step..(i + 1) * step];
+                let e_cpu = cpu_step.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+                let e_sim = sim_step.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+                max_diff = max_diff.max((cpu_errs[i] as f64 - e_cpu).abs());
+                max_diff = max_diff.max((sim_errs[i] as f64 - e_sim).abs());
+            }
+            max_diff = max_diff.max(cpu_batch.params().max_abs_diff(&cpu_step.params()) as f64);
+            max_diff = max_diff.max(sim_batch.params().max_abs_diff(&sim_step.params()) as f64);
+            println!(
+                "  {:<26} {:<6} max |Δ| over {n} updates: {max_diff:.2e}",
+                net.name(),
+                prec.as_str()
+            );
+            worst_batch = worst_batch.max(max_diff);
+        }
+    }
+    if worst_batch > 1e-5 {
+        return Err(qfpga::error::Error::Config(format!(
+            "batch path diverged from stepwise by {worst_batch:.2e} (budget 1e-5)"
+        )));
+    }
+
+    // ---- cross-backend check including XLA (needs built artifacts)
+    let rt = match Runtime::from_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("OK: batch == stepwise within 1e-5 (xla cross-check skipped: {e})");
+            return Ok(());
+        }
+    };
     let mut worst: f64 = 0.0;
     for net in NetConfig::all() {
         for prec in [Precision::Fixed, Precision::Float] {

@@ -18,4 +18,7 @@ pub mod qupdate;
 
 pub use activation::{sigmoid, sigmoid_deriv, Activation, LutSpec, SigmoidLut};
 pub use params::QNetParams;
-pub use qupdate::{forward, forward_full, q_error, qupdate, Datapath, ForwardTrace, QUpdateOutput};
+pub use qupdate::{
+    forward, forward_full, q_error, qupdate, qupdate_batch, BatchScratch, Datapath, ForwardTrace,
+    QUpdateOutput,
+};

@@ -80,6 +80,10 @@ fn dot_q(dp: &Datapath, x: &[f32], w: &[f32]) -> f32 {
 }
 
 /// Feed-forward for all A actions; `sa` is row-major (A, D).
+///
+/// NOTE: [`forward_into`] is this function's allocation-free twin for the
+/// batch path; any numeric change here must be mirrored there (the
+/// conformance suite in `tests/batch_equiv.rs` enforces bit-equality).
 pub fn forward_full(
     cfg: &NetConfig,
     params: &QNetParams,
@@ -186,6 +190,10 @@ pub fn q_error(dp: &Datapath, hyper: &Hyper, q_sa: f32, q_next_max: f32, reward:
 }
 
 /// One full paper Q-update (two sweeps + error capture + backprop).
+///
+/// NOTE: [`qupdate_batch`] applies the identical op chain in place over
+/// reused buffers; any numeric change here must be mirrored there (the
+/// conformance suite in `tests/batch_equiv.rs` enforces bit-equality).
 #[allow(clippy::too_many_arguments)]
 pub fn qupdate(
     cfg: &NetConfig,
@@ -268,6 +276,226 @@ pub fn qupdate(
     };
 
     Ok(QUpdateOutput { params: new_params, q_cur: cur.q, q_next: nxt.q, q_err: err })
+}
+
+// ------------------------------------------------------------- batch path
+
+/// Scratch buffers for [`qupdate_batch`]: two quantized input tiles, two
+/// forward traces and the hidden-delta vector. Reused across flushes so the
+/// steady-state batch path performs **no allocation** — that (plus skipping
+/// the per-call weight requantization, which is an identity on the on-grid
+/// weights the path maintains) is where the batched CPU speedup comes from.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    sa_cur_q: Vec<f32>,
+    sa_next_q: Vec<f32>,
+    cur: ForwardTrace,
+    nxt: ForwardTrace,
+    d1: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Quantize every parameter onto the datapath grid in place (identity in
+/// float mode). `qupdate` does this implicitly on every call; the batch
+/// path does it once at batch entry and then keeps the weights on-grid,
+/// which is bit-equivalent because quantization is idempotent.
+fn quantize_params_in_place(params: &mut QNetParams, dp: &Datapath) {
+    match params {
+        QNetParams::Perceptron { w, b } => {
+            for v in w.iter_mut() {
+                *v = dp.q(*v);
+            }
+            *b = dp.q(*b);
+        }
+        QNetParams::Mlp { w1, b1, w2, b2 } => {
+            for v in w1.iter_mut().chain(b1.iter_mut()).chain(w2.iter_mut()) {
+                *v = dp.q(*v);
+            }
+            *b2 = dp.q(*b2);
+        }
+    }
+}
+
+/// Feed-forward into reused buffers. Identical arithmetic to
+/// [`forward_full`] except the weights are *not* requantized — callers must
+/// pass on-grid parameters (see [`quantize_params_in_place`]).
+fn forward_into(
+    cfg: &NetConfig,
+    params: &QNetParams,
+    sa: &[f32],
+    dp: &Datapath,
+    sa_q: &mut Vec<f32>,
+    trace: &mut ForwardTrace,
+) -> Result<()> {
+    let (a_n, d) = (cfg.a, cfg.d);
+    if sa.len() != a_n * d {
+        return Err(Error::interface(format!(
+            "sa length {} != A*D = {}",
+            sa.len(),
+            a_n * d
+        )));
+    }
+    sa_q.clear();
+    sa_q.extend(sa.iter().map(|&x| dp.q(x)));
+    trace.q.clear();
+    trace.pre2.clear();
+    trace.hid.clear();
+    trace.pre1.clear();
+
+    match params {
+        QNetParams::Perceptron { w, b } => {
+            if w.len() != d {
+                return Err(Error::interface("perceptron weight length != D"));
+            }
+            for ai in 0..a_n {
+                let x = &sa_q[ai * d..(ai + 1) * d];
+                let mut acc = 0f32;
+                for (xi, wi) in x.iter().zip(w.iter()) {
+                    acc += xi * wi;
+                }
+                let pre = dp.q(acc + *b);
+                trace.pre2.push(pre);
+                trace.q.push(dp.activation.f(pre));
+            }
+        }
+        QNetParams::Mlp { w1, b1, w2, b2 } => {
+            let h = cfg.h;
+            if w1.len() != d * h || b1.len() != h || w2.len() != h {
+                return Err(Error::interface("mlp parameter shapes"));
+            }
+            for ai in 0..a_n {
+                let x = &sa_q[ai * d..(ai + 1) * d];
+                for j in 0..h {
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += x[i] * w1[i * h + j];
+                    }
+                    let pre = dp.q(acc + b1[j]);
+                    trace.pre1.push(pre);
+                    trace.hid.push(dp.activation.f(pre));
+                }
+                let hid_row = &trace.hid[ai * h..(ai + 1) * h];
+                let mut acc = 0f32;
+                for j in 0..h {
+                    acc += hid_row[j] * w2[j];
+                }
+                let pre2 = dp.q(acc + *b2);
+                trace.pre2.push(pre2);
+                trace.q.push(dp.activation.f(pre2));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply a *sequence* of Q-updates in one call, mutating `params` in place
+/// and appending one Q-error per transition to `errs`.
+///
+/// Bit-for-bit equivalent to calling [`qupdate`] per transition and
+/// threading the parameters through (the conformance suite in
+/// `tests/batch_equiv.rs` enforces this for every backend pair), but with
+/// the per-call costs hoisted out of the loop: no allocation in steady
+/// state, one weight quantization per batch instead of three per update.
+/// Inputs are flattened (B·A·D) row-major with per-step actions/rewards.
+#[allow(clippy::too_many_arguments)]
+pub fn qupdate_batch(
+    cfg: &NetConfig,
+    params: &mut QNetParams,
+    sa_cur: &[f32],
+    sa_next: &[f32],
+    actions: &[usize],
+    rewards: &[f32],
+    hyper: &Hyper,
+    dp: &Datapath,
+    scratch: &mut BatchScratch,
+    errs: &mut Vec<f32>,
+) -> Result<()> {
+    let (a_n, d) = (cfg.a, cfg.d);
+    let step = a_n * d;
+    let b_n = actions.len();
+    if rewards.len() != b_n || sa_cur.len() != b_n * step || sa_next.len() != b_n * step {
+        return Err(Error::interface(format!(
+            "batch shapes: {} actions, {} rewards, {}/{} encoded elements (step {step})",
+            b_n,
+            rewards.len(),
+            sa_cur.len(),
+            sa_next.len()
+        )));
+    }
+    for &a in actions {
+        if a >= a_n {
+            return Err(Error::Env(format!("action {a} out of range 0..{a_n}")));
+        }
+    }
+    if b_n == 0 {
+        return Ok(());
+    }
+
+    quantize_params_in_place(params, dp);
+    let lr = hyper.lr;
+
+    for k in 0..b_n {
+        let sc = &sa_cur[k * step..(k + 1) * step];
+        let sn = &sa_next[k * step..(k + 1) * step];
+        let action = actions[k];
+
+        forward_into(cfg, params, sc, dp, &mut scratch.sa_cur_q, &mut scratch.cur)?;
+        forward_into(cfg, params, sn, dp, &mut scratch.sa_next_q, &mut scratch.nxt)?;
+
+        let q_next_max = scratch.nxt.q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let err = q_error(dp, hyper, scratch.cur.q[action], q_next_max, rewards[k]);
+        let x_row = &scratch.sa_cur_q[action * d..(action + 1) * d];
+
+        match params {
+            QNetParams::Perceptron { w, b } => {
+                // Eq. 7: δ = f′(σ)·Q_error
+                let delta = dp.q(dp.activation.fprime(scratch.cur.pre2[action]) * err);
+                // Eq. 9/10: ΔW = C·O·δ ; W += ΔW (in place)
+                for i in 0..d {
+                    let dw = dp.q(lr * dp.q(x_row[i] * delta));
+                    w[i] = dp.q(w[i] + dw);
+                }
+                *b = dp.q(*b + dp.q(lr * delta));
+            }
+            QNetParams::Mlp { w1, b1, w2, b2 } => {
+                let h = cfg.h;
+                let base = action * h;
+                let s2 = scratch.cur.pre2[action];
+
+                // Eq. 11: output delta
+                let d2 = dp.q(dp.activation.fprime(s2) * err);
+                // Eq. 12: hidden deltas from the *pre-update* output weights
+                scratch.d1.clear();
+                for j in 0..h {
+                    let s1j = scratch.cur.pre1[base + j];
+                    scratch.d1.push(dp.q(dp.activation.fprime(s1j) * dp.q(d2 * w2[j])));
+                }
+                // Eq. 13/14: ΔW generators + in-place update
+                for j in 0..h {
+                    let o1j = scratch.cur.hid[base + j];
+                    let dw2 = dp.q(lr * dp.q(o1j * d2));
+                    w2[j] = dp.q(w2[j] + dw2);
+                }
+                *b2 = dp.q(*b2 + dp.q(lr * d2));
+                for i in 0..d {
+                    for j in 0..h {
+                        let dw1 = dp.q(lr * dp.q(x_row[i] * scratch.d1[j]));
+                        w1[i * h + j] = dp.q(w1[i * h + j] + dw1);
+                    }
+                }
+                for j in 0..h {
+                    b1[j] = dp.q(b1[j] + dp.q(lr * scratch.d1[j]));
+                }
+            }
+        }
+        errs.push(err);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -369,5 +597,143 @@ mod tests {
         let params = QNetParams::zeros(&cfg);
         let sa = vec![0.0; 5];
         assert!(forward(&cfg, &params, &sa, &paper_dp(false)).is_err());
+    }
+
+    /// The core batch-path contract: identical bits to the sequential path,
+    /// in both precisions, for every paper configuration.
+    #[test]
+    fn qupdate_batch_is_bit_exact_vs_sequential() {
+        let mut rng = Rng::seeded(6);
+        for cfg in NetConfig::all() {
+            for fixed in [false, true] {
+                let dp = paper_dp(fixed);
+                let hyper = Hyper::default();
+                let init = QNetParams::init(&cfg, 0.4, &mut rng);
+                let n = 9;
+                let step = cfg.a * cfg.d;
+                let sa_cur = rng.vec_f32(n * step, -1.0, 1.0);
+                let sa_next = rng.vec_f32(n * step, -1.0, 1.0);
+                let actions: Vec<usize> = (0..n).map(|_| rng.below(cfg.a)).collect();
+                let rewards = rng.vec_f32(n, -1.0, 1.0);
+
+                // sequential oracle
+                let mut p_seq = init.clone();
+                let mut want = Vec::new();
+                for i in 0..n {
+                    let out = qupdate(
+                        &cfg,
+                        &p_seq,
+                        &sa_cur[i * step..(i + 1) * step],
+                        &sa_next[i * step..(i + 1) * step],
+                        actions[i],
+                        rewards[i],
+                        &hyper,
+                        &dp,
+                    )
+                    .unwrap();
+                    p_seq = out.params;
+                    want.push(out.q_err);
+                }
+
+                // batched path
+                let mut p_batch = init;
+                let mut scratch = BatchScratch::new();
+                let mut got = Vec::new();
+                qupdate_batch(
+                    &cfg, &mut p_batch, &sa_cur, &sa_next, &actions, &rewards, &hyper, &dp,
+                    &mut scratch, &mut got,
+                )
+                .unwrap();
+
+                assert_eq!(got, want, "{}/fixed={fixed}: q_errs diverged", cfg.name());
+                assert_eq!(
+                    p_batch.max_abs_diff(&p_seq),
+                    0.0,
+                    "{}/fixed={fixed}: params diverged",
+                    cfg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qupdate_batch_scratch_reuse_is_stable() {
+        // two flushes through the same scratch must equal one long sequence
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut rng = Rng::seeded(7);
+        let dp = paper_dp(true);
+        let hyper = Hyper::default();
+        let init = QNetParams::init(&cfg, 0.4, &mut rng);
+        let step = cfg.a * cfg.d;
+        let sa_cur = rng.vec_f32(6 * step, -1.0, 1.0);
+        let sa_next = rng.vec_f32(6 * step, -1.0, 1.0);
+        let actions: Vec<usize> = (0..6).map(|_| rng.below(cfg.a)).collect();
+        let rewards = rng.vec_f32(6, -1.0, 1.0);
+
+        let mut p_one = init.clone();
+        let mut s_one = BatchScratch::new();
+        let mut e_one = Vec::new();
+        qupdate_batch(
+            &cfg, &mut p_one, &sa_cur, &sa_next, &actions, &rewards, &hyper, &dp, &mut s_one,
+            &mut e_one,
+        )
+        .unwrap();
+
+        let mut p_two = init;
+        let mut s_two = BatchScratch::new();
+        let mut e_two = Vec::new();
+        for half in 0..2 {
+            let lo = half * 3;
+            qupdate_batch(
+                &cfg,
+                &mut p_two,
+                &sa_cur[lo * step..(lo + 3) * step],
+                &sa_next[lo * step..(lo + 3) * step],
+                &actions[lo..lo + 3],
+                &rewards[lo..lo + 3],
+                &hyper,
+                &dp,
+                &mut s_two,
+                &mut e_two,
+            )
+            .unwrap();
+        }
+        assert_eq!(e_one, e_two);
+        assert_eq!(p_one, p_two);
+    }
+
+    #[test]
+    fn qupdate_batch_rejects_bad_shapes_and_actions() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let dp = paper_dp(false);
+        let hyper = Hyper::default();
+        let step = cfg.a * cfg.d;
+        let mut scratch = BatchScratch::new();
+        let mut errs = Vec::new();
+
+        // ragged encodings
+        let mut p = QNetParams::zeros(&cfg);
+        let r = qupdate_batch(
+            &cfg, &mut p, &vec![0.0; step], &vec![0.0; step - 1], &[0], &[0.0], &hyper, &dp,
+            &mut scratch, &mut errs,
+        );
+        assert!(r.is_err());
+
+        // action out of range
+        let r = qupdate_batch(
+            &cfg, &mut p, &vec![0.0; step], &vec![0.0; step], &[cfg.a], &[0.0], &hyper, &dp,
+            &mut scratch, &mut errs,
+        );
+        assert!(r.is_err());
+
+        // empty batch is a no-op and must not touch the parameters
+        let mut rng = Rng::seeded(8);
+        let mut p = QNetParams::init(&cfg, 0.4, &mut rng);
+        let before = p.clone();
+        qupdate_batch(&cfg, &mut p, &[], &[], &[], &[], &hyper, &paper_dp(true), &mut scratch,
+                      &mut errs)
+            .unwrap();
+        assert!(errs.is_empty());
+        assert_eq!(p, before);
     }
 }

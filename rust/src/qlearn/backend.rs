@@ -23,8 +23,10 @@ use crate::fpga::datapath::Transition;
 use crate::fpga::{FpgaAccelerator, TimingModel};
 use crate::nn::activation::Activation;
 use crate::nn::params::QNetParams;
-use crate::nn::qupdate::{self, Datapath};
+use crate::nn::qupdate::{self, BatchScratch, Datapath};
 use crate::runtime::{ArtifactKind, Executor, Runtime};
+
+use super::replay::FlatBatch;
 
 /// Identifier for constructing backends generically (CLI, sweeps).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -77,30 +79,30 @@ pub trait QBackend {
     /// Replace parameters.
     fn load_params(&mut self, params: &QNetParams);
 
-    /// Apply a *sequence* of transitions in one call, if the backend has a
-    /// fused path (default: loop over `update`). Inputs are flattened
-    /// (B·A·D) with per-step actions/rewards; returns per-step Q-errors.
-    fn update_batch(
-        &mut self,
-        sa_cur: &[f32],
-        sa_next: &[f32],
-        actions: &[usize],
-        rewards: &[f32],
-    ) -> Result<Vec<f32>> {
+    /// Apply a *sequence* of transitions in one call — the batched fast
+    /// path. Every backend implements this natively (vectorized buffers on
+    /// the CPU, the pipelined datapath on the FPGA sim, the scan-chained
+    /// artifact on XLA); the default simply loops over [`QBackend::update`].
+    ///
+    /// Contract (enforced by `tests/batch_equiv.rs`): the result must equal
+    /// applying the transitions one at a time — bit-exact in fixed point,
+    /// within 1e-5 in float. Returns one Q-error per transition.
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        batch.validate(self.net())?;
         let step = self.net().a * self.net().d;
-        let mut errs = Vec::with_capacity(actions.len());
-        for i in 0..actions.len() {
+        let mut errs = Vec::with_capacity(batch.len());
+        for i in 0..batch.len() {
             errs.push(self.update(
-                &sa_cur[i * step..(i + 1) * step],
-                &sa_next[i * step..(i + 1) * step],
-                actions[i],
-                rewards[i],
+                &batch.sa_cur[i * step..(i + 1) * step],
+                &batch.sa_next[i * step..(i + 1) * step],
+                batch.actions[i],
+                batch.rewards[i],
             )?);
         }
         Ok(errs)
     }
 
-    /// Preferred flush size for `update_batch` (1 = no fused path).
+    /// Preferred flush size for `update_batch`.
     fn preferred_batch(&self) -> usize {
         1
     }
@@ -115,6 +117,8 @@ pub struct CpuBackend {
     hyper: Hyper,
     dp: Datapath,
     prec: Precision,
+    /// Reused buffers for the native batch path (no steady-state allocation).
+    scratch: BatchScratch,
 }
 
 impl CpuBackend {
@@ -124,7 +128,7 @@ impl CpuBackend {
             Precision::Float => None,
         };
         let dp = Datapath::new(fixed, Activation::lut_default(fixed));
-        CpuBackend { net, params, hyper, dp, prec }
+        CpuBackend { net, params, hyper, dp, prec, scratch: BatchScratch::new() }
     }
 }
 
@@ -148,6 +152,32 @@ impl QBackend for CpuBackend {
         )?;
         self.params = out.params;
         Ok(out.q_err)
+    }
+
+    /// Native vectorized batch path: `nn::qupdate_batch` over reused
+    /// scratch buffers — bit-equivalent to the per-step loop, measurably
+    /// faster (see `benches/backends.rs`).
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        let mut errs = Vec::with_capacity(batch.len());
+        qupdate::qupdate_batch(
+            &self.net,
+            &mut self.params,
+            &batch.sa_cur,
+            &batch.sa_next,
+            &batch.actions,
+            &batch.rewards,
+            &self.hyper,
+            &self.dp,
+            &mut self.scratch,
+            &mut errs,
+        )?;
+        Ok(errs)
+    }
+
+    /// Amortization sweet spot for the vectorized path (flush latency vs
+    /// per-call overhead; see the `backends` bench).
+    fn preferred_batch(&self) -> usize {
+        32
     }
 
     fn params(&self) -> QNetParams {
@@ -212,32 +242,33 @@ impl QBackend for XlaBackend {
         Ok(out.q_err)
     }
 
-    fn update_batch(
-        &mut self,
-        sa_cur: &[f32],
-        sa_next: &[f32],
-        actions: &[usize],
-        rewards: &[f32],
-    ) -> Result<Vec<f32>> {
+    /// Native batch path: the scan-chained `train_batch` artifact applies
+    /// exactly `meta().batch` updates per call; ragged tails fall back to
+    /// the per-step artifact.
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        batch.validate(&self.net)?;
         let b = self.train_batch.meta().batch;
-        if actions.len() != b {
-            // fall back to the generic per-step path for ragged tails
+        if batch.len() != b {
             let step = self.net.a * self.net.d;
-            let mut errs = Vec::with_capacity(actions.len());
-            for i in 0..actions.len() {
+            let mut errs = Vec::with_capacity(batch.len());
+            for i in 0..batch.len() {
                 errs.push(self.update(
-                    &sa_cur[i * step..(i + 1) * step],
-                    &sa_next[i * step..(i + 1) * step],
-                    actions[i],
-                    rewards[i],
+                    &batch.sa_cur[i * step..(i + 1) * step],
+                    &batch.sa_next[i * step..(i + 1) * step],
+                    batch.actions[i],
+                    batch.rewards[i],
                 )?);
             }
             return Ok(errs);
         }
-        let acts: Vec<i32> = actions.iter().map(|&a| a as i32).collect();
-        let (params, errs) =
-            self.train_batch
-                .run_train_batch(&self.params, sa_cur, sa_next, &acts, rewards)?;
+        let acts: Vec<i32> = batch.actions.iter().map(|&a| a as i32).collect();
+        let (params, errs) = self.train_batch.run_train_batch(
+            &self.params,
+            &batch.sa_cur,
+            &batch.sa_next,
+            &acts,
+            &batch.rewards,
+        )?;
         self.params = params;
         Ok(errs)
     }
@@ -308,6 +339,20 @@ impl QBackend for FpgaSimBackend {
         Ok(out.q_err)
     }
 
+    /// Native batch path: multi-transition pipelined execution — identical
+    /// numerics to the per-step path, cycles charged per the batched
+    /// (action-pipelined) timing model.
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        self.acc
+            .qupdate_batch(&batch.sa_cur, &batch.sa_next, &batch.actions, &batch.rewards)
+    }
+
+    /// Enough transitions to amortize the pipeline fill (see
+    /// `TimingModel::qupdate_batch_cycles`).
+    fn preferred_batch(&self) -> usize {
+        32
+    }
+
     fn params(&self) -> QNetParams {
         self.acc.params()
     }
@@ -343,36 +388,101 @@ mod tests {
         assert_eq!(cpu.params().max_abs_diff(&sim.params()), 0.0);
     }
 
-    #[test]
-    fn default_update_batch_equals_sequential() {
-        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
-        let mut rng = Rng::seeded(22);
-        let params = QNetParams::init(&net, 0.4, &mut rng);
-        let mut a = CpuBackend::new(net, Precision::Float, params.clone(), Hyper::default());
-        let mut b = CpuBackend::new(net, Precision::Float, params, Hyper::default());
-
-        let n = 7;
+    fn random_flat_batch(net: &NetConfig, n: usize, rng: &mut Rng) -> FlatBatch {
         let step = net.a * net.d;
-        let sa_cur = rng.vec_f32(n * step, -1.0, 1.0);
-        let sa_next = rng.vec_f32(n * step, -1.0, 1.0);
-        let actions: Vec<usize> = (0..n).map(|_| rng.below(net.a)).collect();
-        let rewards = rng.vec_f32(n, -1.0, 1.0);
-
-        let batch = a.update_batch(&sa_cur, &sa_next, &actions, &rewards).unwrap();
-        let mut seq = Vec::new();
-        for i in 0..n {
-            seq.push(
-                b.update(
-                    &sa_cur[i * step..(i + 1) * step],
-                    &sa_next[i * step..(i + 1) * step],
-                    actions[i],
-                    rewards[i],
-                )
-                .unwrap(),
-            );
+        FlatBatch {
+            sa_cur: rng.vec_f32(n * step, -1.0, 1.0),
+            sa_next: rng.vec_f32(n * step, -1.0, 1.0),
+            actions: (0..n).map(|_| rng.below(net.a)).collect(),
+            rewards: rng.vec_f32(n, -1.0, 1.0),
         }
-        assert_eq!(batch, seq);
-        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn cpu_native_update_batch_equals_sequential() {
+        for prec in [Precision::Float, Precision::Fixed] {
+            let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+            let mut rng = Rng::seeded(22);
+            let params = QNetParams::init(&net, 0.4, &mut rng);
+            let mut a = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut b = CpuBackend::new(net, prec, params, Hyper::default());
+
+            let n = 7;
+            let step = net.a * net.d;
+            let batch = random_flat_batch(&net, n, &mut rng);
+
+            let got = a.update_batch(&batch).unwrap();
+            let mut seq = Vec::new();
+            for i in 0..n {
+                seq.push(
+                    b.update(
+                        &batch.sa_cur[i * step..(i + 1) * step],
+                        &batch.sa_next[i * step..(i + 1) * step],
+                        batch.actions[i],
+                        batch.rewards[i],
+                    )
+                    .unwrap(),
+                );
+            }
+            assert_eq!(got, seq, "{prec:?}");
+            assert_eq!(a.params(), b.params(), "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn fpga_sim_native_update_batch_equals_sequential() {
+        for prec in [Precision::Float, Precision::Fixed] {
+            let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+            let mut rng = Rng::seeded(24);
+            let params = QNetParams::init(&net, 0.4, &mut rng);
+            let mut a = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut b = FpgaSimBackend::new(net, prec, params, Hyper::default());
+
+            let n = 5;
+            let step = net.a * net.d;
+            let batch = random_flat_batch(&net, n, &mut rng);
+
+            let got = a.update_batch(&batch).unwrap();
+            let mut seq = Vec::new();
+            for i in 0..n {
+                seq.push(
+                    b.update(
+                        &batch.sa_cur[i * step..(i + 1) * step],
+                        &batch.sa_next[i * step..(i + 1) * step],
+                        batch.actions[i],
+                        batch.rewards[i],
+                    )
+                    .unwrap(),
+                );
+            }
+            assert_eq!(got, seq, "{prec:?}");
+            assert_eq!(a.params().max_abs_diff(&b.params()), 0.0, "{prec:?}");
+            // batched execution must charge fewer cycles than stepwise
+            assert!(
+                a.accelerator().stats().cycles <= b.accelerator().stats().cycles,
+                "{prec:?}: batched charged more cycles"
+            );
+            assert_eq!(a.accelerator().stats().updates, n as u64);
+            assert_eq!(a.accelerator().stats().batches, 1);
+        }
+    }
+
+    #[test]
+    fn update_batch_rejects_malformed_batches() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(25);
+        let params = QNetParams::init(&net, 0.4, &mut rng);
+        let mut cpu = CpuBackend::new(net, Precision::Float, params.clone(), Hyper::default());
+        let mut sim = FpgaSimBackend::new(net, Precision::Float, params, Hyper::default());
+
+        let mut bad = random_flat_batch(&net, 3, &mut rng);
+        bad.rewards.pop();
+        assert!(cpu.update_batch(&bad).is_err());
+        assert!(sim.update_batch(&bad).is_err());
+
+        let empty = FlatBatch::empty();
+        assert!(cpu.update_batch(&empty).unwrap().is_empty());
+        assert!(sim.update_batch(&empty).unwrap().is_empty());
     }
 
     #[test]

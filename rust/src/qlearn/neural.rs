@@ -6,9 +6,12 @@
 //! error capture and backprop internally — one “Q-update” in paper terms).
 //!
 //! `batch > 1` enables microbatch mode: transitions accumulate in a FIFO
-//! and flush through `update_batch` (the scan-chained XLA artifact). The
-//! policy then acts on weights that lag by up to `batch − 1` updates — a
-//! throughput/recency trade-off quantified in the `backends` bench.
+//! and flush through the backend's native `update_batch` path (vectorized
+//! buffers on the CPU, the pipelined datapath on the FPGA sim, the
+//! scan-chained artifact on XLA). The policy then acts on weights that lag
+//! by up to `batch − 1` updates — a throughput/recency trade-off quantified
+//! in the `backends` bench. The flushed updates themselves are equivalent
+//! to stepwise ones (see `tests/batch_equiv.rs`).
 
 use crate::env::Environment;
 use crate::error::Result;
@@ -62,6 +65,13 @@ impl<B: QBackend> NeuralQLearner<B> {
         self
     }
 
+    /// Enable microbatch mode with an explicit flush size (1 = stepwise).
+    /// The coordinator exposes this as the per-rover `--batch` knob.
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -111,7 +121,7 @@ impl<B: QBackend> NeuralQLearner<B> {
         let mut all_errs = Vec::new();
         while !self.buffer.is_empty() {
             let b = self.buffer.drain_flat(self.batch, &net)?;
-            let errs = self.backend.update_batch(&b.sa_cur, &b.sa_next, &b.actions, &b.rewards)?;
+            let errs = self.backend.update_batch(&b)?;
             self.updates += errs.len() as u64;
             self.flushes += 1;
             all_errs.extend(errs);
@@ -171,8 +181,7 @@ mod tests {
     #[test]
     fn microbatch_defers_updates_then_flushes() {
         let mut env = SimpleRoverEnv::new(2);
-        let mut l = learner(Policy::default_training());
-        l.batch = 4; // CpuBackend has no fused path; force buffering
+        let mut l = learner(Policy::default_training()).with_batch(4);
         let mut rng = Rng::seeded(33);
         for i in 0..3 {
             let out = l.step(&mut env, &mut rng).unwrap();
@@ -189,8 +198,7 @@ mod tests {
     #[test]
     fn end_episode_flushes_partial_batch() {
         let mut env = SimpleRoverEnv::new(3);
-        let mut l = learner(Policy::default_training());
-        l.batch = 8;
+        let mut l = learner(Policy::default_training()).with_batch(8);
         let mut rng = Rng::seeded(34);
         for _ in 0..3 {
             l.step(&mut env, &mut rng).unwrap();
@@ -198,5 +206,25 @@ mod tests {
         assert_eq!(l.updates(), 0);
         l.end_episode().unwrap();
         assert_eq!(l.updates(), 3);
+    }
+
+    #[test]
+    fn batched_learner_accounts_every_transition() {
+        // every environment step must eventually be learned from: after the
+        // episode-end flush, updates == steps regardless of batch alignment
+        let mut env = SimpleRoverEnv::new(5);
+        let mut l = learner(Policy::default_training()).with_batch(4);
+        let mut rng = Rng::seeded(35);
+        let mut steps = 0u64;
+        for _ in 0..9 {
+            let out = l.step(&mut env, &mut rng).unwrap();
+            steps += 1;
+            if out.done {
+                break;
+            }
+        }
+        l.end_episode().unwrap();
+        assert_eq!(l.updates(), steps);
+        assert_eq!(l.flushes(), steps.div_ceil(4));
     }
 }

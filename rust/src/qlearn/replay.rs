@@ -81,6 +81,55 @@ impl FlatBatch {
     pub fn is_empty(&self) -> bool {
         self.actions.is_empty()
     }
+
+    /// An empty batch (flushing an empty buffer).
+    pub fn empty() -> FlatBatch {
+        FlatBatch { sa_cur: Vec::new(), sa_next: Vec::new(), actions: Vec::new(), rewards: Vec::new() }
+    }
+
+    /// Build a batch by copying flat (B·A·D) slices — the workload-driver
+    /// and bench entry point into `QBackend::update_batch`.
+    pub fn from_slices(
+        net: &NetConfig,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+    ) -> Result<FlatBatch> {
+        let batch = FlatBatch {
+            sa_cur: sa_cur.to_vec(),
+            sa_next: sa_next.to_vec(),
+            actions: actions.to_vec(),
+            rewards: rewards.to_vec(),
+        };
+        batch.validate(net)?;
+        Ok(batch)
+    }
+
+    /// Check the internal layout against a network's dimensions.
+    pub fn validate(&self, net: &NetConfig) -> Result<()> {
+        let step = net.a * net.d;
+        let b = self.actions.len();
+        if self.rewards.len() != b
+            || self.sa_cur.len() != b * step
+            || self.sa_next.len() != b * step
+        {
+            return Err(Error::interface(format!(
+                "flat batch layout: {} actions, {} rewards, {}/{} encoded elements (step {step})",
+                b,
+                self.rewards.len(),
+                self.sa_cur.len(),
+                self.sa_next.len()
+            )));
+        }
+        if let Some(&bad) = self.actions.iter().find(|&&a| a >= net.a) {
+            return Err(Error::interface(format!(
+                "flat batch action {bad} out of range 0..{}",
+                net.a
+            )));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +170,25 @@ mod tests {
         let batch = buf.drain_flat(10, &net).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn from_slices_validates_layout() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let step = net.a * net.d;
+        let ok = FlatBatch::from_slices(&net, &vec![0.0; 2 * step], &vec![0.0; 2 * step], &[0, 1],
+                                        &[0.5, -0.5])
+            .unwrap();
+        assert_eq!(ok.len(), 2);
+        assert!(ok.validate(&net).is_ok());
+        // short encodings
+        assert!(FlatBatch::from_slices(&net, &vec![0.0; step], &vec![0.0; 2 * step], &[0, 1],
+                                       &[0.0, 0.0])
+            .is_err());
+        // action out of range
+        assert!(FlatBatch::from_slices(&net, &vec![0.0; step], &vec![0.0; step], &[net.a], &[0.0])
+            .is_err());
+        assert!(FlatBatch::empty().validate(&net).is_ok());
     }
 
     #[test]

@@ -195,6 +195,40 @@ pub fn energy_table() -> PaperTable {
                 so its energy advantage exceeds its speed advantage")
 }
 
+// ------------------------------------------------------------------ batched
+
+/// B1: batched-datapath throughput vs stepwise, all configurations — the
+/// modeled side of the `update_batch` fast path (`--batch`). Float rows are
+/// expected at 1.00×: the serial LogiCORE chains cannot pipeline, which is
+/// itself a paper-shaped result (fixed point benefits *more* from batching).
+pub fn table_batch(b: usize) -> PaperTable {
+    let (t, dev) = model();
+    let mut table = PaperTable::new(
+        "B1",
+        format!("Batched Q-update datapath, modeled throughput (B = {b})"),
+        "kQ/s",
+    );
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let stepwise = t.throughput_kq_s(&net, prec, &dev);
+            let batched = t.batch_throughput_kq_s(&net, prec, b, &dev);
+            table = table
+                .row(format!("{} {} stepwise", net.name(), prec.as_str()), stepwise, None)
+                .row(
+                    format!("{} {} batched (×{:.2})", net.name(), prec.as_str(),
+                            batched / stepwise),
+                    batched,
+                    None,
+                );
+        }
+    }
+    table.note(
+        "batched fixed datapath: II=1 action pipelining, dual sweeps chained through one \
+         pipe fill, error capture overlapped — the Section 6 pipelining proposal; \
+         regenerate with `qfpga report --table batch --batch <B>`",
+    )
+}
+
 // ----------------------------------------------------------------- headline
 
 /// H1: the abstract's speedup claims (“up to 43-fold [MLP] / 95-fold
@@ -341,6 +375,30 @@ mod tests {
                 pair[0].label,
                 pair[1].label
             );
+        }
+    }
+
+    #[test]
+    fn batch_table_fixed_speedups_float_neutral() {
+        let t = table_batch(32);
+        assert_eq!(t.rows.len(), 16); // 4 configs × 2 precisions × 2 rows
+        for pair in t.rows.chunks(2) {
+            let (stepwise, batched) = (&pair[0], &pair[1]);
+            if stepwise.label.contains("fixed") {
+                assert!(
+                    batched.ours > 2.0 * stepwise.ours,
+                    "{}: {} vs {}",
+                    stepwise.label,
+                    batched.ours,
+                    stepwise.ours
+                );
+            } else {
+                assert!(
+                    (batched.ours - stepwise.ours).abs() < 1e-9,
+                    "{}: float must be batch-neutral",
+                    stepwise.label
+                );
+            }
         }
     }
 

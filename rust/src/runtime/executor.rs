@@ -84,7 +84,7 @@ impl Executor {
                 )));
             }
             let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = match value {
+            let lit = match *value {
                 TensorValue::F32(s) => xla::Literal::vec1(s),
                 TensorValue::I32(s) => xla::Literal::vec1(s),
             };

@@ -6,13 +6,15 @@
 //! case seed for deterministic reproduction.
 
 use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::coordinator::{run_fleet, MissionConfig};
 use qfpga::env::make_env;
 use qfpga::fixed::{tensor, Acc, Fixed, FixedSpec};
 use qfpga::fpga::fifo::Fifo;
 use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::nn::activation::{LutSpec, SigmoidLut};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{CpuBackend, QBackend};
+use qfpga::qlearn::backend::{BackendKind, CpuBackend, QBackend};
+use qfpga::qlearn::replay::{StoredTransition, TransitionBuffer};
 use qfpga::util::{Json, Rng};
 
 const CASES: usize = 300;
@@ -196,6 +198,99 @@ fn prop_throughput_inverse_of_completion() {
             let us = t.completion_us(&net, prec, &dev);
             let kq = t.throughput_kq_s(&net, prec, &dev);
             assert!((kq * us / 1e3 - 1.0).abs() < 1e-9, "{net:?}/{prec:?}");
+        }
+    }
+}
+
+// ------------------------------------------------------ transition buffer
+
+#[test]
+fn prop_drain_flat_contract() {
+    // Arbitrary push/drain interleavings: FIFO order, flat layout, clamped
+    // partial drains, clean errors on malformed transitions.
+    let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+    let step = net.a * net.d;
+    let mut rng = Rng::seeded(9010);
+    for case in 0..150 {
+        let mut buf = TransitionBuffer::new();
+        let mut model: std::collections::VecDeque<(usize, f32, f32)> = Default::default();
+        let n_push = rng.below(12);
+        for k in 0..n_push {
+            let action = rng.below(net.a);
+            let reward = rng.f32_range(-1.0, 1.0);
+            let fill = k as f32 * 0.5 - 1.0;
+            buf.push(StoredTransition {
+                sa_cur: vec![fill; step],
+                sa_next: vec![-fill; step],
+                action,
+                reward,
+            });
+            model.push_back((action, reward, fill));
+        }
+        while !buf.is_empty() {
+            let take = rng.range(1, 6);
+            let before = buf.len();
+            let batch = buf.drain_flat(take, &net).unwrap();
+            assert_eq!(batch.len(), take.min(before), "case {case}");
+            assert_eq!(buf.len(), before - batch.len(), "case {case}");
+            assert_eq!(batch.sa_cur.len(), batch.len() * step, "case {case}");
+            assert!(batch.validate(&net).is_ok(), "case {case}");
+            for i in 0..batch.len() {
+                let (action, reward, fill) = model.pop_front().unwrap();
+                assert_eq!(batch.actions[i], action, "case {case}");
+                assert_eq!(batch.rewards[i], reward, "case {case}");
+                assert_eq!(batch.sa_cur[i * step], fill, "case {case}: layout");
+                assert_eq!(batch.sa_next[i * step], -fill, "case {case}: layout");
+            }
+        }
+        assert!(model.is_empty(), "case {case}: drained counts disagree");
+        // draining an empty buffer yields an empty, valid batch
+        let empty = buf.drain_flat(4, &net).unwrap();
+        assert!(empty.is_empty() && empty.validate(&net).is_ok(), "case {case}");
+        // a dimension-mismatched transition is rejected, not silently packed
+        buf.push(StoredTransition {
+            sa_cur: vec![0.0; step.saturating_sub(1)],
+            sa_next: vec![0.0; step],
+            action: 0,
+            reward: 0.0,
+        });
+        assert!(buf.drain_flat(1, &net).is_err(), "case {case}");
+    }
+}
+
+// -------------------------------------------------------- fleet + batching
+
+#[test]
+fn prop_run_fleet_deterministic_with_batching() {
+    // For random seeds and batch sizes, a batched fleet must replay
+    // bit-identically and learn from every environment step.
+    let mut rng = Rng::seeded(9011);
+    for (case, &batch) in [2usize, 5, 8].iter().enumerate() {
+        let cfg = MissionConfig {
+            episodes: 4,
+            max_steps: 30,
+            backend: BackendKind::Cpu,
+            precision: Precision::Float,
+            batch,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let a = run_fleet(&cfg, 2).unwrap();
+        let b = run_fleet(&cfg, 2).unwrap();
+        assert_eq!(a.rovers.len(), b.rovers.len());
+        for (x, y) in a.rovers.iter().zip(&b.rovers) {
+            assert_eq!(x.train.total_updates, y.train.total_updates, "case {case}");
+            assert_eq!(x.train.total_steps, y.train.total_steps, "case {case}");
+            for (ex, ey) in x.train.episodes.iter().zip(&y.train.episodes) {
+                assert_eq!(ex.total_reward, ey.total_reward, "case {case}");
+                assert_eq!(ex.steps, ey.steps, "case {case}");
+            }
+        }
+        for r in &a.rovers {
+            assert_eq!(
+                r.train.total_updates as usize, r.train.total_steps,
+                "case {case}: a batched rover must still learn from every step"
+            );
         }
     }
 }

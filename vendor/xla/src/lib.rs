@@ -1,0 +1,259 @@
+//! Offline **stub** of the `xla` crate (XLA/PJRT bindings).
+//!
+//! The deployment target (radiation-hardened flight software) builds in an
+//! offline image without the XLA runtime, so this crate provides the exact
+//! API surface `qfpga::runtime` consumes — enough to compile and to fail
+//! with a clear, recoverable error at the first point real PJRT work would
+//! happen ([`PjRtClient::cpu`]). The rest of the system (CPU baseline, FPGA
+//! simulator, coordinator, benches, paper tables) is fully functional
+//! without it; `Runtime::from_default_dir().ok()` call sites already treat
+//! an unavailable runtime as "skip the XLA rows".
+//!
+//! To enable the real deployment path, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual bindings; no `qfpga` source changes are
+//! required.
+//!
+//! Mirrored surface (see `rust/src/runtime/`): `PjRtClient`,
+//! `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`, `HloModuleProto`,
+//! `XlaComputation`, `Error`. Host-side `Literal` construction/reshape work
+//! for real (they are plain data); only compile/execute are unavailable.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type matching the real crate's `Display`-driven usage.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT runtime is not vendored in this offline build \
+         (the `xla` dependency is a stub — see vendor/xla); the CPU and \
+         fpga-sim backends are unaffected"
+    ))
+}
+
+/// Element types the artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Scalar types that can back a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn wrap(data: &[Self]) -> LiteralData;
+    #[doc(hidden)]
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: &[Self]) -> LiteralData {
+        LiteralData::F32(data.to_vec())
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: &[Self]) -> LiteralData {
+        LiteralData::I32(data.to_vec())
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// A host-side tensor value. Fully functional in the stub (it is plain
+/// data); only device transfer/execution are unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let elements: i64 = dims.iter().product();
+        if elements as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy out as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples (tuples
+    /// only come back from execution, which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module text. The stub stores the text verbatim; validation
+/// happens at compile time, which the stub cannot reach.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. Thread-affine in the real crate (`Rc`-based), so the
+/// stub carries the same `!Send` marker to keep threading contracts honest.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    /// The stub cannot host a PJRT runtime; this is the single, early
+    /// failure point for the whole deployment path.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable. Unreachable in the stub (no client can be built),
+/// but the type must exist for `qfpga::runtime::Executor` to compile.
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.shape(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let l = Literal::vec1(&[7i32, 8]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+        assert_eq!(l.element_count(), 2);
+    }
+
+    #[test]
+    fn client_is_unavailable_with_clear_error() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("offline"), "{err}");
+        assert!(err.contains("stub"), "{err}");
+    }
+}
