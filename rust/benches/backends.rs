@@ -23,9 +23,43 @@ use qfpga::nn::params::QNetParams;
 use qfpga::qlearn::backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
 use qfpga::qlearn::replay::FlatBatch;
 use qfpga::runtime::Runtime;
-use qfpga::util::Rng;
+use qfpga::util::{Json, Rng};
 
 const BATCH: usize = 32;
+
+/// Machine-readable trajectory file name; written to the workspace root
+/// (cargo runs bench binaries with cwd = the package dir, `rust/`, so the
+/// path is resolved from CARGO_MANIFEST_DIR's parent) so perf is
+/// trackable across PRs.
+const JSON_OUT: &str = "BENCH_backends.json";
+
+fn json_out_path() -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .map(|workspace| workspace.join(JSON_OUT))
+        .unwrap_or_else(|| std::path::PathBuf::from(JSON_OUT))
+}
+
+fn record_result(records: &mut Vec<Json>, section: &str, r: &BenchResult) {
+    records.push(Json::obj(vec![
+        ("section", Json::Str(section.into())),
+        ("case", Json::Str(r.name.trim().into())),
+        ("mean_us", Json::Num(r.mean_us)),
+        ("median_us", Json::Num(r.median_us)),
+        ("p95_us", Json::Num(r.p95_us)),
+        ("per_second", Json::Num(r.per_second())),
+    ]));
+}
+
+fn record_batched(records: &mut Vec<Json>, name: &str, us_per_update: f64, speedup: f64) {
+    records.push(Json::obj(vec![
+        ("section", Json::Str("batched".into())),
+        ("case", Json::Str(name.trim().into())),
+        ("us_per_update", Json::Num(us_per_update)),
+        ("speedup_vs_stepwise", Json::Num(speedup)),
+    ]));
+}
 
 fn run_backend<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: usize) -> BenchResult {
     let step = w.net.a * w.net.d;
@@ -75,6 +109,7 @@ fn main() {
     if runtime.is_none() {
         println!("NOTE: artifacts not built; xla rows skipped (run `make artifacts`)");
     }
+    let mut records: Vec<Json> = Vec::new();
 
     print_header("per-Q-update latency (measured on this host)");
     for net in NetConfig::all() {
@@ -84,14 +119,20 @@ fn main() {
             let params = QNetParams::init(&net, 0.3, &mut rng);
 
             let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            run_backend(&format!("cpu       {} {}", net.name(), prec.as_str()), &mut cpu, &w, iters);
+            let r =
+                run_backend(&format!("cpu       {} {}", net.name(), prec.as_str()), &mut cpu, &w, iters);
+            record_result(&mut records, "stepwise", &r);
 
             let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
-            run_backend(&format!("fpga-sim  {} {}", net.name(), prec.as_str()), &mut sim, &w, iters);
+            let r =
+                run_backend(&format!("fpga-sim  {} {}", net.name(), prec.as_str()), &mut sim, &w, iters);
+            record_result(&mut records, "stepwise", &r);
 
             if let Some(rt) = &runtime {
                 let mut xla = XlaBackend::new(rt, net, prec, params).expect("backend");
-                run_backend(&format!("xla       {} {}", net.name(), prec.as_str()), &mut xla, &w, iters);
+                let r =
+                    run_backend(&format!("xla       {} {}", net.name(), prec.as_str()), &mut xla, &w, iters);
+                record_result(&mut records, "stepwise", &r);
             }
         }
     }
@@ -122,6 +163,13 @@ fn main() {
                 format!("cpu speedup {} {}", net.name(), prec.as_str()),
                 stepwise.mean_us / batched
             );
+            record_result(&mut records, "step-for-batch", &stepwise);
+            record_batched(
+                &mut records,
+                &format!("cpu batch {} {}", net.name(), prec.as_str()),
+                batched,
+                stepwise.mean_us / batched,
+            );
 
             let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
             let sim_step = run_backend(
@@ -140,6 +188,13 @@ fn main() {
                 "{:<44} {:>10.2}× stepwise (host); modeled device speedup in table B1",
                 format!("sim speedup {} {}", net.name(), prec.as_str()),
                 sim_step.mean_us / sim_batch
+            );
+            record_result(&mut records, "step-for-batch", &sim_step);
+            record_batched(
+                &mut records,
+                &format!("sim batch {} {}", net.name(), prec.as_str()),
+                sim_batch,
+                sim_step.mean_us / sim_batch,
             );
         }
     }
@@ -183,6 +238,24 @@ fn main() {
                 1e6 / per_update,
                 stepwise.mean_us / per_update
             );
+            record_result(&mut records, "step-for-batch", &stepwise);
+            record_batched(&mut records, &r.name, per_update, stepwise.mean_us / per_update);
         }
+    }
+
+    // ---- machine-readable trajectory ------------------------------------
+    let n_records = records.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("backends".into())),
+        ("quick", Json::Bool(quick)),
+        ("iters", Json::Num(iters as f64)),
+        ("batch", Json::Num(BATCH as f64)),
+        ("xla_present", Json::Bool(runtime.is_some())),
+        ("records", Json::Arr(records)),
+    ]);
+    let out = json_out_path();
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("\nwrote {} ({n_records} records)", out.display()),
+        Err(e) => eprintln!("\nWARNING: could not write {}: {e}", out.display()),
     }
 }

@@ -3,12 +3,18 @@
 use crate::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
 use crate::env::make_env;
 use crate::error::Result;
+use crate::fault::{FaultModel, FaultPlan, FaultStats, FaultyBackend, SeuHook};
 use crate::nn::params::QNetParams;
 use crate::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, XlaBackend};
 use crate::qlearn::trainer::{train, TrainReport};
 use crate::qlearn::{NeuralQLearner, Policy};
 use crate::runtime::Runtime;
 use crate::util::Rng;
+
+/// Seed diversifier for the persistent-store SEU stream.
+const FAULT_STORE_SALT: u64 = 0xFA17_5EED_0000_0001;
+/// Seed diversifier for the datapath-FIFO SEU stream.
+const FAULT_FIFO_SALT: u64 = 0xFA17_5EED_0000_0002;
 
 /// Everything needed to run one rover mission.
 #[derive(Debug, Clone)]
@@ -27,6 +33,9 @@ pub struct MissionConfig {
     /// Explicit per-rover flush size for `update_batch` (1 = stepwise).
     /// Ignored when `microbatch` is set.
     pub batch: usize,
+    /// Radiation: train under seeded SEU injection with this rate and
+    /// mitigation (`None` = fault-free, the pre-existing behaviour).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for MissionConfig {
@@ -42,6 +51,7 @@ impl Default for MissionConfig {
             hyper: Hyper::default(),
             microbatch: false,
             batch: 1,
+            fault: None,
         }
     }
 }
@@ -64,6 +74,14 @@ impl MissionConfig {
     }
 }
 
+/// A trained backend handed back by the shared mission drive loop, with
+/// or without the radiation wrapper (the FPGA arm digs out its
+/// accelerator counters either way).
+enum Driven<B: crate::qlearn::QBackend> {
+    Clean(B),
+    Faulted(FaultyBackend<B>),
+}
+
 /// Mission outcome: the training report plus backend-side accounting.
 #[derive(Debug, Clone)]
 pub struct MissionReport {
@@ -73,6 +91,8 @@ pub struct MissionReport {
     pub fpga_modeled_us: Option<f64>,
     /// FPGA-sim only: total modeled cycles.
     pub fpga_cycles: Option<u64>,
+    /// Fault accounting when the mission trained under SEU injection.
+    pub fault: Option<FaultStats>,
 }
 
 impl MissionReport {
@@ -108,32 +128,87 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
         }
     }
 
+    // shared train loop: clean or under injection (one persistent-store
+    // SEU stream per rover, derived from the mission seed so fleets stay
+    // reproducible); returns the trained backend for backend-specific
+    // accounting (the FPGA arm reads its accelerator counters)
+    fn drive<B: crate::qlearn::QBackend>(
+        backend: B,
+        cfg: &MissionConfig,
+        env: &mut dyn crate::env::Environment,
+        rng: &mut Rng,
+        policy: Policy,
+    ) -> Result<(TrainReport, Option<FaultStats>, Driven<B>)> {
+        if let Some(plan) = &cfg.fault {
+            let faulty = FaultyBackend::new(
+                backend,
+                cfg.precision,
+                plan.mitigation,
+                FaultModel::new(cfg.seed ^ FAULT_STORE_SALT, plan.rate),
+            );
+            let mut learner = apply_batch(NeuralQLearner::new(faulty, policy), cfg);
+            let r = train(&mut learner, env, cfg.episodes, cfg.max_steps, rng)?;
+            let stats = learner.backend.stats();
+            Ok((r, Some(stats), Driven::Faulted(learner.backend)))
+        } else {
+            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
+            let r = train(&mut learner, env, cfg.episodes, cfg.max_steps, rng)?;
+            Ok((r, None, Driven::Clean(learner.backend)))
+        }
+    }
+
     // The backends are distinct concrete types (and !Send), so dispatch
     // monomorphically and merge afterwards.
-    let (train_report, fpga_modeled_us, fpga_cycles) = match cfg.backend {
+    let (train_report, fpga_modeled_us, fpga_cycles, fault) = match cfg.backend {
         BackendKind::Cpu => {
             let backend = CpuBackend::new(net, cfg.precision, params, cfg.hyper);
-            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
-            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
-            (r, None, None)
+            let (r, stats, _) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
+            (r, None, None, stats)
         }
         BackendKind::Xla => {
             let rt = runtime.ok_or_else(|| {
                 crate::error::Error::Config("XLA backend needs a Runtime".into())
             })?;
             let backend = XlaBackend::new(rt, net, cfg.precision, params)?;
-            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
-            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
-            (r, None, None)
+            let (r, stats, _) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
+            (r, None, None, stats)
         }
         BackendKind::FpgaSim => {
-            let backend = FpgaSimBackend::new(net, cfg.precision, params, cfg.hyper);
-            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
-            let r = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
-            let acc = learner.backend.accelerator();
-            let us = acc.modeled_time_us();
-            let cycles = acc.stats().cycles;
-            (r, Some(us), Some(cycles))
+            let mut backend = FpgaSimBackend::new(net, cfg.precision, params, cfg.hyper);
+            if let Some(plan) = &cfg.fault {
+                // expose the FIFO/datapath words of the fixed datapath to
+                // the same arrival stream under every mitigation (hardened
+                // strategies count the strikes as masked/corrected)
+                if cfg.precision == Precision::Fixed {
+                    backend.accelerator_mut().set_seu_hook(Some(SeuHook::new(
+                        cfg.seed ^ FAULT_FIFO_SALT,
+                        plan.rate,
+                        plan.mitigation,
+                    )));
+                }
+            }
+            let (r, stats, driven) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
+            let acc = match &driven {
+                Driven::Clean(b) => b.accelerator(),
+                Driven::Faulted(fb) => fb.inner().accelerator(),
+            };
+            let stats = stats.map(|mut s| {
+                if let Some(hook_stats) = acc.seu_stats() {
+                    s.add(&hook_stats);
+                }
+                s
+            });
+            // charge the mitigation's voter/decode/scrub stages into the
+            // modeled device time (TimingModel hooks; zero when fault-free
+            // or unmitigated)
+            let mut cycles = acc.stats().cycles;
+            if let Some(plan) = &cfg.fault {
+                cycles += plan
+                    .mitigation
+                    .extra_cycles_per_update(&net, cfg.precision, acc.timing())
+                    * acc.stats().updates;
+            }
+            (r, Some(acc.device().cycles_to_us(cycles)), Some(cycles), stats)
         }
     };
 
@@ -142,6 +217,7 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
         train: train_report,
         fpga_modeled_us,
         fpga_cycles,
+        fault,
     })
 }
 
@@ -216,6 +292,77 @@ mod tests {
         let per_a = a.fpga_cycles.unwrap() as f64 / a.train.total_updates as f64;
         let per_b = b.fpga_cycles.unwrap() as f64 / b.train.total_updates as f64;
         assert!(per_b < per_a, "{per_b} >= {per_a}");
+    }
+
+    #[test]
+    fn faulted_missions_run_and_account_on_both_backends() {
+        use crate::fault::Mitigation;
+        for backend in [BackendKind::Cpu, BackendKind::FpgaSim] {
+            let cfg = MissionConfig {
+                episodes: 6,
+                max_steps: 40,
+                backend,
+                fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+                ..Default::default()
+            };
+            let r = run_mission(&cfg, None).unwrap();
+            let stats = r.fault.expect("fault stats present");
+            assert!(stats.total_upsets() > 0, "{backend:?}");
+            // fault-free runs keep reporting no stats
+            let clean = MissionConfig { fault: None, ..cfg };
+            assert!(run_mission(&clean, None).unwrap().fault.is_none());
+        }
+    }
+
+    #[test]
+    fn mitigated_fpga_mission_charges_timing_overhead() {
+        use crate::fault::Mitigation;
+        let base = MissionConfig {
+            episodes: 5,
+            max_steps: 30,
+            backend: BackendKind::FpgaSim,
+            ..Default::default()
+        };
+        let none = MissionConfig {
+            fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+            ..base.clone()
+        };
+        let tmr = MissionConfig {
+            fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::Tmr }),
+            ..base
+        };
+        let a = run_mission(&none, None).unwrap();
+        let b = run_mission(&tmr, None).unwrap();
+        // at batch=1, steps == updates, so per-update cycles are exactly
+        // forward + qupdate (+ the TMR voter stages: 5 on the MLP) on
+        // both trajectories — the surcharge is visible as a constant
+        let per = |r: &MissionReport| r.fpga_cycles.unwrap() as f64 / r.train.total_updates as f64;
+        assert!(
+            (per(&b) - per(&a) - 5.0).abs() < 1e-9,
+            "per-update cycles: none {} vs tmr {}",
+            per(&a),
+            per(&b)
+        );
+    }
+
+    #[test]
+    fn faulted_missions_are_reproducible_per_mitigation() {
+        use crate::fault::Mitigation;
+        for mitigation in Mitigation::all() {
+            let cfg = MissionConfig {
+                episodes: 5,
+                max_steps: 30,
+                backend: BackendKind::FpgaSim,
+                fault: Some(FaultPlan { rate: 5e-4, mitigation }),
+                ..Default::default()
+            };
+            let a = run_mission(&cfg, None).unwrap();
+            let b = run_mission(&cfg, None).unwrap();
+            assert_eq!(a.fault, b.fault, "{}", mitigation.label());
+            for (x, y) in a.train.episodes.iter().zip(&b.train.episodes) {
+                assert_eq!(x.total_reward, y.total_reward, "{}", mitigation.label());
+            }
+        }
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //! PJRT clients have thread affinity), telemetry aggregation, and the
 //! workload sweep harness the table generators and benches drive.
 //!
-//! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner.
+//! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner
+//!   (optionally under SEU injection via [`crate::fault`]).
 //! * [`scheduler`] — multi-rover leader: spawns workers, collects reports.
 //! * [`telemetry`] — learning curves, aggregate statistics, JSON export.
 //! * [`sweep`] — fixed-workload latency measurement across backends (the
-//!   measured side of Tables 3–6).
+//!   measured side of Tables 3–6), plus the [`sweep::resilience`] campaign
+//!   mode (rate × mitigation × backend across the fleet).
 
 pub mod mission;
 pub mod scheduler;
@@ -20,4 +22,4 @@ pub mod telemetry;
 
 pub use mission::{run_mission, MissionConfig, MissionReport};
 pub use scheduler::{run_fleet, FleetReport};
-pub use sweep::{measure_backend, measure_backend_batched, WorkloadTiming};
+pub use sweep::{measure_backend, measure_backend_batched, resilience, WorkloadTiming};

@@ -11,9 +11,13 @@ use std::time::Instant;
 
 use crate::config::NetConfig;
 use crate::error::{Error, Result};
-use crate::qlearn::backend::QBackend;
+use crate::fault::campaign::{run_campaign, CampaignSpec, ResilienceReport};
+use crate::fault::Mitigation;
+use crate::qlearn::backend::{BackendKind, QBackend};
 use crate::qlearn::replay::FlatBatch;
 use crate::util::Rng;
+
+use super::mission::MissionConfig;
 
 /// A pre-generated workload of `n` transitions for one configuration.
 #[derive(Debug, Clone)]
@@ -179,6 +183,33 @@ pub fn measure_backend_batched<B: QBackend>(
     })
 }
 
+/// Resilience sweep mode: campaign upset rate × mitigation × backend
+/// across the fleet scheduler. `base` supplies the mission template
+/// (arch/env/precision/episodes/seed); each cell runs a `rovers`-wide
+/// fleet, scored against the fault-free baseline of its backend. See
+/// [`crate::fault::campaign`] for the cell semantics and determinism
+/// guarantees; the `radiation` CLI subcommand is a thin front-end.
+pub fn resilience(
+    base: &MissionConfig,
+    backends: &[BackendKind],
+    rates: &[f64],
+    mitigations: &[Mitigation],
+    rovers: usize,
+) -> Result<ResilienceReport> {
+    if backends.is_empty() || rates.is_empty() || mitigations.is_empty() {
+        return Err(Error::Config(
+            "resilience sweep needs ≥1 backend, rate and mitigation".into(),
+        ));
+    }
+    run_campaign(&CampaignSpec {
+        base: base.clone(),
+        backends: backends.to_vec(),
+        rates: rates.to_vec(),
+        mitigations: mitigations.to_vec(),
+        rovers: rovers.max(1),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +262,23 @@ mod tests {
         // tail clamp
         assert_eq!(w.flat_batch(8, 10).len(), 2);
         assert!(w.flat_batch(10, 4).is_empty());
+    }
+
+    #[test]
+    fn resilience_sweep_covers_the_grid_and_rejects_empty_axes() {
+        let base = MissionConfig { episodes: 4, max_steps: 25, ..Default::default() };
+        let r = resilience(
+            &base,
+            &[BackendKind::Cpu],
+            &[1e-4, 1e-3],
+            &[Mitigation::None, Mitigation::Ecc],
+            1,
+        )
+        .unwrap();
+        assert_eq!(r.cells.len(), 4);
+        assert!(resilience(&base, &[], &[1e-4], &[Mitigation::None], 1).is_err());
+        assert!(resilience(&base, &[BackendKind::Cpu], &[], &[Mitigation::None], 1).is_err());
+        assert!(resilience(&base, &[BackendKind::Cpu], &[1e-4], &[], 1).is_err());
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! [`FaultyBackend`]: train any backend under SEU injection.
+//!
+//! The wrapper routes the inner backend's weights through a
+//! [`ProtectedStore`] (the on-board weight memory under a mitigation
+//! strategy) and exposes transition encodings to transient upsets (the
+//! replay/input registers of the datapath). Per update:
+//!
+//! 1. sample Poisson arrivals over the susceptible bit population and
+//!    advance the scrub timer — a clean step (no strike) ends here;
+//! 2. on a strike: replay the hardware write-through (store := inner
+//!    weights, re-encoding ECC words / resynchronizing TMR replicas /
+//!    refreshing the scrub shadow), apply the upsets, run any due scrub
+//!    pass, then mitigated-read and load the result into the inner
+//!    backend;
+//! 3. the inner backend runs the (possibly corrupted) Q-update.
+//!
+//! The lazy replay is sound because arrival *counts* depend only on the
+//! population, never on store content, and the hardware rewrites every
+//! weight each update anyway. Everything draws from one seeded
+//! [`FaultModel`] stream, so a mission is bit-reproducible from
+//! `(seed, rate, mitigation)`.
+
+use crate::config::{NetConfig, Precision};
+use crate::error::Result;
+use crate::fixed::FixedSpec;
+use crate::nn::params::QNetParams;
+use crate::qlearn::backend::QBackend;
+use crate::qlearn::replay::FlatBatch;
+
+use super::inject::{flatten_params, flip_f32_bit, unflatten_params, WordCodec};
+use super::mitigation::{Mitigation, ProtectedStore};
+use super::model::{strike_window, FaultModel, FaultStats};
+
+/// A [`QBackend`] whose weight storage and input registers live in a
+/// radiation environment.
+pub struct FaultyBackend<B: QBackend> {
+    inner: B,
+    cfg: NetConfig,
+    codec: WordCodec,
+    store: ProtectedStore,
+    model: FaultModel,
+    mitigation: Mitigation,
+}
+
+impl<B: QBackend> FaultyBackend<B> {
+    pub fn new(inner: B, prec: Precision, mitigation: Mitigation, model: FaultModel) -> Self {
+        let cfg = *inner.net();
+        let codec = WordCodec::new(prec, FixedSpec::default());
+        let words = codec.encode_all(&flatten_params(&inner.params()));
+        let store = ProtectedStore::new(mitigation, codec.bits_per_word(), &words);
+        FaultyBackend { inner, cfg, codec, store, model, mitigation }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    pub fn mitigation(&self) -> Mitigation {
+        self.mitigation
+    }
+
+    /// Injection + masking accounting so far.
+    pub fn stats(&self) -> FaultStats {
+        self.model.stats
+    }
+
+    /// Transient upsets on a register file of f32 words (transition
+    /// encodings / replay entries): one [`strike_window`] per exposure.
+    /// TMR and ECC harden these registers too, but are not structurally
+    /// immune — vote-breaking and double-strike escapes land per the
+    /// shared policy.
+    fn corrupt_f32s(&mut self, xs: &mut [f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        strike_window(&mut self.model, self.mitigation, xs.len(), 32, |word, bit| {
+            xs[word] = flip_f32_bit(xs[word], bit);
+        });
+    }
+
+    /// Steps 1–2 of the update cycle: inject, scrub, mitigated read, load.
+    ///
+    /// The hardware rewrites every weight (and its protected
+    /// representation) each update, but the arrival count depends only on
+    /// the susceptible bit *population* — so the store content is replayed
+    /// from the inner backend's weights lazily, only when a strike window
+    /// actually needs it. At realistic rates the overwhelming majority of
+    /// steps take the early exit and pay no encode/decode work at all.
+    fn expose_and_load(&mut self, steps: u64) -> Result<()> {
+        let flips = self.model.upsets(self.store.susceptible_bits(), steps);
+        let scrub_due = self.store.tick_scrub(steps);
+        if flips == 0 {
+            // a due scrub pass on an (effectively) freshly written store
+            // restores nothing; the timer was advanced above
+            return Ok(());
+        }
+        self.sync_store();
+        self.store.apply_upsets(&mut self.model, flips);
+        if scrub_due {
+            self.store.scrub_now(&mut self.model);
+        }
+        let words = self.store.read(&mut self.model.stats);
+        let params = unflatten_params(&self.cfg, &self.codec.decode_all(&words))?;
+        self.inner.load_params(&params);
+        Ok(())
+    }
+
+    /// Replay the write-through: store (and golden/replicas/codewords)
+    /// := the inner backend's current weights.
+    fn sync_store(&mut self) {
+        let words = self.codec.encode_all(&flatten_params(&self.inner.params()));
+        self.store.write(&words);
+    }
+}
+
+impl<B: QBackend> QBackend for FaultyBackend<B> {
+    fn net(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "seu[{}@{:.1e}]/{}",
+            self.mitigation.label(),
+            self.model.rate(),
+            self.inner.name()
+        )
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        // action selection reads the weights as last exposed/written; the
+        // next update's injection covers the elapsed step
+        self.inner.q_values(sa)
+    }
+
+    fn update(
+        &mut self,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        action: usize,
+        reward: f32,
+    ) -> Result<f32> {
+        let mut cur = sa_cur.to_vec();
+        let mut next = sa_next.to_vec();
+        let mut rw = [reward];
+        self.corrupt_f32s(&mut cur);
+        self.corrupt_f32s(&mut next);
+        self.corrupt_f32s(&mut rw);
+        self.expose_and_load(1)?;
+        self.inner.update(&cur, &next, action, rw[0])
+    }
+
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        batch.validate(&self.cfg)?;
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        // replay-buffer entries sat in memory for the whole flush window
+        let mut b = batch.clone();
+        self.corrupt_f32s(&mut b.sa_cur);
+        self.corrupt_f32s(&mut b.sa_next);
+        self.corrupt_f32s(&mut b.rewards);
+        self.expose_and_load(batch.len() as u64)?;
+        self.inner.update_batch(&b)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.inner.preferred_batch()
+    }
+
+    fn params(&self) -> QNetParams {
+        self.inner.params()
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        // the store is replayed from the inner weights at strike time, so
+        // no eager resynchronization is needed here
+        self.inner.load_params(params);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind, Hyper};
+    use crate::coordinator::sweep::Workload;
+    use crate::qlearn::backend::CpuBackend;
+    use crate::util::Rng;
+
+    fn cpu(net: NetConfig, prec: Precision, seed: u64) -> CpuBackend {
+        let mut rng = Rng::seeded(seed);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        CpuBackend::new(net, prec, params, Hyper::default())
+    }
+
+    fn drive<B: QBackend>(backend: &mut B, net: &NetConfig, n: usize) -> Vec<f32> {
+        let w = Workload::synthetic(*net, n, 77);
+        let step = net.a * net.d;
+        (0..n)
+            .map(|i| {
+                backend
+                    .update(
+                        &w.sa_cur[i * step..(i + 1) * step],
+                        &w.sa_next[i * step..(i + 1) * step],
+                        w.actions[i],
+                        w.rewards[i],
+                    )
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_rate_none_is_transparent_for_float() {
+        // float precision: the storage roundtrip is bit-exact, so a
+        // zero-rate unmitigated wrapper must reproduce the bare backend
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut bare = cpu(net, Precision::Float, 5);
+        let mut wrapped = FaultyBackend::new(
+            cpu(net, Precision::Float, 5),
+            Precision::Float,
+            Mitigation::None,
+            FaultModel::new(1, 0.0),
+        );
+        let a = drive(&mut bare, &net, 30);
+        let b = drive(&mut wrapped, &net, 30);
+        assert_eq!(a, b);
+        assert_eq!(bare.params(), wrapped.params());
+        assert_eq!(wrapped.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn unmitigated_injection_corrupts_weights() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut clean = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::None,
+            FaultModel::new(11, 0.0),
+        );
+        let mut hot = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::None,
+            FaultModel::new(11, 2e-3), // λ ≈ 1.2 store flips/step
+        );
+        drive(&mut clean, &net, 60);
+        drive(&mut hot, &net, 60);
+        assert!(hot.stats().injected > 0);
+        assert!(hot.stats().transient > 0);
+        assert!(clean.params().max_abs_diff(&hot.params()) > 0.0);
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_all_mitigations() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        for prec in [Precision::Fixed, Precision::Float] {
+            for m in Mitigation::all() {
+                let mut run = || {
+                    let mut b = FaultyBackend::new(
+                        cpu(net, prec, 5),
+                        prec,
+                        m,
+                        FaultModel::new(21, 1e-3),
+                    );
+                    let errs = drive(&mut b, &net, 40);
+                    (errs, b.params(), b.stats())
+                };
+                let (e1, p1, s1) = run();
+                let (e2, p2, s2) = run();
+                assert_eq!(e1, e2, "{prec:?}/{}", m.label());
+                assert_eq!(p1, p2, "{prec:?}/{}", m.label());
+                assert_eq!(s1, s2, "{prec:?}/{}", m.label());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_path_injects_and_stays_deterministic() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let w = Workload::synthetic(net, 32, 9);
+        let mut run = || {
+            let mut b = FaultyBackend::new(
+                cpu(net, Precision::Fixed, 5),
+                Precision::Fixed,
+                Mitigation::Tmr,
+                FaultModel::new(31, 5e-3),
+            );
+            let errs = b.update_batch(&w.flat_batch(0, 32)).unwrap();
+            (errs, b.params(), b.stats())
+        };
+        let (e1, p1, s1) = run();
+        let (e2, p2, s2) = run();
+        assert_eq!(e1, e2);
+        assert_eq!(p1, p2);
+        assert_eq!(s1, s2);
+        assert!(s1.total_upsets() > 0);
+        assert!(s1.masked > 0);
+        // empty batch is a no-op
+        let mut b = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::Tmr,
+            FaultModel::new(31, 5e-3),
+        );
+        assert!(b.update_batch(&FlatBatch::empty()).unwrap().is_empty());
+        assert_eq!(b.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn tmr_tracks_the_fault_free_trajectory_where_none_diverges() {
+        // same arrival stream, same transitions: TMR masks the store
+        // strikes and votes out the register strikes, so its weights stay
+        // near the fault-free run while the unmitigated copy drifts
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let rate = 1e-3;
+        let mut clean = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::None,
+            FaultModel::new(41, 0.0),
+        );
+        let mut tmr = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::Tmr,
+            FaultModel::new(41, rate),
+        );
+        let mut none = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::None,
+            FaultModel::new(41, rate),
+        );
+        drive(&mut clean, &net, 80);
+        drive(&mut tmr, &net, 80);
+        drive(&mut none, &net, 80);
+        assert!(tmr.stats().masked > 0, "TMR saw no work");
+        let tmr_drift = clean.params().max_abs_diff(&tmr.params());
+        let none_drift = clean.params().max_abs_diff(&none.params());
+        assert!(
+            none_drift > tmr_drift,
+            "unmitigated drift {none_drift} <= TMR drift {tmr_drift}"
+        );
+    }
+}

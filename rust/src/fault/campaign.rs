@@ -1,0 +1,262 @@
+//! Resilience campaigns: rate × mitigation × backend across the fleet.
+//!
+//! One campaign cell = a full multi-rover training run (through
+//! [`crate::coordinator::scheduler::run_fleet`]) under a fault plan, scored
+//! as the fleet's mean learning delta against the fault-free baseline of
+//! the same backend, alongside the mitigation's modeled hardware overheads.
+//! Campaigns are deterministic: the same spec reproduces the same report
+//! bit-for-bit (see `tests/fault_determinism.rs`).
+
+use crate::config::Precision;
+use crate::coordinator::mission::MissionConfig;
+use crate::coordinator::scheduler::run_fleet;
+use crate::error::Result;
+use crate::fpga::power::PowerCoeffs;
+use crate::fpga::TimingModel;
+use crate::qlearn::backend::BackendKind;
+use crate::util::Json;
+
+use super::mitigation::Mitigation;
+use super::model::FaultStats;
+use super::FaultPlan;
+
+/// What to campaign.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Mission template (arch/env/precision/episodes/seed/batch…); its
+    /// `backend` and `fault` fields are overridden per cell.
+    pub base: MissionConfig,
+    pub backends: Vec<BackendKind>,
+    /// Upset rates, per bit per step.
+    pub rates: Vec<f64>,
+    pub mitigations: Vec<Mitigation>,
+    /// Rovers per cell (the fleet width).
+    pub rovers: usize,
+}
+
+/// One campaign cell outcome.
+#[derive(Debug, Clone)]
+pub struct ResilienceCell {
+    pub backend: BackendKind,
+    pub rate: f64,
+    pub mitigation: Mitigation,
+    /// Fleet mean learning delta under injection.
+    pub learning_delta: f32,
+    /// Fault-free fleet mean learning delta (same backend/seeds).
+    pub baseline_delta: f32,
+    /// Summed fault accounting across the fleet.
+    pub stats: FaultStats,
+    /// Modeled hardening overheads vs the unmitigated datapath.
+    pub area_overhead: f64,
+    pub power_overhead: f64,
+    pub cycle_overhead: f64,
+}
+
+impl ResilienceCell {
+    /// Learning lost to radiation: baseline − faulty (positive = worse).
+    pub fn degradation(&self) -> f32 {
+        self.baseline_delta - self.learning_delta
+    }
+}
+
+/// A full campaign outcome.
+#[derive(Debug, Clone)]
+pub struct ResilienceReport {
+    pub cells: Vec<ResilienceCell>,
+    pub rovers: usize,
+    pub episodes: usize,
+    pub seed: u64,
+    pub precision: Precision,
+}
+
+impl ResilienceReport {
+    /// Plain-text resilience table (the `radiation` subcommand's output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "[R2] Resilience campaign ({} rovers × {} episodes, {}, seed {})\n",
+            self.rovers,
+            self.episodes,
+            self.precision.as_str(),
+            self.seed
+        ));
+        out.push_str(&format!(
+            "  {:<9} {:>9} {:<9} {:>8} {:>8} {:>7} {:>8} {:>8} {:>7} {:>7} {:>7}\n",
+            "backend",
+            "rate/bit",
+            "mitig.",
+            "Δreward",
+            "clean Δ",
+            "degr.",
+            "upsets",
+            "masked",
+            "corr.",
+            "area×",
+            "power×"
+        ));
+        out.push_str(&format!("  {:-<97}\n", ""));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "  {:<9} {:>9.1e} {:<9} {:>8.3} {:>8.3} {:>7.3} {:>8} {:>8} {:>7} {:>7.2} {:>7.2}\n",
+                c.backend.as_str(),
+                c.rate,
+                c.mitigation.label(),
+                c.learning_delta,
+                c.baseline_delta,
+                c.degradation(),
+                c.stats.total_upsets(),
+                c.stats.masked,
+                c.stats.corrected,
+                c.area_overhead,
+                c.power_overhead
+            ));
+        }
+        out.push_str(
+            "  note: Δreward = fleet mean(last-20 − first-20 episode reward); \
+             area×/power× = mitigated datapath vs unmitigated (model)\n",
+        );
+        out
+    }
+
+    /// Machine-readable form (campaign tracking across PRs).
+    pub fn to_json(&self) -> Json {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("backend", Json::Str(c.backend.as_str().into())),
+                    ("rate", Json::Num(c.rate)),
+                    ("mitigation", Json::Str(c.mitigation.label())),
+                    ("learning_delta", Json::Num(c.learning_delta as f64)),
+                    ("baseline_delta", Json::Num(c.baseline_delta as f64)),
+                    ("degradation", Json::Num(c.degradation() as f64)),
+                    ("upsets", Json::Num(c.stats.total_upsets() as f64)),
+                    ("masked", Json::Num(c.stats.masked as f64)),
+                    ("corrected", Json::Num(c.stats.corrected as f64)),
+                    ("uncorrectable", Json::Num(c.stats.uncorrectable as f64)),
+                    ("scrubbed", Json::Num(c.stats.scrubbed as f64)),
+                    ("area_overhead", Json::Num(c.area_overhead)),
+                    ("power_overhead", Json::Num(c.power_overhead)),
+                    ("cycle_overhead", Json::Num(c.cycle_overhead)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("campaign", Json::Str("resilience".into())),
+            ("rovers", Json::Num(self.rovers as f64)),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("precision", Json::Str(self.precision.as_str().into())),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}
+
+/// Run the campaign: one fault-free baseline fleet per backend, then one
+/// fleet per (backend, rate, mitigation) cell.
+pub fn run_campaign(spec: &CampaignSpec) -> Result<ResilienceReport> {
+    let coeffs = PowerCoeffs::default();
+    let timing = TimingModel::default();
+    let net = spec.base.net();
+    let mut cells = Vec::new();
+
+    for &backend in &spec.backends {
+        let mut clean_cfg = spec.base.clone();
+        clean_cfg.backend = backend;
+        clean_cfg.fault = None;
+        let baseline = run_fleet(&clean_cfg, spec.rovers)?.mean_learning_delta();
+
+        for &rate in &spec.rates {
+            for &mitigation in &spec.mitigations {
+                let mut cfg = clean_cfg.clone();
+                cfg.fault = Some(FaultPlan { rate, mitigation });
+                let fleet = run_fleet(&cfg, spec.rovers)?;
+                let mut stats = FaultStats::default();
+                for rover in &fleet.rovers {
+                    if let Some(s) = rover.fault {
+                        stats.add(&s);
+                    }
+                }
+                cells.push(ResilienceCell {
+                    backend,
+                    rate,
+                    mitigation,
+                    learning_delta: fleet.mean_learning_delta(),
+                    baseline_delta: baseline,
+                    stats,
+                    area_overhead: mitigation.area_overhead_factor(&net, cfg.precision),
+                    power_overhead: mitigation
+                        .power_overhead_factor(&net, cfg.precision, &coeffs),
+                    cycle_overhead: mitigation
+                        .cycle_overhead_factor(&net, cfg.precision, &timing),
+                });
+            }
+        }
+    }
+
+    Ok(ResilienceReport {
+        cells,
+        rovers: spec.rovers,
+        episodes: spec.base.episodes,
+        seed: spec.base.seed,
+        precision: spec.base.precision,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+
+    fn quick_spec() -> CampaignSpec {
+        CampaignSpec {
+            base: MissionConfig {
+                arch: Arch::Mlp,
+                env: EnvKind::Simple,
+                precision: Precision::Fixed,
+                episodes: 5,
+                max_steps: 30,
+                seed: 3,
+                ..Default::default()
+            },
+            backends: vec![BackendKind::Cpu],
+            rates: vec![1e-4],
+            mitigations: vec![Mitigation::None, Mitigation::Tmr],
+            rovers: 2,
+        }
+    }
+
+    #[test]
+    fn campaign_produces_one_cell_per_combination() {
+        let r = run_campaign(&quick_spec()).unwrap();
+        assert_eq!(r.cells.len(), 2);
+        assert_eq!(r.rovers, 2);
+        for c in &r.cells {
+            assert_eq!(c.backend, BackendKind::Cpu);
+            assert!(c.stats.total_upsets() > 0, "{}", c.mitigation.label());
+            assert!(c.learning_delta.is_finite());
+        }
+        // the TMR cell reports the >2× hardware bill
+        let tmr = r.cells.iter().find(|c| c.mitigation == Mitigation::Tmr).unwrap();
+        assert!(tmr.area_overhead > 2.0);
+        assert!(tmr.power_overhead > 2.0);
+        let none = r.cells.iter().find(|c| c.mitigation == Mitigation::None).unwrap();
+        assert_eq!(none.area_overhead, 1.0);
+        assert_eq!(none.cycle_overhead, 1.0);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let r = run_campaign(&quick_spec()).unwrap();
+        let text = r.render();
+        assert!(text.contains("tmr"));
+        assert!(text.contains("Δreward"));
+        let j = r.to_json();
+        let cells = j.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        // serialized text parses back
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("rovers").and_then(Json::as_usize), Some(2));
+    }
+}

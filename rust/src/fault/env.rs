@@ -1,0 +1,103 @@
+//! Mission radiation environments.
+//!
+//! Upset rates are expressed per bit per **kilostep** (a step being one
+//! coordinator interaction step). These are *simulation-scale* figures: the
+//! relative ordering follows the space-radiation literature (interplanetary
+//! cruise under galactic cosmic rays, the partially shielded Mars surface,
+//! the brutal Jovian trapped-radiation belts), while the absolute scale is
+//! chosen so a full training mission accumulates a physically meaningful
+//! number of upsets. Calibrate `Custom` against a real device/mission pair.
+
+use crate::error::{Error, Result};
+
+/// A mission radiation environment, i.e. an upset-rate operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RadEnvironment {
+    /// Interplanetary cruise: galactic cosmic rays, no planetary shielding.
+    Cruise,
+    /// Mars surface: ~2.5 g/cm² CO₂ column + planet body shadowing.
+    MarsSurface,
+    /// Jupiter flyby: trapped-electron belts, orders of magnitude harsher.
+    JupiterFlyby,
+    /// Explicit rate, upsets per bit per kilostep.
+    Custom(f64),
+}
+
+impl RadEnvironment {
+    /// Upsets per bit per kilostep.
+    pub fn upsets_per_bit_per_kilostep(&self) -> f64 {
+        match self {
+            RadEnvironment::Cruise => 3.0e-2,
+            RadEnvironment::MarsSurface => 1.0e-2,
+            RadEnvironment::JupiterFlyby => 2.0,
+            RadEnvironment::Custom(r) => *r,
+        }
+    }
+
+    /// Upsets per bit per step — the unit [`crate::fault::FaultModel`] uses.
+    pub fn upsets_per_bit_per_step(&self) -> f64 {
+        self.upsets_per_bit_per_kilostep() / 1e3
+    }
+
+    /// The named environments (CLI enumeration, campaign sweeps).
+    pub fn named() -> [RadEnvironment; 3] {
+        [
+            RadEnvironment::Cruise,
+            RadEnvironment::MarsSurface,
+            RadEnvironment::JupiterFlyby,
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RadEnvironment::Cruise => "cruise".into(),
+            RadEnvironment::MarsSurface => "mars-surface".into(),
+            RadEnvironment::JupiterFlyby => "jupiter-flyby".into(),
+            RadEnvironment::Custom(r) => format!("custom({r:e})"),
+        }
+    }
+}
+
+impl std::str::FromStr for RadEnvironment {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "cruise" => Ok(RadEnvironment::Cruise),
+            "mars" | "mars-surface" => Ok(RadEnvironment::MarsSurface),
+            "jupiter" | "jupiter-flyby" => Ok(RadEnvironment::JupiterFlyby),
+            other => match other.parse::<f64>() {
+                Ok(r) if r >= 0.0 => Ok(RadEnvironment::Custom(r)),
+                _ => Err(Error::Config(format!(
+                    "unknown radiation environment `{other}` \
+                     (cruise|mars-surface|jupiter-flyby|<rate/bit/kstep>)"
+                ))),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_ordering() {
+        let c = RadEnvironment::Cruise.upsets_per_bit_per_step();
+        let m = RadEnvironment::MarsSurface.upsets_per_bit_per_step();
+        let j = RadEnvironment::JupiterFlyby.upsets_per_bit_per_step();
+        assert!(m < c, "Mars surface is shielded relative to cruise");
+        assert!(c < j, "Jupiter is the harshest environment");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_custom() {
+        for e in RadEnvironment::named() {
+            let back: RadEnvironment = e.label().parse().unwrap();
+            assert_eq!(back, e);
+        }
+        let c: RadEnvironment = "0.5".parse().unwrap();
+        assert_eq!(c, RadEnvironment::Custom(0.5));
+        assert!("-1".parse::<RadEnvironment>().is_err());
+        assert!("ganymede".parse::<RadEnvironment>().is_err());
+    }
+}

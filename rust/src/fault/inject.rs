@@ -1,0 +1,192 @@
+//! Bit-level injection primitives and the storage-word view of parameters.
+
+use crate::config::{NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::fixed::{Fixed, FixedSpec};
+use crate::nn::params::QNetParams;
+
+/// Flip one bit of an IEEE-754 single (bit 0 = LSB of the mantissa,
+/// bit 31 = sign). Any resulting pattern — subnormal, ±∞, NaN — is kept:
+/// that is exactly what an upset in a float register produces.
+#[inline]
+pub fn flip_f32_bit(x: f32, bit: u32) -> f32 {
+    debug_assert!(bit < 32);
+    f32::from_bits(x.to_bits() ^ (1u32 << bit))
+}
+
+/// Flip one bit of a fixed-point raw word of `spec.word` bits
+/// (two's complement, sign-extended back into the i64 carrier).
+#[inline]
+pub fn flip_fixed_raw(raw: i64, bit: u32, spec: FixedSpec) -> i64 {
+    Fixed::from_raw(raw, spec).flip_bit(bit).raw()
+}
+
+/// Flatten parameters into one scalar stream in artifact tensor order.
+pub fn flatten_params(p: &QNetParams) -> Vec<f32> {
+    let mut out = Vec::with_capacity(p.n_scalars());
+    for t in p.to_tensors() {
+        out.extend_from_slice(&t);
+    }
+    out
+}
+
+/// Rebuild parameters from a flat scalar stream (inverse of
+/// [`flatten_params`] for a matching configuration).
+pub fn unflatten_params(cfg: &NetConfig, flat: &[f32]) -> Result<QNetParams> {
+    let shapes: Vec<usize> = QNetParams::zeros(cfg)
+        .to_tensors()
+        .iter()
+        .map(|t| t.len())
+        .collect();
+    let total: usize = shapes.iter().sum();
+    if flat.len() != total {
+        return Err(Error::interface(format!(
+            "flat params length {} != expected {total}",
+            flat.len()
+        )));
+    }
+    let mut tensors = Vec::with_capacity(shapes.len());
+    let mut i = 0usize;
+    for n in shapes {
+        tensors.push(flat[i..i + n].to_vec());
+        i += n;
+    }
+    QNetParams::from_tensors(cfg, &tensors)
+}
+
+/// Views network weights as the raw storage words the radiation model
+/// flips: Q(word, frac) integer words in fixed mode (the BRAM/FF weight
+/// store of the paper's datapath), IEEE-754 bit patterns in float mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WordCodec {
+    prec: Precision,
+    spec: FixedSpec,
+}
+
+impl WordCodec {
+    pub fn new(prec: Precision, spec: FixedSpec) -> WordCodec {
+        WordCodec { prec, spec }
+    }
+
+    /// Susceptible bits per stored word.
+    pub fn bits_per_word(&self) -> u32 {
+        match self.prec {
+            Precision::Fixed => self.spec.word,
+            Precision::Float => 32,
+        }
+    }
+
+    pub fn spec(&self) -> FixedSpec {
+        self.spec
+    }
+
+    /// Scalar → storage word (low `bits_per_word()` bits of the u64).
+    pub fn encode(&self, x: f32) -> u64 {
+        match self.prec {
+            Precision::Fixed => {
+                let mask = (1u64 << self.spec.word) - 1;
+                (Fixed::from_f32(x, self.spec).raw() as u64) & mask
+            }
+            Precision::Float => x.to_bits() as u64,
+        }
+    }
+
+    /// Storage word → scalar.
+    pub fn decode(&self, w: u64) -> f32 {
+        match self.prec {
+            Precision::Fixed => {
+                let mask = (1u64 << self.spec.word) - 1;
+                let sign = 1u64 << (self.spec.word - 1);
+                let w = w & mask;
+                let raw = if w & sign != 0 { (w | !mask) as i64 } else { w as i64 };
+                Fixed::from_raw(raw, self.spec).to_f32()
+            }
+            Precision::Float => f32::from_bits(w as u32),
+        }
+    }
+
+    pub fn encode_all(&self, xs: &[f32]) -> Vec<u64> {
+        xs.iter().map(|&x| self.encode(x)).collect()
+    }
+
+    pub fn decode_all(&self, ws: &[u64]) -> Vec<f32> {
+        ws.iter().map(|&w| self.decode(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::util::Rng;
+
+    #[test]
+    fn f32_flip_is_involutive() {
+        for bit in 0..32 {
+            let x = 1.375f32;
+            let y = flip_f32_bit(x, bit);
+            assert_ne!(x.to_bits(), y.to_bits());
+            assert_eq!(flip_f32_bit(y, bit).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn fixed_raw_flip_matches_value_flip() {
+        let spec = FixedSpec::default();
+        let v = Fixed::from_f64(-1.625, spec);
+        for bit in 0..spec.word {
+            assert_eq!(flip_fixed_raw(v.raw(), bit, spec), v.flip_bit(bit).raw());
+        }
+    }
+
+    #[test]
+    fn params_flatten_roundtrip() {
+        let mut rng = Rng::seeded(3);
+        for cfg in NetConfig::all() {
+            let p = QNetParams::init(&cfg, 0.4, &mut rng);
+            let flat = flatten_params(&p);
+            assert_eq!(flat.len(), cfg.n_params());
+            let back = unflatten_params(&cfg, &flat).unwrap();
+            assert_eq!(p, back);
+            assert!(unflatten_params(&cfg, &flat[1..]).is_err());
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_on_grid_values() {
+        let mut rng = Rng::seeded(4);
+        for (w, f) in [(8u32, 4u32), (12, 8), (16, 8), (18, 12), (24, 16), (32, 24)] {
+            let spec = FixedSpec::new(w, f);
+            let codec = WordCodec::new(Precision::Fixed, spec);
+            assert_eq!(codec.bits_per_word(), w);
+            for _ in 0..200 {
+                let x = Fixed::from_f32(rng.f32_range(-4.0, 4.0), spec).to_f32();
+                assert_eq!(codec.decode(codec.encode(x)), x, "Q({w},{f}) {x}");
+            }
+        }
+        let fc = WordCodec::new(Precision::Float, FixedSpec::default());
+        assert_eq!(fc.bits_per_word(), 32);
+        for _ in 0..200 {
+            let x = rng.f32_range(-100.0, 100.0);
+            assert_eq!(fc.decode(fc.encode(x)).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn codec_negative_words_sign_extend() {
+        let spec = FixedSpec::default();
+        let codec = WordCodec::new(Precision::Fixed, spec);
+        let x = -3.0f32;
+        let w = codec.encode(x);
+        assert!(w < (1u64 << spec.word)); // stays within the word
+        assert_eq!(codec.decode(w), x);
+    }
+
+    #[test]
+    fn arch_mix_guard() {
+        let mlp = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let per = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let p = QNetParams::zeros(&per);
+        assert!(unflatten_params(&mlp, &flatten_params(&p)).is_err());
+    }
+}

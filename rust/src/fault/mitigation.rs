@@ -1,0 +1,815 @@
+//! SEU mitigation strategies and the protected weight store.
+//!
+//! Three classic space-FPGA hardening techniques (Antunes & Podobas's
+//! survey axes), each with bit-accurate masking behaviour *and* a hardware
+//! cost charged through the [`crate::fpga`] area/power/timing hooks:
+//!
+//! * **TMR** — the whole datapath and weight store triplicated; reads pass
+//!   a bitwise majority voter. Masks every single upset per word per read
+//!   window; costs ~3× area and dynamic power plus a voter stage.
+//! * **Scrub** — a golden copy in hardened memory, periodically rewritten
+//!   over the working store. Cheap — but for *continuously retrained*
+//!   weight memory it is nearly ineffective by construction: backprop
+//!   rewrites every weight (and its golden shadow) each update, so a flip
+//!   is either caught by a pass inside its own injection window or read
+//!   into training and legitimized by the next write-back. The campaign
+//!   table makes this visible (scrub degradation ≈ unmitigated at scrub
+//!   cost); scrubbing's classical value is for memory that is **not**
+//!   rewritten every cycle — configuration memory, a modeled follow-on
+//!   (see ROADMAP).
+//! * **ECC** — SECDED (Hamming + overall parity) on every stored word:
+//!   single-bit errors corrected on read (and written back), double-bit
+//!   errors detected but not corrected.
+
+use crate::config::{NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::fixed::FixedSpec;
+use crate::fpga::area::accelerator_resources;
+use crate::fpga::power::{dynamic_power_w, power_w, stream_power_w, PowerCoeffs};
+use crate::fpga::units::{cost, Resources};
+use crate::fpga::TimingModel;
+
+use super::inject::WordCodec;
+use super::model::{FaultModel, FaultStats};
+
+/// A hardening strategy for the weight store / datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mitigation {
+    /// Soft everything — the paper's baseline datapath.
+    None,
+    /// Triple modular redundancy with bitwise majority voting.
+    Tmr,
+    /// Golden-copy scrubbing every `interval` steps. Note: against
+    /// weight memory that every update rewrites (write-through golden
+    /// shadow), only flips repaired within their own injection window are
+    /// caught — see the module docs for why this is a result, not a bug.
+    Scrub { interval: u32 },
+    /// SECDED on every stored word.
+    Ecc,
+}
+
+/// Default scrub period, steps.
+pub const DEFAULT_SCRUB_INTERVAL: u32 = 64;
+
+impl Mitigation {
+    /// The canonical strategy sweep (campaigns, CLI `all`).
+    pub fn all() -> [Mitigation; 4] {
+        [
+            Mitigation::None,
+            Mitigation::Tmr,
+            Mitigation::Scrub { interval: DEFAULT_SCRUB_INTERVAL },
+            Mitigation::Ecc,
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Mitigation::None => "none".into(),
+            Mitigation::Tmr => "tmr".into(),
+            Mitigation::Scrub { interval } => format!("scrub:{interval}"),
+            Mitigation::Ecc => "ecc".into(),
+        }
+    }
+
+    /// Does this strategy also harden datapath registers/FIFOs (not just
+    /// the weight memory)? TMR triplicates logic; ECC here covers the
+    /// buffered words. Scrubbing only repairs the store between passes.
+    pub fn hardens_datapath(&self) -> bool {
+        matches!(self, Mitigation::Tmr | Mitigation::Ecc)
+    }
+
+    fn words(cfg: &NetConfig) -> u64 {
+        cfg.n_params() as u64
+    }
+
+    fn data_bits(prec: Precision) -> u32 {
+        WordCodec::new(prec, FixedSpec::default()).bits_per_word()
+    }
+
+    /// Hardware added on top of the base accelerator
+    /// ([`accelerator_resources`]) — folded into the device-fit check via
+    /// [`crate::fpga::area::check_fit_with`].
+    pub fn extra_resources(&self, cfg: &NetConfig, prec: Precision) -> Resources {
+        let words = Self::words(cfg);
+        let bits = Self::data_bits(prec) as u64;
+        match self {
+            Mitigation::None => Resources::default(),
+            Mitigation::Tmr => {
+                // two more full copies of the datapath + a per-bit majority
+                // voter on every stored word
+                let mut r = accelerator_resources(cfg, prec).scaled(2);
+                r.add(Resources::new(words * bits, words, 0, 0));
+                r
+            }
+            Mitigation::Scrub { .. } => {
+                // scrub FSM + golden-copy BRAM and its write-through bus
+                let mut r = cost::CONTROL;
+                r.add(Resources::new(60, 40, 0, 1));
+                r
+            }
+            Mitigation::Ecc => {
+                // encoder + decoder trees per word class, check-bit storage
+                let r = (Secded::new(bits as u32).check_bits() + 1) as u64;
+                Resources::new(words * 2 * r + 120, words * r, 0, 0)
+            }
+        }
+    }
+
+    /// Data-movement scale factor for the power model (TMR triplicates the
+    /// streamed writes; ECC streams the check bits alongside the data).
+    pub fn stream_factor(&self, prec: Precision) -> f64 {
+        let bits = Self::data_bits(prec);
+        match self {
+            Mitigation::None | Mitigation::Scrub { .. } => 1.0,
+            Mitigation::Tmr => 3.0,
+            Mitigation::Ecc => {
+                (bits + Secded::new(bits).check_bits() + 1) as f64 / bits as f64
+            }
+        }
+    }
+
+    /// Mitigated-design LUT count relative to the unmitigated datapath.
+    pub fn area_overhead_factor(&self, cfg: &NetConfig, prec: Precision) -> f64 {
+        let base = accelerator_resources(cfg, prec);
+        let extra = self.extra_resources(cfg, prec);
+        (base.luts + extra.luts) as f64 / base.luts as f64
+    }
+
+    /// Mitigated dynamic (datapath) power relative to the unmitigated
+    /// datapath — static and clock-tree power are excluded on both sides,
+    /// so the ratio isolates what the hardening hardware toggles.
+    pub fn power_overhead_factor(
+        &self,
+        cfg: &NetConfig,
+        prec: Precision,
+        coeffs: &PowerCoeffs,
+    ) -> f64 {
+        let base = dynamic_power_w(&accelerator_resources(cfg, prec), prec, coeffs)
+            + stream_power_w(cfg, coeffs);
+        let extra = dynamic_power_w(&self.extra_resources(cfg, prec), prec, coeffs)
+            + (self.stream_factor(prec) - 1.0) * stream_power_w(cfg, coeffs);
+        (base + extra) / base
+    }
+
+    /// Absolute mitigated power, W (the Tables 7–8 model plus the
+    /// mitigation hardware).
+    pub fn mitigated_power_w(
+        &self,
+        cfg: &NetConfig,
+        prec: Precision,
+        coeffs: &PowerCoeffs,
+    ) -> f64 {
+        power_w(cfg, prec, coeffs)
+            + dynamic_power_w(&self.extra_resources(cfg, prec), prec, coeffs)
+            + (self.stream_factor(prec) - 1.0) * stream_power_w(cfg, coeffs)
+    }
+
+    /// Extra cycles one Q-update pays under this strategy: voter/decode
+    /// stages on every protected storage read phase, or the amortized
+    /// scrub burst. Charged identically at both precisions (the voter /
+    /// SECDED decoder sits on the weight read path either way).
+    pub fn extra_cycles_per_update(
+        &self,
+        cfg: &NetConfig,
+        _prec: Precision,
+        t: &TimingModel,
+    ) -> u64 {
+        match self {
+            Mitigation::None => 0,
+            Mitigation::Tmr => t.protected_read_phases(cfg),
+            Mitigation::Ecc => t.protected_read_phases(cfg) + 1, // + encode on write-back
+            Mitigation::Scrub { interval } => {
+                let burst = t.scrub_burst_cycles(Self::words(cfg));
+                burst.div_ceil((*interval).max(1) as u64)
+            }
+        }
+    }
+
+    /// Per-update cycle cost relative to the unmitigated datapath.
+    pub fn cycle_overhead_factor(
+        &self,
+        cfg: &NetConfig,
+        prec: Precision,
+        t: &TimingModel,
+    ) -> f64 {
+        let base = t.qupdate(cfg, prec).total();
+        (base + self.extra_cycles_per_update(cfg, prec, t)) as f64 / base as f64
+    }
+}
+
+impl std::str::FromStr for Mitigation {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Mitigation::None),
+            "tmr" => Ok(Mitigation::Tmr),
+            "ecc" => Ok(Mitigation::Ecc),
+            "scrub" => Ok(Mitigation::Scrub { interval: DEFAULT_SCRUB_INTERVAL }),
+            other => {
+                if let Some(n) = other.strip_prefix("scrub:") {
+                    let interval: u32 = n.parse().map_err(|_| {
+                        Error::Config(format!("bad scrub interval `{n}`"))
+                    })?;
+                    if interval == 0 {
+                        return Err(Error::Config("scrub interval must be positive".into()));
+                    }
+                    Ok(Mitigation::Scrub { interval })
+                } else {
+                    Err(Error::Config(format!(
+                        "unknown mitigation `{other}` (none|tmr|scrub[:N]|ecc)"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- SECDED
+
+/// Outcome of one SECDED word decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EccOutcome {
+    Clean,
+    Corrected,
+    /// Double-bit (or worse) error: detected, data returned uncorrected.
+    Uncorrectable,
+}
+
+/// SECDED (Hamming + overall parity) over `k` data bits, `k ≤ 63`.
+/// Codeword layout (LSB-first in the u128): bit 0 is the overall parity,
+/// bits 1..=k+r hold the classic Hamming arrangement (parity bits at
+/// power-of-two positions, data bits LSB-first elsewhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Secded {
+    k: u32,
+    r: u32,
+}
+
+impl Secded {
+    pub fn new(k: u32) -> Secded {
+        assert!((1..=63).contains(&k), "SECDED data width {k} out of range");
+        let mut r = 0u32;
+        while (1u32 << r) < k + r + 1 {
+            r += 1;
+        }
+        Secded { k, r }
+    }
+
+    /// Hamming check bits (excludes the overall parity bit).
+    pub fn check_bits(&self) -> u32 {
+        self.r
+    }
+
+    /// Total codeword bits, including the overall parity bit.
+    pub fn total_bits(&self) -> u32 {
+        self.k + self.r + 1
+    }
+
+    pub fn encode(&self, data: u64) -> u128 {
+        debug_assert!(self.k == 63 || data < (1u64 << self.k));
+        let m = self.k + self.r;
+        let mut code: u128 = 0;
+        let mut di = 0u32;
+        for pos in 1..=m {
+            if !pos.is_power_of_two() {
+                if (data >> di) & 1 == 1 {
+                    code |= 1u128 << pos;
+                }
+                di += 1;
+            }
+        }
+        for p in 0..self.r {
+            let pp = 1u32 << p;
+            if self.group_parity(code, pp) == 1 {
+                code |= 1u128 << pp;
+            }
+        }
+        if self.overall_parity(code) == 1 {
+            code |= 1;
+        }
+        code
+    }
+
+    /// Decode (and correct a single-bit error in) a codeword.
+    pub fn decode(&self, code: u128) -> (u64, EccOutcome) {
+        let m = self.k + self.r;
+        let mut syndrome = 0u32;
+        for p in 0..self.r {
+            let pp = 1u32 << p;
+            if self.group_parity(code, pp) == 1 {
+                syndrome |= pp;
+            }
+        }
+        // parity of the whole codeword (bit 0 included): 0 when the number
+        // of flipped bits is even
+        let overall = self.overall_parity(code);
+        let mut fixed = code;
+        let outcome = if syndrome == 0 && overall == 0 {
+            EccOutcome::Clean
+        } else if overall == 1 {
+            if syndrome == 0 {
+                fixed ^= 1; // the overall parity bit itself flipped
+                EccOutcome::Corrected
+            } else if syndrome <= m {
+                fixed ^= 1u128 << syndrome;
+                EccOutcome::Corrected
+            } else {
+                EccOutcome::Uncorrectable // ≥3 odd-count flips
+            }
+        } else {
+            EccOutcome::Uncorrectable // even flip count > 0
+        };
+        let mut data = 0u64;
+        let mut di = 0u32;
+        for pos in 1..=m {
+            if !pos.is_power_of_two() {
+                if (fixed >> pos) & 1 == 1 {
+                    data |= 1u64 << di;
+                }
+                di += 1;
+            }
+        }
+        (data, outcome)
+    }
+
+    #[inline]
+    fn group_parity(&self, code: u128, pp: u32) -> u32 {
+        let m = self.k + self.r;
+        let mut parity = 0u32;
+        for pos in 1..=m {
+            if pos & pp != 0 {
+                parity ^= ((code >> pos) & 1) as u32;
+            }
+        }
+        parity & 1
+    }
+
+    #[inline]
+    fn overall_parity(&self, code: u128) -> u32 {
+        let m = self.k + self.r;
+        let mut parity = (code & 1) as u32;
+        for pos in 1..=m {
+            parity ^= ((code >> pos) & 1) as u32;
+        }
+        parity & 1
+    }
+}
+
+// ---------------------------------------------------------------- the store
+
+#[derive(Debug, Clone)]
+enum StoreState {
+    Plain { words: Vec<u64> },
+    Tmr { replicas: [Vec<u64>; 3] },
+    Scrub { words: Vec<u64>, golden: Vec<u64>, interval: u32, since: u32 },
+    Ecc { code: Vec<u128>, secded: Secded },
+}
+
+/// The weight store under a mitigation strategy: write-through on every
+/// update, upset injection between updates, mitigated reads.
+#[derive(Debug, Clone)]
+pub struct ProtectedStore {
+    mitigation: Mitigation,
+    bits: u32,
+    state: StoreState,
+}
+
+impl ProtectedStore {
+    /// `bits` is the data width per word; `initial` the starting words
+    /// (low `bits` of each u64).
+    pub fn new(mitigation: Mitigation, bits: u32, initial: &[u64]) -> ProtectedStore {
+        let words = initial.to_vec();
+        let state = match mitigation {
+            Mitigation::None => StoreState::Plain { words },
+            Mitigation::Tmr => {
+                StoreState::Tmr { replicas: [words.clone(), words.clone(), words] }
+            }
+            Mitigation::Scrub { interval } => StoreState::Scrub {
+                golden: words.clone(),
+                words,
+                interval: interval.max(1),
+                since: 0,
+            },
+            Mitigation::Ecc => {
+                let secded = Secded::new(bits);
+                StoreState::Ecc {
+                    code: words.iter().map(|&w| secded.encode(w)).collect(),
+                    secded,
+                }
+            }
+        };
+        ProtectedStore { mitigation, bits, state }
+    }
+
+    pub fn mitigation(&self) -> Mitigation {
+        self.mitigation
+    }
+
+    pub fn n_words(&self) -> usize {
+        match &self.state {
+            StoreState::Plain { words } => words.len(),
+            StoreState::Tmr { replicas } => replicas[0].len(),
+            StoreState::Scrub { words, .. } => words.len(),
+            StoreState::Ecc { code, .. } => code.len(),
+        }
+    }
+
+    /// SEU-susceptible bits per stored word under this strategy.
+    pub fn susceptible_bits_per_word(&self) -> u32 {
+        match &self.state {
+            StoreState::Plain { .. } | StoreState::Scrub { .. } => self.bits,
+            StoreState::Tmr { .. } => 3 * self.bits,
+            StoreState::Ecc { secded, .. } => secded.total_bits(),
+        }
+    }
+
+    /// Total susceptible bit population (the injection λ driver).
+    pub fn susceptible_bits(&self) -> u64 {
+        self.n_words() as u64 * self.susceptible_bits_per_word() as u64
+    }
+
+    /// Full-store write-back: every Q-update rewrites the weights, which
+    /// re-encodes ECC words, resynchronizes TMR replicas and refreshes the
+    /// scrub golden copy (write-through shadow).
+    pub fn write(&mut self, new_words: &[u64]) {
+        debug_assert_eq!(new_words.len(), self.n_words());
+        let mask = if self.bits == 64 { u64::MAX } else { (1u64 << self.bits) - 1 };
+        match &mut self.state {
+            StoreState::Plain { words } => {
+                for (w, &n) in words.iter_mut().zip(new_words) {
+                    *w = n & mask;
+                }
+            }
+            StoreState::Tmr { replicas } => {
+                for r in replicas.iter_mut() {
+                    for (w, &n) in r.iter_mut().zip(new_words) {
+                        *w = n & mask;
+                    }
+                }
+            }
+            StoreState::Scrub { words, golden, .. } => {
+                for ((w, g), &n) in words.iter_mut().zip(golden.iter_mut()).zip(new_words) {
+                    *w = n & mask;
+                    *g = n & mask;
+                }
+            }
+            StoreState::Ecc { code, secded } => {
+                for (c, &n) in code.iter_mut().zip(new_words) {
+                    *c = secded.encode(n & mask);
+                }
+            }
+        }
+    }
+
+    /// Mitigated read of the whole store. TMR votes (latent flips counted
+    /// as `masked`), ECC corrects single-bit words in place (`corrected`) /
+    /// flags multi-bit words (`uncorrectable`); None/Scrub read raw.
+    pub fn read(&mut self, stats: &mut FaultStats) -> Vec<u64> {
+        match &mut self.state {
+            StoreState::Plain { words } | StoreState::Scrub { words, .. } => words.clone(),
+            StoreState::Tmr { replicas } => {
+                let n = replicas[0].len();
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (a, b, c) = (replicas[0][i], replicas[1][i], replicas[2][i]);
+                    let v = (a & b) | (a & c) | (b & c);
+                    let latent = (a ^ v).count_ones() + (b ^ v).count_ones()
+                        + (c ^ v).count_ones();
+                    stats.masked += latent as u64;
+                    out.push(v);
+                }
+                out
+            }
+            StoreState::Ecc { code, secded } => {
+                let mut out = Vec::with_capacity(code.len());
+                for c in code.iter_mut() {
+                    let (data, outcome) = secded.decode(*c);
+                    match outcome {
+                        EccOutcome::Clean => {}
+                        EccOutcome::Corrected => {
+                            stats.corrected += 1;
+                            *c = secded.encode(data); // scrub-on-read
+                        }
+                        EccOutcome::Uncorrectable => stats.uncorrectable += 1,
+                    }
+                    out.push(data);
+                }
+                out
+            }
+        }
+    }
+
+    /// Advance `steps` environment steps: sample Poisson upsets over the
+    /// susceptible population, then run any due scrub pass. Returns `true`
+    /// when any upset struck. Composed from [`Self::apply_upsets`],
+    /// [`Self::tick_scrub`] and [`Self::scrub_now`] — callers that replay
+    /// the write-through lazily ([`crate::fault::FaultyBackend`]) use the
+    /// primitives directly so a clean step skips all store work.
+    pub fn step(&mut self, model: &mut FaultModel, steps: u64) -> bool {
+        if self.n_words() == 0 {
+            return false;
+        }
+        let flips = model.upsets(self.susceptible_bits(), steps);
+        self.apply_upsets(model, flips);
+        if self.tick_scrub(steps) {
+            self.scrub_now(model);
+        }
+        flips > 0
+    }
+
+    /// Strike `flips` pre-sampled upsets: uniform site draws (word ×
+    /// replica/codeword-bit) from the model's stream, applied in order.
+    pub fn apply_upsets(&mut self, model: &mut FaultModel, flips: u64) {
+        if self.n_words() == 0 {
+            return;
+        }
+        for _ in 0..flips {
+            let word = model.pick(self.n_words());
+            let replica = match self.state {
+                StoreState::Tmr { .. } => model.pick(3),
+                _ => 0,
+            };
+            let bit = match &self.state {
+                StoreState::Ecc { secded, .. } => model.pick(secded.total_bits() as usize),
+                _ => model.pick(self.bits as usize),
+            } as u32;
+            self.force_flip(word, bit, replica);
+            model.stats.injected += 1;
+        }
+    }
+
+    /// Advance the scrub timer by `steps`; returns whether a pass came
+    /// due (timer wraps modulo the interval). Always `false` for
+    /// non-scrub strategies.
+    pub fn tick_scrub(&mut self, steps: u64) -> bool {
+        if let StoreState::Scrub { interval, since, .. } = &mut self.state {
+            *since = since.saturating_add(steps.min(u32::MAX as u64) as u32);
+            if *since >= *interval {
+                *since %= *interval;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Run one scrub pass now: rewrite the working store from the golden
+    /// copy, counting restored bits. No-op for non-scrub strategies.
+    pub fn scrub_now(&mut self, model: &mut FaultModel) {
+        if let StoreState::Scrub { words, golden, .. } = &mut self.state {
+            for (w, g) in words.iter_mut().zip(golden.iter()) {
+                model.stats.scrubbed += (*w ^ *g).count_ones() as u64;
+                *w = *g;
+            }
+        }
+    }
+
+    /// Flip one specific bit — the deterministic primitive `step` uses,
+    /// public so tests can stage exact fault patterns. For TMR, `replica`
+    /// selects the copy (0..3); for ECC, `bit` indexes the full codeword
+    /// (0 = overall parity); otherwise `bit` indexes the data word.
+    pub fn force_flip(&mut self, word: usize, bit: u32, replica: usize) {
+        match &mut self.state {
+            StoreState::Plain { words } | StoreState::Scrub { words, .. } => {
+                words[word] ^= 1u64 << bit;
+            }
+            StoreState::Tmr { replicas } => {
+                replicas[replica][word] ^= 1u64 << bit;
+            }
+            StoreState::Ecc { code, .. } => {
+                code[word] ^= 1u128 << bit;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::util::Rng;
+
+    fn specs_in_use() -> [FixedSpec; 6] {
+        // default Q(18,12) plus the X3 word-length ablation sweep
+        [
+            FixedSpec::new(8, 4),
+            FixedSpec::new(12, 8),
+            FixedSpec::new(16, 8),
+            FixedSpec::new(18, 12),
+            FixedSpec::new(24, 16),
+            FixedSpec::new(32, 24),
+        ]
+    }
+
+    #[test]
+    fn secded_roundtrip_clean() {
+        for spec in specs_in_use() {
+            let s = Secded::new(spec.word);
+            let mut rng = Rng::seeded(spec.word as u64);
+            for _ in 0..100 {
+                let data = rng.next_u64() & ((1u64 << spec.word) - 1);
+                let (back, outcome) = s.decode(s.encode(data));
+                assert_eq!(back, data);
+                assert_eq!(outcome, EccOutcome::Clean);
+            }
+        }
+    }
+
+    #[test]
+    fn secded_corrects_every_single_bit_flip() {
+        for spec in specs_in_use() {
+            let s = Secded::new(spec.word);
+            let mut rng = Rng::seeded(100 + spec.word as u64);
+            for _ in 0..20 {
+                let data = rng.next_u64() & ((1u64 << spec.word) - 1);
+                let code = s.encode(data);
+                for bit in 0..s.total_bits() {
+                    let (back, outcome) = s.decode(code ^ (1u128 << bit));
+                    assert_eq!(back, data, "Q{} bit {bit}", spec.word);
+                    assert_eq!(outcome, EccOutcome::Corrected, "Q{} bit {bit}", spec.word);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn secded_detects_double_bit_flips() {
+        let s = Secded::new(18);
+        let data = 0x2A5_5Au64 & ((1 << 18) - 1);
+        let code = s.encode(data);
+        let mut rng = Rng::seeded(5);
+        for _ in 0..200 {
+            let b1 = rng.below(s.total_bits() as usize) as u32;
+            let mut b2 = rng.below(s.total_bits() as usize) as u32;
+            while b2 == b1 {
+                b2 = rng.below(s.total_bits() as usize) as u32;
+            }
+            let (_, outcome) = s.decode(code ^ (1u128 << b1) ^ (1u128 << b2));
+            assert_eq!(outcome, EccOutcome::Uncorrectable, "bits {b1},{b2}");
+        }
+    }
+
+    #[test]
+    fn tmr_store_masks_single_flips_everywhere() {
+        for spec in specs_in_use() {
+            let mut rng = Rng::seeded(spec.word as u64);
+            let words: Vec<u64> =
+                (0..16).map(|_| rng.next_u64() & ((1u64 << spec.word) - 1)).collect();
+            let mut store = ProtectedStore::new(Mitigation::Tmr, spec.word, &words);
+            let mut stats = FaultStats::default();
+            // one flip per word, random replica/bit: all must vote away
+            for w in 0..words.len() {
+                let replica = rng.below(3);
+                let bit = rng.below(spec.word as usize) as u32;
+                store.force_flip(w, bit, replica);
+            }
+            assert_eq!(store.read(&mut stats), words, "Q({},{})", spec.word, spec.frac);
+            assert_eq!(stats.masked, words.len() as u64);
+        }
+    }
+
+    #[test]
+    fn ecc_store_corrects_single_flips_everywhere() {
+        for spec in specs_in_use() {
+            let mut rng = Rng::seeded(1000 + spec.word as u64);
+            let words: Vec<u64> =
+                (0..16).map(|_| rng.next_u64() & ((1u64 << spec.word) - 1)).collect();
+            let mut store = ProtectedStore::new(Mitigation::Ecc, spec.word, &words);
+            let mut stats = FaultStats::default();
+            let total = Secded::new(spec.word).total_bits();
+            for w in 0..words.len() {
+                store.force_flip(w, rng.below(total as usize) as u32, 0);
+            }
+            assert_eq!(store.read(&mut stats), words, "Q({},{})", spec.word, spec.frac);
+            assert_eq!(stats.corrected, words.len() as u64);
+            // corrected in place: a second read is clean
+            let mut stats2 = FaultStats::default();
+            assert_eq!(store.read(&mut stats2), words);
+            assert_eq!(stats2.corrected, 0);
+        }
+    }
+
+    #[test]
+    fn ecc_double_flip_is_flagged_not_silently_wrong() {
+        let spec = FixedSpec::default();
+        let words = vec![0x155AAu64 & ((1 << 18) - 1); 1];
+        let mut store = ProtectedStore::new(Mitigation::Ecc, spec.word, &words);
+        store.force_flip(0, 3, 0);
+        store.force_flip(0, 7, 0);
+        let mut stats = FaultStats::default();
+        store.read(&mut stats);
+        assert_eq!(stats.uncorrectable, 1);
+        assert_eq!(stats.corrected, 0);
+    }
+
+    #[test]
+    fn scrub_restores_at_interval_boundaries() {
+        let spec = FixedSpec::default();
+        let words = vec![0u64, 1, 2, 3];
+        let mut store =
+            ProtectedStore::new(Mitigation::Scrub { interval: 4 }, spec.word, &words);
+        let mut model = FaultModel::new(1, 0.0); // no random upsets
+        store.force_flip(1, 0, 0);
+        store.force_flip(2, 5, 0);
+        let mut stats = FaultStats::default();
+        store.step(&mut model, 3); // not due yet
+        assert_ne!(store.read(&mut stats), words);
+        store.step(&mut model, 1); // pass due
+        assert_eq!(store.read(&mut stats), words);
+        assert_eq!(model.stats.scrubbed, 2);
+    }
+
+    #[test]
+    fn none_store_keeps_corruption() {
+        let spec = FixedSpec::default();
+        let words = vec![0u64; 8];
+        let mut store = ProtectedStore::new(Mitigation::None, spec.word, &words);
+        store.force_flip(4, 9, 0);
+        let mut stats = FaultStats::default();
+        let read = store.read(&mut stats);
+        assert_eq!(read[4], 1u64 << 9);
+        assert_eq!(stats, FaultStats::default());
+    }
+
+    #[test]
+    fn write_resynchronizes_all_representations() {
+        let spec = FixedSpec::default();
+        let words = vec![7u64; 4];
+        for m in Mitigation::all() {
+            let mut store = ProtectedStore::new(m, spec.word, &words);
+            store.force_flip(0, 2, 0);
+            let fresh = vec![9u64; 4];
+            store.write(&fresh);
+            let mut stats = FaultStats::default();
+            assert_eq!(store.read(&mut stats), fresh, "{}", m.label());
+            // post-write reads are clean: nothing masked or corrected
+            assert_eq!(stats, FaultStats::default(), "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn susceptible_population_reflects_strategy() {
+        let spec = FixedSpec::default();
+        let words = vec![0u64; 10];
+        let plain = ProtectedStore::new(Mitigation::None, spec.word, &words);
+        let tmr = ProtectedStore::new(Mitigation::Tmr, spec.word, &words);
+        let ecc = ProtectedStore::new(Mitigation::Ecc, spec.word, &words);
+        assert_eq!(plain.susceptible_bits(), 180);
+        assert_eq!(tmr.susceptible_bits(), 540);
+        assert_eq!(ecc.susceptible_bits(), 10 * Secded::new(18).total_bits() as u64);
+    }
+
+    #[test]
+    fn mitigation_parsing() {
+        assert_eq!("tmr".parse::<Mitigation>().unwrap(), Mitigation::Tmr);
+        assert_eq!(
+            "scrub".parse::<Mitigation>().unwrap(),
+            Mitigation::Scrub { interval: DEFAULT_SCRUB_INTERVAL }
+        );
+        assert_eq!(
+            "scrub:9".parse::<Mitigation>().unwrap(),
+            Mitigation::Scrub { interval: 9 }
+        );
+        assert!("scrub:0".parse::<Mitigation>().is_err());
+        assert!("rhbd".parse::<Mitigation>().is_err());
+        for m in Mitigation::all() {
+            assert_eq!(m.label().parse::<Mitigation>().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn tmr_overheads_exceed_2x_everywhere() {
+        let coeffs = PowerCoeffs::default();
+        for cfg in NetConfig::all() {
+            for prec in [Precision::Fixed, Precision::Float] {
+                let a = Mitigation::Tmr.area_overhead_factor(&cfg, prec);
+                let p = Mitigation::Tmr.power_overhead_factor(&cfg, prec, &coeffs);
+                assert!(a > 2.0, "{} {prec:?}: area {a}", cfg.name());
+                assert!(p > 2.0, "{} {prec:?}: power {p}", cfg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cheap_mitigations_stay_cheap() {
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+        let coeffs = PowerCoeffs::default();
+        let t = TimingModel::default();
+        for m in [Mitigation::Scrub { interval: 64 }, Mitigation::Ecc] {
+            assert!(m.area_overhead_factor(&cfg, Precision::Fixed) < 2.0, "{}", m.label());
+            assert!(
+                m.power_overhead_factor(&cfg, Precision::Fixed, &coeffs) < 2.0,
+                "{}",
+                m.label()
+            );
+            assert!(
+                m.cycle_overhead_factor(&cfg, Precision::Fixed, &t) < 1.5,
+                "{}",
+                m.label()
+            );
+        }
+        assert_eq!(
+            Mitigation::None.extra_cycles_per_update(&cfg, Precision::Fixed, &t),
+            0
+        );
+    }
+}

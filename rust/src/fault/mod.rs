@@ -1,0 +1,57 @@
+//! Radiation effects: single-event-upset (SEU) injection and mitigation.
+//!
+//! The paper's cost case is radiation — MSL flies space-grade parts because
+//! upsets corrupt configuration and datapath state — yet the accelerator
+//! model alone says nothing about what a bit flip *costs in learning*. This
+//! subsystem closes that loop:
+//!
+//! * [`env`] — mission radiation environments ([`RadEnvironment`]: cruise,
+//!   Mars surface, Jupiter flyby) expressed as upsets per bit per kilostep.
+//! * [`model`] — [`FaultModel`]: a seeded, deterministic upset sampler
+//!   (Poisson arrivals over the protected bit population) plus
+//!   [`FaultStats`] accounting and the [`SeuHook`] that strikes the FPGA
+//!   datapath FIFOs ([`crate::fpga::fifo`]) mid-update.
+//! * [`inject`] — bit-level flip primitives for fixed-point words
+//!   ([`crate::fixed::Fixed::flip_bit`]), IEEE f32 words, and the
+//!   [`inject::WordCodec`] that views network weights as raw storage words.
+//! * [`mitigation`] — [`Mitigation`] strategies (`None`, `Tmr`,
+//!   `Scrub { interval }`, `Ecc` SECDED) as a [`mitigation::ProtectedStore`]
+//!   state machine, with area/power/timing overheads charged through the
+//!   [`crate::fpga::area`], [`crate::fpga::power`] and
+//!   [`crate::fpga::timing`] hooks.
+//! * [`backend`] — [`FaultyBackend`]: wraps any [`crate::qlearn::QBackend`]
+//!   so missions train *under injection*; weight storage goes through the
+//!   protected store, transition encodings (replay/input registers) take
+//!   transient upsets.
+//! * [`campaign`] — resilience campaigns: rate × mitigation × backend
+//!   across the fleet scheduler, reported as learning-delta degradation vs
+//!   hardening overhead.
+//!
+//! Everything is seeded: the same seed, rate and mitigation reproduce the
+//! same injected bits, weights and campaign report (see
+//! `tests/fault_determinism.rs`).
+
+pub mod backend;
+pub mod campaign;
+pub mod env;
+pub mod inject;
+pub mod mitigation;
+pub mod model;
+
+pub use backend::FaultyBackend;
+pub use campaign::{run_campaign, CampaignSpec, ResilienceCell, ResilienceReport};
+pub use env::RadEnvironment;
+pub use inject::{flip_f32_bit, WordCodec};
+pub use mitigation::{Mitigation, ProtectedStore, Secded};
+pub use model::{FaultModel, FaultStats, SeuHook};
+
+/// Per-mission injection plan carried by
+/// [`crate::coordinator::MissionConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Upsets per bit per environment step.
+    pub rate: f64,
+    /// Hardening strategy for the weight store (and, for TMR/ECC, the
+    /// datapath registers).
+    pub mitigation: Mitigation,
+}

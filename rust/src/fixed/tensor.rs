@@ -59,6 +59,13 @@ pub fn matvec_bias(
     out
 }
 
+/// Flip one physical bit of one word in a weight store — the fault
+/// subsystem's entry point into fixed-point tensors ([`crate::fault`]).
+pub fn flip_bit_at(xs: &mut [Fixed], word: usize, bit: u32) {
+    debug_assert!(word < xs.len());
+    xs[word] = xs[word].flip_bit(bit);
+}
+
 /// Max over a slice (the error-capture block's comparator chain).
 pub fn max(xs: &[Fixed]) -> Fixed {
     debug_assert!(!xs.is_empty());

@@ -95,6 +95,24 @@ impl Fixed {
     pub fn neg(&self) -> Fixed {
         Fixed::from_raw(-self.raw, self.spec)
     }
+
+    /// Single-event upset: flip one physical bit of the stored word
+    /// (two's complement, bit 0 = LSB, bit word−1 = sign). Every word-bit
+    /// pattern is representable, so no saturation is involved — the result
+    /// is exactly the register content after the upset.
+    #[inline]
+    pub fn flip_bit(&self, bit: u32) -> Fixed {
+        debug_assert!(bit < self.spec.word);
+        let mask = (1u64 << self.spec.word) - 1;
+        let flipped = ((self.raw as u64) & mask) ^ (1u64 << bit);
+        let sign = 1u64 << (self.spec.word - 1);
+        let raw = if flipped & sign != 0 {
+            (flipped | !mask) as i64
+        } else {
+            flipped as i64
+        };
+        Fixed { raw, spec: self.spec }
+    }
 }
 
 /// Round a 2·frac-fraction-bit integer down to frac fraction bits with
@@ -250,6 +268,28 @@ mod tests {
         assert_eq!(min.add(min).raw(), Q.qmin());
         assert_eq!(min.neg().raw(), Q.qmax()); // −qmin saturates
         assert_eq!(max.mul(max).raw(), Q.qmax()); // 32*32 >> range
+    }
+
+    #[test]
+    fn flip_bit_is_involutive_and_in_range() {
+        for (w, f) in [(8u32, 4u32), (16, 8), (18, 12), (24, 16), (32, 24)] {
+            let spec = FixedSpec::new(w, f);
+            for x in [-3.25f64, -0.5, 0.0, 0.125, 2.75] {
+                let v = Fixed::from_f64(x, spec);
+                for bit in 0..w {
+                    let u = v.flip_bit(bit);
+                    assert_ne!(u, v, "Q({w},{f}) bit {bit}");
+                    assert_eq!(u.flip_bit(bit), v, "Q({w},{f}) bit {bit}");
+                    assert!(u.raw() >= spec.qmin() && u.raw() <= spec.qmax());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flip_sign_bit_of_zero_is_qmin() {
+        let v = Fixed::zero(Q).flip_bit(Q.word - 1);
+        assert_eq!(v.raw(), Q.qmin());
     }
 
     #[test]

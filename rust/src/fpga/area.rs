@@ -98,7 +98,26 @@ impl Utilization {
 
 /// Compute utilization and fail if the design does not fit.
 pub fn check_fit(cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> Result<Utilization> {
-    let r = accelerator_resources(cfg, prec);
+    check_fit_with(cfg, prec, dev, &Resources::default())
+}
+
+/// Resources of one accelerator instance plus additional hardening
+/// hardware (TMR replicas, SECDED codecs, scrub controllers — supplied by
+/// [`crate::fault::Mitigation::extra_resources`]).
+pub fn mitigated_resources(cfg: &NetConfig, prec: Precision, extra: &Resources) -> Resources {
+    let mut r = accelerator_resources(cfg, prec);
+    r.add(*extra);
+    r
+}
+
+/// Device-fit check for a mitigated design.
+pub fn check_fit_with(
+    cfg: &NetConfig,
+    prec: Precision,
+    dev: &Virtex7,
+    extra: &Resources,
+) -> Result<Utilization> {
+    let r = mitigated_resources(cfg, prec, extra);
     let u = Utilization {
         luts: r.luts as f64 / dev.luts as f64,
         ffs: r.ffs as f64 / dev.ffs as f64,
@@ -131,6 +150,21 @@ mod tests {
                     "{}/{prec:?}: {u:?} — these tiny nets must be far below capacity",
                     cfg.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn mitigated_fit_even_a_triplicated_complex_mlp_fits() {
+        let dev = Virtex7::default();
+        for cfg in NetConfig::all() {
+            for prec in [Precision::Fixed, Precision::Float] {
+                // triple the whole design (TMR-class overhead): still fits
+                let extra = accelerator_resources(&cfg, prec).scaled(2);
+                let u = check_fit_with(&cfg, prec, &dev, &extra).unwrap();
+                let base = check_fit(&cfg, prec, &dev).unwrap();
+                assert!(u.max_fraction() > base.max_fraction());
+                assert!(u.max_fraction() < 0.75, "{}/{prec:?}: {u:?}", cfg.name());
             }
         }
     }

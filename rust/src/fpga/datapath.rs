@@ -19,6 +19,7 @@
 
 use crate::config::{Hyper, NetConfig, Precision};
 use crate::error::{Error, Result};
+use crate::fault::{FaultStats, SeuHook};
 use crate::fixed::{tensor, Acc, Fixed, FixedSpec, Quantizer};
 use crate::nn::activation::LutSpec;
 use crate::nn::params::QNetParams;
@@ -125,6 +126,9 @@ pub struct FpgaAccelerator {
     float_params: Option<QNetParams>,
     rom: FixedRom,
     stats: AccelStats,
+    /// Radiation hook: strikes the Q-value FIFO words of the fixed
+    /// datapath mid-update when attached (see [`crate::fault`]).
+    seu: Option<SeuHook>,
     // scratch (avoids per-update allocation on the hot path)
     scratch_q: Vec<Fixed>,
     scratch_pre: Vec<Fixed>,
@@ -173,6 +177,7 @@ impl FpgaAccelerator {
             float_params,
             rom,
             stats: AccelStats::default(),
+            seu: None,
         }
     }
 
@@ -222,6 +227,18 @@ impl FpgaAccelerator {
     /// Wall-clock the accelerator *would* take on the Virtex-7, in µs.
     pub fn modeled_time_us(&self) -> f64 {
         self.device.cycles_to_us(self.stats.cycles)
+    }
+
+    /// Attach (or clear) the transient-SEU hook. While attached, every
+    /// fixed-mode Q-update exposes the buffered FIFO Q-values to seeded
+    /// bit flips between their write and their read.
+    pub fn set_seu_hook(&mut self, hook: Option<SeuHook>) {
+        self.seu = hook;
+    }
+
+    /// Accounting from the attached SEU hook, if any.
+    pub fn seu_stats(&self) -> Option<FaultStats> {
+        self.seu.as_ref().map(SeuHook::stats)
     }
 
     // ------------------------------------------------------------- forward
@@ -432,6 +449,13 @@ impl FpgaAccelerator {
         self.fixed_sweep(t.sa_next, &mut q_next, None, None)?;
         for &v in &q_next {
             fifo_next.push(v)?;
+        }
+
+        // radiation: buffered Q-values sit in the FIFOs for a full phase —
+        // the attached hook strikes them before error capture reads them
+        if let Some(hook) = self.seu.as_mut() {
+            hook.corrupt_fifo(&mut fifo_cur, q)?;
+            hook.corrupt_fifo(&mut fifo_next, q)?;
         }
 
         // ---- error capture (Fig. 5): drain FIFOs, max scan, Eq. 8 -------
@@ -736,6 +760,37 @@ mod tests {
         // empty batch: no-op
         assert!(acc.qupdate_batch(&[], &[], &[], &[]).unwrap().is_empty());
         assert_eq!(acc.stats().batches, 0);
+    }
+
+    #[test]
+    fn seu_hook_perturbs_fixed_updates_deterministically() {
+        use crate::fault::{Mitigation, SeuHook};
+        let run = |hot: bool| {
+            let (cfg, _, mut acc) = setup(Arch::Mlp, EnvKind::Simple, Precision::Fixed);
+            if hot {
+                // ~0.05 upsets/bit/update over 2×6 buffered 18-bit words
+                acc.set_seu_hook(Some(SeuHook::new(77, 0.05, Mitigation::None)));
+            }
+            let mut rng = Rng::seeded(18);
+            let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+            let mut errs = Vec::new();
+            for _ in 0..50 {
+                let (out, _) = acc
+                    .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                    .unwrap();
+                errs.push(out.q_err);
+            }
+            (errs, acc.seu_stats())
+        };
+        let (clean, no_stats) = run(false);
+        assert!(no_stats.is_none());
+        let (hot_a, stats_a) = run(true);
+        let (hot_b, stats_b) = run(true);
+        // deterministic under a seed, and actually perturbing the datapath
+        assert_eq!(hot_a, hot_b);
+        assert_eq!(stats_a.unwrap(), stats_b.unwrap());
+        assert!(stats_a.unwrap().transient > 0);
+        assert_ne!(clean, hot_a);
     }
 
     #[test]

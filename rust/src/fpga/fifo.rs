@@ -82,6 +82,26 @@ impl<T: Clone> Fifo<T> {
         Ok(v)
     }
 
+    /// Apply `f` to the occupied slot at queue position `idx` (0 = oldest
+    /// entry) — models a single-event upset striking a buffered word
+    /// between its write and its read (see [`crate::fault`]).
+    pub fn corrupt_at<F: FnOnce(&mut T)>(&mut self, idx: usize, f: F) -> Result<()> {
+        if idx >= self.len {
+            return Err(Error::Fpga(format!(
+                "FIFO corrupt index {idx} out of range 0..{}",
+                self.len
+            )));
+        }
+        let pos = (self.head + idx) % self.buf.len();
+        match self.buf[pos].as_mut() {
+            Some(v) => {
+                f(v);
+                Ok(())
+            }
+            None => Err(Error::Fpga("FIFO slot unexpectedly empty".into())),
+        }
+    }
+
     /// Drain everything in order.
     pub fn drain_all(&mut self) -> Result<Vec<T>> {
         let mut out = Vec::with_capacity(self.len);
@@ -126,6 +146,20 @@ mod tests {
             assert_eq!(f.pop().unwrap(), round);
         }
         assert_eq!(f.counts(), (10, 10));
+    }
+
+    #[test]
+    fn corrupt_at_hits_queue_position_and_survives_wraparound() {
+        let mut f = Fifo::new(3);
+        // advance head so the ring wraps
+        f.push(0).unwrap();
+        f.pop().unwrap();
+        f.push(10).unwrap();
+        f.push(20).unwrap();
+        f.push(30).unwrap();
+        f.corrupt_at(1, |v| *v += 1).unwrap();
+        assert_eq!(f.drain_all().unwrap(), vec![10, 21, 30]);
+        assert!(f.corrupt_at(0, |_| {}).is_err()); // empty
     }
 
     #[test]

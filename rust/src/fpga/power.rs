@@ -61,10 +61,15 @@ impl Default for PowerCoeffs {
     }
 }
 
-/// Power estimate for one configuration, W.
-pub fn power_w(cfg: &NetConfig, prec: Precision, coeffs: &PowerCoeffs) -> f64 {
-    let r = accelerator_resources(cfg, prec);
-    let mut p = coeffs.static_w + coeffs.clock_base_w;
+/// Dynamic (resource-toggling) power of an arbitrary resource set, W —
+/// the hook the radiation-mitigation overhead accounting
+/// ([`crate::fault::Mitigation`]) charges additional hardware through.
+pub fn dynamic_power_w(
+    r: &super::units::Resources,
+    prec: Precision,
+    coeffs: &PowerCoeffs,
+) -> f64 {
+    let mut p = 0.0;
     p += r.luts as f64 * coeffs.per_lut;
     p += r.ffs as f64 * coeffs.per_ff;
     p += r.dsps as f64 * coeffs.per_dsp;
@@ -73,9 +78,22 @@ pub fn power_w(cfg: &NetConfig, prec: Precision, coeffs: &PowerCoeffs) -> f64 {
         // FP cores burn disproportionate dynamic power per DSP
         p += r.dsps as f64 * coeffs.fp_core_extra;
     }
-    // streaming the (A, D) tile through input registers + FIFOs
-    p += (cfg.a * cfg.d) as f64 * coeffs.per_stream_elem;
     p
+}
+
+/// Data-movement term: streaming the (A, D) tile through input registers
+/// and FIFOs, W.
+pub fn stream_power_w(cfg: &NetConfig, coeffs: &PowerCoeffs) -> f64 {
+    (cfg.a * cfg.d) as f64 * coeffs.per_stream_elem
+}
+
+/// Power estimate for one configuration, W.
+pub fn power_w(cfg: &NetConfig, prec: Precision, coeffs: &PowerCoeffs) -> f64 {
+    let r = accelerator_resources(cfg, prec);
+    coeffs.static_w
+        + coeffs.clock_base_w
+        + dynamic_power_w(&r, prec, coeffs)
+        + stream_power_w(cfg, coeffs)
 }
 
 /// Energy per Q-update, µJ (power × modeled completion time) — the metric
@@ -179,6 +197,24 @@ mod tests {
             let fp = energy_per_update_uj(&mlp(env), Precision::Float, &c, &t, &dev);
             let fp_b = batched_energy_per_update_uj(&mlp(env), Precision::Float, &c, &t, &dev, 32);
             assert!((fp_b - fp).abs() < 1e-9, "{env:?}: float changed");
+        }
+    }
+
+    /// The refactored decomposition reproduces the calibrated totals.
+    #[test]
+    fn decomposition_sums_to_power_w() {
+        use crate::fpga::area::accelerator_resources;
+        let c = PowerCoeffs::default();
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            for prec in [Precision::Fixed, Precision::Float] {
+                let cfg = mlp(env);
+                let whole = power_w(&cfg, prec, &c);
+                let parts = c.static_w
+                    + c.clock_base_w
+                    + dynamic_power_w(&accelerator_resources(&cfg, prec), prec, &c)
+                    + stream_power_w(&cfg, &c);
+                assert!((whole - parts).abs() < 1e-12);
+            }
         }
     }
 

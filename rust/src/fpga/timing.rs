@@ -241,6 +241,25 @@ impl TimingModel {
         dev.clock_hz * b as f64 / cycles as f64 / 1e3
     }
 
+    /// Protected-storage read phases per Q-update — where a TMR majority
+    /// voter or SECDED decoder inserts one registered stage each (see
+    /// [`crate::fault::Mitigation`]): the two feed-forward sweeps read the
+    /// weight store once per layer stage, and backprop reads it once more
+    /// for the δ/ΔW generators.
+    pub fn protected_read_phases(&self, cfg: &NetConfig) -> u64 {
+        match cfg.arch {
+            Arch::Perceptron => 2 + 1, // two sweeps × one stage + backprop
+            Arch::Mlp => 2 * 2 + 1,    // two sweeps × two stages + backprop
+        }
+    }
+
+    /// Cycles one full scrub burst takes over an `n_words` weight store:
+    /// read the golden copy and rewrite every working word through the
+    /// store port (one FIFO-class read + write per word).
+    pub fn scrub_burst_cycles(&self, n_words: u64) -> u64 {
+        2 * n_words * self.fu.fifo_rw
+    }
+
     /// Completion time in µs for one Q-update (paper Tables 3–6).
     pub fn completion_us(&self, cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> f64 {
         dev.cycles_to_us(self.qupdate(cfg, prec).total())
@@ -414,6 +433,19 @@ mod tests {
         // degenerate inputs
         assert_eq!(t.qupdate_batch_cycles(&c, Precision::Fixed, 0), 0);
         assert_eq!(t.batch_throughput_kq_s(&c, Precision::Fixed, 0, &dev), 0.0);
+    }
+
+    #[test]
+    fn mitigation_hooks_are_small_and_scale_right() {
+        let t = TimingModel::default();
+        let per = cfg(Arch::Perceptron, EnvKind::Simple);
+        let mlp = cfg(Arch::Mlp, EnvKind::Complex);
+        assert_eq!(t.protected_read_phases(&per), 3);
+        assert_eq!(t.protected_read_phases(&mlp), 5);
+        // the voter stages are a tiny fraction of an update
+        assert!(t.protected_read_phases(&mlp) * 20 < t.qupdate(&mlp, Precision::Fixed).total());
+        assert_eq!(t.scrub_burst_cycles(89), 178);
+        assert_eq!(t.scrub_burst_cycles(0), 0);
     }
 
     #[test]

@@ -31,9 +31,10 @@ use qfpga::util::Rng;
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|sweep|validate|info> [options]
+USAGE: qfpga <report|train|fleet|sweep|radiation|validate|info> [options]
 
-  report    --table 1..8|batch | --headline | --ablation pipeline|lut|wordlen | --all
+  report    --table 1..8|batch|resilience | --headline
+            | --ablation pipeline|lut|wordlen | --all
             [--no-measure]        skip measuring the host-CPU rows
             [--batch B]           batch size for the B1 batched-datapath table
   train     --arch perceptron|mlp --env simple|complex --precision fixed|float
@@ -43,6 +44,16 @@ USAGE: qfpga <report|train|fleet|sweep|validate|info> [options]
   fleet     --rovers N            plus all `train` options (incl. --batch)
   sweep     --updates N           per-update latency, all backends/configs
             [--batch B]           also measure the batched update_batch path
+  radiation resilience campaign: train under seeded SEU injection and print
+            learning-delta degradation vs mitigation overhead
+            [--rate R]            upsets per bit per step (overrides --rad-env)
+            [--rad-env E]         cruise|mars-surface|jupiter-flyby (default
+                                  mars-surface; rates are per bit per kilostep)
+            [--mitigation M]      none|tmr|scrub[:N]|ecc|all   (default all)
+            [--backend B]         cpu|fpga-sim|all              (default all)
+            [--rovers N]          fleet width per campaign cell (default 2)
+            [--json FILE]         also write the machine-readable report
+            plus --arch/--env/--precision/--episodes/--max-steps/--seed
   validate  --updates N           cross-backend + batch/stepwise equivalence
   info                            artifacts, device, cycle model summary
 ";
@@ -64,6 +75,7 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("radiation") => cmd_radiation(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -128,6 +140,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "8" => println!("{}", report::table_power(EnvKind::Complex)),
             "energy" => println!("{}", report::energy_table()),
             "batch" => println!("{}", report::table_batch(args.get_parse("batch", 16usize)?)),
+            "resilience" => println!("{}", report::resilience_overhead()),
             other => return Err(qfpga::error::Error::Config(format!("no table `{other}`"))),
         }
         return Ok(());
@@ -157,6 +170,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     println!("{}", report::table_power(EnvKind::Complex));
     println!("{}", report::energy_table());
     println!("{}", report::table_batch(args.get_parse("batch", 16usize)?));
+    println!("{}", report::resilience_overhead());
     println!("{}", report::headline());
     println!("{}", report::ablation_pipelining());
     println!("{}", report::ablation_lut_rom());
@@ -257,6 +271,70 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 }
             }
         }
+    }
+    Ok(())
+}
+
+/// `radiation` — resilience campaign: per backend, a fault-free baseline
+/// fleet plus one fleet per (rate × mitigation) cell, trained under seeded
+/// SEU injection and scored as learning-delta degradation vs the modeled
+/// mitigation overheads.
+fn cmd_radiation(args: &Args) -> Result<()> {
+    use qfpga::coordinator::sweep::resilience;
+    use qfpga::fault::{Mitigation, RadEnvironment};
+
+    let base = MissionConfig {
+        arch: args.get_or("arch", "mlp").parse::<Arch>()?,
+        env: args.get_or("env", "simple").parse::<EnvKind>()?,
+        precision: args.get_or("precision", "fixed").parse::<Precision>()?,
+        episodes: args.get_parse("episodes", 150usize)?,
+        max_steps: args.get_parse("max-steps", 200usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+        batch: args.get_parse("batch", 1usize)?,
+        ..Default::default()
+    };
+
+    let rad_env = args.get_or("rad-env", "mars-surface").parse::<RadEnvironment>()?;
+    let rate = match args.get("rate") {
+        Some(r) => r
+            .parse::<f64>()
+            .map_err(|_| qfpga::error::Error::Config(format!("bad --rate `{r}`")))?,
+        None => rad_env.upsets_per_bit_per_step(),
+    };
+    if !rate.is_finite() || rate < 0.0 || rate > 1.0 {
+        return Err(qfpga::error::Error::Config(format!(
+            "--rate {rate} out of range [0, 1] upsets/bit/step (1.0 already \
+             randomizes every bit every step)"
+        )));
+    }
+
+    let mitigations: Vec<Mitigation> = match args.get_or("mitigation", "all") {
+        "all" => Mitigation::all().to_vec(),
+        m => vec![m.parse::<Mitigation>()?],
+    };
+    let backends: Vec<BackendKind> = match args.get_or("backend", "all") {
+        "all" => vec![BackendKind::Cpu, BackendKind::FpgaSim],
+        b => vec![b.parse::<BackendKind>()?],
+    };
+    let rovers = args.get_parse("rovers", 2usize)?.max(1);
+
+    println!(
+        "radiation campaign: {} × [{} {} {}] @ {rate:.1e} upsets/bit/step ({}), \
+         mitigations [{}], {rovers} rovers/cell",
+        backends.iter().map(|b| b.as_str()).collect::<Vec<_>>().join("+"),
+        base.arch.as_str(),
+        base.env.as_str(),
+        base.precision.as_str(),
+        if args.get("rate").is_some() { "explicit".to_string() } else { rad_env.label() },
+        mitigations.iter().map(Mitigation::label).collect::<Vec<_>>().join(", "),
+    );
+
+    let report = resilience(&base, &backends, &[rate], &mitigations, rovers)?;
+    print!("{}", report.render());
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -312,6 +312,12 @@ impl FpgaSimBackend {
     pub fn accelerator(&self) -> &FpgaAccelerator {
         &self.acc
     }
+
+    /// Mutable accelerator access (attaching the radiation hook, timing
+    /// model swaps).
+    pub fn accelerator_mut(&mut self) -> &mut FpgaAccelerator {
+        &mut self.acc
+    }
 }
 
 impl QBackend for FpgaSimBackend {

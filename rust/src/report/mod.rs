@@ -10,6 +10,7 @@ pub mod tables;
 
 pub use format::{PaperTable, TableRow};
 pub use tables::{
-    ablation_lut_rom, ablation_pipelining, ablation_wordlen, energy_table, headline, table1,
-    table2, table_batch, table_completion, table_power, CompletionInputs,
+    ablation_lut_rom, ablation_pipelining, ablation_wordlen, energy_table, headline,
+    resilience_overhead, table1, table2, table_batch, table_completion, table_power,
+    CompletionInputs,
 };

@@ -229,6 +229,51 @@ pub fn table_batch(b: usize) -> PaperTable {
     )
 }
 
+// --------------------------------------------------------------- resilience
+
+/// R1: modeled SEU-mitigation overheads — what each hardening strategy
+/// costs in datapath area, dynamic power and per-update cycles, relative
+/// to the unmitigated design (the paper never prices radiation hardening;
+/// this closes that gap for the complex fixed-point MLP). The measured
+/// learning-survival side comes from `qfpga radiation` (the [R2] campaign
+/// table).
+pub fn resilience_overhead() -> PaperTable {
+    use crate::fault::Mitigation;
+    let (t, _dev) = model();
+    let coeffs = PowerCoeffs::default();
+    let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+    let prec = Precision::Fixed;
+    let mut table = PaperTable::new(
+        "R1",
+        "SEU mitigation overhead vs unmitigated datapath (complex MLP, fixed)",
+        "×",
+    );
+    for m in Mitigation::all() {
+        table = table
+            .row(
+                format!("{:<9} area (LUT-eq)", m.label()),
+                m.area_overhead_factor(&net, prec),
+                None,
+            )
+            .row(
+                format!("{:<9} dynamic power", m.label()),
+                m.power_overhead_factor(&net, prec, &coeffs),
+                None,
+            )
+            .row(
+                format!("{:<9} cycles/update", m.label()),
+                m.cycle_overhead_factor(&net, prec, &t),
+                None,
+            );
+    }
+    table.note(
+        "TMR triplicates the datapath (+ per-bit voters); scrub adds a golden-copy \
+         controller and an amortized rewrite burst; ECC stores SECDED codewords with \
+         decode-on-read — regenerate with `qfpga report --table resilience`, measure \
+         learning survival with `qfpga radiation`",
+    )
+}
+
 // ----------------------------------------------------------------- headline
 
 /// H1: the abstract's speedup claims (“up to 43-fold [MLP] / 95-fold
@@ -399,6 +444,23 @@ mod tests {
                     stepwise.label
                 );
             }
+        }
+    }
+
+    #[test]
+    fn resilience_overhead_table_shape() {
+        let t = resilience_overhead();
+        assert_eq!(t.rows.len(), 12); // 4 mitigations × 3 overhead axes
+        // row 0–2: unmitigated baseline is exactly 1×
+        for r in &t.rows[..3] {
+            assert!((r.ours - 1.0).abs() < 1e-12, "{}: {}", r.label, r.ours);
+        }
+        // TMR rows (3–5): area and power both >2× the unmitigated datapath
+        assert!(t.rows[3].ours > 2.0, "TMR area {}", t.rows[3].ours);
+        assert!(t.rows[4].ours > 2.0, "TMR power {}", t.rows[4].ours);
+        // every overhead factor is ≥1 (hardening never comes free-negative)
+        for r in &t.rows {
+            assert!(r.ours >= 1.0, "{}: {}", r.label, r.ours);
         }
     }
 
