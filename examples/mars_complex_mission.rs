@@ -9,11 +9,11 @@
 //! fixed- and floating-point datapaths on *identical* terrain and seeds:
 //! modeled on-device time, energy (Tables 6–8) and the learning outcome.
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::env::{ComplexRoverEnv, Environment};
+use qfpga::experiment::{BackendFactory, BackendSpec};
 use qfpga::fpga::power::{power_w, PowerCoeffs};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::FpgaSimBackend;
 use qfpga::qlearn::{train, NeuralQLearner, Policy};
 use qfpga::util::Rng;
 
@@ -25,7 +25,7 @@ fn run(prec: Precision) -> qfpga::error::Result<()> {
     let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
     let mut rng = Rng::seeded(SEED);
     let params = QNetParams::init(&net, 0.3, &mut rng);
-    let backend = FpgaSimBackend::new(net, prec, params, Hyper::default());
+    let backend = BackendFactory::offline().build(&BackendSpec::fpga_sim(net, prec), params)?;
     let mut learner = NeuralQLearner::new(backend, Policy::default_training());
 
     let mut env = ComplexRoverEnv::new(SEED);
@@ -34,7 +34,7 @@ fn run(prec: Precision) -> qfpga::error::Result<()> {
     let report = train(&mut learner, &mut env, EPISODES, MAX_STEPS, &mut train_rng)
         ?;
 
-    let acc = learner.backend.accelerator();
+    let acc = learner.backend.accelerator().expect("fpga-sim backend");
     let stats = acc.stats();
     let modeled_ms = acc.modeled_time_us() / 1e3;
     let watts = power_w(&net, prec, &PowerCoeffs::default());

@@ -9,11 +9,11 @@
 //! FPGA simulator — all fed the identical transition.
 
 use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::experiment::{BackendFactory, BackendSpec};
 use qfpga::fpga::datapath::Transition;
 use qfpga::fpga::FpgaAccelerator;
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{CpuBackend, QBackend, XlaBackend};
-use qfpga::runtime::Runtime;
+use qfpga::qlearn::backend::{BackendKind, QBackend};
 use qfpga::util::Rng;
 
 fn main() -> qfpga::error::Result<()> {
@@ -36,16 +36,20 @@ fn main() -> qfpga::error::Result<()> {
     let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
     let (action, reward) = (2usize, 0.75f32);
 
-    // 3. XLA backend: the AOT Pallas kernel via PJRT (python-free)
-    let rt = Runtime::from_default_dir()?;
-    println!("runtime: platform={}, {} artifacts", rt.platform(), rt.manifest().artifacts.len());
-    let mut xla = XlaBackend::new(&rt, net, prec, params.clone())?;
+    // 3. XLA backend: the AOT Pallas kernel via PJRT (python-free). The
+    //    factory owns the runtime and is the only way backends get built.
+    let factory = BackendFactory::for_kind(BackendKind::Xla)?;
+    {
+        let rt = factory.runtime().expect("factory loaded the runtime");
+        println!("runtime: platform={}, {} artifacts", rt.platform(), rt.manifest().artifacts.len());
+    }
+    let mut xla = factory.build(&BackendSpec::xla(net, prec), params.clone())?;
     let q = xla.q_values(&sa_cur)?;
     println!("xla  q-values: {q:.3?}");
     let e_xla = xla.update(&sa_cur, &sa_next, action, reward)?;
 
     // 4. CPU baseline: identical math in pure rust
-    let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+    let mut cpu = factory.build(&BackendSpec::cpu(net, prec), params.clone())?;
     let e_cpu = cpu.update(&sa_cur, &sa_next, action, reward)?;
 
     // 5. FPGA simulator: bit-accurate datapath + cycle accounting

@@ -10,13 +10,13 @@
 //! The run is recorded in EXPERIMENTS.md §End-to-end. A tabular baseline
 //! and the CPU backend train on the same terrain for comparison.
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::telemetry::{report_to_json, LearningCurve};
 use qfpga::env::{Environment, SimpleRoverEnv};
+use qfpga::experiment::{BackendFactory, BackendSpec};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{CpuBackend, XlaBackend};
+use qfpga::qlearn::backend::BackendKind;
 use qfpga::qlearn::{train, NeuralQLearner, Policy, TabularQ};
-use qfpga::runtime::Runtime;
 use qfpga::util::Rng;
 
 const EPISODES: usize = 300;
@@ -29,9 +29,8 @@ fn main() -> qfpga::error::Result<()> {
     let params = QNetParams::init(&net, 0.3, &mut rng);
 
     // --- XLA deployment path (the headline run) --------------------------
-    let rt = Runtime::from_default_dir()?;
-    let backend = XlaBackend::new(&rt, net, Precision::Fixed, params.clone())
-        ?;
+    let factory = BackendFactory::for_kind(BackendKind::Xla)?;
+    let backend = factory.build(&BackendSpec::xla(net, Precision::Fixed), params.clone())?;
     let mut learner = NeuralQLearner::new(backend, Policy::default_training());
     let mut env = SimpleRoverEnv::new(SEED);
     println!(
@@ -57,7 +56,7 @@ fn main() -> qfpga::error::Result<()> {
     println!("mean reward: first-30 {first:+.3} -> last-30 {last:+.3} (Δ {:+.3})", last - first);
 
     // --- CPU float backend, same terrain (reference curve) ---------------
-    let cpu = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+    let cpu = factory.build(&BackendSpec::cpu(net, Precision::Float), params)?;
     let mut cpu_learner = NeuralQLearner::new(cpu, Policy::default_training());
     let mut env2 = SimpleRoverEnv::new(SEED);
     let mut rng2 = Rng::seeded(SEED ^ 1);

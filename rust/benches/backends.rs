@@ -17,12 +17,12 @@
 mod common;
 
 use common::{bench, print_header, print_result, BenchResult};
-use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::config::{NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
+use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+use qfpga::qlearn::backend::QBackend;
 use qfpga::qlearn::replay::FlatBatch;
-use qfpga::runtime::Runtime;
 use qfpga::util::{Json, Rng};
 
 const BATCH: usize = 32;
@@ -102,11 +102,18 @@ fn run_batched<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: us
     per_update
 }
 
+/// Fresh seeded parameters + a factory-built backend for one spec.
+fn build(factory: &BackendFactory, spec: &BackendSpec) -> AnyBackend {
+    let mut rng = Rng::seeded(0xF00D);
+    let params = QNetParams::init(&spec.net, 0.3, &mut rng);
+    factory.build(spec, params).expect("backend")
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let iters = if quick { 200 } else { 2_000 };
-    let runtime = Runtime::from_default_dir().ok();
-    if runtime.is_none() {
+    let factory = BackendFactory::auto();
+    if !factory.has_runtime() {
         println!("NOTE: artifacts not built; xla rows skipped (run `make artifacts`)");
     }
     let mut records: Vec<Json> = Vec::new();
@@ -115,21 +122,18 @@ fn main() {
     for net in NetConfig::all() {
         let w = Workload::synthetic(net, 512, 11);
         for prec in [Precision::Fixed, Precision::Float] {
-            let mut rng = Rng::seeded(0xF00D);
-            let params = QNetParams::init(&net, 0.3, &mut rng);
-
-            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut cpu = build(&factory, &BackendSpec::cpu(net, prec));
             let r =
                 run_backend(&format!("cpu       {} {}", net.name(), prec.as_str()), &mut cpu, &w, iters);
             record_result(&mut records, "stepwise", &r);
 
-            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut sim = build(&factory, &BackendSpec::fpga_sim(net, prec));
             let r =
                 run_backend(&format!("fpga-sim  {} {}", net.name(), prec.as_str()), &mut sim, &w, iters);
             record_result(&mut records, "stepwise", &r);
 
-            if let Some(rt) = &runtime {
-                let mut xla = XlaBackend::new(rt, net, prec, params).expect("backend");
+            if factory.has_runtime() {
+                let mut xla = build(&factory, &BackendSpec::xla(net, prec));
                 let r =
                     run_backend(&format!("xla       {} {}", net.name(), prec.as_str()), &mut xla, &w, iters);
                 record_result(&mut records, "stepwise", &r);
@@ -142,10 +146,7 @@ fn main() {
     for net in NetConfig::all() {
         let w = Workload::synthetic(net, 512, 11);
         for prec in [Precision::Fixed, Precision::Float] {
-            let mut rng = Rng::seeded(0xF00D);
-            let params = QNetParams::init(&net, 0.3, &mut rng);
-
-            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut cpu = build(&factory, &BackendSpec::cpu(net, prec));
             let stepwise = run_backend(
                 &format!("cpu  step {} {}", net.name(), prec.as_str()),
                 &mut cpu,
@@ -171,7 +172,7 @@ fn main() {
                 stepwise.mean_us / batched,
             );
 
-            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut sim = build(&factory, &BackendSpec::fpga_sim(net, prec));
             let sim_step = run_backend(
                 &format!("sim  step {} {}", net.name(), prec.as_str()),
                 &mut sim,
@@ -200,12 +201,10 @@ fn main() {
     }
 
     // ---- XLA microbatch: per-update cost via the train_batch artifact ----
-    if let Some(rt) = &runtime {
+    if factory.has_runtime() {
         print_header("xla batched vs stepwise (scan-chained train_batch artifact)");
         for net in NetConfig::all() {
-            let mut rng = Rng::seeded(0xF00D);
-            let params = QNetParams::init(&net, 0.3, &mut rng);
-            let mut xla = XlaBackend::new(rt, net, Precision::Fixed, params).expect("backend");
+            let mut xla = build(&factory, &BackendSpec::xla(net, Precision::Fixed));
             // size the workload from the artifact's native batch so every
             // timed flush hits the scan-chained path (a ragged tail would
             // silently fall back to the stepwise artifact)
@@ -250,7 +249,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("iters", Json::Num(iters as f64)),
         ("batch", Json::Num(BATCH as f64)),
-        ("xla_present", Json::Bool(runtime.is_some())),
+        ("xla_present", Json::Bool(factory.has_runtime())),
         ("records", Json::Arr(records)),
     ]);
     let out = json_out_path();

@@ -9,18 +9,20 @@
 //! numbers are simulation-derived too); CPU rows are measured on this host
 //! with the same workload driver the coordinator uses.
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::measure_backend;
 use qfpga::coordinator::sweep::Workload;
+use qfpga::experiment::{BackendFactory, BackendSpec};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::CpuBackend;
 use qfpga::report::{self, CompletionInputs};
 use qfpga::util::Rng;
 
 fn measured_cpu_us(net: NetConfig, n: usize) -> f64 {
     let mut rng = Rng::seeded(0xBEEF);
     let params = QNetParams::init(&net, 0.3, &mut rng);
-    let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+    let mut backend = BackendFactory::offline()
+        .build(&BackendSpec::cpu(net, Precision::Float), params)
+        .expect("backend");
     let workload = Workload::synthetic(net, n, 3);
     measure_backend(&mut backend, &workload, n / 10)
         .expect("measure")

@@ -1,20 +1,23 @@
 //! Single-rover mission: configuration + runner.
+//!
+//! [`MissionConfig`] is the legacy flat configuration surface; since the
+//! experiment-API redesign it is a thin veneer over
+//! [`crate::experiment::BackendSpec`] + [`crate::experiment::Experiment`]
+//! (see MIGRATION.md). [`run_mission`] delegates to the builder; the shared
+//! drive loop lives in [`drive_mission`] and builds its backend exclusively
+//! through the [`crate::experiment::BackendFactory`].
 
 use crate::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
 use crate::env::make_env;
 use crate::error::Result;
-use crate::fault::{FaultModel, FaultPlan, FaultStats, FaultyBackend, SeuHook};
+use crate::experiment::{BackendFactory, BackendSpec};
+use crate::fault::{FaultPlan, FaultStats};
+use crate::fixed::FixedSpec;
 use crate::nn::params::QNetParams;
-use crate::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, XlaBackend};
+use crate::qlearn::backend::BackendKind;
 use crate::qlearn::trainer::{train, TrainReport};
 use crate::qlearn::{NeuralQLearner, Policy};
-use crate::runtime::Runtime;
 use crate::util::Rng;
-
-/// Seed diversifier for the persistent-store SEU stream.
-const FAULT_STORE_SALT: u64 = 0xFA17_5EED_0000_0001;
-/// Seed diversifier for the datapath-FIFO SEU stream.
-const FAULT_FIFO_SALT: u64 = 0xFA17_5EED_0000_0002;
 
 /// Everything needed to run one rover mission.
 #[derive(Debug, Clone)]
@@ -36,6 +39,8 @@ pub struct MissionConfig {
     /// Radiation: train under seeded SEU injection with this rate and
     /// mitigation (`None` = fault-free, the pre-existing behaviour).
     pub fault: Option<FaultPlan>,
+    /// Fixed-point word format of the datapath (word-length sweeps).
+    pub fixed_spec: FixedSpec,
 }
 
 impl Default for MissionConfig {
@@ -52,6 +57,7 @@ impl Default for MissionConfig {
             microbatch: false,
             batch: 1,
             fault: None,
+            fixed_spec: FixedSpec::default(),
         }
     }
 }
@@ -59,6 +65,18 @@ impl Default for MissionConfig {
 impl MissionConfig {
     pub fn net(&self) -> NetConfig {
         NetConfig::new(self.arch, self.env)
+    }
+
+    /// The backend-construction spec this mission implies.
+    pub fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            kind: self.backend,
+            net: self.net(),
+            precision: self.precision,
+            hyper: self.hyper,
+            fixed_spec: self.fixed_spec,
+            fault: self.fault,
+        }
     }
 
     pub fn describe(&self) -> String {
@@ -72,14 +90,6 @@ impl MissionConfig {
             self.seed
         )
     }
-}
-
-/// A trained backend handed back by the shared mission drive loop, with
-/// or without the radiation wrapper (the FPGA arm digs out its
-/// accelerator counters either way).
-enum Driven<B: crate::qlearn::QBackend> {
-    Clean(B),
-    Faulted(FaultyBackend<B>),
 }
 
 /// Mission outcome: the training report plus backend-side accounting.
@@ -103,101 +113,40 @@ impl MissionReport {
     }
 }
 
-/// Run one mission. Builds the environment, the requested backend and the
-/// learner, then trains. `runtime` is required for the XLA backend and may
-/// be `None` otherwise.
-pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<MissionReport> {
+/// The shared drive loop: build the environment and the backend (through
+/// the factory — the only construction path), train, then fold in the
+/// backend-side accounting (FPGA cycle model, SEU statistics).
+pub(crate) fn drive_mission(
+    cfg: &MissionConfig,
+    factory: &BackendFactory,
+) -> Result<MissionReport> {
     let net = cfg.net();
     let mut env = make_env(cfg.env, cfg.seed);
     let mut rng = Rng::seeded(cfg.seed ^ 0xA5A5_5A5A);
     let params = QNetParams::init(&net, 0.3, &mut rng);
     let policy = Policy::default_training();
 
+    let backend = factory.build_mission(&cfg.spec(), params, cfg.seed)?;
     // batching policy shared by all backends: `microbatch` selects the
     // backend's preferred flush size, `batch` pins an explicit one
-    fn apply_batch<B: crate::qlearn::QBackend>(
-        learner: NeuralQLearner<B>,
-        cfg: &MissionConfig,
-    ) -> NeuralQLearner<B> {
-        if cfg.microbatch {
-            learner.with_microbatch()
-        } else if cfg.batch > 1 {
-            learner.with_batch(cfg.batch)
-        } else {
-            learner
-        }
+    let mut learner = NeuralQLearner::new(backend, policy);
+    if cfg.microbatch {
+        learner = learner.with_microbatch();
+    } else if cfg.batch > 1 {
+        learner = learner.with_batch(cfg.batch);
     }
 
-    // shared train loop: clean or under injection (one persistent-store
-    // SEU stream per rover, derived from the mission seed so fleets stay
-    // reproducible); returns the trained backend for backend-specific
-    // accounting (the FPGA arm reads its accelerator counters)
-    fn drive<B: crate::qlearn::QBackend>(
-        backend: B,
-        cfg: &MissionConfig,
-        env: &mut dyn crate::env::Environment,
-        rng: &mut Rng,
-        policy: Policy,
-    ) -> Result<(TrainReport, Option<FaultStats>, Driven<B>)> {
-        if let Some(plan) = &cfg.fault {
-            let faulty = FaultyBackend::new(
-                backend,
-                cfg.precision,
-                plan.mitigation,
-                FaultModel::new(cfg.seed ^ FAULT_STORE_SALT, plan.rate),
-            );
-            let mut learner = apply_batch(NeuralQLearner::new(faulty, policy), cfg);
-            let r = train(&mut learner, env, cfg.episodes, cfg.max_steps, rng)?;
-            let stats = learner.backend.stats();
-            Ok((r, Some(stats), Driven::Faulted(learner.backend)))
-        } else {
-            let mut learner = apply_batch(NeuralQLearner::new(backend, policy), cfg);
-            let r = train(&mut learner, env, cfg.episodes, cfg.max_steps, rng)?;
-            Ok((r, None, Driven::Clean(learner.backend)))
-        }
-    }
+    let train_report = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
+    let backend = learner.backend;
 
-    // The backends are distinct concrete types (and !Send), so dispatch
-    // monomorphically and merge afterwards.
-    let (train_report, fpga_modeled_us, fpga_cycles, fault) = match cfg.backend {
-        BackendKind::Cpu => {
-            let backend = CpuBackend::new(net, cfg.precision, params, cfg.hyper);
-            let (r, stats, _) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
-            (r, None, None, stats)
-        }
-        BackendKind::Xla => {
-            let rt = runtime.ok_or_else(|| {
-                crate::error::Error::Config("XLA backend needs a Runtime".into())
-            })?;
-            let backend = XlaBackend::new(rt, net, cfg.precision, params)?;
-            let (r, stats, _) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
-            (r, None, None, stats)
-        }
-        BackendKind::FpgaSim => {
-            let mut backend = FpgaSimBackend::new(net, cfg.precision, params, cfg.hyper);
-            if let Some(plan) = &cfg.fault {
-                // expose the FIFO/datapath words of the fixed datapath to
-                // the same arrival stream under every mitigation (hardened
-                // strategies count the strikes as masked/corrected)
-                if cfg.precision == Precision::Fixed {
-                    backend.accelerator_mut().set_seu_hook(Some(SeuHook::new(
-                        cfg.seed ^ FAULT_FIFO_SALT,
-                        plan.rate,
-                        plan.mitigation,
-                    )));
-                }
+    let mut fault = backend.fault_stats();
+    let (fpga_modeled_us, fpga_cycles) = match backend.accelerator() {
+        Some(acc) => {
+            // the datapath SEU hook's strikes count toward the mission's
+            // fault accounting
+            if let (Some(s), Some(hook_stats)) = (fault.as_mut(), acc.seu_stats()) {
+                s.add(&hook_stats);
             }
-            let (r, stats, driven) = drive(backend, cfg, env.as_mut(), &mut rng, policy)?;
-            let acc = match &driven {
-                Driven::Clean(b) => b.accelerator(),
-                Driven::Faulted(fb) => fb.inner().accelerator(),
-            };
-            let stats = stats.map(|mut s| {
-                if let Some(hook_stats) = acc.seu_stats() {
-                    s.add(&hook_stats);
-                }
-                s
-            });
             // charge the mitigation's voter/decode/scrub stages into the
             // modeled device time (TimingModel hooks; zero when fault-free
             // or unmitigated)
@@ -208,8 +157,9 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
                     .extra_cycles_per_update(&net, cfg.precision, acc.timing())
                     * acc.stats().updates;
             }
-            (r, Some(acc.device().cycles_to_us(cycles)), Some(cycles), stats)
+            (Some(acc.device().cycles_to_us(cycles)), Some(cycles))
         }
+        None => (None, None),
     };
 
     Ok(MissionReport {
@@ -219,6 +169,16 @@ pub fn run_mission(cfg: &MissionConfig, runtime: Option<&Runtime>) -> Result<Mis
         fpga_cycles,
         fault,
     })
+}
+
+/// Run one mission. Thin wrapper over [`crate::experiment::Experiment`];
+/// the XLA backend loads its runtime from the default artifact directory.
+pub fn run_mission(cfg: &MissionConfig) -> Result<MissionReport> {
+    let mut report = crate::experiment::Experiment::from_mission(cfg).run()?;
+    report
+        .rovers
+        .pop()
+        .ok_or_else(|| crate::error::Error::Config("experiment produced no report".into()))
 }
 
 #[cfg(test)]
@@ -234,7 +194,7 @@ mod tests {
             precision: Precision::Float,
             ..Default::default()
         };
-        let r = run_mission(&cfg, None).unwrap();
+        let r = run_mission(&cfg).unwrap();
         assert_eq!(r.train.episodes.len(), 30);
         assert!(r.fpga_cycles.is_none());
     }
@@ -248,7 +208,7 @@ mod tests {
             precision: Precision::Fixed,
             ..Default::default()
         };
-        let r = run_mission(&cfg, None).unwrap();
+        let r = run_mission(&cfg).unwrap();
         let cycles = r.fpga_cycles.unwrap();
         assert!(cycles > 0);
         assert!(r.fpga_modeled_us.unwrap() > 0.0);
@@ -266,7 +226,7 @@ mod tests {
                 batch: 8,
                 ..Default::default()
             };
-            let r = run_mission(&cfg, None).unwrap();
+            let r = run_mission(&cfg).unwrap();
             // episode-end flushes guarantee updates == steps
             assert_eq!(
                 r.train.total_updates as usize, r.train.total_steps,
@@ -284,8 +244,8 @@ mod tests {
             ..Default::default()
         };
         let batched = MissionConfig { batch: 8, ..stepwise.clone() };
-        let a = run_mission(&stepwise, None).unwrap();
-        let b = run_mission(&batched, None).unwrap();
+        let a = run_mission(&stepwise).unwrap();
+        let b = run_mission(&batched).unwrap();
         // identical action-selection forward counts are not guaranteed
         // (policies see differently-timed weights), but the batched
         // datapath must model strictly fewer cycles *per update*
@@ -305,12 +265,12 @@ mod tests {
                 fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
                 ..Default::default()
             };
-            let r = run_mission(&cfg, None).unwrap();
+            let r = run_mission(&cfg).unwrap();
             let stats = r.fault.expect("fault stats present");
             assert!(stats.total_upsets() > 0, "{backend:?}");
             // fault-free runs keep reporting no stats
             let clean = MissionConfig { fault: None, ..cfg };
-            assert!(run_mission(&clean, None).unwrap().fault.is_none());
+            assert!(run_mission(&clean).unwrap().fault.is_none());
         }
     }
 
@@ -331,8 +291,8 @@ mod tests {
             fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::Tmr }),
             ..base
         };
-        let a = run_mission(&none, None).unwrap();
-        let b = run_mission(&tmr, None).unwrap();
+        let a = run_mission(&none).unwrap();
+        let b = run_mission(&tmr).unwrap();
         // at batch=1, steps == updates, so per-update cycles are exactly
         // forward + qupdate (+ the TMR voter stages: 5 on the MLP) on
         // both trajectories — the surcharge is visible as a constant
@@ -356,19 +316,13 @@ mod tests {
                 fault: Some(FaultPlan { rate: 5e-4, mitigation }),
                 ..Default::default()
             };
-            let a = run_mission(&cfg, None).unwrap();
-            let b = run_mission(&cfg, None).unwrap();
+            let a = run_mission(&cfg).unwrap();
+            let b = run_mission(&cfg).unwrap();
             assert_eq!(a.fault, b.fault, "{}", mitigation.label());
             for (x, y) in a.train.episodes.iter().zip(&b.train.episodes) {
                 assert_eq!(x.total_reward, y.total_reward, "{}", mitigation.label());
             }
         }
-    }
-
-    #[test]
-    fn xla_backend_without_runtime_is_config_error() {
-        let cfg = MissionConfig { backend: BackendKind::Xla, ..Default::default() };
-        assert!(run_mission(&cfg, None).is_err());
     }
 
     #[test]
@@ -379,10 +333,25 @@ mod tests {
             backend: BackendKind::Cpu,
             ..Default::default()
         };
-        let a = run_mission(&cfg, None).unwrap();
-        let b = run_mission(&cfg, None).unwrap();
+        let a = run_mission(&cfg).unwrap();
+        let b = run_mission(&cfg).unwrap();
         for (x, y) in a.train.episodes.iter().zip(&b.train.episodes) {
             assert_eq!(x.total_reward, y.total_reward);
         }
+    }
+
+    #[test]
+    fn spec_mirrors_the_mission_config() {
+        let cfg = MissionConfig {
+            backend: BackendKind::FpgaSim,
+            precision: Precision::Float,
+            ..Default::default()
+        };
+        let spec = cfg.spec();
+        assert_eq!(spec.kind, BackendKind::FpgaSim);
+        assert_eq!(spec.net, cfg.net());
+        assert_eq!(spec.precision, Precision::Float);
+        assert_eq!(spec.fault, None);
+        assert_eq!(spec.fixed_spec, FixedSpec::default());
     }
 }

@@ -7,13 +7,20 @@
 //! PJRT clients have thread affinity), telemetry aggregation, and the
 //! workload sweep harness the table generators and benches drive.
 //!
+//! Since the experiment-API redesign the heavy lifting lives in
+//! [`crate::experiment`]: backends are built exclusively through the
+//! [`crate::experiment::BackendFactory`], and [`run_mission`] /
+//! [`run_fleet`] are thin wrappers over
+//! [`crate::experiment::Experiment`].
+//!
 //! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner
 //!   (optionally under SEU injection via [`crate::fault`]).
-//! * [`scheduler`] — multi-rover leader: spawns workers, collects reports.
+//! * [`scheduler`] — the fleet entry point (`run_fleet`).
 //! * [`telemetry`] — learning curves, aggregate statistics, JSON export.
 //! * [`sweep`] — fixed-workload latency measurement across backends (the
-//!   measured side of Tables 3–6), plus the [`sweep::resilience`] campaign
-//!   mode (rate × mitigation × backend across the fleet).
+//!   measured side of Tables 3–6) reported as a [`sweep::SweepReport`],
+//!   plus the [`sweep::resilience`] campaign mode (rate × mitigation ×
+//!   backend across the fleet).
 
 pub mod mission;
 pub mod scheduler;
@@ -22,4 +29,6 @@ pub mod telemetry;
 
 pub use mission::{run_mission, MissionConfig, MissionReport};
 pub use scheduler::{run_fleet, FleetReport};
-pub use sweep::{measure_backend, measure_backend_batched, resilience, WorkloadTiming};
+pub use sweep::{
+    measure_backend, measure_backend_batched, resilience, SweepReport, WorkloadTiming,
+};

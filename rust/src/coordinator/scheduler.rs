@@ -1,103 +1,32 @@
-//! Multi-rover fleet scheduler.
+//! Multi-rover fleet scheduler — thin wrapper over the experiment builder.
 //!
-//! A leader thread spawns one worker per rover. Workers are fully isolated
-//! (own environment instance, own backend, own PJRT runtime when using the
-//! XLA backend — the client is thread-affine) and stream their reports back
-//! over an mpsc channel. This mirrors the paper's stated future work
-//! (“apply this technology on single and multi-robot platforms”).
+//! The leader/worker threading (one isolated worker per rover, each with
+//! its own environment, backend and PJRT runtime — the client is
+//! thread-affine) lives in [`crate::experiment::builder`]; `run_fleet`
+//! keeps the historical entry point and report type alive for callers that
+//! still think in `MissionConfig` terms. This mirrors the paper's stated
+//! future work (“apply this technology on single and multi-robot
+//! platforms”).
 
-use std::sync::mpsc;
-use std::thread;
+use crate::error::Result;
+use crate::experiment::Experiment;
 
-use crate::error::{Error, Result};
-use crate::qlearn::backend::BackendKind;
-use crate::runtime::Runtime;
+use super::mission::MissionConfig;
 
-use super::mission::{run_mission, MissionConfig, MissionReport};
-
-/// Aggregated fleet outcome.
-#[derive(Debug)]
-pub struct FleetReport {
-    pub rovers: Vec<MissionReport>,
-    pub wall_seconds: f64,
-}
-
-impl FleetReport {
-    /// Mean of the per-rover learning deltas.
-    pub fn mean_learning_delta(&self) -> f32 {
-        if self.rovers.is_empty() {
-            return 0.0;
-        }
-        self.rovers.iter().map(|r| r.learning_delta()).sum::<f32>() / self.rovers.len() as f32
-    }
-
-    /// Total environment steps executed across the fleet.
-    pub fn total_steps(&self) -> usize {
-        self.rovers.iter().map(|r| r.train.total_steps).sum()
-    }
-
-    /// Aggregate Q-update throughput (updates/s summed over rovers).
-    pub fn aggregate_updates_per_second(&self) -> f64 {
-        self.rovers
-            .iter()
-            .map(|r| r.train.total_updates as f64)
-            .sum::<f64>()
-            / self.wall_seconds.max(1e-9)
-    }
-}
+/// Aggregated fleet outcome (the experiment report under its fleet name).
+pub type FleetReport = crate::experiment::ExperimentReport;
 
 /// Run `n_rovers` missions in parallel. Each rover gets `base.seed + i` so
 /// terrains and trajectories differ while staying reproducible.
 pub fn run_fleet(base: &MissionConfig, n_rovers: usize) -> Result<FleetReport> {
-    if n_rovers == 0 {
-        return Err(Error::Config("fleet needs at least one rover".into()));
-    }
-    let start = std::time::Instant::now();
-    let (tx, rx) = mpsc::channel::<(usize, Result<MissionReport>)>();
-
-    let mut handles = Vec::with_capacity(n_rovers);
-    for i in 0..n_rovers {
-        let tx = tx.clone();
-        let mut cfg = base.clone();
-        cfg.seed = base.seed.wrapping_add(i as u64);
-        handles.push(
-            thread::Builder::new()
-                .name(format!("rover-{i}"))
-                .spawn(move || {
-                    // XLA backend: build a thread-local runtime (PJRT client
-                    // affinity); other backends need none.
-                    let report = match cfg.backend {
-                        BackendKind::Xla => Runtime::from_default_dir()
-                            .and_then(|rt| run_mission(&cfg, Some(&rt))),
-                        _ => run_mission(&cfg, None),
-                    };
-                    let _ = tx.send((i, report));
-                })
-                .map_err(|e| Error::Config(format!("spawn rover-{i}: {e}")))?,
-        );
-    }
-    drop(tx);
-
-    let mut slots: Vec<Option<MissionReport>> = (0..n_rovers).map(|_| None).collect();
-    for (i, report) in rx {
-        slots[i] = Some(report?);
-    }
-    for h in handles {
-        h.join().map_err(|_| Error::Config("rover thread panicked".into()))?;
-    }
-
-    let rovers: Vec<MissionReport> = slots
-        .into_iter()
-        .map(|s| s.ok_or_else(|| Error::Config("missing rover report".into())))
-        .collect::<Result<_>>()?;
-
-    Ok(FleetReport { rovers, wall_seconds: start.elapsed().as_secs_f64() })
+    Experiment::from_mission(base).rovers(n_rovers).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::Precision;
+    use crate::qlearn::backend::BackendKind;
 
     fn quick_cfg() -> MissionConfig {
         MissionConfig {

@@ -15,7 +15,8 @@ use crate::fault::campaign::{run_campaign, CampaignSpec, ResilienceReport};
 use crate::fault::Mitigation;
 use crate::qlearn::backend::{BackendKind, QBackend};
 use crate::qlearn::replay::FlatBatch;
-use crate::util::Rng;
+use crate::report::Report;
+use crate::util::{Json, Rng};
 
 use super::mission::MissionConfig;
 
@@ -79,6 +80,81 @@ pub struct WorkloadTiming {
     pub median_us: f64,
     /// Throughput, kQ-updates/s — the paper's Tables 1–2 unit.
     pub kq_per_s: f64,
+}
+
+impl WorkloadTiming {
+    /// One fixed-width table line — shared by the CLI's streaming output
+    /// and [`SweepReport::render`] so the two can never diverge.
+    pub fn render_row(&self) -> String {
+        format!(
+            "{:<38} {:>10.2} {:>10.2} {:>12.1}",
+            self.backend_name, self.mean_us, self.median_us, self.kq_per_s
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend_name.clone())),
+            ("updates", Json::Num(self.updates as f64)),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("median_us", Json::Num(self.median_us)),
+            ("kq_per_s", Json::Num(self.kq_per_s)),
+        ])
+    }
+}
+
+/// A full latency sweep: one [`WorkloadTiming`] row per backend ×
+/// configuration × precision (plus the batched twins when measured).
+/// Implements [`Report`] so `qfpga sweep --json` writes the same typed
+/// surface as every other subcommand.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Measured updates per row (the `--updates` knob).
+    pub updates: usize,
+    /// Batched-path flush size (0 or 1 = stepwise rows only).
+    pub batch: usize,
+    pub rows: Vec<WorkloadTiming>,
+}
+
+impl SweepReport {
+    /// The fixed-width column header matching
+    /// [`WorkloadTiming::render_row`].
+    pub fn header() -> String {
+        format!(
+            "{:<38} {:>10} {:>10} {:>12}",
+            "backend", "mean µs", "median µs", "kQ/s"
+        )
+    }
+}
+
+impl Report for SweepReport {
+    fn id(&self) -> &str {
+        "S1"
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&SweepReport::header());
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.render_row());
+            out.push('\n');
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str("S1".into())),
+            ("updates", Json::Num(self.updates as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(WorkloadTiming::to_json).collect()),
+            ),
+        ])
+    }
 }
 
 /// Drive the whole workload through `backend`, timing each update.
@@ -213,9 +289,9 @@ pub fn resilience(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Arch, EnvKind, Hyper, Precision};
+    use crate::config::{Arch, EnvKind, Precision};
+    use crate::experiment::{AnyBackend, BackendFactory, BackendSpec};
     use crate::nn::params::QNetParams;
-    use crate::qlearn::backend::CpuBackend;
 
     #[test]
     fn synthetic_workload_shapes() {
@@ -235,12 +311,18 @@ mod tests {
         assert_eq!(a.actions, b.actions);
     }
 
+    fn cpu_backend(net: NetConfig, seed: u64) -> AnyBackend {
+        let mut rng = Rng::seeded(seed);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        BackendFactory::offline()
+            .build(&BackendSpec::cpu(net, Precision::Float), params)
+            .unwrap()
+    }
+
     #[test]
     fn measure_cpu_backend() {
         let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
-        let mut rng = Rng::seeded(61);
-        let params = QNetParams::init(&net, 0.3, &mut rng);
-        let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let mut backend = cpu_backend(net, 61);
         let w = Workload::synthetic(net, 64, 2);
         let t = measure_backend(&mut backend, &w, 8).unwrap();
         assert_eq!(t.updates, 56);
@@ -284,14 +366,28 @@ mod tests {
     #[test]
     fn measure_batched_cpu_backend() {
         let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
-        let mut rng = Rng::seeded(62);
-        let params = QNetParams::init(&net, 0.3, &mut rng);
-        let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let mut backend = cpu_backend(net, 62);
         let w = Workload::synthetic(net, 128, 2);
         let t = measure_backend_batched(&mut backend, &w, 16, 8).unwrap();
         assert!(t.backend_name.contains("batch=8"));
         assert_eq!(t.updates % 8, 0);
         assert!(t.updates >= 8);
         assert!(t.mean_us > 0.0 && t.kq_per_s > 0.0);
+    }
+
+    #[test]
+    fn sweep_report_renders_and_serializes() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut backend = cpu_backend(net, 63);
+        let w = Workload::synthetic(net, 64, 3);
+        let row = measure_backend(&mut backend, &w, 8).unwrap();
+        let report = SweepReport { updates: 64, batch: 1, rows: vec![row] };
+        assert_eq!(report.id(), "S1");
+        let text = report.render();
+        assert!(text.contains("kQ/s"));
+        assert!(text.contains("cpu/"));
+        let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req_str("id").unwrap(), "S1");
+        assert_eq!(parsed.req_arr("rows").unwrap().len(), 1);
     }
 }

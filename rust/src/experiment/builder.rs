@@ -1,0 +1,443 @@
+//! [`Experiment`]: one entry point for single-rover and fleet training.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use crate::config::NetConfig;
+use crate::coordinator::mission::{drive_mission, MissionConfig, MissionReport};
+use crate::coordinator::telemetry;
+use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
+use crate::fixed::FixedSpec;
+use crate::report::Report;
+use crate::util::Json;
+
+use super::spec::{BackendFactory, BackendSpec};
+
+/// Builder for a training experiment: one spec, the mission knobs, and the
+/// fleet width. `run()` drives everything through the [`BackendFactory`]
+/// and returns a typed [`ExperimentReport`].
+///
+/// ```no_run
+/// use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
+/// use qfpga::experiment::{BackendSpec, Experiment};
+/// use qfpga::qlearn::backend::BackendKind;
+///
+/// let spec = BackendSpec::new(
+///     BackendKind::Cpu,
+///     NetConfig::new(Arch::Mlp, EnvKind::Simple),
+///     Precision::Fixed,
+/// );
+/// let report = Experiment::train(spec).episodes(100).batch(8).rovers(4).run()?;
+/// println!("{}", qfpga::report::Report::render(&report));
+/// # Ok::<(), qfpga::error::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    spec: BackendSpec,
+    episodes: usize,
+    max_steps: usize,
+    seed: u64,
+    microbatch: bool,
+    batch: usize,
+    rovers: usize,
+}
+
+impl Experiment {
+    /// Start a training experiment from a backend spec, with the
+    /// mission-default knobs (200 episodes × ≤200 steps, seed 7, stepwise
+    /// updates, one rover).
+    pub fn train(spec: BackendSpec) -> Experiment {
+        Experiment {
+            spec,
+            episodes: 200,
+            max_steps: 200,
+            seed: 7,
+            microbatch: false,
+            batch: 1,
+            rovers: 1,
+        }
+    }
+
+    /// Build from a legacy [`MissionConfig`] (see MIGRATION.md).
+    pub fn from_mission(cfg: &MissionConfig) -> Experiment {
+        Experiment {
+            spec: cfg.spec(),
+            episodes: cfg.episodes,
+            max_steps: cfg.max_steps,
+            seed: cfg.seed,
+            microbatch: cfg.microbatch,
+            batch: cfg.batch,
+            rovers: 1,
+        }
+    }
+
+    pub fn episodes(mut self, n: usize) -> Experiment {
+        self.episodes = n;
+        self
+    }
+
+    pub fn max_steps(mut self, n: usize) -> Experiment {
+        self.max_steps = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Experiment {
+        self.seed = seed;
+        self
+    }
+
+    /// Flush transitions through `update_batch` every `n` steps
+    /// (1 = stepwise).
+    pub fn batch(mut self, n: usize) -> Experiment {
+        self.batch = n;
+        self
+    }
+
+    /// Flush at the backend's preferred batch size instead of an explicit
+    /// one.
+    pub fn microbatch(mut self, on: bool) -> Experiment {
+        self.microbatch = on;
+        self
+    }
+
+    /// Fleet width (1 = single rover; rover `i` trains with `seed + i`).
+    pub fn rovers(mut self, n: usize) -> Experiment {
+        self.rovers = n;
+        self
+    }
+
+    /// Train under SEU injection per `plan`.
+    pub fn faults(mut self, plan: FaultPlan) -> Experiment {
+        self.spec.fault = Some(plan);
+        self
+    }
+
+    /// Override the fixed-point word format (word-length sweeps).
+    pub fn fixed_spec(mut self, spec: FixedSpec) -> Experiment {
+        self.spec.fixed_spec = spec;
+        self
+    }
+
+    /// The equivalent legacy [`MissionConfig`].
+    pub fn mission_config(&self) -> MissionConfig {
+        MissionConfig {
+            arch: self.spec.net.arch,
+            env: self.spec.net.env,
+            precision: self.spec.precision,
+            backend: self.spec.kind,
+            episodes: self.episodes,
+            max_steps: self.max_steps,
+            seed: self.seed,
+            hyper: self.spec.hyper,
+            microbatch: self.microbatch,
+            batch: self.batch,
+            fault: self.spec.fault,
+            fixed_spec: self.spec.fixed_spec,
+        }
+    }
+
+    /// Run the experiment: one mission per rover (worker threads for
+    /// fleets — each worker builds its own factory, since PJRT clients
+    /// have thread affinity), aggregated into an [`ExperimentReport`].
+    pub fn run(self) -> Result<ExperimentReport> {
+        if self.rovers == 0 {
+            return Err(Error::Config("fleet needs at least one rover".into()));
+        }
+        // the mission drive loop trains against the environment's own
+        // encoding dimensions, so a customized NetConfig cannot be honored
+        // here — reject it loudly instead of silently rebuilding the
+        // canonical net from arch/env
+        let canonical = NetConfig::new(self.spec.net.arch, self.spec.net.env);
+        if self.spec.net != canonical {
+            return Err(Error::Config(format!(
+                "Experiment trains against the {} environment and needs its canonical \
+                 dimensions (D={}, H={}, A={}); custom NetConfigs are only supported \
+                 through BackendFactory::build with synthetic workloads",
+                self.spec.net.env.as_str(),
+                canonical.d,
+                canonical.h,
+                canonical.a
+            )));
+        }
+        let cfg = self.mission_config();
+        let start = Instant::now();
+        let rovers = if self.rovers == 1 {
+            vec![run_single(&cfg)?]
+        } else {
+            run_parallel(&cfg, self.rovers)?
+        };
+        Ok(ExperimentReport {
+            desc: cfg.describe(),
+            rovers,
+            wall_seconds: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One mission in the current thread, through a kind-appropriate factory.
+fn run_single(cfg: &MissionConfig) -> Result<MissionReport> {
+    let factory = BackendFactory::for_kind(cfg.backend)?;
+    drive_mission(cfg, &factory)
+}
+
+/// Leader/worker fleet: one worker thread per rover, each fully isolated
+/// (own environment, own backend, own runtime), reports streamed back over
+/// an mpsc channel.
+fn run_parallel(base: &MissionConfig, n_rovers: usize) -> Result<Vec<MissionReport>> {
+    let (tx, rx) = mpsc::channel::<(usize, Result<MissionReport>)>();
+
+    let mut handles = Vec::with_capacity(n_rovers);
+    for i in 0..n_rovers {
+        let tx = tx.clone();
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(i as u64);
+        handles.push(
+            thread::Builder::new()
+                .name(format!("rover-{i}"))
+                .spawn(move || {
+                    let _ = tx.send((i, run_single(&cfg)));
+                })
+                .map_err(|e| Error::Config(format!("spawn rover-{i}: {e}")))?,
+        );
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<MissionReport>> = (0..n_rovers).map(|_| None).collect();
+    for (i, report) in rx {
+        slots[i] = Some(report?);
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| Error::Config("rover thread panicked".into()))?;
+    }
+
+    slots
+        .into_iter()
+        .map(|s| s.ok_or_else(|| Error::Config("missing rover report".into())))
+        .collect()
+}
+
+// -------------------------------------------------------- ExperimentReport
+
+/// Typed outcome of an [`Experiment`]: one [`MissionReport`] per rover plus
+/// fleet-level aggregates. This is also the coordinator's `FleetReport`.
+#[derive(Debug)]
+pub struct ExperimentReport {
+    /// Human description of the configuration that ran.
+    pub desc: String,
+    pub rovers: Vec<MissionReport>,
+    pub wall_seconds: f64,
+}
+
+impl ExperimentReport {
+    /// Mean of the per-rover learning deltas.
+    pub fn mean_learning_delta(&self) -> f32 {
+        if self.rovers.is_empty() {
+            return 0.0;
+        }
+        self.rovers.iter().map(|r| r.learning_delta()).sum::<f32>() / self.rovers.len() as f32
+    }
+
+    /// Total environment steps executed across the fleet.
+    pub fn total_steps(&self) -> usize {
+        self.rovers.iter().map(|r| r.train.total_steps).sum()
+    }
+
+    /// Aggregate Q-update throughput (updates/s summed over rovers).
+    pub fn aggregate_updates_per_second(&self) -> f64 {
+        self.rovers
+            .iter()
+            .map(|r| r.train.total_updates as f64)
+            .sum::<f64>()
+            / self.wall_seconds.max(1e-9)
+    }
+
+    fn rover_json(r: &MissionReport) -> Json {
+        let (first, last) = r.train.first_last_mean_reward(20);
+        let mut fields = vec![
+            ("config", Json::Str(r.config_desc.clone())),
+            ("first20_mean_reward", Json::Num(first as f64)),
+            ("last20_mean_reward", Json::Num(last as f64)),
+            ("learning_delta", Json::Num(r.learning_delta() as f64)),
+            ("train", telemetry::report_to_json(&r.train)),
+        ];
+        if let Some(us) = r.fpga_modeled_us {
+            fields.push(("fpga_modeled_us", Json::Num(us)));
+        }
+        if let Some(cycles) = r.fpga_cycles {
+            fields.push(("fpga_cycles", Json::Num(cycles as f64)));
+        }
+        if let Some(s) = &r.fault {
+            fields.push((
+                "fault",
+                Json::obj(vec![
+                    ("injected", Json::Num(s.injected as f64)),
+                    ("transient", Json::Num(s.transient as f64)),
+                    ("masked", Json::Num(s.masked as f64)),
+                    ("corrected", Json::Num(s.corrected as f64)),
+                    ("uncorrectable", Json::Num(s.uncorrectable as f64)),
+                    ("scrubbed", Json::Num(s.scrubbed as f64)),
+                    ("total_upsets", Json::Num(s.total_upsets() as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+impl Report for ExperimentReport {
+    fn id(&self) -> &str {
+        "EXP"
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "[EXP] {} × [{}]\n",
+            self.rovers.len(),
+            self.desc
+        ));
+        for (i, r) in self.rovers.iter().enumerate() {
+            let (first, last) = r.train.first_last_mean_reward(20);
+            out.push_str(&format!(
+                "  rover-{i}: steps {:>6}  updates {:>6}  reward {first:.3} -> {last:.3} \
+                 (Δ {:+.3})\n",
+                r.train.total_steps,
+                r.train.total_updates,
+                last - first
+            ));
+        }
+        out.push_str(&format!(
+            "  total: {} steps, {:.0} updates/s aggregate, mean Δreward {:+.3}, wall {:.2}s\n",
+            self.total_steps(),
+            self.aggregate_updates_per_second(),
+            self.mean_learning_delta(),
+            self.wall_seconds
+        ));
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str("EXP".into())),
+            ("experiment", Json::Str(self.desc.clone())),
+            ("rovers", Json::Num(self.rovers.len() as f64)),
+            ("total_steps", Json::Num(self.total_steps() as f64)),
+            (
+                "aggregate_updates_per_second",
+                Json::Num(self.aggregate_updates_per_second()),
+            ),
+            (
+                "mean_learning_delta",
+                Json::Num(self.mean_learning_delta() as f64),
+            ),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            (
+                "reports",
+                Json::Arr(self.rovers.iter().map(Self::rover_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind, NetConfig, Precision};
+    use crate::fault::Mitigation;
+    use crate::qlearn::backend::BackendKind;
+
+    fn quick_spec() -> BackendSpec {
+        BackendSpec::new(
+            BackendKind::Cpu,
+            NetConfig::new(Arch::Mlp, EnvKind::Simple),
+            Precision::Float,
+        )
+    }
+
+    #[test]
+    fn builder_runs_a_single_rover() {
+        let r = Experiment::train(quick_spec())
+            .episodes(6)
+            .max_steps(40)
+            .run()
+            .unwrap();
+        assert_eq!(r.rovers.len(), 1);
+        assert_eq!(r.rovers[0].train.episodes.len(), 6);
+        assert!(r.total_steps() > 0);
+    }
+
+    #[test]
+    fn builder_matches_the_legacy_mission_path() {
+        let cfg = MissionConfig {
+            episodes: 8,
+            max_steps: 40,
+            precision: Precision::Float,
+            ..Default::default()
+        };
+        let a = Experiment::from_mission(&cfg).run().unwrap();
+        let b = crate::coordinator::run_mission(&cfg).unwrap();
+        for (x, y) in a.rovers[0].train.episodes.iter().zip(&b.train.episodes) {
+            assert_eq!(x.total_reward, y.total_reward);
+        }
+    }
+
+    #[test]
+    fn zero_rovers_is_an_error() {
+        assert!(Experiment::train(quick_spec()).rovers(0).run().is_err());
+    }
+
+    #[test]
+    fn customized_net_is_rejected_not_silently_replaced() {
+        let mut spec = quick_spec();
+        spec.net.a = 9; // tables.rs-style customization — not drivable here
+        let err = Experiment::train(spec).episodes(3).run().unwrap_err();
+        assert!(err.to_string().contains("canonical"), "{err}");
+    }
+
+    #[test]
+    fn fleet_rovers_get_distinct_seeds() {
+        let r = Experiment::train(quick_spec())
+            .episodes(5)
+            .max_steps(40)
+            .rovers(2)
+            .run()
+            .unwrap();
+        assert_eq!(r.rovers.len(), 2);
+        let a: f32 = r.rovers[0].train.episodes.iter().map(|e| e.total_reward).sum();
+        let b: f32 = r.rovers[1].train.episodes.iter().map(|e| e.total_reward).sum();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn faults_builder_method_wires_injection() {
+        let r = Experiment::train(BackendSpec::cpu(
+            NetConfig::new(Arch::Mlp, EnvKind::Simple),
+            Precision::Fixed,
+        ))
+        .episodes(5)
+        .max_steps(40)
+        .faults(FaultPlan { rate: 1e-3, mitigation: Mitigation::None })
+        .run()
+        .unwrap();
+        let stats = r.rovers[0].fault.expect("fault stats");
+        assert!(stats.total_upsets() > 0);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let r = Experiment::train(quick_spec())
+            .episodes(4)
+            .max_steps(30)
+            .run()
+            .unwrap();
+        let text = r.render();
+        assert!(text.contains("rover-0"));
+        let j = r.to_json();
+        let parsed = crate::util::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("id").unwrap(), "EXP");
+        assert_eq!(parsed.req_arr("reports").unwrap().len(), 1);
+    }
+}

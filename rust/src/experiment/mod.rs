@@ -1,0 +1,33 @@
+//! Unified experiment API — the single way backends get built and driven.
+//!
+//! The paper's whole argument is a *controlled comparison*: the same
+//! Q-update workload driven through the CPU baseline, the cycle-accurate
+//! FPGA simulator and the compiled-artifact deployment path. This module
+//! makes that comparison a first-class API instead of copy-pasted
+//! construction loops:
+//!
+//! * [`BackendSpec`] — a value describing *what* to build: backend kind,
+//!   network configuration, precision, hyper-parameters, fixed-point format
+//!   and an optional radiation [`crate::fault::FaultPlan`].
+//!   [`BackendSpec::matrix`] enumerates the full backend × configuration ×
+//!   precision grid the sweeps, benches and conformance suites drive.
+//! * [`BackendFactory`] — owns the optional PJRT [`crate::runtime::Runtime`]
+//!   and is the **only** place backends are constructed (the concrete
+//!   constructors are `pub(crate)`; `tests/api_surface.rs` greps the source
+//!   tree to keep in-crate callers honest). It also performs the fault
+//!   wrapping: [`BackendFactory::build_mission`] attaches the SEU hook and
+//!   the [`crate::fault::FaultyBackend`] wrapper exactly as a mission under
+//!   radiation requires.
+//! * [`AnyBackend`] / [`BuiltBackend`] — type-erased backends so mission
+//!   code, benches and tests no longer monomorphize three near-identical
+//!   drive loops.
+//! * [`Experiment`] — the builder that subsumes `MissionConfig` /
+//!   `run_mission` / `run_fleet`: `Experiment::train(spec).episodes(n)
+//!   .batch(b).rovers(r).run()?` returns a typed [`ExperimentReport`]
+//!   implementing [`crate::report::Report`] (`render()` + `to_json()`).
+
+pub mod builder;
+pub mod spec;
+
+pub use builder::{Experiment, ExperimentReport};
+pub use spec::{AnyBackend, BackendFactory, BackendSpec, BuiltBackend};

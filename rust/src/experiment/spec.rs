@@ -1,0 +1,533 @@
+//! [`BackendSpec`] + [`BackendFactory`]: the one true way to build backends.
+
+use crate::config::{Hyper, NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::fault::{FaultModel, FaultPlan, FaultStats, FaultyBackend, SeuHook};
+use crate::fixed::FixedSpec;
+use crate::fpga::FpgaAccelerator;
+use crate::nn::params::QNetParams;
+use crate::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+use crate::qlearn::replay::FlatBatch;
+use crate::runtime::Runtime;
+
+/// Seed diversifier for the persistent-store SEU stream.
+pub(crate) const FAULT_STORE_SALT: u64 = 0xFA17_5EED_0000_0001;
+/// Seed diversifier for the datapath-FIFO SEU stream.
+pub(crate) const FAULT_FIFO_SALT: u64 = 0xFA17_5EED_0000_0002;
+
+/// Everything needed to construct one backend instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub net: NetConfig,
+    pub precision: Precision,
+    pub hyper: Hyper,
+    /// Q(word, frac) format of the fixed-point datapath. Ignored in float
+    /// precision; the XLA backend only supports the default (its artifacts
+    /// are baked at Q(18,12)).
+    pub fixed_spec: FixedSpec,
+    /// Radiation plan; `Some` makes [`BackendFactory::build_mission`] wrap
+    /// the backend for training under SEU injection.
+    pub fault: Option<FaultPlan>,
+}
+
+impl BackendSpec {
+    pub fn new(kind: BackendKind, net: NetConfig, precision: Precision) -> BackendSpec {
+        BackendSpec {
+            kind,
+            net,
+            precision,
+            hyper: Hyper::default(),
+            fixed_spec: FixedSpec::default(),
+            fault: None,
+        }
+    }
+
+    pub fn cpu(net: NetConfig, precision: Precision) -> BackendSpec {
+        BackendSpec::new(BackendKind::Cpu, net, precision)
+    }
+
+    pub fn fpga_sim(net: NetConfig, precision: Precision) -> BackendSpec {
+        BackendSpec::new(BackendKind::FpgaSim, net, precision)
+    }
+
+    pub fn xla(net: NetConfig, precision: Precision) -> BackendSpec {
+        BackendSpec::new(BackendKind::Xla, net, precision)
+    }
+
+    pub fn with_hyper(mut self, hyper: Hyper) -> BackendSpec {
+        self.hyper = hyper;
+        self
+    }
+
+    pub fn with_fixed_spec(mut self, spec: FixedSpec) -> BackendSpec {
+        self.fixed_spec = spec;
+        self
+    }
+
+    pub fn with_fault(mut self, plan: FaultPlan) -> BackendSpec {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Short label for logs/tables: `kind/config/precision`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.kind.as_str(),
+            self.net.name(),
+            self.precision.as_str()
+        )
+    }
+
+    /// The full experiment grid: every paper configuration × both
+    /// precisions × the requested backend kinds, in the canonical sweep
+    /// order (configuration-major, precision, then backend).
+    pub fn matrix(kinds: &[BackendKind]) -> Vec<BackendSpec> {
+        let mut out = Vec::with_capacity(NetConfig::all().len() * 2 * kinds.len());
+        for net in NetConfig::all() {
+            for prec in [Precision::Fixed, Precision::Float] {
+                for &kind in kinds {
+                    out.push(BackendSpec::new(kind, net, prec));
+                }
+            }
+        }
+        out
+    }
+
+    /// The grid restricted to the backends that need no compiled artifacts.
+    pub fn local_matrix() -> Vec<BackendSpec> {
+        Self::matrix(&[BackendKind::Cpu, BackendKind::FpgaSim])
+    }
+}
+
+// ------------------------------------------------------------- AnyBackend
+
+/// A type-erased backend, so drive loops need not monomorphize per kind.
+pub enum AnyBackend {
+    Cpu(CpuBackend),
+    FpgaSim(FpgaSimBackend),
+    Xla(XlaBackend),
+}
+
+impl AnyBackend {
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            AnyBackend::Cpu(_) => BackendKind::Cpu,
+            AnyBackend::FpgaSim(_) => BackendKind::FpgaSim,
+            AnyBackend::Xla(_) => BackendKind::Xla,
+        }
+    }
+
+    /// Hyper-parameters in effect (the XLA backend's are baked into its
+    /// artifacts and may differ from the spec's).
+    pub fn hyper(&self) -> Hyper {
+        match self {
+            AnyBackend::Cpu(b) => b.hyper(),
+            AnyBackend::FpgaSim(b) => b.hyper(),
+            AnyBackend::Xla(b) => b.hyper(),
+        }
+    }
+
+    /// The cycle-accurate accelerator (FPGA sim only).
+    pub fn accelerator(&self) -> Option<&FpgaAccelerator> {
+        match self {
+            AnyBackend::FpgaSim(b) => Some(b.accelerator()),
+            _ => None,
+        }
+    }
+
+    /// Mutable accelerator access (FPGA sim only).
+    pub fn accelerator_mut(&mut self) -> Option<&mut FpgaAccelerator> {
+        match self {
+            AnyBackend::FpgaSim(b) => Some(b.accelerator_mut()),
+            _ => None,
+        }
+    }
+}
+
+impl QBackend for AnyBackend {
+    fn net(&self) -> &NetConfig {
+        match self {
+            AnyBackend::Cpu(b) => b.net(),
+            AnyBackend::FpgaSim(b) => b.net(),
+            AnyBackend::Xla(b) => b.net(),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            AnyBackend::Cpu(b) => b.name(),
+            AnyBackend::FpgaSim(b) => b.name(),
+            AnyBackend::Xla(b) => b.name(),
+        }
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            AnyBackend::Cpu(b) => b.q_values(sa),
+            AnyBackend::FpgaSim(b) => b.q_values(sa),
+            AnyBackend::Xla(b) => b.q_values(sa),
+        }
+    }
+
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32> {
+        match self {
+            AnyBackend::Cpu(b) => b.update(sa_cur, sa_next, action, reward),
+            AnyBackend::FpgaSim(b) => b.update(sa_cur, sa_next, action, reward),
+            AnyBackend::Xla(b) => b.update(sa_cur, sa_next, action, reward),
+        }
+    }
+
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        match self {
+            AnyBackend::Cpu(b) => b.update_batch(batch),
+            AnyBackend::FpgaSim(b) => b.update_batch(batch),
+            AnyBackend::Xla(b) => b.update_batch(batch),
+        }
+    }
+
+    fn preferred_batch(&self) -> usize {
+        match self {
+            AnyBackend::Cpu(b) => b.preferred_batch(),
+            AnyBackend::FpgaSim(b) => b.preferred_batch(),
+            AnyBackend::Xla(b) => b.preferred_batch(),
+        }
+    }
+
+    fn params(&self) -> QNetParams {
+        match self {
+            AnyBackend::Cpu(b) => b.params(),
+            AnyBackend::FpgaSim(b) => b.params(),
+            AnyBackend::Xla(b) => b.params(),
+        }
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        match self {
+            AnyBackend::Cpu(b) => b.load_params(params),
+            AnyBackend::FpgaSim(b) => b.load_params(params),
+            AnyBackend::Xla(b) => b.load_params(params),
+        }
+    }
+}
+
+// ------------------------------------------------------------ BuiltBackend
+
+/// A mission-ready backend: clean, or wrapped for SEU injection per the
+/// spec's [`FaultPlan`].
+pub enum BuiltBackend {
+    Clean(AnyBackend),
+    Faulted(FaultyBackend<AnyBackend>),
+}
+
+impl BuiltBackend {
+    /// Injection accounting so far (`None` for clean backends).
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        match self {
+            BuiltBackend::Clean(_) => None,
+            BuiltBackend::Faulted(fb) => Some(fb.stats()),
+        }
+    }
+
+    /// The cycle-accurate accelerator, through the fault wrapper if any.
+    pub fn accelerator(&self) -> Option<&FpgaAccelerator> {
+        match self {
+            BuiltBackend::Clean(b) => b.accelerator(),
+            BuiltBackend::Faulted(fb) => fb.inner().accelerator(),
+        }
+    }
+}
+
+impl QBackend for BuiltBackend {
+    fn net(&self) -> &NetConfig {
+        match self {
+            BuiltBackend::Clean(b) => b.net(),
+            BuiltBackend::Faulted(b) => b.net(),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            BuiltBackend::Clean(b) => b.name(),
+            BuiltBackend::Faulted(b) => b.name(),
+        }
+    }
+
+    fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            BuiltBackend::Clean(b) => b.q_values(sa),
+            BuiltBackend::Faulted(b) => b.q_values(sa),
+        }
+    }
+
+    fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
+        -> Result<f32> {
+        match self {
+            BuiltBackend::Clean(b) => b.update(sa_cur, sa_next, action, reward),
+            BuiltBackend::Faulted(b) => b.update(sa_cur, sa_next, action, reward),
+        }
+    }
+
+    fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
+        match self {
+            BuiltBackend::Clean(b) => b.update_batch(batch),
+            BuiltBackend::Faulted(b) => b.update_batch(batch),
+        }
+    }
+
+    fn preferred_batch(&self) -> usize {
+        match self {
+            BuiltBackend::Clean(b) => b.preferred_batch(),
+            BuiltBackend::Faulted(b) => b.preferred_batch(),
+        }
+    }
+
+    fn params(&self) -> QNetParams {
+        match self {
+            BuiltBackend::Clean(b) => b.params(),
+            BuiltBackend::Faulted(b) => b.params(),
+        }
+    }
+
+    fn load_params(&mut self, params: &QNetParams) {
+        match self {
+            BuiltBackend::Clean(b) => b.load_params(params),
+            BuiltBackend::Faulted(b) => b.load_params(params),
+        }
+    }
+}
+
+// ---------------------------------------------------------- BackendFactory
+
+/// The only constructor of backends. Owns the optional PJRT runtime (the
+/// XLA deployment path) and performs fault wrapping for missions under
+/// radiation.
+pub struct BackendFactory {
+    runtime: Option<Runtime>,
+}
+
+impl BackendFactory {
+    /// A factory without compiled artifacts: CPU and FPGA-sim only.
+    pub fn offline() -> BackendFactory {
+        BackendFactory { runtime: None }
+    }
+
+    /// A factory around an already-loaded runtime.
+    pub fn with_runtime(rt: Runtime) -> BackendFactory {
+        BackendFactory { runtime: Some(rt) }
+    }
+
+    /// Try the default artifact directory; fall back to offline when the
+    /// artifacts have not been built (XLA builds will then error).
+    pub fn auto() -> BackendFactory {
+        BackendFactory { runtime: Runtime::from_default_dir().ok() }
+    }
+
+    /// Factory for one backend kind: loads the runtime eagerly (and
+    /// propagates its error) only when the kind needs it.
+    pub fn for_kind(kind: BackendKind) -> Result<BackendFactory> {
+        match kind {
+            BackendKind::Xla => Ok(BackendFactory::with_runtime(Runtime::from_default_dir()?)),
+            _ => Ok(BackendFactory::offline()),
+        }
+    }
+
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.runtime.as_ref()
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Build a clean backend from a spec (the `fault` field is ignored
+    /// here; see [`BackendFactory::build_mission`]).
+    pub fn build(&self, spec: &BackendSpec, params: QNetParams) -> Result<AnyBackend> {
+        spec.fixed_spec.validate()?;
+        match spec.kind {
+            BackendKind::Cpu => Ok(AnyBackend::Cpu(CpuBackend::with_spec(
+                spec.net,
+                spec.precision,
+                spec.fixed_spec,
+                params,
+                spec.hyper,
+            ))),
+            BackendKind::FpgaSim => Ok(AnyBackend::FpgaSim(FpgaSimBackend::with_spec(
+                spec.net,
+                spec.precision,
+                spec.fixed_spec,
+                params,
+                spec.hyper,
+            ))),
+            BackendKind::Xla => {
+                let rt = self.runtime.as_ref().ok_or_else(|| {
+                    Error::Config(
+                        "XLA backend needs compiled artifacts (a Runtime); \
+                         build them with `make artifacts`"
+                            .into(),
+                    )
+                })?;
+                if spec.precision == Precision::Fixed && spec.fixed_spec != FixedSpec::default() {
+                    return Err(Error::Config(format!(
+                        "XLA artifacts are baked at Q(18,12); custom fixed spec \
+                         Q({},{}) is unsupported on this backend",
+                        spec.fixed_spec.word, spec.fixed_spec.frac
+                    )));
+                }
+                Ok(AnyBackend::Xla(XlaBackend::new(
+                    rt,
+                    spec.net,
+                    spec.precision,
+                    params,
+                )?))
+            }
+        }
+    }
+
+    /// Build a mission backend: like [`BackendFactory::build`], then honor
+    /// `spec.fault` — attach the datapath SEU hook (fixed-point FPGA sim)
+    /// and wrap weight storage in a [`FaultyBackend`]. `seed` is the
+    /// mission seed; the injection streams are salted from it so fleets
+    /// replay bit-identically.
+    pub fn build_mission(
+        &self,
+        spec: &BackendSpec,
+        params: QNetParams,
+        seed: u64,
+    ) -> Result<BuiltBackend> {
+        let mut backend = self.build(spec, params)?;
+        let Some(plan) = spec.fault else {
+            return Ok(BuiltBackend::Clean(backend));
+        };
+        // expose the FIFO/datapath words of the fixed datapath to the same
+        // arrival stream under every mitigation (hardened strategies count
+        // the strikes as masked/corrected)
+        if spec.precision == Precision::Fixed {
+            if let Some(acc) = backend.accelerator_mut() {
+                acc.set_seu_hook(Some(SeuHook::new(
+                    seed ^ FAULT_FIFO_SALT,
+                    plan.rate,
+                    plan.mitigation,
+                )));
+            }
+        }
+        Ok(BuiltBackend::Faulted(FaultyBackend::with_spec(
+            backend,
+            spec.precision,
+            spec.fixed_spec,
+            plan.mitigation,
+            FaultModel::new(seed ^ FAULT_STORE_SALT, plan.rate),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+    use crate::fault::Mitigation;
+    use crate::util::Rng;
+
+    fn params_for(net: &NetConfig, seed: u64) -> QNetParams {
+        let mut rng = Rng::seeded(seed);
+        QNetParams::init(net, 0.3, &mut rng)
+    }
+
+    #[test]
+    fn matrix_covers_the_full_grid_in_canonical_order() {
+        let kinds = [BackendKind::Cpu, BackendKind::FpgaSim];
+        let m = BackendSpec::matrix(&kinds);
+        assert_eq!(m.len(), 4 * 2 * 2);
+        // configuration-major: both precisions and kinds of net 0 come first
+        assert!(m[..4].iter().all(|s| s.net == NetConfig::all()[0]));
+        assert_eq!(m[0].precision, Precision::Fixed);
+        assert_eq!(m[0].kind, BackendKind::Cpu);
+        assert_eq!(m[1].kind, BackendKind::FpgaSim);
+        assert_eq!(m[2].precision, Precision::Float);
+        assert_eq!(BackendSpec::local_matrix(), m);
+    }
+
+    #[test]
+    fn factory_builds_local_backends() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        for kind in [BackendKind::Cpu, BackendKind::FpgaSim] {
+            let spec = BackendSpec::new(kind, net, Precision::Fixed);
+            let mut b = factory.build(&spec, params_for(&net, 3)).unwrap();
+            assert_eq!(b.kind(), kind);
+            let q = b.q_values(&vec![0.1; net.a * net.d]).unwrap();
+            assert_eq!(q.len(), net.a);
+        }
+    }
+
+    #[test]
+    fn xla_without_runtime_is_config_error() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let err = factory
+            .build(&BackendSpec::xla(net, Precision::Fixed), params_for(&net, 3))
+            .unwrap_err();
+        assert!(err.to_string().contains("artifacts"), "{err}");
+    }
+
+    #[test]
+    fn factory_honors_custom_fixed_spec_on_cpu() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+        let sa = {
+            let mut rng = Rng::seeded(9);
+            rng.vec_f32(net.a * net.d, -1.0, 1.0)
+        };
+        let coarse = BackendSpec::cpu(net, Precision::Fixed).with_fixed_spec(FixedSpec::new(8, 4));
+        let fine = BackendSpec::cpu(net, Precision::Fixed);
+        let mut a = factory.build(&coarse, params_for(&net, 5)).unwrap();
+        let mut b = factory.build(&fine, params_for(&net, 5)).unwrap();
+        let qa = a.q_values(&sa).unwrap();
+        let qb = b.q_values(&sa).unwrap();
+        // a coarser grid must actually change the arithmetic
+        assert_ne!(qa, qb);
+        // invalid formats are rejected up front
+        let bad = BackendSpec::cpu(net, Precision::Fixed).with_fixed_spec(FixedSpec::new(1, 0));
+        assert!(factory.build(&bad, params_for(&net, 5)).is_err());
+    }
+
+    #[test]
+    fn build_mission_wraps_only_when_planned() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let clean_spec = BackendSpec::cpu(net, Precision::Fixed);
+        let clean = factory
+            .build_mission(&clean_spec, params_for(&net, 7), 7)
+            .unwrap();
+        assert!(clean.fault_stats().is_none());
+
+        let faulted_spec = clean_spec
+            .clone()
+            .with_fault(FaultPlan { rate: 1e-3, mitigation: Mitigation::Tmr });
+        let mut faulted = factory
+            .build_mission(&faulted_spec, params_for(&net, 7), 7)
+            .unwrap();
+        assert_eq!(faulted.fault_stats(), Some(FaultStats::default()));
+        let sa = vec![0.1; net.a * net.d];
+        for _ in 0..40 {
+            faulted.update(&sa, &sa, 0, 0.1).unwrap();
+        }
+        assert!(faulted.fault_stats().unwrap().total_upsets() > 0);
+    }
+
+    #[test]
+    fn built_backend_exposes_the_accelerator_through_the_wrapper() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let spec = BackendSpec::fpga_sim(net, Precision::Fixed)
+            .with_fault(FaultPlan { rate: 1e-4, mitigation: Mitigation::None });
+        let built = factory.build_mission(&spec, params_for(&net, 7), 7).unwrap();
+        assert!(built.accelerator().is_some());
+        let clean = factory
+            .build_mission(&BackendSpec::cpu(net, Precision::Fixed), params_for(&net, 7), 7)
+            .unwrap();
+        assert!(clean.accelerator().is_none());
+    }
+}

@@ -44,8 +44,21 @@ pub struct FaultyBackend<B: QBackend> {
 
 impl<B: QBackend> FaultyBackend<B> {
     pub fn new(inner: B, prec: Precision, mitigation: Mitigation, model: FaultModel) -> Self {
+        Self::with_spec(inner, prec, FixedSpec::default(), mitigation, model)
+    }
+
+    /// Like [`FaultyBackend::new`] with an explicit fixed-point storage
+    /// format (must match the wrapped backend's datapath format so the
+    /// store roundtrip stays bit-exact).
+    pub fn with_spec(
+        inner: B,
+        prec: Precision,
+        spec: FixedSpec,
+        mitigation: Mitigation,
+        model: FaultModel,
+    ) -> Self {
         let cfg = *inner.net();
-        let codec = WordCodec::new(prec, FixedSpec::default());
+        let codec = WordCodec::new(prec, spec);
         let words = codec.encode_all(&flatten_params(&inner.params()));
         let store = ProtectedStore::new(mitigation, codec.bits_per_word(), &words);
         FaultyBackend { inner, cfg, codec, store, model, mitigation }
@@ -186,15 +199,17 @@ impl<B: QBackend> QBackend for FaultyBackend<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Arch, EnvKind, Hyper};
+    use crate::config::{Arch, EnvKind};
     use crate::coordinator::sweep::Workload;
-    use crate::qlearn::backend::CpuBackend;
+    use crate::experiment::{AnyBackend, BackendFactory, BackendSpec};
     use crate::util::Rng;
 
-    fn cpu(net: NetConfig, prec: Precision, seed: u64) -> CpuBackend {
+    fn cpu(net: NetConfig, prec: Precision, seed: u64) -> AnyBackend {
         let mut rng = Rng::seeded(seed);
         let params = QNetParams::init(&net, 0.3, &mut rng);
-        CpuBackend::new(net, prec, params, Hyper::default())
+        BackendFactory::offline()
+            .build(&BackendSpec::cpu(net, prec), params)
+            .unwrap()
     }
 
     fn drive<B: QBackend>(backend: &mut B, net: &NetConfig, n: usize) -> Vec<f32> {

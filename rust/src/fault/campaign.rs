@@ -143,6 +143,7 @@ impl ResilienceReport {
             })
             .collect();
         Json::obj(vec![
+            ("id", Json::Str("R2".into())),
             ("campaign", Json::Str("resilience".into())),
             ("rovers", Json::Num(self.rovers as f64)),
             ("episodes", Json::Num(self.episodes as f64)),
@@ -150,6 +151,20 @@ impl ResilienceReport {
             ("precision", Json::Str(self.precision.as_str().into())),
             ("cells", Json::Arr(cells)),
         ])
+    }
+}
+
+impl crate::report::Report for ResilienceReport {
+    fn id(&self) -> &str {
+        "R2"
+    }
+
+    fn render(&self) -> String {
+        ResilienceReport::render(self)
+    }
+
+    fn to_json(&self) -> Json {
+        ResilienceReport::to_json(self)
     }
 }
 
@@ -258,5 +273,8 @@ mod tests {
         // serialized text parses back
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("rovers").and_then(Json::as_usize), Some(2));
+        // the typed-report surface pairs campaigns by id
+        assert_eq!(parsed.req_str("id").unwrap(), "R2");
+        assert_eq!(crate::report::Report::id(&r), "R2");
     }
 }

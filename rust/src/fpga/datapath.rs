@@ -147,7 +147,8 @@ pub struct Transition<'a> {
 }
 
 impl FpgaAccelerator {
-    /// Instantiate the accelerator with initial weights.
+    /// Instantiate the accelerator with initial weights at the default
+    /// Q(18,12) word format.
     pub fn new(
         cfg: NetConfig,
         precision: Precision,
@@ -155,7 +156,19 @@ impl FpgaAccelerator {
         hyper: Hyper,
         timing: TimingModel,
     ) -> Self {
-        let qspec = FixedSpec::default();
+        Self::with_spec(cfg, precision, params, hyper, timing, FixedSpec::default())
+    }
+
+    /// Instantiate with an explicit fixed-point word format (the X3
+    /// word-length axis); `qspec` is ignored in float precision.
+    pub fn with_spec(
+        cfg: NetConfig,
+        precision: Precision,
+        params: &QNetParams,
+        hyper: Hyper,
+        timing: TimingModel,
+        qspec: FixedSpec,
+    ) -> Self {
         let quant = Quantizer::new(qspec);
         let rom = FixedRom::build(LutSpec::default(), qspec);
         let (fixed_params, float_params) = match precision {
@@ -192,6 +205,12 @@ impl FpgaAccelerator {
 
     pub fn precision(&self) -> Precision {
         self.precision
+    }
+
+    /// Hyper-parameters baked into the datapath's error-capture/backprop
+    /// blocks.
+    pub fn hyper(&self) -> Hyper {
+        self.hyper
     }
 
     pub fn stats(&self) -> AccelStats {

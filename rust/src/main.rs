@@ -9,31 +9,38 @@
 //! * `fleet  [--rovers N ...]` — multi-rover mission via the scheduler.
 //! * `sweep  [--updates N]` — measured per-update latency for every
 //!   backend × configuration (the measured side of Tables 3–6).
+//! * `radiation` — resilience campaign under seeded SEU injection.
 //! * `validate` — cross-backend numeric equivalence over random workloads.
+//! * `diff a.json b.json` — compare two report JSON files within
+//!   tolerances (non-zero exit on drift).
 //! * `info` — artifact manifest + device/model summary.
+//!
+//! Every subcommand that prints a table or campaign accepts `--json FILE`
+//! to also write the typed machine-readable report (the
+//! [`qfpga::report::Report`] surface).
 
 use std::process::ExitCode;
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
 use qfpga::coordinator::telemetry::LearningCurve;
-use qfpga::coordinator::{measure_backend, run_fleet, run_mission, MissionConfig};
+use qfpga::coordinator::{measure_backend, measure_backend_batched, MissionConfig, SweepReport};
 use qfpga::error::Result;
+use qfpga::experiment::{BackendFactory, BackendSpec, Experiment};
 use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, XlaBackend};
-use qfpga::report;
-use qfpga::report::CompletionInputs;
+use qfpga::qlearn::backend::{BackendKind, QBackend};
+use qfpga::report::{self, Report};
 use qfpga::runtime::Runtime;
 use qfpga::util::cli::Args;
-use qfpga::util::Rng;
+use qfpga::util::{Json, Rng};
 
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|sweep|radiation|validate|info> [options]
+USAGE: qfpga <report|train|fleet|sweep|radiation|validate|diff|info|help> [options]
 
-  report    --table 1..8|batch|resilience | --headline
+  report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
             [--no-measure]        skip measuring the host-CPU rows
             [--batch B]           batch size for the B1 batched-datapath table
@@ -52,10 +59,15 @@ USAGE: qfpga <report|train|fleet|sweep|radiation|validate|info> [options]
             [--mitigation M]      none|tmr|scrub[:N]|ecc|all   (default all)
             [--backend B]         cpu|fpga-sim|all              (default all)
             [--rovers N]          fleet width per campaign cell (default 2)
-            [--json FILE]         also write the machine-readable report
             plus --arch/--env/--precision/--episodes/--max-steps/--seed
   validate  --updates N           cross-backend + batch/stepwise equivalence
+  diff      <ours.json> <golden.json> [--tol T]
+            compare two report JSON files (default tolerance 0.05); exits
+            non-zero when paper-ratio or latency fields drift out of band
   info                            artifacts, device, cycle model summary
+
+  --json FILE   (report/train/fleet/sweep/radiation/validate/info)
+                also write the subcommand's typed JSON report to FILE
 ";
 
 fn main() -> ExitCode {
@@ -69,7 +81,11 @@ fn main() -> ExitCode {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["all", "headline", "measure", "microbatch", "no-measure"])?;
+    let args = Args::from_env(&["all", "headline", "measure", "microbatch", "no-measure", "help"])?;
+    if args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match args.positional().first().map(String::as_str) {
         Some("report") => cmd_report(&args),
         Some("train") => cmd_train(&args),
@@ -77,12 +93,32 @@ fn run() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("radiation") => cmd_radiation(&args),
         Some("validate") => cmd_validate(&args),
-        Some("info") => cmd_info(),
-        _ => {
+        Some("diff") => cmd_diff(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") => {
             print!("{USAGE}");
             Ok(())
         }
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprint!("{USAGE}");
+            Err(qfpga::error::Error::Config(format!(
+                "unknown subcommand `{other}`"
+            )))
+        }
     }
+}
+
+/// Honor the uniform `--json FILE` contract.
+fn write_json(args: &Args, doc: &Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn mission_config(args: &Args) -> Result<MissionConfig> {
@@ -94,9 +130,9 @@ fn mission_config(args: &Args) -> Result<MissionConfig> {
         episodes: args.get_parse("episodes", 200usize)?,
         max_steps: args.get_parse("max-steps", 200usize)?,
         seed: args.get_parse("seed", 7u64)?,
-        hyper: Hyper::default(),
         microbatch: args.flag("microbatch"),
         batch: args.get_parse("batch", 1usize)?,
+        ..Default::default()
     })
 }
 
@@ -104,23 +140,24 @@ fn mission_config(args: &Args) -> Result<MissionConfig> {
 fn measure_cpu_us(net: NetConfig) -> Result<f64> {
     let mut rng = Rng::seeded(0xBEEF);
     let params = QNetParams::init(&net, 0.3, &mut rng);
-    let mut backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+    let mut backend =
+        BackendFactory::offline().build(&BackendSpec::cpu(net, Precision::Float), params)?;
     let workload = Workload::synthetic(net, 2_000, 3);
     Ok(measure_backend(&mut backend, &workload, 200)?.median_us)
 }
 
 fn cmd_report(args: &Args) -> Result<()> {
     let measure = !args.flag("no-measure");
-    let completion = |arch, env| -> Result<()> {
-        let inputs = CompletionInputs {
+    let batch = args.get_parse("batch", 16usize)?;
+    let completion = |arch, env| -> Result<report::PaperTable> {
+        let inputs = report::CompletionInputs {
             measured_cpu_us: if measure {
                 Some(measure_cpu_us(NetConfig::new(arch, env))?)
             } else {
                 None
             },
         };
-        println!("{}", report::table_completion(arch, env, inputs));
-        Ok(())
+        Ok(report::table_completion(arch, env, inputs))
     };
 
     let table = args.get("table");
@@ -128,64 +165,50 @@ fn cmd_report(args: &Args) -> Result<()> {
     let all =
         args.flag("all") || (table.is_none() && ablation.is_none() && !args.flag("headline"));
 
+    let mut tables: Vec<report::PaperTable> = Vec::new();
     if let Some(t) = table {
-        match t {
-            "1" => println!("{}", report::table1()),
-            "2" => println!("{}", report::table2()),
+        tables.push(match t {
+            "1" => report::table1(),
+            "2" => report::table2(),
             "3" => completion(Arch::Perceptron, EnvKind::Simple)?,
             "4" => completion(Arch::Perceptron, EnvKind::Complex)?,
             "5" => completion(Arch::Mlp, EnvKind::Simple)?,
             "6" => completion(Arch::Mlp, EnvKind::Complex)?,
-            "7" => println!("{}", report::table_power(EnvKind::Simple)),
-            "8" => println!("{}", report::table_power(EnvKind::Complex)),
-            "energy" => println!("{}", report::energy_table()),
-            "batch" => println!("{}", report::table_batch(args.get_parse("batch", 16usize)?)),
-            "resilience" => println!("{}", report::resilience_overhead()),
+            "7" => report::table_power(EnvKind::Simple),
+            "8" => report::table_power(EnvKind::Complex),
+            "energy" => report::energy_table(),
+            "batch" => report::table_batch(batch),
+            "resilience" => report::resilience_overhead(),
             other => return Err(qfpga::error::Error::Config(format!("no table `{other}`"))),
-        }
-        return Ok(());
-    }
-    if let Some(a) = ablation {
-        match a {
-            "pipeline" => println!("{}", report::ablation_pipelining()),
-            "lut" => println!("{}", report::ablation_lut_rom()),
-            "wordlen" => println!("{}", report::ablation_wordlen()),
-            other => return Err(qfpga::error::Error::Config(format!("no ablation `{other}`"))),
-        }
-        return Ok(());
-    }
-    if args.flag("headline") && !all {
-        println!("{}", report::headline());
-        return Ok(());
+        });
+    } else if let Some(a) = ablation {
+        tables.push(match a {
+            "pipeline" => report::ablation_pipelining(),
+            "lut" => report::ablation_lut_rom(),
+            "wordlen" => report::ablation_wordlen(),
+            other => {
+                return Err(qfpga::error::Error::Config(format!("no ablation `{other}`")))
+            }
+        });
+    } else if args.flag("headline") && !all {
+        tables.push(report::headline());
+    } else {
+        // --all: the canonical list lives in report::all_tables, shared
+        // with the golden-report tests
+        tables = report::all_tables(|arch, env| completion(arch, env), batch)?;
     }
 
-    // --all
-    println!("{}", report::table1());
-    println!("{}", report::table2());
-    completion(Arch::Perceptron, EnvKind::Simple)?;
-    completion(Arch::Perceptron, EnvKind::Complex)?;
-    completion(Arch::Mlp, EnvKind::Simple)?;
-    completion(Arch::Mlp, EnvKind::Complex)?;
-    println!("{}", report::table_power(EnvKind::Simple));
-    println!("{}", report::table_power(EnvKind::Complex));
-    println!("{}", report::energy_table());
-    println!("{}", report::table_batch(args.get_parse("batch", 16usize)?));
-    println!("{}", report::resilience_overhead());
-    println!("{}", report::headline());
-    println!("{}", report::ablation_pipelining());
-    println!("{}", report::ablation_lut_rom());
-    println!("{}", report::ablation_wordlen());
-    Ok(())
+    for t in &tables {
+        println!("{t}");
+    }
+    write_json(args, &report::set_to_json(&tables))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
     println!("mission: {}", cfg.describe());
-    let runtime = match cfg.backend {
-        BackendKind::Xla => Some(Runtime::from_default_dir()?),
-        _ => None,
-    };
-    let report = run_mission(&cfg, runtime.as_ref())?;
+    let experiment = Experiment::from_mission(&cfg).run()?;
+    let report = &experiment.rovers[0];
     let (first, last) = report.train.first_last_mean_reward(20);
     let curve = LearningCurve::from_report(&report.train, 10, 60);
     println!("reward curve   {}", curve.ascii(60));
@@ -207,14 +230,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             us / 1e3
         );
     }
-    Ok(())
+    write_json(args, &experiment.to_json())
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
     let rovers = args.get_parse("rovers", 4usize)?;
     println!("fleet: {} × [{}]", rovers, cfg.describe());
-    let report = run_fleet(&cfg, rovers)?;
+    let report = Experiment::from_mission(&cfg).rovers(rovers).run()?;
     for (i, r) in report.rovers.iter().enumerate() {
         let (first, last) = r.train.first_last_mean_reward(20);
         println!(
@@ -229,50 +252,38 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.mean_learning_delta(),
         report.wall_seconds
     );
-    Ok(())
+    write_json(args, &report.to_json())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use qfpga::coordinator::measure_backend_batched;
     let n = args.get_parse("updates", 1_000usize)?;
     let batch = args.get_parse("batch", 0usize)?;
     let warmup = (n / 10).max(10).max(2 * batch);
-    let runtime = Runtime::from_default_dir().ok();
-    if runtime.is_none() {
+    let factory = BackendFactory::auto();
+    if !factory.has_runtime() {
         println!("(artifacts not built; skipping the xla backend)");
     }
-    println!(
-        "{:<38} {:>10} {:>10} {:>12}",
-        "backend", "mean µs", "median µs", "kQ/s"
-    );
-    for net in NetConfig::all() {
-        let workload = Workload::synthetic(net, n + warmup, 11);
-        for prec in [Precision::Fixed, Precision::Float] {
-            let mut rng = Rng::seeded(0xF00D);
-            let params = QNetParams::init(&net, 0.3, &mut rng);
-
-            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            print_timing(measure_backend(&mut cpu, &workload, warmup)?);
-            if batch > 1 {
-                print_timing(measure_backend_batched(&mut cpu, &workload, warmup, batch)?);
-            }
-
-            let mut sim = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
-            print_timing(measure_backend(&mut sim, &workload, warmup)?);
-            if batch > 1 {
-                print_timing(measure_backend_batched(&mut sim, &workload, warmup, batch)?);
-            }
-
-            if let Some(rt) = &runtime {
-                let mut xla = XlaBackend::new(rt, net, prec, params)?;
-                print_timing(measure_backend(&mut xla, &workload, warmup)?);
-                if batch > 1 {
-                    print_timing(measure_backend_batched(&mut xla, &workload, warmup, batch)?);
-                }
-            }
+    println!("{}", SweepReport::header());
+    let mut rows = Vec::new();
+    for spec in BackendSpec::matrix(&BackendKind::all()) {
+        if spec.kind == BackendKind::Xla && !factory.has_runtime() {
+            continue;
+        }
+        let workload = Workload::synthetic(spec.net, n + warmup, 11);
+        let mut rng = Rng::seeded(0xF00D);
+        let params = QNetParams::init(&spec.net, 0.3, &mut rng);
+        let mut backend = factory.build(&spec, params)?;
+        let t = measure_backend(&mut backend, &workload, warmup)?;
+        print_timing(&t);
+        rows.push(t);
+        if batch > 1 {
+            let t = measure_backend_batched(&mut backend, &workload, warmup, batch)?;
+            print_timing(&t);
+            rows.push(t);
         }
     }
-    Ok(())
+    let sweep = SweepReport { updates: n, batch, rows };
+    write_json(args, &sweep.to_json())
 }
 
 /// `radiation` — resilience campaign: per backend, a fault-free baseline
@@ -329,26 +340,23 @@ fn cmd_radiation(args: &Args) -> Result<()> {
         mitigations.iter().map(Mitigation::label).collect::<Vec<_>>().join(", "),
     );
 
-    let report = resilience(&base, &backends, &[rate], &mitigations, rovers)?;
-    print!("{}", report.render());
-
-    if let Some(path) = args.get("json") {
-        std::fs::write(path, report.to_json().to_string())?;
-        println!("wrote {path}");
-    }
-    Ok(())
+    let campaign = resilience(&base, &backends, &[rate], &mitigations, rovers)?;
+    print!("{}", campaign.render());
+    write_json(args, &campaign.to_json())
 }
 
-fn print_timing(t: qfpga::coordinator::WorkloadTiming) {
-    println!(
-        "{:<38} {:>10.2} {:>10.2} {:>12.1}",
-        t.backend_name, t.mean_us, t.median_us, t.kq_per_s
-    );
+fn print_timing(t: &qfpga::coordinator::WorkloadTiming) {
+    println!("{}", t.render_row());
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    use qfpga::qlearn::backend::QBackend;
     let n = args.get_parse("updates", 50usize)?;
+    let offline = BackendFactory::offline();
+    let mut table = report::PaperTable::new(
+        "V1",
+        format!("Cross-backend conformance ({n} synthetic updates)"),
+        "max |Δ|",
+    );
 
     // ---- local conformance (no artifacts needed): the native batch paths
     // must reproduce the stepwise paths on identical transition streams
@@ -360,21 +368,19 @@ fn cmd_validate(args: &Args) -> Result<()> {
             let params = QNetParams::init(&net, 0.3, &mut rng);
             let w = Workload::synthetic(net, n, 21);
             let batch = w.flat_batch(0, n);
-            let step = net.a * net.d;
 
-            let mut cpu_step = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut cpu_batch = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut sim_step = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut sim_batch = FpgaSimBackend::new(net, prec, params, Hyper::default());
+            let mut cpu_step = offline.build(&BackendSpec::cpu(net, prec), params.clone())?;
+            let mut cpu_batch = offline.build(&BackendSpec::cpu(net, prec), params.clone())?;
+            let mut sim_step =
+                offline.build(&BackendSpec::fpga_sim(net, prec), params.clone())?;
+            let mut sim_batch = offline.build(&BackendSpec::fpga_sim(net, prec), params)?;
 
             let cpu_errs = cpu_batch.update_batch(&batch)?;
             let sim_errs = sim_batch.update_batch(&batch)?;
             let mut max_diff = 0f64;
-            for i in 0..n {
-                let sc = &w.sa_cur[i * step..(i + 1) * step];
-                let sn = &w.sa_next[i * step..(i + 1) * step];
-                let e_cpu = cpu_step.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
-                let e_sim = sim_step.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+            for (i, t) in batch.transitions().enumerate() {
+                let e_cpu = cpu_step.update(t.sa_cur, t.sa_next, t.action, t.reward)? as f64;
+                let e_sim = sim_step.update(t.sa_cur, t.sa_next, t.action, t.reward)? as f64;
                 max_diff = max_diff.max((cpu_errs[i] as f64 - e_cpu).abs());
                 max_diff = max_diff.max((sim_errs[i] as f64 - e_sim).abs());
             }
@@ -385,21 +391,33 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 net.name(),
                 prec.as_str()
             );
+            table = table.row(
+                format!("batch-vs-stepwise {} {}", net.name(), prec.as_str()),
+                max_diff,
+                None,
+            );
             worst_batch = worst_batch.max(max_diff);
         }
     }
     if worst_batch > 1e-5 {
+        // still honor --json on the failing path: the per-config rows are
+        // exactly what a CI consumer needs to localize the divergence
+        table = table.note(format!(
+            "FAILED: batch path diverged from stepwise by {worst_batch:.2e} (budget 1e-5)"
+        ));
+        write_json(args, &table.to_json())?;
         return Err(qfpga::error::Error::Config(format!(
             "batch path diverged from stepwise by {worst_batch:.2e} (budget 1e-5)"
         )));
     }
 
     // ---- cross-backend check including XLA (needs built artifacts)
-    let rt = match Runtime::from_default_dir() {
-        Ok(rt) => rt,
+    let factory = match Runtime::from_default_dir() {
+        Ok(rt) => BackendFactory::with_runtime(rt),
         Err(e) => {
             println!("OK: batch == stepwise within 1e-5 (xla cross-check skipped: {e})");
-            return Ok(());
+            table = table.note(format!("xla cross-check skipped: {e}"));
+            return write_json(args, &table.to_json());
         }
     };
     let mut worst: f64 = 0.0;
@@ -408,17 +426,15 @@ fn cmd_validate(args: &Args) -> Result<()> {
             let mut rng = Rng::seeded(0xCAFE);
             let params = QNetParams::init(&net, 0.3, &mut rng);
             let w = Workload::synthetic(net, n, 21);
-            let mut xla = XlaBackend::new(&rt, net, prec, params.clone())?;
-            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut sim = FpgaSimBackend::new(net, prec, params, Hyper::default());
-            let step = net.a * net.d;
+            let batch = w.flat_batch(0, n);
+            let mut xla = factory.build(&BackendSpec::xla(net, prec), params.clone())?;
+            let mut cpu = factory.build(&BackendSpec::cpu(net, prec), params.clone())?;
+            let mut sim = factory.build(&BackendSpec::fpga_sim(net, prec), params)?;
             let mut max_diff = 0f64;
-            for i in 0..n {
-                let sc = &w.sa_cur[i * step..(i + 1) * step];
-                let sn = &w.sa_next[i * step..(i + 1) * step];
-                let e1 = xla.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
-                let e2 = cpu.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
-                let e3 = sim.update(sc, sn, w.actions[i], w.rewards[i])? as f64;
+            for t in batch.transitions() {
+                let e1 = xla.update(t.sa_cur, t.sa_next, t.action, t.reward)? as f64;
+                let e2 = cpu.update(t.sa_cur, t.sa_next, t.action, t.reward)? as f64;
+                let e3 = sim.update(t.sa_cur, t.sa_next, t.action, t.reward)? as f64;
                 max_diff = max_diff.max((e1 - e2).abs()).max((e1 - e3).abs());
             }
             println!(
@@ -426,20 +442,56 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 net.name(),
                 prec.as_str()
             );
+            table = table.row(
+                format!("cross-backend {} {}", net.name(), prec.as_str()),
+                max_diff,
+                None,
+            );
             worst = worst.max(max_diff);
         }
     }
     let budget = 4.0 / 4096.0; // 4 LSB of Q(18,12)
     if worst > budget {
+        table = table.note(format!(
+            "FAILED: cross-backend divergence {worst:.2e} exceeds budget {budget:.2e}"
+        ));
+        write_json(args, &table.to_json())?;
         return Err(qfpga::error::Error::Config(format!(
             "cross-backend divergence {worst:.2e} exceeds budget {budget:.2e}"
         )));
     }
     println!("OK: all backends agree within {budget:.2e}");
+    table = table.note(format!("cross-backend budget {budget:.2e}, batch budget 1e-5"));
+    write_json(args, &table.to_json())
+}
+
+fn cmd_diff(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    let (Some(ours), Some(golden)) = (pos.get(1), pos.get(2)) else {
+        return Err(qfpga::error::Error::Config(
+            "usage: qfpga diff <ours.json> <golden.json> [--tol T]".into(),
+        ));
+    };
+    let tol = args.get_parse("tol", 0.05f64)?;
+    let d = report::diff_files(ours, golden, tol)?;
+    print!("{}", d.render(tol));
+    if d.compared == 0 {
+        // a gate that compared nothing must not report success
+        return Err(qfpga::error::Error::Config(format!(
+            "no comparable values between `{ours}` and `{golden}` — are these \
+             report JSON files with matching table ids?"
+        )));
+    }
+    if !d.ok() {
+        return Err(qfpga::error::Error::Config(format!(
+            "{} report value(s) drifted beyond tolerance {tol} vs `{golden}`",
+            d.problems.len()
+        )));
+    }
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let dev = Virtex7::default();
     println!("device: Virtex-7 XC7VX485T @ {:.0} MHz", dev.clock_hz / 1e6);
     println!(
@@ -448,19 +500,27 @@ fn cmd_info() -> Result<()> {
     );
     let t = TimingModel::default();
     println!("cycle model (per Q-update):");
+    let mut model_rows = Vec::new();
     for net in NetConfig::all() {
         for prec in [Precision::Fixed, Precision::Float] {
             let b = t.qupdate(&net, prec);
+            let us = dev.cycles_to_us(b.total());
             println!(
                 "  {:<22} {:<6} {:>7} cycles = {:>9.2} µs",
                 net.name(),
                 prec.as_str(),
                 b.total(),
-                dev.cycles_to_us(b.total())
+                us
             );
+            model_rows.push(Json::obj(vec![
+                ("config", Json::Str(net.name())),
+                ("precision", Json::Str(prec.as_str().into())),
+                ("cycles", Json::Num(b.total() as f64)),
+                ("us", Json::Num(us)),
+            ]));
         }
     }
-    match Runtime::from_default_dir() {
+    let artifacts = match Runtime::from_default_dir() {
         Ok(rt) => {
             println!(
                 "artifacts: {} modules in {} (platform {})",
@@ -468,8 +528,35 @@ fn cmd_info() -> Result<()> {
                 rt.manifest().dir.display(),
                 rt.platform()
             );
+            Json::obj(vec![
+                ("available", Json::Bool(true)),
+                ("modules", Json::Num(rt.manifest().artifacts.len() as f64)),
+                ("platform", Json::Str(rt.platform().to_string())),
+            ])
         }
-        Err(e) => println!("artifacts: unavailable ({e})"),
-    }
-    Ok(())
+        Err(e) => {
+            println!("artifacts: unavailable ({e})");
+            Json::obj(vec![
+                ("available", Json::Bool(false)),
+                ("error", Json::Str(e.to_string())),
+            ])
+        }
+    };
+    let doc = Json::obj(vec![
+        ("id", Json::Str("INFO".into())),
+        (
+            "device",
+            Json::obj(vec![
+                ("name", Json::Str("Virtex-7 XC7VX485T".into())),
+                ("clock_hz", Json::Num(dev.clock_hz)),
+                ("luts", Json::Num(dev.luts as f64)),
+                ("ffs", Json::Num(dev.ffs as f64)),
+                ("dsps", Json::Num(dev.dsps as f64)),
+                ("bram36", Json::Num(dev.bram36 as f64)),
+            ]),
+        ),
+        ("cycle_model", Json::Arr(model_rows)),
+        ("artifacts", artifacts),
+    ]);
+    write_json(args, &doc)
 }

@@ -29,6 +29,11 @@ use crate::runtime::{ArtifactKind, Executor, Runtime};
 use super::replay::FlatBatch;
 
 /// Identifier for constructing backends generically (CLI, sweeps).
+///
+/// Canonical spellings are `"xla"`, `"cpu"` and `"fpga-sim"` — exactly
+/// what [`BackendKind::as_str`] emits and what every kind round-trips
+/// through [`std::str::FromStr`]. `"fpga"` is accepted as an input alias
+/// for `"fpga-sim"` but is never printed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     Xla,
@@ -43,6 +48,11 @@ impl BackendKind {
             BackendKind::Cpu => "cpu",
             BackendKind::FpgaSim => "fpga-sim",
         }
+    }
+
+    /// Every backend kind (canonical enumeration order).
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Cpu, BackendKind::FpgaSim, BackendKind::Xla]
     }
 }
 
@@ -89,15 +99,10 @@ pub trait QBackend {
     /// within 1e-5 in float. Returns one Q-error per transition.
     fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
         batch.validate(self.net())?;
-        let step = self.net().a * self.net().d;
         let mut errs = Vec::with_capacity(batch.len());
         for i in 0..batch.len() {
-            errs.push(self.update(
-                &batch.sa_cur[i * step..(i + 1) * step],
-                &batch.sa_next[i * step..(i + 1) * step],
-                batch.actions[i],
-                batch.rewards[i],
-            )?);
+            let t = batch.transition(i);
+            errs.push(self.update(t.sa_cur, t.sa_next, t.action, t.reward)?);
         }
         Ok(errs)
     }
@@ -122,13 +127,32 @@ pub struct CpuBackend {
 }
 
 impl CpuBackend {
-    pub fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
+    /// Construction is factory-only: see
+    /// [`crate::experiment::BackendFactory`].
+    pub(crate) fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
+        Self::with_spec(net, prec, FixedSpec::default(), params, hyper)
+    }
+
+    /// Factory path with an explicit fixed-point format (word-length
+    /// sweeps); `spec` is ignored in float precision.
+    pub(crate) fn with_spec(
+        net: NetConfig,
+        prec: Precision,
+        spec: FixedSpec,
+        params: QNetParams,
+        hyper: Hyper,
+    ) -> Self {
         let fixed = match prec {
-            Precision::Fixed => Some(FixedSpec::default()),
+            Precision::Fixed => Some(spec),
             Precision::Float => None,
         };
         let dp = Datapath::new(fixed, Activation::lut_default(fixed));
         CpuBackend { net, params, hyper, dp, prec, scratch: BatchScratch::new() }
+    }
+
+    /// Hyper-parameters in effect.
+    pub fn hyper(&self) -> Hyper {
+        self.hyper
     }
 }
 
@@ -203,7 +227,14 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
-    pub fn new(rt: &Runtime, net: NetConfig, prec: Precision, params: QNetParams) -> Result<Self> {
+    /// Construction is factory-only: see
+    /// [`crate::experiment::BackendFactory`].
+    pub(crate) fn new(
+        rt: &Runtime,
+        net: NetConfig,
+        prec: Precision,
+        params: QNetParams,
+    ) -> Result<Self> {
         Ok(XlaBackend {
             forward: rt.select(&net, prec, ArtifactKind::Forward)?,
             qupdate: rt.select(&net, prec, ArtifactKind::QUpdate)?,
@@ -249,15 +280,10 @@ impl QBackend for XlaBackend {
         batch.validate(&self.net)?;
         let b = self.train_batch.meta().batch;
         if batch.len() != b {
-            let step = self.net.a * self.net.d;
             let mut errs = Vec::with_capacity(batch.len());
             for i in 0..batch.len() {
-                errs.push(self.update(
-                    &batch.sa_cur[i * step..(i + 1) * step],
-                    &batch.sa_next[i * step..(i + 1) * step],
-                    batch.actions[i],
-                    batch.rewards[i],
-                )?);
+                let t = batch.transition(i);
+                errs.push(self.update(t.sa_cur, t.sa_next, t.action, t.reward)?);
             }
             return Ok(errs);
         }
@@ -294,11 +320,34 @@ pub struct FpgaSimBackend {
 }
 
 impl FpgaSimBackend {
-    pub fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
+    /// Construction is factory-only: see
+    /// [`crate::experiment::BackendFactory`].
+    pub(crate) fn new(net: NetConfig, prec: Precision, params: QNetParams, hyper: Hyper) -> Self {
         FpgaSimBackend { acc: FpgaAccelerator::paper(net, prec, &params, hyper) }
     }
 
-    pub fn with_timing(
+    /// Factory path with an explicit fixed-point word format.
+    pub(crate) fn with_spec(
+        net: NetConfig,
+        prec: Precision,
+        spec: FixedSpec,
+        params: QNetParams,
+        hyper: Hyper,
+    ) -> Self {
+        FpgaSimBackend {
+            acc: FpgaAccelerator::with_spec(
+                net,
+                prec,
+                &params,
+                hyper,
+                TimingModel::default(),
+                spec,
+            ),
+        }
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn with_timing(
         net: NetConfig,
         prec: Precision,
         params: QNetParams,
@@ -306,6 +355,11 @@ impl FpgaSimBackend {
         timing: TimingModel,
     ) -> Self {
         FpgaSimBackend { acc: FpgaAccelerator::new(net, prec, &params, hyper, timing) }
+    }
+
+    /// Hyper-parameters in effect.
+    pub fn hyper(&self) -> Hyper {
+        self.acc.hyper()
     }
 
     /// The underlying accelerator (cycle counters, power model hooks).
@@ -496,6 +550,21 @@ mod tests {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("fpga".parse::<BackendKind>().unwrap(), BackendKind::FpgaSim);
         assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    /// Parse↔print property: every kind round-trips through its canonical
+    /// string, and both FPGA spellings land on the same kind.
+    #[test]
+    fn backend_kind_roundtrips_canonically() {
+        for kind in BackendKind::all() {
+            assert_eq!(kind.as_str().parse::<BackendKind>().unwrap(), kind);
+        }
+        assert_eq!(
+            "fpga".parse::<BackendKind>().unwrap(),
+            "fpga-sim".parse::<BackendKind>().unwrap()
+        );
+        // the alias is input-only: printing always emits the canonical form
+        assert_eq!(BackendKind::FpgaSim.as_str(), "fpga-sim");
     }
 
     #[test]

@@ -140,20 +140,20 @@ impl<B: QBackend> NeuralQLearner<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Hyper, NetConfig, Precision};
+    use crate::config::{NetConfig, Precision};
     use crate::env::SimpleRoverEnv;
+    use crate::experiment::{AnyBackend, BackendFactory, BackendSpec};
     use crate::nn::params::QNetParams;
-    use crate::qlearn::backend::CpuBackend;
 
-    fn learner(policy: Policy) -> NeuralQLearner<CpuBackend> {
+    fn learner(policy: Policy) -> NeuralQLearner<AnyBackend> {
         let env = SimpleRoverEnv::new(1);
         let net = NetConfig { a: env.n_actions(), d: env.d(), ..env.net_config() };
         let mut rng = Rng::seeded(31);
         let params = QNetParams::init(&net, 0.3, &mut rng);
-        NeuralQLearner::new(
-            CpuBackend::new(net, Precision::Float, params, Hyper::default()),
-            policy,
-        )
+        let backend = BackendFactory::offline()
+            .build(&BackendSpec::cpu(net, Precision::Float), params)
+            .unwrap();
+        NeuralQLearner::new(backend, policy)
     }
 
     #[test]

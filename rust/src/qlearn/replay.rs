@@ -8,6 +8,7 @@
 
 use crate::config::NetConfig;
 use crate::error::{Error, Result};
+use crate::fpga::datapath::Transition;
 
 /// One encoded transition.
 #[derive(Debug, Clone)]
@@ -106,6 +107,34 @@ impl FlatBatch {
         Ok(batch)
     }
 
+    /// Per-transition encoding width (A·D elements), derived from the
+    /// batch's own layout. Zero for an empty batch.
+    pub fn step_len(&self) -> usize {
+        if self.actions.is_empty() {
+            0
+        } else {
+            self.sa_cur.len() / self.actions.len()
+        }
+    }
+
+    /// Borrow transition `i` as slices — the one shared way every stepwise
+    /// fallback re-slices a flat batch. Call [`FlatBatch::validate`] first
+    /// if the batch came from outside; the index must be `< len()`.
+    pub fn transition(&self, i: usize) -> Transition<'_> {
+        let step = self.step_len();
+        Transition {
+            sa_cur: &self.sa_cur[i * step..(i + 1) * step],
+            sa_next: &self.sa_next[i * step..(i + 1) * step],
+            action: self.actions[i],
+            reward: self.rewards[i],
+        }
+    }
+
+    /// Iterate the batch transition by transition.
+    pub fn transitions<'a>(&'a self) -> impl Iterator<Item = Transition<'a>> + 'a {
+        (0..self.len()).map(move |i| self.transition(i))
+    }
+
     /// Check the internal layout against a network's dimensions.
     pub fn validate(&self, net: &NetConfig) -> Result<()> {
         let step = net.a * net.d;
@@ -189,6 +218,30 @@ mod tests {
         assert!(FlatBatch::from_slices(&net, &vec![0.0; step], &vec![0.0; step], &[net.a], &[0.0])
             .is_err());
         assert!(FlatBatch::empty().validate(&net).is_ok());
+    }
+
+    #[test]
+    fn transition_accessor_and_iterator_reslice_correctly() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let step = net.a * net.d;
+        let b = FlatBatch {
+            sa_cur: (0..3 * step).map(|i| i as f32).collect(),
+            sa_next: (0..3 * step).map(|i| -(i as f32)).collect(),
+            actions: vec![0, 1, 2],
+            rewards: vec![0.5, -0.5, 1.0],
+        };
+        assert_eq!(b.step_len(), step);
+        let t1 = b.transition(1);
+        assert_eq!(t1.sa_cur, &b.sa_cur[step..2 * step]);
+        assert_eq!(t1.sa_next, &b.sa_next[step..2 * step]);
+        assert_eq!(t1.action, 1);
+        assert_eq!(t1.reward, -0.5);
+        let collected: Vec<usize> = b.transitions().map(|t| t.action).collect();
+        assert_eq!(collected, vec![0, 1, 2]);
+        // empty batches iterate nothing and report a zero step
+        let empty = FlatBatch::empty();
+        assert_eq!(empty.step_len(), 0);
+        assert_eq!(empty.transitions().count(), 0);
     }
 
     #[test]

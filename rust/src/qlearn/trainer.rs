@@ -117,10 +117,10 @@ pub fn train<B: QBackend>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Hyper, Precision};
+    use crate::config::Precision;
     use crate::env::SimpleRoverEnv;
+    use crate::experiment::{BackendFactory, BackendSpec};
     use crate::nn::params::QNetParams;
-    use crate::qlearn::backend::CpuBackend;
     use crate::qlearn::policy::Policy;
 
     fn quick_train(episodes: usize, seed: u64) -> TrainReport {
@@ -128,7 +128,9 @@ mod tests {
         let net = env.net_config();
         let mut rng = Rng::seeded(seed);
         let params = QNetParams::init(&net, 0.3, &mut rng);
-        let backend = CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let backend = BackendFactory::offline()
+            .build(&BackendSpec::cpu(net, Precision::Float), params)
+            .unwrap();
         let mut learner = NeuralQLearner::new(backend, Policy::default_training());
         train(&mut learner, &mut env, episodes, 100, &mut rng).unwrap()
     }

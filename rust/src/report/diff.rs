@@ -1,0 +1,311 @@
+//! `qfpga diff` — compare two report JSON files within tolerances.
+//!
+//! The reference (`golden`) side defines what gets compared: every table in
+//! it (matched by `id`) must exist in `ours`, every golden row (matched by
+//! `label`) must exist in the matching table, and every shared numeric
+//! field (`ours`, `ratio` on table rows; all numeric fields on campaign
+//! `cells`) must agree within the relative tolerance. Extra tables or rows
+//! on the `ours` side are ignored — the golden can be a stable subset
+//! (e.g. model-derived rows only, excluding host-measured latencies).
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// Outcome of one diff run.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    /// Numeric values compared.
+    pub compared: usize,
+    /// Human-readable problem lines (drift, missing tables/rows).
+    pub problems: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn ok(&self) -> bool {
+        self.problems.is_empty()
+    }
+
+    /// One-paragraph summary for the CLI.
+    pub fn render(&self, tol: f64) -> String {
+        let mut out = format!(
+            "compared {} values (relative tolerance {tol}): {}\n",
+            self.compared,
+            if self.ok() {
+                "OK".to_string()
+            } else {
+                format!("{} problem(s)", self.problems.len())
+            }
+        );
+        for p in &self.problems {
+            out.push_str(&format!("  {p}\n"));
+        }
+        out
+    }
+}
+
+/// Relative closeness: |a − b| within `tol` of the larger magnitude. A
+/// tiny absolute escape keeps exact-zero pairs (and float dust around
+/// them) from failing vacuously; it is far below any reported quantity,
+/// so sub-1.0 paper ratios still get a genuinely relative gate.
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()) + 1e-12
+}
+
+/// The list of table objects in a report document: either the `tables`
+/// array of a [`crate::report::set_to_json`] wrapper, or the document
+/// itself when it is a single report object.
+fn tables_of(doc: &Json) -> Vec<&Json> {
+    match doc.get("tables").and_then(Json::as_arr) {
+        Some(arr) => arr.iter().collect(),
+        None => vec![doc],
+    }
+}
+
+fn table_id(t: &Json) -> Option<&str> {
+    t.get("id").and_then(Json::as_str)
+}
+
+/// Find `label`'s row in a table's `rows` array.
+fn find_row<'a>(table: &'a Json, label: &str) -> Option<&'a Json> {
+    table
+        .get("rows")?
+        .as_arr()?
+        .iter()
+        .find(|r| r.get("label").and_then(Json::as_str) == Some(label))
+}
+
+/// Composite key for a resilience-campaign cell.
+fn cell_key(c: &Json) -> Option<String> {
+    let backend = c.get("backend")?.as_str()?;
+    let mitigation = c.get("mitigation")?.as_str()?;
+    let rate = c.get("rate")?.as_f64()?;
+    Some(format!("{backend}|{rate:e}|{mitigation}"))
+}
+
+fn find_cell<'a>(table: &'a Json, key: &str) -> Option<&'a Json> {
+    table
+        .get("cells")?
+        .as_arr()?
+        .iter()
+        .find(|c| cell_key(c).as_deref() == Some(key))
+}
+
+fn diff_value(
+    ctx: &str,
+    field: &str,
+    ours: &Json,
+    golden: &Json,
+    tol: f64,
+    out: &mut DiffReport,
+) {
+    // the golden side defines what must exist: no golden value, nothing to
+    // compare — but a golden value our side lost (e.g. a ratio gone null
+    // because a paper constant was dropped) is itself a regression
+    let Some(b) = golden.get(field).and_then(Json::as_f64) else {
+        return;
+    };
+    let Some(a) = ours.get(field).and_then(Json::as_f64) else {
+        out.problems.push(format!(
+            "{ctx}: {field} missing from ours (golden has {b})"
+        ));
+        return;
+    };
+    out.compared += 1;
+    if !close(a, b, tol) {
+        out.problems.push(format!(
+            "{ctx}: {field} drifted: ours {a} vs golden {b} \
+             (Δ {:+.3e}, tol {tol})",
+            a - b
+        ));
+    }
+}
+
+/// Compare `ours` against `golden` within relative tolerance `tol`.
+pub fn diff_json(ours: &Json, golden: &Json, tol: f64) -> DiffReport {
+    let mut out = DiffReport::default();
+    let our_tables = tables_of(ours);
+
+    for gtable in tables_of(golden) {
+        let Some(id) = table_id(gtable) else {
+            out.problems.push("golden table without an `id` field".into());
+            continue;
+        };
+        let Some(otable) = our_tables.iter().find(|t| table_id(t) == Some(id)) else {
+            out.problems.push(format!("table {id}: missing from ours"));
+            continue;
+        };
+
+        // paper-table rows, matched by label
+        if let Some(rows) = gtable.get("rows").and_then(Json::as_arr) {
+            for grow in rows {
+                let Some(label) = grow.get("label").and_then(Json::as_str) else {
+                    continue;
+                };
+                let Some(orow) = find_row(otable, label) else {
+                    out.problems
+                        .push(format!("table {id}: row `{label}` missing from ours"));
+                    continue;
+                };
+                let ctx = format!("table {id}, row `{label}`");
+                diff_value(&ctx, "ours", orow, grow, tol, &mut out);
+                diff_value(&ctx, "ratio", orow, grow, tol, &mut out);
+            }
+        }
+
+        // campaign cells, matched by (backend, rate, mitigation)
+        if let Some(cells) = gtable.get("cells").and_then(Json::as_arr) {
+            for gcell in cells {
+                let Some(key) = cell_key(gcell) else { continue };
+                let Some(ocell) = find_cell(otable, &key) else {
+                    out.problems
+                        .push(format!("table {id}: cell `{key}` missing from ours"));
+                    continue;
+                };
+                if let Some(obj) = gcell.as_obj() {
+                    for (field, v) in obj {
+                        if v.as_f64().is_some() && field.as_str() != "rate" {
+                            diff_value(
+                                &format!("table {id}, cell `{key}`"),
+                                field,
+                                ocell,
+                                gcell,
+                                tol,
+                                &mut out,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// File-based front-end for the CLI.
+pub fn diff_files(ours_path: &str, golden_path: &str, tol: f64) -> Result<DiffReport> {
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read `{path}`: {e}")))?;
+        Json::parse(&text)
+    };
+    Ok(diff_json(&read(ours_path)?, &read(golden_path)?, tol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::{set_to_json, PaperTable};
+
+    fn sample() -> Json {
+        set_to_json(&[
+            PaperTable::new("T1", "throughput", "kQ/s")
+                .row("fixed", 2343.75, Some(2340.0))
+                .row("float", 144.2, None),
+            PaperTable::new("H1", "headline", "×").row("speedup", 91.8, Some(95.0)),
+        ])
+    }
+
+    #[test]
+    fn identical_documents_diff_clean() {
+        let d = diff_json(&sample(), &sample(), 0.01);
+        assert!(d.ok(), "{:?}", d.problems);
+        // ours + ratio per paper row, ours + null-ratio skip per bare row
+        assert!(d.compared >= 4, "{}", d.compared);
+    }
+
+    #[test]
+    fn injected_ratio_regression_is_flagged() {
+        let golden = sample();
+        let drifted = set_to_json(&[
+            PaperTable::new("T1", "throughput", "kQ/s")
+                .row("fixed", 2343.75 * 1.2, Some(2340.0)) // +20% drift
+                .row("float", 144.2, None),
+            PaperTable::new("H1", "headline", "×").row("speedup", 91.8, Some(95.0)),
+        ]);
+        let d = diff_json(&drifted, &golden, 0.05);
+        assert!(!d.ok());
+        assert!(
+            d.problems.iter().any(|p| p.contains("T1") && p.contains("fixed")),
+            "{:?}",
+            d.problems
+        );
+        // within-tolerance drift passes
+        let ok = diff_json(&drifted, &golden, 0.25);
+        assert!(ok.ok(), "{:?}", ok.problems);
+    }
+
+    #[test]
+    fn missing_tables_and_rows_are_flagged() {
+        let golden = sample();
+        let partial = set_to_json(&[
+            PaperTable::new("T1", "throughput", "kQ/s").row("fixed", 2343.75, Some(2340.0)),
+        ]);
+        let d = diff_json(&partial, &golden, 0.05);
+        assert_eq!(
+            d.problems
+                .iter()
+                .filter(|p| p.contains("missing"))
+                .count(),
+            2, // row `float` + table H1
+            "{:?}",
+            d.problems
+        );
+        // extra ours-side tables are fine
+        let d2 = diff_json(&sample(), &partial, 0.05);
+        assert!(d2.ok(), "{:?}", d2.problems);
+    }
+
+    #[test]
+    fn losing_a_golden_numeric_field_is_flagged() {
+        // ours dropped the paper constant, so its ratio went null while the
+        // golden still carries one — that is a regression, not a skip
+        let golden =
+            set_to_json(&[PaperTable::new("T1", "t", "u").row("fixed", 2343.75, Some(2340.0))]);
+        let ours = set_to_json(&[PaperTable::new("T1", "t", "u").row("fixed", 2343.75, None)]);
+        let d = diff_json(&ours, &golden, 0.05);
+        assert!(!d.ok());
+        assert!(
+            d.problems.iter().any(|p| p.contains("ratio missing")),
+            "{:?}",
+            d.problems
+        );
+    }
+
+    #[test]
+    fn campaign_cells_are_matched_by_key() {
+        let mk = |degradation: f64| {
+            Json::obj(vec![
+                ("id", Json::Str("R2".into())),
+                (
+                    "cells",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("backend", Json::Str("cpu".into())),
+                        ("rate", Json::Num(1e-4)),
+                        ("mitigation", Json::Str("tmr".into())),
+                        ("degradation", Json::Num(degradation)),
+                    ])]),
+                ),
+            ])
+        };
+        let d = diff_json(&mk(0.02), &mk(0.02), 0.01);
+        assert!(d.ok());
+        assert_eq!(d.compared, 1);
+        let d = diff_json(&mk(5.0), &mk(0.02), 0.01);
+        assert!(!d.ok());
+    }
+
+    #[test]
+    fn single_table_documents_work_without_a_wrapper() {
+        let t = PaperTable::new("V1", "validate", "max |Δ|").row("cfg", 1e-6, None);
+        let d = diff_json(&t.to_json(), &t.to_json(), 0.01);
+        assert!(d.ok());
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn render_summarizes() {
+        let d = diff_json(&sample(), &sample(), 0.05);
+        let s = d.render(0.05);
+        assert!(s.contains("OK"), "{s}");
+    }
+}

@@ -1,6 +1,10 @@
-//! Table data model + plain-text rendering.
+//! Table data model + plain-text rendering + JSON serialization.
 
 use std::fmt;
+
+use crate::util::Json;
+
+use super::Report;
 
 /// One table row: our value vs the paper's.
 #[derive(Debug, Clone)]
@@ -59,6 +63,63 @@ impl PaperTable {
             .map(|r| if r >= 1.0 { r } else { 1.0 / r })
             .fold(None, |acc, r| Some(acc.map_or(r, |a: f64| a.max(r))))
     }
+
+    /// Machine-readable form (the [`Report`] contract).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::Str(r.label.clone())),
+                    ("ours", Json::Num(r.ours)),
+                    ("paper", r.paper.map(Json::Num).unwrap_or(Json::Null)),
+                    ("ratio", r.ratio().map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Str(self.id.into())),
+            ("title", Json::Str(self.title.clone())),
+            ("unit", Json::Str(self.unit.into())),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+            (
+                "worst_ratio",
+                self.worst_ratio().map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+impl Report for PaperTable {
+    fn id(&self) -> &str {
+        self.id
+    }
+
+    fn render(&self) -> String {
+        self.to_string()
+    }
+
+    fn to_json(&self) -> Json {
+        PaperTable::to_json(self)
+    }
+}
+
+/// Wrap a collection of tables into the one document shape `--json`
+/// writes and `qfpga diff` consumes.
+pub fn set_to_json(tables: &[PaperTable]) -> Json {
+    Json::obj(vec![
+        ("report", Json::Str("qfpga".into())),
+        ("version", Json::Num(1.0)),
+        (
+            "tables",
+            Json::Arr(tables.iter().map(PaperTable::to_json).collect()),
+        ),
+    ])
 }
 
 fn fmt_value(v: f64) -> String {
@@ -144,5 +205,34 @@ mod tests {
         let t = PaperTable::new("T2", "x", "u").row("only-ours", 1.0, None);
         assert!(t.to_string().contains("—"));
         assert_eq!(t.worst_ratio(), None);
+    }
+
+    #[test]
+    fn json_form_is_stable_and_roundtrips() {
+        let t = PaperTable::new("T9", "json test", "µs")
+            .row("a", 2.0, Some(1.0))
+            .row("b", 1.5, None)
+            .note("a note");
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.req_str("id").unwrap(), "T9");
+        let rows = parsed.req_arr("rows").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req_f64("ours").unwrap(), 2.0);
+        assert_eq!(rows[0].req_f64("ratio").unwrap(), 2.0);
+        assert!(rows[1].get("paper").unwrap().is_null());
+        assert_eq!(parsed.req_f64("worst_ratio").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn set_wraps_tables_with_ids() {
+        let a = PaperTable::new("T1", "a", "u").row("x", 1.0, None);
+        let b = PaperTable::new("T2", "b", "u").row("y", 2.0, None);
+        let doc = set_to_json(&[a, b]);
+        let tables = doc.req_arr("tables").unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].req_str("id").unwrap(), "T1");
+        assert_eq!(tables[1].req_str("id").unwrap(), "T2");
     }
 }

@@ -1,16 +1,42 @@
-//! Paper-table regeneration (Tables 1–8, headline claims, ablations).
+//! Paper-table regeneration (Tables 1–8, headline claims, ablations) and
+//! the typed report surface.
 //!
 //! Each generator returns a [`PaperTable`] carrying our value, the paper's
 //! published value and their ratio, so every claim is checkable at a
 //! glance. `qfpga report` prints them; `cargo bench --bench paper_tables`
 //! regenerates the measured rows; EXPERIMENTS.md records the outcome.
+//!
+//! Every report in the repo — paper tables, resilience campaigns, latency
+//! sweeps, experiment outcomes — implements the [`Report`] trait, so every
+//! `qfpga` subcommand can honor `--json FILE` with the same stable schema
+//! and `qfpga diff` ([`diff::diff_json`]) can gate paper-ratio drift in CI.
 
+pub mod diff;
 pub mod format;
 pub mod tables;
 
-pub use format::{PaperTable, TableRow};
+pub use diff::{diff_files, diff_json, DiffReport};
+pub use format::{set_to_json, PaperTable, TableRow};
 pub use tables::{
-    ablation_lut_rom, ablation_pipelining, ablation_wordlen, energy_table, headline,
+    ablation_lut_rom, ablation_pipelining, ablation_wordlen, all_tables, energy_table, headline,
     resilience_overhead, table1, table2, table_batch, table_completion, table_power,
     CompletionInputs,
 };
+
+use crate::util::Json;
+
+/// A renderable, serializable experiment artifact. `render()` is the
+/// human-facing text every subcommand prints; `to_json()` is the stable
+/// machine-readable twin `--json FILE` writes and `qfpga diff` compares.
+pub trait Report {
+    /// Stable identifier (e.g. `"T1"`, `"R2"`, `"S1"`), used by the diff
+    /// tool to pair tables across files.
+    fn id(&self) -> &str;
+
+    /// Plain-text rendering.
+    fn render(&self) -> String;
+
+    /// Machine-readable form. Must parse back ([`Json::parse`]) to the
+    /// same value — asserted by `tests/report_json.rs`.
+    fn to_json(&self) -> Json;
+}

@@ -2,6 +2,7 @@
 //! plus the ablations called out in DESIGN.md (X1–X3).
 
 use crate::config::{Arch, EnvKind, NetConfig, Precision};
+use crate::error::Result;
 use crate::fixed::FixedSpec;
 use crate::fpga::area::check_fit;
 use crate::fpga::power::{energy_per_update_uj, power_w, PowerCoeffs};
@@ -12,6 +13,33 @@ use super::format::PaperTable;
 
 fn model() -> (TimingModel, Virtex7) {
     (TimingModel::default(), Virtex7::default())
+}
+
+/// Every table `qfpga report --all` emits, in canonical order — the single
+/// source of truth shared by the CLI and the golden-report tests.
+/// `completion` supplies Tables 3–6 (the caller decides whether to measure
+/// the host CPU); `batch` sizes the B1 batched-datapath table.
+pub fn all_tables(
+    mut completion: impl FnMut(Arch, EnvKind) -> Result<PaperTable>,
+    batch: usize,
+) -> Result<Vec<PaperTable>> {
+    Ok(vec![
+        table1(),
+        table2(),
+        completion(Arch::Perceptron, EnvKind::Simple)?,
+        completion(Arch::Perceptron, EnvKind::Complex)?,
+        completion(Arch::Mlp, EnvKind::Simple)?,
+        completion(Arch::Mlp, EnvKind::Complex)?,
+        table_power(EnvKind::Simple),
+        table_power(EnvKind::Complex),
+        energy_table(),
+        table_batch(batch),
+        resilience_overhead(),
+        headline(),
+        ablation_pipelining(),
+        ablation_lut_rom(),
+        ablation_wordlen(),
+    ])
 }
 
 // ------------------------------------------------------------- Tables 1 & 2

@@ -1,0 +1,67 @@
+//! API-surface enforcement: no call site outside the backend module itself
+//! and the [`qfpga::experiment::BackendFactory`] constructs a concrete
+//! backend directly.
+//!
+//! External crates (these integration tests, the benches, the examples)
+//! are already fenced off at compile time — the constructors are
+//! `pub(crate)` — so this grep covers the remaining surface: the library
+//! source itself.
+
+use std::path::{Path, PathBuf};
+
+/// Files allowed to mention the concrete constructors: the defining module
+/// (including its own unit tests) and the factory.
+const ALLOWED: &[&str] = &["src/qlearn/backend.rs", "src/experiment/spec.rs"];
+
+const PATTERNS: &[&str] = &[
+    "CpuBackend::new(",
+    "CpuBackend::with_spec(",
+    "FpgaSimBackend::new(",
+    "FpgaSimBackend::with_spec(",
+    "FpgaSimBackend::with_timing(",
+    "XlaBackend::new(",
+];
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("read src dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn backends_are_constructed_only_through_the_factory() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = root.join("src");
+    let mut files = Vec::new();
+    rust_files(&src, &mut files);
+    assert!(files.len() > 30, "source walk looks wrong: {}", files.len());
+
+    let mut offenders = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap()
+            .to_string_lossy()
+            .replace('\\', "/");
+        if ALLOWED.iter().any(|a| rel == *a) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("read source file");
+        for pat in PATTERNS {
+            if text.contains(pat) {
+                offenders.push(format!("{rel}: {pat}"));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "backends must be built via experiment::BackendFactory, but found \
+         direct construction in:\n  {}",
+        offenders.join("\n  ")
+    );
+}

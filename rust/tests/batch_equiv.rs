@@ -9,13 +9,28 @@
 //! trajectory. XLA-backed checks live at the end and skip silently when
 //! `artifacts/` has not been built (run `make artifacts` for full coverage).
 
-use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::config::{NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
+use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
 use qfpga::fixed::FixedSpec;
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
+use qfpga::qlearn::backend::QBackend;
 use qfpga::runtime::Runtime;
 use qfpga::util::Rng;
+
+/// All backends are built through the factory — the only construction path
+/// since the experiment-API redesign.
+fn cpu(net: NetConfig, prec: Precision, params: QNetParams) -> AnyBackend {
+    BackendFactory::offline()
+        .build(&BackendSpec::cpu(net, prec), params)
+        .expect("cpu backend")
+}
+
+fn sim(net: NetConfig, prec: Precision, params: QNetParams) -> AnyBackend {
+    BackendFactory::offline()
+        .build(&BackendSpec::fpga_sim(net, prec), params)
+        .expect("fpga-sim backend")
+}
 
 /// Batch-vs-stepwise tolerance per precision: the fixed datapath is fully
 /// deterministic integer/fake-quant math, so the batch path must reproduce
@@ -68,8 +83,8 @@ fn cpu_batch_equals_stepwise_all_configs_and_precisions() {
     for net in NetConfig::all() {
         for prec in [Precision::Fixed, Precision::Float] {
             let (params, w) = seeded_stream(net, n, 1001);
-            let mut stepwise = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut batched = CpuBackend::new(net, prec, params, Hyper::default());
+            let mut stepwise = cpu(net, prec, params.clone());
+            let mut batched = cpu(net, prec, params);
 
             let want = stepwise_errs(&mut stepwise, &w, n);
             let got = batched.update_batch(&w.flat_batch(0, n)).unwrap();
@@ -93,8 +108,8 @@ fn fpga_sim_batch_equals_stepwise_all_configs_and_precisions() {
     for net in NetConfig::all() {
         for prec in [Precision::Fixed, Precision::Float] {
             let (params, w) = seeded_stream(net, n, 2002);
-            let mut stepwise = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut batched = FpgaSimBackend::new(net, prec, params, Hyper::default());
+            let mut stepwise = sim(net, prec, params.clone());
+            let mut batched = sim(net, prec, params);
 
             let want = stepwise_errs(&mut stepwise, &w, n);
             let got = batched.update_batch(&w.flat_batch(0, n)).unwrap();
@@ -126,8 +141,8 @@ fn cpu_and_fpga_sim_batch_paths_agree() {
     for net in NetConfig::all() {
         for prec in [Precision::Fixed, Precision::Float] {
             let (params, w) = seeded_stream(net, n, 3003);
-            let mut cpu = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut sim = FpgaSimBackend::new(net, prec, params, Hyper::default());
+            let mut cpu = cpu(net, prec, params.clone());
+            let mut sim = sim(net, prec, params);
 
             let e_cpu = cpu.update_batch(&w.flat_batch(0, n)).unwrap();
             let e_sim = sim.update_batch(&w.flat_batch(0, n)).unwrap();
@@ -169,8 +184,8 @@ fn chunked_flushes_equal_stepwise_stream() {
         for net in NetConfig::all() {
             for prec in [Precision::Fixed, Precision::Float] {
                 let (params, w) = seeded_stream(net, n, 4004);
-                let mut stepwise = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-                let mut batched = CpuBackend::new(net, prec, params, Hyper::default());
+                let mut stepwise = cpu(net, prec, params.clone());
+                let mut batched = cpu(net, prec, params);
 
                 let want = stepwise_errs(&mut stepwise, &w, n);
                 let mut got = Vec::new();
@@ -200,8 +215,8 @@ fn batch_of_one_equals_single_update() {
             let (params, w) = seeded_stream(net, 1, 5005);
             let step = net.a * net.d;
 
-            let mut cpu_a = CpuBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut cpu_b = CpuBackend::new(net, prec, params.clone(), Hyper::default());
+            let mut cpu_a = cpu(net, prec, params.clone());
+            let mut cpu_b = cpu(net, prec, params.clone());
             let e_single = cpu_a
                 .update(&w.sa_cur[..step], &w.sa_next[..step], w.actions[0], w.rewards[0])
                 .unwrap();
@@ -210,8 +225,8 @@ fn batch_of_one_equals_single_update() {
             assert!((e_batch[0] - e_single).abs() <= batch_tol(prec));
             assert!(cpu_b.params().max_abs_diff(&cpu_a.params()) <= batch_tol(prec));
 
-            let mut sim_a = FpgaSimBackend::new(net, prec, params.clone(), Hyper::default());
-            let mut sim_b = FpgaSimBackend::new(net, prec, params, Hyper::default());
+            let mut sim_a = sim(net, prec, params.clone());
+            let mut sim_b = sim(net, prec, params);
             let s_single = sim_a
                 .update(&w.sa_cur[..step], &w.sa_next[..step], w.actions[0], w.rewards[0])
                 .unwrap();
@@ -230,13 +245,13 @@ fn batch_path_is_deterministic() {
         let (params, w) = seeded_stream(net, n, 6006);
         let batch = w.flat_batch(0, n);
 
-        let mut a = CpuBackend::new(net, Precision::Fixed, params.clone(), Hyper::default());
-        let mut b = CpuBackend::new(net, Precision::Fixed, params, Hyper::default());
+        let mut a = cpu(net, Precision::Fixed, params.clone());
+        let mut b = cpu(net, Precision::Fixed, params);
         // dirty b's scratch with a warm-up flush; a2 gets a fresh scratch at
         // the same parameter state — both then apply the identical batch
         let half = w.flat_batch(0, n / 2);
         a.update_batch(&half).unwrap();
-        let mut a2 = CpuBackend::new(net, Precision::Fixed, a.params(), Hyper::default());
+        let mut a2 = cpu(net, Precision::Fixed, a.params());
         let e1 = a2.update_batch(&batch).unwrap();
         b.update_batch(&half).unwrap();
         let e2 = b.update_batch(&batch).unwrap();
@@ -261,13 +276,18 @@ fn runtime() -> Option<Runtime> {
 #[test]
 fn xla_batch_matches_cpu_stepwise() {
     let Some(rt) = runtime() else { return };
+    let factory = BackendFactory::with_runtime(rt);
     for net in NetConfig::all() {
         let prec = Precision::Float;
         let (params, _) = seeded_stream(net, 1, 7007);
-        let mut xla = XlaBackend::new(&rt, net, prec, params.clone()).expect("backend");
+        let mut xla = factory
+            .build(&BackendSpec::xla(net, prec), params.clone())
+            .expect("backend");
         let b = xla.preferred_batch();
         let w = Workload::synthetic(net, b, 7007 ^ 0x5EED);
-        let mut cpu = CpuBackend::new(net, prec, params, xla.hyper());
+        let mut cpu = factory
+            .build(&BackendSpec::cpu(net, prec).with_hyper(xla.hyper()), params)
+            .expect("cpu backend");
 
         let want = stepwise_errs(&mut cpu, &w, b);
         let got = xla.update_batch(&w.flat_batch(0, b)).unwrap();

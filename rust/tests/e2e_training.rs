@@ -6,7 +6,6 @@ use qfpga::config::{Arch, EnvKind, Precision};
 use qfpga::coordinator::{run_fleet, run_mission, MissionConfig};
 use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::qlearn::backend::BackendKind;
-use qfpga::runtime::Runtime;
 
 fn base_cfg() -> MissionConfig {
     MissionConfig {
@@ -28,7 +27,7 @@ fn have_artifacts() -> bool {
 #[test]
 fn cpu_mission_learns_on_simple_env() {
     let cfg = MissionConfig { precision: Precision::Float, ..base_cfg() };
-    let r = run_mission(&cfg, None).unwrap();
+    let r = run_mission(&cfg).unwrap();
     let (first, last) = r.train.first_last_mean_reward(25);
     assert!(
         last > first,
@@ -39,7 +38,7 @@ fn cpu_mission_learns_on_simple_env() {
 #[test]
 fn fpga_sim_mission_learns_and_accounts_cycles() {
     let cfg = MissionConfig { backend: BackendKind::FpgaSim, episodes: 60, ..base_cfg() };
-    let r = run_mission(&cfg, None).unwrap();
+    let r = run_mission(&cfg).unwrap();
     // cycle accounting: every update costs 13A+3 = 81 (fixed simple MLP),
     // every action-selection forward sweep costs 6A = 36
     let t = TimingModel::default();
@@ -61,14 +60,13 @@ fn xla_mission_runs_e2e() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let rt = Runtime::from_default_dir().unwrap();
     let cfg = MissionConfig {
         backend: BackendKind::Xla,
         episodes: 25,
         max_steps: 60,
         ..base_cfg()
     };
-    let r = run_mission(&cfg, Some(&rt)).unwrap();
+    let r = run_mission(&cfg).unwrap();
     assert_eq!(r.train.episodes.len(), 25);
     assert!(r.train.total_updates > 0);
 }
@@ -79,7 +77,6 @@ fn xla_microbatch_mission_matches_update_count() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let rt = Runtime::from_default_dir().unwrap();
     let cfg = MissionConfig {
         backend: BackendKind::Xla,
         microbatch: true,
@@ -87,7 +84,7 @@ fn xla_microbatch_mission_matches_update_count() {
         max_steps: 60,
         ..base_cfg()
     };
-    let r = run_mission(&cfg, Some(&rt)).unwrap();
+    let r = run_mission(&cfg).unwrap();
     // every environment step must eventually be learned from (flush at
     // episode end), so updates == steps even in microbatch mode
     assert_eq!(r.train.total_updates as usize, r.train.total_steps);
@@ -103,7 +100,7 @@ fn complex_env_mission_runs_on_all_local_backends() {
             max_steps: 80,
             ..base_cfg()
         };
-        let r = run_mission(&cfg, None).unwrap();
+        let r = run_mission(&cfg).unwrap();
         assert_eq!(r.train.episodes.len(), 6, "{backend:?}");
     }
 }
@@ -129,8 +126,8 @@ fn precision_comparison_fixed_tracks_float_learning() {
     // similar reward level to the float learner.
     let float_cfg = MissionConfig { precision: Precision::Float, ..base_cfg() };
     let fixed_cfg = MissionConfig { precision: Precision::Fixed, ..base_cfg() };
-    let rf = run_mission(&float_cfg, None).unwrap();
-    let rx = run_mission(&fixed_cfg, None).unwrap();
+    let rf = run_mission(&float_cfg).unwrap();
+    let rx = run_mission(&fixed_cfg).unwrap();
     let (_, last_f) = rf.train.first_last_mean_reward(25);
     let (_, last_x) = rx.train.first_last_mean_reward(25);
     assert!(

@@ -7,17 +7,27 @@
 //!   `FixedSpec` the repo uses (seeded-random property sweep, same style
 //!   as `tests/proptests.rs`).
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::sweep::{resilience, Workload};
 use qfpga::coordinator::{run_fleet, MissionConfig};
+use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
 use qfpga::fault::{
     FaultModel, FaultPlan, FaultStats, FaultyBackend, Mitigation, ProtectedStore, Secded,
     WordCodec,
 };
 use qfpga::fixed::{Fixed, FixedSpec};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{BackendKind, CpuBackend, FpgaSimBackend, QBackend};
+use qfpga::qlearn::backend::{BackendKind, QBackend};
 use qfpga::util::Rng;
+
+/// Backends come from the factory — the only construction path.
+fn build(kind: BackendKind, net: NetConfig, prec: Precision, seed: u64) -> AnyBackend {
+    let mut rng = Rng::seeded(seed);
+    let params = QNetParams::init(&net, 0.3, &mut rng);
+    BackendFactory::offline()
+        .build(&BackendSpec::new(kind, net, prec), params)
+        .expect("backend")
+}
 
 const CASES: usize = 200;
 
@@ -61,9 +71,7 @@ fn injected_weights_are_bit_identical_across_runs() {
     for prec in [Precision::Fixed, Precision::Float] {
         for mitigation in Mitigation::all() {
             let run_cpu = || {
-                let mut rng = Rng::seeded(9);
-                let params = QNetParams::init(&net, 0.3, &mut rng);
-                let inner = CpuBackend::new(net, prec, params, Hyper::default());
+                let inner = build(BackendKind::Cpu, net, prec, 9);
                 let mut b = FaultyBackend::new(
                     inner,
                     prec,
@@ -74,9 +82,7 @@ fn injected_weights_are_bit_identical_across_runs() {
                 (b.params(), b.stats())
             };
             let run_sim = || {
-                let mut rng = Rng::seeded(9);
-                let params = QNetParams::init(&net, 0.3, &mut rng);
-                let inner = FpgaSimBackend::new(net, prec, params, Hyper::default());
+                let inner = build(BackendKind::FpgaSim, net, prec, 9);
                 let mut b = FaultyBackend::new(
                     inner,
                     prec,
@@ -258,9 +264,7 @@ fn prop_secded_exhaustive_single_bit_positions() {
 fn seeds_matter_and_zero_rate_is_silent() {
     let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
     let make = |seed: u64, rate: f64| {
-        let mut rng = Rng::seeded(9);
-        let params = QNetParams::init(&net, 0.3, &mut rng);
-        let inner = CpuBackend::new(net, Precision::Fixed, params, Hyper::default());
+        let inner = build(BackendKind::Cpu, net, Precision::Fixed, 9);
         let mut b = FaultyBackend::new(
             inner,
             Precision::Fixed,

@@ -5,15 +5,16 @@
 //! cases to give the same practical coverage; every failure reports the
 //! case seed for deterministic reproduction.
 
-use qfpga::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::{run_fleet, MissionConfig};
 use qfpga::env::make_env;
+use qfpga::experiment::{BackendFactory, BackendSpec};
 use qfpga::fixed::{tensor, Acc, Fixed, FixedSpec};
 use qfpga::fpga::fifo::Fifo;
 use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::nn::activation::{LutSpec, SigmoidLut};
 use qfpga::nn::params::QNetParams;
-use qfpga::qlearn::backend::{BackendKind, CpuBackend, QBackend};
+use qfpga::qlearn::backend::{BackendKind, QBackend};
 use qfpga::qlearn::replay::{StoredTransition, TransitionBuffer};
 use qfpga::util::{Json, Rng};
 
@@ -146,8 +147,9 @@ fn prop_qupdate_direction_matches_error_sign() {
         let arch = if rng.chance(0.5) { Arch::Perceptron } else { Arch::Mlp };
         let net = NetConfig::new(arch, EnvKind::Simple);
         let params = QNetParams::init(&net, 0.3, &mut rng);
-        let mut backend =
-            CpuBackend::new(net, Precision::Float, params, Hyper::default());
+        let mut backend = BackendFactory::offline()
+            .build(&BackendSpec::cpu(net, Precision::Float), params)
+            .unwrap();
         let sa_cur = rng.vec_f32(net.a * net.d, -1.0, 1.0);
         let sa_next = rng.vec_f32(net.a * net.d, -1.0, 1.0);
         let action = rng.below(net.a);
@@ -198,6 +200,36 @@ fn prop_throughput_inverse_of_completion() {
             let us = t.completion_us(&net, prec, &dev);
             let kq = t.throughput_kq_s(&net, prec, &dev);
             assert!((kq * us / 1e3 - 1.0).abs() < 1e-9, "{net:?}/{prec:?}");
+        }
+    }
+}
+
+// --------------------------------------------------------- backend naming
+
+/// Parse↔print property: every backend kind round-trips through its
+/// canonical string, the `"fpga"` alias maps onto `"fpga-sim"`, and random
+/// junk never parses.
+#[test]
+fn prop_backend_kind_parse_print_roundtrip() {
+    for kind in BackendKind::all() {
+        assert_eq!(kind.as_str().parse::<BackendKind>().unwrap(), kind);
+    }
+    assert_eq!(
+        "fpga".parse::<BackendKind>().unwrap(),
+        BackendKind::FpgaSim
+    );
+    let mut rng = Rng::seeded(9020);
+    let alphabet: Vec<char> = "abcdefghijklmnopqrstuvwxyz-".chars().collect();
+    let known = ["xla", "cpu", "fpga-sim", "fpga"];
+    for _ in 0..200 {
+        let len = rng.range(1, 10);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        let parsed = s.parse::<BackendKind>();
+        if known.contains(&s.as_str()) {
+            // accepted spellings must round-trip back to a known kind
+            assert!(known.contains(&parsed.unwrap().as_str()));
+        } else {
+            assert!(parsed.is_err(), "junk `{s}` parsed");
         }
     }
 }

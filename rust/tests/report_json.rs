@@ -1,0 +1,176 @@
+//! Typed-JSON surface tests: every [`Report`] impl's `to_json` must be
+//! stable (parse ↔ print fixed point, required keys present), `qfpga diff`
+//! must flag injected ratio regressions, and the committed CI golden
+//! (`ci/golden_report.json`) must stay structurally in sync with the
+//! generated tables (its ids and row labels all exist in a fresh
+//! `report --all --no-measure` run — the *numeric* gate runs in CI via
+//! `qfpga diff`).
+
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
+use qfpga::coordinator::{MissionConfig, SweepReport};
+use qfpga::experiment::{BackendSpec, Experiment};
+use qfpga::fault::{run_campaign, CampaignSpec, Mitigation};
+use qfpga::qlearn::backend::BackendKind;
+use qfpga::report::{self, diff_json, set_to_json, PaperTable, Report};
+use qfpga::util::Json;
+
+/// Every paper table, generated without host measurement (model rows only,
+/// exactly what the CI `report-json` job produces) — the canonical list
+/// comes from `report::all_tables`, the same helper `report --all` uses.
+fn all_tables() -> Vec<PaperTable> {
+    report::all_tables(
+        |arch, env| {
+            Ok(report::table_completion(
+                arch,
+                env,
+                report::CompletionInputs { measured_cpu_us: None },
+            ))
+        },
+        16,
+    )
+    .expect("model tables never fail")
+}
+
+#[test]
+fn every_paper_table_json_is_a_parse_print_fixed_point() {
+    for t in all_tables() {
+        let j = Report::to_json(&t);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", t.id));
+        assert_eq!(parsed, j, "{}: reparse changed the value", t.id);
+        assert_eq!(parsed.req_str("id").unwrap(), Report::id(&t));
+        let rows = parsed.req_arr("rows").unwrap();
+        assert_eq!(rows.len(), t.rows.len(), "{}", t.id);
+        for (row, json_row) in t.rows.iter().zip(rows) {
+            assert_eq!(json_row.req_str("label").unwrap(), row.label, "{}", t.id);
+            assert_eq!(json_row.req_f64("ours").unwrap(), row.ours, "{}", t.id);
+        }
+    }
+}
+
+#[test]
+fn report_set_wraps_every_table_once() {
+    let tables = all_tables();
+    let doc = set_to_json(&tables);
+    let arr = doc.req_arr("tables").unwrap();
+    assert_eq!(arr.len(), tables.len());
+    for (t, j) in tables.iter().zip(arr) {
+        assert_eq!(j.req_str("id").unwrap(), t.id);
+    }
+    // the wrapper itself round-trips
+    assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+}
+
+#[test]
+fn diff_passes_on_identical_reports_and_flags_injected_regression() {
+    let doc = set_to_json(&all_tables());
+    let clean = diff_json(&doc, &doc, 0.01);
+    assert!(clean.ok(), "{:?}", clean.problems);
+    assert!(clean.compared > 50, "only {} values compared", clean.compared);
+
+    // inject a 3× paper-ratio regression into the headline table
+    let mut drifted_tables = all_tables();
+    for t in &mut drifted_tables {
+        if t.id == "H1" {
+            t.rows[0].ours *= 3.0;
+        }
+    }
+    let drifted = set_to_json(&drifted_tables);
+    let d = diff_json(&drifted, &doc, 0.05);
+    assert!(!d.ok(), "3× ratio drift not flagged");
+    assert!(
+        d.problems.iter().any(|p| p.contains("H1")),
+        "{:?}",
+        d.problems
+    );
+}
+
+#[test]
+fn golden_report_structurally_matches_generated_tables() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../ci/golden_report.json");
+    let text = std::fs::read_to_string(path).expect("ci/golden_report.json present");
+    let golden = Json::parse(&text).expect("golden parses");
+    let generated = set_to_json(&all_tables());
+    let gen_tables = generated.req_arr("tables").unwrap();
+
+    for gtable in golden.req_arr("tables").unwrap() {
+        let id = gtable.req_str("id").unwrap();
+        let table = gen_tables
+            .iter()
+            .find(|t| t.get("id").and_then(Json::as_str) == Some(id))
+            .unwrap_or_else(|| panic!("golden table {id} not generated"));
+        let labels: Vec<&str> = table
+            .req_arr("rows")
+            .unwrap()
+            .iter()
+            .map(|r| r.req_str("label").unwrap())
+            .collect();
+        for grow in gtable.req_arr("rows").unwrap() {
+            let label = grow.req_str("label").unwrap();
+            assert!(
+                labels.contains(&label),
+                "golden {id} row `{label}` missing from generated table (have {labels:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn campaign_json_diffs_against_itself_and_flags_degradation_drift() {
+    let spec = CampaignSpec {
+        base: MissionConfig {
+            episodes: 4,
+            max_steps: 25,
+            precision: Precision::Fixed,
+            seed: 5,
+            ..Default::default()
+        },
+        backends: vec![BackendKind::Cpu],
+        rates: vec![1e-4],
+        mitigations: vec![Mitigation::None],
+        rovers: 1,
+    };
+    let r = run_campaign(&spec).unwrap();
+    let j = Report::to_json(&r);
+    assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    let clean = diff_json(&j, &j, 0.01);
+    assert!(clean.ok(), "{:?}", clean.problems);
+    assert!(clean.compared > 0);
+
+    // rerun with a different seed: the cells still pair up by key, and the
+    // upset counters almost surely differ
+    let mut other_spec = spec;
+    other_spec.base.seed = 999;
+    let other = run_campaign(&other_spec).unwrap();
+    let d = diff_json(&Report::to_json(&other), &j, 1e-9);
+    assert!(d.compared > 0, "cells failed to pair: {:?}", d.problems);
+    assert!(
+        d.problems.iter().all(|p| !p.contains("missing")),
+        "cells failed to pair: {:?}",
+        d.problems
+    );
+}
+
+#[test]
+fn experiment_and_sweep_reports_serialize_stably() {
+    let exp = Experiment::train(BackendSpec::cpu(
+        NetConfig::new(Arch::Mlp, EnvKind::Simple),
+        Precision::Float,
+    ))
+    .episodes(3)
+    .max_steps(25)
+    .run()
+    .unwrap();
+    let j = exp.to_json();
+    let parsed = Json::parse(&j.to_string()).unwrap();
+    assert_eq!(parsed, j);
+    assert_eq!(parsed.req_str("id").unwrap(), "EXP");
+    assert_eq!(parsed.req_arr("reports").unwrap().len(), 1);
+    let rover = &parsed.req_arr("reports").unwrap()[0];
+    assert!(rover.req("train").unwrap().get("episodes").is_some());
+
+    let sweep = SweepReport { updates: 0, batch: 0, rows: vec![] };
+    let sj = sweep.to_json();
+    assert_eq!(Json::parse(&sj.to_string()).unwrap(), sj);
+    assert_eq!(sj.req_str("id").unwrap(), "S1");
+}
