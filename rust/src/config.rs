@@ -46,13 +46,28 @@ impl std::str::FromStr for Arch {
     }
 }
 
-/// Environment class (paper Section 5).
+/// Environment class: the paper's two benchmark gridworlds (Section 5)
+/// plus the mission scenario library (see SCENARIOS.md).
+///
+/// Canonical spellings are what [`EnvKind::as_str`] emits (`"simple"`,
+/// `"complex"`, `"crater"`, `"slip"`, `"energy"`); the long forms
+/// `"crater-field"`, `"slip-slope"` and `"energy-budget"` are accepted as
+/// input aliases but never printed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EnvKind {
-    /// D = 6 (4 state + 2 action dims), A = 6.
+    /// Paper benchmark: D = 6 (4 state + 2 action dims), A = 6.
     Simple,
-    /// D = 20, A = 40, |S| = 1800.
+    /// Paper benchmark: D = 20, A = 40, |S| = 1800.
     Complex,
+    /// Crater field: procedural crater bowls with impassable rims and
+    /// graded slope penalties. D = 10, A = 8.
+    Crater,
+    /// Slip-under-slope: seeded stochastic wheel slip proportional to the
+    /// local elevation gradient. D = 11, A = 8.
+    Slip,
+    /// Energy budget: battery state in the encoding, per-move/thermal
+    /// drain, recharge pads, episode ends on depletion. D = 12, A = 10.
+    Energy,
 }
 
 impl EnvKind {
@@ -60,7 +75,28 @@ impl EnvKind {
         match self {
             EnvKind::Simple => "simple",
             EnvKind::Complex => "complex",
+            EnvKind::Crater => "crater",
+            EnvKind::Slip => "slip",
+            EnvKind::Energy => "energy",
         }
+    }
+
+    /// Every environment kind (canonical enumeration order: the paper
+    /// benchmarks first, then the scenario library).
+    pub fn all() -> [EnvKind; 5] {
+        [
+            EnvKind::Simple,
+            EnvKind::Complex,
+            EnvKind::Crater,
+            EnvKind::Slip,
+            EnvKind::Energy,
+        ]
+    }
+
+    /// Whether this kind is one of the paper's two benchmark environments
+    /// — the only configurations with baked XLA artifacts.
+    pub fn is_paper(self) -> bool {
+        matches!(self, EnvKind::Simple | EnvKind::Complex)
     }
 }
 
@@ -70,7 +106,13 @@ impl std::str::FromStr for EnvKind {
         match s {
             "simple" => Ok(EnvKind::Simple),
             "complex" => Ok(EnvKind::Complex),
-            other => Err(Error::Config(format!("unknown env `{other}`"))),
+            "crater" | "crater-field" => Ok(EnvKind::Crater),
+            "slip" | "slip-slope" => Ok(EnvKind::Slip),
+            "energy" | "energy-budget" => Ok(EnvKind::Energy),
+            other => Err(Error::Config(format!(
+                "unknown env `{other}` (expected one of: simple, complex, crater, slip, \
+                 energy; aliases: crater-field, slip-slope, energy-budget)"
+            ))),
         }
     }
 }
@@ -122,6 +164,12 @@ impl NetConfig {
         let (d, a) = match env {
             EnvKind::Simple => (6, 6),
             EnvKind::Complex => (20, 40),
+            // scenario library (see SCENARIOS.md): 8 absolute-heading
+            // moves (+ sample/recharge in the energy environment), state
+            // features sized per environment
+            EnvKind::Crater => (10, 8),
+            EnvKind::Slip => (11, 8),
+            EnvKind::Energy => (12, 10),
         };
         let h = match arch {
             Arch::Perceptron => 0,
@@ -130,7 +178,8 @@ impl NetConfig {
         NetConfig { arch, env, d, h, a }
     }
 
-    /// All four paper configurations.
+    /// All four paper configurations (the paper-table grid; the full
+    /// mission grid including the scenario library is [`NetConfig::grid`]).
     pub fn all() -> [NetConfig; 4] {
         [
             NetConfig::new(Arch::Perceptron, EnvKind::Simple),
@@ -138,6 +187,21 @@ impl NetConfig {
             NetConfig::new(Arch::Mlp, EnvKind::Simple),
             NetConfig::new(Arch::Mlp, EnvKind::Complex),
         ]
+    }
+
+    /// The full mission grid: every architecture × every [`EnvKind`]
+    /// (paper benchmarks plus the scenario library), architecture-major.
+    /// Paper tables stay on [`NetConfig::all`]; sweeps and campaigns
+    /// enumerate this grid via
+    /// [`crate::experiment::BackendSpec::matrix`].
+    pub fn grid() -> Vec<NetConfig> {
+        let mut out = Vec::with_capacity(2 * EnvKind::all().len());
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            for env in EnvKind::all() {
+                out.push(NetConfig::new(arch, env));
+            }
+        }
+        out
     }
 
     /// Canonical name, matching the python configs and artifact files.
@@ -209,7 +273,7 @@ mod tests {
 
     #[test]
     fn names_roundtrip() {
-        for cfg in NetConfig::all() {
+        for cfg in NetConfig::grid() {
             let arch: Arch = cfg.arch.as_str().parse().unwrap();
             let env: EnvKind = cfg.env.as_str().parse().unwrap();
             assert_eq!(NetConfig::new(arch, env), cfg);
@@ -217,9 +281,42 @@ mod tests {
     }
 
     #[test]
+    fn scenario_dimensions() {
+        let crater = NetConfig::new(Arch::Mlp, EnvKind::Crater);
+        assert_eq!((crater.d, crater.a, crater.h), (10, 8, HIDDEN));
+        let slip = NetConfig::new(Arch::Perceptron, EnvKind::Slip);
+        assert_eq!((slip.d, slip.a, slip.h), (11, 8, 0));
+        let energy = NetConfig::new(Arch::Mlp, EnvKind::Energy);
+        assert_eq!((energy.d, energy.a), (12, 10));
+    }
+
+    #[test]
+    fn grid_covers_paper_configs_and_scenarios() {
+        let grid = NetConfig::grid();
+        assert_eq!(grid.len(), 2 * EnvKind::all().len());
+        for cfg in NetConfig::all() {
+            assert!(grid.contains(&cfg), "{} missing from grid", cfg.name());
+        }
+        for env in EnvKind::all() {
+            assert!(grid.iter().any(|c| c.env == env), "{} missing", env.as_str());
+        }
+    }
+
+    #[test]
+    fn env_kind_aliases_parse_to_canonical() {
+        assert_eq!("crater-field".parse::<EnvKind>().unwrap(), EnvKind::Crater);
+        assert_eq!("slip-slope".parse::<EnvKind>().unwrap(), EnvKind::Slip);
+        assert_eq!("energy-budget".parse::<EnvKind>().unwrap(), EnvKind::Energy);
+    }
+
+    #[test]
     fn parse_errors() {
         assert!("gpu".parse::<Arch>().is_err());
-        assert!("medium".parse::<EnvKind>().is_err());
         assert!("double".parse::<Precision>().is_err());
+        // the env error must list the valid spellings, not fail opaquely
+        let err = "medium".parse::<EnvKind>().unwrap_err().to_string();
+        for spelling in ["simple", "complex", "crater", "slip", "energy"] {
+            assert!(err.contains(spelling), "error must list `{spelling}`: {err}");
+        }
     }
 }

@@ -15,6 +15,9 @@
 //!
 //! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner
 //!   (optionally under SEU injection via [`crate::fault`]).
+//! * [`scenario`] — the mission scenario campaign: every
+//!   [`crate::config::EnvKind`] trained on cpu + fpga-sim, condensed into
+//!   table S1 (the `qfpga mission` subcommand).
 //! * [`scheduler`] — the fleet entry point (`run_fleet`).
 //! * [`telemetry`] — learning curves, aggregate statistics, JSON export.
 //! * [`sweep`] — fixed-workload latency measurement across backends (the
@@ -23,11 +26,13 @@
 //!   backend across the fleet).
 
 pub mod mission;
+pub mod scenario;
 pub mod scheduler;
 pub mod sweep;
 pub mod telemetry;
 
 pub use mission::{run_mission, MissionConfig, MissionReport};
+pub use scenario::{convergence_episode, scenario_table, ScenarioSpec};
 pub use scheduler::{run_fleet, FleetReport};
 pub use sweep::{
     measure_backend, measure_backend_batched, resilience, SweepReport, WorkloadTiming,

@@ -106,8 +106,10 @@ impl WorkloadTiming {
 
 /// A full latency sweep: one [`WorkloadTiming`] row per backend ×
 /// configuration × precision (plus the batched twins when measured).
-/// Implements [`Report`] so `qfpga sweep --json` writes the same typed
-/// surface as every other subcommand.
+/// Implements [`Report`] (id `L1`) so `qfpga sweep --json` writes the same
+/// typed surface as every other subcommand. (Until the scenario-library
+/// rework this report carried the id `S1`, now taken by the mission
+/// scenario table — see MIGRATION.md.)
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     /// Measured updates per row (the `--updates` knob).
@@ -130,7 +132,7 @@ impl SweepReport {
 
 impl Report for SweepReport {
     fn id(&self) -> &str {
-        "S1"
+        "L1"
     }
 
     fn render(&self) -> String {
@@ -146,7 +148,7 @@ impl Report for SweepReport {
 
     fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("id", Json::Str("S1".into())),
+            ("id", Json::Str("L1".into())),
             ("updates", Json::Num(self.updates as f64)),
             ("batch", Json::Num(self.batch as f64)),
             (
@@ -382,12 +384,12 @@ mod tests {
         let w = Workload::synthetic(net, 64, 3);
         let row = measure_backend(&mut backend, &w, 8).unwrap();
         let report = SweepReport { updates: 64, batch: 1, rows: vec![row] };
-        assert_eq!(report.id(), "S1");
+        assert_eq!(report.id(), "L1");
         let text = report.render();
         assert!(text.contains("kQ/s"));
         assert!(text.contains("cpu/"));
         let parsed = Json::parse(&report.to_json().to_string()).unwrap();
-        assert_eq!(parsed.req_str("id").unwrap(), "S1");
+        assert_eq!(parsed.req_str("id").unwrap(), "L1");
         assert_eq!(parsed.req_arr("rows").unwrap().len(), 1);
     }
 }

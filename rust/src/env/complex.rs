@@ -13,6 +13,7 @@ use super::encoding::ActionCode;
 use super::gridworld::{Grid, MoveOutcome, Pose};
 use super::terrain::Terrain;
 use super::traits::{Environment, StepResult};
+use super::SHAPING_GAMMA;
 
 const W: usize = 60;
 const H: usize = 30;
@@ -116,22 +117,12 @@ impl ComplexRoverEnv {
         }
     }
 
-    /// Potential φ(s) = −0.02 · distance-to-nearest-science (potential-based
-    /// shaping; see SimpleRoverEnv::potential).
+    /// Shaping potential φ(s) = −0.02 · distance-to-nearest-science
+    /// ([`Terrain::science_potential`]).
     fn potential(&self) -> f32 {
-        match self.grid.terrain.nearest_science(self.pose.x, self.pose.y) {
-            None => 0.0,
-            Some((tx, ty)) => {
-                let dx = tx as f32 - self.pose.x as f32;
-                let dy = ty as f32 - self.pose.y as f32;
-                -0.02 * (dx * dx + dy * dy).sqrt()
-            }
-        }
+        self.grid.terrain.science_potential(self.pose.x, self.pose.y, 0.02)
     }
 }
-
-/// Discount used for potential-based shaping (matches `Hyper::default`).
-const SHAPING_GAMMA: f32 = 0.9;
 
 impl Environment for ComplexRoverEnv {
     fn net_config(&self) -> NetConfig {

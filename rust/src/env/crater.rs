@@ -1,0 +1,356 @@
+//! Crater-field scenario (`EnvKind::Crater`): D = 10, A = 8.
+//!
+//! A 20×20 traverse across a procedurally cratered plain. Craters are
+//! stamped onto the value-noise base terrain ([`Terrain::stamp_crater`]):
+//! a graded parabolic bowl the rover *can* drive through — paying a
+//! slope-proportional penalty on every descent and climb — ringed by a
+//! raised ejecta rim that is **impassable** (bumping it costs reward but
+//! does not end the episode, unlike the lethal hazards of the paper
+//! environments). The mission is to reach a single science target on the
+//! far side of the field; the interesting policy question is *which bowls
+//! to cross and which to drive around*.
+//!
+//! Actions are the 8 absolute compass headings (move one cell). The
+//! tabular state is the cell id (|S| = 400); heading is not part of the
+//! state because moves are absolute.
+
+use crate::config::{Arch, EnvKind, NetConfig};
+use crate::util::Rng;
+
+use super::encoding::ActionCode;
+use super::gridworld::{Grid, MoveOutcome, Pose, HEADINGS};
+use super::terrain::Terrain;
+use super::traits::{Environment, StepResult};
+use super::SHAPING_GAMMA;
+
+const W: usize = 20;
+const H: usize = 20;
+const MAX_STEPS: usize = 250;
+const N_CRATERS: usize = 6;
+
+/// Crater-field navigation environment.
+pub struct CraterFieldEnv {
+    grid: Grid,
+    pristine: Terrain,
+    pose: Pose,
+    steps: usize,
+    done: bool,
+    episodes: u64,
+    seed: u64,
+    /// Cached 8 state dims, recomputed once per state change (encode_all
+    /// evaluates A = 8 action encodings per step).
+    state_feat: [f32; 8],
+}
+
+/// Base terrain + stamped craters + one goal cell, all from the seed.
+/// Every rim gets a carved entrance gap (a sealed bowl would be a dead
+/// zone under 8-connected movement), and the goal is placed only on a
+/// cell BFS-reachable from the start region, so every episode is solvable.
+fn cratered_terrain(seed: u64) -> Terrain {
+    let mut t = Terrain::generate(W, H, 0.0, 0, seed.wrapping_add(0xC8A7));
+    let mut rng = Rng::seeded(seed ^ 0x00C8_A7E8);
+    for _ in 0..N_CRATERS {
+        let cx = rng.range(2, W - 2);
+        let cy = rng.range(2, H - 2);
+        let radius = 1.5 + rng.f32() * 1.8;
+        let depth = 0.3 + rng.f32() * 0.3;
+        t.stamp_crater(cx, cy, radius, depth);
+        // carve an entrance: clear the rim cells around one azimuth
+        let gap = rng.f32() * std::f32::consts::TAU;
+        for offset in [-0.4f32, 0.0, 0.4] {
+            let gx = cx as f32 + radius * (gap + offset).cos();
+            let gy = cy as f32 + radius * (gap + offset).sin();
+            let (gx, gy) = (gx.round(), gy.round());
+            if gx >= 0.0 && gy >= 0.0 && (gx as usize) < W && (gy as usize) < H {
+                let i = t.idx(gx as usize, gy as usize);
+                t.hazard[i] = false;
+            }
+        }
+    }
+    // one science target on a cell reachable from the start region (the
+    // western third, where reset() places the rover)
+    let reachable = reachable_cells(&t);
+    let pick = |band: std::ops::Range<usize>| -> Vec<usize> {
+        (0..W * H)
+            .filter(|&i| reachable[i] && band.contains(&(i % W)))
+            .collect()
+    };
+    let mut candidates = pick(W / 2..W);
+    if candidates.is_empty() {
+        candidates = pick(1..W); // degenerate map: anywhere but column 0
+    }
+    let goal = candidates[rng.below(candidates.len())];
+    t.science[goal] = true;
+    t
+}
+
+/// 8-connected flood fill over non-hazard cells, seeded from every
+/// passable cell of the start region (x < W/3).
+fn reachable_cells(t: &Terrain) -> Vec<bool> {
+    let mut seen = vec![false; W * H];
+    let mut queue = std::collections::VecDeque::new();
+    for y in 0..H {
+        for x in 0..W / 3 {
+            if !t.is_hazard(x, y) {
+                seen[t.idx(x, y)] = true;
+                queue.push_back((x, y));
+            }
+        }
+    }
+    while let Some((x, y)) = queue.pop_front() {
+        for (dx, dy) in HEADINGS {
+            let nx = x as i32 + dx;
+            let ny = y as i32 + dy;
+            if nx < 0 || ny < 0 || nx >= W as i32 || ny >= H as i32 {
+                continue;
+            }
+            let (nx, ny) = (nx as usize, ny as usize);
+            if !t.is_hazard(nx, ny) && !seen[t.idx(nx, ny)] {
+                seen[t.idx(nx, ny)] = true;
+                queue.push_back((nx, ny));
+            }
+        }
+    }
+    seen
+}
+
+impl CraterFieldEnv {
+    pub fn new(seed: u64) -> Self {
+        let terrain = cratered_terrain(seed);
+        let mut env = CraterFieldEnv {
+            grid: Grid::new(terrain.clone()),
+            pristine: terrain,
+            pose: Pose::origin(),
+            steps: 0,
+            done: false,
+            episodes: 0,
+            seed,
+            state_feat: [0.0; 8],
+        };
+        env.reset();
+        env
+    }
+
+    pub fn pose(&self) -> Pose {
+        self.pose
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn refresh_state_features(&mut self) {
+        let t = &self.grid.terrain;
+        let mut f = [0f32; 8];
+        f[0] = self.pose.x as f32 / (W - 1) as f32 * 2.0 - 1.0;
+        f[1] = self.pose.y as f32 / (H - 1) as f32 * 2.0 - 1.0;
+        let (gs, gc, gd) = t.science_vector(self.pose.x, self.pose.y);
+        f[2] = gs;
+        f[3] = gc;
+        f[4] = gd;
+        let (gx, gy) = t.gradient(self.pose.x, self.pose.y);
+        f[5] = gx;
+        f[6] = gy;
+        f[7] = t.elevation_at(self.pose.x, self.pose.y) * 2.0 - 1.0;
+        self.state_feat = f;
+    }
+
+    /// Shaping potential φ(s) = −0.04 · distance-to-goal
+    /// ([`Terrain::science_potential`]).
+    fn potential(&self) -> f32 {
+        self.grid.terrain.science_potential(self.pose.x, self.pose.y, 0.04)
+    }
+}
+
+impl Environment for CraterFieldEnv {
+    fn net_config(&self) -> NetConfig {
+        NetConfig::new(Arch::Perceptron, EnvKind::Crater) // D/A only
+    }
+
+    fn state_space(&self) -> usize {
+        W * H // moves are absolute, so heading is not state
+    }
+
+    fn state_id(&self) -> usize {
+        self.grid.cell_id(&self.pose)
+    }
+
+    fn reset(&mut self) {
+        self.grid = Grid::new(self.pristine.clone());
+        let mut rng = Rng::seeded(self.seed ^ (self.episodes << 17));
+        loop {
+            let x = rng.below(W / 3);
+            let y = rng.below(H);
+            if !self.grid.terrain.is_hazard(x, y) && !self.grid.terrain.is_science(x, y) {
+                self.pose = Pose { x, y, heading: rng.below(8) };
+                break;
+            }
+        }
+        self.steps = 0;
+        self.done = false;
+        self.episodes += 1;
+        self.refresh_state_features();
+    }
+
+    fn encode_sa(&self, action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 10);
+        out[..8].copy_from_slice(&self.state_feat);
+        ActionCode::heading8(action, &mut out[8..10]);
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.done, "step() after terminal state");
+        assert!(action < 8, "crater action {action} out of range");
+        self.steps += 1;
+        let phi_before = self.potential();
+        let mut reward = -0.01; // time/step cost
+
+        let before = self.pose;
+        match self.grid.advance(&mut self.pose, action, 1) {
+            MoveOutcome::Moved => {
+                // graded slope penalties: descending into a bowl risks the
+                // rover (steeper = worse), climbing out costs drive energy
+                let e0 = self.grid.terrain.elevation_at(before.x, before.y);
+                let e1 = self.grid.terrain.elevation_at(self.pose.x, self.pose.y);
+                let drop = (e0 - e1).max(0.0);
+                let rise = (e1 - e0).max(0.0);
+                reward -= 0.4 * drop + 0.2 * rise;
+                if self.grid.terrain.is_science(self.pose.x, self.pose.y) {
+                    reward += 1.0; // mission success
+                    self.done = true;
+                }
+            }
+            MoveOutcome::Edge => reward -= 0.05,
+            MoveOutcome::Hazard => {
+                // crater rims are impassable, not lethal: bounce back
+                self.pose = before;
+                self.pose.heading = action;
+                reward -= 0.2;
+            }
+        }
+
+        // potential-based shaping (policy-invariant)
+        reward += SHAPING_GAMMA * self.potential() - phi_before;
+
+        if self.steps >= MAX_STEPS {
+            self.done = true;
+        }
+        self.refresh_state_features();
+        StepResult { reward, done: self.done }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn name(&self) -> &'static str {
+        "crater-field-20x20"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_config() {
+        let env = CraterFieldEnv::new(1);
+        assert_eq!(env.d(), 10);
+        assert_eq!(env.n_actions(), 8);
+        assert_eq!(env.state_space(), W * H);
+    }
+
+    #[test]
+    fn encode_bounded() {
+        let env = CraterFieldEnv::new(2);
+        let mut out = vec![0f32; 8 * 10];
+        env.encode_all(&mut out);
+        for v in out {
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = CraterFieldEnv::new(3);
+        let mut b = CraterFieldEnv::new(3);
+        for action in [2, 2, 0, 4, 6, 2, 1, 3] {
+            let ra = a.step(action);
+            let rb = b.step(action);
+            assert_eq!(ra, rb);
+            assert_eq!(a.state_id(), b.state_id());
+            if ra.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn rims_are_impassable_not_lethal() {
+        // walk the map; every rim bump must leave the rover on a passable
+        // cell with the episode still alive (unless it timed out)
+        let mut env = CraterFieldEnv::new(4);
+        for i in 0..200 {
+            if env.is_done() {
+                break;
+            }
+            env.step(i % 8);
+            let p = env.pose();
+            assert!(
+                !env.grid.terrain.is_hazard(p.x, p.y),
+                "rover ended up inside a rim cell at ({}, {})",
+                p.x,
+                p.y
+            );
+        }
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut env = CraterFieldEnv::new(5);
+        let mut steps = 0;
+        while !env.is_done() {
+            env.step(0); // keep driving north into the edge
+            steps += 1;
+            assert!(steps <= MAX_STEPS);
+        }
+    }
+
+    #[test]
+    fn terrain_has_craters_and_one_goal() {
+        let t = cratered_terrain(6);
+        assert!(t.hazard.iter().any(|&h| h), "no rim cells stamped");
+        assert_eq!(t.science_remaining(), 1);
+        // the goal is reachable terrain, not a rim cell
+        let (gx, gy) = t.nearest_science(0, 0).unwrap();
+        assert!(!t.is_hazard(gx, gy));
+    }
+
+    #[test]
+    fn goal_is_reachable_from_the_start_region_for_many_seeds() {
+        // the mission must be solvable: rims get entrance gaps and the
+        // goal is placed by flood fill, so no seed may seal it off
+        for seed in 0..40 {
+            let t = cratered_terrain(seed);
+            let reach = reachable_cells(&t);
+            let (gx, gy) = t.nearest_science(0, 0).unwrap();
+            assert!(reach[t.idx(gx, gy)], "seed {seed}: goal sealed off at ({gx}, {gy})");
+        }
+    }
+
+    #[test]
+    fn reset_varies_start_but_restores_map() {
+        let mut env = CraterFieldEnv::new(7);
+        let science_before = env.grid.terrain.science.clone();
+        for _ in 0..30 {
+            if env.is_done() {
+                break;
+            }
+            env.step(2);
+        }
+        env.reset();
+        assert!(!env.is_done());
+        assert_eq!(env.steps(), 0);
+        assert_eq!(env.grid.terrain.science, science_before);
+    }
+}

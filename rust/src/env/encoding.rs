@@ -46,6 +46,46 @@ impl ActionCode {
         out[3] = if Self::complex_is_sample(action) { 1.0 } else { -1.0 };
     }
 
+    /// Crater/slip scenarios: A = 8 absolute-heading moves -> 2 dims
+    /// (sin θ, cos θ) — the same smooth direction code the complex
+    /// environment uses, without the speed/sample axes.
+    pub fn heading8(action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 2);
+        assert!(action < 8, "heading action {action} out of range");
+        let theta = action as f32 * std::f32::consts::FRAC_PI_4;
+        out[0] = theta.sin();
+        out[1] = theta.cos();
+    }
+
+    /// Energy-budget scenario: A = 10 (8 heading moves + sample +
+    /// recharge) -> 3 dims: (sin θ, cos θ, task code). Moves carry task
+    /// code −1; sample is (0, 0, +1); recharge is (0, 0, +0.5) — distinct,
+    /// bounded, and smooth within the move family.
+    pub fn energy(action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 3);
+        match action {
+            0..=7 => {
+                let theta = action as f32 * std::f32::consts::FRAC_PI_4;
+                out[0] = theta.sin();
+                out[1] = theta.cos();
+                out[2] = -1.0;
+            }
+            8 => {
+                // sample
+                out[0] = 0.0;
+                out[1] = 0.0;
+                out[2] = 1.0;
+            }
+            9 => {
+                // recharge
+                out[0] = 0.0;
+                out[1] = 0.0;
+                out[2] = 0.5;
+            }
+            _ => panic!("energy action {action} out of range"),
+        }
+    }
+
     /// Decompose a complex action id into (heading 0..8, speed 0..5).
     #[inline]
     pub fn complex_parts(action: usize) -> (usize, usize) {
@@ -91,6 +131,45 @@ mod tests {
                 "duplicate code for {a}"
             );
         }
+    }
+
+    #[test]
+    fn heading8_codes_distinct_and_bounded() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..8 {
+            let mut out = [0f32; 2];
+            ActionCode::heading8(a, &mut out);
+            for v in out {
+                assert!((-1.0..=1.0).contains(&v), "action {a}: {v}");
+            }
+            assert!(
+                seen.insert(format!("{:?}", out.map(|v| (v * 1e4) as i32))),
+                "duplicate code for {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_codes_distinct_and_bounded() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..10 {
+            let mut out = [0f32; 3];
+            ActionCode::energy(a, &mut out);
+            for v in out {
+                assert!((-1.0..=1.0).contains(&v), "action {a}: {v}");
+            }
+            assert!(
+                seen.insert(format!("{:?}", out.map(|v| (v * 1e4) as i32))),
+                "duplicate code for {a}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn energy_action_out_of_range_panics() {
+        let mut out = [0f32; 3];
+        ActionCode::energy(10, &mut out);
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Energy-budget scenario (`EnvKind::Energy`): D = 12, A = 10.
+//!
+//! A 16×16 survey where the binding constraint is the **battery**, not the
+//! terrain: every step pays a thermal draw (survival heaters), every move
+//! pays a drive cost that grows with the slope climbed, and the episode
+//! ends — stranded, with a penalty — the moment the charge hits zero.
+//! Three recharge pads are scattered over the map; the `RECHARGE` action
+//! restores charge only while parked on one. Two science targets must be
+//! sampled to finish the mission, so a competent policy interleaves
+//! science approaches with detours to the pads — the MER/MSL energy-aware
+//! traverse problem in miniature.
+//!
+//! Battery is a *continuous* state dimension in the encoding (the NN
+//! backends see it directly); the tabular baseline, as in the paper's
+//! simple environment, discretizes state to the cell id (|S| = 256).
+
+use crate::config::{Arch, EnvKind, NetConfig};
+use crate::util::Rng;
+
+use super::encoding::ActionCode;
+use super::gridworld::{Grid, MoveOutcome, Pose};
+use super::terrain::Terrain;
+use super::traits::{Environment, StepResult};
+use super::SHAPING_GAMMA;
+
+const W: usize = 16;
+const H: usize = 16;
+const MAX_STEPS: usize = 300;
+const N_SCIENCE: usize = 2;
+const N_CHARGERS: usize = 3;
+/// Survival-heater draw, every step regardless of action.
+const THERMAL_DRAIN: f32 = 0.01;
+/// Base drive cost per move, plus a slope-proportional surcharge.
+const MOVE_DRAIN: f32 = 0.02;
+const SLOPE_DRAIN: f32 = 0.04;
+/// Charge restored per `RECHARGE` action on a pad.
+const RECHARGE_AMOUNT: f32 = 0.25;
+
+/// Action ids: 0..8 move along the compass heading, then the two tasks.
+pub const SAMPLE: usize = 8;
+pub const RECHARGE: usize = 9;
+
+/// Energy-budget survey environment.
+pub struct EnergyBudgetEnv {
+    grid: Grid,
+    pristine: Terrain,
+    /// Recharge pads — fixed map features, same across episodes.
+    chargers: Vec<(usize, usize)>,
+    pose: Pose,
+    battery: f32,
+    steps: usize,
+    collected: usize,
+    done: bool,
+    episodes: u64,
+    seed: u64,
+    /// Cached 9 state dims, recomputed once per state change.
+    state_feat: [f32; 9],
+}
+
+impl EnergyBudgetEnv {
+    pub fn new(seed: u64) -> Self {
+        let terrain = Terrain::generate(W, H, 0.06, N_SCIENCE, seed.wrapping_add(0xE6E7));
+        // pads on free cells, away from hazards and targets
+        let mut rng = Rng::seeded(seed ^ 0x00E6_E76B);
+        let mut chargers = Vec::with_capacity(N_CHARGERS);
+        while chargers.len() < N_CHARGERS {
+            let x = rng.below(W);
+            let y = rng.below(H);
+            if (x, y) != (0, 0)
+                && !terrain.is_hazard(x, y)
+                && !terrain.is_science(x, y)
+                && !chargers.contains(&(x, y))
+            {
+                chargers.push((x, y));
+            }
+        }
+        let mut env = EnergyBudgetEnv {
+            grid: Grid::new(terrain.clone()),
+            pristine: terrain,
+            chargers,
+            pose: Pose::origin(),
+            battery: 1.0,
+            steps: 0,
+            collected: 0,
+            done: false,
+            episodes: 0,
+            seed,
+            state_feat: [0.0; 9],
+        };
+        env.reset();
+        env
+    }
+
+    pub fn pose(&self) -> Pose {
+        self.pose
+    }
+
+    pub fn battery(&self) -> f32 {
+        self.battery
+    }
+
+    pub fn collected(&self) -> usize {
+        self.collected
+    }
+
+    pub fn on_charger(&self) -> bool {
+        self.chargers.contains(&(self.pose.x, self.pose.y))
+    }
+
+    /// Drain `amount`; terminal (stranded) when the charge hits zero.
+    fn spend(&mut self, amount: f32) -> bool {
+        self.battery = (self.battery - amount).max(0.0);
+        if self.battery == 0.0 {
+            self.done = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn nearest_charger_vector(&self) -> (f32, f32, f32) {
+        let mut best: Option<((usize, usize), f32)> = None;
+        for &(cx, cy) in &self.chargers {
+            let dx = cx as f32 - self.pose.x as f32;
+            let dy = cy as f32 - self.pose.y as f32;
+            let d2 = dx * dx + dy * dy;
+            if best.map_or(true, |(_, b)| d2 < b) {
+                best = Some(((cx, cy), d2));
+            }
+        }
+        match best {
+            None => (0.0, 0.0, -1.0),
+            Some(((cx, cy), _)) => self.grid.terrain.vector_to(self.pose.x, self.pose.y, cx, cy),
+        }
+    }
+
+    fn refresh_state_features(&mut self) {
+        let t = &self.grid.terrain;
+        let mut f = [0f32; 9];
+        f[0] = self.pose.x as f32 / (W - 1) as f32 * 2.0 - 1.0;
+        f[1] = self.pose.y as f32 / (H - 1) as f32 * 2.0 - 1.0;
+        f[2] = self.battery * 2.0 - 1.0;
+        let (gs, gc, gd) = t.science_vector(self.pose.x, self.pose.y);
+        f[3] = gs;
+        f[4] = gc;
+        f[5] = gd;
+        let (cs, cc, cd) = self.nearest_charger_vector();
+        f[6] = cs;
+        f[7] = cc;
+        f[8] = cd;
+        self.state_feat = f;
+    }
+
+    /// Shaping potential φ(s) = −0.04 · distance-to-nearest-science
+    /// ([`Terrain::science_potential`]).
+    fn potential(&self) -> f32 {
+        self.grid.terrain.science_potential(self.pose.x, self.pose.y, 0.04)
+    }
+}
+
+impl Environment for EnergyBudgetEnv {
+    fn net_config(&self) -> NetConfig {
+        NetConfig::new(Arch::Perceptron, EnvKind::Energy) // D/A only
+    }
+
+    fn state_space(&self) -> usize {
+        // battery is continuous and excluded from the tabular id — the NN
+        // backends see it through the encoding (as in the simple env)
+        W * H
+    }
+
+    fn state_id(&self) -> usize {
+        self.grid.cell_id(&self.pose)
+    }
+
+    fn reset(&mut self) {
+        self.grid = Grid::new(self.pristine.clone());
+        let mut rng = Rng::seeded(self.seed ^ (self.episodes << 19));
+        loop {
+            let x = rng.below(W);
+            let y = rng.below(H / 2);
+            if !self.grid.terrain.is_hazard(x, y) && !self.grid.terrain.is_science(x, y) {
+                self.pose = Pose { x, y, heading: rng.below(8) };
+                break;
+            }
+        }
+        self.battery = 1.0;
+        self.steps = 0;
+        self.collected = 0;
+        self.done = false;
+        self.episodes += 1;
+        self.refresh_state_features();
+    }
+
+    fn encode_sa(&self, action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 12);
+        out[..9].copy_from_slice(&self.state_feat);
+        ActionCode::energy(action, &mut out[9..12]);
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.done, "step() after terminal state");
+        assert!(action < 10, "energy action {action} out of range");
+        self.steps += 1;
+        let phi_before = self.potential();
+        let mut reward = -0.01; // time/step cost
+        let mut stranded = false;
+
+        match action {
+            0..=7 => {
+                let before = (self.pose.x, self.pose.y);
+                match self.grid.advance(&mut self.pose, action, 1) {
+                    MoveOutcome::Moved => {
+                        let slope =
+                            self.grid.terrain.slope(before, (self.pose.x, self.pose.y));
+                        stranded = self.spend(MOVE_DRAIN + SLOPE_DRAIN * slope);
+                    }
+                    MoveOutcome::Edge => {
+                        reward -= 0.05;
+                        stranded = self.spend(0.5 * MOVE_DRAIN); // wheels still spun
+                    }
+                    MoveOutcome::Hazard => {
+                        reward -= 1.0;
+                        self.done = true;
+                    }
+                }
+            }
+            SAMPLE => {
+                if self.grid.terrain.is_science(self.pose.x, self.pose.y) {
+                    self.grid.terrain.clear_science(self.pose.x, self.pose.y);
+                    self.collected += 1;
+                    reward += 1.0;
+                    if self.grid.terrain.science_remaining() == 0 {
+                        reward += 0.5; // full mission success
+                        self.done = true;
+                    }
+                } else {
+                    reward -= 0.1; // wasted sampling cycle
+                }
+                // a mission-completing sample cannot strand the rover —
+                // the traverse is over, so the drain no longer applies
+                if !self.done {
+                    stranded = self.spend(MOVE_DRAIN);
+                }
+            }
+            RECHARGE => {
+                if self.on_charger() {
+                    self.battery = (self.battery + RECHARGE_AMOUNT).min(1.0);
+                } else {
+                    reward -= 0.05; // nothing to plug into here
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // survival heaters draw every step, even while parked — unless the
+        // episode already ended (hazard, full mission, or stranded above)
+        if !self.done {
+            stranded = self.spend(THERMAL_DRAIN) || stranded;
+        }
+        if stranded {
+            reward -= 1.0; // dead rover, mission over
+        }
+
+        // potential-based shaping (policy-invariant)
+        reward += SHAPING_GAMMA * self.potential() - phi_before;
+
+        if self.steps >= MAX_STEPS {
+            self.done = true;
+        }
+        self.refresh_state_features();
+        StepResult { reward, done: self.done }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn name(&self) -> &'static str {
+        "energy-budget-16x16"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_config() {
+        let env = EnergyBudgetEnv::new(1);
+        assert_eq!(env.d(), 12);
+        assert_eq!(env.n_actions(), 10);
+        assert_eq!(env.state_space(), W * H);
+    }
+
+    #[test]
+    fn encode_bounded() {
+        let env = EnergyBudgetEnv::new(2);
+        let mut out = vec![0f32; 10 * 12];
+        env.encode_all(&mut out);
+        for v in out {
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = EnergyBudgetEnv::new(3);
+        let mut b = EnergyBudgetEnv::new(3);
+        for action in [2, 2, 9, 4, 8, 0, 6, 2] {
+            let ra = a.step(action);
+            let rb = b.step(action);
+            assert_eq!(ra, rb);
+            assert_eq!(a.state_id(), b.state_id());
+            assert_eq!(a.battery(), b.battery());
+            if ra.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn battery_depletion_ends_the_episode() {
+        // park and let the heaters drain the battery: 1.0 / 0.01 = 100
+        // steps of recharging off-pad (which costs only the thermal draw)
+        let mut env = EnergyBudgetEnv::new(4);
+        // drive to a non-charger state deterministically: if the start is a
+        // pad the first recharge is free but the thermal draw still applies
+        let mut steps = 0;
+        while !env.is_done() {
+            env.step(RECHARGE);
+            steps += 1;
+            assert!(steps <= MAX_STEPS, "depletion must terminate the episode");
+        }
+        if !env.on_charger() {
+            assert_eq!(env.battery(), 0.0);
+            assert!(steps <= 100, "thermal drain alone caps survival at 100 steps");
+        }
+    }
+
+    #[test]
+    fn recharge_works_only_on_pads() {
+        let mut env = EnergyBudgetEnv::new(5);
+        // move once to spend charge, then park off-pad and recharge
+        env.step(2);
+        if env.is_done() {
+            return; // unlucky hazard start — covered by other seeds
+        }
+        let b = env.battery();
+        if env.on_charger() {
+            env.step(RECHARGE);
+            assert!(env.battery() > b, "pad recharge must restore charge");
+        } else {
+            env.step(RECHARGE);
+            // off-pad: only the thermal draw applies
+            assert!((env.battery() - (b - THERMAL_DRAIN)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn charger_pads_are_deterministic_map_features() {
+        let a = EnergyBudgetEnv::new(6);
+        let b = EnergyBudgetEnv::new(6);
+        assert_eq!(a.chargers, b.chargers);
+        assert_eq!(a.chargers.len(), N_CHARGERS);
+        for &(x, y) in &a.chargers {
+            assert!(!a.grid.terrain.is_hazard(x, y));
+            assert!(!a.grid.terrain.is_science(x, y));
+        }
+    }
+
+    #[test]
+    fn mission_completing_sample_is_not_stranded() {
+        // regression: the final sample used to pay the stranded penalty
+        // when its drive drain emptied an almost-dead battery
+        let mut env = EnergyBudgetEnv::new(11);
+        // leave exactly one target, stand on it with a nearly dead battery
+        let (t1x, t1y) = env.grid.terrain.nearest_science(0, 0).unwrap();
+        env.grid.terrain.clear_science(t1x, t1y);
+        let (tx, ty) = env.grid.terrain.nearest_science(0, 0).unwrap();
+        env.pose.x = tx;
+        env.pose.y = ty;
+        env.battery = 0.015; // below MOVE_DRAIN: a charged sample would strand
+        let r = env.step(SAMPLE);
+        assert!(r.done, "full mission success must terminate");
+        assert!(
+            r.reward > 1.0,
+            "completing sample must not pay the stranded penalty: {}",
+            r.reward
+        );
+    }
+
+    #[test]
+    fn sampling_collects_targets() {
+        let mut env = EnergyBudgetEnv::new(7);
+        let (tx, ty) = env.grid.terrain.nearest_science(env.pose.x, env.pose.y).unwrap();
+        env.pose.x = tx;
+        env.pose.y = ty;
+        let r = env.step(SAMPLE);
+        assert!(r.reward > 0.5, "reward {}", r.reward);
+        assert_eq!(env.collected(), 1);
+    }
+
+    #[test]
+    fn reset_restores_battery_and_map() {
+        let mut env = EnergyBudgetEnv::new(8);
+        for _ in 0..40 {
+            if env.is_done() {
+                break;
+            }
+            env.step(2);
+        }
+        env.reset();
+        assert!(!env.is_done());
+        assert_eq!(env.battery(), 1.0);
+        assert_eq!(env.collected(), 0);
+        assert_eq!(env.grid.terrain.science_remaining(), N_SCIENCE);
+    }
+}

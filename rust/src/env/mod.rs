@@ -1,39 +1,91 @@
-//! Rover environments — the paper's “simple” and “complex” environments.
+//! Rover environments: the paper's two benchmarks plus the mission
+//! scenario library.
 //!
-//! The paper specifies only the interface dimensions (Section 5):
+//! The paper specifies only the interface dimensions of its two
+//! environments (Section 5): simple (D = 6, A = 6) and complex (D = 20,
+//! A = 40, |S| = 1800). Any environment with fixed D/A exercises the
+//! identical accelerator datapath, so this module grows the workload set
+//! the way the paper's introduction motivates — planetary rover autonomy —
+//! into five [`crate::config::EnvKind`]s (see SCENARIOS.md for maps,
+//! reward tables and runnable commands):
 //!
-//! * simple:  state+action vector D = 6 (4 state dims + 2 action dims),
-//!   A = 6 actions per state;
-//! * complex: D = 20, A = 40, |S| = 1800.
+//! | kind      | environment                                   | D  | A  | \|S\| |
+//! |-----------|-----------------------------------------------|----|----|------|
+//! | `simple`  | [`SimpleRoverEnv`] 8×8 ridge crossing         | 6  | 6  | 512  |
+//! | `complex` | [`ComplexRoverEnv`] 60×30 Mars yard           | 20 | 40 | 1800 |
+//! | `crater`  | [`CraterFieldEnv`] 20×20 crater field         | 10 | 8  | 400  |
+//! | `slip`    | [`SlipSlopeEnv`] 24×18 slip-under-slope       | 11 | 8  | 432  |
+//! | `energy`  | [`EnergyBudgetEnv`] 16×16 battery survey      | 12 | 10 | 256  |
 //!
-//! Any environment with those dimensions exercises the identical accelerator
-//! datapath, so we build what the paper's introduction motivates: planetary
-//! rover navigation with terrain hazards, science targets and an energy
-//! budget (MSL/AEGIS-style target seeking). [`SimpleRoverEnv`] is a small
-//! ridge-crossing gridworld; [`ComplexRoverEnv`] is a 60×30 Mars-yard
-//! traverse (60·30 = 1800 = |S|) with ray-cast terrain sensing and 8
-//! headings × 5 speed levels = 40 actions.
+//! # The `Environment` contract
+//!
+//! Every environment implements [`Environment`] and honors three
+//! invariants the rest of the stack is built on:
+//!
+//! 1. **Encode-all feed-forward sweep.** The learner asks for the
+//!    encodings of *all* A actions of the current state at once
+//!    ([`Environment::encode_all`], row-major (A, D)) — the input tile of
+//!    one feed-forward sweep through the accelerator — selects an action,
+//!    steps, and repeats (the paper's Section 2 state-flow).
+//! 2. **Q(18,12) range invariant.** Every encoding component lies in
+//!    [−1, 1], so state-action vectors are representable in the default
+//!    Q(18,12) fixed-point format without saturation. Enforced for all
+//!    kinds by the property tests in `tests/proptests.rs`.
+//! 3. **Seed determinism.** Trajectories are bit-identical functions of
+//!    the constructor seed and the action sequence — including the slip
+//!    environment's stochastic dynamics, which draw from an internal
+//!    seeded stream. Replays, fleet workers and CI campaigns depend on it.
+//!
+//! ```
+//! use qfpga::config::EnvKind;
+//! use qfpga::env::make_env;
+//!
+//! let mut env = make_env(EnvKind::Crater, 7);
+//! let mut tile = vec![0.0; env.n_actions() * env.d()];
+//! env.encode_all(&mut tile); // one feed-forward sweep's worth of input
+//! assert!(tile.iter().all(|v| (-1.0..=1.0).contains(v)));
+//! let result = env.step(2); // drive east
+//! assert!(result.reward.is_finite());
+//! ```
 
 mod complex;
+mod crater;
 mod encoding;
+mod energy;
 mod gridworld;
 mod simple;
+mod slip;
 mod terrain;
 mod traits;
 
 pub use complex::ComplexRoverEnv;
+pub use crater::CraterFieldEnv;
 pub use encoding::ActionCode;
+pub use energy::EnergyBudgetEnv;
 pub use gridworld::{Grid, Pose};
 pub use simple::SimpleRoverEnv;
+pub use slip::SlipSlopeEnv;
 pub use terrain::Terrain;
 pub use traits::{Environment, StepResult};
 
 use crate::config::EnvKind;
 
-/// Construct the paper environment of the given kind with a seed.
+/// Discount used for potential-based reward shaping (γ·φ(s′) − φ(s),
+/// Ng et al. 1999) in every environment. Matches the default γ of
+/// [`crate::config::Hyper`] so shaping stays policy-invariant under the
+/// default hyper-parameters; see [`Terrain::science_potential`] for the
+/// potential itself.
+pub const SHAPING_GAMMA: f32 = 0.9;
+
+/// Construct the environment of the given kind with a seed. The seed fully
+/// determines the terrain, the start states and (for the slip environment)
+/// the stochastic dynamics.
 pub fn make_env(kind: EnvKind, seed: u64) -> Box<dyn Environment> {
     match kind {
         EnvKind::Simple => Box::new(SimpleRoverEnv::new(seed)),
         EnvKind::Complex => Box::new(ComplexRoverEnv::new(seed)),
+        EnvKind::Crater => Box::new(CraterFieldEnv::new(seed)),
+        EnvKind::Slip => Box::new(SlipSlopeEnv::new(seed)),
+        EnvKind::Energy => Box::new(EnergyBudgetEnv::new(seed)),
     }
 }

@@ -11,6 +11,7 @@ use super::encoding::ActionCode;
 use super::gridworld::{Grid, MoveOutcome, Pose};
 use super::terrain::Terrain;
 use super::traits::{Environment, StepResult};
+use super::SHAPING_GAMMA;
 
 const W: usize = 8;
 const H: usize = 8;
@@ -75,25 +76,14 @@ impl SimpleRoverEnv {
         }
     }
 
-    /// Potential φ(s) = −0.05 · distance-to-nearest-science. Rewards are
-    /// shaped with γ·φ(s′) − φ(s) (potential-based shaping, Ng et al. 1999),
-    /// which preserves the optimal policy while giving the online learner a
-    /// dense progress signal — necessary for a single tiny MLP to make
-    /// visible progress in a few hundred episodes.
+    /// Shaping potential φ(s) = −0.05 · distance-to-nearest-science
+    /// ([`Terrain::science_potential`]) — a dense progress signal,
+    /// necessary for a single tiny MLP to make visible progress in a few
+    /// hundred episodes.
     fn potential(&self) -> f32 {
-        match self.grid.terrain.nearest_science(self.pose.x, self.pose.y) {
-            None => 0.0,
-            Some((tx, ty)) => {
-                let dx = tx as f32 - self.pose.x as f32;
-                let dy = ty as f32 - self.pose.y as f32;
-                -0.05 * (dx * dx + dy * dy).sqrt()
-            }
-        }
+        self.grid.terrain.science_potential(self.pose.x, self.pose.y, 0.05)
     }
 }
-
-/// Discount used for potential-based shaping (matches `Hyper::default`).
-const SHAPING_GAMMA: f32 = 0.9;
 
 impl Environment for SimpleRoverEnv {
     fn net_config(&self) -> NetConfig {

@@ -1,0 +1,361 @@
+//! Slip-under-slope scenario (`EnvKind::Slip`): D = 11, A = 8.
+//!
+//! A 24×18 traverse over rough, sloped ground where commanded moves can
+//! **fail**: the probability that the wheels slip is proportional to the
+//! elevation gradient along the commanded move. A slipped move either
+//! leaves the rover in place (wheels spinning) or drifts it one cell
+//! toward the locally steepest descent — the classic "sliding down the
+//! dune" failure MER Opportunity hit at Purgatory ripple. All slip draws
+//! come from an internal RNG reseeded from the constructor seed on every
+//! reset, so trajectories are **stochastic in-episode but bit-identical
+//! across replays** of the same seed and action sequence (the
+//! seed-determinism contract every environment honors; see
+//! `tests/proptests.rs`).
+//!
+//! Actions are the 8 absolute compass headings. The state encodes position,
+//! local terrain (elevation, gradient, slip risk) and the goal vector; the
+//! tabular state is the cell id (|S| = 432).
+
+use crate::config::{Arch, EnvKind, NetConfig};
+use crate::util::Rng;
+
+use super::encoding::ActionCode;
+use super::gridworld::{Grid, MoveOutcome, Pose, HEADINGS};
+use super::terrain::Terrain;
+use super::traits::{Environment, StepResult};
+use super::SHAPING_GAMMA;
+
+const W: usize = 24;
+const H: usize = 18;
+const MAX_STEPS: usize = 300;
+/// Slip probability per unit of |elevation gradient| along the move.
+const SLIP_GAIN: f32 = 4.0;
+/// Hard cap so even cliff faces keep some traction.
+const SLIP_MAX: f32 = 0.8;
+
+/// Slip-under-slope navigation environment.
+pub struct SlipSlopeEnv {
+    grid: Grid,
+    pristine: Terrain,
+    pose: Pose,
+    steps: usize,
+    slips: usize,
+    done: bool,
+    episodes: u64,
+    seed: u64,
+    /// Slip-draw stream — reseeded from `seed` and the episode counter on
+    /// every reset, so replays are bit-identical.
+    rng: Rng,
+    /// Cached 9 state dims, recomputed once per state change.
+    state_feat: [f32; 9],
+}
+
+impl SlipSlopeEnv {
+    pub fn new(seed: u64) -> Self {
+        let terrain = Terrain::generate(W, H, 0.05, 1, seed.wrapping_add(0x5119));
+        let mut env = SlipSlopeEnv {
+            grid: Grid::new(terrain.clone()),
+            pristine: terrain,
+            pose: Pose::origin(),
+            steps: 0,
+            slips: 0,
+            done: false,
+            episodes: 0,
+            seed,
+            rng: Rng::seeded(seed),
+            state_feat: [0.0; 9],
+        };
+        env.reset();
+        env
+    }
+
+    pub fn pose(&self) -> Pose {
+        self.pose
+    }
+
+    /// Slip events so far this episode.
+    pub fn slips(&self) -> usize {
+        self.slips
+    }
+
+    /// Slip probability of commanding `heading` from the current cell:
+    /// proportional to the elevation change to the target cell, capped at
+    /// [`SLIP_MAX`]. Zero when the move would leave the map.
+    fn slip_probability(&self, heading: usize) -> f32 {
+        let (dx, dy) = HEADINGS[heading % 8];
+        let nx = self.pose.x as i32 + dx;
+        let ny = self.pose.y as i32 + dy;
+        if nx < 0 || ny < 0 || nx >= W as i32 || ny >= H as i32 {
+            return 0.0;
+        }
+        let grade = (self.grid.terrain.elevation_at(nx as usize, ny as usize)
+            - self.grid.terrain.elevation_at(self.pose.x, self.pose.y))
+        .abs();
+        (SLIP_GAIN * grade).min(SLIP_MAX)
+    }
+
+    /// Worst-case slip risk over all 8 headings from the current cell —
+    /// the "how treacherous is this ground" state feature.
+    fn local_slip_risk(&self) -> f32 {
+        (0..8)
+            .map(|h| self.slip_probability(h))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Steepest-descent passable neighbor of the current cell (drift
+    /// target), if any neighbor is strictly lower.
+    fn downhill_neighbor(&self) -> Option<(usize, usize)> {
+        let here = self.grid.terrain.elevation_at(self.pose.x, self.pose.y);
+        let mut best: Option<((usize, usize), f32)> = None;
+        for (dx, dy) in HEADINGS {
+            let nx = self.pose.x as i32 + dx;
+            let ny = self.pose.y as i32 + dy;
+            if nx < 0 || ny < 0 || nx >= W as i32 || ny >= H as i32 {
+                continue;
+            }
+            let (nx, ny) = (nx as usize, ny as usize);
+            if self.grid.terrain.is_hazard(nx, ny) {
+                continue;
+            }
+            let e = self.grid.terrain.elevation_at(nx, ny);
+            if e < here && best.map_or(true, |(_, b)| e < b) {
+                best = Some(((nx, ny), e));
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+
+    fn refresh_state_features(&mut self) {
+        let t = &self.grid.terrain;
+        let mut f = [0f32; 9];
+        f[0] = self.pose.x as f32 / (W - 1) as f32 * 2.0 - 1.0;
+        f[1] = self.pose.y as f32 / (H - 1) as f32 * 2.0 - 1.0;
+        f[2] = t.elevation_at(self.pose.x, self.pose.y) * 2.0 - 1.0;
+        let (gx, gy) = t.gradient(self.pose.x, self.pose.y);
+        f[3] = gx;
+        f[4] = gy;
+        f[5] = self.local_slip_risk() * 2.0 - 1.0;
+        let (gs, gc, gd) = t.science_vector(self.pose.x, self.pose.y);
+        f[6] = gs;
+        f[7] = gc;
+        f[8] = gd;
+        self.state_feat = f;
+    }
+
+    /// Shaping potential φ(s) = −0.04 · distance-to-goal
+    /// ([`Terrain::science_potential`]).
+    fn potential(&self) -> f32 {
+        self.grid.terrain.science_potential(self.pose.x, self.pose.y, 0.04)
+    }
+
+    /// Collect the goal if the rover is standing on it (moves *and* drifts
+    /// can land on the target).
+    fn check_goal(&mut self, reward: &mut f32) {
+        if self.grid.terrain.is_science(self.pose.x, self.pose.y) {
+            *reward += 1.0; // mission success
+            self.done = true;
+        }
+    }
+}
+
+impl Environment for SlipSlopeEnv {
+    fn net_config(&self) -> NetConfig {
+        NetConfig::new(Arch::Perceptron, EnvKind::Slip) // D/A only
+    }
+
+    fn state_space(&self) -> usize {
+        W * H
+    }
+
+    fn state_id(&self) -> usize {
+        self.grid.cell_id(&self.pose)
+    }
+
+    fn reset(&mut self) {
+        self.grid = Grid::new(self.pristine.clone());
+        let mut rng = Rng::seeded(self.seed ^ (self.episodes << 23));
+        loop {
+            let x = rng.below(W / 3);
+            let y = rng.below(H);
+            if !self.grid.terrain.is_hazard(x, y) && !self.grid.terrain.is_science(x, y) {
+                self.pose = Pose { x, y, heading: rng.below(8) };
+                break;
+            }
+        }
+        // independent, episode-salted slip stream — deterministic replays
+        self.rng = Rng::seeded(self.seed ^ (self.episodes << 29) ^ 0x0511_9B0B);
+        self.steps = 0;
+        self.slips = 0;
+        self.done = false;
+        self.episodes += 1;
+        self.refresh_state_features();
+    }
+
+    fn encode_sa(&self, action: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 11);
+        out[..9].copy_from_slice(&self.state_feat);
+        ActionCode::heading8(action, &mut out[9..11]);
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.done, "step() after terminal state");
+        assert!(action < 8, "slip action {action} out of range");
+        self.steps += 1;
+        let phi_before = self.potential();
+        let mut reward = -0.01; // time/step cost
+
+        let (dx, dy) = HEADINGS[action];
+        let nx = self.pose.x as i32 + dx;
+        let ny = self.pose.y as i32 + dy;
+        if nx < 0 || ny < 0 || nx >= W as i32 || ny >= H as i32 {
+            // no traction question at the map edge — the move just fails
+            self.pose.heading = action;
+            reward -= 0.05;
+        } else {
+            let p_slip = self.slip_probability(action);
+            if self.rng.chance(p_slip as f64) {
+                // wheels slip: wasted drive energy, and a 50/50 chance the
+                // rover drifts one cell toward the steepest descent
+                self.slips += 1;
+                self.pose.heading = action;
+                reward -= 0.05;
+                if self.rng.chance(0.5) {
+                    if let Some((tx, ty)) = self.downhill_neighbor() {
+                        self.pose.x = tx;
+                        self.pose.y = ty;
+                        self.check_goal(&mut reward);
+                    }
+                }
+            } else {
+                match self.grid.advance(&mut self.pose, action, 1) {
+                    MoveOutcome::Moved => self.check_goal(&mut reward),
+                    MoveOutcome::Edge => reward -= 0.05, // unreachable: bounds pre-checked
+                    MoveOutcome::Hazard => {
+                        reward -= 1.0; // sand trap
+                        self.done = true;
+                    }
+                }
+            }
+        }
+
+        // potential-based shaping (policy-invariant)
+        reward += SHAPING_GAMMA * self.potential() - phi_before;
+
+        if self.steps >= MAX_STEPS {
+            self.done = true;
+        }
+        self.refresh_state_features();
+        StepResult { reward, done: self.done }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn name(&self) -> &'static str {
+        "slip-slope-24x18"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_config() {
+        let env = SlipSlopeEnv::new(1);
+        assert_eq!(env.d(), 11);
+        assert_eq!(env.n_actions(), 8);
+        assert_eq!(env.state_space(), W * H);
+    }
+
+    #[test]
+    fn encode_bounded() {
+        let env = SlipSlopeEnv::new(2);
+        let mut out = vec![0f32; 8 * 11];
+        env.encode_all(&mut out);
+        for v in out {
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn stochastic_slip_replays_bit_identically() {
+        // the whole point of the seeded slip stream: same seed + same
+        // actions ⇒ identical rewards, slips and trajectory
+        let mut a = SlipSlopeEnv::new(3);
+        let mut b = SlipSlopeEnv::new(3);
+        let mut action_rng = Rng::seeded(99);
+        for _ in 0..150 {
+            if a.is_done() {
+                a.reset();
+                b.reset();
+            }
+            let action = action_rng.below(8);
+            let ra = a.step(action);
+            let rb = b.step(action);
+            assert_eq!(ra, rb);
+            assert_eq!(a.state_id(), b.state_id());
+            assert_eq!(a.slips(), b.slips());
+        }
+    }
+
+    #[test]
+    fn slips_actually_happen_on_slopes() {
+        // random walk long enough to cross sloped ground: the slip counter
+        // must advance for at least one seed
+        let mut total = 0usize;
+        for seed in 0..5 {
+            let mut env = SlipSlopeEnv::new(seed);
+            let mut rng = Rng::seeded(seed ^ 0xAB);
+            for _ in 0..250 {
+                if env.is_done() {
+                    env.reset();
+                }
+                env.step(rng.below(8));
+                total += env.slips();
+            }
+        }
+        assert!(total > 0, "no slip ever occurred across 5 seeds");
+    }
+
+    #[test]
+    fn slip_probability_bounded_and_zero_off_map() {
+        let env = SlipSlopeEnv::new(6);
+        for h in 0..8 {
+            let p = env.slip_probability(h);
+            assert!((0.0..=SLIP_MAX).contains(&p), "{p}");
+        }
+        let mut corner = SlipSlopeEnv::new(7);
+        corner.pose = Pose { x: 0, y: 0, heading: 0 };
+        assert_eq!(corner.slip_probability(0), 0.0); // north off-map
+        assert_eq!(corner.slip_probability(6), 0.0); // west off-map
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut env = SlipSlopeEnv::new(8);
+        let mut steps = 0;
+        while !env.is_done() {
+            env.step(4); // drive south until edge/timeout/goal/hazard
+            steps += 1;
+            assert!(steps <= MAX_STEPS);
+        }
+    }
+
+    #[test]
+    fn drift_never_enters_hazard() {
+        let mut env = SlipSlopeEnv::new(9);
+        let mut rng = Rng::seeded(11);
+        for _ in 0..300 {
+            if env.is_done() {
+                env.reset();
+            }
+            let r = env.step(rng.below(8));
+            let p = env.pose();
+            if !r.done {
+                assert!(!env.grid.terrain.is_hazard(p.x, p.y));
+            }
+        }
+    }
+}

@@ -120,6 +120,83 @@ impl Terrain {
         (self.elevation_at(to.0, to.1) - self.elevation_at(from.0, from.1)).abs()
     }
 
+    /// Stamp a crater: a parabolic bowl of `depth` depressed inside
+    /// `radius`, ringed by a raised, **impassable** rim (the rim cells are
+    /// marked hazard). Elevation stays clamped to [0, 1]. Used by the
+    /// crater-field scenario (see SCENARIOS.md).
+    pub fn stamp_crater(&mut self, cx: usize, cy: usize, radius: f32, depth: f32) {
+        assert!(radius > 0.5, "crater radius {radius} too small for a rim");
+        for y in 0..self.height {
+            for x in 0..self.width {
+                let dx = x as f32 - cx as f32;
+                let dy = y as f32 - cy as f32;
+                let dist = (dx * dx + dy * dy).sqrt();
+                let i = y * self.width + x;
+                if dist <= radius - 0.5 {
+                    // graded bowl, deepest at the centre
+                    let bowl = depth * (1.0 - (dist / radius) * (dist / radius));
+                    self.elevation[i] = (self.elevation[i] - bowl).max(0.0);
+                } else if dist <= radius + 0.5 {
+                    // ejecta rim: raised and impassable
+                    self.elevation[i] = (self.elevation[i] + 0.5 * depth).min(1.0);
+                    self.hazard[i] = true;
+                }
+            }
+        }
+    }
+
+    /// Central-difference elevation gradient at a cell, clamped at the map
+    /// borders. Each component is bounded by [−1, 1] since elevation is.
+    pub fn gradient(&self, x: usize, y: usize) -> (f32, f32) {
+        let ex = |x: usize, y: usize| self.elevation_at(x, y);
+        let gx = ex((x + 1).min(self.width - 1), y) - ex(x.saturating_sub(1), y);
+        let gy = ex(x, (y + 1).min(self.height - 1)) - ex(x, y.saturating_sub(1));
+        (gx, gy)
+    }
+
+    /// Shaping potential φ(x, y) = −`coeff` · euclidean distance to the
+    /// nearest remaining science target (0 when none remain). Every
+    /// environment shapes its reward with γ·φ(s′) − φ(s) (potential-based
+    /// shaping, Ng et al. 1999, policy-invariant) using
+    /// [`crate::env::SHAPING_GAMMA`]; only the distance coefficient
+    /// differs per environment.
+    pub fn science_potential(&self, x: usize, y: usize, coeff: f32) -> f32 {
+        match self.nearest_science(x, y) {
+            None => 0.0,
+            Some((tx, ty)) => {
+                let dx = tx as f32 - x as f32;
+                let dy = ty as f32 - y as f32;
+                -coeff * (dx * dx + dy * dy).sqrt()
+            }
+        }
+    }
+
+    /// (sin bearing, cos bearing, distance scaled to [−1, 1]) from `(x, y)`
+    /// toward the nearest remaining science target; `(0, 0, −1)` when none
+    /// remain or the rover is on the target.
+    pub fn science_vector(&self, x: usize, y: usize) -> (f32, f32, f32) {
+        match self.nearest_science(x, y) {
+            None => (0.0, 0.0, -1.0),
+            Some((tx, ty)) => self.vector_to(x, y, tx, ty),
+        }
+    }
+
+    /// (sin bearing, cos bearing, distance scaled to [−1, 1]) from `(x, y)`
+    /// to an arbitrary cell; the bearing degenerates to `(0, 0)` when the
+    /// two cells coincide.
+    pub fn vector_to(&self, x: usize, y: usize, tx: usize, ty: usize) -> (f32, f32, f32) {
+        let dx = tx as f32 - x as f32;
+        let dy = ty as f32 - y as f32;
+        let dist = (dx * dx + dy * dy).sqrt();
+        let max_d = ((self.width * self.width + self.height * self.height) as f32).sqrt();
+        let scaled = 2.0 * (dist / max_d) - 1.0;
+        if dist < 0.5 {
+            (0.0, 0.0, scaled)
+        } else {
+            (dx / dist, dy / dist, scaled)
+        }
+    }
+
     /// Nearest science target to `(x, y)` (euclidean), if any remain.
     pub fn nearest_science(&self, x: usize, y: usize) -> Option<(usize, usize)> {
         let mut best: Option<((usize, usize), f32)> = None;
@@ -181,6 +258,54 @@ mod tests {
         for &e in &t.elevation {
             assert!((0.0..=1.0).contains(&e));
         }
+    }
+
+    #[test]
+    fn crater_stamps_bowl_and_impassable_rim() {
+        let mut t = Terrain::generate(20, 20, 0.0, 0, 9);
+        let before_center = t.elevation_at(10, 10);
+        t.stamp_crater(10, 10, 3.0, 0.5);
+        // bowl floor depressed (or already at the 0.0 clamp)
+        assert!(t.elevation_at(10, 10) < before_center || t.elevation_at(10, 10) == 0.0);
+        // rim cells (distance ≈ radius) are hazard; the centre is not
+        assert!(t.is_hazard(13, 10), "rim east");
+        assert!(t.is_hazard(7, 10), "rim west");
+        assert!(!t.is_hazard(10, 10), "bowl centre must stay passable");
+        for &e in &t.elevation {
+            assert!((0.0..=1.0).contains(&e));
+        }
+    }
+
+    #[test]
+    fn gradient_bounded_and_flat_on_constant_terrain() {
+        let mut t = Terrain::generate(8, 8, 0.0, 0, 12);
+        t.elevation.fill(0.5);
+        for y in 0..8 {
+            for x in 0..8 {
+                assert_eq!(t.gradient(x, y), (0.0, 0.0));
+            }
+        }
+        let t = Terrain::generate(8, 8, 0.0, 0, 13);
+        for y in 0..8 {
+            for x in 0..8 {
+                let (gx, gy) = t.gradient(x, y);
+                assert!((-1.0..=1.0).contains(&gx) && (-1.0..=1.0).contains(&gy));
+            }
+        }
+    }
+
+    #[test]
+    fn science_vector_points_at_target_and_degenerates_cleanly() {
+        let mut t = Terrain::generate(10, 10, 0.0, 0, 14);
+        let target = t.idx(9, 0);
+        t.science[target] = true;
+        let (s, c, d) = t.science_vector(0, 0);
+        assert!(s > 0.9 && c.abs() < 0.1, "({s}, {c})"); // due east
+        assert!((-1.0..=1.0).contains(&d));
+        // on the target: zero bearing
+        assert_eq!(t.science_vector(9, 0).0, 0.0);
+        t.clear_science(9, 0);
+        assert_eq!(t.science_vector(0, 0), (0.0, 0.0, -1.0));
     }
 
     #[test]

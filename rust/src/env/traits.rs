@@ -16,6 +16,11 @@ pub struct StepResult {
 /// for the encodings of **all** A actions in the current state (one
 /// feed-forward sweep), selects an action, steps, and repeats in the next
 /// state.
+///
+/// Implementations must keep every encoding component in [−1, 1] (the
+/// Q(18,12) no-saturation invariant) and make trajectories a deterministic
+/// function of the constructor seed and the action sequence — see the
+/// [module docs](crate::env) for the full contract.
 pub trait Environment: Send {
     /// Network/interface dimensions this environment targets.
     fn net_config(&self) -> NetConfig;

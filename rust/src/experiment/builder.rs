@@ -19,7 +19,11 @@ use super::spec::{BackendFactory, BackendSpec};
 /// fleet width. `run()` drives everything through the [`BackendFactory`]
 /// and returns a typed [`ExperimentReport`].
 ///
-/// ```no_run
+/// The spec names any [`crate::config::EnvKind`] — the paper benchmarks or
+/// a scenario-library environment (see SCENARIOS.md) — and the builder
+/// constructs the matching environment and backend for each rover:
+///
+/// ```
 /// use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 /// use qfpga::experiment::{BackendSpec, Experiment};
 /// use qfpga::qlearn::backend::BackendKind;
@@ -27,9 +31,11 @@ use super::spec::{BackendFactory, BackendSpec};
 /// let spec = BackendSpec::new(
 ///     BackendKind::Cpu,
 ///     NetConfig::new(Arch::Mlp, EnvKind::Simple),
-///     Precision::Fixed,
+///     Precision::Float,
 /// );
-/// let report = Experiment::train(spec).episodes(100).batch(8).rovers(4).run()?;
+/// let report = Experiment::train(spec).episodes(4).max_steps(25).batch(2).run()?;
+/// assert_eq!(report.rovers.len(), 1);
+/// assert_eq!(report.rovers[0].train.episodes.len(), 4);
 /// println!("{}", qfpga::report::Report::render(&report));
 /// # Ok::<(), qfpga::error::Error>(())
 /// ```
@@ -48,6 +54,30 @@ impl Experiment {
     /// Start a training experiment from a backend spec, with the
     /// mission-default knobs (200 episodes × ≤200 steps, seed 7, stepwise
     /// updates, one rover).
+    ///
+    /// Scenario-library environments drive the exact same builder — this
+    /// trains a two-rover fleet on the crater field:
+    ///
+    /// ```
+    /// use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
+    /// use qfpga::experiment::{BackendSpec, Experiment};
+    /// use qfpga::qlearn::backend::BackendKind;
+    ///
+    /// let crater = BackendSpec::new(
+    ///     BackendKind::Cpu,
+    ///     NetConfig::new(Arch::Mlp, EnvKind::Crater),
+    ///     Precision::Float,
+    /// );
+    /// let fleet = Experiment::train(crater)
+    ///     .episodes(3)
+    ///     .max_steps(20)
+    ///     .seed(11)
+    ///     .rovers(2)
+    ///     .run()?;
+    /// assert_eq!(fleet.rovers.len(), 2);
+    /// assert!(fleet.total_steps() > 0);
+    /// # Ok::<(), qfpga::error::Error>(())
+    /// ```
     pub fn train(spec: BackendSpec) -> Experiment {
         Experiment {
             spec,

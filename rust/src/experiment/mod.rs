@@ -10,7 +10,10 @@
 //!   network configuration, precision, hyper-parameters, fixed-point format
 //!   and an optional radiation [`crate::fault::FaultPlan`].
 //!   [`BackendSpec::matrix`] enumerates the full backend × configuration ×
-//!   precision grid the sweeps, benches and conformance suites drive.
+//!   precision grid the sweeps, benches and conformance suites drive —
+//!   since the scenario-library rework that grid spans every
+//!   [`crate::config::EnvKind`] ([`crate::config::NetConfig::grid`]), not
+//!   just the four paper configurations.
 //! * [`BackendFactory`] — owns the optional PJRT [`crate::runtime::Runtime`]
 //!   and is the **only** place backends are constructed (the concrete
 //!   constructors are `pub(crate)`; `tests/api_surface.rs` greps the source

@@ -80,12 +80,22 @@ impl BackendSpec {
         )
     }
 
-    /// The full experiment grid: every paper configuration × both
+    /// The full experiment grid: every mission configuration
+    /// ([`NetConfig::grid`] — both architectures × all five environment
+    /// kinds, paper benchmarks and scenario library alike) × both
     /// precisions × the requested backend kinds, in the canonical sweep
-    /// order (configuration-major, precision, then backend).
+    /// order (configuration-major, precision, then backend). This is what
+    /// campaigns, sweeps and benches enumerate; paper tables stay on the
+    /// four-configuration [`NetConfig::all`] subset.
+    ///
+    /// Note: only the paper configurations have baked XLA artifacts, so
+    /// callers that include [`BackendKind::Xla`] should skip scenario
+    /// entries whose `net.env` is not
+    /// [`crate::config::EnvKind::is_paper`].
     pub fn matrix(kinds: &[BackendKind]) -> Vec<BackendSpec> {
-        let mut out = Vec::with_capacity(NetConfig::all().len() * 2 * kinds.len());
-        for net in NetConfig::all() {
+        let grid = NetConfig::grid();
+        let mut out = Vec::with_capacity(grid.len() * 2 * kinds.len());
+        for net in grid {
             for prec in [Precision::Fixed, Precision::Float] {
                 for &kind in kinds {
                     out.push(BackendSpec::new(kind, net, prec));
@@ -439,14 +449,23 @@ mod tests {
     fn matrix_covers_the_full_grid_in_canonical_order() {
         let kinds = [BackendKind::Cpu, BackendKind::FpgaSim];
         let m = BackendSpec::matrix(&kinds);
-        assert_eq!(m.len(), 4 * 2 * 2);
+        // 2 archs × 5 env kinds × 2 precisions × 2 backend kinds
+        assert_eq!(m.len(), NetConfig::grid().len() * 2 * 2);
+        assert_eq!(m.len(), 40);
         // configuration-major: both precisions and kinds of net 0 come first
-        assert!(m[..4].iter().all(|s| s.net == NetConfig::all()[0]));
+        assert!(m[..4].iter().all(|s| s.net == NetConfig::grid()[0]));
         assert_eq!(m[0].precision, Precision::Fixed);
         assert_eq!(m[0].kind, BackendKind::Cpu);
         assert_eq!(m[1].kind, BackendKind::FpgaSim);
         assert_eq!(m[2].precision, Precision::Float);
         assert_eq!(BackendSpec::local_matrix(), m);
+        // the paper grid and every scenario environment are all enumerated
+        for net in NetConfig::all() {
+            assert!(m.iter().any(|s| s.net == net), "{} missing", net.name());
+        }
+        for env in EnvKind::all() {
+            assert!(m.iter().any(|s| s.net.env == env), "{} missing", env.as_str());
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! * `train  [--arch A --env E --precision P --backend B --episodes N]` —
 //!   run one rover mission and print its learning curve.
 //! * `fleet  [--rovers N ...]` — multi-rover mission via the scheduler.
+//! * `mission [--env all|E ...]` — the scenario-library campaign: train
+//!   every environment kind on cpu + fpga-sim and print table S1.
 //! * `sweep  [--updates N]` — measured per-update latency for every
 //!   backend × configuration (the measured side of Tables 3–6).
 //! * `radiation` — resilience campaign under seeded SEU injection.
@@ -38,18 +40,25 @@ use qfpga::util::{Json, Rng};
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|sweep|radiation|validate|diff|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|sweep|radiation|validate|diff|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
             [--no-measure]        skip measuring the host-CPU rows
             [--batch B]           batch size for the B1 batched-datapath table
-  train     --arch perceptron|mlp --env simple|complex --precision fixed|float
+  train     --arch perceptron|mlp --precision fixed|float
+            --env simple|complex|crater|slip|energy (see SCENARIOS.md)
             --backend cpu|xla|fpga-sim --episodes N --max-steps N --seed S
             [--microbatch]        flush at the backend's preferred batch size
             [--batch B]           flush through update_batch every B steps
   fleet     --rovers N            plus all `train` options (incl. --batch)
+  mission   scenario-library campaign: train every env kind on cpu +
+            fpga-sim and print table S1 (convergence episodes, final
+            reward, fpga-vs-cpu latency advantage)
+            [--env all|E]         one scenario or the whole library (default all)
+            plus --arch/--precision/--episodes/--max-steps/--seed/--batch
   sweep     --updates N           per-update latency, all backends/configs
+            (the full mission grid; xla rows cover the paper configs only)
             [--batch B]           also measure the batched update_batch path
   radiation resilience campaign: train under seeded SEU injection and print
             learning-delta degradation vs mitigation overhead
@@ -66,7 +75,7 @@ USAGE: qfpga <report|train|fleet|sweep|radiation|validate|diff|info|help> [optio
             non-zero when paper-ratio or latency fields drift out of band
   info                            artifacts, device, cycle model summary
 
-  --json FILE   (report/train/fleet/sweep/radiation/validate/info)
+  --json FILE   (report/train/fleet/mission/sweep/radiation/validate/info)
                 also write the subcommand's typed JSON report to FILE
 ";
 
@@ -90,6 +99,7 @@ fn run() -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("train") => cmd_train(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("mission") => cmd_mission(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("radiation") => cmd_radiation(&args),
         Some("validate") => cmd_validate(&args),
@@ -255,6 +265,38 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     write_json(args, &report.to_json())
 }
 
+/// `mission` — the scenario-library campaign: every requested environment
+/// kind trained on cpu + fpga-sim through the experiment builder, reported
+/// as table S1 (see SCENARIOS.md for the per-scenario documentation).
+fn cmd_mission(args: &Args) -> Result<()> {
+    use qfpga::coordinator::{scenario_table, ScenarioSpec};
+
+    let envs: Vec<EnvKind> = match args.get_or("env", "all") {
+        "all" => EnvKind::all().to_vec(),
+        e => vec![e.parse::<EnvKind>()?],
+    };
+    let spec = ScenarioSpec {
+        envs,
+        arch: args.get_or("arch", "mlp").parse::<Arch>()?,
+        precision: args.get_or("precision", "fixed").parse::<Precision>()?,
+        episodes: args.get_parse("episodes", 120usize)?,
+        max_steps: args.get_parse("max-steps", 150usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+        batch: args.get_parse("batch", 1usize)?,
+    };
+    println!(
+        "scenario campaign: [{}] × [cpu + fpga-sim], {} {} ({} episodes × ≤{} steps each)",
+        spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(", "),
+        spec.arch.as_str(),
+        spec.precision.as_str(),
+        spec.episodes,
+        spec.max_steps
+    );
+    let table = scenario_table(&spec)?;
+    print!("{table}");
+    write_json(args, &table.to_json())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let n = args.get_parse("updates", 1_000usize)?;
     let batch = args.get_parse("batch", 0usize)?;
@@ -266,7 +308,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!("{}", SweepReport::header());
     let mut rows = Vec::new();
     for spec in BackendSpec::matrix(&BackendKind::all()) {
-        if spec.kind == BackendKind::Xla && !factory.has_runtime() {
+        // xla artifacts are baked for the paper configurations only
+        if spec.kind == BackendKind::Xla && (!factory.has_runtime() || !spec.net.env.is_paper()) {
             continue;
         }
         let workload = Workload::synthetic(spec.net, n + warmup, 11);

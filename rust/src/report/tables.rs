@@ -125,7 +125,8 @@ pub struct CompletionInputs {
     pub measured_cpu_us: Option<f64>,
 }
 
-/// Paper constants for Tables 3–6.
+/// Paper constants for Tables 3–6. The paper only published numbers for
+/// its own two environments; scenario-library kinds have no paper row.
 fn paper_completion(arch: Arch, env: EnvKind) -> (f64, f64, f64) {
     // (fixed µs, float µs, cpu µs)
     match (arch, env) {
@@ -133,6 +134,7 @@ fn paper_completion(arch: Arch, env: EnvKind) -> (f64, f64, f64) {
         (Arch::Perceptron, EnvKind::Complex) => (1.8, 102.0, 172.0),
         (Arch::Mlp, EnvKind::Simple) => (0.9, 13.0, 20.0),
         (Arch::Mlp, EnvKind::Complex) => (4.0, 107.0, 172.0),
+        _ => panic!("no paper completion table for env `{}`", env.as_str()),
     }
 }
 
@@ -142,6 +144,7 @@ fn completion_id(arch: Arch, env: EnvKind) -> (&'static str, &'static str) {
         (Arch::Perceptron, EnvKind::Complex) => ("T4", "Complex neuron (Table 4)"),
         (Arch::Mlp, EnvKind::Simple) => ("T5", "Simple MLP (Table 5)"),
         (Arch::Mlp, EnvKind::Complex) => ("T6", "Complex MLP (Table 6)"),
+        _ => panic!("no paper completion table for env `{}`", env.as_str()),
     }
 }
 
@@ -183,6 +186,7 @@ pub fn table_power(env: EnvKind) -> PaperTable {
     let (id, title, paper_fx, paper_fp) = match env {
         EnvKind::Simple => ("T7", "Power, simple MLP (Table 7)", 5.6, 7.1),
         EnvKind::Complex => ("T8", "Power, complex MLP (Table 8)", 7.1, 10.0),
+        other => panic!("no paper power table for env `{}`", other.as_str()),
     };
     let fx = power_w(&net, Precision::Fixed, &coeffs);
     let fp = power_w(&net, Precision::Float, &coeffs);

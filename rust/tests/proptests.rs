@@ -110,11 +110,13 @@ fn prop_fifo_behaves_like_vecdeque() {
 
 #[test]
 fn prop_environment_contract() {
-    // For any env kind, any action sequence: encodings bounded, state ids
-    // within |S|, episodes terminate, rewards finite.
+    // For any env kind (paper benchmarks and scenario library alike), any
+    // action sequence: encodings bounded, state ids within |S|, episodes
+    // terminate, rewards finite.
     let mut rng = Rng::seeded(9005);
     for case in 0..40 {
-        let kind = if rng.chance(0.5) { EnvKind::Simple } else { EnvKind::Complex };
+        let kinds = EnvKind::all();
+        let kind = kinds[rng.below(kinds.len())];
         let mut env = make_env(kind, rng.next_u64());
         let a_n = env.n_actions();
         let d = env.d();
@@ -133,6 +135,47 @@ fn prop_environment_contract() {
         }
         env.reset();
         assert!(!env.is_done(), "case {case}: reset must clear terminal");
+    }
+}
+
+#[test]
+fn prop_scenario_envs_deterministic_and_bounded() {
+    // Seed-determinism contract for the scenario library: same constructor
+    // seed + same action sequence ⇒ bit-identical encodings, rewards and
+    // state ids — including the slip environment, whose stochastic
+    // dynamics must derive entirely from the seed. Encodings stay inside
+    // the Q(18,12) no-saturation range [−1, 1] along every trajectory.
+    let mut rng = Rng::seeded(9022);
+    for case in 0..25 {
+        for kind in [EnvKind::Crater, EnvKind::Slip, EnvKind::Energy] {
+            let seed = rng.next_u64();
+            let mut a = make_env(kind, seed);
+            let mut b = make_env(kind, seed);
+            let (a_n, d) = (a.n_actions(), a.d());
+            let mut enc_a = vec![0f32; a_n * d];
+            let mut enc_b = vec![0f32; a_n * d];
+            for _ in 0..120 {
+                if a.is_done() {
+                    a.reset();
+                    b.reset();
+                }
+                a.encode_all(&mut enc_a);
+                b.encode_all(&mut enc_b);
+                assert_eq!(enc_a, enc_b, "case {case} {kind:?}: encodings diverged");
+                for &v in &enc_a {
+                    assert!(
+                        v.is_finite() && (-1.0..=1.0).contains(&v),
+                        "case {case} {kind:?}: encoding {v} outside [−1, 1]"
+                    );
+                }
+                let action = rng.below(a_n);
+                let ra = a.step(action);
+                let rb = b.step(action);
+                assert_eq!(ra, rb, "case {case} {kind:?}: step results diverged");
+                assert_eq!(a.state_id(), b.state_id(), "case {case} {kind:?}");
+                assert!(a.state_id() < a.state_space(), "case {case} {kind:?}");
+            }
+        }
     }
 }
 
@@ -225,6 +268,52 @@ fn prop_backend_kind_parse_print_roundtrip() {
         let len = rng.range(1, 10);
         let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
         let parsed = s.parse::<BackendKind>();
+        if known.contains(&s.as_str()) {
+            // accepted spellings must round-trip back to a known kind
+            assert!(known.contains(&parsed.unwrap().as_str()));
+        } else {
+            assert!(parsed.is_err(), "junk `{s}` parsed");
+        }
+    }
+}
+
+/// Parse↔print property: every env kind round-trips through its canonical
+/// string, the long-form aliases map onto the canonical kinds, random junk
+/// never parses, and the parse error lists the valid spellings.
+#[test]
+fn prop_env_kind_parse_print_roundtrip() {
+    for kind in EnvKind::all() {
+        assert_eq!(kind.as_str().parse::<EnvKind>().unwrap(), kind);
+    }
+    for (alias, kind) in [
+        ("crater-field", EnvKind::Crater),
+        ("slip-slope", EnvKind::Slip),
+        ("energy-budget", EnvKind::Energy),
+    ] {
+        assert_eq!(alias.parse::<EnvKind>().unwrap(), kind);
+    }
+    // the error message must list every valid spelling (not fail opaquely)
+    let err = "medium".parse::<EnvKind>().unwrap_err().to_string();
+    for spelling in ["simple", "complex", "crater", "slip", "energy"] {
+        assert!(err.contains(spelling), "error must list `{spelling}`: {err}");
+    }
+
+    let mut rng = Rng::seeded(9021);
+    let alphabet: Vec<char> = "abcdefghijklmnopqrstuvwxyz-".chars().collect();
+    let known = [
+        "simple",
+        "complex",
+        "crater",
+        "crater-field",
+        "slip",
+        "slip-slope",
+        "energy",
+        "energy-budget",
+    ];
+    for _ in 0..200 {
+        let len = rng.range(1, 14);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        let parsed = s.parse::<EnvKind>();
         if known.contains(&s.as_str()) {
             // accepted spellings must round-trip back to a known kind
             assert!(known.contains(&parsed.unwrap().as_str()));

@@ -172,5 +172,38 @@ fn experiment_and_sweep_reports_serialize_stably() {
     let sweep = SweepReport { updates: 0, batch: 0, rows: vec![] };
     let sj = sweep.to_json();
     assert_eq!(Json::parse(&sj.to_string()).unwrap(), sj);
-    assert_eq!(sj.req_str("id").unwrap(), "S1");
+    // the latency sweep moved to L1 when S1 became the scenario table
+    assert_eq!(sj.req_str("id").unwrap(), "L1");
+}
+
+#[test]
+fn scenario_table_s1_roundtrips_and_diffs_cleanly() {
+    use qfpga::coordinator::{scenario_table, ScenarioSpec};
+
+    // every env kind, tiny budget: the table must build on cpu + fpga-sim,
+    // serialize to a parse↔print fixed point, and self-diff clean
+    let spec = ScenarioSpec {
+        episodes: 4,
+        max_steps: 20,
+        precision: Precision::Float,
+        ..Default::default()
+    };
+    let t = scenario_table(&spec).unwrap();
+    assert_eq!(Report::id(&t), "S1");
+    // five rows per scenario: convergence, final reward, two Δrewards,
+    // fpga advantage
+    assert_eq!(t.rows.len(), 5 * EnvKind::all().len());
+    for env in EnvKind::all() {
+        assert!(
+            t.rows.iter().any(|r| r.label.starts_with(env.as_str())),
+            "no rows for `{}`",
+            env.as_str()
+        );
+    }
+
+    let j = Report::to_json(&t);
+    assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    let d = diff_json(&j, &j, 0.01);
+    assert!(d.ok(), "{:?}", d.problems);
+    assert!(d.compared >= t.rows.len(), "only {} values compared", d.compared);
 }
