@@ -20,9 +20,11 @@ use common::{bench, print_header, print_result, BenchResult};
 use qfpga::config::{NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
 use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
+use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::nn::params::QNetParams;
 use qfpga::qlearn::backend::QBackend;
 use qfpga::qlearn::replay::FlatBatch;
+use qfpga::report::PaperTable;
 use qfpga::util::{Json, Rng};
 
 const BATCH: usize = 32;
@@ -100,6 +102,42 @@ fn run_batched<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: us
         1e6 / per_update
     );
     per_update
+}
+
+/// The model-derived perf trajectory (table `BM1`): modeled device
+/// throughput, stepwise vs batched, per paper configuration and precision.
+/// Deterministic — this is the part of `BENCH_backends.json` the CI
+/// `bench-smoke` job diffs against the committed
+/// `ci/BENCH_backends_baseline.json` (`qfpga diff --tol`); the measured
+/// host records beside it are informational and host-dependent.
+fn model_trajectory_table() -> PaperTable {
+    let t = TimingModel::default();
+    let dev = Virtex7::default();
+    let mut table = PaperTable::new(
+        "BM1",
+        format!("Modeled device throughput trajectory (B = {BATCH})"),
+        "kQ/s",
+    );
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let (stepwise, batched) = t.trajectory_kq_s(&net, prec, BATCH, &dev);
+            table = table
+                .row(
+                    format!("{} {} stepwise", net.name(), prec.as_str()),
+                    stepwise,
+                    None,
+                )
+                .row(
+                    format!("{} {} batched", net.name(), prec.as_str()),
+                    batched,
+                    None,
+                );
+        }
+    }
+    table.note(
+        "model-derived and deterministic: diffed across PRs by CI; regenerate the \
+         baseline by copying this table into ci/BENCH_backends_baseline.json",
+    )
 }
 
 /// Fresh seeded parameters + a factory-built backend for one spec.
@@ -243,6 +281,8 @@ fn main() {
     }
 
     // ---- machine-readable trajectory ------------------------------------
+    // `tables` carries the deterministic model-derived BM1 (the diffable
+    // trajectory); `records` carries the host measurements above.
     let n_records = records.len();
     let doc = Json::obj(vec![
         ("bench", Json::Str("backends".into())),
@@ -250,6 +290,7 @@ fn main() {
         ("iters", Json::Num(iters as f64)),
         ("batch", Json::Num(BATCH as f64)),
         ("xla_present", Json::Bool(factory.has_runtime())),
+        ("tables", Json::Arr(vec![model_trajectory_table().to_json()])),
         ("records", Json::Arr(records)),
     ]);
     let out = json_out_path();

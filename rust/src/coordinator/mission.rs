@@ -1,23 +1,28 @@
-//! Single-rover mission: configuration + runner.
+//! Single-rover mission: configuration + resumable runner.
 //!
 //! [`MissionConfig`] is the legacy flat configuration surface; since the
 //! experiment-API redesign it is a thin veneer over
 //! [`crate::experiment::BackendSpec`] + [`crate::experiment::Experiment`]
 //! (see MIGRATION.md). [`run_mission`] delegates to the builder; the shared
-//! drive loop lives in [`drive_mission`] and builds its backend exclusively
-//! through the [`crate::experiment::BackendFactory`].
+//! drive loop is [`MissionRun`] — a mission advanced episode by episode,
+//! checkpointable at any episode boundary ([`MissionCheckpoint`]) and the
+//! unit the fleet worker pool schedules — which builds its backend
+//! exclusively through the [`crate::experiment::BackendFactory`].
+
+use std::path::Path;
+use std::time::Instant;
 
 use crate::config::{Arch, EnvKind, Hyper, NetConfig, Precision};
-use crate::env::make_env;
-use crate::error::Result;
-use crate::experiment::{BackendFactory, BackendSpec};
+use crate::env::{make_env, Environment};
+use crate::error::{Error, Result};
+use crate::experiment::{BackendFactory, BackendSpec, BuiltBackend};
 use crate::fault::{FaultPlan, FaultStats};
 use crate::fixed::FixedSpec;
 use crate::nn::params::QNetParams;
-use crate::qlearn::backend::BackendKind;
-use crate::qlearn::trainer::{train, TrainReport};
+use crate::qlearn::backend::{BackendKind, QBackend};
+use crate::qlearn::trainer::{train_episode, EpisodeStats, TrainReport};
 use crate::qlearn::{NeuralQLearner, Policy};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Everything needed to run one rover mission.
 #[derive(Debug, Clone)]
@@ -90,6 +95,26 @@ impl MissionConfig {
             self.seed
         )
     }
+
+    /// Canonical identity of everything that shapes a mission trajectory —
+    /// the compatibility key stamped into checkpoints so a resume can never
+    /// silently mix a stale snapshot into a changed configuration.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|ep{}|ms{}|seed{}|b{}|mb{}|Q({},{})",
+            self.backend.as_str(),
+            self.arch.as_str(),
+            self.precision.as_str(),
+            self.env.as_str(),
+            self.episodes,
+            self.max_steps,
+            self.seed,
+            self.batch,
+            self.microbatch,
+            self.fixed_spec.word,
+            self.fixed_spec.frac
+        )
+    }
 }
 
 /// Mission outcome: the training report plus backend-side accounting.
@@ -113,62 +138,345 @@ impl MissionReport {
     }
 }
 
-/// The shared drive loop: build the environment and the backend (through
-/// the factory — the only construction path), train, then fold in the
-/// backend-side accounting (FPGA cycle model, SEU statistics).
-pub(crate) fn drive_mission(
-    cfg: &MissionConfig,
-    factory: &BackendFactory,
-) -> Result<MissionReport> {
-    let net = cfg.net();
-    let mut env = make_env(cfg.env, cfg.seed);
-    let mut rng = Rng::seeded(cfg.seed ^ 0xA5A5_5A5A);
-    let params = QNetParams::init(&net, 0.3, &mut rng);
-    let policy = Policy::default_training();
+/// A resumable in-flight mission: environment, learner and accounting,
+/// advanced episode by episode. This is the unit the fleet worker pool
+/// schedules — workers pull a `MissionRun`'s episodes in slices, stream
+/// [`crate::coordinator::telemetry::RoverProgress`] between them, and can
+/// [`MissionRun::checkpoint`] at any episode boundary. A checkpoint
+/// restored with [`MissionRun::restore`] reproduces the uninterrupted run
+/// bit-exactly (episode stats and weights; wall-clock time restarts).
+pub struct MissionRun {
+    cfg: MissionConfig,
+    net: NetConfig,
+    env: Box<dyn Environment>,
+    rng: Rng,
+    learner: NeuralQLearner<BuiltBackend>,
+    stats: Vec<EpisodeStats>,
+    total_steps: usize,
+    start: Instant,
+    /// Modeled accelerator cycles accumulated before a checkpoint restore
+    /// (the rebuilt accelerator's counters restart at zero).
+    carried_cycles: u64,
+}
 
-    let backend = factory.build_mission(&cfg.spec(), params, cfg.seed)?;
-    // batching policy shared by all backends: `microbatch` selects the
-    // backend's preferred flush size, `batch` pins an explicit one
-    let mut learner = NeuralQLearner::new(backend, policy);
-    if cfg.microbatch {
-        learner = learner.with_microbatch();
-    } else if cfg.batch > 1 {
-        learner = learner.with_batch(cfg.batch);
+impl MissionRun {
+    /// Build a fresh mission: environment, seeded RNG/params, and the
+    /// backend through the factory (the only construction path).
+    pub fn new(cfg: &MissionConfig, factory: &BackendFactory) -> Result<MissionRun> {
+        let net = cfg.net();
+        let env = make_env(cfg.env, cfg.seed);
+        let mut rng = Rng::seeded(cfg.seed ^ 0xA5A5_5A5A);
+        let params = QNetParams::init(&net, 0.3, &mut rng);
+        let backend = factory.build_mission(&cfg.spec(), params, cfg.seed)?;
+        Ok(MissionRun {
+            cfg: cfg.clone(),
+            net,
+            env,
+            rng,
+            learner: Self::learner(cfg, backend),
+            stats: Vec::with_capacity(cfg.episodes),
+            total_steps: 0,
+            start: Instant::now(),
+            carried_cycles: 0,
+        })
     }
 
-    let train_report = train(&mut learner, env.as_mut(), cfg.episodes, cfg.max_steps, &mut rng)?;
-    let backend = learner.backend;
-
-    let mut fault = backend.fault_stats();
-    let (fpga_modeled_us, fpga_cycles) = match backend.accelerator() {
-        Some(acc) => {
-            // the datapath SEU hook's strikes count toward the mission's
-            // fault accounting
-            if let (Some(s), Some(hook_stats)) = (fault.as_mut(), acc.seu_stats()) {
-                s.add(&hook_stats);
-            }
-            // charge the mitigation's voter/decode/scrub stages into the
-            // modeled device time (TimingModel hooks; zero when fault-free
-            // or unmitigated)
-            let mut cycles = acc.stats().cycles;
-            if let Some(plan) = &cfg.fault {
-                cycles += plan
-                    .mitigation
-                    .extra_cycles_per_update(&net, cfg.precision, acc.timing())
-                    * acc.stats().updates;
-            }
-            (Some(acc.device().cycles_to_us(cycles)), Some(cycles))
+    /// Batching policy shared by all backends: `microbatch` selects the
+    /// backend's preferred flush size, `batch` pins an explicit one.
+    fn learner(cfg: &MissionConfig, backend: BuiltBackend) -> NeuralQLearner<BuiltBackend> {
+        let mut learner = NeuralQLearner::new(backend, Policy::default_training());
+        if cfg.microbatch {
+            learner = learner.with_microbatch();
+        } else if cfg.batch > 1 {
+            learner = learner.with_batch(cfg.batch);
         }
-        None => (None, None),
-    };
+        learner
+    }
 
-    Ok(MissionReport {
-        config_desc: cfg.describe(),
-        train: train_report,
-        fpga_modeled_us,
-        fpga_cycles,
-        fault,
-    })
+    /// Episodes completed so far.
+    pub fn episodes_done(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.stats.len() >= self.cfg.episodes
+    }
+
+    /// Advance up to `n` more episodes, invoking `observer` after each
+    /// (progress streaming). Stops early when the mission completes.
+    pub fn run_episodes(
+        &mut self,
+        n: usize,
+        observer: &mut dyn FnMut(&EpisodeStats),
+    ) -> Result<()> {
+        for _ in 0..n {
+            if self.is_complete() {
+                break;
+            }
+            let episode = self.stats.len();
+            let s = train_episode(
+                &mut self.learner,
+                self.env.as_mut(),
+                episode,
+                self.cfg.max_steps,
+                &mut self.rng,
+            )?;
+            self.total_steps += s.steps;
+            observer(&s);
+            self.stats.push(s);
+        }
+        Ok(())
+    }
+
+    /// Snapshot the mission at the current episode boundary. Parameters
+    /// ride the existing [`QNetParams`] checkpoint format; control state
+    /// (episode count, ε, RNG stream, accounting) rides alongside.
+    ///
+    /// Missions training under SEU injection are not checkpointable: the
+    /// injection stream's in-flight state is not serializable, and a resume
+    /// would silently change the fault trajectory.
+    pub fn checkpoint(&self) -> Result<MissionCheckpoint> {
+        if self.cfg.fault.is_some() {
+            return Err(Error::Config(
+                "missions under SEU injection cannot be checkpointed (the \
+                 injection stream state is not serializable)"
+                    .into(),
+            ));
+        }
+        Ok(MissionCheckpoint {
+            config: self.cfg.fingerprint(),
+            episodes_done: self.stats.len(),
+            stats: self.stats.clone(),
+            total_steps: self.total_steps,
+            updates: self.learner.updates(),
+            flushes: self.learner.flushes(),
+            epsilon: self.learner.policy.epsilon(),
+            rng: self.rng.state(),
+            params: self.learner.backend.params(),
+            fpga_cycles: self.carried_cycles
+                + self
+                    .learner
+                    .backend
+                    .accelerator()
+                    .map(|acc| acc.stats().cycles)
+                    .unwrap_or(0),
+        })
+    }
+
+    /// Resume a mission from a checkpoint: the environment is replayed to
+    /// the same reset count (environments are deterministic in their
+    /// constructor seed and reset count — the [`Environment`] contract),
+    /// the RNG stream and ε pick up where they left off, and the weights
+    /// load through the factory. The remaining episodes then reproduce the
+    /// uninterrupted run bit-exactly.
+    pub fn restore(
+        cfg: &MissionConfig,
+        factory: &BackendFactory,
+        ckpt: MissionCheckpoint,
+    ) -> Result<MissionRun> {
+        if cfg.fault.is_some() {
+            return Err(Error::Config(
+                "missions under SEU injection cannot be resumed from a checkpoint".into(),
+            ));
+        }
+        if ckpt.config != cfg.fingerprint() {
+            return Err(Error::Config(format!(
+                "checkpoint was taken under a different mission configuration \
+                 (`{}` vs `{}`) — delete the stale checkpoint file to start fresh",
+                ckpt.config,
+                cfg.fingerprint()
+            )));
+        }
+        if ckpt.episodes_done > cfg.episodes || ckpt.stats.len() != ckpt.episodes_done {
+            return Err(Error::Config(format!(
+                "checkpoint at episode {} does not fit a {}-episode mission",
+                ckpt.episodes_done, cfg.episodes
+            )));
+        }
+        let net = cfg.net();
+        let mut env = make_env(cfg.env, cfg.seed);
+        for _ in 0..ckpt.episodes_done {
+            env.reset();
+        }
+        let backend = factory.build_mission(&cfg.spec(), ckpt.params, cfg.seed)?;
+        let mut learner =
+            Self::learner(cfg, backend).with_counters(ckpt.updates, ckpt.flushes);
+        learner.policy.set_epsilon(ckpt.epsilon);
+        Ok(MissionRun {
+            cfg: cfg.clone(),
+            net,
+            env,
+            rng: Rng::from_state(ckpt.rng),
+            learner,
+            stats: ckpt.stats,
+            total_steps: ckpt.total_steps,
+            start: Instant::now(),
+            carried_cycles: ckpt.fpga_cycles,
+        })
+    }
+
+    /// Finish the mission: fold the backend-side accounting (FPGA cycle
+    /// model, SEU statistics) into the final [`MissionReport`].
+    pub fn finish(self) -> Result<MissionReport> {
+        let cfg = self.cfg;
+        let train_report = TrainReport {
+            backend_name: self.learner.backend.name(),
+            episodes: self.stats,
+            total_steps: self.total_steps,
+            total_updates: self.learner.updates(),
+            wall_seconds: self.start.elapsed().as_secs_f64(),
+        };
+        let backend = self.learner.backend;
+
+        let mut fault = backend.fault_stats();
+        let (fpga_modeled_us, fpga_cycles) = match backend.accelerator() {
+            Some(acc) => {
+                // the datapath SEU hook's strikes count toward the mission's
+                // fault accounting
+                if let (Some(s), Some(hook_stats)) = (fault.as_mut(), acc.seu_stats()) {
+                    s.add(&hook_stats);
+                }
+                // charge the mitigation's voter/decode/scrub stages into the
+                // modeled device time (TimingModel hooks; zero when
+                // fault-free or unmitigated)
+                let mut cycles = self.carried_cycles + acc.stats().cycles;
+                if let Some(plan) = &cfg.fault {
+                    cycles += plan
+                        .mitigation
+                        .extra_cycles_per_update(&self.net, cfg.precision, acc.timing())
+                        * acc.stats().updates;
+                }
+                (Some(acc.device().cycles_to_us(cycles)), Some(cycles))
+            }
+            None => (None, None),
+        };
+
+        Ok(MissionReport {
+            config_desc: cfg.describe(),
+            train: train_report,
+            fpga_modeled_us,
+            fpga_cycles,
+            fault,
+        })
+    }
+}
+
+/// Serializable mid-mission snapshot (see [`MissionRun::checkpoint`]).
+/// Weights use the existing [`QNetParams`] JSON checkpoint format — both
+/// survive the f32 → text → f32 round-trip exactly.
+#[derive(Debug, Clone)]
+pub struct MissionCheckpoint {
+    /// [`MissionConfig::fingerprint`] of the mission that took the
+    /// snapshot; [`MissionRun::restore`] refuses a mismatch.
+    pub config: String,
+    pub episodes_done: usize,
+    pub stats: Vec<EpisodeStats>,
+    pub total_steps: usize,
+    pub updates: u64,
+    pub flushes: u64,
+    pub epsilon: f32,
+    /// Learner RNG stream state (hex-encoded in JSON: `u64` exceeds the
+    /// exact range of a JSON number).
+    pub rng: [u64; 4],
+    pub params: QNetParams,
+    /// Modeled accelerator cycles up to the checkpoint (FPGA sim only;
+    /// zero elsewhere).
+    pub fpga_cycles: u64,
+}
+
+impl MissionCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let stats = self
+            .stats
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("episode", Json::Num(s.episode as f64)),
+                    ("steps", Json::Num(s.steps as f64)),
+                    ("reward", Json::Num(s.total_reward as f64)),
+                    ("mean_abs_q_err", Json::Num(s.mean_abs_q_err as f64)),
+                    ("epsilon", Json::Num(s.epsilon as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Str("CKPT".into())),
+            ("config", Json::Str(self.config.clone())),
+            ("episodes_done", Json::Num(self.episodes_done as f64)),
+            ("stats", Json::Arr(stats)),
+            ("total_steps", Json::Num(self.total_steps as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("flushes", Json::Num(self.flushes as f64)),
+            ("epsilon", Json::Num(self.epsilon as f64)),
+            (
+                "rng",
+                Json::Arr(
+                    self.rng
+                        .iter()
+                        .map(|w| Json::Str(format!("{w:016x}")))
+                        .collect(),
+                ),
+            ),
+            ("params", self.params.to_json()),
+            ("fpga_cycles", Json::Num(self.fpga_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(net: &NetConfig, j: &Json) -> Result<MissionCheckpoint> {
+        let stats = j
+            .req_arr("stats")?
+            .iter()
+            .map(|s| {
+                Ok(EpisodeStats {
+                    episode: s.req_usize("episode")?,
+                    steps: s.req_usize("steps")?,
+                    total_reward: s.req_f64("reward")? as f32,
+                    mean_abs_q_err: s.req_f64("mean_abs_q_err")? as f32,
+                    epsilon: s.req_f64("epsilon")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rng_words = j.req_arr("rng")?;
+        if rng_words.len() != 4 {
+            return Err(Error::interface("checkpoint rng state must have 4 words"));
+        }
+        let mut rng = [0u64; 4];
+        for (slot, w) in rng.iter_mut().zip(rng_words) {
+            let s = w
+                .as_str()
+                .ok_or_else(|| Error::interface("checkpoint rng word not a string"))?;
+            *slot = u64::from_str_radix(s, 16)
+                .map_err(|_| Error::interface("checkpoint rng word not hex"))?;
+        }
+        Ok(MissionCheckpoint {
+            config: j.req_str("config")?.to_string(),
+            episodes_done: j.req_usize("episodes_done")?,
+            stats,
+            total_steps: j.req_usize("total_steps")?,
+            updates: j.req_f64("updates")? as u64,
+            flushes: j.req_f64("flushes")? as u64,
+            epsilon: j.req_f64("epsilon")? as f32,
+            rng,
+            params: QNetParams::from_json(net, j.req("params")?)?,
+            fpga_cycles: j.req_f64("fpga_cycles")? as u64,
+        })
+    }
+
+    /// Write a checkpoint file atomically (temp file + rename), so the
+    /// interruption checkpointing exists to survive can never leave a
+    /// torn file behind.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint file.
+    pub fn load(net: &NetConfig, path: &Path) -> Result<MissionCheckpoint> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(net, &Json::parse(&text)?)
+    }
 }
 
 /// Run one mission. Thin wrapper over [`crate::experiment::Experiment`];

@@ -13,13 +13,20 @@
 //! [`run_fleet`] are thin wrappers over
 //! [`crate::experiment::Experiment`].
 //!
-//! * [`mission`] — [`mission::MissionConfig`] + single-rover mission runner
-//!   (optionally under SEU injection via [`crate::fault`]).
+//! * [`mission`] — [`mission::MissionConfig`] + the resumable
+//!   [`mission::MissionRun`] (optionally under SEU injection via
+//!   [`crate::fault`]), checkpointable mid-mission
+//!   ([`mission::MissionCheckpoint`]).
 //! * [`scenario`] — the mission scenario campaign: every
 //!   [`crate::config::EnvKind`] trained on cpu + fpga-sim, condensed into
 //!   table S1 (the `qfpga mission` subcommand).
-//! * [`scheduler`] — the fleet entry point (`run_fleet`).
-//! * [`telemetry`] — learning curves, aggregate statistics, JSON export.
+//! * [`scheduler`] — the fleet entry point (`run_fleet`); the worker pool
+//!   itself lives in [`crate::experiment::builder`].
+//! * [`telemetry`] — learning curves, per-rover progress streaming,
+//!   aggregate statistics, JSON export.
+//! * [`throughput`] — table B2: measured host-side Q-update throughput
+//!   (reference stepwise vs prepared stepwise vs batched, plus fleet
+//!   scaling on the worker pool).
 //! * [`sweep`] — fixed-workload latency measurement across backends (the
 //!   measured side of Tables 3–6) reported as a [`sweep::SweepReport`],
 //!   plus the [`sweep::resilience`] campaign mode (rate × mitigation ×
@@ -30,10 +37,13 @@ pub mod scenario;
 pub mod scheduler;
 pub mod sweep;
 pub mod telemetry;
+pub mod throughput;
 
-pub use mission::{run_mission, MissionConfig, MissionReport};
+pub use mission::{run_mission, MissionCheckpoint, MissionConfig, MissionReport, MissionRun};
 pub use scenario::{convergence_episode, scenario_table, ScenarioSpec};
-pub use scheduler::{run_fleet, FleetReport};
+pub use scheduler::{run_fleet, run_fleet_with_workers, FleetReport};
 pub use sweep::{
     measure_backend, measure_backend_batched, resilience, SweepReport, WorkloadTiming,
 };
+pub use telemetry::RoverProgress;
+pub use throughput::{throughput_table, ThroughputSpec};

@@ -1,12 +1,12 @@
 //! Multi-rover fleet scheduler — thin wrapper over the experiment builder.
 //!
-//! The leader/worker threading (one isolated worker per rover, each with
-//! its own environment, backend and PJRT runtime — the client is
-//! thread-affine) lives in [`crate::experiment::builder`]; `run_fleet`
-//! keeps the historical entry point and report type alive for callers that
-//! still think in `MissionConfig` terms. This mirrors the paper's stated
-//! future work (“apply this technology on single and multi-robot
-//! platforms”).
+//! The worker-pool threading (a fixed pool of workers pulling rover jobs
+//! from a shared queue, each job fully isolated with its own environment,
+//! backend and PJRT runtime — the client is thread-affine) lives in
+//! [`crate::experiment::builder`]; `run_fleet` keeps the historical entry
+//! point and report type alive for callers that still think in
+//! `MissionConfig` terms. This mirrors the paper's stated future work
+//! (“apply this technology on single and multi-robot platforms”).
 
 use crate::error::Result;
 use crate::experiment::Experiment;
@@ -16,10 +16,27 @@ use super::mission::MissionConfig;
 /// Aggregated fleet outcome (the experiment report under its fleet name).
 pub type FleetReport = crate::experiment::ExperimentReport;
 
-/// Run `n_rovers` missions in parallel. Each rover gets `base.seed + i` so
-/// terrains and trajectories differ while staying reproducible.
+/// Run `n_rovers` missions on the worker pool (one worker per core, capped
+/// at the fleet width). Each rover gets `base.seed + i` so terrains and
+/// trajectories differ while staying reproducible; reports come back
+/// ordered by rover index regardless of completion order.
 pub fn run_fleet(base: &MissionConfig, n_rovers: usize) -> Result<FleetReport> {
     Experiment::from_mission(base).rovers(n_rovers).run()
+}
+
+/// [`run_fleet`] with an explicit worker-pool width (0 = auto). The rover
+/// seeding and result ordering contract is identical at every width — a
+/// 16-rover fleet on 4 workers reproduces the thread-per-rover output bit
+/// for bit (`tests/fleet_pool.rs`).
+pub fn run_fleet_with_workers(
+    base: &MissionConfig,
+    n_rovers: usize,
+    workers: usize,
+) -> Result<FleetReport> {
+    Experiment::from_mission(base)
+        .rovers(n_rovers)
+        .workers(workers)
+        .run()
 }
 
 #[cfg(test)]

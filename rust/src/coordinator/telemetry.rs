@@ -10,6 +10,38 @@ use crate::error::Result;
 use crate::qlearn::trainer::TrainReport;
 use crate::util::Json;
 
+/// One per-rover progress sample, streamed live from the fleet worker pool
+/// (downlink-budget friendly: a handful of scalars per episode). Consumed
+/// by the sink passed to
+/// [`crate::experiment::Experiment::run_with_progress`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoverProgress {
+    /// Rover index within the fleet (also the seed offset).
+    pub rover: usize,
+    /// Episode just completed (0-based).
+    pub episode: usize,
+    /// Total episodes this rover will run.
+    pub episodes: usize,
+    /// Reward of the completed episode.
+    pub reward: f32,
+    /// Exploration rate after the episode's decay.
+    pub epsilon: f32,
+}
+
+impl RoverProgress {
+    /// Compact single-line rendering for mission logs.
+    pub fn render(&self) -> String {
+        format!(
+            "rover-{:<2} episode {:>4}/{} reward {:>8.3} ε {:.3}",
+            self.rover,
+            self.episode + 1,
+            self.episodes,
+            self.reward,
+            self.epsilon
+        )
+    }
+}
+
 /// Windowed learning-curve summary of a training run.
 #[derive(Debug, Clone)]
 pub struct LearningCurve {

@@ -1,0 +1,260 @@
+//! Table B2: measured host-side Q-update throughput.
+//!
+//! The paper's pitch is throughput, so the host path is benchmarked the
+//! same way the device is modeled. B2 puts three CPU execution paths side
+//! by side on identical seeded workloads, per paper configuration and
+//! precision:
+//!
+//! * **stepwise-reference** — the pre-rework per-call path
+//!   ([`crate::nn::qupdate()`]): fresh buffers and a full weight
+//!   re-quantization on every update;
+//! * **stepwise-prepared** — the current stepwise hot path (the CPU
+//!   backend's [`crate::nn::PreparedNet`]): weights quantized once, zero
+//!   steady-state allocation;
+//! * **batched** — `update_batch` flushes over the same prepared cache.
+//!
+//! plus two **fleet-scaling** rows: the aggregate fleet updates/s at
+//! `rovers ≫ workers`, one worker vs the full pool — the scheduling side
+//! of the same throughput story. Implements the [`crate::report::Report`]
+//! surface like every other table (`qfpga throughput --json`, diffable
+//! with `qfpga diff --tol`).
+
+use std::time::Instant;
+
+use crate::config::{Hyper, NetConfig, Precision};
+use crate::error::Result;
+use crate::fixed::FixedSpec;
+use crate::nn::params::QNetParams;
+use crate::nn::qupdate::{self, Datapath};
+use crate::qlearn::backend::BackendKind;
+use crate::report::PaperTable;
+use crate::util::Rng;
+
+use super::mission::MissionConfig;
+use super::scheduler::run_fleet_with_workers;
+use super::sweep::{measure_backend, measure_backend_batched, Workload};
+use crate::experiment::{BackendFactory, BackendSpec};
+
+/// Knobs for [`throughput_table`].
+#[derive(Debug, Clone)]
+pub struct ThroughputSpec {
+    /// Timed updates per stepwise/batched row (plus a 10% warmup).
+    pub updates: usize,
+    /// Flush size of the batched rows.
+    pub batch: usize,
+    /// Fleet-scaling row width (deliberately larger than typical core
+    /// counts, so the pool's queue actually rotates).
+    pub rovers: usize,
+    /// Pool width of the scaled fleet row (0 = one worker per core).
+    pub workers: usize,
+    /// Episodes per rover in the fleet rows.
+    pub episodes: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for ThroughputSpec {
+    fn default() -> Self {
+        ThroughputSpec {
+            updates: 4_000,
+            batch: 32,
+            rovers: 8,
+            workers: 0,
+            episodes: 25,
+            max_steps: 60,
+            seed: 7,
+        }
+    }
+}
+
+/// The pre-rework stepwise path, measured like
+/// [`measure_backend`](super::sweep::measure_backend): one
+/// [`qupdate::qupdate`] per transition, threading the returned parameters
+/// through — fresh `Vec`s and a full weight re-quantization per call.
+/// Returns updates/s over the timed region.
+fn measure_reference_stepwise(
+    net: &NetConfig,
+    prec: Precision,
+    workload: &Workload,
+    warmup: usize,
+) -> Result<f64> {
+    let dp = Datapath::paper(match prec {
+        Precision::Fixed => Some(FixedSpec::default()),
+        Precision::Float => None,
+    });
+    let hyper = Hyper::default();
+    let mut rng = Rng::seeded(0xF00D);
+    let mut params = QNetParams::init(net, 0.3, &mut rng);
+
+    let step = net.a * net.d;
+    let n = workload.len();
+    let mut measured = 0.0f64;
+    let mut timed = 0usize;
+    for i in 0..n {
+        let sa_cur = &workload.sa_cur[i * step..(i + 1) * step];
+        let sa_next = &workload.sa_next[i * step..(i + 1) * step];
+        let t0 = Instant::now();
+        let out = qupdate::qupdate(
+            net,
+            &params,
+            sa_cur,
+            sa_next,
+            workload.actions[i],
+            workload.rewards[i],
+            &hyper,
+            &dp,
+        )?;
+        let dt = t0.elapsed();
+        params = out.params;
+        if i >= warmup {
+            measured += dt.as_secs_f64();
+            timed += 1;
+        }
+    }
+    Ok(timed as f64 / measured.max(1e-12))
+}
+
+/// Generate table B2 (see the module docs for the row semantics).
+pub fn throughput_table(spec: &ThroughputSpec) -> Result<PaperTable> {
+    let n = spec.updates.max(64);
+    let warmup = (n / 10).max(8).max(2 * spec.batch);
+    let factory = BackendFactory::offline();
+    let mut table = PaperTable::new(
+        "B2",
+        format!(
+            "Measured CPU Q-update throughput ({n} updates/row, batch {})",
+            spec.batch
+        ),
+        "updates/s",
+    );
+
+    for net in NetConfig::all() {
+        for prec in [Precision::Fixed, Precision::Float] {
+            let workload = Workload::synthetic(net, n + warmup, 11);
+            let label = format!("{} {}", net.name(), prec.as_str());
+
+            let before = measure_reference_stepwise(&net, prec, &workload, warmup)?;
+
+            // prepared stepwise + batched: the factory-built CPU backend
+            let mut rng = Rng::seeded(0xF00D);
+            let params = QNetParams::init(&net, 0.3, &mut rng);
+            let mut backend = factory.build(&BackendSpec::cpu(net, prec), params)?;
+            let prepared =
+                measure_backend(&mut backend, &workload, warmup)?.kq_per_s * 1e3;
+            let batched = measure_backend_batched(&mut backend, &workload, warmup, spec.batch)?
+                .kq_per_s
+                * 1e3;
+
+            // labels stay run-independent (they are `qfpga diff`'s row
+            // key); the measured speedup gets its own stable-labelled row
+            table = table
+                .row(format!("{label} stepwise-reference"), before, None)
+                .row(format!("{label} stepwise-prepared"), prepared, None)
+                .row(format!("{label} batched B={}", spec.batch), batched, None)
+                .row(
+                    format!("{label} stepwise speedup (prepared/reference, ×)"),
+                    prepared / before.max(1e-12),
+                    None,
+                );
+        }
+    }
+
+    // fleet scaling: aggregate updates/s at rovers ≫ workers, serial pool
+    // vs full pool (same seeds, same per-rover output — see
+    // tests/fleet_pool.rs for the determinism contract)
+    let base = MissionConfig {
+        backend: BackendKind::Cpu,
+        precision: Precision::Fixed,
+        episodes: spec.episodes,
+        max_steps: spec.max_steps,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let serial = run_fleet_with_workers(&base, spec.rovers, 1)?;
+    let pooled = run_fleet_with_workers(&base, spec.rovers, spec.workers)?;
+    let (s_ups, p_ups) = (
+        serial.aggregate_updates_per_second(),
+        pooled.aggregate_updates_per_second(),
+    );
+    table = table
+        .row(
+            format!("fleet {} rovers × 1 worker", spec.rovers),
+            s_ups,
+            None,
+        )
+        .row(
+            format!("fleet {} rovers × pool ({} workers)", spec.rovers, pooled.workers),
+            p_ups,
+            None,
+        )
+        .row(
+            format!("fleet {} rovers scaling (pool/serial, ×)", spec.rovers),
+            p_ups / s_ups.max(1e-12),
+            None,
+        );
+
+    Ok(table.note(
+        "measured on this host — compare runs of the same machine only; \
+         stepwise-reference re-quantizes every weight tensor and allocates per \
+         call, stepwise-prepared is the PreparedNet zero-alloc hot path, batched \
+         flushes through update_batch; fleet rows are end-to-end aggregate \
+         updates/s (environment included) on the worker pool — regenerate with \
+         `qfpga throughput [--updates N --batch B --rovers R --workers W] \
+         --json b2.json`",
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn quick_spec() -> ThroughputSpec {
+        ThroughputSpec {
+            updates: 96,
+            batch: 8,
+            rovers: 2,
+            workers: 0,
+            episodes: 3,
+            max_steps: 20,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn b2_covers_every_config_and_the_fleet_rows() {
+        let t = throughput_table(&quick_spec()).unwrap();
+        assert_eq!(t.id, "B2");
+        // 4 configs × 2 precisions × (3 paths + 1 speedup) + 3 fleet rows
+        assert_eq!(t.rows.len(), 4 * 2 * 4 + 3);
+        assert!(t.rows.iter().all(|r| r.ours > 0.0), "non-positive throughput");
+        assert!(t
+            .rows
+            .iter()
+            .any(|r| r.label.contains("stepwise-reference")));
+        assert!(t.rows.iter().any(|r| r.label.contains("stepwise-prepared")));
+        assert!(t.rows.iter().any(|r| r.label.contains("stepwise speedup")));
+        assert!(t.rows.iter().any(|r| r.label.contains("fleet 2 rovers")));
+        // row labels are run-independent: they are qfpga diff's pairing key
+        assert!(
+            t.rows.iter().all(|r| !r.label.contains('.')),
+            "a label embeds a measured value: {:?}",
+            t.rows.iter().map(|r| &r.label).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn b2_serializes_like_every_other_table() {
+        let t = throughput_table(&quick_spec()).unwrap();
+        let parsed = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req_str("id").unwrap(), "B2");
+        assert_eq!(
+            parsed.req_arr("rows").unwrap().len(),
+            t.rows.len()
+        );
+        // a self-diff is clean (the diff gate pairs tables by id)
+        let d = crate::report::diff_json(&t.to_json(), &t.to_json(), 0.01);
+        assert!(d.ok(), "{:?}", d.problems);
+        assert!(d.compared > 0);
+    }
+}

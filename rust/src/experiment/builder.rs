@@ -1,12 +1,16 @@
 //! [`Experiment`]: one entry point for single-rover and fleet training.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 use std::time::Instant;
 
 use crate::config::NetConfig;
-use crate::coordinator::mission::{drive_mission, MissionConfig, MissionReport};
-use crate::coordinator::telemetry;
+use crate::coordinator::mission::{
+    MissionCheckpoint, MissionConfig, MissionReport, MissionRun,
+};
+use crate::coordinator::telemetry::{self, RoverProgress};
 use crate::error::{Error, Result};
 use crate::fault::FaultPlan;
 use crate::fixed::FixedSpec;
@@ -14,6 +18,18 @@ use crate::report::Report;
 use crate::util::Json;
 
 use super::spec::{BackendFactory, BackendSpec};
+
+/// Periodic per-rover checkpointing for fleet runs: every `every` episodes
+/// each rover snapshots to `dir/rover-<i>.json`; a rerun with the same
+/// policy resumes any rover whose file is present (bit-exact — see
+/// [`MissionRun::restore`]) and removes the file once the rover completes.
+/// Not available for missions under SEU injection
+/// ([`MissionRun::checkpoint`] explains why).
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    pub dir: PathBuf,
+    pub every: usize,
+}
 
 /// Builder for a training experiment: one spec, the mission knobs, and the
 /// fleet width. `run()` drives everything through the [`BackendFactory`]
@@ -48,6 +64,9 @@ pub struct Experiment {
     microbatch: bool,
     batch: usize,
     rovers: usize,
+    /// Worker-pool width for fleets (0 = `min(cores, rovers)`).
+    workers: usize,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl Experiment {
@@ -87,6 +106,8 @@ impl Experiment {
             microbatch: false,
             batch: 1,
             rovers: 1,
+            workers: 0,
+            checkpoint: None,
         }
     }
 
@@ -100,6 +121,8 @@ impl Experiment {
             microbatch: cfg.microbatch,
             batch: cfg.batch,
             rovers: 1,
+            workers: 0,
+            checkpoint: None,
         }
     }
 
@@ -138,6 +161,24 @@ impl Experiment {
         self
     }
 
+    /// Worker-pool width for fleets: `n` workers pull rover jobs from a
+    /// shared queue, so `rovers` can scale far past the core count
+    /// (0 = `min(cores, rovers)`, the default). Determinism is unaffected:
+    /// rover `i` still seeds `seed + i` and reports stay ordered by rover
+    /// index regardless of completion order.
+    pub fn workers(mut self, n: usize) -> Experiment {
+        self.workers = n;
+        self
+    }
+
+    /// Checkpoint every rover to `dir/rover-<i>.json` every `every`
+    /// episodes, and resume from any file already present (see
+    /// [`CheckpointPolicy`]).
+    pub fn checkpoint(mut self, dir: impl Into<PathBuf>, every: usize) -> Experiment {
+        self.checkpoint = Some(CheckpointPolicy { dir: dir.into(), every: every.max(1) });
+        self
+    }
+
     /// Train under SEU injection per `plan`.
     pub fn faults(mut self, plan: FaultPlan) -> Experiment {
         self.spec.fault = Some(plan);
@@ -168,10 +209,21 @@ impl Experiment {
         }
     }
 
-    /// Run the experiment: one mission per rover (worker threads for
-    /// fleets — each worker builds its own factory, since PJRT clients
-    /// have thread affinity), aggregated into an [`ExperimentReport`].
+    /// Run the experiment: one mission per rover, aggregated into an
+    /// [`ExperimentReport`]. Fleets run on a fixed worker pool (see
+    /// [`Experiment::workers`]); each worker builds its own factory, since
+    /// PJRT clients have thread affinity.
     pub fn run(self) -> Result<ExperimentReport> {
+        self.run_with_progress(&|_| {})
+    }
+
+    /// Like [`Experiment::run`], streaming per-rover per-episode
+    /// [`RoverProgress`] into `sink` as the fleet trains (the CLI's
+    /// `fleet --progress` live view).
+    pub fn run_with_progress(
+        self,
+        sink: &(dyn Fn(RoverProgress) + Sync),
+    ) -> Result<ExperimentReport> {
         if self.rovers == 0 {
             return Err(Error::Config("fleet needs at least one rover".into()));
         }
@@ -191,58 +243,166 @@ impl Experiment {
                 canonical.a
             )));
         }
+        if let Some(ckpt) = &self.checkpoint {
+            // fail fast: a fault-injected mission cannot checkpoint (see
+            // MissionRun::checkpoint) — reject before any episode runs
+            // rather than erroring at the first mid-run snapshot
+            if self.spec.fault.is_some() {
+                return Err(Error::Config(
+                    "checkpointing is not available for missions under SEU \
+                     injection (the injection stream state is not serializable)"
+                        .into(),
+                ));
+            }
+            std::fs::create_dir_all(&ckpt.dir)
+                .map_err(|e| Error::Config(format!("checkpoint dir: {e}")))?;
+        }
         let cfg = self.mission_config();
+        let workers = effective_workers(self.workers, self.rovers);
         let start = Instant::now();
         let rovers = if self.rovers == 1 {
-            vec![run_single(&cfg)?]
+            // single rover: stay on the caller's thread (the PJRT client is
+            // built and used right here)
+            vec![run_rover(&cfg, 0, self.checkpoint.as_ref(), &mut |p| sink(p))?]
         } else {
-            run_parallel(&cfg, self.rovers)?
+            run_pool(&cfg, self.rovers, workers, self.checkpoint.as_ref(), sink)?
         };
         Ok(ExperimentReport {
             desc: cfg.describe(),
             rovers,
+            workers,
             wall_seconds: start.elapsed().as_secs_f64(),
         })
     }
 }
 
-/// One mission in the current thread, through a kind-appropriate factory.
-fn run_single(cfg: &MissionConfig) -> Result<MissionReport> {
-    let factory = BackendFactory::for_kind(cfg.backend)?;
-    drive_mission(cfg, &factory)
+/// Resolve the pool width: explicit wins, `0` means one worker per core,
+/// and the pool is never wider than the fleet.
+fn effective_workers(requested: usize, rovers: usize) -> usize {
+    let auto = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let w = if requested == 0 { auto } else { requested };
+    w.clamp(1, rovers.max(1))
 }
 
-/// Leader/worker fleet: one worker thread per rover, each fully isolated
-/// (own environment, own backend, own runtime), reports streamed back over
-/// an mpsc channel.
-fn run_parallel(base: &MissionConfig, n_rovers: usize) -> Result<Vec<MissionReport>> {
-    let (tx, rx) = mpsc::channel::<(usize, Result<MissionReport>)>();
-
-    let mut handles = Vec::with_capacity(n_rovers);
-    for i in 0..n_rovers {
-        let tx = tx.clone();
-        let mut cfg = base.clone();
-        cfg.seed = base.seed.wrapping_add(i as u64);
-        handles.push(
-            thread::Builder::new()
-                .name(format!("rover-{i}"))
-                .spawn(move || {
-                    let _ = tx.send((i, run_single(&cfg)));
-                })
-                .map_err(|e| Error::Config(format!("spawn rover-{i}: {e}")))?,
-        );
+/// One rover's full mission on the current thread: factory, resumable
+/// [`MissionRun`], per-episode progress, and the optional checkpoint
+/// cadence. `cfg.seed` must already carry the rover's seed offset.
+fn run_rover(
+    cfg: &MissionConfig,
+    rover: usize,
+    ckpt: Option<&CheckpointPolicy>,
+    progress: &mut dyn FnMut(RoverProgress),
+) -> Result<MissionReport> {
+    let factory = BackendFactory::for_kind(cfg.backend)?;
+    let ckpt_path = ckpt.map(|c| c.dir.join(format!("rover-{rover}.json")));
+    let mut run = match &ckpt_path {
+        Some(path) if path.exists() => {
+            let snapshot = MissionCheckpoint::load(&cfg.net(), path)?;
+            MissionRun::restore(cfg, &factory, snapshot)?
+        }
+        _ => MissionRun::new(cfg, &factory)?,
+    };
+    let chunk = ckpt.map(|c| c.every).unwrap_or(usize::MAX);
+    let episodes = cfg.episodes;
+    while !run.is_complete() {
+        run.run_episodes(chunk, &mut |s| {
+            progress(RoverProgress {
+                rover,
+                episode: s.episode,
+                episodes,
+                reward: s.total_reward,
+                epsilon: s.epsilon,
+            });
+        })?;
+        if let Some(path) = &ckpt_path {
+            if !run.is_complete() {
+                run.checkpoint()?.save(path)?;
+            }
+        }
     }
-    drop(tx);
+    if let Some(path) = &ckpt_path {
+        // completed: clear the resume state so a rerun starts fresh
+        let _ = std::fs::remove_file(path);
+    }
+    run.finish()
+}
 
+/// Messages flowing from fleet workers back to the leader.
+enum FleetMsg {
+    Progress(RoverProgress),
+    Done(usize, Result<MissionReport>),
+}
+
+/// The fleet worker pool: `workers` threads pull rover indices from a
+/// shared queue (work stealing over an atomic cursor), run each mission in
+/// full isolation (own environment, backend, runtime), and stream progress
+/// and results back over one channel. The leader orders results by rover
+/// index, so the output is byte-identical to the historical
+/// thread-per-rover scheduler regardless of completion order — while
+/// `rovers` now scales far past the core count.
+fn run_pool(
+    base: &MissionConfig,
+    n_rovers: usize,
+    workers: usize,
+    ckpt: Option<&CheckpointPolicy>,
+    sink: &(dyn Fn(RoverProgress) + Sync),
+) -> Result<Vec<MissionReport>> {
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<FleetMsg>();
     let mut slots: Vec<Option<MissionReport>> = (0..n_rovers).map(|_| None).collect();
-    for (i, report) in rx {
-        slots[i] = Some(report?);
-    }
-    for h in handles {
-        h.join()
-            .map_err(|_| Error::Config("rover thread panicked".into()))?;
-    }
+    let mut first_err: Option<Error> = None;
 
+    thread::scope(|scope| -> Result<()> {
+        for w in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn_scoped(scope, move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_rovers {
+                        break;
+                    }
+                    let mut cfg = base.clone();
+                    cfg.seed = base.seed.wrapping_add(i as u64);
+                    // a panicking rover must surface as an Err to the
+                    // caller (the historical thread-per-rover contract),
+                    // not unwind through the scope and abort the leader
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_rover(&cfg, i, ckpt, &mut |p| {
+                            let _ = tx.send(FleetMsg::Progress(p));
+                        })
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(Error::Config(format!("rover {i} thread panicked")))
+                    });
+                    if tx.send(FleetMsg::Done(i, result)).is_err() {
+                        break;
+                    }
+                })
+                .map_err(|e| Error::Config(format!("spawn fleet-worker-{w}: {e}")))?;
+        }
+        drop(tx);
+        // leader loop: relay progress live, slot results by rover index
+        for msg in rx {
+            match msg {
+                FleetMsg::Progress(p) => sink(p),
+                FleetMsg::Done(i, Ok(report)) => slots[i] = Some(report),
+                FleetMsg::Done(_, Err(e)) => {
+                    // keep draining so every worker finishes cleanly; the
+                    // first failure is what the caller sees
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
     slots
         .into_iter()
         .map(|s| s.ok_or_else(|| Error::Config("missing rover report".into())))
@@ -258,6 +418,8 @@ pub struct ExperimentReport {
     /// Human description of the configuration that ran.
     pub desc: String,
     pub rovers: Vec<MissionReport>,
+    /// Worker-pool width the fleet ran on (1 for single-rover runs).
+    pub workers: usize,
     pub wall_seconds: f64,
 }
 
@@ -325,9 +487,10 @@ impl Report for ExperimentReport {
     fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "[EXP] {} × [{}]\n",
+            "[EXP] {} × [{}] on {} worker(s)\n",
             self.rovers.len(),
-            self.desc
+            self.desc,
+            self.workers
         ));
         for (i, r) in self.rovers.iter().enumerate() {
             let (first, last) = r.train.first_last_mean_reward(20);
@@ -354,6 +517,7 @@ impl Report for ExperimentReport {
             ("id", Json::Str("EXP".into())),
             ("experiment", Json::Str(self.desc.clone())),
             ("rovers", Json::Num(self.rovers.len() as f64)),
+            ("workers", Json::Num(self.workers as f64)),
             ("total_steps", Json::Num(self.total_steps() as f64)),
             (
                 "aggregate_updates_per_second",

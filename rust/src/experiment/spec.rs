@@ -114,10 +114,14 @@ impl BackendSpec {
 // ------------------------------------------------------------- AnyBackend
 
 /// A type-erased backend, so drive loops need not monomorphize per kind.
+/// Variants are boxed: the concrete backends embed scratch buffers, cycle
+/// models and parameter caches of very different sizes, and the enum
+/// itself travels by value through the factory
+/// (`clippy::large_enum_variant`).
 pub enum AnyBackend {
-    Cpu(CpuBackend),
-    FpgaSim(FpgaSimBackend),
-    Xla(XlaBackend),
+    Cpu(Box<CpuBackend>),
+    FpgaSim(Box<FpgaSimBackend>),
+    Xla(Box<XlaBackend>),
 }
 
 impl AnyBackend {
@@ -181,6 +185,14 @@ impl QBackend for AnyBackend {
         }
     }
 
+    fn q_values_into(&mut self, sa: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        match self {
+            AnyBackend::Cpu(b) => b.q_values_into(sa, out),
+            AnyBackend::FpgaSim(b) => b.q_values_into(sa, out),
+            AnyBackend::Xla(b) => b.q_values_into(sa, out),
+        }
+    }
+
     fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
         -> Result<f32> {
         match self {
@@ -226,10 +238,12 @@ impl QBackend for AnyBackend {
 // ------------------------------------------------------------ BuiltBackend
 
 /// A mission-ready backend: clean, or wrapped for SEU injection per the
-/// spec's [`FaultPlan`].
+/// spec's [`FaultPlan`]. The fault wrapper carries the protected store and
+/// the injection model, so its variant is boxed
+/// (`clippy::large_enum_variant`).
 pub enum BuiltBackend {
     Clean(AnyBackend),
-    Faulted(FaultyBackend<AnyBackend>),
+    Faulted(Box<FaultyBackend<AnyBackend>>),
 }
 
 impl BuiltBackend {
@@ -269,6 +283,13 @@ impl QBackend for BuiltBackend {
         match self {
             BuiltBackend::Clean(b) => b.q_values(sa),
             BuiltBackend::Faulted(b) => b.q_values(sa),
+        }
+    }
+
+    fn q_values_into(&mut self, sa: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        match self {
+            BuiltBackend::Clean(b) => b.q_values_into(sa, out),
+            BuiltBackend::Faulted(b) => b.q_values_into(sa, out),
         }
     }
 
@@ -357,20 +378,20 @@ impl BackendFactory {
     pub fn build(&self, spec: &BackendSpec, params: QNetParams) -> Result<AnyBackend> {
         spec.fixed_spec.validate()?;
         match spec.kind {
-            BackendKind::Cpu => Ok(AnyBackend::Cpu(CpuBackend::with_spec(
+            BackendKind::Cpu => Ok(AnyBackend::Cpu(Box::new(CpuBackend::with_spec(
                 spec.net,
                 spec.precision,
                 spec.fixed_spec,
                 params,
                 spec.hyper,
-            ))),
-            BackendKind::FpgaSim => Ok(AnyBackend::FpgaSim(FpgaSimBackend::with_spec(
+            )))),
+            BackendKind::FpgaSim => Ok(AnyBackend::FpgaSim(Box::new(FpgaSimBackend::with_spec(
                 spec.net,
                 spec.precision,
                 spec.fixed_spec,
                 params,
                 spec.hyper,
-            ))),
+            )))),
             BackendKind::Xla => {
                 let rt = self.runtime.as_ref().ok_or_else(|| {
                     Error::Config(
@@ -386,12 +407,12 @@ impl BackendFactory {
                         spec.fixed_spec.word, spec.fixed_spec.frac
                     )));
                 }
-                Ok(AnyBackend::Xla(XlaBackend::new(
+                Ok(AnyBackend::Xla(Box::new(XlaBackend::new(
                     rt,
                     spec.net,
                     spec.precision,
                     params,
-                )?))
+                )?)))
             }
         }
     }
@@ -423,13 +444,13 @@ impl BackendFactory {
                 )));
             }
         }
-        Ok(BuiltBackend::Faulted(FaultyBackend::with_spec(
+        Ok(BuiltBackend::Faulted(Box::new(FaultyBackend::with_spec(
             backend,
             spec.precision,
             spec.fixed_spec,
             plan.mitigation,
             FaultModel::new(seed ^ FAULT_STORE_SALT, plan.rate),
-        )))
+        ))))
     }
 }
 
@@ -522,9 +543,8 @@ mod tests {
             .unwrap();
         assert!(clean.fault_stats().is_none());
 
-        let faulted_spec = clean_spec
-            .clone()
-            .with_fault(FaultPlan { rate: 1e-3, mitigation: Mitigation::Tmr });
+        let faulted_spec =
+            clean_spec.with_fault(FaultPlan { rate: 1e-3, mitigation: Mitigation::Tmr });
         let mut faulted = factory
             .build_mission(&faulted_spec, params_for(&net, 7), 7)
             .unwrap();

@@ -150,6 +150,12 @@ impl<B: QBackend> QBackend for FaultyBackend<B> {
         self.inner.q_values(sa)
     }
 
+    fn q_values_into(&mut self, sa: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        // same exposure model as `q_values`; keeps the inner backend's
+        // allocation-free action-selection path reachable under injection
+        self.inner.q_values_into(sa, out)
+    }
+
     fn update(
         &mut self,
         sa_cur: &[f32],

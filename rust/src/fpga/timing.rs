@@ -260,6 +260,24 @@ impl TimingModel {
         2 * n_words * self.fu.fifo_rw
     }
 
+    /// Modeled (stepwise, batched) device throughput for one configuration
+    /// — the row pair of the model-derived bench trajectory (table `BM1`
+    /// in `BENCH_backends.json`, diffed against
+    /// `ci/BENCH_backends_baseline.json` by the CI `bench-smoke` job).
+    /// Deterministic, unlike the host-measured records beside it.
+    pub fn trajectory_kq_s(
+        &self,
+        cfg: &NetConfig,
+        prec: Precision,
+        b: usize,
+        dev: &Virtex7,
+    ) -> (f64, f64) {
+        (
+            self.throughput_kq_s(cfg, prec, dev),
+            self.batch_throughput_kq_s(cfg, prec, b, dev),
+        )
+    }
+
     /// Completion time in µs for one Q-update (paper Tables 3–6).
     pub fn completion_us(&self, cfg: &NetConfig, prec: Precision, dev: &Virtex7) -> f64 {
         dev.cycles_to_us(self.qupdate(cfg, prec).total())

@@ -11,6 +11,9 @@
 //!   every environment kind on cpu + fpga-sim and print table S1.
 //! * `sweep  [--updates N]` — measured per-update latency for every
 //!   backend × configuration (the measured side of Tables 3–6).
+//! * `throughput` — table B2: measured CPU updates/s (reference stepwise
+//!   vs the prepared zero-alloc stepwise path vs batched) plus fleet
+//!   scaling on the worker pool.
 //! * `radiation` — resilience campaign under seeded SEU injection.
 //! * `validate` — cross-backend numeric equivalence over random workloads.
 //! * `diff a.json b.json` — compare two report JSON files within
@@ -40,7 +43,7 @@ use qfpga::util::{Json, Rng};
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|mission|sweep|radiation|validate|diff|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|diff|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
@@ -52,6 +55,13 @@ USAGE: qfpga <report|train|fleet|mission|sweep|radiation|validate|diff|info|help
             [--microbatch]        flush at the backend's preferred batch size
             [--batch B]           flush through update_batch every B steps
   fleet     --rovers N            plus all `train` options (incl. --batch)
+            [--workers W]         worker-pool width (default: one per core,
+                                  capped at the fleet; rovers scale past
+                                  core count — seeds/ordering unchanged)
+            [--progress]          stream per-rover episode progress lines
+            [--checkpoint-dir D]  checkpoint each rover to D/rover-<i>.json
+                                  and resume any file already present
+            [--checkpoint-every N] episodes between checkpoints (default 25)
   mission   scenario-library campaign: train every env kind on cpu +
             fpga-sim and print table S1 (convergence episodes, final
             reward, fpga-vs-cpu latency advantage)
@@ -60,6 +70,11 @@ USAGE: qfpga <report|train|fleet|mission|sweep|radiation|validate|diff|info|help
   sweep     --updates N           per-update latency, all backends/configs
             (the full mission grid; xla rows cover the paper configs only)
             [--batch B]           also measure the batched update_batch path
+  throughput table B2: measured CPU updates/s — reference stepwise vs the
+            prepared zero-alloc stepwise path vs batched, every paper
+            config/precision, plus fleet scaling at rovers >> workers
+            [--updates N] [--batch B] [--rovers R] [--workers W]
+            [--episodes E] [--max-steps N] [--seed S]
   radiation resilience campaign: train under seeded SEU injection and print
             learning-delta degradation vs mitigation overhead
             [--rate R]            upsets per bit per step (overrides --rad-env)
@@ -75,8 +90,9 @@ USAGE: qfpga <report|train|fleet|mission|sweep|radiation|validate|diff|info|help
             non-zero when paper-ratio or latency fields drift out of band
   info                            artifacts, device, cycle model summary
 
-  --json FILE   (report/train/fleet/mission/sweep/radiation/validate/info)
-                also write the subcommand's typed JSON report to FILE
+  --json FILE   (report/train/fleet/mission/sweep/throughput/radiation/
+                validate/info) also write the subcommand's typed JSON
+                report to FILE
 ";
 
 fn main() -> ExitCode {
@@ -90,7 +106,15 @@ fn main() -> ExitCode {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["all", "headline", "measure", "microbatch", "no-measure", "help"])?;
+    let args = Args::from_env(&[
+        "all",
+        "headline",
+        "measure",
+        "microbatch",
+        "no-measure",
+        "progress",
+        "help",
+    ])?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -101,6 +125,7 @@ fn run() -> Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("mission") => cmd_mission(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("throughput") => cmd_throughput(&args),
         Some("radiation") => cmd_radiation(&args),
         Some("validate") => cmd_validate(&args),
         Some("diff") => cmd_diff(&args),
@@ -246,8 +271,18 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
     let rovers = args.get_parse("rovers", 4usize)?;
+    let workers = args.get_parse("workers", 0usize)?;
+    let mut experiment = Experiment::from_mission(&cfg).rovers(rovers).workers(workers);
+    if let Some(dir) = args.get("checkpoint-dir") {
+        experiment = experiment.checkpoint(dir, args.get_parse("checkpoint-every", 25usize)?);
+    }
     println!("fleet: {} × [{}]", rovers, cfg.describe());
-    let report = Experiment::from_mission(&cfg).rovers(rovers).run()?;
+    let report = if args.flag("progress") {
+        // stream per-rover lines live from the worker pool
+        experiment.run_with_progress(&|p| println!("  {}", p.render()))?
+    } else {
+        experiment.run()?
+    };
     for (i, r) in report.rovers.iter().enumerate() {
         let (first, last) = r.train.first_last_mean_reward(20);
         println!(
@@ -256,13 +291,38 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "fleet total: {} steps, {:.0} updates/s aggregate, mean Δreward {:+.3}, wall {:.2}s",
+        "fleet total: {} steps on {} worker(s), {:.0} updates/s aggregate, \
+         mean Δreward {:+.3}, wall {:.2}s",
         report.total_steps(),
+        report.workers,
         report.aggregate_updates_per_second(),
         report.mean_learning_delta(),
         report.wall_seconds
     );
     write_json(args, &report.to_json())
+}
+
+/// `throughput` — table B2: measured CPU updates/s for the three host
+/// execution paths plus fleet scaling on the worker pool.
+fn cmd_throughput(args: &Args) -> Result<()> {
+    use qfpga::coordinator::{throughput_table, ThroughputSpec};
+
+    let spec = ThroughputSpec {
+        updates: args.get_parse("updates", 4_000usize)?,
+        batch: args.get_parse("batch", 32usize)?,
+        rovers: args.get_parse("rovers", 8usize)?,
+        workers: args.get_parse("workers", 0usize)?,
+        episodes: args.get_parse("episodes", 25usize)?,
+        max_steps: args.get_parse("max-steps", 60usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+    };
+    println!(
+        "throughput table: {} timed updates/row, batch {}, fleet {} rovers",
+        spec.updates, spec.batch, spec.rovers
+    );
+    let table = throughput_table(&spec)?;
+    println!("{table}");
+    write_json(args, &table.to_json())
 }
 
 /// `mission` — the scenario-library campaign: every requested environment

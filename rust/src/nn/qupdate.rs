@@ -81,96 +81,23 @@ fn dot_q(dp: &Datapath, x: &[f32], w: &[f32]) -> f32 {
 
 /// Feed-forward for all A actions; `sa` is row-major (A, D).
 ///
-/// NOTE: [`forward_into`] is this function's allocation-free twin for the
-/// batch path; any numeric change here must be mirrored there (the
-/// conformance suite in `tests/batch_equiv.rs` enforces bit-equality).
+/// This is the convenience/reference entry point: it quantizes a working
+/// copy of the parameters once and runs the shared scratch kernel
+/// ([`forward_into`]) — one code path for both architectures. Hot loops
+/// should hold a [`PreparedNet`] instead, which caches the on-grid
+/// parameters and reuses the scratch buffers across calls.
 pub fn forward_full(
     cfg: &NetConfig,
     params: &QNetParams,
     sa: &[f32],
     dp: &Datapath,
 ) -> Result<ForwardTrace> {
-    let (a_n, d) = (cfg.a, cfg.d);
-    if sa.len() != a_n * d {
-        return Err(Error::interface(format!(
-            "sa length {} != A*D = {}",
-            sa.len(),
-            a_n * d
-        )));
-    }
-    let qz = |x: f32| dp.q(x);
-    let sa_q: Vec<f32> = sa.iter().map(|&x| qz(x)).collect();
-
-    match params {
-        QNetParams::Perceptron { w, b } => {
-            if w.len() != d {
-                return Err(Error::interface("perceptron weight length != D"));
-            }
-            let w_q: Vec<f32> = w.iter().map(|&x| qz(x)).collect();
-            let b_q = qz(*b);
-            let mut trace = ForwardTrace {
-                q: Vec::with_capacity(a_n),
-                pre2: Vec::with_capacity(a_n),
-                ..Default::default()
-            };
-            for ai in 0..a_n {
-                let x = &sa_q[ai * d..(ai + 1) * d];
-                // Eq. 5: σ = Σ x_i w_i (+ bias); one rounding (MAC block)
-                let mut acc = 0f32;
-                for (xi, wi) in x.iter().zip(&w_q) {
-                    acc += xi * wi;
-                }
-                let pre = qz(acc + b_q);
-                trace.pre2.push(pre);
-                // Eq. 6: firing rate through the sigmoid ROM
-                trace.q.push(dp.activation.f(pre));
-            }
-            Ok(trace)
-        }
-        QNetParams::Mlp { w1, b1, w2, b2 } => {
-            let h = cfg.h;
-            if w1.len() != d * h || b1.len() != h || w2.len() != h {
-                return Err(Error::interface("mlp parameter shapes"));
-            }
-            let w1_q: Vec<f32> = w1.iter().map(|&x| qz(x)).collect();
-            let b1_q: Vec<f32> = b1.iter().map(|&x| qz(x)).collect();
-            let w2_q: Vec<f32> = w2.iter().map(|&x| qz(x)).collect();
-            let b2_q = qz(*b2);
-            let mut trace = ForwardTrace {
-                q: Vec::with_capacity(a_n),
-                pre2: Vec::with_capacity(a_n),
-                hid: Vec::with_capacity(a_n * h),
-                pre1: Vec::with_capacity(a_n * h),
-            };
-            for ai in 0..a_n {
-                let x = &sa_q[ai * d..(ai + 1) * d];
-                // hidden layer: H parallel MAC columns
-                let mut hid_row = Vec::with_capacity(h);
-                for j in 0..h {
-                    let mut acc = 0f32;
-                    for i in 0..d {
-                        acc += x[i] * w1_q[i * h + j];
-                    }
-                    let pre = qz(acc + b1_q[j]);
-                    trace.pre1.push(pre);
-                    let o = dp.activation.f(pre);
-                    trace.hid.push(o);
-                    hid_row.push(o);
-                }
-                // output layer
-                let pre2 = {
-                    let mut acc = 0f32;
-                    for j in 0..h {
-                        acc += hid_row[j] * w2_q[j];
-                    }
-                    qz(acc + b2_q)
-                };
-                trace.pre2.push(pre2);
-                trace.q.push(dp.activation.f(pre2));
-            }
-            Ok(trace)
-        }
-    }
+    let mut on_grid = params.clone();
+    quantize_params_in_place(&mut on_grid, dp);
+    let mut sa_q = Vec::with_capacity(sa.len());
+    let mut trace = ForwardTrace::default();
+    forward_into(cfg, &on_grid, sa, dp, &mut sa_q, &mut trace)?;
+    Ok(trace)
 }
 
 /// Q-values only (action-selection path).
@@ -278,15 +205,16 @@ pub fn qupdate(
     Ok(QUpdateOutput { params: new_params, q_cur: cur.q, q_next: nxt.q, q_err: err })
 }
 
-// ------------------------------------------------------------- batch path
+// --------------------------------------------------------------- fast path
 
-/// Scratch buffers for [`qupdate_batch`]: two quantized input tiles, two
-/// forward traces and the hidden-delta vector. Reused across flushes so the
-/// steady-state batch path performs **no allocation** — that (plus skipping
-/// the per-call weight requantization, which is an identity on the on-grid
-/// weights the path maintains) is where the batched CPU speedup comes from.
+/// Scratch buffers for the in-place update kernel: two quantized input
+/// tiles, two forward traces and the hidden-delta vector. Reused across
+/// calls so the steady-state fast paths — batched flushes *and* the
+/// [`PreparedNet`] stepwise path — perform **no allocation**; that (plus
+/// skipping the per-call weight requantization, which is an identity on the
+/// on-grid weights the paths maintain) is where the CPU speedup comes from.
 #[derive(Debug, Default)]
-pub struct BatchScratch {
+pub struct UpdateScratch {
     sa_cur_q: Vec<f32>,
     sa_next_q: Vec<f32>,
     cur: ForwardTrace,
@@ -294,11 +222,15 @@ pub struct BatchScratch {
     d1: Vec<f32>,
 }
 
-impl BatchScratch {
+impl UpdateScratch {
     pub fn new() -> Self {
         Self::default()
     }
 }
+
+/// Former name of [`UpdateScratch`], kept for callers of the batch-only
+/// era's API.
+pub type BatchScratch = UpdateScratch;
 
 /// Quantize every parameter onto the datapath grid in place (identity in
 /// float mode). `qupdate` does this implicitly on every call; the batch
@@ -393,6 +325,106 @@ fn forward_into(
     Ok(())
 }
 
+/// One full in-place Q-update over **on-grid** parameters — the shared
+/// kernel of the batched and [`PreparedNet`] stepwise fast paths. Callers
+/// must have quantized `params` onto the datapath grid (see
+/// [`quantize_params_in_place`]) and validated `action`.
+#[allow(clippy::too_many_arguments)]
+fn step_on_grid(
+    cfg: &NetConfig,
+    params: &mut QNetParams,
+    sa_cur: &[f32],
+    sa_next: &[f32],
+    action: usize,
+    reward: f32,
+    hyper: &Hyper,
+    dp: &Datapath,
+    scratch: &mut UpdateScratch,
+) -> Result<f32> {
+    let d = cfg.d;
+    let lr = hyper.lr;
+
+    forward_into(cfg, params, sa_cur, dp, &mut scratch.sa_cur_q, &mut scratch.cur)?;
+    forward_into(cfg, params, sa_next, dp, &mut scratch.sa_next_q, &mut scratch.nxt)?;
+
+    let q_next_max = scratch.nxt.q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let err = q_error(dp, hyper, scratch.cur.q[action], q_next_max, reward);
+    let x_row = &scratch.sa_cur_q[action * d..(action + 1) * d];
+
+    match params {
+        QNetParams::Perceptron { w, b } => {
+            // Eq. 7: δ = f′(σ)·Q_error
+            let delta = dp.q(dp.activation.fprime(scratch.cur.pre2[action]) * err);
+            // Eq. 9/10: ΔW = C·O·δ ; W += ΔW (in place)
+            for i in 0..d {
+                let dw = dp.q(lr * dp.q(x_row[i] * delta));
+                w[i] = dp.q(w[i] + dw);
+            }
+            *b = dp.q(*b + dp.q(lr * delta));
+        }
+        QNetParams::Mlp { w1, b1, w2, b2 } => {
+            let h = cfg.h;
+            let base = action * h;
+            let s2 = scratch.cur.pre2[action];
+
+            // Eq. 11: output delta
+            let d2 = dp.q(dp.activation.fprime(s2) * err);
+            // Eq. 12: hidden deltas from the *pre-update* output weights
+            scratch.d1.clear();
+            for j in 0..h {
+                let s1j = scratch.cur.pre1[base + j];
+                scratch.d1.push(dp.q(dp.activation.fprime(s1j) * dp.q(d2 * w2[j])));
+            }
+            // Eq. 13/14: ΔW generators + in-place update
+            for j in 0..h {
+                let o1j = scratch.cur.hid[base + j];
+                let dw2 = dp.q(lr * dp.q(o1j * d2));
+                w2[j] = dp.q(w2[j] + dw2);
+            }
+            *b2 = dp.q(*b2 + dp.q(lr * d2));
+            for i in 0..d {
+                for j in 0..h {
+                    let dw1 = dp.q(lr * dp.q(x_row[i] * scratch.d1[j]));
+                    w1[i * h + j] = dp.q(w1[i * h + j] + dw1);
+                }
+            }
+            for j in 0..h {
+                b1[j] = dp.q(b1[j] + dp.q(lr * scratch.d1[j]));
+            }
+        }
+    }
+    Ok(err)
+}
+
+/// Validate flattened batch shapes and action ranges (shared by the free
+/// [`qupdate_batch`] and [`PreparedNet::update_batch`]).
+fn validate_batch(
+    cfg: &NetConfig,
+    sa_cur: &[f32],
+    sa_next: &[f32],
+    actions: &[usize],
+    rewards: &[f32],
+) -> Result<()> {
+    let a_n = cfg.a;
+    let step = a_n * cfg.d;
+    let b_n = actions.len();
+    if rewards.len() != b_n || sa_cur.len() != b_n * step || sa_next.len() != b_n * step {
+        return Err(Error::interface(format!(
+            "batch shapes: {} actions, {} rewards, {}/{} encoded elements (step {step})",
+            b_n,
+            rewards.len(),
+            sa_cur.len(),
+            sa_next.len()
+        )));
+    }
+    for &a in actions {
+        if a >= a_n {
+            return Err(Error::Env(format!("action {a} out of range 0..{a_n}")));
+        }
+    }
+    Ok(())
+}
+
 /// Apply a *sequence* of Q-updates in one call, mutating `params` in place
 /// and appending one Q-error per transition to `errs`.
 ///
@@ -412,90 +444,162 @@ pub fn qupdate_batch(
     rewards: &[f32],
     hyper: &Hyper,
     dp: &Datapath,
-    scratch: &mut BatchScratch,
+    scratch: &mut UpdateScratch,
     errs: &mut Vec<f32>,
 ) -> Result<()> {
-    let (a_n, d) = (cfg.a, cfg.d);
-    let step = a_n * d;
-    let b_n = actions.len();
-    if rewards.len() != b_n || sa_cur.len() != b_n * step || sa_next.len() != b_n * step {
-        return Err(Error::interface(format!(
-            "batch shapes: {} actions, {} rewards, {}/{} encoded elements (step {step})",
-            b_n,
-            rewards.len(),
-            sa_cur.len(),
-            sa_next.len()
-        )));
-    }
-    for &a in actions {
-        if a >= a_n {
-            return Err(Error::Env(format!("action {a} out of range 0..{a_n}")));
-        }
-    }
-    if b_n == 0 {
+    validate_batch(cfg, sa_cur, sa_next, actions, rewards)?;
+    if actions.is_empty() {
         return Ok(());
     }
-
     quantize_params_in_place(params, dp);
-    let lr = hyper.lr;
 
-    for k in 0..b_n {
-        let sc = &sa_cur[k * step..(k + 1) * step];
-        let sn = &sa_next[k * step..(k + 1) * step];
-        let action = actions[k];
-
-        forward_into(cfg, params, sc, dp, &mut scratch.sa_cur_q, &mut scratch.cur)?;
-        forward_into(cfg, params, sn, dp, &mut scratch.sa_next_q, &mut scratch.nxt)?;
-
-        let q_next_max = scratch.nxt.q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let err = q_error(dp, hyper, scratch.cur.q[action], q_next_max, rewards[k]);
-        let x_row = &scratch.sa_cur_q[action * d..(action + 1) * d];
-
-        match params {
-            QNetParams::Perceptron { w, b } => {
-                // Eq. 7: δ = f′(σ)·Q_error
-                let delta = dp.q(dp.activation.fprime(scratch.cur.pre2[action]) * err);
-                // Eq. 9/10: ΔW = C·O·δ ; W += ΔW (in place)
-                for i in 0..d {
-                    let dw = dp.q(lr * dp.q(x_row[i] * delta));
-                    w[i] = dp.q(w[i] + dw);
-                }
-                *b = dp.q(*b + dp.q(lr * delta));
-            }
-            QNetParams::Mlp { w1, b1, w2, b2 } => {
-                let h = cfg.h;
-                let base = action * h;
-                let s2 = scratch.cur.pre2[action];
-
-                // Eq. 11: output delta
-                let d2 = dp.q(dp.activation.fprime(s2) * err);
-                // Eq. 12: hidden deltas from the *pre-update* output weights
-                scratch.d1.clear();
-                for j in 0..h {
-                    let s1j = scratch.cur.pre1[base + j];
-                    scratch.d1.push(dp.q(dp.activation.fprime(s1j) * dp.q(d2 * w2[j])));
-                }
-                // Eq. 13/14: ΔW generators + in-place update
-                for j in 0..h {
-                    let o1j = scratch.cur.hid[base + j];
-                    let dw2 = dp.q(lr * dp.q(o1j * d2));
-                    w2[j] = dp.q(w2[j] + dw2);
-                }
-                *b2 = dp.q(*b2 + dp.q(lr * d2));
-                for i in 0..d {
-                    for j in 0..h {
-                        let dw1 = dp.q(lr * dp.q(x_row[i] * scratch.d1[j]));
-                        w1[i * h + j] = dp.q(w1[i * h + j] + dw1);
-                    }
-                }
-                for j in 0..h {
-                    b1[j] = dp.q(b1[j] + dp.q(lr * scratch.d1[j]));
-                }
-            }
-        }
+    let step = cfg.a * cfg.d;
+    for k in 0..actions.len() {
+        let err = step_on_grid(
+            cfg,
+            params,
+            &sa_cur[k * step..(k + 1) * step],
+            &sa_next[k * step..(k + 1) * step],
+            actions[k],
+            rewards[k],
+            hyper,
+            dp,
+            scratch,
+        )?;
         errs.push(err);
     }
     Ok(())
+}
+
+// ------------------------------------------------------------ PreparedNet
+
+/// Quantize-once parameter cache + reusable scratch: the stepwise hot path.
+///
+/// [`qupdate`] re-quantizes every weight tensor on every call (an identity
+/// on weights that are already on the datapath grid — but still O(params)
+/// work) and allocates fresh traces. `PreparedNet` hoists both costs out of
+/// the loop the way [`qupdate_batch`] does, while keeping per-transition
+/// call granularity:
+///
+/// * the parameters are quantized onto the grid **once**, at the first call
+///   after construction or [`PreparedNet::load`], and every in-place update
+///   keeps them on-grid (quantization is idempotent);
+/// * forwards and updates run through [`forward_into`] /
+///   [`step_on_grid`] over reused buffers — **zero steady-state heap
+///   allocation**.
+///
+/// Bit-for-bit equivalent to the [`qupdate`] / [`forward`] reference path
+/// (enforced by `tests/batch_equiv.rs`, the unit suite below and the
+/// cache-soundness property in `tests/proptests.rs`). Loading arbitrary
+/// (off-grid) parameters invalidates the cache; the next call re-prepares.
+#[derive(Debug)]
+pub struct PreparedNet {
+    params: QNetParams,
+    /// Whether `params` are known to be on the datapath grid.
+    on_grid: bool,
+    scratch: UpdateScratch,
+}
+
+impl PreparedNet {
+    pub fn new(params: QNetParams) -> PreparedNet {
+        PreparedNet { params, on_grid: false, scratch: UpdateScratch::new() }
+    }
+
+    /// Replace the parameters (checkpoint restore, fault injection, …).
+    /// Invalidates the cache: the next call re-quantizes.
+    pub fn load(&mut self, params: &QNetParams) {
+        self.params.clone_from(params);
+        self.on_grid = false;
+    }
+
+    /// The current parameters (on the datapath grid once any forward or
+    /// update has run since the last [`PreparedNet::load`]).
+    pub fn params(&self) -> &QNetParams {
+        &self.params
+    }
+
+    /// Quantize the parameters onto the grid if the cache is stale.
+    #[inline]
+    fn prepare(&mut self, dp: &Datapath) {
+        if !self.on_grid {
+            quantize_params_in_place(&mut self.params, dp);
+            self.on_grid = true;
+        }
+    }
+
+    /// Q-values for all A actions written into `out` (cleared first) — the
+    /// allocation-free action-selection path (`out` reuses its capacity).
+    pub fn forward_into(
+        &mut self,
+        cfg: &NetConfig,
+        sa: &[f32],
+        dp: &Datapath,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.prepare(dp);
+        forward_into(cfg, &self.params, sa, dp, &mut self.scratch.sa_cur_q, &mut self.scratch.cur)?;
+        out.clear();
+        out.extend_from_slice(&self.scratch.cur.q);
+        Ok(())
+    }
+
+    /// One stepwise Q-update in place; returns the Q-error (Eq. 8).
+    /// Bit-exact vs [`qupdate`] on the same transition stream.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        cfg: &NetConfig,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        action: usize,
+        reward: f32,
+        hyper: &Hyper,
+        dp: &Datapath,
+    ) -> Result<f32> {
+        if action >= cfg.a {
+            return Err(Error::Env(format!("action {action} out of range 0..{}", cfg.a)));
+        }
+        self.prepare(dp);
+        step_on_grid(cfg, &mut self.params, sa_cur, sa_next, action, reward, hyper, dp,
+                     &mut self.scratch)
+    }
+
+    /// Batched flush over the cached parameters: like [`qupdate_batch`] but
+    /// skipping even the per-batch quantize pass once the cache is warm.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_batch(
+        &mut self,
+        cfg: &NetConfig,
+        sa_cur: &[f32],
+        sa_next: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+        hyper: &Hyper,
+        dp: &Datapath,
+        errs: &mut Vec<f32>,
+    ) -> Result<()> {
+        validate_batch(cfg, sa_cur, sa_next, actions, rewards)?;
+        if actions.is_empty() {
+            return Ok(());
+        }
+        self.prepare(dp);
+        let step = cfg.a * cfg.d;
+        for k in 0..actions.len() {
+            let err = step_on_grid(
+                cfg,
+                &mut self.params,
+                &sa_cur[k * step..(k + 1) * step],
+                &sa_next[k * step..(k + 1) * step],
+                actions[k],
+                rewards[k],
+                hyper,
+                dp,
+                &mut self.scratch,
+            )?;
+            errs.push(err);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -735,5 +839,105 @@ mod tests {
             .unwrap();
         assert!(errs.is_empty());
         assert_eq!(p, before);
+    }
+
+    /// The stepwise fast path: a `PreparedNet` driven one transition at a
+    /// time must reproduce the reference `qupdate` chain to the bit, in
+    /// both precisions, for every paper configuration.
+    #[test]
+    fn prepared_stepwise_is_bit_exact_vs_reference() {
+        let mut rng = Rng::seeded(9);
+        for cfg in NetConfig::all() {
+            for fixed in [false, true] {
+                let dp = paper_dp(fixed);
+                let hyper = Hyper::default();
+                let init = QNetParams::init(&cfg, 0.4, &mut rng);
+                let n = 12;
+                let step = cfg.a * cfg.d;
+                let sa_cur = rng.vec_f32(n * step, -1.0, 1.0);
+                let sa_next = rng.vec_f32(n * step, -1.0, 1.0);
+                let actions: Vec<usize> = (0..n).map(|_| rng.below(cfg.a)).collect();
+                let rewards = rng.vec_f32(n, -1.0, 1.0);
+
+                let mut p_ref = init.clone();
+                let mut prepared = PreparedNet::new(init);
+                let mut q_buf = Vec::new();
+                for i in 0..n {
+                    let sc = &sa_cur[i * step..(i + 1) * step];
+                    let sn = &sa_next[i * step..(i + 1) * step];
+                    // action-selection forward agrees with the reference
+                    let want_q = forward(&cfg, &p_ref, sc, &dp).unwrap();
+                    prepared.forward_into(&cfg, sc, &dp, &mut q_buf).unwrap();
+                    assert_eq!(q_buf, want_q, "{}/fixed={fixed} step {i}", cfg.name());
+                    // the update agrees, bit for bit
+                    let out =
+                        qupdate(&cfg, &p_ref, sc, sn, actions[i], rewards[i], &hyper, &dp)
+                            .unwrap();
+                    p_ref = out.params;
+                    let got = prepared
+                        .update(&cfg, sc, sn, actions[i], rewards[i], &hyper, &dp)
+                        .unwrap();
+                    assert_eq!(got, out.q_err, "{}/fixed={fixed} step {i}", cfg.name());
+                }
+                assert_eq!(
+                    prepared.params().max_abs_diff(&p_ref),
+                    0.0,
+                    "{}/fixed={fixed}: params diverged",
+                    cfg.name()
+                );
+            }
+        }
+    }
+
+    /// Loading parameters invalidates the cache: off-grid weights must be
+    /// re-quantized before the next forward, never used raw.
+    #[test]
+    fn prepared_load_invalidates_the_cache() {
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut rng = Rng::seeded(10);
+        let dp = paper_dp(true);
+        let sa = rand_sa(&cfg, &mut rng);
+        let a_params = QNetParams::init(&cfg, 0.4, &mut rng);
+        let b_params = QNetParams::init(&cfg, 0.4, &mut rng);
+
+        let mut prepared = PreparedNet::new(a_params);
+        let mut q = Vec::new();
+        prepared.forward_into(&cfg, &sa, &dp, &mut q).unwrap();
+
+        // swap in fresh (off-grid) parameters: the next forward must match
+        // the reference path over those parameters, not the stale cache
+        prepared.load(&b_params);
+        prepared.forward_into(&cfg, &sa, &dp, &mut q).unwrap();
+        assert_eq!(q, forward(&cfg, &b_params, &sa, &dp).unwrap());
+        // and the cached copy is now the quantized view of the load
+        let mut on_grid = b_params;
+        quantize_params_in_place(&mut on_grid, &dp);
+        assert_eq!(prepared.params(), &on_grid);
+    }
+
+    #[test]
+    fn prepared_rejects_bad_inputs_without_corrupting_state() {
+        let cfg = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let mut rng = Rng::seeded(11);
+        let dp = paper_dp(true);
+        let hyper = Hyper::default();
+        let init = QNetParams::init(&cfg, 0.4, &mut rng);
+        let sa = rand_sa(&cfg, &mut rng);
+        let mut prepared = PreparedNet::new(init.clone());
+
+        // out-of-range action, short encodings, ragged batches
+        assert!(prepared.update(&cfg, &sa, &sa, cfg.a, 0.0, &hyper, &dp).is_err());
+        assert!(prepared.update(&cfg, &sa[..3], &sa, 0, 0.0, &hyper, &dp).is_err());
+        let mut errs = Vec::new();
+        assert!(prepared
+            .update_batch(&cfg, &sa, &sa[..sa.len() - 1], &[0], &[0.0], &hyper, &dp, &mut errs)
+            .is_err());
+        assert!(errs.is_empty());
+
+        // after the rejections the net still tracks the reference exactly
+        let got = prepared.update(&cfg, &sa, &sa, 1, 0.5, &hyper, &dp).unwrap();
+        let want = qupdate(&cfg, &init, &sa, &sa, 1, 0.5, &hyper, &dp).unwrap();
+        assert_eq!(got, want.q_err);
+        assert_eq!(prepared.params().max_abs_diff(&want.params), 0.0);
     }
 }

@@ -23,7 +23,7 @@ use crate::fpga::datapath::Transition;
 use crate::fpga::{FpgaAccelerator, TimingModel};
 use crate::nn::activation::Activation;
 use crate::nn::params::QNetParams;
-use crate::nn::qupdate::{self, BatchScratch, Datapath};
+use crate::nn::qupdate::{Datapath, PreparedNet};
 use crate::runtime::{ArtifactKind, Executor, Runtime};
 
 use super::replay::FlatBatch;
@@ -79,6 +79,18 @@ pub trait QBackend {
     /// Q-values for all A actions of one state ((A, D) row-major input).
     fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>>;
 
+    /// Q-values written into `out` (cleared first) — the allocation-free
+    /// twin of [`QBackend::q_values`] for the action-selection hot loop.
+    /// Backends with a scratch-backed forward (the CPU baseline) override
+    /// this to make the stepwise policy path allocation-free; the default
+    /// simply delegates.
+    fn q_values_into(&mut self, sa: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let q = self.q_values(sa)?;
+        out.clear();
+        out.extend_from_slice(&q);
+        Ok(())
+    }
+
     /// One Q-update; returns the Q-error (Eq. 8).
     fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
         -> Result<f32>;
@@ -116,14 +128,20 @@ pub trait QBackend {
 // ---------------------------------------------------------------------- CPU
 
 /// Pure-Rust reference backend — the paper's CPU baseline.
+///
+/// Since the stepwise-hot-path rework, *all* execution (stepwise `update`,
+/// action-selection forwards, batched flushes) runs through a
+/// [`PreparedNet`]: the weights are quantized onto the datapath grid once
+/// (and kept there by the in-place updates), and every call reuses the same
+/// scratch buffers — zero steady-state heap allocation and no per-call
+/// weight re-quantization, bit-exact vs the `nn::qupdate` reference chain
+/// (`tests/batch_equiv.rs`).
 pub struct CpuBackend {
     net: NetConfig,
-    params: QNetParams,
     hyper: Hyper,
     dp: Datapath,
     prec: Precision,
-    /// Reused buffers for the native batch path (no steady-state allocation).
-    scratch: BatchScratch,
+    prepared: PreparedNet,
 }
 
 impl CpuBackend {
@@ -147,7 +165,7 @@ impl CpuBackend {
             Precision::Float => None,
         };
         let dp = Datapath::new(fixed, Activation::lut_default(fixed));
-        CpuBackend { net, params, hyper, dp, prec, scratch: BatchScratch::new() }
+        CpuBackend { net, hyper, dp, prec, prepared: PreparedNet::new(params) }
     }
 
     /// Hyper-parameters in effect.
@@ -166,33 +184,38 @@ impl QBackend for CpuBackend {
     }
 
     fn q_values(&mut self, sa: &[f32]) -> Result<Vec<f32>> {
-        qupdate::forward(&self.net, &self.params, sa, &self.dp)
+        let mut out = Vec::with_capacity(self.net.a);
+        self.prepared.forward_into(&self.net, sa, &self.dp, &mut out)?;
+        Ok(out)
     }
 
+    /// Zero-alloc action-selection path: prepared weights + reused scratch.
+    fn q_values_into(&mut self, sa: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        self.prepared.forward_into(&self.net, sa, &self.dp, out)
+    }
+
+    /// Stepwise fast path: in-place update over the prepared (on-grid)
+    /// weights — no allocation, no re-quantization, bit-exact vs the
+    /// `nn::qupdate` reference (see `benches/backends.rs` and table B2 for
+    /// the measured speedup).
     fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
         -> Result<f32> {
-        let out = qupdate::qupdate(
-            &self.net, &self.params, sa_cur, sa_next, action, reward, &self.hyper, &self.dp,
-        )?;
-        self.params = out.params;
-        Ok(out.q_err)
+        self.prepared
+            .update(&self.net, sa_cur, sa_next, action, reward, &self.hyper, &self.dp)
     }
 
-    /// Native vectorized batch path: `nn::qupdate_batch` over reused
-    /// scratch buffers — bit-equivalent to the per-step loop, measurably
-    /// faster (see `benches/backends.rs`).
+    /// Native vectorized batch path over the same prepared cache —
+    /// bit-equivalent to the per-step loop, measurably faster.
     fn update_batch(&mut self, batch: &FlatBatch) -> Result<Vec<f32>> {
         let mut errs = Vec::with_capacity(batch.len());
-        qupdate::qupdate_batch(
+        self.prepared.update_batch(
             &self.net,
-            &mut self.params,
             &batch.sa_cur,
             &batch.sa_next,
             &batch.actions,
             &batch.rewards,
             &self.hyper,
             &self.dp,
-            &mut self.scratch,
             &mut errs,
         )?;
         Ok(errs)
@@ -205,11 +228,11 @@ impl QBackend for CpuBackend {
     }
 
     fn params(&self) -> QNetParams {
-        self.params.clone()
+        self.prepared.params().clone()
     }
 
     fn load_params(&mut self, params: &QNetParams) {
-        self.params = params.clone();
+        self.prepared.load(params);
     }
 }
 

@@ -25,4 +25,4 @@ pub use backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
 pub use neural::NeuralQLearner;
 pub use policy::Policy;
 pub use tabular::TabularQ;
-pub use trainer::{train, EpisodeStats, TrainReport};
+pub use trainer::{train, train_episode, EpisodeStats, TrainReport};

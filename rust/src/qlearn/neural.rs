@@ -37,26 +37,36 @@ pub struct NeuralQLearner<B: QBackend> {
     pub policy: Policy,
     batch: usize,
     buffer: TransitionBuffer,
-    // scratch encodings (no allocation in the step loop)
+    // scratch encodings + Q-value buffer (no allocation in the step loop)
     sa_cur: Vec<f32>,
     sa_next: Vec<f32>,
+    q_buf: Vec<f32>,
     updates: u64,
     flushes: u64,
 }
 
 impl<B: QBackend> NeuralQLearner<B> {
     pub fn new(backend: B, policy: Policy) -> Self {
-        let n = backend.net().a * backend.net().d;
+        let (a, d) = (backend.net().a, backend.net().d);
         NeuralQLearner {
             backend,
             policy,
             batch: 1,
             buffer: TransitionBuffer::new(),
-            sa_cur: vec![0.0; n],
-            sa_next: vec![0.0; n],
+            sa_cur: vec![0.0; a * d],
+            sa_next: vec![0.0; a * d],
+            q_buf: Vec::with_capacity(a),
             updates: 0,
             flushes: 0,
         }
+    }
+
+    /// Restore the update/flush accounting (mission checkpoint resume —
+    /// see [`crate::coordinator::MissionCheckpoint`]).
+    pub fn with_counters(mut self, updates: u64, flushes: u64) -> Self {
+        self.updates = updates;
+        self.flushes = flushes;
+        self
     }
 
     /// Enable microbatch mode with the backend's preferred flush size.
@@ -87,8 +97,10 @@ impl<B: QBackend> NeuralQLearner<B> {
     /// One interaction step against `env`.
     pub fn step(&mut self, env: &mut dyn Environment, rng: &mut Rng) -> Result<StepOutcome> {
         env.encode_all(&mut self.sa_cur);
-        let q = self.backend.q_values(&self.sa_cur)?;
-        let action = self.policy.select(&q, rng);
+        // scratch-buffer forward: with the CPU backend's PreparedNet this
+        // whole action-selection path performs no heap allocation
+        self.backend.q_values_into(&self.sa_cur, &mut self.q_buf)?;
+        let action = self.policy.select(&self.q_buf, rng);
         let result = env.step(action);
         env.encode_all(&mut self.sa_next);
 

@@ -57,6 +57,14 @@ impl Policy {
         }
     }
 
+    /// Restore the exploration rate (mission checkpoint resume). A no-op
+    /// for policies without a decaying ε.
+    pub fn set_epsilon(&mut self, e: f32) {
+        if let Policy::EpsilonGreedy { eps, .. } = self {
+            *eps = e;
+        }
+    }
+
     /// Current exploration rate (for telemetry).
     pub fn epsilon(&self) -> f32 {
         match self {

@@ -62,6 +62,46 @@ fn moving_avg(xs: &[f32], w: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Run exactly one training episode (reset, ≤ `max_steps` interaction
+/// steps, episode-end flush + ε decay). The per-episode unit [`train`]
+/// loops over — also driven directly by the resumable
+/// [`crate::coordinator::MissionRun`], which interleaves episodes across
+/// fleet workers and checkpoints between them.
+pub fn train_episode<B: QBackend>(
+    learner: &mut NeuralQLearner<B>,
+    env: &mut dyn Environment,
+    episode: usize,
+    max_steps: usize,
+    rng: &mut Rng,
+) -> Result<EpisodeStats> {
+    env.reset();
+    let mut total_reward = 0f32;
+    let mut err_sum = 0f32;
+    let mut err_n = 0usize;
+    let mut steps = 0usize;
+
+    while !env.is_done() && steps < max_steps {
+        let out = learner.step(env, rng)?;
+        total_reward += out.reward;
+        if let Some(e) = out.q_err {
+            err_sum += e.abs();
+            err_n += 1;
+        }
+        steps += 1;
+        if out.done {
+            break;
+        }
+    }
+    learner.end_episode()?;
+    Ok(EpisodeStats {
+        episode,
+        steps,
+        total_reward,
+        mean_abs_q_err: if err_n > 0 { err_sum / err_n as f32 } else { 0.0 },
+        epsilon: learner.policy.epsilon(),
+    })
+}
+
 /// Train `learner` on `env` for `episodes` episodes, capping episodes at
 /// `max_steps` interaction steps.
 pub fn train<B: QBackend>(
@@ -76,33 +116,9 @@ pub fn train<B: QBackend>(
     let mut total_steps = 0usize;
 
     for episode in 0..episodes {
-        env.reset();
-        let mut total_reward = 0f32;
-        let mut err_sum = 0f32;
-        let mut err_n = 0usize;
-        let mut steps = 0usize;
-
-        while !env.is_done() && steps < max_steps {
-            let out = learner.step(env, rng)?;
-            total_reward += out.reward;
-            if let Some(e) = out.q_err {
-                err_sum += e.abs();
-                err_n += 1;
-            }
-            steps += 1;
-            if out.done {
-                break;
-            }
-        }
-        learner.end_episode()?;
-        total_steps += steps;
-        stats.push(EpisodeStats {
-            episode,
-            steps,
-            total_reward,
-            mean_abs_q_err: if err_n > 0 { err_sum / err_n as f32 } else { 0.0 },
-            epsilon: learner.policy.epsilon(),
-        });
+        let s = train_episode(learner, env, episode, max_steps, rng)?;
+        total_steps += s.steps;
+        stats.push(s);
     }
 
     Ok(TrainReport {

@@ -40,6 +40,17 @@ impl Rng {
         Rng::seeded(self.next_u64() ^ tag.rotate_left(17))
     }
 
+    /// The full generator state (mission checkpointing). Restoring via
+    /// [`Rng::from_state`] resumes the stream bit-exactly.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -1,0 +1,277 @@
+//! Fleet worker-pool contract: pool width never changes results, rovers
+//! scale past the worker count with ordering and seeds intact, and
+//! mid-mission checkpoint/restore reproduces the uninterrupted run
+//! bit-exactly (the resumable-`MissionRun` side of the same scheduler).
+
+use qfpga::config::{EnvKind, Precision};
+use qfpga::coordinator::{
+    run_fleet_with_workers, FleetReport, MissionCheckpoint, MissionConfig, MissionRun,
+};
+use qfpga::experiment::{BackendFactory, Experiment};
+use qfpga::fault::{FaultPlan, Mitigation};
+use qfpga::qlearn::backend::BackendKind;
+use qfpga::util::Json;
+
+fn quick_cfg() -> MissionConfig {
+    MissionConfig {
+        episodes: 8,
+        max_steps: 40,
+        backend: BackendKind::Cpu,
+        precision: Precision::Float,
+        ..Default::default()
+    }
+}
+
+/// Per-rover fingerprint strict enough to catch any trajectory change:
+/// every episode's (steps, reward bits, ε bits) plus the update count.
+fn fingerprint(r: &FleetReport) -> Vec<(String, u64, Vec<(usize, u32, u32)>)> {
+    r.rovers
+        .iter()
+        .map(|m| {
+            (
+                m.config_desc.clone(),
+                m.train.total_updates,
+                m.train
+                    .episodes
+                    .iter()
+                    .map(|e| (e.steps, e.total_reward.to_bits(), e.epsilon.to_bits()))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// The acceptance contract: 9 rovers on a 2-worker pool reproduce the
+/// thread-per-rover output (workers == rovers) and the fully serial pool,
+/// with per-rover ordering and seeds identical at every width.
+#[test]
+fn pool_width_never_changes_fleet_results() {
+    let cfg = quick_cfg();
+    let n = 9;
+    let per_rover = run_fleet_with_workers(&cfg, n, n).unwrap(); // thread-per-rover
+    let pooled = run_fleet_with_workers(&cfg, n, 2).unwrap(); // rovers >> workers
+    let serial = run_fleet_with_workers(&cfg, n, 1).unwrap();
+    let auto = run_fleet_with_workers(&cfg, n, 0).unwrap(); // min(cores, rovers)
+
+    assert_eq!(per_rover.rovers.len(), n);
+    assert_eq!(pooled.workers, 2);
+    assert!(auto.workers >= 1 && auto.workers <= n);
+
+    let want = fingerprint(&per_rover);
+    assert_eq!(fingerprint(&pooled), want, "2-worker pool diverged");
+    assert_eq!(fingerprint(&serial), want, "serial pool diverged");
+    assert_eq!(fingerprint(&auto), want, "auto pool diverged");
+
+    // seeds really differ per rover: descriptions embed `seed base + i`
+    // and trajectories are pairwise distinct
+    for i in 0..n {
+        assert!(
+            want[i].0.contains(&format!("seed {}", cfg.seed + i as u64)),
+            "rover {i} seed missing from `{}`",
+            want[i].0
+        );
+    }
+    for i in 1..n {
+        assert_ne!(want[0].2, want[i].2, "rovers 0 and {i} share a trajectory");
+    }
+}
+
+#[test]
+fn explicit_workers_ride_through_the_builder() {
+    let r = Experiment::from_mission(&quick_cfg())
+        .rovers(5)
+        .workers(3)
+        .run()
+        .unwrap();
+    assert_eq!(r.workers, 3);
+    assert_eq!(r.rovers.len(), 5);
+    let j = Json::parse(&qfpga::Report::to_json(&r).to_string()).unwrap();
+    assert_eq!(j.req_f64("workers").unwrap(), 3.0);
+}
+
+/// Mid-mission checkpoint/restore reproduces the uninterrupted run
+/// bit-exactly — through the serialized JSON form, on a stochastic
+/// scenario environment and on the cycle-accounting FPGA backend.
+#[test]
+fn checkpoint_restore_reproduces_the_uninterrupted_run() {
+    for (backend, precision, env, batch) in [
+        (BackendKind::Cpu, Precision::Float, EnvKind::Slip, 1usize),
+        (BackendKind::Cpu, Precision::Fixed, EnvKind::Simple, 4),
+        (BackendKind::FpgaSim, Precision::Fixed, EnvKind::Simple, 1),
+    ] {
+        let cfg = MissionConfig {
+            episodes: 10,
+            max_steps: 30,
+            backend,
+            precision,
+            env,
+            batch,
+            ..Default::default()
+        };
+        let factory = BackendFactory::for_kind(cfg.backend).unwrap();
+
+        // uninterrupted reference
+        let mut full = MissionRun::new(&cfg, &factory).unwrap();
+        full.run_episodes(cfg.episodes, &mut |_| {}).unwrap();
+        let want = full.finish().unwrap();
+
+        // interrupted at episode 4, round-tripped through JSON text
+        let mut head = MissionRun::new(&cfg, &factory).unwrap();
+        head.run_episodes(4, &mut |_| {}).unwrap();
+        let ckpt = head.checkpoint().unwrap();
+        drop(head);
+        let text = ckpt.to_json().to_string();
+        let restored =
+            MissionCheckpoint::from_json(&cfg.net(), &Json::parse(&text).unwrap()).unwrap();
+        let mut tail = MissionRun::restore(&cfg, &factory, restored).unwrap();
+        assert_eq!(tail.episodes_done(), 4);
+        tail.run_episodes(cfg.episodes, &mut |_| {}).unwrap();
+        let got = tail.finish().unwrap();
+
+        let ctx = format!("{backend:?}/{precision:?}/{env:?}/batch={batch}");
+        assert_eq!(got.train.episodes.len(), want.train.episodes.len(), "{ctx}");
+        for (g, w) in got.train.episodes.iter().zip(&want.train.episodes) {
+            assert_eq!(g.steps, w.steps, "{ctx}: steps");
+            assert_eq!(g.total_reward.to_bits(), w.total_reward.to_bits(), "{ctx}: reward");
+            assert_eq!(
+                g.mean_abs_q_err.to_bits(),
+                w.mean_abs_q_err.to_bits(),
+                "{ctx}: q_err"
+            );
+            assert_eq!(g.epsilon.to_bits(), w.epsilon.to_bits(), "{ctx}: epsilon");
+        }
+        assert_eq!(got.train.total_updates, want.train.total_updates, "{ctx}");
+        assert_eq!(got.fpga_cycles, want.fpga_cycles, "{ctx}: modeled cycles");
+    }
+}
+
+/// Checkpoint files round-trip through disk, and a fleet with a
+/// pre-existing checkpoint resumes that rover to the same result a clean
+/// fleet produces (then clears the file on completion).
+#[test]
+fn fleet_resumes_rovers_from_checkpoint_files() {
+    let cfg = quick_cfg();
+    let n = 3;
+    let dir = std::env::temp_dir().join("qfpga_fleet_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // clean reference fleet
+    let want = run_fleet_with_workers(&cfg, n, 2).unwrap();
+
+    // pre-seed a mid-mission checkpoint for rover 1 (seed base + 1)
+    let factory = BackendFactory::for_kind(cfg.backend).unwrap();
+    let mut rover1_cfg = cfg.clone();
+    rover1_cfg.seed = cfg.seed + 1;
+    let mut head = MissionRun::new(&rover1_cfg, &factory).unwrap();
+    head.run_episodes(3, &mut |_| {}).unwrap();
+    head.checkpoint().unwrap().save(&dir.join("rover-1.json")).unwrap();
+
+    let got = Experiment::from_mission(&cfg)
+        .rovers(n)
+        .workers(2)
+        .checkpoint(&dir, 100) // cadence larger than the mission: resume-only
+        .run()
+        .unwrap();
+
+    assert_eq!(fingerprint(&got), fingerprint(&want));
+    // completed rovers clear their resume state
+    for i in 0..n {
+        assert!(
+            !dir.join(format!("rover-{i}.json")).exists(),
+            "rover-{i} checkpoint not cleaned up"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checkpoint taken under one configuration refuses to resume another:
+/// the fingerprint covers everything that shapes the trajectory (seed,
+/// env, episode budget, batching, word format).
+#[test]
+fn stale_checkpoints_are_rejected_not_silently_resumed() {
+    let cfg = quick_cfg();
+    let factory = BackendFactory::for_kind(cfg.backend).unwrap();
+    let mut head = MissionRun::new(&cfg, &factory).unwrap();
+    head.run_episodes(3, &mut |_| {}).unwrap();
+    let ckpt = head.checkpoint().unwrap();
+
+    for other in [
+        MissionConfig { seed: cfg.seed + 1, ..cfg.clone() },
+        MissionConfig { max_steps: cfg.max_steps + 1, ..cfg.clone() },
+        MissionConfig { batch: 4, ..cfg.clone() },
+    ] {
+        let err = MissionRun::restore(&other, &factory, ckpt.clone()).unwrap_err();
+        assert!(err.to_string().contains("different mission configuration"), "{err}");
+    }
+    // the matching configuration still resumes
+    assert!(MissionRun::restore(&cfg, &factory, ckpt).is_ok());
+}
+
+/// Faults × checkpointing is rejected up front by the builder, before any
+/// episode runs — not at the first mid-run snapshot.
+#[test]
+fn builder_rejects_faulted_checkpointing_up_front() {
+    let dir = std::env::temp_dir().join("qfpga_fleet_fault_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let err = Experiment::from_mission(&MissionConfig {
+        episodes: 50,
+        precision: Precision::Fixed,
+        fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+        ..quick_cfg()
+    })
+    .rovers(2)
+    .checkpoint(&dir, 100) // cadence past the mission: must still fail fast
+    .run()
+    .unwrap_err();
+    assert!(err.to_string().contains("SEU"), "{err}");
+    assert!(!dir.exists(), "checkpoint dir created despite the rejection");
+}
+
+/// Missions under SEU injection refuse to checkpoint (the injection
+/// stream's state is not serializable) instead of resuming wrongly.
+#[test]
+fn faulted_missions_refuse_checkpoints() {
+    let cfg = MissionConfig {
+        episodes: 4,
+        max_steps: 20,
+        precision: Precision::Fixed,
+        fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+        ..Default::default()
+    };
+    let factory = BackendFactory::for_kind(cfg.backend).unwrap();
+    let mut run = MissionRun::new(&cfg, &factory).unwrap();
+    run.run_episodes(2, &mut |_| {}).unwrap();
+    let err = run.checkpoint().unwrap_err();
+    assert!(err.to_string().contains("SEU"), "{err}");
+}
+
+/// Progress streaming: every rover reports every episode, in episode order
+/// per rover, and the stream carries the same rewards the report does.
+#[test]
+fn progress_stream_covers_every_rover_episode() {
+    use std::sync::Mutex;
+    let cfg = quick_cfg();
+    let n = 4;
+    let events = Mutex::new(Vec::new());
+    let report = Experiment::from_mission(&cfg)
+        .rovers(n)
+        .workers(2)
+        .run_with_progress(&|p| events.lock().unwrap().push(p))
+        .unwrap();
+
+    let events = events.into_inner().unwrap();
+    assert_eq!(events.len(), n * cfg.episodes);
+    for rover in 0..n {
+        let mine: Vec<_> = events.iter().filter(|p| p.rover == rover).collect();
+        assert_eq!(mine.len(), cfg.episodes, "rover {rover}");
+        for (i, p) in mine.iter().enumerate() {
+            assert_eq!(p.episode, i, "rover {rover} out of order");
+            assert_eq!(p.episodes, cfg.episodes);
+            assert_eq!(
+                p.reward.to_bits(),
+                report.rovers[rover].train.episodes[i].total_reward.to_bits()
+            );
+        }
+    }
+}

@@ -471,3 +471,99 @@ fn random_char(rng: &mut Rng) -> char {
     const POOL: &[char] = &['a', 'Z', '0', ' ', '"', '\\', '\n', '\t', 'é', '✓', '{', '}'];
     POOL[rng.below(POOL.len())]
 }
+
+// ------------------------------------------------------------- PreparedNet
+
+/// Cache-invalidation soundness: any interleaving of parameter loads,
+/// stepwise updates, forwards and batched flushes through a `PreparedNet`
+/// matches the cache-free reference implementation (`nn::qupdate` /
+/// `nn::forward` threading raw parameters) bit for bit — the cache may
+/// never serve stale or raw weights.
+#[test]
+fn prop_prepared_net_interleavings_match_cache_free_reference() {
+    use qfpga::config::Hyper;
+    use qfpga::nn::{forward, qupdate, Datapath, PreparedNet};
+
+    let mut rng = Rng::seeded(9101);
+    for case in 0..40 {
+        let net = NetConfig::all()[rng.below(4)];
+        let fixed = rng.chance(0.5);
+        let dp = Datapath::paper(fixed.then(FixedSpec::default));
+        let hyper = Hyper::default();
+        let step = net.a * net.d;
+
+        let init = QNetParams::init(&net, 0.4, &mut rng);
+        let mut reference = init.clone();
+        let mut prepared = PreparedNet::new(init);
+        let mut q_buf = Vec::new();
+        let ctx = |op: usize| format!("case {case} ({}, fixed={fixed}), op {op}", net.name());
+
+        for op in 0..30 {
+            match rng.below(4) {
+                // invalidate: swap fresh (off-grid) parameters into both
+                0 => {
+                    let fresh = QNetParams::init(&net, rng.f32_range(0.1, 0.6), &mut rng);
+                    prepared.load(&fresh);
+                    reference = fresh;
+                }
+                // stepwise update
+                1 => {
+                    let sc = rng.vec_f32(step, -1.0, 1.0);
+                    let sn = rng.vec_f32(step, -1.0, 1.0);
+                    let (a, r) = (rng.below(net.a), rng.f32_range(-1.0, 1.0));
+                    let want = qupdate(&net, &reference, &sc, &sn, a, r, &hyper, &dp).unwrap();
+                    reference = want.params;
+                    let got = prepared.update(&net, &sc, &sn, a, r, &hyper, &dp).unwrap();
+                    assert_eq!(got.to_bits(), want.q_err.to_bits(), "{}", ctx(op));
+                }
+                // action-selection forward
+                2 => {
+                    let sa = rng.vec_f32(step, -1.0, 1.0);
+                    let want = forward(&net, &reference, &sa, &dp).unwrap();
+                    prepared.forward_into(&net, &sa, &dp, &mut q_buf).unwrap();
+                    assert_eq!(q_buf, want, "{}", ctx(op));
+                }
+                // batched flush of 1..=4 transitions
+                _ => {
+                    let b = rng.range(1, 5);
+                    let sc = rng.vec_f32(b * step, -1.0, 1.0);
+                    let sn = rng.vec_f32(b * step, -1.0, 1.0);
+                    let actions: Vec<usize> = (0..b).map(|_| rng.below(net.a)).collect();
+                    let rewards = rng.vec_f32(b, -1.0, 1.0);
+                    let mut want = Vec::new();
+                    for i in 0..b {
+                        let out = qupdate(
+                            &net,
+                            &reference,
+                            &sc[i * step..(i + 1) * step],
+                            &sn[i * step..(i + 1) * step],
+                            actions[i],
+                            rewards[i],
+                            &hyper,
+                            &dp,
+                        )
+                        .unwrap();
+                        reference = out.params;
+                        want.push(out.q_err);
+                    }
+                    let mut got = Vec::new();
+                    prepared
+                        .update_batch(&net, &sc, &sn, &actions, &rewards, &hyper, &dp, &mut got)
+                        .unwrap();
+                    assert_eq!(got, want, "{}", ctx(op));
+                }
+            }
+        }
+        // after the interleaving, one more update puts both on-grid and the
+        // full parameter state must agree to the bit
+        let sc = rng.vec_f32(step, -1.0, 1.0);
+        let sn = rng.vec_f32(step, -1.0, 1.0);
+        let out = qupdate(&net, &reference, &sc, &sn, 0, 0.1, &hyper, &dp).unwrap();
+        prepared.update(&net, &sc, &sn, 0, 0.1, &hyper, &dp).unwrap();
+        assert_eq!(
+            prepared.params().max_abs_diff(&out.params),
+            0.0,
+            "case {case}: final params diverged"
+        );
+    }
+}
