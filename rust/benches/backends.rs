@@ -1,6 +1,8 @@
 //! Bench: per-Q-update latency of the three backends on identical
-//! workloads, across all four paper configurations and both precisions —
-//! stepwise (`update`) vs batched (`update_batch`) side by side.
+//! workloads, across all four paper configurations and every kernel
+//! precision arm (fixed/float/int8/binary) — stepwise (`update`) vs
+//! batched (`update_batch`) side by side. XLA rows cover the paper
+//! precisions only (no artifacts are baked for the sub-8-bit arms).
 //!
 //! ```bash
 //! make artifacts && cargo bench --bench backends
@@ -105,7 +107,11 @@ fn run_batched<B: QBackend>(name: &str, backend: &mut B, w: &Workload, iters: us
 }
 
 /// The model-derived perf trajectory (table `BM1`): modeled device
-/// throughput, stepwise vs batched, per paper configuration and precision.
+/// throughput, stepwise vs batched, per paper configuration and kernel
+/// precision arm (the int8/binary rows follow the fixed cycle law — the
+/// DSP48 multiplies at any narrow width in one cycle and the XNOR
+/// popcount tree closes timing like the adder tree — so their values
+/// equal the fixed rows by construction).
 /// Deterministic — this is the part of `BENCH_backends.json` the CI
 /// `bench-smoke` job diffs against the committed
 /// `ci/BENCH_backends_baseline.json` (`qfpga diff --tol`); the measured
@@ -119,7 +125,7 @@ fn model_trajectory_table() -> PaperTable {
         "kQ/s",
     );
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (stepwise, batched) = t.trajectory_kq_s(&net, prec, BATCH, &dev);
             table = table
                 .row(
@@ -159,7 +165,7 @@ fn main() {
     print_header("per-Q-update latency (measured on this host)");
     for net in NetConfig::all() {
         let w = Workload::synthetic(net, 512, 11);
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let mut cpu = build(&factory, &BackendSpec::cpu(net, prec));
             let r =
                 run_backend(&format!("cpu       {} {}", net.name(), prec.as_str()), &mut cpu, &w, iters);
@@ -170,7 +176,7 @@ fn main() {
                 run_backend(&format!("fpga-sim  {} {}", net.name(), prec.as_str()), &mut sim, &w, iters);
             record_result(&mut records, "stepwise", &r);
 
-            if factory.has_runtime() {
+            if factory.has_runtime() && prec.is_paper() {
                 let mut xla = build(&factory, &BackendSpec::xla(net, prec));
                 let r =
                     run_backend(&format!("xla       {} {}", net.name(), prec.as_str()), &mut xla, &w, iters);
@@ -183,7 +189,7 @@ fn main() {
     print_header(&format!("batched vs stepwise updates/s (B = {BATCH})"));
     for net in NetConfig::all() {
         let w = Workload::synthetic(net, 512, 11);
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let mut cpu = build(&factory, &BackendSpec::cpu(net, prec));
             let stepwise = run_backend(
                 &format!("cpu  step {} {}", net.name(), prec.as_str()),

@@ -117,13 +117,25 @@ impl std::str::FromStr for EnvKind {
     }
 }
 
-/// Arithmetic mode of the datapath (the paper's central comparison axis).
+/// Arithmetic mode of the datapath (the paper's central comparison axis,
+/// extended with the sub-8-bit kernel arms).
+///
+/// Canonical spellings are what [`Precision::as_str`] emits (`"fixed"`,
+/// `"float"`, `"int8"`, `"binary"`); `"floating"` and `"bnn"` are accepted
+/// as input aliases but never printed. The paper tables enumerate only the
+/// two paper precisions (see `BackendSpec::matrix`); the sub-8-bit arms are
+/// opted into explicitly by the CLI, the benches and the conformance suite.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Q(word, frac) fixed point on DSP48-style MACs.
     Fixed,
     /// Single-precision floating point on LogiCORE-style FP cores.
     Float,
+    /// 8-bit fixed point on the canonical Q(8,4) grid — narrow-MAC arm
+    /// (QForce-RL-style sub-byte arithmetic).
+    Int8,
+    /// Binarized ±1 register grid — XNOR/popcount-style arm (BNN).
+    Binary,
 }
 
 impl Precision {
@@ -131,7 +143,21 @@ impl Precision {
         match self {
             Precision::Fixed => "fixed",
             Precision::Float => "float",
+            Precision::Int8 => "int8",
+            Precision::Binary => "binary",
         }
+    }
+
+    /// Every precision arm (canonical enumeration order: the paper
+    /// precisions first, then the sub-8-bit kernel arms).
+    pub fn all() -> [Precision; 4] {
+        [Precision::Fixed, Precision::Float, Precision::Int8, Precision::Binary]
+    }
+
+    /// Whether this arm is one of the paper's two precisions — the only
+    /// ones with baked XLA artifacts and paper-table rows.
+    pub fn is_paper(self) -> bool {
+        matches!(self, Precision::Fixed | Precision::Float)
     }
 }
 
@@ -141,7 +167,12 @@ impl std::str::FromStr for Precision {
         match s {
             "fixed" => Ok(Precision::Fixed),
             "float" | "floating" => Ok(Precision::Float),
-            other => Err(Error::Config(format!("unknown precision `{other}`"))),
+            "int8" => Ok(Precision::Int8),
+            "binary" | "bnn" => Ok(Precision::Binary),
+            other => Err(Error::Config(format!(
+                "unknown precision `{other}` (expected one of: fixed, float, int8, \
+                 binary; aliases: floating, bnn)"
+            ))),
         }
     }
 }
@@ -312,11 +343,26 @@ mod tests {
     #[test]
     fn parse_errors() {
         assert!("gpu".parse::<Arch>().is_err());
-        assert!("double".parse::<Precision>().is_err());
+        // the precision error must list the valid spellings, like env's
+        let err = "double".parse::<Precision>().unwrap_err().to_string();
+        for spelling in ["fixed", "float", "int8", "binary", "bnn"] {
+            assert!(err.contains(spelling), "error must list `{spelling}`: {err}");
+        }
         // the env error must list the valid spellings, not fail opaquely
         let err = "medium".parse::<EnvKind>().unwrap_err().to_string();
         for spelling in ["simple", "complex", "crater", "slip", "energy"] {
             assert!(err.contains(spelling), "error must list `{spelling}`: {err}");
         }
+    }
+
+    #[test]
+    fn precision_aliases_parse_to_canonical() {
+        assert_eq!("floating".parse::<Precision>().unwrap(), Precision::Float);
+        assert_eq!("bnn".parse::<Precision>().unwrap(), Precision::Binary);
+        for prec in Precision::all() {
+            assert_eq!(prec.as_str().parse::<Precision>().unwrap(), prec);
+        }
+        assert!(Precision::Fixed.is_paper() && Precision::Float.is_paper());
+        assert!(!Precision::Int8.is_paper() && !Precision::Binary.is_paper());
     }
 }

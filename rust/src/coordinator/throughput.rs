@@ -3,7 +3,8 @@
 //! The paper's pitch is throughput, so the host path is benchmarked the
 //! same way the device is modeled. B2 puts three CPU execution paths side
 //! by side on identical seeded workloads, per paper configuration and
-//! precision:
+//! kernel precision arm (all of [`Precision::all`] — the int8/binary
+//! arms ride the same rows as fixed/float):
 //!
 //! * **stepwise-reference** — the pre-rework per-call path
 //!   ([`crate::nn::qupdate()`]): fresh buffers and a full weight
@@ -23,7 +24,6 @@ use std::time::Instant;
 
 use crate::config::{Hyper, NetConfig, Precision};
 use crate::error::Result;
-use crate::fixed::FixedSpec;
 use crate::nn::params::QNetParams;
 use crate::nn::qupdate::{self, Datapath};
 use crate::qlearn::backend::BackendKind;
@@ -78,10 +78,7 @@ fn measure_reference_stepwise(
     workload: &Workload,
     warmup: usize,
 ) -> Result<f64> {
-    let dp = Datapath::paper(match prec {
-        Precision::Fixed => Some(FixedSpec::default()),
-        Precision::Float => None,
-    });
+    let dp = Datapath::for_precision(prec);
     let hyper = Hyper::default();
     let mut rng = Rng::seeded(0xF00D);
     let mut params = QNetParams::init(net, 0.3, &mut rng);
@@ -129,7 +126,7 @@ pub fn throughput_table(spec: &ThroughputSpec) -> Result<PaperTable> {
     );
 
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let workload = Workload::synthetic(net, n + warmup, 11);
             let label = format!("{} {}", net.name(), prec.as_str());
 
@@ -225,8 +222,15 @@ mod tests {
     fn b2_covers_every_config_and_the_fleet_rows() {
         let t = throughput_table(&quick_spec()).unwrap();
         assert_eq!(t.id, "B2");
-        // 4 configs × 2 precisions × (3 paths + 1 speedup) + 3 fleet rows
-        assert_eq!(t.rows.len(), 4 * 2 * 4 + 3);
+        // 4 configs × 4 precisions × (3 paths + 1 speedup) + 3 fleet rows
+        assert_eq!(t.rows.len(), 4 * 4 * 4 + 3);
+        for prec in Precision::all() {
+            assert!(
+                t.rows.iter().any(|r| r.label.contains(prec.as_str())),
+                "no {} rows",
+                prec.as_str()
+            );
+        }
         assert!(t.rows.iter().all(|r| r.ours > 0.0), "non-positive throughput");
         assert!(t
             .rows

@@ -96,6 +96,9 @@ impl BackendSpec {
         let grid = NetConfig::grid();
         let mut out = Vec::with_capacity(grid.len() * 2 * kinds.len());
         for net in grid {
+            // deliberately the paper precisions only ([`Precision::is_paper`]):
+            // the int8/binary kernel arms are covered by the throughput table
+            // and the conformance suites, not the campaign grid
             for prec in [Precision::Fixed, Precision::Float] {
                 for &kind in kinds {
                     out.push(BackendSpec::new(kind, net, prec));
@@ -393,6 +396,13 @@ impl BackendFactory {
                 spec.hyper,
             )))),
             BackendKind::Xla => {
+                if !spec.precision.is_paper() {
+                    return Err(Error::Config(format!(
+                        "XLA artifacts are baked for the paper precisions \
+                         (fixed, float); `{}` is unsupported on this backend",
+                        spec.precision.as_str()
+                    )));
+                }
                 let rt = self.runtime.as_ref().ok_or_else(|| {
                     Error::Config(
                         "XLA backend needs compiled artifacts (a Runtime); \
@@ -432,10 +442,11 @@ impl BackendFactory {
         let Some(plan) = spec.fault else {
             return Ok(BuiltBackend::Clean(backend));
         };
-        // expose the FIFO/datapath words of the fixed datapath to the same
-        // arrival stream under every mitigation (hardened strategies count
-        // the strikes as masked/corrected)
-        if spec.precision == Precision::Fixed {
+        // expose the FIFO/datapath words of the integer datapaths (Q(18,12)
+        // and the pinned Q(8,4) int8 arm) to the same arrival stream under
+        // every mitigation (hardened strategies count the strikes as
+        // masked/corrected)
+        if matches!(spec.precision, Precision::Fixed | Precision::Int8) {
             if let Some(acc) = backend.accelerator_mut() {
                 acc.set_seu_hook(Some(SeuHook::new(
                     seed ^ FAULT_FIFO_SALT,
@@ -510,6 +521,26 @@ mod tests {
             .build(&BackendSpec::xla(net, Precision::Fixed), params_for(&net, 3))
             .unwrap_err();
         assert!(err.to_string().contains("artifacts"), "{err}");
+    }
+
+    /// The local backends accept every kernel arm; XLA rejects the
+    /// non-paper precisions up front with an error naming the culprit.
+    #[test]
+    fn kernel_arms_build_locally_but_not_on_xla() {
+        let factory = BackendFactory::offline();
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        for prec in [Precision::Int8, Precision::Binary] {
+            for kind in [BackendKind::Cpu, BackendKind::FpgaSim] {
+                let spec = BackendSpec::new(kind, net, prec);
+                let mut b = factory.build(&spec, params_for(&net, 11)).unwrap();
+                let q = b.q_values(&vec![0.1; net.a * net.d]).unwrap();
+                assert_eq!(q.len(), net.a);
+            }
+            let err = factory
+                .build(&BackendSpec::xla(net, prec), params_for(&net, 11))
+                .unwrap_err();
+            assert!(err.to_string().contains(prec.as_str()), "{err}");
+        }
     }
 
     #[test]

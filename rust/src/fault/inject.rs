@@ -56,7 +56,10 @@ pub fn unflatten_params(cfg: &NetConfig, flat: &[f32]) -> Result<QNetParams> {
 
 /// Views network weights as the raw storage words the radiation model
 /// flips: Q(word, frac) integer words in fixed mode (the BRAM/FF weight
-/// store of the paper's datapath), IEEE-754 bit patterns in float mode.
+/// store of the paper's datapath), IEEE-754 bit patterns in float mode,
+/// Q(8,4) words for the int8 kernel arm (the spec is pinned — the arm has
+/// exactly one grid) and single sign bits for the binary arm (a strike on
+/// a ±1 weight can only flip its sign).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WordCodec {
     prec: Precision,
@@ -65,14 +68,16 @@ pub struct WordCodec {
 
 impl WordCodec {
     pub fn new(prec: Precision, spec: FixedSpec) -> WordCodec {
+        let spec = if prec == Precision::Int8 { FixedSpec::int8() } else { spec };
         WordCodec { prec, spec }
     }
 
     /// Susceptible bits per stored word.
     pub fn bits_per_word(&self) -> u32 {
         match self.prec {
-            Precision::Fixed => self.spec.word,
+            Precision::Fixed | Precision::Int8 => self.spec.word,
             Precision::Float => 32,
+            Precision::Binary => 1,
         }
     }
 
@@ -83,18 +88,21 @@ impl WordCodec {
     /// Scalar → storage word (low `bits_per_word()` bits of the u64).
     pub fn encode(&self, x: f32) -> u64 {
         match self.prec {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 => {
                 let mask = (1u64 << self.spec.word) - 1;
                 (Fixed::from_f32(x, self.spec).raw() as u64) & mask
             }
             Precision::Float => x.to_bits() as u64,
+            // sign bit: 1 = negative, matching the kernel's sign grid
+            // (sign(0) = +1 → encodes 0)
+            Precision::Binary => (x < 0.0) as u64,
         }
     }
 
     /// Storage word → scalar.
     pub fn decode(&self, w: u64) -> f32 {
         match self.prec {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 => {
                 let mask = (1u64 << self.spec.word) - 1;
                 let sign = 1u64 << (self.spec.word - 1);
                 let w = w & mask;
@@ -102,6 +110,13 @@ impl WordCodec {
                 Fixed::from_raw(raw, self.spec).to_f32()
             }
             Precision::Float => f32::from_bits(w as u32),
+            Precision::Binary => {
+                if w & 1 == 1 {
+                    -1.0
+                } else {
+                    1.0
+                }
+            }
         }
     }
 
@@ -170,6 +185,31 @@ mod tests {
             let x = rng.f32_range(-100.0, 100.0);
             assert_eq!(fc.decode(fc.encode(x)).to_bits(), x.to_bits());
         }
+    }
+
+    /// The kernel-arm codecs: Int8 pins Q(8,4) no matter what spec the
+    /// caller supplies; Binary words are a single sign bit whose flip is
+    /// exactly a sign flip.
+    #[test]
+    fn kernel_arm_codecs() {
+        let i8c = WordCodec::new(Precision::Int8, FixedSpec::default());
+        assert_eq!(i8c.bits_per_word(), 8);
+        assert_eq!(i8c.spec(), FixedSpec::int8());
+        let mut rng = Rng::seeded(14);
+        for _ in 0..200 {
+            let x = Fixed::from_f32(rng.f32_range(-4.0, 4.0), FixedSpec::int8()).to_f32();
+            assert_eq!(i8c.decode(i8c.encode(x)), x, "{x}");
+        }
+        let bc = WordCodec::new(Precision::Binary, FixedSpec::default());
+        assert_eq!(bc.bits_per_word(), 1);
+        assert_eq!(bc.encode(1.0), 0);
+        assert_eq!(bc.encode(-1.0), 1);
+        assert_eq!(bc.encode(0.0), 0); // sign(0) = +1, like the kernel grid
+        assert_eq!(bc.decode(0), 1.0);
+        assert_eq!(bc.decode(1), -1.0);
+        // a single-bit upset flips the sign and nothing else
+        assert_eq!(bc.decode(bc.encode(1.0) ^ 1), -1.0);
+        assert_eq!(bc.decode(bc.encode(-1.0) ^ 1), 1.0);
     }
 
     #[test]

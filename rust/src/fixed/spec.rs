@@ -28,6 +28,13 @@ impl FixedSpec {
         FixedSpec { word, frac }
     }
 
+    /// Q(8,4): the canonical grid of the `Precision::Int8` kernel arm.
+    /// Range ±8 matches the sigmoid LUT input window (`LutSpec::xmax`), so
+    /// the narrow words lose fraction bits, not dynamic range.
+    pub const fn int8() -> Self {
+        FixedSpec { word: 8, frac: 4 }
+    }
+
     /// Validate the format (word within machine limits, frac < word).
     pub fn validate(&self) -> Result<()> {
         if self.word < 2 || self.word > 63 {
@@ -102,6 +109,16 @@ mod tests {
         assert!(FixedSpec::new(64, 12).validate().is_err());
         assert!(FixedSpec::new(16, 16).validate().is_err());
         assert!(FixedSpec::new(16, 17).validate().is_err());
+    }
+
+    #[test]
+    fn int8_grid_constants() {
+        let s = FixedSpec::int8();
+        assert!(s.validate().is_ok());
+        assert_eq!((s.word, s.frac), (8, 4));
+        assert_eq!(s.lsb(), 1.0 / 16.0);
+        // dynamic range covers the sigmoid LUT window ±8
+        assert!(s.max_value() >= 7.9 && s.min_value() <= -8.0);
     }
 
     #[test]

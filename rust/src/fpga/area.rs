@@ -14,13 +14,49 @@
 //!   perceptron, H parallel chains for the MLP hidden layer, one backprop
 //!   chain, two auxiliary multipliers and a comparator. Area is dominated
 //!   by the FP cores and nearly independent of D (the chains are serial).
-//! * Both: two Q-value FIFOs, control FSM per block (3 blocks).
+//! * **Int8**: the fixed fine-grained structure with 8-bit MACs — same
+//!   DSP count (a DSP48 multiply is one DSP at any width), thinner fabric.
+//! * **Binary**: XNOR + popcount dot products in pure LUT fabric — zero
+//!   DSPs; only the sigmoid ROMs and common plumbing remain.
+//! * All: two Q-value FIFOs, control FSM per block (3 blocks).
 
 use crate::config::{Arch, NetConfig, Precision};
 use crate::error::{Error, Result};
 
 use super::device::Virtex7;
 use super::units::{cost, Resources};
+
+/// The paper's fine-grained parallel structure — one multiplier per weight
+/// plus the adder trees and ROMs — parameterized by the MAC unit costs so
+/// the Fixed and Int8 arms share one derivation.
+fn fine_grained(r: &mut Resources, cfg: &NetConfig, mul: Resources, add: Resources) {
+    let d = cfg.d as u64;
+    let h = cfg.h as u64;
+    match cfg.arch {
+        Arch::Perceptron => {
+            // feed-forward: D multipliers, D adders (tree + bias), ROM
+            r.add(mul.scaled(d));
+            r.add(add.scaled(d));
+            r.add(cost::SIGMOID_ROM);
+            // backprop: δ (1 mul) + ΔW (D+1 mul) + update adders
+            r.add(mul.scaled(d + 2));
+            r.add(add.scaled(d + 1));
+        }
+        Arch::Mlp => {
+            // hidden: H neurons × (D mul + D add + ROM)
+            r.add(mul.scaled(d * h));
+            r.add(add.scaled(d * h));
+            r.add(cost::SIGMOID_ROM.scaled(h));
+            // output: H mul + H add + ROM
+            r.add(mul.scaled(h));
+            r.add(add.scaled(h));
+            r.add(cost::SIGMOID_ROM);
+            // backprop: δ2 (1) + δ1 (2H) + ΔW2 (H+1) + ΔW1 (DH+H)
+            r.add(mul.scaled(1 + 2 * h + h + 1 + d * h + h));
+            r.add(add.scaled(d * h + 2 * h + 1));
+        }
+    }
+}
 
 /// Count the resources of one accelerator instance.
 pub fn accelerator_resources(cfg: &NetConfig, prec: Precision) -> Resources {
@@ -29,31 +65,18 @@ pub fn accelerator_resources(cfg: &NetConfig, prec: Precision) -> Resources {
     let mut r = Resources::default();
 
     match prec {
-        Precision::Fixed => {
-            match cfg.arch {
-                Arch::Perceptron => {
-                    // feed-forward: D multipliers, D adders (tree + bias), ROM
-                    r.add(cost::FX_MUL.scaled(d));
-                    r.add(cost::FX_ADD.scaled(d));
-                    r.add(cost::SIGMOID_ROM);
-                    // backprop: δ (1 mul) + ΔW (D+1 mul) + update adders
-                    r.add(cost::FX_MUL.scaled(d + 2));
-                    r.add(cost::FX_ADD.scaled(d + 1));
-                }
-                Arch::Mlp => {
-                    // hidden: H neurons × (D mul + D add + ROM)
-                    r.add(cost::FX_MUL.scaled(d * h));
-                    r.add(cost::FX_ADD.scaled(d * h));
-                    r.add(cost::SIGMOID_ROM.scaled(h));
-                    // output: H mul + H add + ROM
-                    r.add(cost::FX_MUL.scaled(h));
-                    r.add(cost::FX_ADD.scaled(h));
-                    r.add(cost::SIGMOID_ROM);
-                    // backprop: δ2 (1) + δ1 (2H) + ΔW2 (H+1) + ΔW1 (DH+H)
-                    r.add(cost::FX_MUL.scaled(1 + 2 * h + h + 1 + d * h + h));
-                    r.add(cost::FX_ADD.scaled(d * h + 2 * h + 1));
-                }
-            }
+        Precision::Fixed => fine_grained(&mut r, cfg, cost::FX_MUL, cost::FX_ADD),
+        Precision::Int8 => fine_grained(&mut r, cfg, cost::INT8_MUL, cost::INT8_ADD),
+        Precision::Binary => {
+            // one XNOR+popcount slice per weight for the forward sweeps,
+            // one more per weight for the sign-flip write-back generators;
+            // the sigmoid ROMs survive (activations stay LUT-indexed).
+            let (fwd, bp, roms) = match cfg.arch {
+                Arch::Perceptron => (d, d + 2, 1),
+                Arch::Mlp => (d * h + h, 1 + 2 * h + h + 1 + d * h + h, h + 1),
+            };
+            r.add(cost::XNOR_POP.scaled(fwd + bp));
+            r.add(cost::SIGMOID_ROM.scaled(roms));
         }
         Precision::Float => {
             let chains = match cfg.arch {
@@ -143,7 +166,7 @@ mod tests {
     fn all_paper_configs_fit_the_485t() {
         let dev = Virtex7::default();
         for cfg in NetConfig::all() {
-            for prec in [Precision::Fixed, Precision::Float] {
+            for prec in Precision::all() {
                 let u = check_fit(&cfg, prec, &dev).unwrap();
                 assert!(
                     u.max_fraction() < 0.25,
@@ -154,11 +177,28 @@ mod tests {
         }
     }
 
+    /// Ordering of the fabric footprints: Int8 keeps the Fixed DSP count
+    /// but sheds LUT/FF area; Binary drops the DSPs entirely and is the
+    /// smallest arm of all.
+    #[test]
+    fn sub8_arms_shrink_the_fabric() {
+        for cfg in NetConfig::all() {
+            let fx = accelerator_resources(&cfg, Precision::Fixed);
+            let i8r = accelerator_resources(&cfg, Precision::Int8);
+            let bin = accelerator_resources(&cfg, Precision::Binary);
+            assert_eq!(i8r.dsps, fx.dsps, "{}", cfg.name());
+            assert!(i8r.luts < fx.luts && i8r.ffs < fx.ffs, "{}", cfg.name());
+            assert_eq!(bin.dsps, 0, "{}", cfg.name());
+            assert!(bin.luts < i8r.luts, "{}", cfg.name());
+            assert_eq!(bin.bram36, i8r.bram36, "{}", cfg.name());
+        }
+    }
+
     #[test]
     fn mitigated_fit_even_a_triplicated_complex_mlp_fits() {
         let dev = Virtex7::default();
         for cfg in NetConfig::all() {
-            for prec in [Precision::Fixed, Precision::Float] {
+            for prec in Precision::all() {
                 // triple the whole design (TMR-class overhead): still fits
                 let extra = accelerator_resources(&cfg, prec).scaled(2);
                 let u = check_fit_with(&cfg, prec, &dev, &extra).unwrap();

@@ -9,9 +9,15 @@
 //! * **Fixed mode** computes with true integer Q(word,frac) arithmetic:
 //!   wide DSP48-style accumulators ([`crate::fixed::Acc`]), one rounding per
 //!   register write — the datapath the paper synthesizes.
+//! * **Int8 mode** is the same integer datapath with the word format pinned
+//!   to the canonical Q(8,4) grid ([`FixedSpec::int8`]) — the narrow-MAC
+//!   sub-8-bit arm.
 //! * **Float mode** computes in IEEE f32 (LogiCORE cores are IEEE), which is
 //!   numerically identical to the CPU/XLA float path; only the *timing*
 //!   differs.
+//! * **Binary mode** delegates to the `nn` kernel with the ±1 sign-grid
+//!   register rule (the XNOR/popcount fabric computes exact ±1 dot
+//!   products, so the f32 delegation is bit-identical to the CPU arm).
 //!
 //! Every call returns its cycle charge from the structural
 //! [`TimingModel`], and the accelerator accumulates lifetime counters used
@@ -160,7 +166,9 @@ impl FpgaAccelerator {
     }
 
     /// Instantiate with an explicit fixed-point word format (the X3
-    /// word-length axis); `qspec` is ignored in float precision.
+    /// word-length axis); `qspec` is ignored in float and binary precision,
+    /// and pinned to the canonical Q(8,4) grid in int8 precision (matching
+    /// the CPU arm).
     pub fn with_spec(
         cfg: NetConfig,
         precision: Precision,
@@ -169,11 +177,17 @@ impl FpgaAccelerator {
         timing: TimingModel,
         qspec: FixedSpec,
     ) -> Self {
+        let qspec = match precision {
+            Precision::Int8 => FixedSpec::int8(),
+            _ => qspec,
+        };
         let quant = Quantizer::new(qspec);
         let rom = FixedRom::build(LutSpec::default(), qspec);
         let (fixed_params, float_params) = match precision {
-            Precision::Fixed => (Some(FixedParams::quantize(params, qspec)), None),
-            Precision::Float => (None, Some(params.clone())),
+            Precision::Fixed | Precision::Int8 => {
+                (Some(FixedParams::quantize(params, qspec)), None)
+            }
+            Precision::Float | Precision::Binary => (None, Some(params.clone())),
         };
         FpgaAccelerator {
             scratch_q: Vec::with_capacity(cfg.a),
@@ -228,18 +242,20 @@ impl FpgaAccelerator {
     /// Current weights, dequantized to f32 (telemetry / checkpointing).
     pub fn params(&self) -> QNetParams {
         match self.precision {
-            Precision::Fixed => self.fixed_params.as_ref().unwrap().dequantize(),
-            Precision::Float => self.float_params.as_ref().unwrap().clone(),
+            Precision::Fixed | Precision::Int8 => {
+                self.fixed_params.as_ref().unwrap().dequantize()
+            }
+            Precision::Float | Precision::Binary => self.float_params.as_ref().unwrap().clone(),
         }
     }
 
     /// Load new weights (e.g. from a checkpoint or the XLA trainer).
     pub fn load_params(&mut self, params: &QNetParams) {
         match self.precision {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 => {
                 self.fixed_params = Some(FixedParams::quantize(params, self.qspec))
             }
-            Precision::Float => self.float_params = Some(params.clone()),
+            Precision::Float | Precision::Binary => self.float_params = Some(params.clone()),
         }
     }
 
@@ -267,12 +283,12 @@ impl FpgaAccelerator {
     pub fn forward(&mut self, sa: &[f32]) -> Result<(Vec<f32>, u64)> {
         self.check_sa(sa)?;
         let q = match self.precision {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 => {
                 let mut out = Vec::with_capacity(self.cfg.a);
                 self.fixed_sweep(sa, &mut out, None, None)?;
                 out.iter().map(Fixed::to_f32).collect()
             }
-            Precision::Float => self.float_forward(sa)?.q,
+            Precision::Float | Precision::Binary => self.nn_forward(sa)?.q,
         };
         let cycles = self.timing.forward_cycles(&self.cfg, self.precision);
         self.stats.forwards += 1;
@@ -293,8 +309,8 @@ impl FpgaAccelerator {
             )));
         }
         let out = match self.precision {
-            Precision::Fixed => self.fixed_qupdate(t)?,
-            Precision::Float => self.float_qupdate(t)?,
+            Precision::Fixed | Precision::Int8 => self.fixed_qupdate(t)?,
+            Precision::Float | Precision::Binary => self.nn_qupdate(t)?,
         };
         let breakdown = self.timing.qupdate(&self.cfg, self.precision);
         self.stats.updates += 1;
@@ -352,8 +368,8 @@ impl FpgaAccelerator {
                 reward: rewards[k],
             };
             let out = match self.precision {
-                Precision::Fixed => self.fixed_qupdate(&t)?,
-                Precision::Float => self.float_qupdate(&t)?,
+                Precision::Fixed | Precision::Int8 => self.fixed_qupdate(&t)?,
+                Precision::Float | Precision::Binary => self.nn_qupdate(&t)?,
             };
             errs.push(out.q_err);
         }
@@ -549,35 +565,35 @@ impl FpgaAccelerator {
         Ok(out)
     }
 
-    // --------------------------------------------------------- float path
+    // ------------------------------------------- nn-delegated paths
+    // (float: LogiCORE FP cores are IEEE-754; binary: the XNOR/popcount
+    // fabric computes exact ±1 dot products — both are bit-identical to
+    // the CPU `nn` kernel, so the simulator delegates and only the cycle
+    // accounting differs.)
 
-    fn float_datapath(&self) -> crate::nn::qupdate::Datapath {
-        // LogiCORE FP cores are IEEE-754; the sigmoid is still a ROM.
-        crate::nn::qupdate::Datapath::new(
-            None,
-            crate::nn::activation::Activation::lut_default(None),
-        )
+    fn nn_datapath(&self) -> crate::nn::qupdate::Datapath {
+        crate::nn::qupdate::Datapath::for_precision(self.precision)
     }
 
-    fn float_forward(&self, sa: &[f32]) -> Result<crate::nn::qupdate::ForwardTrace> {
+    fn nn_forward(&self, sa: &[f32]) -> Result<crate::nn::qupdate::ForwardTrace> {
         crate::nn::qupdate::forward_full(
             &self.cfg,
-            self.float_params.as_ref().expect("float params"),
+            self.float_params.as_ref().expect("nn-delegated params"),
             sa,
-            &self.float_datapath(),
+            &self.nn_datapath(),
         )
     }
 
-    fn float_qupdate(&mut self, t: &Transition) -> Result<QUpdateOutput> {
+    fn nn_qupdate(&mut self, t: &Transition) -> Result<QUpdateOutput> {
         let out = crate::nn::qupdate::qupdate(
             &self.cfg,
-            self.float_params.as_ref().expect("float params"),
+            self.float_params.as_ref().expect("nn-delegated params"),
             t.sa_cur,
             t.sa_next,
             t.action,
             t.reward,
             &self.hyper,
-            &self.float_datapath(),
+            &self.nn_datapath(),
         )?;
         self.float_params = Some(out.params.clone());
         Ok(out)
@@ -723,9 +739,88 @@ mod tests {
             .is_err());
     }
 
+    /// Binary mode must delegate to the `nn` kernel bit-exactly, like the
+    /// float path — the cross-backend backbone of the binary arm.
+    #[test]
+    fn binary_mode_matches_cpu_nn_exactly() {
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            let (cfg, params, mut acc) = setup(arch, EnvKind::Simple, Precision::Binary);
+            let mut rng = Rng::seeded(19);
+            let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+            let (out, _) = acc
+                .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                .unwrap();
+            let dp = Datapath::for_precision(Precision::Binary);
+            let want =
+                qupdate::qupdate(&cfg, &params, &sa_cur, &sa_next, action, reward,
+                                 &Hyper::default(), &dp)
+                    .unwrap();
+            assert_eq!(out.q_err, want.q_err, "{arch:?}");
+            assert_eq!(out.params, want.params, "{arch:?}");
+            assert_eq!(out.q_cur, want.q_cur, "{arch:?}");
+            // updated weights live on the ±1 sign grid
+            for t in out.params.to_tensors() {
+                for v in t {
+                    assert!(v == 1.0 || v == -1.0, "{arch:?}: off-grid weight {v}");
+                }
+            }
+        }
+    }
+
+    /// Int8 mode is the integer datapath pinned to Q(8,4): it must track
+    /// the CPU fake-quant arm within the same per-update LSB budget the
+    /// Q(18,12) fixed mode honors.
+    #[test]
+    fn int8_mode_tracks_fakequant_nn_within_lsb_budget() {
+        let lsb = FixedSpec::int8().lsb() as f32;
+        for arch in [Arch::Perceptron, Arch::Mlp] {
+            let (cfg, params, mut acc) = setup(arch, EnvKind::Simple, Precision::Int8);
+            let mut rng = Rng::seeded(20);
+            let (sa_cur, sa_next, action, reward) = transition(&cfg, &mut rng);
+            let (out, _) = acc
+                .qupdate(&Transition { sa_cur: &sa_cur, sa_next: &sa_next, action, reward })
+                .unwrap();
+            let want = qupdate::qupdate(
+                &cfg,
+                &params,
+                &sa_cur,
+                &sa_next,
+                action,
+                reward,
+                &Hyper::default(),
+                &Datapath::for_precision(Precision::Int8),
+            )
+            .unwrap();
+            assert!(
+                (out.q_err - want.q_err).abs() <= 4.0 * lsb,
+                "{arch:?}: q_err {} vs {}",
+                out.q_err,
+                want.q_err
+            );
+            assert!(
+                out.params.max_abs_diff(&want.params) <= 4.0 * lsb,
+                "{arch:?}: params diverged"
+            );
+            // the word format really is pinned: Q-values land on the Q(8,4)
+            // grid even when a wider spec was requested
+            let spec = FixedSpec::int8();
+            let wide = FpgaAccelerator::with_spec(
+                cfg,
+                Precision::Int8,
+                &params,
+                Hyper::default(),
+                TimingModel::default(),
+                FixedSpec::default(),
+            );
+            for v in wide.params().to_tensors().concat() {
+                assert_eq!(v, Fixed::from_f32(v, spec).to_f32(), "off the Q(8,4) grid");
+            }
+        }
+    }
+
     #[test]
     fn batched_qupdate_matches_stepwise_and_charges_pipelined_cycles() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (cfg, params, mut batched) = setup(Arch::Mlp, EnvKind::Simple, prec);
             let mut stepwise = FpgaAccelerator::paper(cfg, prec, &params, Hyper::default());
             let mut rng = Rng::seeded(17);

@@ -200,6 +200,21 @@ mod tests {
         }
     }
 
+    /// The narrow kernel arms draw strictly less than Q(18,12), which in
+    /// turn draws less than float — power tracks the fabric footprint
+    /// (Binary sheds every DSP, Int8 thins the routing).
+    #[test]
+    fn narrow_arms_draw_less_power() {
+        let c = PowerCoeffs::default();
+        for env in [EnvKind::Simple, EnvKind::Complex] {
+            let bin = power_w(&mlp(env), Precision::Binary, &c);
+            let i8w = power_w(&mlp(env), Precision::Int8, &c);
+            let fx = power_w(&mlp(env), Precision::Fixed, &c);
+            let fp = power_w(&mlp(env), Precision::Float, &c);
+            assert!(bin < i8w && i8w < fx && fx < fp, "{env:?}: {bin} {i8w} {fx} {fp}");
+        }
+    }
+
     /// The refactored decomposition reproduces the calibrated totals.
     #[test]
     fn decomposition_sums_to_power_w() {

@@ -37,6 +37,14 @@
 //! See `float_*` methods for the full derivation; EXPERIMENTS.md compares
 //! each derived count against the paper's Tables 3–6.
 //!
+//! # Sub-8-bit arms
+//!
+//! `Precision::Int8` and `Precision::Binary` follow the **fixed-point cycle
+//! law verbatim**: a DSP48 multiply is 1 cycle whether the operands are 18
+//! or 8 bits wide, and the binary XNOR + popcount dot product closes timing
+//! at least as easily as the Q(18,12) adder tree. The narrow arms differ in
+//! *area and power* (see [`super::area`]), never in cycles.
+//!
 //! # Pipelined variant (X1 ablation)
 //!
 //! The paper's conclusion proposes “introducing pipelining in the data
@@ -101,7 +109,7 @@ impl TimingModel {
         let d = cfg.d as u64;
         let h = cfg.h as u64;
         match prec {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 | Precision::Binary => {
                 let stages = match cfg.arch {
                     Arch::Perceptron => 1,
                     Arch::Mlp => 2,
@@ -130,7 +138,9 @@ impl TimingModel {
     pub fn error_cycles(&self, cfg: &NetConfig, prec: Precision) -> u64 {
         let a = cfg.a as u64;
         match prec {
-            Precision::Fixed => a * (self.fu.fifo_rw.max(self.fu.fx_cmp)),
+            Precision::Fixed | Precision::Int8 | Precision::Binary => {
+                a * (self.fu.fifo_rw.max(self.fu.fx_cmp))
+            }
             Precision::Float => a * self.fu.fp_cmp,
         }
     }
@@ -140,7 +150,7 @@ impl TimingModel {
         let d = cfg.d as u64;
         let h = cfg.h as u64;
         match prec {
-            Precision::Fixed => match cfg.arch {
+            Precision::Fixed | Precision::Int8 | Precision::Binary => match cfg.arch {
                 // one registered stage: parallel δ + ΔW + write-back
                 Arch::Perceptron => 1,
                 // δ_out → δ_hidden → parallel ΔW/write-back
@@ -171,7 +181,7 @@ impl TimingModel {
     pub fn qupdate(&self, cfg: &NetConfig, prec: Precision) -> CycleBreakdown {
         let ff = self.forward_cycles(cfg, prec);
         let mut err = self.error_cycles(cfg, prec);
-        if self.pipelined && prec == Precision::Fixed {
+        if self.pipelined && prec != Precision::Float {
             // error capture overlaps the tail of the second sweep: only the
             // final compare + Eq. 8 stage remains exposed
             err = self.fx_stage();
@@ -211,7 +221,7 @@ impl TimingModel {
         }
         let n = b as u64;
         match prec {
-            Precision::Fixed => {
+            Precision::Fixed | Precision::Int8 | Precision::Binary => {
                 let a = cfg.a as u64;
                 let stages = match cfg.arch {
                     Arch::Perceptron => 1,
@@ -451,6 +461,31 @@ mod tests {
         // degenerate inputs
         assert_eq!(t.qupdate_batch_cycles(&c, Precision::Fixed, 0), 0);
         assert_eq!(t.batch_throughput_kq_s(&c, Precision::Fixed, 0, &dev), 0.0);
+    }
+
+    /// Int8 and Binary share the fixed-point cycle law exactly — stepwise,
+    /// batched, and pipelined. DSP48 multiplies are 1 cycle at any operand
+    /// width; XNOR + popcount closes timing like the adder tree.
+    #[test]
+    fn sub8_arms_follow_the_fixed_cycle_law() {
+        for t in [TimingModel::default(), TimingModel::pipelined()] {
+            for arch in [Arch::Perceptron, Arch::Mlp] {
+                for env in [EnvKind::Simple, EnvKind::Complex] {
+                    let c = cfg(arch, env);
+                    let fx = t.qupdate(&c, Precision::Fixed);
+                    for prec in [Precision::Int8, Precision::Binary] {
+                        assert_eq!(t.qupdate(&c, prec), fx, "{arch:?}/{env:?}/{prec:?}");
+                        for b in [0usize, 1, 32] {
+                            assert_eq!(
+                                t.qupdate_batch_cycles(&c, prec, b),
+                                t.qupdate_batch_cycles(&c, Precision::Fixed, b),
+                                "{arch:?}/{env:?}/{prec:?} b={b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

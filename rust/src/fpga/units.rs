@@ -98,6 +98,16 @@ pub mod cost {
     pub const FX_MUL: Resources = Resources::new(10, 40, 1, 0);
     /// Fixed adder (one tree node), 18-bit.
     pub const FX_ADD: Resources = Resources::new(20, 18, 0, 0);
+    /// 8×8 multiplier for the `Precision::Int8` arm: still one DSP48E1
+    /// (1-cycle at any operand width) but thinner routing/pipeline
+    /// registers than the Q(18,12) unit.
+    pub const INT8_MUL: Resources = Resources::new(6, 18, 1, 0);
+    /// 8-bit adder (one tree node) for the Int8 arm.
+    pub const INT8_ADD: Resources = Resources::new(9, 9, 0, 0);
+    /// One weight's slice of a binary XNOR + popcount dot product:
+    /// an XNOR gate plus its amortized share of the popcount compressor
+    /// tree — pure LUT fabric, zero DSPs.
+    pub const XNOR_POP: Resources = Resources::new(2, 2, 0, 0);
     /// Sigmoid + derivative ROM pair (1024 × 18 bit each → one BRAM36).
     pub const SIGMOID_ROM: Resources = Resources::new(30, 20, 0, 1);
     /// FIFO Q-buffer (A ≤ 64 entries × 18/32 bit → LUTRAM + control).
@@ -138,5 +148,18 @@ mod tests {
     fn fp_cores_dwarf_fixed_units() {
         assert!(cost::FP_MUL.luts > 20 * cost::FX_MUL.luts);
         assert!(cost::FP_ADD.dsps >= 2);
+    }
+
+    /// The narrow arms must be strictly cheaper per unit: Int8 keeps the
+    /// one-DSP multiplier but sheds fabric; Binary is DSP-free entirely.
+    #[test]
+    fn narrow_units_are_cheaper() {
+        assert_eq!(cost::INT8_MUL.dsps, 1);
+        assert!(cost::INT8_MUL.luts < cost::FX_MUL.luts);
+        assert!(cost::INT8_MUL.ffs < cost::FX_MUL.ffs);
+        assert!(cost::INT8_ADD.luts < cost::FX_ADD.luts);
+        assert_eq!(cost::XNOR_POP.dsps, 0);
+        assert_eq!(cost::XNOR_POP.bram36, 0);
+        assert!(cost::XNOR_POP.luts < cost::INT8_ADD.luts);
     }
 }

@@ -49,7 +49,7 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
             | --ablation pipeline|lut|wordlen | --all
             [--no-measure]        skip measuring the host-CPU rows
             [--batch B]           batch size for the B1 batched-datapath table
-  train     --arch perceptron|mlp --precision fixed|float
+  train     --arch perceptron|mlp --precision fixed|float|int8|binary
             --env simple|complex|crater|slip|energy (see SCENARIOS.md)
             --backend cpu|xla|fpga-sim --episodes N --max-steps N --seed S
             [--microbatch]        flush at the backend's preferred batch size
@@ -72,7 +72,8 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
             [--batch B]           also measure the batched update_batch path
   throughput table B2: measured CPU updates/s — reference stepwise vs the
             prepared zero-alloc stepwise path vs batched, every paper
-            config/precision, plus fleet scaling at rovers >> workers
+            config and kernel arm (fixed/float/int8/binary), plus fleet
+            scaling at rovers >> workers
             [--updates N] [--batch B] [--rovers R] [--workers W]
             [--episodes E] [--max-steps N] [--seed S]
   radiation resilience campaign: train under seeded SEU injection and print
@@ -466,7 +467,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     println!("batch-vs-stepwise conformance (native update_batch paths):");
     let mut worst_batch: f64 = 0.0;
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let mut rng = Rng::seeded(0xCAFE);
             let params = QNetParams::init(&net, 0.3, &mut rng);
             let w = Workload::synthetic(net, n, 21);
@@ -605,7 +606,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("cycle model (per Q-update):");
     let mut model_rows = Vec::new();
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let b = t.qupdate(&net, prec);
             let us = dev.cycles_to_us(b.total());
             println!(

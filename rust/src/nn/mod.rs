@@ -20,5 +20,5 @@ pub use activation::{sigmoid, sigmoid_deriv, Activation, LutSpec, SigmoidLut};
 pub use params::QNetParams;
 pub use qupdate::{
     forward, forward_full, q_error, qupdate, qupdate_batch, BatchScratch, Datapath, ForwardTrace,
-    PreparedNet, QUpdateOutput, UpdateScratch,
+    KernelPath, PreparedNet, QUpdateOutput, UpdateScratch,
 };

@@ -4,29 +4,94 @@
 //! three backends (XLA artifact, this module, FPGA simulator) can be
 //! cross-validated. All math is f32 with optional fake-quantization after
 //! every register-level value, exactly like the python oracle.
+//!
+//! # Kernel dispatch
+//!
+//! The MAC-dominated inner loops exist in two implementations behind
+//! [`KernelPath`]:
+//!
+//! * [`KernelPath::Scalar`] — the reference loops, one multiply-accumulate
+//!   at a time, exactly as the python oracle orders them;
+//! * [`KernelPath::Simd`] — chunked lane-parallel loops shaped for the
+//!   compiler's auto-vectorizer (contiguous `w1` hidden rows, action-lane
+//!   blocking for the perceptron). Every lane keeps its own accumulator in
+//!   the **same index order** as the scalar loop and no FMA contraction is
+//!   used, so the two paths are bit-identical — a guarantee enforced by
+//!   `tests/kernel_conformance.rs` across every precision arm.
+//!
+//! The process-wide default is [`KernelPath::Simd`]; set `QFPGA_KERNEL=scalar`
+//! in the environment to force the reference loops (debugging, A/B timing),
+//! or pin a path in-process with [`Datapath::with_kernel`]. Backprop loops
+//! quantize after every element and are therefore elementwise (one code
+//! path, trivially order-identical).
 
-use crate::config::{Hyper, NetConfig};
+use std::sync::OnceLock;
+
+use crate::config::{Hyper, NetConfig, Precision};
 use crate::error::{Error, Result};
 use crate::fixed::{FixedSpec, Quantizer};
 
 use super::activation::Activation;
 use super::params::QNetParams;
 
+/// Which inner-loop implementation a [`Datapath`] dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Reference loops: one MAC at a time, python-oracle order.
+    Scalar,
+    /// Chunked lane-parallel loops (order-preserving, autovectorizable;
+    /// bit-identical to [`KernelPath::Scalar`] by construction).
+    Simd,
+}
+
+impl KernelPath {
+    /// Process-wide default, resolved once: [`KernelPath::Simd`] unless
+    /// `QFPGA_KERNEL=scalar` is set in the environment (the CI conformance
+    /// job runs the whole suite both ways).
+    pub fn from_env() -> KernelPath {
+        static PATH: OnceLock<KernelPath> = OnceLock::new();
+        *PATH.get_or_init(|| match std::env::var("QFPGA_KERNEL") {
+            Ok(v) if v == "scalar" => KernelPath::Scalar,
+            _ => KernelPath::Simd,
+        })
+    }
+}
+
+/// Register-write quantization rule of a [`Datapath`].
+#[derive(Debug, Clone)]
+enum QuantKind {
+    /// float32: registers pass through untouched.
+    Exact,
+    /// Fake-quantize onto a Q(word, frac) grid (fixed and int8 arms).
+    Grid(Quantizer),
+    /// Binarize to the ±1 sign grid (the BNN arm). `sign(0) = +1`, so the
+    /// rule is deterministic and idempotent.
+    Sign,
+}
+
 /// Datapath configuration: arithmetic grid + activation implementation.
 #[derive(Debug, Clone)]
 pub struct Datapath {
-    /// `None` -> float32; `Some(spec)` -> fake-quantized fixed point.
+    /// `None` -> float32 or binary; `Some(spec)` -> fake-quantized fixed
+    /// point (including the int8 arm's Q(8,4)).
     pub precision: Option<FixedSpec>,
     pub activation: Activation,
-    /// Precomputed fast quantizer (kept in sync with `precision`).
-    quantizer: Option<Quantizer>,
+    /// Register quantization rule (kept in sync with `precision`).
+    quant: QuantKind,
+    /// Inner-loop implementation the kernels dispatch to.
+    kernel: KernelPath,
 }
 
 impl Datapath {
     /// Build a datapath; use this (not a struct literal) so the precomputed
-    /// quantizer stays in sync with `precision`.
+    /// quantizer stays in sync with `precision`. The kernel path defaults
+    /// to [`KernelPath::from_env`].
     pub fn new(precision: Option<FixedSpec>, activation: Activation) -> Self {
-        Datapath { precision, activation, quantizer: precision.map(Quantizer::new) }
+        let quant = match precision {
+            None => QuantKind::Exact,
+            Some(spec) => QuantKind::Grid(Quantizer::new(spec)),
+        };
+        Datapath { precision, activation, quant, kernel: KernelPath::from_env() }
     }
 
     /// Paper-default datapath for a precision: LUT sigmoid, Q(18,12) grid
@@ -35,12 +100,64 @@ impl Datapath {
         Self::new(fixed, Activation::lut_default(fixed))
     }
 
+    /// Default datapath for a [`Precision`] arm: `Fixed`/`Float` as
+    /// [`Datapath::paper`], `Int8` on the canonical Q(8,4) grid
+    /// ([`FixedSpec::int8`]), `Binary` on the ±1 sign grid with a float
+    /// sigmoid LUT.
+    pub fn for_precision(prec: Precision) -> Self {
+        Self::for_precision_spec(prec, FixedSpec::default())
+    }
+
+    /// Like [`Datapath::for_precision`] but with an explicit fixed-point
+    /// format for the `Fixed` arm (word-length sweeps). `Int8` always uses
+    /// Q(8,4); the spec is ignored by the float and binary arms.
+    pub fn for_precision_spec(prec: Precision, spec: FixedSpec) -> Self {
+        match prec {
+            Precision::Fixed => Self::new(Some(spec), Activation::lut_default(Some(spec))),
+            Precision::Float => Self::new(None, Activation::lut_default(None)),
+            Precision::Int8 => {
+                let s = FixedSpec::int8();
+                Self::new(Some(s), Activation::lut_default(Some(s)))
+            }
+            Precision::Binary => Datapath {
+                precision: None,
+                activation: Activation::lut_default(None),
+                quant: QuantKind::Sign,
+                kernel: KernelPath::from_env(),
+            },
+        }
+    }
+
+    /// Pin the kernel path, overriding the environment default (the
+    /// conformance suite forces both paths in one process).
+    pub fn with_kernel(mut self, kernel: KernelPath) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The inner-loop implementation this datapath dispatches to.
+    pub fn kernel(&self) -> KernelPath {
+        self.kernel
+    }
+
+    /// Whether registers are binarized to the ±1 sign grid.
+    pub fn is_binary(&self) -> bool {
+        matches!(self.quant, QuantKind::Sign)
+    }
+
     /// Quantize one register value (identity in float mode).
     #[inline(always)]
     pub fn q(&self, x: f32) -> f32 {
-        match &self.quantizer {
-            None => x,
-            Some(q) => q.q(x),
+        match &self.quant {
+            QuantKind::Exact => x,
+            QuantKind::Grid(q) => q.q(x),
+            QuantKind::Sign => {
+                if x < 0.0 {
+                    -1.0
+                } else {
+                    1.0
+                }
+            }
         }
     }
 }
@@ -284,15 +401,9 @@ fn forward_into(
             if w.len() != d {
                 return Err(Error::interface("perceptron weight length != D"));
             }
-            for ai in 0..a_n {
-                let x = &sa_q[ai * d..(ai + 1) * d];
-                let mut acc = 0f32;
-                for (xi, wi) in x.iter().zip(w.iter()) {
-                    acc += xi * wi;
-                }
-                let pre = dp.q(acc + *b);
-                trace.pre2.push(pre);
-                trace.q.push(dp.activation.f(pre));
+            match dp.kernel {
+                KernelPath::Scalar => forward_perceptron_scalar(a_n, d, sa_q, w, *b, dp, trace),
+                KernelPath::Simd => forward_perceptron_lanes(a_n, d, sa_q, w, *b, dp, trace),
             }
         }
         QNetParams::Mlp { w1, b1, w2, b2 } => {
@@ -300,29 +411,162 @@ fn forward_into(
             if w1.len() != d * h || b1.len() != h || w2.len() != h {
                 return Err(Error::interface("mlp parameter shapes"));
             }
-            for ai in 0..a_n {
-                let x = &sa_q[ai * d..(ai + 1) * d];
-                for j in 0..h {
-                    let mut acc = 0f32;
-                    for i in 0..d {
-                        acc += x[i] * w1[i * h + j];
-                    }
-                    let pre = dp.q(acc + b1[j]);
-                    trace.pre1.push(pre);
-                    trace.hid.push(dp.activation.f(pre));
-                }
-                let hid_row = &trace.hid[ai * h..(ai + 1) * h];
-                let mut acc = 0f32;
-                for j in 0..h {
-                    acc += hid_row[j] * w2[j];
-                }
-                let pre2 = dp.q(acc + *b2);
-                trace.pre2.push(pre2);
-                trace.q.push(dp.activation.f(pre2));
+            // the lane kernel holds hidden accumulators on the stack; wider
+            // hidden layers than the blocking width fall back to reference
+            if dp.kernel == KernelPath::Simd && h <= MAX_HID_LANES {
+                forward_mlp_lanes(a_n, d, h, sa_q, w1, b1, w2, *b2, dp, trace);
+            } else {
+                forward_mlp_scalar(a_n, d, h, sa_q, w1, b1, w2, *b2, dp, trace);
             }
         }
     }
     Ok(())
+}
+
+/// Quantize one output pre-activation and emit (pre2, Q) into the trace.
+#[inline(always)]
+fn emit_output(dp: &Datapath, trace: &mut ForwardTrace, acc_plus_b: f32) {
+    let pre = dp.q(acc_plus_b);
+    trace.pre2.push(pre);
+    trace.q.push(dp.activation.f(pre));
+}
+
+/// Action-lane blocking width of the perceptron SIMD kernel.
+const ACTION_LANES: usize = 4;
+/// Widest hidden layer the MLP lane kernel keeps on the stack (paper H=4).
+const MAX_HID_LANES: usize = 16;
+
+/// Reference perceptron sweep: per action, one dot product in index order.
+fn forward_perceptron_scalar(
+    a_n: usize,
+    d: usize,
+    sa_q: &[f32],
+    w: &[f32],
+    b: f32,
+    dp: &Datapath,
+    trace: &mut ForwardTrace,
+) {
+    for ai in 0..a_n {
+        let x = &sa_q[ai * d..(ai + 1) * d];
+        let mut acc = 0f32;
+        for (xi, wi) in x.iter().zip(w.iter()) {
+            acc += xi * wi;
+        }
+        emit_output(dp, trace, acc + b);
+    }
+}
+
+/// Lane-parallel perceptron sweep: [`ACTION_LANES`] independent action
+/// accumulators advance together through the shared weight vector. Each
+/// lane still sums `x[i]·w[i]` in ascending `i` — bit-identical to the
+/// scalar sweep, but the inner block is a vectorizable broadcast-MAC.
+fn forward_perceptron_lanes(
+    a_n: usize,
+    d: usize,
+    sa_q: &[f32],
+    w: &[f32],
+    b: f32,
+    dp: &Datapath,
+    trace: &mut ForwardTrace,
+) {
+    let mut ai = 0usize;
+    while ai + ACTION_LANES <= a_n {
+        let mut acc = [0f32; ACTION_LANES];
+        for (i, &wi) in w.iter().enumerate() {
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a += sa_q[(ai + l) * d + i] * wi;
+            }
+        }
+        for &a in &acc {
+            emit_output(dp, trace, a + b);
+        }
+        ai += ACTION_LANES;
+    }
+    // ragged tail: reference order
+    for at in ai..a_n {
+        let x = &sa_q[at * d..(at + 1) * d];
+        let mut acc = 0f32;
+        for (xi, wi) in x.iter().zip(w.iter()) {
+            acc += xi * wi;
+        }
+        emit_output(dp, trace, acc + b);
+    }
+}
+
+/// Reference MLP sweep: hidden-unit-outer, input-inner (strided `w1`).
+#[allow(clippy::too_many_arguments)]
+fn forward_mlp_scalar(
+    a_n: usize,
+    d: usize,
+    h: usize,
+    sa_q: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: f32,
+    dp: &Datapath,
+    trace: &mut ForwardTrace,
+) {
+    for ai in 0..a_n {
+        let x = &sa_q[ai * d..(ai + 1) * d];
+        for j in 0..h {
+            let mut acc = 0f32;
+            for i in 0..d {
+                acc += x[i] * w1[i * h + j];
+            }
+            let pre = dp.q(acc + b1[j]);
+            trace.pre1.push(pre);
+            trace.hid.push(dp.activation.f(pre));
+        }
+        let hid_row = &trace.hid[ai * h..(ai + 1) * h];
+        let mut acc = 0f32;
+        for j in 0..h {
+            acc += hid_row[j] * w2[j];
+        }
+        emit_output(dp, trace, acc + b2);
+    }
+}
+
+/// Lane-parallel MLP sweep: input-outer, hidden-inner over the contiguous
+/// `w1[i·h .. (i+1)·h]` rows — `h` independent accumulators each summing in
+/// ascending `i`, so every hidden pre-activation matches the scalar sweep
+/// to the bit while the inner loop is a contiguous vectorizable
+/// broadcast-MAC (the layout win `PreparedNet` already pays for).
+#[allow(clippy::too_many_arguments)]
+fn forward_mlp_lanes(
+    a_n: usize,
+    d: usize,
+    h: usize,
+    sa_q: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: f32,
+    dp: &Datapath,
+    trace: &mut ForwardTrace,
+) {
+    debug_assert!(h <= MAX_HID_LANES);
+    for ai in 0..a_n {
+        let x = &sa_q[ai * d..(ai + 1) * d];
+        let mut acc = [0f32; MAX_HID_LANES];
+        let acc = &mut acc[..h];
+        for (i, &xi) in x.iter().enumerate() {
+            for (a, &wv) in acc.iter_mut().zip(&w1[i * h..(i + 1) * h]) {
+                *a += xi * wv;
+            }
+        }
+        for (j, &a) in acc.iter().enumerate() {
+            let pre = dp.q(a + b1[j]);
+            trace.pre1.push(pre);
+            trace.hid.push(dp.activation.f(pre));
+        }
+        let hid_row = &trace.hid[ai * h..(ai + 1) * h];
+        let mut out = 0f32;
+        for (hj, wj) in hid_row.iter().zip(w2.iter()) {
+            out += hj * wj;
+        }
+        emit_output(dp, trace, out + b2);
+    }
 }
 
 /// One full in-place Q-update over **on-grid** parameters — the shared
@@ -351,14 +595,16 @@ fn step_on_grid(
     let err = q_error(dp, hyper, scratch.cur.q[action], q_next_max, reward);
     let x_row = &scratch.sa_cur_q[action * d..(action + 1) * d];
 
+    // The backprop loops below quantize after every element, so they are
+    // elementwise: one code path, identical bits under either kernel path.
     match params {
         QNetParams::Perceptron { w, b } => {
             // Eq. 7: δ = f′(σ)·Q_error
             let delta = dp.q(dp.activation.fprime(scratch.cur.pre2[action]) * err);
             // Eq. 9/10: ΔW = C·O·δ ; W += ΔW (in place)
-            for i in 0..d {
-                let dw = dp.q(lr * dp.q(x_row[i] * delta));
-                w[i] = dp.q(w[i] + dw);
+            for (wi, &xi) in w.iter_mut().zip(x_row.iter()) {
+                let dw = dp.q(lr * dp.q(xi * delta));
+                *wi = dp.q(*wi + dw);
             }
             *b = dp.q(*b + dp.q(lr * delta));
         }
@@ -382,10 +628,10 @@ fn step_on_grid(
                 w2[j] = dp.q(w2[j] + dw2);
             }
             *b2 = dp.q(*b2 + dp.q(lr * d2));
-            for i in 0..d {
-                for j in 0..h {
-                    let dw1 = dp.q(lr * dp.q(x_row[i] * scratch.d1[j]));
-                    w1[i * h + j] = dp.q(w1[i * h + j] + dw1);
+            for (i, &xi) in x_row.iter().enumerate() {
+                for (wv, &d1j) in w1[i * h..(i + 1) * h].iter_mut().zip(scratch.d1.iter()) {
+                    let dw1 = dp.q(lr * dp.q(xi * d1j));
+                    *wv = dp.q(*wv + dw1);
                 }
             }
             for j in 0..h {
@@ -614,6 +860,100 @@ mod tests {
 
     fn paper_dp(fixed: bool) -> Datapath {
         Datapath::paper(fixed.then(FixedSpec::default))
+    }
+
+    /// The kernel dispatch contract: scalar and SIMD paths produce the
+    /// same bits for every precision arm and paper configuration, through
+    /// forwards and a full stepwise update stream.
+    #[test]
+    fn simd_and_scalar_paths_agree_to_the_bit() {
+        let mut rng = Rng::seeded(12);
+        for cfg in NetConfig::all() {
+            for prec in Precision::all() {
+                let dp_s = Datapath::for_precision(prec).with_kernel(KernelPath::Scalar);
+                let dp_v = Datapath::for_precision(prec).with_kernel(KernelPath::Simd);
+                let hyper = Hyper::default();
+                let init = QNetParams::init(&cfg, 0.4, &mut rng);
+                let mut p_s = PreparedNet::new(init.clone());
+                let mut p_v = PreparedNet::new(init);
+                let (mut qs, mut qv) = (Vec::new(), Vec::new());
+                let step = cfg.a * cfg.d;
+                for i in 0..10 {
+                    let sc = rng.vec_f32(step, -1.0, 1.0);
+                    let sn = rng.vec_f32(step, -1.0, 1.0);
+                    let action = rng.below(cfg.a);
+                    let reward = rng.f32_range(-1.0, 1.0);
+                    p_s.forward_into(&cfg, &sc, &dp_s, &mut qs).unwrap();
+                    p_v.forward_into(&cfg, &sc, &dp_v, &mut qv).unwrap();
+                    let ctx = format!("{}/{} step {i}", cfg.name(), prec.as_str());
+                    assert_eq!(qs, qv, "{ctx}: forward diverged");
+                    let es =
+                        p_s.update(&cfg, &sc, &sn, action, reward, &hyper, &dp_s).unwrap();
+                    let ev =
+                        p_v.update(&cfg, &sc, &sn, action, reward, &hyper, &dp_v).unwrap();
+                    assert_eq!(es.to_bits(), ev.to_bits(), "{ctx}: q_err diverged");
+                }
+                assert_eq!(
+                    p_s.params().max_abs_diff(p_v.params()),
+                    0.0,
+                    "{}/{}: params diverged",
+                    cfg.name(),
+                    prec.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn binary_grid_signs_and_is_idempotent() {
+        let dp = Datapath::for_precision(Precision::Binary);
+        assert!(dp.is_binary());
+        assert_eq!(dp.precision, None);
+        for (x, want) in
+            [(0.3f32, 1.0f32), (-0.2, -1.0), (0.0, 1.0), (-0.0, 1.0), (7.0, 1.0), (-9.0, -1.0)]
+        {
+            assert_eq!(dp.q(x), want, "sign({x})");
+            assert_eq!(dp.q(dp.q(x)), dp.q(x), "idempotence at {x}");
+        }
+        // forward still emits Q-values in (0, 1): σ(±1) through the LUT
+        let cfg = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let mut rng = Rng::seeded(13);
+        let params = QNetParams::init(&cfg, 0.5, &mut rng);
+        let sa = rand_sa(&cfg, &mut rng);
+        let q = forward(&cfg, &params, &sa, &dp).unwrap();
+        for v in &q {
+            assert!((0.0..=1.0).contains(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn int8_arm_lives_on_the_q8_4_grid() {
+        let dp = Datapath::for_precision(Precision::Int8);
+        assert_eq!(dp.precision, Some(FixedSpec::int8()));
+        assert!(!dp.is_binary());
+        // Q(8,4): lsb 1/16, saturation at ±(127/16 | 8)
+        assert_eq!(dp.q(0.06), 1.0 / 16.0);
+        assert_eq!(dp.q(100.0), 127.0 / 16.0);
+        assert_eq!(dp.q(-100.0), -8.0);
+        // the fixed arm still honors an explicit spec; int8 ignores it
+        let wide = FixedSpec::new(24, 16);
+        assert_eq!(
+            Datapath::for_precision_spec(Precision::Fixed, wide).precision,
+            Some(wide)
+        );
+        assert_eq!(
+            Datapath::for_precision_spec(Precision::Int8, wide).precision,
+            Some(FixedSpec::int8())
+        );
+    }
+
+    #[test]
+    fn kernel_path_is_overridable_in_process() {
+        let dp = Datapath::paper(None);
+        let forced = dp.clone().with_kernel(KernelPath::Scalar);
+        assert_eq!(forced.kernel(), KernelPath::Scalar);
+        let simd = forced.with_kernel(KernelPath::Simd);
+        assert_eq!(simd.kernel(), KernelPath::Simd);
     }
 
     #[test]

@@ -21,7 +21,6 @@ use crate::error::Result;
 use crate::fixed::FixedSpec;
 use crate::fpga::datapath::Transition;
 use crate::fpga::{FpgaAccelerator, TimingModel};
-use crate::nn::activation::Activation;
 use crate::nn::params::QNetParams;
 use crate::nn::qupdate::{Datapath, PreparedNet};
 use crate::runtime::{ArtifactKind, Executor, Runtime};
@@ -160,11 +159,7 @@ impl CpuBackend {
         params: QNetParams,
         hyper: Hyper,
     ) -> Self {
-        let fixed = match prec {
-            Precision::Fixed => Some(spec),
-            Precision::Float => None,
-        };
-        let dp = Datapath::new(fixed, Activation::lut_default(fixed));
+        let dp = Datapath::for_precision_spec(prec, spec);
         CpuBackend { net, hyper, dp, prec, prepared: PreparedNet::new(params) }
     }
 
@@ -483,7 +478,7 @@ mod tests {
 
     #[test]
     fn cpu_native_update_batch_equals_sequential() {
-        for prec in [Precision::Float, Precision::Fixed] {
+        for prec in Precision::all() {
             let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
             let mut rng = Rng::seeded(22);
             let params = QNetParams::init(&net, 0.4, &mut rng);
@@ -514,7 +509,7 @@ mod tests {
 
     #[test]
     fn fpga_sim_native_update_batch_equals_sequential() {
-        for prec in [Precision::Float, Precision::Fixed] {
+        for prec in Precision::all() {
             let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
             let mut rng = Rng::seeded(24);
             let params = QNetParams::init(&net, 0.4, &mut rng);

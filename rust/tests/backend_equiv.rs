@@ -15,7 +15,6 @@ use qfpga::config::{Hyper, NetConfig, Precision};
 use qfpga::fixed::FixedSpec;
 use qfpga::fpga::datapath::Transition;
 use qfpga::fpga::FpgaAccelerator;
-use qfpga::nn::activation::Activation;
 use qfpga::nn::params::QNetParams;
 use qfpga::nn::qupdate::{self, Datapath};
 use qfpga::runtime::{ArtifactKind, Runtime};
@@ -31,11 +30,7 @@ fn runtime() -> Option<Runtime> {
 }
 
 fn dp(prec: Precision) -> Datapath {
-    let fixed = match prec {
-        Precision::Fixed => Some(FixedSpec::default()),
-        Precision::Float => None,
-    };
-    Datapath::new(fixed, Activation::lut_default(fixed))
+    Datapath::for_precision(prec)
 }
 
 fn tolerance(prec: Precision) -> f32 {
@@ -43,6 +38,11 @@ fn tolerance(prec: Precision) -> f32 {
         // fixed: python fake-quant (f32) vs rust fake-quant (f64 rounding)
         // can differ by one grid step at rounding boundaries
         Precision::Fixed => 2.0 * FixedSpec::default().lsb() as f32,
+        Precision::Int8 => 2.0 * FixedSpec::int8().lsb() as f32,
+        // no XLA artifacts exist for the binary arm (see
+        // experiment::spec), but the budget is well defined: the sign
+        // grid is exact
+        Precision::Binary => 0.0,
         Precision::Float => 2e-6,
     }
 }
@@ -192,7 +192,8 @@ fn fpga_sim_matches_xla_within_lsb_budget() {
             // integer datapath vs float32 fake-quant: budget a few LSB
             let tol = match prec {
                 Precision::Fixed => 4.0 * FixedSpec::default().lsb() as f32,
-                Precision::Float => 2e-6,
+                Precision::Int8 => 4.0 * FixedSpec::int8().lsb() as f32,
+                Precision::Float | Precision::Binary => 2e-6,
             };
             assert!(
                 (sim_out.q_err - xla_out.q_err).abs() <= tol,

@@ -32,12 +32,13 @@ fn sim(net: NetConfig, prec: Precision, params: QNetParams) -> AnyBackend {
         .expect("fpga-sim backend")
 }
 
-/// Batch-vs-stepwise tolerance per precision: the fixed datapath is fully
-/// deterministic integer/fake-quant math, so the batch path must reproduce
-/// it to the bit; float gets the conventional 1e-5 budget.
+/// Batch-vs-stepwise tolerance per precision: the fixed, int8 and binary
+/// datapaths are fully deterministic integer/fake-quant math, so the batch
+/// path must reproduce them to the bit; float gets the conventional 1e-5
+/// budget.
 fn batch_tol(prec: Precision) -> f32 {
     match prec {
-        Precision::Fixed => 0.0,
+        Precision::Fixed | Precision::Int8 | Precision::Binary => 0.0,
         Precision::Float => 1e-5,
     }
 }
@@ -81,7 +82,7 @@ fn assert_stream_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
 fn cpu_batch_equals_stepwise_all_configs_and_precisions() {
     let n = 24;
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (params, w) = seeded_stream(net, n, 1001);
             let mut stepwise = cpu(net, prec, params.clone());
             let mut batched = cpu(net, prec, params);
@@ -106,7 +107,7 @@ fn cpu_batch_equals_stepwise_all_configs_and_precisions() {
 fn fpga_sim_batch_equals_stepwise_all_configs_and_precisions() {
     let n = 16;
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (params, w) = seeded_stream(net, n, 2002);
             let mut stepwise = sim(net, prec, params.clone());
             let mut batched = sim(net, prec, params);
@@ -129,17 +130,19 @@ fn fpga_sim_batch_equals_stepwise_all_configs_and_precisions() {
 // ------------------------------------------------- cross-engine agreement
 
 /// CPU fake-quant vs FPGA integer datapath, both through their *batch*
-/// paths, over a stream. Float is the identical IEEE op chain (equal to the
-/// bit, asserted at 1e-5 per the contract); fixed diverges by a bounded
-/// number of LSBs per step (integer accumulators round once where the
-/// fake-quant path rounds in f32), so the budget grows linearly with the
-/// stream position.
+/// paths, over a stream. Float and binary delegate to the identical nn op
+/// chain on both engines (equal to the bit — binary asserted at exactly 0,
+/// float at 1e-5 per the contract); fixed and int8 diverge by a bounded
+/// number of LSBs of their respective grids per step (integer accumulators
+/// round once where the fake-quant path rounds in f32), so those budgets
+/// grow linearly with the stream position.
 #[test]
 fn cpu_and_fpga_sim_batch_paths_agree() {
     let n = 12;
     let lsb = FixedSpec::default().lsb() as f32;
+    let lsb8 = FixedSpec::int8().lsb() as f32;
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (params, w) = seeded_stream(net, n, 3003);
             let mut cpu = cpu(net, prec, params.clone());
             let mut sim = sim(net, prec, params);
@@ -151,7 +154,9 @@ fn cpu_and_fpga_sim_batch_paths_agree() {
             for i in 0..n {
                 let tol = match prec {
                     Precision::Float => 1e-5,
+                    Precision::Binary => 0.0,
                     Precision::Fixed => 4.0 * lsb * (i as f32 + 1.0),
+                    Precision::Int8 => 4.0 * lsb8 * (i as f32 + 1.0),
                 };
                 assert!(
                     (e_cpu[i] - e_sim[i]).abs() <= tol,
@@ -162,7 +167,9 @@ fn cpu_and_fpga_sim_batch_paths_agree() {
             }
             let param_tol = match prec {
                 Precision::Float => 1e-5,
+                Precision::Binary => 0.0,
                 Precision::Fixed => 4.0 * lsb * n as f32,
+                Precision::Int8 => 4.0 * lsb8 * n as f32,
             };
             assert!(
                 cpu.params().max_abs_diff(&sim.params()) <= param_tol,
@@ -182,7 +189,7 @@ fn chunked_flushes_equal_stepwise_stream() {
     let n = 11; // deliberately not a multiple of any chunk size
     for chunk in [1usize, 3, 4, 11] {
         for net in NetConfig::all() {
-            for prec in [Precision::Fixed, Precision::Float] {
+            for prec in Precision::all() {
                 let (params, w) = seeded_stream(net, n, 4004);
                 let mut stepwise = cpu(net, prec, params.clone());
                 let mut batched = cpu(net, prec, params);
@@ -211,7 +218,7 @@ fn chunked_flushes_equal_stepwise_stream() {
 #[test]
 fn batch_of_one_equals_single_update() {
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let (params, w) = seeded_stream(net, 1, 5005);
             let step = net.a * net.d;
 

@@ -98,6 +98,9 @@ fn checkpoint_restore_reproduces_the_uninterrupted_run() {
         (BackendKind::Cpu, Precision::Float, EnvKind::Slip, 1usize),
         (BackendKind::Cpu, Precision::Fixed, EnvKind::Simple, 4),
         (BackendKind::FpgaSim, Precision::Fixed, EnvKind::Simple, 1),
+        // the sub-8-bit kernel arms: same bit-exact resume contract
+        (BackendKind::Cpu, Precision::Int8, EnvKind::Simple, 1),
+        (BackendKind::FpgaSim, Precision::Binary, EnvKind::Simple, 4),
     ] {
         let cfg = MissionConfig {
             episodes: 10,

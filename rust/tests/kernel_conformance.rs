@@ -1,0 +1,328 @@
+//! Differential kernel conformance: the SIMD-shaped and scalar kernels,
+//! and every precision arm they serve, must be indistinguishable through
+//! the public surfaces.
+//!
+//! Two layers of evidence:
+//!
+//! * **kernel vs kernel** — a `PreparedNet` driven through random
+//!   interleavings of parameter loads, stepwise updates, action-selection
+//!   forwards and batched flushes must produce the same bits whether the
+//!   datapath is pinned to [`KernelPath::Scalar`] or [`KernelPath::Simd`]
+//!   (the chunked kernels keep each output's accumulation order, so even
+//!   float is expected exact; the contract asserted here is bit-exact for
+//!   the quantized arms and 1e-5 for float).
+//! * **engine vs engine** — the factory-built CPU backend (fake-quant nn
+//!   kernels) and FPGA-sim backend (integer datapath for fixed/int8, nn
+//!   delegation for float/binary) must agree within the established
+//!   cross-engine budgets under the same random interleavings.
+//!
+//! The CI `kernel-conformance` job runs this suite twice — once with
+//! `QFPGA_KERNEL=scalar` and once without — so both dispatch targets see
+//! the full interleaving space; `kernel_dispatch_reflects_the_environment`
+//! pins the env wiring itself in whichever mode the suite runs.
+
+use qfpga::config::{Hyper, NetConfig, Precision};
+use qfpga::coordinator::sweep::Workload;
+use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
+use qfpga::fixed::FixedSpec;
+use qfpga::fpga::{TimingModel, Virtex7};
+use qfpga::nn::params::QNetParams;
+use qfpga::nn::{Datapath, KernelPath, PreparedNet};
+use qfpga::qlearn::backend::QBackend;
+use qfpga::util::Rng;
+
+fn cpu(net: NetConfig, prec: Precision, params: QNetParams) -> AnyBackend {
+    BackendFactory::offline()
+        .build(&BackendSpec::cpu(net, prec), params)
+        .expect("cpu backend")
+}
+
+fn sim(net: NetConfig, prec: Precision, params: QNetParams) -> AnyBackend {
+    BackendFactory::offline()
+        .build(&BackendSpec::fpga_sim(net, prec), params)
+        .expect("fpga-sim backend")
+}
+
+/// Grid step of the quantized arms (0 for the arms without a fixed grid).
+fn grid_lsb(prec: Precision) -> f32 {
+    match prec {
+        Precision::Fixed => FixedSpec::default().lsb() as f32,
+        Precision::Int8 => FixedSpec::int8().lsb() as f32,
+        Precision::Float | Precision::Binary => 0.0,
+    }
+}
+
+/// Scalar-vs-SIMD budget: bit-exact on the quantized grids, 1e-5 float.
+fn kernel_tol(prec: Precision) -> f32 {
+    match prec {
+        Precision::Fixed | Precision::Int8 | Precision::Binary => 0.0,
+        Precision::Float => 1e-5,
+    }
+}
+
+/// Cross-engine budget for the `k`-th update of a stream: float and binary
+/// ride the identical nn op chain on both engines; fixed and int8 diverge
+/// by a bounded number of LSBs of their grids per step (the integer
+/// engine's wide accumulators round once where fake-quant rounds in f32).
+fn engine_tol(prec: Precision, k: usize) -> f32 {
+    match prec {
+        Precision::Float => 1e-5,
+        Precision::Binary => 0.0,
+        Precision::Fixed | Precision::Int8 => 4.0 * grid_lsb(prec) * (k as f32 + 1.0),
+    }
+}
+
+// -------------------------------------------------------------- dispatch
+
+/// The runtime dispatch must mirror `QFPGA_KERNEL` exactly — whichever
+/// mode this suite runs under — and the in-process override must win over
+/// the environment in both directions.
+#[test]
+fn kernel_dispatch_reflects_the_environment() {
+    let want = match std::env::var("QFPGA_KERNEL") {
+        Ok(v) if v == "scalar" => KernelPath::Scalar,
+        _ => KernelPath::Simd,
+    };
+    assert_eq!(KernelPath::from_env(), want);
+    for prec in Precision::all() {
+        assert_eq!(Datapath::for_precision(prec).kernel(), want, "{prec:?}");
+        for forced in [KernelPath::Scalar, KernelPath::Simd] {
+            assert_eq!(
+                Datapath::for_precision(prec).with_kernel(forced).kernel(),
+                forced,
+                "{prec:?}: with_kernel must beat the environment"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ kernel vs kernel
+
+/// Random load/update/forward/batch interleavings through a `PreparedNet`:
+/// the scalar and SIMD kernels must stay in lockstep at every observable
+/// point, for every architecture and precision arm.
+#[test]
+fn scalar_and_simd_kernels_agree_under_random_interleavings() {
+    let hyper = Hyper::default();
+    let mut rng = Rng::seeded(0x51D);
+    for net in NetConfig::all() {
+        for prec in Precision::all() {
+            let dp_s = Datapath::for_precision(prec).with_kernel(KernelPath::Scalar);
+            let dp_v = Datapath::for_precision(prec).with_kernel(KernelPath::Simd);
+            let tol = kernel_tol(prec);
+            let step = net.a * net.d;
+            for case in 0..3 {
+                let init = QNetParams::init(&net, 0.4, &mut rng);
+                let mut p_s = PreparedNet::new(init.clone());
+                let mut p_v = PreparedNet::new(init);
+                let (mut qs, mut qv) = (Vec::new(), Vec::new());
+                let ctx =
+                    |op: usize| format!("{}/{} case {case} op {op}", net.name(), prec.as_str());
+                for op in 0..24 {
+                    match rng.below(4) {
+                        // swap fresh (off-grid) parameters into both
+                        0 => {
+                            let fresh =
+                                QNetParams::init(&net, rng.f32_range(0.1, 0.6), &mut rng);
+                            p_s.load(&fresh);
+                            p_v.load(&fresh);
+                        }
+                        // stepwise update
+                        1 => {
+                            let sc = rng.vec_f32(step, -1.0, 1.0);
+                            let sn = rng.vec_f32(step, -1.0, 1.0);
+                            let (a, r) = (rng.below(net.a), rng.f32_range(-1.0, 1.0));
+                            let es =
+                                p_s.update(&net, &sc, &sn, a, r, &hyper, &dp_s).unwrap();
+                            let ev =
+                                p_v.update(&net, &sc, &sn, a, r, &hyper, &dp_v).unwrap();
+                            assert!(
+                                (es - ev).abs() <= tol,
+                                "{}: q_err {es} vs {ev}",
+                                ctx(op)
+                            );
+                        }
+                        // action-selection forward
+                        2 => {
+                            let sa = rng.vec_f32(step, -1.0, 1.0);
+                            p_s.forward_into(&net, &sa, &dp_s, &mut qs).unwrap();
+                            p_v.forward_into(&net, &sa, &dp_v, &mut qv).unwrap();
+                            for (i, (s, v)) in qs.iter().zip(&qv).enumerate() {
+                                assert!(
+                                    (s - v).abs() <= tol,
+                                    "{}: q[{i}] {s} vs {v}",
+                                    ctx(op)
+                                );
+                            }
+                        }
+                        // batched flush of 1..=4 transitions
+                        _ => {
+                            let b = rng.range(1, 5);
+                            let sc = rng.vec_f32(b * step, -1.0, 1.0);
+                            let sn = rng.vec_f32(b * step, -1.0, 1.0);
+                            let actions: Vec<usize> =
+                                (0..b).map(|_| rng.below(net.a)).collect();
+                            let rewards = rng.vec_f32(b, -1.0, 1.0);
+                            let (mut es, mut ev) = (Vec::new(), Vec::new());
+                            p_s.update_batch(
+                                &net, &sc, &sn, &actions, &rewards, &hyper, &dp_s, &mut es,
+                            )
+                            .unwrap();
+                            p_v.update_batch(
+                                &net, &sc, &sn, &actions, &rewards, &hyper, &dp_v, &mut ev,
+                            )
+                            .unwrap();
+                            for (i, (s, v)) in es.iter().zip(&ev).enumerate() {
+                                assert!(
+                                    (s - v).abs() <= tol,
+                                    "{}: batch q_err[{i}] {s} vs {v}",
+                                    ctx(op)
+                                );
+                            }
+                        }
+                    }
+                }
+                let drift = p_s.params().max_abs_diff(p_v.params());
+                assert!(
+                    drift <= tol,
+                    "{}/{} case {case}: params diverged by {drift}",
+                    net.name(),
+                    prec.as_str()
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ engine vs engine
+
+/// The factory-built CPU and FPGA-sim backends driven through the same
+/// random interleavings of stepwise updates, Q-value reads and batched
+/// flushes: agreement within the cross-engine budgets at every step, for
+/// every backend pair × precision arm. (Q-value reads are compared
+/// directly where both engines share the nn op chain — float and binary;
+/// for the integer arms forward agreement is implied transitively by the
+/// q_err stream, which embeds both engines' forward results.)
+#[test]
+fn cpu_and_fpga_sim_backends_agree_under_random_interleavings() {
+    let n = 24;
+    let mut rng = Rng::seeded(0xC0F0);
+    for net in NetConfig::all() {
+        for prec in Precision::all() {
+            let mut seed_rng = Rng::seeded(8008 ^ net.a as u64);
+            let params = QNetParams::init(&net, 0.35, &mut seed_rng);
+            let w = Workload::synthetic(net, n, 8008 ^ 0x5EED);
+            let mut cpu = cpu(net, prec, params.clone());
+            let mut sim = sim(net, prec, params);
+            let step = net.a * net.d;
+            let ctx = format!("cpu-vs-sim {}/{}", net.name(), prec.as_str());
+
+            let mut k = 0usize; // transitions consumed so far
+            while k < n {
+                match rng.below(3) {
+                    // stepwise update off the shared workload
+                    0 => {
+                        let sc = &w.sa_cur[k * step..(k + 1) * step];
+                        let sn = &w.sa_next[k * step..(k + 1) * step];
+                        let ec = cpu.update(sc, sn, w.actions[k], w.rewards[k]).unwrap();
+                        let es = sim.update(sc, sn, w.actions[k], w.rewards[k]).unwrap();
+                        let tol = engine_tol(prec, k);
+                        assert!(
+                            (ec - es).abs() <= tol,
+                            "{ctx}: q_err[{k}] {ec} vs {es} (tol {tol})"
+                        );
+                        k += 1;
+                    }
+                    // action-selection read on fresh state
+                    1 => {
+                        let sa = rng.vec_f32(step, -1.0, 1.0);
+                        let qc = cpu.q_values(&sa).unwrap();
+                        let qs = sim.q_values(&sa).unwrap();
+                        assert_eq!(qc.len(), qs.len(), "{ctx}");
+                        for (i, (c, s)) in qc.iter().zip(&qs).enumerate() {
+                            assert!(c.is_finite() && s.is_finite(), "{ctx}: q[{i}]");
+                            if matches!(prec, Precision::Float | Precision::Binary) {
+                                assert!(
+                                    (c - s).abs() <= engine_tol(prec, 0),
+                                    "{ctx}: q[{i}] {c} vs {s}"
+                                );
+                            }
+                        }
+                    }
+                    // batched flush of 1..=4 transitions
+                    _ => {
+                        let b = rng.range(1, 5).min(n - k);
+                        let batch = w.flat_batch(k, b);
+                        let ec = cpu.update_batch(&batch).unwrap();
+                        let es = sim.update_batch(&batch).unwrap();
+                        for i in 0..b {
+                            let tol = engine_tol(prec, k + i);
+                            assert!(
+                                (ec[i] - es[i]).abs() <= tol,
+                                "{ctx}: batch q_err[{}] {} vs {} (tol {tol})",
+                                k + i,
+                                ec[i],
+                                es[i]
+                            );
+                        }
+                        k += b;
+                    }
+                }
+            }
+            let param_tol = match prec {
+                Precision::Float => 1e-5,
+                Precision::Binary => 0.0,
+                Precision::Fixed | Precision::Int8 => 4.0 * grid_lsb(prec) * n as f32,
+            };
+            let drift = cpu.params().max_abs_diff(&sim.params());
+            assert!(drift <= param_tol, "{ctx}: params diverged by {drift}");
+        }
+    }
+}
+
+// --------------------------------------------------- BM1 float anomaly
+
+/// BM1's float rows show *no* batched gain — stepwise and batched
+/// throughput coincide. That is the model's design, not a bug: the serial
+/// LogiCORE MAC chains leave no action-level overlap to exploit, so
+/// batched cycles are exactly `b ×` the stepwise cost (see
+/// [`TimingModel::qupdate_batch_cycles`]). This regression pins the two
+/// sides of the anomaly: float batched per-update throughput never falls
+/// *below* stepwise (it is exactly equal), while every other arm gains
+/// strictly from `b ≥ 2`.
+#[test]
+fn bm1_float_batching_never_regresses_per_update_throughput() {
+    let dev = Virtex7::default();
+    for t in [TimingModel::default(), TimingModel::pipelined()] {
+        for net in NetConfig::all() {
+            let stepwise_fp = t.qupdate(&net, Precision::Float).total();
+            for b in [1usize, 2, 8, 32] {
+                // float: cycles are exactly b × stepwise ⇒ per-update
+                // throughput equal, never worse
+                assert_eq!(
+                    t.qupdate_batch_cycles(&net, Precision::Float, b),
+                    b as u64 * stepwise_fp,
+                    "{}: float batched diverged from b × stepwise",
+                    net.name()
+                );
+                assert!(
+                    t.batch_throughput_kq_s(&net, Precision::Float, b, &dev)
+                        >= t.throughput_kq_s(&net, Precision::Float, &dev) - 1e-9,
+                    "{}: float batched throughput regressed at b={b}",
+                    net.name()
+                );
+                // the quantized arms strictly gain from batching
+                for prec in [Precision::Fixed, Precision::Int8, Precision::Binary] {
+                    if b >= 2 {
+                        assert!(
+                            t.qupdate_batch_cycles(&net, prec, b)
+                                < b as u64 * t.qupdate(&net, prec).total(),
+                            "{}/{prec:?}: no batched gain at b={b}",
+                            net.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -225,7 +225,7 @@ fn prop_timing_model_monotone_in_a_and_d() {
         let mut big = small;
         big.a = small.a + rng.range(1, 16);
         big.d = small.d + rng.range(1, 16);
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             assert!(
                 t.qupdate(&big, prec).total() >= t.qupdate(&small, prec).total(),
                 "case {case}: {arch:?}/{prec:?}"
@@ -239,7 +239,7 @@ fn prop_throughput_inverse_of_completion() {
     let t = TimingModel::default();
     let dev = Virtex7::default();
     for net in NetConfig::all() {
-        for prec in [Precision::Fixed, Precision::Float] {
+        for prec in Precision::all() {
             let us = t.completion_us(&net, prec, &dev);
             let kq = t.throughput_kq_s(&net, prec, &dev);
             assert!((kq * us / 1e3 - 1.0).abs() < 1e-9, "{net:?}/{prec:?}");
@@ -316,6 +316,40 @@ fn prop_env_kind_parse_print_roundtrip() {
         let parsed = s.parse::<EnvKind>();
         if known.contains(&s.as_str()) {
             // accepted spellings must round-trip back to a known kind
+            assert!(known.contains(&parsed.unwrap().as_str()));
+        } else {
+            assert!(parsed.is_err(), "junk `{s}` parsed");
+        }
+    }
+}
+
+/// Parse↔print property: every precision arm round-trips through its
+/// canonical string, the long-form aliases map onto the canonical arms,
+/// random junk never parses, and the parse error lists the valid
+/// spellings.
+#[test]
+fn prop_precision_parse_print_roundtrip() {
+    for prec in Precision::all() {
+        assert_eq!(prec.as_str().parse::<Precision>().unwrap(), prec);
+    }
+    for (alias, prec) in [("floating", Precision::Float), ("bnn", Precision::Binary)] {
+        assert_eq!(alias.parse::<Precision>().unwrap(), prec);
+    }
+    // the error message must list every valid spelling (not fail opaquely)
+    let err = "int4".parse::<Precision>().unwrap_err().to_string();
+    for spelling in ["fixed", "float", "int8", "binary", "floating", "bnn"] {
+        assert!(err.contains(spelling), "error must list `{spelling}`: {err}");
+    }
+
+    let mut rng = Rng::seeded(9023);
+    let alphabet: Vec<char> = "abcdefghijklmnopqrstuvwxyz0123456789-".chars().collect();
+    let known = ["fixed", "float", "floating", "int8", "binary", "bnn"];
+    for _ in 0..200 {
+        let len = rng.range(1, 10);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        let parsed = s.parse::<Precision>();
+        if known.contains(&s.as_str()) {
+            // accepted spellings must round-trip back to a known arm
             assert!(known.contains(&parsed.unwrap().as_str()));
         } else {
             assert!(parsed.is_err(), "junk `{s}` parsed");
