@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Lint a Prometheus text-exposition file (what `qfpga ... --metrics FILE`
+# writes): every sample line must parse, every family must be declared
+# with # HELP and # TYPE lines, metric names must use the legal charset,
+# and counter families must follow the `_total` naming convention.
+set -euo pipefail
+
+file="${1:?usage: ci/check_prometheus.sh <metrics.prom>}"
+
+[ -s "$file" ] || { echo "FAIL: $file is missing or empty" >&2; exit 1; }
+
+awk '
+BEGIN { bad = 0; families = 0 }
+function fail(msg) { printf "FAIL line %d: %s: %s\n", NR, msg, $0; bad = 1 }
+
+/^# HELP / {
+    if ($3 !~ /^[a-zA-Z_:][a-zA-Z0-9_:]*$/) fail("bad metric name in HELP")
+    help[$3] = 1; next
+}
+/^# TYPE / {
+    if ($3 !~ /^[a-zA-Z_:][a-zA-Z0-9_:]*$/) fail("bad metric name in TYPE")
+    if ($4 !~ /^(counter|gauge|histogram|summary|untyped)$/)
+        fail("bad metric type \"" $4 "\"")
+    if (!($3 in help)) fail("TYPE before HELP for " $3)
+    if ($4 == "counter" && $3 !~ /_total$/)
+        fail("counter family not named *_total")
+    type[$3] = $4; families++; next
+}
+/^#/ { next }        # other comments are legal
+/^$/ { next }
+{
+    # sample line: name[{labels}] value
+    if ($0 !~ /^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9]/ &&
+        $0 !~ /^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? (\+|-)?Inf$/ &&
+        $0 !~ /^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? NaN$/) {
+        fail("unparseable sample line")
+        next
+    }
+    name = $1
+    sub(/\{.*/, "", name)
+    # histogram series carry the family name plus _bucket/_sum/_count
+    base = name
+    sub(/_(bucket|sum|count)$/, "", base)
+    if (!(name in type) && !(base in type)) fail("sample for undeclared family " name)
+    if (name ~ /_bucket$/ && $1 !~ /le="/) fail("_bucket sample without le label")
+}
+END {
+    if (families == 0) { print "FAIL: no metric families declared"; bad = 1 }
+    if (bad) exit 1
+    printf "OK: %d metric families in %s\n", families, FILENAME
+}
+' "$file"

@@ -96,6 +96,76 @@ impl MissionConfig {
         )
     }
 
+    /// Full serialization of the mission configuration — the replayable
+    /// spec run-provenance manifests embed ([`crate::obs::RunManifest`]).
+    /// Everything that shapes the trajectory is included; `qfpga replay`
+    /// rebuilds the config with [`MissionConfig::from_json`] and re-runs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.as_str().into())),
+            ("env", Json::Str(self.env.as_str().into())),
+            ("precision", Json::Str(self.precision.as_str().into())),
+            ("backend", Json::Str(self.backend.as_str().into())),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("max_steps", Json::Num(self.max_steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("alpha", Json::Num(self.hyper.alpha as f64)),
+            ("gamma", Json::Num(self.hyper.gamma as f64)),
+            ("lr", Json::Num(self.hyper.lr as f64)),
+            ("microbatch", Json::Bool(self.microbatch)),
+            ("batch", Json::Num(self.batch as f64)),
+            (
+                "fault",
+                match &self.fault {
+                    None => Json::Null,
+                    Some(plan) => Json::obj(vec![
+                        ("rate", Json::Num(plan.rate)),
+                        ("mitigation", Json::Str(plan.mitigation.label())),
+                    ]),
+                },
+            ),
+            ("fixed_word", Json::Num(self.fixed_spec.word as f64)),
+            ("fixed_frac", Json::Num(self.fixed_spec.frac as f64)),
+        ])
+    }
+
+    /// Inverse of [`MissionConfig::to_json`]. Enum fields parse through
+    /// the same `FromStr` impls as the CLI, so any manifest a released
+    /// build wrote reads back exactly.
+    pub fn from_json(j: &Json) -> Result<MissionConfig> {
+        let fault = match j.get("fault") {
+            None | Some(Json::Null) => None,
+            Some(f) => Some(FaultPlan {
+                rate: f.req_f64("rate")?,
+                mitigation: f.req_str("mitigation")?.parse()?,
+            }),
+        };
+        Ok(MissionConfig {
+            arch: j.req_str("arch")?.parse()?,
+            env: j.req_str("env")?.parse()?,
+            precision: j.req_str("precision")?.parse()?,
+            backend: j.req_str("backend")?.parse()?,
+            episodes: j.req_usize("episodes")?,
+            max_steps: j.req_usize("max_steps")?,
+            seed: j.req_f64("seed")? as u64,
+            hyper: Hyper {
+                alpha: j.req_f64("alpha")? as f32,
+                gamma: j.req_f64("gamma")? as f32,
+                lr: j.req_f64("lr")? as f32,
+            },
+            microbatch: j
+                .get("microbatch")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            batch: j.req_usize("batch")?,
+            fault,
+            fixed_spec: FixedSpec {
+                word: j.req_usize("fixed_word")? as u32,
+                frac: j.req_usize("fixed_frac")? as u32,
+            },
+        })
+    }
+
     /// Canonical identity of everything that shapes a mission trajectory —
     /// the compatibility key stamped into checkpoints so a resume can never
     /// silently mix a stale snapshot into a changed configuration.
@@ -214,6 +284,9 @@ impl MissionRun {
                 break;
             }
             let episode = self.stats.len();
+            // one span per episode (inert unless --trace): coarse enough to
+            // keep the step loop allocation-free and bit-exact
+            let span = crate::obs::span(crate::obs::SpanKind::Episode);
             let s = train_episode(
                 &mut self.learner,
                 self.env.as_mut(),
@@ -221,6 +294,9 @@ impl MissionRun {
                 self.cfg.max_steps,
                 &mut self.rng,
             )?;
+            span.field("episode", episode as f64)
+                .field("steps", s.steps as f64)
+                .done();
             self.total_steps += s.steps;
             observer(&s);
             self.stats.push(s);
@@ -466,9 +542,12 @@ impl MissionCheckpoint {
     /// interruption checkpointing exists to survive can never leave a
     /// torn file behind.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let span = crate::obs::span(crate::obs::SpanKind::Checkpoint);
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, self.to_json().to_string())?;
         std::fs::rename(&tmp, path)?;
+        crate::obs::metrics().checkpoint_writes.inc();
+        span.field("episodes_done", self.episodes_done as f64).done();
         Ok(())
     }
 
@@ -646,6 +725,39 @@ mod tests {
         for (x, y) in a.train.episodes.iter().zip(&b.train.episodes) {
             assert_eq!(x.total_reward, y.total_reward);
         }
+    }
+
+    #[test]
+    fn config_json_roundtrip_is_exact() {
+        use crate::fault::Mitigation;
+        let cfg = MissionConfig {
+            arch: Arch::Perceptron,
+            env: EnvKind::Slip,
+            precision: Precision::Int8,
+            backend: BackendKind::FpgaSim,
+            episodes: 37,
+            max_steps: 91,
+            seed: 0xDEAD,
+            hyper: Hyper { alpha: 0.21, gamma: 0.93, lr: 0.07 },
+            microbatch: true,
+            batch: 5,
+            fault: Some(FaultPlan { rate: 3.5e-4, mitigation: Mitigation::Scrub { interval: 17 } }),
+            fixed_spec: FixedSpec { word: 24, frac: 16 },
+        };
+        // through the Json value and through text (what manifests store)
+        let back = MissionConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fingerprint(), cfg.fingerprint());
+        assert_eq!(back.hyper.alpha, cfg.hyper.alpha);
+        assert_eq!(back.hyper.gamma, cfg.hyper.gamma);
+        assert_eq!(back.hyper.lr, cfg.hyper.lr);
+        assert_eq!(back.fault, cfg.fault);
+        let text = cfg.to_json().to_string();
+        let reparsed = MissionConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed.fingerprint(), cfg.fingerprint());
+        assert_eq!(reparsed.fault, cfg.fault);
+        // fault-free configs serialize fault: null and read back as None
+        let clean = MissionConfig::default();
+        assert_eq!(MissionConfig::from_json(&clean.to_json()).unwrap().fault, None);
     }
 
     #[test]

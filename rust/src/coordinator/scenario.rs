@@ -30,7 +30,7 @@ use crate::nn::params::QNetParams;
 use crate::qlearn::backend::BackendKind;
 use crate::qlearn::trainer::TrainReport;
 use crate::report::PaperTable;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// What to run: which scenarios, on which network, for how long.
 #[derive(Debug, Clone)]
@@ -57,6 +57,52 @@ impl Default for ScenarioSpec {
             seed: 7,
             batch: 1,
         }
+    }
+}
+
+impl ScenarioSpec {
+    /// Full serialization — the replayable spec `qfpga mission` manifests
+    /// embed ([`crate::obs::RunManifest`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "envs",
+                Json::Arr(
+                    self.envs
+                        .iter()
+                        .map(|e| Json::Str(e.as_str().into()))
+                        .collect(),
+                ),
+            ),
+            ("arch", Json::Str(self.arch.as_str().into())),
+            ("precision", Json::Str(self.precision.as_str().into())),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("max_steps", Json::Num(self.max_steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+        ])
+    }
+
+    /// Inverse of [`ScenarioSpec::to_json`] (CLI `FromStr` spellings).
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let envs = j
+            .req_arr("envs")?
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .ok_or_else(|| Error::interface("scenario env not a string"))?
+                    .parse()
+            })
+            .collect::<Result<Vec<EnvKind>>>()?;
+        Ok(ScenarioSpec {
+            envs,
+            arch: j.req_str("arch")?.parse()?,
+            precision: j.req_str("precision")?.parse()?,
+            episodes: j.req_usize("episodes")?,
+            max_steps: j.req_usize("max_steps")?,
+            seed: j.req_f64("seed")? as u64,
+            batch: j.req_usize("batch")?,
+        })
     }
 }
 
@@ -142,14 +188,18 @@ pub fn scenario_table(spec: &ScenarioSpec) -> Result<PaperTable> {
         let fpga_per =
             TimingModel::default().completion_us(&net, spec.precision, &Virtex7::default());
         let cpu_per = {
+            let span = crate::obs::span(crate::obs::SpanKind::Measure);
             let mut rng = Rng::seeded(spec.seed ^ 0x5CE7_A210);
             let params = QNetParams::init(&net, 0.3, &mut rng);
             let mut backend = BackendFactory::offline()
                 .build(&BackendSpec::cpu(net, spec.precision), params)?;
             let workload = Workload::synthetic(net, 660, spec.seed.wrapping_add(3));
-            measure_backend(&mut backend, &workload, 60)?.median_us
+            let us = measure_backend(&mut backend, &workload, 60)?.median_us;
+            span.field("median_us", us).done();
+            us
         };
-        table = table.row(
+        // measured_row: host-timed, so run-provenance hashing skips it
+        table = table.measured_row(
             format!("{label} fpga advantage (cpu µs / fpga µs)"),
             cpu_per / fpga_per.max(1e-12),
             None,
@@ -206,6 +256,28 @@ mod tests {
         // the end — convergence is after the last excursion
         let dip = [0.5f32, -1.0, -0.9, -0.5, 0.1, 0.5, 0.5];
         assert_eq!(convergence_episode(&fake_report(&dip), 1), 6);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        let spec = ScenarioSpec {
+            envs: vec![EnvKind::Crater, EnvKind::Energy],
+            arch: Arch::Perceptron,
+            precision: Precision::Binary,
+            episodes: 9,
+            max_steps: 33,
+            seed: 41,
+            batch: 4,
+        };
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.envs, spec.envs);
+        assert_eq!(back.arch, spec.arch);
+        assert_eq!(back.precision, spec.precision);
+        assert_eq!(back.episodes, spec.episodes);
+        assert_eq!(back.max_steps, spec.max_steps);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.batch, spec.batch);
     }
 
     #[test]

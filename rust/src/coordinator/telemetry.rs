@@ -29,6 +29,30 @@ pub struct RoverProgress {
 }
 
 impl RoverProgress {
+    /// Downlink form — a flat object of the five scalars.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rover", Json::Num(self.rover as f64)),
+            ("episode", Json::Num(self.episode as f64)),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("reward", Json::Num(self.reward as f64)),
+            ("epsilon", Json::Num(self.epsilon as f64)),
+        ])
+    }
+
+    /// Inverse of [`RoverProgress::to_json`]. Exact for every reachable
+    /// sample: f32 → f64 → f32 round-trips bit-identically through the
+    /// writer's shortest-round-trip float formatting.
+    pub fn from_json(j: &Json) -> Result<RoverProgress> {
+        Ok(RoverProgress {
+            rover: j.req_usize("rover")?,
+            episode: j.req_usize("episode")?,
+            episodes: j.req_usize("episodes")?,
+            reward: j.req_f64("reward")? as f32,
+            epsilon: j.req_f64("epsilon")? as f32,
+        })
+    }
+
     /// Compact single-line rendering for mission logs.
     pub fn render(&self) -> String {
         format!(
@@ -76,10 +100,20 @@ impl LearningCurve {
             .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
         let span = (hi - lo).max(1e-6);
         let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-        let stride = (vals.len() / width.max(1)).max(1);
+        let n = vals.len();
+        let stride = (n / width.max(1)).max(1);
         vals.iter()
-            .step_by(stride)
-            .map(|&v| glyphs[(((v - lo) / span) * 7.0).round() as usize])
+            .enumerate()
+            // same inclusion rule as `from_report`: the stride lattice plus
+            // the final sample, so the end of the curve always renders
+            .filter(|(i, _)| i % stride == 0 || *i == n - 1)
+            .map(|(_, &v)| {
+                let t = ((v - lo) / span) * 7.0;
+                // NaN rewards (degenerate environments) draw the floor
+                // glyph instead of gambling on a float→usize cast
+                let idx = if t.is_finite() { (t.round() as usize).min(7) } else { 0 };
+                glyphs[idx]
+            })
             .collect()
     }
 }
@@ -152,6 +186,51 @@ mod tests {
         assert!(!s.is_empty());
         let chars: Vec<char> = s.chars().collect();
         assert!(chars.first().unwrap() <= chars.last().unwrap());
+    }
+
+    #[test]
+    fn ascii_always_renders_the_final_sample() {
+        // 11 samples at width 3 → stride 3: lattice {0,3,6,9} plus the
+        // final index 10, which carries the only maximal value — if the
+        // tail were dropped the sparkline would never reach '█'
+        let mut c = LearningCurve::from_report(&fake_report(11), 1, 11);
+        assert_eq!(c.points.len(), 11);
+        c.points.iter_mut().for_each(|p| p.1 = 0.0);
+        c.points.last_mut().unwrap().1 = 1.0;
+        let s = c.ascii(3);
+        assert_eq!(s.chars().count(), 5);
+        assert_eq!(s.chars().last().unwrap(), '█');
+    }
+
+    #[test]
+    fn ascii_survives_nan_rewards() {
+        let mut c = LearningCurve::from_report(&fake_report(8), 1, 8);
+        c.points[3].1 = f32::NAN;
+        let s = c.ascii(8);
+        // NaN renders as the floor glyph; nothing panics or goes out of
+        // bounds
+        assert_eq!(s.chars().count(), 8);
+        assert_eq!(s.chars().nth(3).unwrap(), '▁');
+        // an all-NaN curve degrades to a flat floor line
+        let mut all = LearningCurve::from_report(&fake_report(4), 1, 4);
+        all.points.iter_mut().for_each(|p| p.1 = f32::NAN);
+        assert_eq!(all.ascii(4), "▁▁▁▁");
+    }
+
+    #[test]
+    fn progress_json_roundtrip() {
+        let p = RoverProgress {
+            rover: 3,
+            episode: 41,
+            episodes: 120,
+            reward: -0.62551,
+            epsilon: 0.097,
+        };
+        let text = p.to_json().to_string();
+        let back = RoverProgress::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // missing key is a clean error, not a default
+        assert!(RoverProgress::from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]

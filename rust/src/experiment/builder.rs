@@ -293,6 +293,9 @@ fn run_rover(
     ckpt: Option<&CheckpointPolicy>,
     progress: &mut dyn FnMut(RoverProgress),
 ) -> Result<MissionReport> {
+    let span = crate::obs::span(crate::obs::SpanKind::Mission)
+        .field("rover", rover as f64)
+        .field("episodes", cfg.episodes as f64);
     let factory = BackendFactory::for_kind(cfg.backend)?;
     let ckpt_path = ckpt.map(|c| c.dir.join(format!("rover-{rover}.json")));
     let mut run = match &ckpt_path {
@@ -324,6 +327,7 @@ fn run_rover(
         // completed: clear the resume state so a rerun starts fresh
         let _ = std::fs::remove_file(path);
     }
+    span.done();
     run.finish()
 }
 
@@ -362,6 +366,16 @@ fn run_pool(
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n_rovers {
                         break;
+                    }
+                    // claim accounting: a rover's round-robin "home" worker
+                    // is i % workers; any other claimant stole the job
+                    // through the shared cursor. Counters are operational
+                    // telemetry only — claim order stays racy by design
+                    // while results stay ordered by rover index.
+                    let m = crate::obs::metrics();
+                    m.fleet_claim(w);
+                    if i % workers != w {
+                        m.fleet_jobs_stolen.inc();
                     }
                     let mut cfg = base.clone();
                     cfg.seed = base.seed.wrapping_add(i as u64);

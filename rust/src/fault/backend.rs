@@ -114,6 +114,7 @@ impl<B: QBackend> FaultyBackend<B> {
         self.sync_store();
         self.store.apply_upsets(&mut self.model, flips);
         if scrub_due {
+            crate::obs::metrics().fault_scrub_bursts.inc();
             self.store.scrub_now(&mut self.model);
         }
         let words = self.store.read(&mut self.model.stats);

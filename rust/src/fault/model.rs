@@ -134,6 +134,16 @@ pub(crate) fn strike_window<F: FnMut(usize, u32)>(
         return;
     }
     let flips = model.upsets(n_sites as u64 * bits as u64, 1);
+    // process-wide fault telemetry, beside the per-model `stats`: strikes
+    // count arrivals, escaped counts every flip delivered into data, and
+    // masked counts mitigation-absorbed strikes. The registry counters are
+    // monotone, so reclassification (TMR vote break, ECC double strike)
+    // never decrements masked — the exact books stay in `FaultStats`.
+    let met = crate::obs::metrics();
+    let mut deliver = |word: usize, bit: u32| {
+        met.fault_escaped.inc();
+        apply(word, bit);
+    };
     // strikes of this window, and sites whose protection already failed
     let mut window: Vec<(usize, u32, usize)> = Vec::new();
     let mut failed_bits: Vec<(usize, u32)> = Vec::new(); // TMR voted-through sites
@@ -142,8 +152,9 @@ pub(crate) fn strike_window<F: FnMut(usize, u32)>(
         let word = model.pick(n_sites);
         let bit = model.pick(bits as usize) as u32;
         model.stats.transient += 1;
+        met.fault_strikes.inc();
         match mitigation {
-            Mitigation::None | Mitigation::Scrub { .. } => apply(word, bit),
+            Mitigation::None | Mitigation::Scrub { .. } => deliver(word, bit),
             Mitigation::Tmr => {
                 let replica = model.pick(3);
                 if failed_bits.contains(&(word, bit)) {
@@ -159,16 +170,17 @@ pub(crate) fn strike_window<F: FnMut(usize, u32)>(
                     model.stats.masked -= 1;
                     model.stats.uncorrectable += 2;
                     failed_bits.push((word, bit));
-                    apply(word, bit);
+                    deliver(word, bit);
                 } else {
                     model.stats.masked += 1;
+                    met.fault_masked.inc();
                 }
                 window.push((word, bit, replica));
             }
             Mitigation::Ecc => {
                 if failed_words.contains(&word) {
                     model.stats.uncorrectable += 1;
-                    apply(word, bit);
+                    deliver(word, bit);
                 } else {
                     let earlier: Vec<u32> = window
                         .iter()
@@ -177,6 +189,7 @@ pub(crate) fn strike_window<F: FnMut(usize, u32)>(
                         .collect();
                     if earlier.is_empty() {
                         model.stats.corrected += 1;
+                        met.fault_masked.inc();
                     } else {
                         // the word now decodes uncorrectable: deliver it
                         // raw — re-classify the optimistic corrections and
@@ -185,9 +198,9 @@ pub(crate) fn strike_window<F: FnMut(usize, u32)>(
                         model.stats.corrected -= earlier.len() as u64;
                         model.stats.uncorrectable += earlier.len() as u64 + 1;
                         for b in earlier {
-                            apply(word, b);
+                            deliver(word, b);
                         }
-                        apply(word, bit);
+                        deliver(word, bit);
                         failed_words.push(word);
                     }
                 }

@@ -293,6 +293,7 @@ impl FpgaAccelerator {
         let cycles = self.timing.forward_cycles(&self.cfg, self.precision);
         self.stats.forwards += 1;
         self.stats.cycles += cycles;
+        crate::obs::metrics().fpga_cycles.add(cycles);
         Ok((q, cycles))
     }
 
@@ -315,6 +316,7 @@ impl FpgaAccelerator {
         let breakdown = self.timing.qupdate(&self.cfg, self.precision);
         self.stats.updates += 1;
         self.stats.cycles += breakdown.total();
+        crate::obs::metrics().fpga_cycles.add(breakdown.total());
         Ok((out, breakdown))
     }
 
@@ -377,6 +379,7 @@ impl FpgaAccelerator {
         self.stats.updates += b as u64;
         self.stats.batches += 1;
         self.stats.cycles += cycles;
+        crate::obs::metrics().fpga_cycles.add(cycles);
         Ok(errs)
     }
 
@@ -498,6 +501,9 @@ impl FpgaAccelerator {
         let q_next_max = tensor::max(&drained_next);
         let drained_cur = fifo_cur.drain_all()?;
         let q_sa = drained_cur[t.action];
+        crate::obs::metrics()
+            .fpga_fifo_high_water
+            .observe(fifo_cur.high_water().max(fifo_next.high_water()) as u64);
 
         let gamma = Fixed::from_f32(hyper.gamma, q);
         let alpha = Fixed::from_f32(hyper.alpha, q);

@@ -17,14 +17,22 @@
 //! * `radiation` — resilience campaign under seeded SEU injection.
 //! * `validate` — cross-backend numeric equivalence over random workloads.
 //! * `diff a.json b.json` — compare two report JSON files within
-//!   tolerances (non-zero exit on drift).
+//!   tolerances (non-zero exit on drift; `--ignore-keys` deep-strips
+//!   volatile keys first).
+//! * `manifest validate f.json` — integrity-check a run manifest.
+//! * `replay manifest.json` — re-run a recorded train/fleet/mission spec
+//!   and require the reproduced report hash to match bit-exactly.
 //! * `info` — artifact manifest + device/model summary.
 //!
 //! Every subcommand that prints a table or campaign accepts `--json FILE`
 //! to also write the typed machine-readable report (the
-//! [`qfpga::report::Report`] surface).
+//! [`qfpga::report::Report`] surface). Run subcommands additionally accept
+//! the observability options (`--trace`, `--manifest`, `--metrics` — see
+//! the README's Observability section).
 
+use std::path::Path;
 use std::process::ExitCode;
+use std::time::Instant;
 
 use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::sweep::Workload;
@@ -34,6 +42,9 @@ use qfpga::error::Result;
 use qfpga::experiment::{BackendFactory, BackendSpec, Experiment};
 use qfpga::fpga::{TimingModel, Virtex7};
 use qfpga::nn::params::QNetParams;
+use qfpga::obs::manifest::RunManifest;
+use qfpga::obs::metrics::MetricsSnapshot;
+use qfpga::obs::trace;
 use qfpga::qlearn::backend::{BackendKind, QBackend};
 use qfpga::report::{self, Report};
 use qfpga::runtime::Runtime;
@@ -43,7 +54,7 @@ use qfpga::util::{Json, Rng};
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|diff|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|diff|manifest|replay|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
@@ -86,14 +97,32 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
             [--rovers N]          fleet width per campaign cell (default 2)
             plus --arch/--env/--precision/--episodes/--max-steps/--seed
   validate  --updates N           cross-backend + batch/stepwise equivalence
-  diff      <ours.json> <golden.json> [--tol T]
+  diff      <ours.json> <golden.json> [--tol T] [--ignore-keys k1,k2]
             compare two report JSON files (default tolerance 0.05); exits
-            non-zero when paper-ratio or latency fields drift out of band
+            non-zero when paper-ratio or latency fields drift out of band.
+            Non-table documents (run manifests) compare structurally;
+            --ignore-keys deep-strips the named keys from both sides first
+            (e.g. --ignore-keys run_id,durations for two manifests of the
+            same spec)
+  manifest  validate <file.json>  parse + integrity-check a run manifest
+            (schema major, spec_sha256, manifest self-hash)
+  replay    <manifest.json>       re-run the recorded spec (train, fleet or
+            mission manifests) and require the reproduced report_sha256 to
+            match the recorded one bit-exactly; exits non-zero on mismatch
   info                            artifacts, device, cycle model summary
 
   --json FILE   (report/train/fleet/mission/sweep/throughput/radiation/
                 validate/info) also write the subcommand's typed JSON
                 report to FILE
+
+observability (train/fleet/mission/sweep/throughput/radiation):
+  --manifest FILE   write a versioned run-provenance manifest (schema,
+                    run id, git describe, replayable spec + sha256, seed,
+                    delta metrics snapshot, report sha256)
+  --trace FILE      enable span tracing and write JSONL records to FILE;
+                    prints a per-kind p50/p99 summary at exit
+  --metrics FILE    write this run's delta metrics snapshot; Prometheus
+                    text exposition, or JSON when FILE ends in .json
 ";
 
 fn main() -> ExitCode {
@@ -130,6 +159,8 @@ fn run() -> Result<()> {
         Some("radiation") => cmd_radiation(&args),
         Some("validate") => cmd_validate(&args),
         Some("diff") => cmd_diff(&args),
+        Some("manifest") => cmd_manifest(&args),
+        Some("replay") => cmd_replay(&args),
         Some("info") => cmd_info(&args),
         Some("help") => {
             print!("{USAGE}");
@@ -155,6 +186,80 @@ fn write_json(args: &Args, doc: &Json) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Observability lifecycle for one run subcommand: snapshot the metrics
+/// baseline (the registry is process-lifetime; a manifest must describe
+/// this run only), arm tracing if `--trace` was given, and on `finish`
+/// emit the manifest / trace file / metrics dump the flags asked for.
+struct ObsRun {
+    baseline: MetricsSnapshot,
+    started: Instant,
+    run_id: String,
+    trace_path: Option<String>,
+    manifest_path: Option<String>,
+    metrics_path: Option<String>,
+}
+
+impl ObsRun {
+    fn begin(args: &Args) -> ObsRun {
+        let trace_path = args.get("trace").map(String::from);
+        if trace_path.is_some() {
+            trace::enable();
+        }
+        ObsRun {
+            baseline: MetricsSnapshot::capture(),
+            started: Instant::now(),
+            run_id: qfpga::obs::manifest::new_run_id(),
+            trace_path,
+            manifest_path: args.get("manifest").map(String::from),
+            metrics_path: args.get("metrics").map(String::from),
+        }
+    }
+
+    /// Emit everything the observability flags requested. `spec` must be
+    /// the complete replayable input of the run (what `qfpga replay`
+    /// feeds back in), `report_doc` the run's `--json` document.
+    fn finish(
+        self,
+        subcommand: &str,
+        seed: u64,
+        spec: Json,
+        report_id: &str,
+        report_doc: &Json,
+    ) -> Result<()> {
+        let wall = self.started.elapsed().as_secs_f64();
+        let delta = MetricsSnapshot::capture().delta(&self.baseline);
+        if let Some(path) = &self.metrics_path {
+            let text = if path.ends_with(".json") {
+                delta.to_json().to_string()
+            } else {
+                delta.to_prometheus()
+            };
+            std::fs::write(path, text)?;
+            println!("wrote metrics {path}");
+        }
+        if let Some(path) = &self.manifest_path {
+            let mut m =
+                RunManifest::build(subcommand, seed, spec, report_id, report_doc, &delta, wall);
+            // share the run id with the trace file (run_id is outside the
+            // self-hash, so overriding it keeps the manifest valid)
+            m.run_id = self.run_id.clone();
+            m.save(Path::new(path))?;
+            println!(
+                "wrote manifest {path} (run {}, report_sha256 {}…)",
+                m.run_id,
+                &m.report_sha256[..12]
+            );
+        }
+        if let Some(path) = &self.trace_path {
+            let (records, dropped) = trace::disable_and_drain();
+            trace::write_jsonl(path, &self.run_id, &records)?;
+            print!("{}", trace::TraceSummary::from_records(&records, dropped).render());
+            println!("wrote trace {path} ({} spans)", records.len());
+        }
+        Ok(())
+    }
 }
 
 fn mission_config(args: &Args) -> Result<MissionConfig> {
@@ -242,6 +347,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
+    let obs = ObsRun::begin(args);
     println!("mission: {}", cfg.describe());
     let experiment = Experiment::from_mission(&cfg).run()?;
     let report = &experiment.rovers[0];
@@ -266,13 +372,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             us / 1e3
         );
     }
-    write_json(args, &experiment.to_json())
+    let doc = experiment.to_json();
+    write_json(args, &doc)?;
+    obs.finish("train", cfg.seed, cfg.to_json(), "EXP", &doc)
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
     let rovers = args.get_parse("rovers", 4usize)?;
     let workers = args.get_parse("workers", 0usize)?;
+    let obs = ObsRun::begin(args);
     let mut experiment = Experiment::from_mission(&cfg).rovers(rovers).workers(workers);
     if let Some(dir) = args.get("checkpoint-dir") {
         experiment = experiment.checkpoint(dir, args.get_parse("checkpoint-every", 25usize)?);
@@ -300,7 +409,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.mean_learning_delta(),
         report.wall_seconds
     );
-    write_json(args, &report.to_json())
+    // the replayable fleet spec is the mission config plus fleet width;
+    // worker count shapes wall time only (seeds/ordering are
+    // worker-invariant), so it stays out of the spec hash
+    let mut spec = cfg.to_json();
+    if let Json::Obj(map) = &mut spec {
+        map.insert("rovers".into(), Json::Num(rovers as f64));
+    }
+    let doc = report.to_json();
+    write_json(args, &doc)?;
+    obs.finish("fleet", cfg.seed, spec, "EXP", &doc)
 }
 
 /// `throughput` — table B2: measured CPU updates/s for the three host
@@ -317,13 +435,25 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         max_steps: args.get_parse("max-steps", 60usize)?,
         seed: args.get_parse("seed", 7u64)?,
     };
+    let obs = ObsRun::begin(args);
     println!(
         "throughput table: {} timed updates/row, batch {}, fleet {} rovers",
         spec.updates, spec.batch, spec.rovers
     );
     let table = throughput_table(&spec)?;
     println!("{table}");
-    write_json(args, &table.to_json())
+    let spec_doc = Json::obj(vec![
+        ("updates", Json::Num(spec.updates as f64)),
+        ("batch", Json::Num(spec.batch as f64)),
+        ("rovers", Json::Num(spec.rovers as f64)),
+        ("workers", Json::Num(spec.workers as f64)),
+        ("episodes", Json::Num(spec.episodes as f64)),
+        ("max_steps", Json::Num(spec.max_steps as f64)),
+        ("seed", Json::Num(spec.seed as f64)),
+    ]);
+    let doc = table.to_json();
+    write_json(args, &doc)?;
+    obs.finish("throughput", spec.seed, spec_doc, "B2", &doc)
 }
 
 /// `mission` — the scenario-library campaign: every requested environment
@@ -345,6 +475,7 @@ fn cmd_mission(args: &Args) -> Result<()> {
         seed: args.get_parse("seed", 7u64)?,
         batch: args.get_parse("batch", 1usize)?,
     };
+    let obs = ObsRun::begin(args);
     println!(
         "scenario campaign: [{}] × [cpu + fpga-sim], {} {} ({} episodes × ≤{} steps each)",
         spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(", "),
@@ -355,12 +486,15 @@ fn cmd_mission(args: &Args) -> Result<()> {
     );
     let table = scenario_table(&spec)?;
     print!("{table}");
-    write_json(args, &table.to_json())
+    let doc = table.to_json();
+    write_json(args, &doc)?;
+    obs.finish("mission", spec.seed, spec.to_json(), "S1", &doc)
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let n = args.get_parse("updates", 1_000usize)?;
     let batch = args.get_parse("batch", 0usize)?;
+    let obs = ObsRun::begin(args);
     let warmup = (n / 10).max(10).max(2 * batch);
     let factory = BackendFactory::auto();
     if !factory.has_runtime() {
@@ -387,7 +521,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     }
     let sweep = SweepReport { updates: n, batch, rows };
-    write_json(args, &sweep.to_json())
+    let spec_doc = Json::obj(vec![
+        ("updates", Json::Num(n as f64)),
+        ("batch", Json::Num(batch as f64)),
+    ]);
+    let doc = sweep.to_json();
+    write_json(args, &doc)?;
+    obs.finish("sweep", 0, spec_doc, "L1", &doc)
 }
 
 /// `radiation` — resilience campaign: per backend, a fault-free baseline
@@ -432,6 +572,7 @@ fn cmd_radiation(args: &Args) -> Result<()> {
         b => vec![b.parse::<BackendKind>()?],
     };
     let rovers = args.get_parse("rovers", 2usize)?.max(1);
+    let obs = ObsRun::begin(args);
 
     println!(
         "radiation campaign: {} × [{} {} {}] @ {rate:.1e} upsets/bit/step ({}), \
@@ -446,7 +587,27 @@ fn cmd_radiation(args: &Args) -> Result<()> {
 
     let campaign = resilience(&base, &backends, &[rate], &mitigations, rovers)?;
     print!("{}", campaign.render());
-    write_json(args, &campaign.to_json())
+    let spec_doc = Json::obj(vec![
+        ("mission", base.to_json()),
+        ("rate", Json::Num(rate)),
+        (
+            "mitigations",
+            Json::Arr(mitigations.iter().map(|m| Json::Str(m.label())).collect()),
+        ),
+        (
+            "backends",
+            Json::Arr(
+                backends
+                    .iter()
+                    .map(|b| Json::Str(b.as_str().into()))
+                    .collect(),
+            ),
+        ),
+        ("rovers", Json::Num(rovers as f64)),
+    ]);
+    let doc = campaign.to_json();
+    write_json(args, &doc)?;
+    obs.finish("radiation", base.seed, spec_doc, "R2", &doc)
 }
 
 fn print_timing(t: &qfpga::coordinator::WorkloadTiming) {
@@ -573,11 +734,15 @@ fn cmd_diff(args: &Args) -> Result<()> {
     let pos = args.positional();
     let (Some(ours), Some(golden)) = (pos.get(1), pos.get(2)) else {
         return Err(qfpga::error::Error::Config(
-            "usage: qfpga diff <ours.json> <golden.json> [--tol T]".into(),
+            "usage: qfpga diff <ours.json> <golden.json> [--tol T] [--ignore-keys k1,k2]".into(),
         ));
     };
     let tol = args.get_parse("tol", 0.05f64)?;
-    let d = report::diff_files(ours, golden, tol)?;
+    let ignore: Vec<&str> = args
+        .get("ignore-keys")
+        .map(|s| s.split(',').map(str::trim).filter(|k| !k.is_empty()).collect())
+        .unwrap_or_default();
+    let d = report::diff_files(ours, golden, tol, &ignore)?;
     print!("{}", d.render(tol));
     if d.compared == 0 {
         // a gate that compared nothing must not report success
@@ -592,6 +757,90 @@ fn cmd_diff(args: &Args) -> Result<()> {
             d.problems.len()
         )));
     }
+    Ok(())
+}
+
+/// `manifest validate <file.json>` — parse + integrity-check a manifest.
+fn cmd_manifest(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    let (Some(verb), Some(path)) = (pos.get(1), pos.get(2)) else {
+        return Err(qfpga::error::Error::Config(
+            "usage: qfpga manifest validate <file.json>".into(),
+        ));
+    };
+    if verb != "validate" {
+        return Err(qfpga::error::Error::Config(format!(
+            "unknown manifest verb `{verb}` (expected `validate`)"
+        )));
+    }
+    let m = RunManifest::load(Path::new(path))?;
+    println!("manifest OK: {path}");
+    println!("  schema          {}", m.schema_version);
+    println!("  run             {}", m.run_id);
+    println!("  subcommand      {} (report {})", m.subcommand, m.report_id);
+    println!("  git             {}", m.git_describe);
+    println!("  seed            {}", m.seed);
+    println!("  spec_sha256     {}", m.spec_sha256);
+    println!("  report_sha256   {}", m.report_sha256);
+    println!("  manifest_sha256 {}", m.manifest_sha256);
+    Ok(())
+}
+
+/// Re-run a manifest's recorded spec and return the reproduced report
+/// document. Only seed-deterministic subcommands are replayable; the
+/// measurement campaigns (`sweep`, `throughput`, `radiation` overheads)
+/// record host-timed results that no re-run can reproduce bit-exactly.
+fn replay_report(m: &RunManifest) -> Result<Json> {
+    match m.subcommand.as_str() {
+        "train" => {
+            let cfg = MissionConfig::from_json(&m.spec)?;
+            Ok(Experiment::from_mission(&cfg).run()?.to_json())
+        }
+        "fleet" => {
+            let cfg = MissionConfig::from_json(&m.spec)?;
+            let rovers = m.spec.req_usize("rovers")?;
+            Ok(Experiment::from_mission(&cfg).rovers(rovers).run()?.to_json())
+        }
+        "mission" => {
+            use qfpga::coordinator::{scenario_table, ScenarioSpec};
+            let spec = ScenarioSpec::from_json(&m.spec)?;
+            Ok(scenario_table(&spec)?.to_json())
+        }
+        other => Err(qfpga::error::Error::Config(format!(
+            "`{other}` manifests validate but cannot replay: the run records \
+             host-measured results (only train/fleet/mission are \
+             seed-deterministic end to end)"
+        ))),
+    }
+}
+
+/// `replay <manifest.json>` — re-run the recorded spec and require the
+/// reproduced report projection to hash identically to the recorded one.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    let Some(path) = pos.get(1) else {
+        return Err(qfpga::error::Error::Config(
+            "usage: qfpga replay <manifest.json>".into(),
+        ));
+    };
+    let m = RunManifest::load(Path::new(path))?;
+    println!(
+        "replaying {} run {} (seed {}, spec {}…)",
+        m.subcommand,
+        m.run_id,
+        m.seed,
+        &m.spec_sha256[..12]
+    );
+    let doc = replay_report(&m)?;
+    let got = qfpga::obs::manifest::report_sha256(&doc);
+    if got != m.report_sha256 {
+        return Err(qfpga::error::Error::Config(format!(
+            "replay diverged: recorded report_sha256 {} but the re-run produced {got} — \
+             the build is no longer bit-compatible with this manifest",
+            m.report_sha256
+        )));
+    }
+    println!("replay OK: report_sha256 {got} reproduced bit-exactly");
     Ok(())
 }
 

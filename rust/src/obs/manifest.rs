@@ -1,0 +1,387 @@
+//! Run-provenance manifests: every run records enough to be re-validated.
+//!
+//! A [`RunManifest`] pins a run's full identity — schema version, run id,
+//! `git describe`, the complete replayable spec plus its sha256, the seed,
+//! wall-clock durations, a delta metrics snapshot, and the sha256 of the
+//! *deterministic projection* of the report the run produced. Hashing
+//! follows the manifest exemplar rules: sha256 over canonical JSON (sorted
+//! keys, compact `,`/`:` separators — exactly what [`Json`]'s `Display`
+//! emits) with the volatile fields removed first.
+//!
+//! Two hash projections exist:
+//!
+//! * **manifest_sha256** — the manifest minus [`VOLATILE_MANIFEST_KEYS`]
+//!   (the self-hash, `run_id` and `durations`). Two identical runs
+//!   therefore produce identical `manifest_sha256` values, and
+//!   `qfpga diff a b --ignore-keys run_id,durations` compares the rest.
+//! * **report_sha256** — the report JSON minus host-timed keys
+//!   ([`VOLATILE_REPORT_KEYS`], recursively) and minus any table row
+//!   marked `"measured": true` (host-measured latencies). What remains is
+//!   seed-deterministic, which is what makes `qfpga replay` a bit-exact
+//!   check rather than a tolerance diff.
+//!
+//! Schema versioning is semver-shaped: readers accept any `1.x.y`,
+//! additive fields bump the minor, incompatible changes bump the major
+//! (see MIGRATION.md).
+
+use std::path::Path;
+use std::process::Command;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::error::{Error, Result};
+use crate::util::{sha256_hex, Json};
+
+use super::metrics::MetricsSnapshot;
+
+/// Manifest schema version (semver; major gates compatibility).
+pub const SCHEMA_VERSION: &str = "1.0.0";
+
+/// Top-level manifest fields excluded from `manifest_sha256` (and the
+/// `--ignore-keys` set that makes two runs of the same spec diff clean).
+pub const VOLATILE_MANIFEST_KEYS: [&str; 3] = ["manifest_sha256", "run_id", "durations"];
+
+/// Report keys (at any depth) whose values are host-timed and therefore
+/// excluded from `report_sha256`. `workers` rides along because the
+/// effective pool width is host-derived while the results are
+/// width-independent (the PR 5 pool guarantee).
+pub const VOLATILE_REPORT_KEYS: [&str; 4] = [
+    "wall_seconds",
+    "updates_per_second",
+    "aggregate_updates_per_second",
+    "workers",
+];
+
+/// Fresh process-unique run id (time + pid; uniqueness, not secrecy).
+pub fn new_run_id() -> String {
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    format!(
+        "run-{:x}{:07x}-{:x}",
+        now.as_secs(),
+        now.subsec_nanos(),
+        std::process::id()
+    )
+}
+
+/// Best-effort `git describe --always --dirty` ("unknown" outside a work
+/// tree or without git on PATH — manifests must never fail a run).
+pub fn git_describe() -> String {
+    Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Deep copy of `doc` with the named object keys removed at every depth.
+pub fn strip_keys(doc: &Json, keys: &[&str]) -> Json {
+    match doc {
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .filter(|(k, _)| !keys.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), strip_keys(v, keys)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(|v| strip_keys(v, keys)).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Is this array element a table row flagged as host-measured?
+fn is_measured_row(v: &Json) -> bool {
+    matches!(v.get("measured"), Some(Json::Bool(true)))
+}
+
+/// The deterministic projection of a report document: volatile keys out,
+/// host-measured rows out.
+pub fn report_projection(doc: &Json) -> Json {
+    match doc {
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .filter(|(k, _)| !VOLATILE_REPORT_KEYS.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), report_projection(v)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(
+            items
+                .iter()
+                .filter(|v| !is_measured_row(v))
+                .map(report_projection)
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// sha256 of the deterministic report projection (canonical JSON bytes).
+pub fn report_sha256(doc: &Json) -> String {
+    sha256_hex(report_projection(doc).to_string().as_bytes())
+}
+
+/// sha256 of canonical `doc` bytes with no projection (spec hashing).
+pub fn json_sha256(doc: &Json) -> String {
+    sha256_hex(doc.to_string().as_bytes())
+}
+
+/// The manifest self-hash: top-level volatile fields removed, canonical
+/// JSON hashed.
+pub fn manifest_sha256_of(doc: &Json) -> String {
+    let projected = match doc {
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .filter(|(k, _)| !VOLATILE_MANIFEST_KEYS.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        ),
+        other => other.clone(),
+    };
+    sha256_hex(projected.to_string().as_bytes())
+}
+
+/// Versioned provenance record for one `qfpga` run.
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    pub schema_version: String,
+    pub run_id: String,
+    /// Which subcommand produced this run (`train`, `mission`, …) —
+    /// doubles as the replay dispatcher key.
+    pub subcommand: String,
+    pub git_describe: String,
+    pub seed: u64,
+    /// The complete replayable input spec.
+    pub spec: Json,
+    pub spec_sha256: String,
+    /// Host-timed durations — informational, excluded from hashing.
+    pub durations: Json,
+    /// Delta metrics snapshot for this run (JSON form).
+    pub metrics: Json,
+    /// `Report::id()` of the produced report (`S1`, `EXP`, …).
+    pub report_id: String,
+    pub report_sha256: String,
+    pub manifest_sha256: String,
+}
+
+impl RunManifest {
+    /// Assemble and self-hash a manifest for a finished run.
+    pub fn build(
+        subcommand: &str,
+        seed: u64,
+        spec: Json,
+        report_id: &str,
+        report_doc: &Json,
+        metrics: &MetricsSnapshot,
+        wall_seconds: f64,
+    ) -> RunManifest {
+        let mut m = RunManifest {
+            schema_version: SCHEMA_VERSION.to_string(),
+            run_id: new_run_id(),
+            subcommand: subcommand.to_string(),
+            git_describe: git_describe(),
+            seed,
+            spec_sha256: json_sha256(&spec),
+            spec,
+            durations: Json::obj(vec![("wall_seconds", Json::Num(wall_seconds))]),
+            metrics: metrics.to_json(),
+            report_id: report_id.to_string(),
+            report_sha256: report_sha256(report_doc),
+            manifest_sha256: String::new(),
+        };
+        m.manifest_sha256 = manifest_sha256_of(&m.to_json());
+        m
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Str(self.schema_version.clone())),
+            ("run_id", Json::Str(self.run_id.clone())),
+            ("subcommand", Json::Str(self.subcommand.clone())),
+            ("git_describe", Json::Str(self.git_describe.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("spec", self.spec.clone()),
+            ("spec_sha256", Json::Str(self.spec_sha256.clone())),
+            ("durations", self.durations.clone()),
+            ("metrics", self.metrics.clone()),
+            ("report_id", Json::Str(self.report_id.clone())),
+            ("report_sha256", Json::Str(self.report_sha256.clone())),
+            ("manifest_sha256", Json::Str(self.manifest_sha256.clone())),
+        ])
+    }
+
+    /// Parse without integrity checks (see [`RunManifest::validate`]).
+    pub fn from_json(j: &Json) -> Result<RunManifest> {
+        Ok(RunManifest {
+            schema_version: j.req_str("schema_version")?.to_string(),
+            run_id: j.req_str("run_id")?.to_string(),
+            subcommand: j.req_str("subcommand")?.to_string(),
+            git_describe: j.req_str("git_describe")?.to_string(),
+            seed: j.req_f64("seed")? as u64,
+            spec: j
+                .get("spec")
+                .cloned()
+                .ok_or_else(|| Error::interface("manifest missing `spec`"))?,
+            spec_sha256: j.req_str("spec_sha256")?.to_string(),
+            durations: j
+                .get("durations")
+                .cloned()
+                .ok_or_else(|| Error::interface("manifest missing `durations`"))?,
+            metrics: j
+                .get("metrics")
+                .cloned()
+                .ok_or_else(|| Error::interface("manifest missing `metrics`"))?,
+            report_id: j.req_str("report_id")?.to_string(),
+            report_sha256: j.req_str("report_sha256")?.to_string(),
+            manifest_sha256: j.req_str("manifest_sha256")?.to_string(),
+        })
+    }
+
+    /// Parse + integrity-check a manifest document: schema major must be
+    /// supported, `spec_sha256` must match the embedded spec, and the
+    /// self-hash must recompute exactly.
+    pub fn validate(j: &Json) -> Result<RunManifest> {
+        let m = Self::from_json(j)?;
+        let major = m.schema_version.split('.').next().unwrap_or("");
+        let supported = SCHEMA_VERSION.split('.').next().unwrap_or("");
+        if major != supported {
+            return Err(Error::interface(format!(
+                "manifest schema_version `{}` is not supported (this build reads {supported}.x.y)",
+                m.schema_version
+            )));
+        }
+        let spec_hash = json_sha256(&m.spec);
+        if spec_hash != m.spec_sha256 {
+            return Err(Error::interface(format!(
+                "manifest spec_sha256 mismatch: recorded {} but the embedded spec hashes to \
+                 {spec_hash} (manifest edited or torn)",
+                m.spec_sha256
+            )));
+        }
+        let self_hash = manifest_sha256_of(j);
+        if self_hash != m.manifest_sha256 {
+            return Err(Error::interface(format!(
+                "manifest_sha256 mismatch: recorded {} but the manifest hashes to {self_hash} \
+                 (manifest edited or torn)",
+                m.manifest_sha256
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Load + validate a manifest file.
+    pub fn load(path: &Path) -> Result<RunManifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::validate(&Json::parse(&text)?)
+    }
+
+    /// Write the manifest (atomic temp + rename, like checkpoints).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("train".into())),
+            ("episodes", Json::Num(5.0)),
+        ])
+    }
+
+    fn report() -> Json {
+        Json::obj(vec![
+            ("id", Json::Str("EXP".into())),
+            ("wall_seconds", Json::Num(1.25)),
+            (
+                "rows",
+                Json::Arr(vec![
+                    Json::obj(vec![("label", Json::Str("a".into())), ("ours", Json::Num(2.0))]),
+                    Json::obj(vec![
+                        ("label", Json::Str("b measured".into())),
+                        ("ours", Json::Num(123.4)),
+                        ("measured", Json::Bool(true)),
+                    ]),
+                ]),
+            ),
+        ])
+    }
+
+    fn build() -> RunManifest {
+        let snap = MetricsSnapshot::capture();
+        let delta = snap.delta(&snap);
+        RunManifest::build("train", 7, spec(), "EXP", &report(), &delta, 0.5)
+    }
+
+    #[test]
+    fn report_projection_drops_volatile_and_measured() {
+        let p = report_projection(&report());
+        let s = p.to_string();
+        assert!(!s.contains("wall_seconds"));
+        assert!(!s.contains("measured"));
+        assert!(!s.contains("123.4"));
+        assert!(s.contains("\"a\""));
+        // projection is stable: hashing twice agrees
+        assert_eq!(report_sha256(&report()), report_sha256(&report()));
+    }
+
+    #[test]
+    fn manifest_round_trips_and_validates() {
+        let m = build();
+        let doc = m.to_json();
+        let parsed = RunManifest::validate(&doc).unwrap();
+        assert_eq!(parsed.schema_version, SCHEMA_VERSION);
+        assert_eq!(parsed.report_sha256, m.report_sha256);
+        assert_eq!(parsed.manifest_sha256, m.manifest_sha256);
+        // text round-trip too (what `save`/`load` do)
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert!(RunManifest::validate(&reparsed).is_ok());
+    }
+
+    #[test]
+    fn self_hash_ignores_run_id_and_durations_only() {
+        let a = build();
+        let mut b = a.clone();
+        b.run_id = "run-different".into();
+        b.durations = Json::obj(vec![("wall_seconds", Json::Num(99.0))]);
+        assert_eq!(manifest_sha256_of(&a.to_json()), manifest_sha256_of(&b.to_json()));
+        let mut c = a.clone();
+        c.seed = 8;
+        assert_ne!(manifest_sha256_of(&a.to_json()), manifest_sha256_of(&c.to_json()));
+    }
+
+    #[test]
+    fn validate_rejects_tampering() {
+        let m = build();
+        let mut doc = m.to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("seed".into(), Json::Num(999.0));
+        }
+        let err = RunManifest::validate(&doc).unwrap_err();
+        assert!(err.to_string().contains("manifest_sha256 mismatch"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unsupported_major() {
+        let m = build();
+        let mut doc = m.to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema_version".into(), Json::Str("2.0.0".into()));
+        }
+        // rehash so only the version gate can complain
+        let hash = manifest_sha256_of(&doc);
+        if let Json::Obj(map) = &mut doc {
+            map.insert("manifest_sha256".into(), Json::Str(hash));
+        }
+        let err = RunManifest::validate(&doc).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+    }
+}

@@ -1,0 +1,700 @@
+//! Process-global metrics registry: typed counters/gauges/histograms
+//! behind `Relaxed` atomics.
+//!
+//! The registry is a single const-initialized `static` — recording a
+//! sample is one `fetch_add`/`fetch_max`/`store` with no locking and no
+//! allocation, cheap enough to live inside the hot paths that PR 5 made
+//! allocation-free. Instrumentation never touches the numerics (atomics
+//! only observe, they do not participate in any arithmetic the learner
+//! performs), so bit-exactness guarantees are preserved by construction.
+//!
+//! Reading happens through [`MetricsSnapshot::capture`], which produces a
+//! deterministic, ordered sample set renderable as canonical JSON or
+//! Prometheus text exposition format. Because the registry is
+//! process-global and monotone, snapshots embedded in run manifests are
+//! *delta* snapshots: capture a baseline at run start and subtract
+//! ([`MetricsSnapshot::delta`]) so a manifest describes one run, not the
+//! process history.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::Precision;
+use crate::nn::KernelPath;
+use crate::util::Json;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge storing an `f64` as its bit pattern.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        // 0u64 is the bit pattern of 0.0f64, so const-init stays trivial.
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// High-water-mark gauge (monotone `fetch_max` over a `u64`).
+#[derive(Debug, Default)]
+pub struct MaxGauge(AtomicU64);
+
+impl MaxGauge {
+    pub const fn new() -> MaxGauge {
+        MaxGauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of power-of-two histogram buckets: upper bounds
+/// 1, 2, 4, …, 2^(N−2), +Inf.
+pub const HIST_BUCKETS: usize = 12;
+
+/// Fixed-bucket histogram over small integer magnitudes (batch sizes).
+///
+/// Bucket `i` counts observations `v ≤ 2^i`; the last bucket is +Inf.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        // Const-item repeat is the only way to const-init an atomic array;
+        // each use instantiates a fresh atomic, so sharing is not possible.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let idx = if v <= 1 {
+            0
+        } else {
+            (64 - (v - 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper bound of bucket `i` (`u64::MAX` stands in for +Inf).
+    pub fn bound(i: usize) -> u64 {
+        if i + 1 == HIST_BUCKETS {
+            u64::MAX
+        } else {
+            1u64 << i
+        }
+    }
+}
+
+/// Cap on per-worker claim counters; workers beyond this share the last
+/// slot (fleets that wide are outside the paper's envelope anyway).
+pub const MAX_WORKER_SLOTS: usize = 32;
+
+/// The registry: every named instrument in the system, const-initialized.
+#[derive(Debug)]
+pub struct Metrics {
+    /// Q-updates applied, per (precision, kernel path). Indexed
+    /// `[precision][kernel]` via [`precision_index`] / [`kernel_index`].
+    pub nn_updates: [[Counter; 2]; 4],
+    /// Batch sizes seen by the vectorized update path.
+    pub nn_batch_size: Histogram,
+    /// Training episodes completed.
+    pub train_episodes: Counter,
+    /// Environment steps taken across all episodes.
+    pub train_steps: Counter,
+    /// Exploration rate at the most recent episode boundary.
+    pub train_epsilon: Gauge,
+    /// Fleet jobs claimed, per worker slot.
+    pub fleet_jobs_claimed: [Counter; MAX_WORKER_SLOTS],
+    /// Fleet jobs claimed by a worker other than the round-robin "home"
+    /// worker — the work-stealing signal.
+    pub fleet_jobs_stolen: Counter,
+    /// Mission checkpoints written to disk.
+    pub checkpoint_writes: Counter,
+    /// Modeled FPGA cycles charged by the accelerator timing model.
+    pub fpga_cycles: Counter,
+    /// Deepest simultaneous occupancy seen across the datapath FIFOs.
+    pub fpga_fifo_high_water: MaxGauge,
+    /// SEU bit-flips drawn by the fault model.
+    pub fault_strikes: Counter,
+    /// Strikes absorbed by a mitigation (TMR vote, SECDED correct).
+    pub fault_masked: Counter,
+    /// Strikes delivered into live state.
+    pub fault_escaped: Counter,
+    /// Scrub passes executed by the protected store.
+    pub fault_scrub_bursts: Counter,
+}
+
+/// Stable row index for a precision arm (order matches [`Precision::all`]).
+pub fn precision_index(p: Precision) -> usize {
+    match p {
+        Precision::Float => 0,
+        Precision::Fixed => 1,
+        Precision::Int8 => 2,
+        Precision::Binary => 3,
+    }
+}
+
+/// Stable column index for a kernel path.
+pub fn kernel_index(k: KernelPath) -> usize {
+    match k {
+        KernelPath::Scalar => 0,
+        KernelPath::Simd => 1,
+    }
+}
+
+const PRECISION_NAMES: [&str; 4] = ["float", "fixed", "int8", "binary"];
+const KERNEL_NAMES: [&str; 2] = ["scalar", "simd"];
+
+impl Metrics {
+    pub const fn new() -> Metrics {
+        // See Histogram::new for why the const-item repeat idiom is safe.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const C: Counter = Counter::new();
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ROW: [Counter; 2] = [C, C];
+        Metrics {
+            nn_updates: [ROW; 4],
+            nn_batch_size: Histogram::new(),
+            train_episodes: C,
+            train_steps: C,
+            train_epsilon: Gauge::new(),
+            fleet_jobs_claimed: [C; MAX_WORKER_SLOTS],
+            fleet_jobs_stolen: C,
+            checkpoint_writes: C,
+            fpga_cycles: C,
+            fpga_fifo_high_water: MaxGauge::new(),
+            fault_strikes: C,
+            fault_masked: C,
+            fault_escaped: C,
+            fault_scrub_bursts: C,
+        }
+    }
+
+    /// Count `n` Q-updates on the given precision/kernel arm.
+    #[inline]
+    pub fn nn_update(&self, prec: Precision, kernel: KernelPath, n: u64) {
+        self.nn_updates[precision_index(prec)][kernel_index(kernel)].add(n);
+    }
+
+    /// Count a fleet job claim by worker `w` (clamped to the slot table).
+    #[inline]
+    pub fn fleet_claim(&self, w: usize) {
+        self.fleet_jobs_claimed[w.min(MAX_WORKER_SLOTS - 1)].inc();
+    }
+}
+
+static METRICS: Metrics = Metrics::new();
+
+/// The process-global registry.
+pub fn metrics() -> &'static Metrics {
+    &METRICS
+}
+
+/// One sample family (shared name + type across its labeled series).
+#[derive(Debug, Clone)]
+pub struct Family {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    pub help: &'static str,
+    pub series: Vec<Series>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One labeled series within a family.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub labels: Vec<(&'static str, String)>,
+    pub value: SeriesValue,
+}
+
+#[derive(Debug, Clone)]
+pub enum SeriesValue {
+    Int(u64),
+    Float(f64),
+    /// Cumulative `(upper_bound, count≤bound)` pairs plus sum/count.
+    Hist {
+        buckets: Vec<(u64, u64)>,
+        sum: u64,
+        count: u64,
+    },
+}
+
+/// A deterministic point-in-time read of the registry.
+///
+/// Capture order is fixed, so two snapshots of identical registry state
+/// render to byte-identical JSON and Prometheus text.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub families: Vec<Family>,
+}
+
+fn label_suffix(labels: &[(&'static str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+fn bound_label(le: u64) -> String {
+    if le == u64::MAX {
+        "+Inf".to_string()
+    } else {
+        le.to_string()
+    }
+}
+
+impl MetricsSnapshot {
+    /// Read every instrument in the registry, in fixed order.
+    pub fn capture() -> MetricsSnapshot {
+        let m = metrics();
+        let mut families = Vec::new();
+
+        let mut updates = Vec::new();
+        for (pi, row) in m.nn_updates.iter().enumerate() {
+            for (ki, c) in row.iter().enumerate() {
+                updates.push(Series {
+                    labels: vec![
+                        ("precision", PRECISION_NAMES[pi].to_string()),
+                        ("kernel", KERNEL_NAMES[ki].to_string()),
+                    ],
+                    value: SeriesValue::Int(c.get()),
+                });
+            }
+        }
+        families.push(Family {
+            name: "qfpga_nn_updates_total",
+            kind: MetricKind::Counter,
+            help: "Q-updates applied, by precision arm and kernel path",
+            series: updates,
+        });
+
+        let buckets: Vec<(u64, u64)> = {
+            // Render cumulative counts so `le` buckets nest, per the
+            // Prometheus histogram contract.
+            let mut cum = 0;
+            (0..HIST_BUCKETS)
+                .map(|i| {
+                    cum += m.nn_batch_size.buckets[i].load(Ordering::Relaxed);
+                    (Histogram::bound(i), cum)
+                })
+                .collect()
+        };
+        families.push(Family {
+            name: "qfpga_nn_batch_size",
+            kind: MetricKind::Histogram,
+            help: "Batch sizes seen by the vectorized update path",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Hist {
+                    buckets,
+                    sum: m.nn_batch_size.sum.load(Ordering::Relaxed),
+                    count: m.nn_batch_size.count.load(Ordering::Relaxed),
+                },
+            }],
+        });
+
+        let scalar_counter = |name, help, c: &Counter| Family {
+            name,
+            kind: MetricKind::Counter,
+            help,
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Int(c.get()),
+            }],
+        };
+        families.push(scalar_counter(
+            "qfpga_train_episodes_total",
+            "Training episodes completed",
+            &m.train_episodes,
+        ));
+        families.push(scalar_counter(
+            "qfpga_train_steps_total",
+            "Environment steps taken",
+            &m.train_steps,
+        ));
+        families.push(Family {
+            name: "qfpga_train_epsilon",
+            kind: MetricKind::Gauge,
+            help: "Exploration rate at the last episode boundary",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Float(m.train_epsilon.get()),
+            }],
+        });
+
+        let claimed: Vec<Series> = m
+            .fleet_jobs_claimed
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.get() > 0)
+            .map(|(w, c)| Series {
+                labels: vec![("worker", w.to_string())],
+                value: SeriesValue::Int(c.get()),
+            })
+            .collect();
+        families.push(Family {
+            name: "qfpga_fleet_jobs_claimed_total",
+            kind: MetricKind::Counter,
+            help: "Fleet jobs claimed, by worker slot",
+            series: claimed,
+        });
+        families.push(scalar_counter(
+            "qfpga_fleet_jobs_stolen_total",
+            "Fleet jobs claimed away from their round-robin home worker",
+            &m.fleet_jobs_stolen,
+        ));
+        families.push(scalar_counter(
+            "qfpga_checkpoint_writes_total",
+            "Mission checkpoints written to disk",
+            &m.checkpoint_writes,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fpga_cycles_total",
+            "Modeled FPGA cycles charged by the timing model",
+            &m.fpga_cycles,
+        ));
+        families.push(Family {
+            name: "qfpga_fpga_fifo_high_water",
+            kind: MetricKind::Gauge,
+            help: "Deepest datapath FIFO occupancy observed",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Int(m.fpga_fifo_high_water.get()),
+            }],
+        });
+        families.push(scalar_counter(
+            "qfpga_fault_strikes_total",
+            "SEU bit-flips drawn by the fault model",
+            &m.fault_strikes,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fault_masked_total",
+            "Strikes absorbed by a mitigation",
+            &m.fault_masked,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fault_escaped_total",
+            "Strikes delivered into live state",
+            &m.fault_escaped,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fault_scrub_bursts_total",
+            "Scrub passes executed by the protected store",
+            &m.fault_scrub_bursts,
+        ));
+
+        MetricsSnapshot { families }
+    }
+
+    /// `self − baseline`: counters and histograms subtract, gauges keep
+    /// their end value. Both snapshots must come from [`capture`] (same
+    /// family order); series present only in `self` pass through.
+    pub fn delta(&self, baseline: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = self.clone();
+        for fam in &mut out.families {
+            let base = match baseline.families.iter().find(|b| b.name == fam.name) {
+                Some(b) => b,
+                None => continue,
+            };
+            if fam.kind == MetricKind::Gauge {
+                continue;
+            }
+            for s in &mut fam.series {
+                let bs = match base.series.iter().find(|b| b.labels == s.labels) {
+                    Some(b) => b,
+                    None => continue,
+                };
+                match (&mut s.value, &bs.value) {
+                    (SeriesValue::Int(v), SeriesValue::Int(b)) => *v = v.saturating_sub(*b),
+                    (SeriesValue::Float(v), SeriesValue::Float(b)) => *v -= b,
+                    (
+                        SeriesValue::Hist {
+                            buckets,
+                            sum,
+                            count,
+                        },
+                        SeriesValue::Hist {
+                            buckets: bb,
+                            sum: bsum,
+                            count: bcount,
+                        },
+                    ) => {
+                        for ((_, c), (_, bc)) in buckets.iter_mut().zip(bb) {
+                            *c = c.saturating_sub(*bc);
+                        }
+                        *sum = sum.saturating_sub(*bsum);
+                        *count = count.saturating_sub(*bcount);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out
+    }
+
+    /// Sum of a counter family across its series (0 if absent/empty).
+    pub fn total(&self, family: &str) -> u64 {
+        self.families
+            .iter()
+            .filter(|f| f.name == family)
+            .flat_map(|f| &f.series)
+            .map(|s| match &s.value {
+                SeriesValue::Int(v) => *v,
+                SeriesValue::Float(v) => *v as u64,
+                SeriesValue::Hist { count, .. } => *count,
+            })
+            .sum()
+    }
+
+    /// Canonical JSON: one key per series, Prometheus-style names, sorted
+    /// by the `Json` object's key order (deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = Vec::new();
+        for fam in &self.families {
+            for s in &fam.series {
+                let key = format!("{}{}", fam.name, label_suffix(&s.labels));
+                match &s.value {
+                    SeriesValue::Int(v) => pairs.push((key, Json::Num(*v as f64))),
+                    SeriesValue::Float(v) => pairs.push((key, Json::Num(*v))),
+                    SeriesValue::Hist {
+                        buckets,
+                        sum,
+                        count,
+                    } => {
+                        for (le, c) in buckets {
+                            pairs.push((
+                                format!("{}_bucket{{le=\"{}\"}}", fam.name, bound_label(*le)),
+                                Json::Num(*c as f64),
+                            ));
+                        }
+                        pairs.push((format!("{}_sum", fam.name), Json::Num(*sum as f64)));
+                        pairs.push((format!("{}_count", fam.name), Json::Num(*count as f64)));
+                    }
+                }
+            }
+        }
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    /// Prometheus text exposition format (`# HELP`/`# TYPE` + samples).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for fam in &self.families {
+            out.push_str(&format!("# HELP {} {}\n", fam.name, fam.help));
+            out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.as_str()));
+            for s in &fam.series {
+                match &s.value {
+                    SeriesValue::Int(v) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            fam.name,
+                            label_suffix(&s.labels),
+                            v
+                        ));
+                    }
+                    SeriesValue::Float(v) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            fam.name,
+                            label_suffix(&s.labels),
+                            v
+                        ));
+                    }
+                    SeriesValue::Hist {
+                        buckets,
+                        sum,
+                        count,
+                    } => {
+                        for (le, c) in buckets {
+                            out.push_str(&format!(
+                                "{}_bucket{{le=\"{}\"}} {}\n",
+                                fam.name,
+                                bound_label(*le),
+                                c
+                            ));
+                        }
+                        out.push_str(&format!("{}_sum {}\n", fam.name, sum));
+                        out.push_str(&format!("{}_count {}\n", fam.name, count));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_maxgauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.25);
+        assert_eq!(g.get(), 0.25);
+        let hw = MaxGauge::new();
+        hw.observe(3);
+        hw.observe(2);
+        assert_eq!(hw.get(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_are_powers_of_two_and_cumulative() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 8, 9, 4096] {
+            h.observe(v);
+        }
+        // Raw (non-cumulative) per-bucket counts.
+        let raw: Vec<u64> = h
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(raw[0], 1); // v=1 ≤ 1
+        assert_eq!(raw[1], 1); // v=2 ≤ 2
+        assert_eq!(raw[2], 2); // v=3,4 ≤ 4
+        assert_eq!(raw[3], 1); // v=8 ≤ 8
+        assert_eq!(raw[4], 1); // v=9 ≤ 16
+        assert_eq!(raw[HIST_BUCKETS - 1], 1); // v=4096 overflows into +Inf
+        assert_eq!(h.count.load(Ordering::Relaxed), 7);
+        assert_eq!(h.sum.load(Ordering::Relaxed), 1 + 2 + 3 + 4 + 8 + 9 + 4096);
+        assert_eq!(Histogram::bound(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn snapshot_renders_both_formats_deterministically() {
+        let a = MetricsSnapshot::capture();
+        let json_a = a.to_json().to_string();
+        let prom = a.to_prometheus();
+        assert!(prom.contains("# TYPE qfpga_nn_updates_total counter"));
+        assert!(prom.contains("# TYPE qfpga_nn_batch_size histogram"));
+        assert!(prom.contains("qfpga_nn_batch_size_bucket{le=\"+Inf\"}"));
+        assert!(json_a.contains("qfpga_train_episodes_total"));
+        // Same state → byte-identical rendering (modulo concurrent tests;
+        // re-render the same snapshot rather than re-capture).
+        assert_eq!(json_a, a.to_json().to_string());
+        assert_eq!(prom, a.to_prometheus());
+    }
+
+    #[test]
+    fn delta_subtracts_counters_keeps_gauges() {
+        let base = MetricsSnapshot::capture();
+        metrics().train_epsilon.set(0.125);
+        metrics().checkpoint_writes.add(2);
+        let end = MetricsSnapshot::capture();
+        let d = end.delta(&base);
+        assert!(d.total("qfpga_checkpoint_writes_total") >= 2);
+        let eps = d
+            .families
+            .iter()
+            .find(|f| f.name == "qfpga_train_epsilon")
+            .unwrap();
+        match &eps.series[0].value {
+            // Gauges keep the end value, not a difference. Another test
+            // may race the gauge, so only check it is a sane ε, not 0−x.
+            SeriesValue::Float(v) => assert!((0.0..=1.0).contains(v)),
+            v => panic!("epsilon gauge has wrong shape: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn nn_update_routes_by_arm() {
+        let base = MetricsSnapshot::capture();
+        metrics().nn_update(Precision::Int8, KernelPath::Scalar, 7);
+        let d = MetricsSnapshot::capture().delta(&base);
+        let fam = d
+            .families
+            .iter()
+            .find(|f| f.name == "qfpga_nn_updates_total")
+            .unwrap();
+        let s = fam
+            .series
+            .iter()
+            .find(|s| {
+                s.labels
+                    == vec![
+                        ("precision", "int8".to_string()),
+                        ("kernel", "scalar".to_string()),
+                    ]
+            })
+            .unwrap();
+        match s.value {
+            SeriesValue::Int(v) => assert!(v >= 7),
+            ref v => panic!("wrong shape: {v:?}"),
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Mission observability: metrics, structured tracing, run provenance.
+//!
+//! Flight software must prove its budgets are met, and a reproduction
+//! must prove its runs are reproducible. This module supplies both
+//! halves without touching the numerics:
+//!
+//! * [`metrics`] — a const-initialized process-global registry of
+//!   counters/gauges/histograms behind `Relaxed` atomics, wired into the
+//!   hot paths (Q-updates by precision/kernel arm, episodes/steps/ε,
+//!   fleet pool claims, checkpoint writes, modeled FPGA cycles, FIFO
+//!   high-water, SEU strike accounting) and snapshotted deterministically
+//!   as JSON or Prometheus text ([`MetricsSnapshot`]).
+//! * [`trace`] — a span API over a bounded preallocated ring; disabled it
+//!   costs one atomic load per span site, enabled it records coarse
+//!   (mission/episode/flush/checkpoint/measure) timing to a JSONL file
+//!   with a p50/p99 [`TraceSummary`] at exit.
+//! * [`manifest`] — versioned [`RunManifest`] records (spec + sha256,
+//!   seed, git describe, metrics delta, deterministic report hash) that
+//!   `qfpga manifest validate` integrity-checks and `qfpga replay`
+//!   re-runs to a bit-identical report hash.
+
+pub mod manifest;
+pub mod metrics;
+pub mod trace;
+
+pub use manifest::{report_sha256, RunManifest, SCHEMA_VERSION};
+pub use metrics::{metrics, Metrics, MetricsSnapshot};
+pub use trace::{span, Span, SpanKind, TraceSummary};

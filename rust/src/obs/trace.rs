@@ -1,0 +1,377 @@
+//! Structured tracing: bounded, ring-buffered span records.
+//!
+//! Tracing is off by default and gated on a single `AtomicBool`: when
+//! disabled, [`span`] performs one `Relaxed` load and returns an inert
+//! handle — no clock read, no lock, no allocation — so the hot paths keep
+//! PR 5's allocation-free guarantee and instrumented runs stay bit-exact
+//! (spans observe wall time only, never the numerics).
+//!
+//! When enabled (CLI `--trace FILE`), span completion appends a fixed-size
+//! [`SpanRecord`] to a preallocated ring; once full, the oldest records
+//! are overwritten and counted as dropped. Records carry coarse-grained
+//! work units (mission, episode, batch flush, checkpoint, measurement) —
+//! never per-step events — so tracing cost stays far off the update path.
+//! At exit the ring is drained to a JSONL file (one record per line,
+//! `run_id`-correlated with the run manifest) and a [`TraceSummary`] with
+//! per-kind counts and p50/p99 durations is printed.
+
+use std::fs;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::Json;
+
+/// Default ring capacity (records, not bytes). At ~48 bytes per record
+/// this is ~3 MB — bounded regardless of run length.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// What a span measures. Kinds are coarse work units, deliberately at
+/// episode/flush granularity and never per environment step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// One rover's full mission (all episodes).
+    Mission,
+    /// One training episode.
+    Episode,
+    /// One microbatch/batch flush through the backend.
+    Flush,
+    /// One checkpoint serialization + atomic write.
+    Checkpoint,
+    /// One host-timed measurement block (sweep/throughput).
+    Measure,
+}
+
+/// Every kind, in summary display order.
+pub const SPAN_KINDS: [SpanKind; 5] = [
+    SpanKind::Mission,
+    SpanKind::Episode,
+    SpanKind::Flush,
+    SpanKind::Checkpoint,
+    SpanKind::Measure,
+];
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Mission => "mission",
+            SpanKind::Episode => "episode",
+            SpanKind::Flush => "flush",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Measure => "measure",
+        }
+    }
+}
+
+/// Maximum key=val fields a span can carry (fixed so records stay `Copy`).
+pub const MAX_FIELDS: usize = 2;
+
+/// A completed span. Fixed-size and `Copy` so ring writes never allocate.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    /// Nanoseconds since the process trace epoch (first clock use).
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// `key=val` annotations; unused slots have an empty key.
+    pub fields: [(&'static str, f64); MAX_FIELDS],
+}
+
+impl SpanRecord {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// One JSONL line (without trailing newline).
+    pub fn to_json(&self, run_id: &str) -> Json {
+        let mut pairs = vec![
+            ("run_id", Json::Str(run_id.to_string())),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("start_ns", Json::Num(self.start_ns as f64)),
+            ("end_ns", Json::Num(self.end_ns as f64)),
+            ("dur_ns", Json::Num(self.dur_ns() as f64)),
+        ];
+        for (k, v) in self.fields {
+            if !k.is_empty() {
+                pairs.push((k, Json::Num(v)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+struct Ring {
+    buf: Vec<SpanRecord>,
+    cap: usize,
+    /// Overwrite cursor once `buf.len() == cap`.
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.next] = rec;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Records in chronological order (oldest first).
+    fn drain_ordered(&mut self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        self.buf.clear();
+        self.next = 0;
+        out
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: Mutex<Option<Ring>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Turn tracing on with the default ring capacity.
+pub fn enable() {
+    enable_with_capacity(DEFAULT_CAPACITY);
+}
+
+/// Turn tracing on with an explicit ring capacity (records).
+pub fn enable_with_capacity(cap: usize) {
+    let cap = cap.max(1);
+    let mut guard = RING.lock().unwrap_or_else(|e| e.into_inner());
+    *guard = Some(Ring {
+        buf: Vec::with_capacity(cap),
+        cap,
+        next: 0,
+        dropped: 0,
+    });
+    drop(guard);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Is tracing currently on? One `Relaxed` load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing off and return `(records, dropped)` in chronological
+/// order. Idempotent: a second call returns an empty drain.
+pub fn disable_and_drain() -> (Vec<SpanRecord>, u64) {
+    ENABLED.store(false, Ordering::Release);
+    let mut guard = RING.lock().unwrap_or_else(|e| e.into_inner());
+    match guard.take() {
+        Some(mut ring) => {
+            let records = ring.drain_ordered();
+            (records, ring.dropped)
+        }
+        None => (Vec::new(), 0),
+    }
+}
+
+fn push(rec: SpanRecord) {
+    let mut guard = RING.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(ring) = guard.as_mut() {
+        ring.push(rec);
+    }
+}
+
+/// An in-flight span. Obtain via [`span`], annotate with [`Span::field`],
+/// finish with [`Span::done`] (dropping without `done` records nothing).
+#[must_use = "a span records nothing until .done() is called"]
+pub struct Span {
+    kind: SpanKind,
+    start_ns: u64,
+    fields: [(&'static str, f64); MAX_FIELDS],
+    n_fields: usize,
+    armed: bool,
+}
+
+/// Start a span. When tracing is disabled this is one atomic load and an
+/// inert handle — no clock read.
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    let armed = enabled();
+    Span {
+        kind,
+        start_ns: if armed { now_ns() } else { 0 },
+        fields: [("", 0.0); MAX_FIELDS],
+        n_fields: 0,
+        armed,
+    }
+}
+
+impl Span {
+    /// Attach a `key=val` annotation (up to [`MAX_FIELDS`]; extras are
+    /// silently ignored — keep spans coarse).
+    #[inline]
+    pub fn field(mut self, key: &'static str, val: f64) -> Span {
+        if self.armed && self.n_fields < MAX_FIELDS {
+            self.fields[self.n_fields] = (key, val);
+            self.n_fields += 1;
+        }
+        self
+    }
+
+    /// Complete the span, appending its record to the ring.
+    #[inline]
+    pub fn done(self) {
+        if !self.armed {
+            return;
+        }
+        push(SpanRecord {
+            kind: self.kind,
+            start_ns: self.start_ns,
+            end_ns: now_ns(),
+            fields: self.fields,
+        });
+    }
+}
+
+/// Record an instantaneous event (a zero-duration span).
+pub fn event(kind: SpanKind) {
+    span(kind).done();
+}
+
+/// Per-kind duration statistics for a drained trace.
+#[derive(Debug, Clone)]
+pub struct KindSummary {
+    pub kind: SpanKind,
+    pub count: usize,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// Aggregate view printed at exit when `--trace` was active.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub rows: Vec<KindSummary>,
+    pub total: usize,
+    pub dropped: u64,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl TraceSummary {
+    pub fn from_records(records: &[SpanRecord], dropped: u64) -> TraceSummary {
+        let mut rows = Vec::new();
+        for kind in SPAN_KINDS {
+            let mut durs: Vec<u64> = records
+                .iter()
+                .filter(|r| r.kind == kind)
+                .map(SpanRecord::dur_ns)
+                .collect();
+            if durs.is_empty() {
+                continue;
+            }
+            durs.sort_unstable();
+            rows.push(KindSummary {
+                kind,
+                count: durs.len(),
+                p50_ns: percentile(&durs, 0.50),
+                p99_ns: percentile(&durs, 0.99),
+            });
+        }
+        TraceSummary {
+            rows,
+            total: records.len(),
+            dropped,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "trace summary: {} spans ({} dropped)\n  {:<12}  {:>8}  {:>12}  {:>12}\n",
+            self.total, self.dropped, "kind", "count", "p50 (µs)", "p99 (µs)"
+        );
+        for row in &self.rows {
+            out.push_str(&format!(
+                "  {:<12}  {:>8}  {:>12.1}  {:>12.1}\n",
+                row.kind.as_str(),
+                row.count,
+                row.p50_ns as f64 / 1e3,
+                row.p99_ns as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+/// Write drained records as JSONL (one record per line, newline-
+/// terminated), each line carrying `run_id` for manifest correlation.
+pub fn write_jsonl(path: &str, run_id: &str, records: &[SpanRecord]) -> io::Result<()> {
+    let mut out = String::new();
+    for rec in records {
+        out.push_str(&rec.to_json(run_id).to_string());
+        out.push('\n');
+    }
+    fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; this single test exercises the
+    // whole lifecycle serially so parallel test binaries stay unaffected
+    // (no other unit test enables tracing).
+    #[test]
+    fn lifecycle_ring_summary_jsonl() {
+        assert!(!enabled());
+        // Disabled spans are inert.
+        span(SpanKind::Episode).field("episode", 1.0).done();
+        let (empty, dropped) = disable_and_drain();
+        assert!(empty.is_empty());
+        assert_eq!(dropped, 0);
+
+        enable_with_capacity(4);
+        assert!(enabled());
+        for i in 0..6 {
+            span(SpanKind::Episode).field("episode", i as f64).done();
+        }
+        event(SpanKind::Checkpoint);
+        let (records, dropped) = disable_and_drain();
+        assert!(!enabled());
+        // Ring holds 4 of the 7 records; 3 oldest were overwritten.
+        assert_eq!(records.len(), 4);
+        assert_eq!(dropped, 3);
+        // Chronological order survives wraparound.
+        for pair in records.windows(2) {
+            assert!(pair[0].start_ns <= pair[1].start_ns);
+        }
+        // The newest episode (i=5) and the checkpoint event survived.
+        let kinds: Vec<SpanKind> = records.iter().map(|r| r.kind).collect();
+        assert!(kinds.contains(&SpanKind::Checkpoint));
+        assert!(records
+            .iter()
+            .any(|r| r.kind == SpanKind::Episode && r.fields[0] == ("episode", 5.0)));
+
+        let summary = TraceSummary::from_records(&records, dropped);
+        assert_eq!(summary.total, 4);
+        assert_eq!(summary.dropped, 3);
+        let rendered = summary.render();
+        assert!(rendered.contains("episode"));
+        assert!(rendered.contains("checkpoint"));
+
+        // JSONL round-trips through the in-repo parser.
+        let line = records[0].to_json("run-test").to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.req_str("run_id").unwrap(), "run-test");
+        assert!(parsed.get("dur_ns").is_some());
+    }
+}

@@ -195,8 +195,12 @@ impl QBackend for CpuBackend {
     /// the measured speedup).
     fn update(&mut self, sa_cur: &[f32], sa_next: &[f32], action: usize, reward: f32)
         -> Result<f32> {
-        self.prepared
-            .update(&self.net, sa_cur, sa_next, action, reward, &self.hyper, &self.dp)
+        let err = self
+            .prepared
+            .update(&self.net, sa_cur, sa_next, action, reward, &self.hyper, &self.dp)?;
+        // one Relaxed fetch_add; observes only, never feeds back into the math
+        crate::obs::metrics().nn_update(self.prec, self.dp.kernel(), 1);
+        Ok(err)
     }
 
     /// Native vectorized batch path over the same prepared cache —
@@ -213,6 +217,11 @@ impl QBackend for CpuBackend {
             &self.dp,
             &mut errs,
         )?;
+        if !errs.is_empty() {
+            let m = crate::obs::metrics();
+            m.nn_update(self.prec, self.dp.kernel(), errs.len() as u64);
+            m.nn_batch_size.observe(errs.len() as u64);
+        }
         Ok(errs)
     }
 

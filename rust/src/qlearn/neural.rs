@@ -129,6 +129,9 @@ impl<B: QBackend> NeuralQLearner<B> {
         if self.buffer.is_empty() {
             return Ok(Vec::new());
         }
+        // traced at flush granularity (one span per flush call, not per
+        // transition); inert unless --trace is active
+        let span = crate::obs::span(crate::obs::SpanKind::Flush);
         let net = *self.backend.net();
         let mut all_errs = Vec::new();
         while !self.buffer.is_empty() {
@@ -138,6 +141,7 @@ impl<B: QBackend> NeuralQLearner<B> {
             self.flushes += 1;
             all_errs.extend(errs);
         }
+        span.field("n", all_errs.len() as f64).done();
         Ok(all_errs)
     }
 

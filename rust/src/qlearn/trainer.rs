@@ -93,12 +93,19 @@ pub fn train_episode<B: QBackend>(
         }
     }
     learner.end_episode()?;
+    let epsilon = learner.policy.epsilon();
+    // episode-boundary instrumentation: three Relaxed atomic ops, never
+    // per-step, and nothing feeds back into the trajectory
+    let m = crate::obs::metrics();
+    m.train_episodes.inc();
+    m.train_steps.add(steps as u64);
+    m.train_epsilon.set(epsilon as f64);
     Ok(EpisodeStats {
         episode,
         steps,
         total_reward,
         mean_abs_q_err: if err_n > 0 { err_sum / err_n as f32 } else { 0.0 },
-        epsilon: learner.policy.epsilon(),
+        epsilon,
     })
 }
 

@@ -7,8 +7,15 @@
 //! `cells`) must agree within the relative tolerance. Extra tables or rows
 //! on the `ours` side are ignored — the golden can be a stable subset
 //! (e.g. model-derived rows only, excluding host-measured latencies).
+//!
+//! Non-table documents (run manifests, checkpoints) fall back to a strict
+//! structural walk: same keys on both sides, numerics within tolerance,
+//! everything else exact. `--ignore-keys run_id,durations` deep-strips the
+//! named keys from both sides first, which is how two manifests of the
+//! same spec diff clean (see [`crate::obs::manifest`]).
 
 use crate::error::{Error, Result};
+use crate::obs::manifest::strip_keys;
 use crate::util::Json;
 
 /// Outcome of one diff run.
@@ -120,6 +127,91 @@ fn diff_value(
     }
 }
 
+/// Does this document speak the report-table protocol (id + rows/cells,
+/// possibly under a `tables` wrapper)? Anything else gets the structural
+/// walk.
+fn is_table_doc(doc: &Json) -> bool {
+    doc.get("tables").and_then(Json::as_arr).is_some()
+        || (doc.get("id").is_some()
+            && (doc.get("rows").is_some() || doc.get("cells").is_some()))
+}
+
+/// Strict structural comparison for non-table documents: golden keys must
+/// all exist in ours and vice versa, numeric leaves compare within `tol`,
+/// all other leaves compare exactly.
+fn diff_structural(path: &str, ours: &Json, golden: &Json, tol: f64, out: &mut DiffReport) {
+    let at = |key: &str| {
+        if path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{path}.{key}")
+        }
+    };
+    match (ours, golden) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            for (k, gv) in b {
+                match a.get(k) {
+                    Some(ov) => diff_structural(&at(k), ov, gv, tol, out),
+                    None => out.problems.push(format!("{}: missing from ours", at(k))),
+                }
+            }
+            for k in a.keys() {
+                if !b.contains_key(k) {
+                    out.problems.push(format!("{}: extra key in ours", at(k)));
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                out.problems.push(format!(
+                    "{path}: array length {} vs golden {}",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            for (i, (ov, gv)) in a.iter().zip(b).enumerate() {
+                diff_structural(&format!("{path}[{i}]"), ov, gv, tol, out);
+            }
+        }
+        (Json::Num(a), Json::Num(b)) => {
+            out.compared += 1;
+            if !close(*a, *b, tol) {
+                out.problems.push(format!(
+                    "{path}: drifted: ours {a} vs golden {b} (Δ {:+.3e}, tol {tol})",
+                    a - b
+                ));
+            }
+        }
+        (a, b) => {
+            out.compared += 1;
+            if a != b {
+                out.problems.push(format!("{path}: ours {a} vs golden {b}"));
+            }
+        }
+    }
+}
+
+/// Compare `ours` against `golden` within relative tolerance `tol`, after
+/// deep-removing every key named in `ignore` from both sides.
+pub fn diff_json_ignoring(
+    ours: &Json,
+    golden: &Json,
+    tol: f64,
+    ignore: &[&str],
+) -> DiffReport {
+    let (ours, golden) = if ignore.is_empty() {
+        (ours.clone(), golden.clone())
+    } else {
+        (strip_keys(ours, ignore), strip_keys(golden, ignore))
+    };
+    if !is_table_doc(&golden) {
+        let mut out = DiffReport::default();
+        diff_structural("", &ours, &golden, tol, &mut out);
+        return out;
+    }
+    diff_json(&ours, &golden, tol)
+}
+
 /// Compare `ours` against `golden` within relative tolerance `tol`.
 pub fn diff_json(ours: &Json, golden: &Json, tol: f64) -> DiffReport {
     let mut out = DiffReport::default();
@@ -181,14 +273,25 @@ pub fn diff_json(ours: &Json, golden: &Json, tol: f64) -> DiffReport {
     out
 }
 
-/// File-based front-end for the CLI.
-pub fn diff_files(ours_path: &str, golden_path: &str, tol: f64) -> Result<DiffReport> {
+/// File-based front-end for the CLI. `ignore` lists object keys to
+/// deep-strip from both documents before comparing (`--ignore-keys`).
+pub fn diff_files(
+    ours_path: &str,
+    golden_path: &str,
+    tol: f64,
+    ignore: &[&str],
+) -> Result<DiffReport> {
     let read = |path: &str| -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Config(format!("cannot read `{path}`: {e}")))?;
         Json::parse(&text)
     };
-    Ok(diff_json(&read(ours_path)?, &read(golden_path)?, tol))
+    Ok(diff_json_ignoring(
+        &read(ours_path)?,
+        &read(golden_path)?,
+        tol,
+        ignore,
+    ))
 }
 
 #[cfg(test)]
@@ -300,6 +403,62 @@ mod tests {
         let d = diff_json(&t.to_json(), &t.to_json(), 0.01);
         assert!(d.ok());
         assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn structural_diff_with_ignore_keys_compares_manifests() {
+        let mk = |run_id: &str, wall: f64, seed: f64| {
+            Json::obj(vec![
+                ("run_id", Json::Str(run_id.into())),
+                ("seed", Json::Num(seed)),
+                (
+                    "durations",
+                    Json::obj(vec![("wall_seconds", Json::Num(wall))]),
+                ),
+                ("report_sha256", Json::Str("abc".into())),
+            ])
+        };
+        // same run modulo run_id/durations: clean only when ignored
+        let a = mk("run-1", 0.5, 7.0);
+        let b = mk("run-2", 9.0, 7.0);
+        assert!(!diff_json_ignoring(&a, &b, 0.0, &[]).ok());
+        let d = diff_json_ignoring(&a, &b, 0.0, &["run_id", "durations"]);
+        assert!(d.ok(), "{:?}", d.problems);
+        // a real divergence still surfaces under the ignore set
+        let c = mk("run-3", 0.5, 8.0);
+        let d = diff_json_ignoring(&a, &c, 0.0, &["run_id", "durations"]);
+        assert!(!d.ok());
+        assert!(d.problems.iter().any(|p| p.contains("seed")), "{:?}", d.problems);
+    }
+
+    #[test]
+    fn structural_diff_flags_shape_mismatches() {
+        let a = Json::obj(vec![
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+            ("extra", Json::Null),
+        ]);
+        let b = Json::obj(vec![
+            ("xs", Json::Arr(vec![Json::Num(1.0)])),
+            ("gone", Json::Bool(true)),
+        ]);
+        let d = diff_json_ignoring(&a, &b, 0.01, &[]);
+        assert!(d.problems.iter().any(|p| p.contains("array length")), "{:?}", d.problems);
+        assert!(d.problems.iter().any(|p| p.contains("gone") && p.contains("missing")));
+        assert!(d.problems.iter().any(|p| p.contains("extra key")));
+    }
+
+    #[test]
+    fn ignore_keys_leaves_table_docs_on_the_table_path() {
+        // a stripped table document still diffs by id/label, not
+        // structurally — extra ours-side rows stay permitted
+        let golden = set_to_json(&[
+            PaperTable::new("T1", "t", "u").row("fixed", 1.0, None),
+        ]);
+        let ours = set_to_json(&[
+            PaperTable::new("T1", "t", "u").row("fixed", 1.0, None).row("more", 2.0, None),
+        ]);
+        let d = diff_json_ignoring(&ours, &golden, 0.01, &["notes"]);
+        assert!(d.ok(), "{:?}", d.problems);
     }
 
     #[test]

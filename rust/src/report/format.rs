@@ -13,11 +13,15 @@ pub struct TableRow {
     pub ours: f64,
     /// The paper's published value, if it reports one for this row.
     pub paper: Option<f64>,
+    /// Host-measured (wall-clock) rather than model-derived: serialized as
+    /// `"measured": true` so run-provenance hashing can exclude the row
+    /// (measured values are not reproducible across hosts).
+    pub measured: bool,
 }
 
 impl TableRow {
     pub fn new(label: impl Into<String>, ours: f64, paper: Option<f64>) -> TableRow {
-        TableRow { label: label.into(), ours, paper }
+        TableRow { label: label.into(), ours, paper, measured: false }
     }
 
     /// ours / paper (reproduction ratio; 1.0 = exact).
@@ -49,6 +53,15 @@ impl PaperTable {
         self
     }
 
+    /// Like [`PaperTable::row`], flagged host-measured (see
+    /// [`TableRow::measured`]).
+    pub fn measured_row(mut self, label: impl Into<String>, ours: f64, paper: Option<f64>) -> Self {
+        let mut row = TableRow::new(label, ours, paper);
+        row.measured = true;
+        self.rows.push(row);
+        self
+    }
+
     pub fn note(mut self, n: impl Into<String>) -> Self {
         self.notes.push(n.into());
         self
@@ -70,12 +83,18 @@ impl PaperTable {
             .rows
             .iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut pairs = vec![
                     ("label", Json::Str(r.label.clone())),
                     ("ours", Json::Num(r.ours)),
                     ("paper", r.paper.map(Json::Num).unwrap_or(Json::Null)),
                     ("ratio", r.ratio().map(Json::Num).unwrap_or(Json::Null)),
-                ])
+                ];
+                // emitted only when set: model-derived rows keep their
+                // pre-observability JSON shape (golden files unchanged)
+                if r.measured {
+                    pairs.push(("measured", Json::Bool(true)));
+                }
+                Json::obj(pairs)
             })
             .collect();
         Json::obj(vec![
@@ -223,6 +242,19 @@ mod tests {
         assert_eq!(rows[0].req_f64("ratio").unwrap(), 2.0);
         assert!(rows[1].get("paper").unwrap().is_null());
         assert_eq!(parsed.req_f64("worst_ratio").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn measured_rows_are_flagged_only_when_measured() {
+        let t = PaperTable::new("T9", "m", "µs")
+            .row("model", 1.0, None)
+            .measured_row("host", 2.0, None);
+        assert!(!t.rows[0].measured);
+        assert!(t.rows[1].measured);
+        let rows = t.to_json();
+        let rows = rows.req_arr("rows").unwrap();
+        assert!(rows[0].get("measured").is_none());
+        assert_eq!(rows[1].get("measured"), Some(&Json::Bool(true)));
     }
 
     #[test]

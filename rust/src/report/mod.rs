@@ -15,7 +15,7 @@ pub mod diff;
 pub mod format;
 pub mod tables;
 
-pub use diff::{diff_files, diff_json, DiffReport};
+pub use diff::{diff_files, diff_json, diff_json_ignoring, DiffReport};
 pub use format::{set_to_json, PaperTable, TableRow};
 pub use tables::{
     ablation_lut_rom, ablation_pipelining, ablation_wordlen, all_tables, energy_table, headline,

@@ -9,6 +9,8 @@
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod sha256;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use sha256::sha256_hex;

@@ -413,6 +413,32 @@ fn prop_drain_flat_contract() {
     }
 }
 
+// --------------------------------------------------------- rover progress
+
+#[test]
+fn prop_rover_progress_json_roundtrip() {
+    // Any reachable progress sample survives the JSON text round-trip
+    // bit-exactly: f32 rewards/epsilons widen losslessly to f64 and the
+    // writer's shortest-round-trip float formatting preserves them.
+    use qfpga::coordinator::RoverProgress;
+    let mut rng = Rng::seeded(9030);
+    for case in 0..CASES {
+        let p = RoverProgress {
+            rover: rng.below(64),
+            episode: rng.below(100_000),
+            episodes: rng.range(1, 100_000),
+            reward: rng.f32_range(-1e4, 1e4),
+            epsilon: rng.f32_range(0.0, 1.0),
+        };
+        let text = p.to_json().to_string();
+        let back = RoverProgress::from_json(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, p, "case {case}: {text}");
+        assert_eq!(back.reward.to_bits(), p.reward.to_bits(), "case {case}");
+        assert_eq!(back.epsilon.to_bits(), p.epsilon.to_bits(), "case {case}");
+    }
+}
+
 // -------------------------------------------------------- fleet + batching
 
 #[test]
