@@ -40,7 +40,9 @@ pub mod telemetry;
 pub mod throughput;
 
 pub use mission::{run_mission, MissionCheckpoint, MissionConfig, MissionReport, MissionRun};
-pub use scenario::{convergence_episode, scenario_table, ScenarioSpec};
+pub use scenario::{
+    convergence_episode, scenario_table, scenario_table_with_drain, ScenarioSpec,
+};
 pub use scheduler::{run_fleet, run_fleet_with_workers, FleetReport};
 pub use sweep::{
     measure_backend, measure_backend_batched, resilience, SweepReport, WorkloadTiming,

@@ -133,9 +133,19 @@ pub fn convergence_episode(report: &TrainReport, window: usize) -> usize {
 /// Run the campaign and fold it into the S1 table. One cpu mission and one
 /// fpga-sim mission per scenario, both via the [`Experiment`] builder.
 pub fn scenario_table(spec: &ScenarioSpec) -> Result<PaperTable> {
+    scenario_table_with_drain(spec, false)
+}
+
+/// [`scenario_table`] with optional graceful drain: when `drain` is set
+/// and [`crate::util::shutdown::requested`] fires, the campaign stops at
+/// the next environment boundary and returns the partial table (with a
+/// note naming the cut). The daemon and `qfpga replay` keep `drain` off —
+/// a cache or replay must never observe a truncated S1.
+pub fn scenario_table_with_drain(spec: &ScenarioSpec, drain: bool) -> Result<PaperTable> {
     if spec.envs.is_empty() {
         return Err(Error::Config("scenario campaign needs at least one env".into()));
     }
+    let mut drained_after: Option<usize> = None;
     let mut table = PaperTable::new(
         "S1",
         format!(
@@ -149,7 +159,11 @@ pub fn scenario_table(spec: &ScenarioSpec) -> Result<PaperTable> {
         "mixed",
     );
 
-    for &env in &spec.envs {
+    for (done, &env) in spec.envs.iter().enumerate() {
+        if drain && crate::util::shutdown::requested() {
+            drained_after = Some(done);
+            break;
+        }
         let net = NetConfig::new(spec.arch, env);
         let run = |kind: BackendKind| -> Result<MissionReport> {
             let mut report = Experiment::train(BackendSpec::new(kind, net, spec.precision))
@@ -206,12 +220,19 @@ pub fn scenario_table(spec: &ScenarioSpec) -> Result<PaperTable> {
         );
     }
 
-    Ok(table.note(
+    table = table.note(
         "convergence: first episode from which the 10-episode moving-average reward \
          stays inside the final 10%-of-range band; fpga advantage: modeled Virtex-7 \
          Q-update completion vs this host's measured update-only cpu latency \
          (host-dependent, not golden-gated)",
-    ))
+    );
+    if let Some(done) = drained_after {
+        table = table.note(format!(
+            "DRAINED on signal after {done}/{} environments — partial campaign",
+            spec.envs.len()
+        ));
+    }
+    Ok(table)
 }
 
 #[cfg(test)]

@@ -53,6 +53,13 @@ impl RoverProgress {
         })
     }
 
+    /// Is this the rover's last episode? The serve daemon's stream
+    /// throttling always forwards the final sample so a client sees the
+    /// completed curve endpoint even when intermediate frames are elided.
+    pub fn is_final(&self) -> bool {
+        self.episode + 1 >= self.episodes
+    }
+
     /// Compact single-line rendering for mission logs.
     pub fn render(&self) -> String {
         format!(
@@ -231,6 +238,20 @@ mod tests {
         assert_eq!(back, p);
         // missing key is a clean error, not a default
         assert!(RoverProgress::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn is_final_flags_only_the_last_episode() {
+        let mut p = RoverProgress {
+            rover: 0,
+            episode: 0,
+            episodes: 3,
+            reward: 0.0,
+            epsilon: 0.1,
+        };
+        assert!(!p.is_final());
+        p.episode = 2;
+        assert!(p.is_final());
     }
 
     #[test]

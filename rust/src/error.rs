@@ -84,7 +84,7 @@ mod tests {
     fn display_prefixes() {
         assert_eq!(Error::Config("x".into()).to_string(), "config: x");
         assert_eq!(Error::interface("y").to_string(), "interface mismatch: y");
-        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        let io: Error = std::io::Error::other("gone").into();
         assert!(io.to_string().starts_with("io: "));
     }
 

@@ -67,6 +67,10 @@ pub struct Experiment {
     /// Worker-pool width for fleets (0 = `min(cores, rovers)`).
     workers: usize,
     checkpoint: Option<CheckpointPolicy>,
+    /// Honor [`crate::util::shutdown::requested`] between episode chunks:
+    /// checkpoint what ran (when a policy is set) and return early with
+    /// `interrupted` flagged instead of training to completion.
+    drain_on_signal: bool,
 }
 
 impl Experiment {
@@ -108,6 +112,7 @@ impl Experiment {
             rovers: 1,
             workers: 0,
             checkpoint: None,
+            drain_on_signal: false,
         }
     }
 
@@ -123,6 +128,7 @@ impl Experiment {
             rovers: 1,
             workers: 0,
             checkpoint: None,
+            drain_on_signal: false,
         }
     }
 
@@ -176,6 +182,17 @@ impl Experiment {
     /// [`CheckpointPolicy`]).
     pub fn checkpoint(mut self, dir: impl Into<PathBuf>, every: usize) -> Experiment {
         self.checkpoint = Some(CheckpointPolicy { dir: dir.into(), every: every.max(1) });
+        self
+    }
+
+    /// Drain gracefully when [`crate::util::shutdown::requested`] is set
+    /// (the CLI installs a SIGINT/SIGTERM handler that sets it): finish
+    /// the current episode chunk, write a final checkpoint when a
+    /// [`CheckpointPolicy`] is active, and return the partial report with
+    /// [`ExperimentReport::interrupted`] flagged. Off by default — the
+    /// serve gateway keeps it off so daemon jobs never truncate.
+    pub fn drain_on_signal(mut self, on: bool) -> Experiment {
+        self.drain_on_signal = on;
         self
     }
 
@@ -259,19 +276,21 @@ impl Experiment {
         }
         let cfg = self.mission_config();
         let workers = effective_workers(self.workers, self.rovers);
+        let drain = self.drain_on_signal;
         let start = Instant::now();
         let rovers = if self.rovers == 1 {
             // single rover: stay on the caller's thread (the PJRT client is
             // built and used right here)
-            vec![run_rover(&cfg, 0, self.checkpoint.as_ref(), &mut |p| sink(p))?]
+            vec![run_rover(&cfg, 0, self.checkpoint.as_ref(), drain, &mut |p| sink(p))?]
         } else {
-            run_pool(&cfg, self.rovers, workers, self.checkpoint.as_ref(), sink)?
+            run_pool(&cfg, self.rovers, workers, self.checkpoint.as_ref(), drain, sink)?
         };
         Ok(ExperimentReport {
             desc: cfg.describe(),
             rovers,
             workers,
             wall_seconds: start.elapsed().as_secs_f64(),
+            interrupted: drain && crate::util::shutdown::requested(),
         })
     }
 }
@@ -291,6 +310,7 @@ fn run_rover(
     cfg: &MissionConfig,
     rover: usize,
     ckpt: Option<&CheckpointPolicy>,
+    drain: bool,
     progress: &mut dyn FnMut(RoverProgress),
 ) -> Result<MissionReport> {
     let span = crate::obs::span(crate::obs::SpanKind::Mission)
@@ -305,7 +325,14 @@ fn run_rover(
         }
         _ => MissionRun::new(cfg, &factory)?,
     };
-    let chunk = ckpt.map(|c| c.every).unwrap_or(usize::MAX);
+    // chunk = drain/checkpoint granularity: the checkpoint cadence when one
+    // is set, a small bound when only drain responsiveness is wanted, else
+    // the whole mission in one call
+    let chunk = match (ckpt, drain) {
+        (Some(c), _) => c.every,
+        (None, true) => 16,
+        (None, false) => usize::MAX,
+    };
     let episodes = cfg.episodes;
     while !run.is_complete() {
         run.run_episodes(chunk, &mut |s| {
@@ -317,15 +344,23 @@ fn run_rover(
                 epsilon: s.epsilon,
             });
         })?;
+        let drained = drain && crate::util::shutdown::requested();
         if let Some(path) = &ckpt_path {
-            if !run.is_complete() {
+            // checkpoint between chunks, and once more on drain so the
+            // interrupted work is resumable
+            if drained || !run.is_complete() {
                 run.checkpoint()?.save(path)?;
             }
         }
+        if drained {
+            break;
+        }
     }
-    if let Some(path) = &ckpt_path {
-        // completed: clear the resume state so a rerun starts fresh
-        let _ = std::fs::remove_file(path);
+    if run.is_complete() {
+        if let Some(path) = &ckpt_path {
+            // completed: clear the resume state so a rerun starts fresh
+            let _ = std::fs::remove_file(path);
+        }
     }
     span.done();
     run.finish()
@@ -349,6 +384,7 @@ fn run_pool(
     n_rovers: usize,
     workers: usize,
     ckpt: Option<&CheckpointPolicy>,
+    drain: bool,
     sink: &(dyn Fn(RoverProgress) + Sync),
 ) -> Result<Vec<MissionReport>> {
     let next = AtomicUsize::new(0);
@@ -363,6 +399,11 @@ fn run_pool(
             thread::Builder::new()
                 .name(format!("fleet-worker-{w}"))
                 .spawn_scoped(scope, move || loop {
+                    // draining: stop claiming new rovers; already-claimed
+                    // missions drain inside run_rover (final checkpoint)
+                    if drain && crate::util::shutdown::requested() {
+                        break;
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n_rovers {
                         break;
@@ -383,7 +424,7 @@ fn run_pool(
                     // caller (the historical thread-per-rover contract),
                     // not unwind through the scope and abort the leader
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_rover(&cfg, i, ckpt, &mut |p| {
+                        run_rover(&cfg, i, ckpt, drain, &mut |p| {
                             let _ = tx.send(FleetMsg::Progress(p));
                         })
                     }))
@@ -417,6 +458,11 @@ fn run_pool(
     if let Some(e) = first_err {
         return Err(e);
     }
+    if drain && crate::util::shutdown::requested() {
+        // drained: unclaimed rovers simply never ran — return what did
+        // (their checkpoints, if any, carry the resumable remainder)
+        return Ok(slots.into_iter().flatten().collect());
+    }
     slots
         .into_iter()
         .map(|s| s.ok_or_else(|| Error::Config("missing rover report".into())))
@@ -435,6 +481,9 @@ pub struct ExperimentReport {
     /// Worker-pool width the fleet ran on (1 for single-rover runs).
     pub workers: usize,
     pub wall_seconds: f64,
+    /// True when a drain request ([`Experiment::drain_on_signal`]) cut the
+    /// run short; the per-rover reports cover only the episodes that ran.
+    pub interrupted: bool,
 }
 
 impl ExperimentReport {
@@ -501,10 +550,11 @@ impl Report for ExperimentReport {
     fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "[EXP] {} × [{}] on {} worker(s)\n",
+            "[EXP] {} × [{}] on {} worker(s){}\n",
             self.rovers.len(),
             self.desc,
-            self.workers
+            self.workers,
+            if self.interrupted { " — INTERRUPTED (drained on signal)" } else { "" }
         ));
         for (i, r) in self.rovers.iter().enumerate() {
             let (first, last) = r.train.first_last_mean_reward(20);
@@ -527,7 +577,7 @@ impl Report for ExperimentReport {
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Str("EXP".into())),
             ("experiment", Json::Str(self.desc.clone())),
             ("rovers", Json::Num(self.rovers.len() as f64)),
@@ -546,7 +596,13 @@ impl Report for ExperimentReport {
                 "reports",
                 Json::Arr(self.rovers.iter().map(Self::rover_json).collect()),
             ),
-        ])
+        ];
+        // emitted only when set: uninterrupted runs keep their
+        // pre-drain JSON shape (report hashes and goldens unchanged)
+        if self.interrupted {
+            fields.push(("interrupted", Json::Bool(true)));
+        }
+        Json::obj(fields)
     }
 }
 

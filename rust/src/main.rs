@@ -16,6 +16,12 @@
 //!   scaling on the worker pool.
 //! * `radiation` — resilience campaign under seeded SEU injection.
 //! * `validate` — cross-backend numeric equivalence over random workloads.
+//! * `serve --socket PATH` — mission gateway daemon: replayable job specs
+//!   over a unix socket, bounded priority queue with preemption, a
+//!   content-addressed result cache, graceful SIGTERM drain (see
+//!   [`qfpga::serve`] for the frame-by-frame protocol reference).
+//! * `loadgen` — load-test a gateway (embedded width sweep or a running
+//!   daemon via `--socket`) and print table G1.
 //! * `diff a.json b.json` — compare two report JSON files within
 //!   tolerances (non-zero exit on drift; `--ignore-keys` deep-strips
 //!   volatile keys first).
@@ -49,12 +55,12 @@ use qfpga::qlearn::backend::{BackendKind, QBackend};
 use qfpga::report::{self, Report};
 use qfpga::runtime::Runtime;
 use qfpga::util::cli::Args;
-use qfpga::util::{Json, Rng};
+use qfpga::util::{shutdown, Json, Rng};
 
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|diff|manifest|replay|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|serve|loadgen|diff|manifest|replay|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
@@ -65,6 +71,10 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
             --backend cpu|xla|fpga-sim --episodes N --max-steps N --seed S
             [--microbatch]        flush at the backend's preferred batch size
             [--batch B]           flush through update_batch every B steps
+            [--checkpoint-dir D]  checkpoint to D/rover-0.json and resume a
+                                  file already present; with SIGINT/SIGTERM
+                                  the run drains: final checkpoint, exit 0
+            [--checkpoint-every N] episodes between checkpoints (default 25)
   fleet     --rovers N            plus all `train` options (incl. --batch)
             [--workers W]         worker-pool width (default: one per core,
                                   capped at the fleet; rovers scale past
@@ -97,6 +107,27 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
             [--rovers N]          fleet width per campaign cell (default 2)
             plus --arch/--env/--precision/--episodes/--max-steps/--seed
   validate  --updates N           cross-backend + batch/stepwise equivalence
+  serve     mission gateway daemon: accepts train/fleet/mission job specs
+            (exactly the replayable manifest specs) as newline-delimited
+            JSON over a unix socket; bounded priority queue with
+            backpressure, checkpoint-backed preemption, per-job progress
+            streaming, content-addressed result cache, healthz/metrics
+            verbs; SIGINT/SIGTERM drains accepted jobs then exits 0
+            --socket PATH         socket path (required; stale file replaced)
+            [--workers W]         executor threads (default 2)
+            [--queue N]           queue capacity (default 64)
+            [--chunk E]           episodes between preemption probes (default 8)
+  loadgen   load-test a gateway and print table G1 (p50/p99 job latency,
+            sustained jobs/s, cache hit rate) over a deterministic
+            train/fleet/mission mix; duplicates are resubmitted so the
+            cache-hit columns are exact on a fresh daemon
+            [--socket PATH]       drive a running daemon (default: embedded
+                                  in-process daemons, one per --widths entry)
+            [--jobs N] [--concurrency C] [--widths 1,2,4]
+            [--episodes E] [--max-steps N] [--seed S]
+            [--fetch-metrics F]   write the daemon's Prometheus text to F
+            [--expect-hits N]     exit non-zero unless every pass observed
+                                  exactly N cache hits
   diff      <ours.json> <golden.json> [--tol T] [--ignore-keys k1,k2]
             compare two report JSON files (default tolerance 0.05); exits
             non-zero when paper-ratio or latency fields drift out of band.
@@ -112,8 +143,8 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|dif
   info                            artifacts, device, cycle model summary
 
   --json FILE   (report/train/fleet/mission/sweep/throughput/radiation/
-                validate/info) also write the subcommand's typed JSON
-                report to FILE
+                validate/loadgen/info) also write the subcommand's typed
+                JSON report to FILE
 
 observability (train/fleet/mission/sweep/throughput/radiation):
   --manifest FILE   write a versioned run-provenance manifest (schema,
@@ -135,6 +166,29 @@ fn main() -> ExitCode {
     }
 }
 
+type Handler = fn(&Args) -> Result<()>;
+
+/// Subcommand dispatch table — the single source of truth. The USAGE
+/// synopsis and the unknown-subcommand message are both derived from (and
+/// unit-tested against) this list, so a new subcommand cannot silently
+/// stay out of the help text.
+const COMMANDS: &[(&str, Handler)] = &[
+    ("report", cmd_report),
+    ("train", cmd_train),
+    ("fleet", cmd_fleet),
+    ("mission", cmd_mission),
+    ("sweep", cmd_sweep),
+    ("throughput", cmd_throughput),
+    ("radiation", cmd_radiation),
+    ("validate", cmd_validate),
+    ("serve", cmd_serve),
+    ("loadgen", cmd_loadgen),
+    ("diff", cmd_diff),
+    ("manifest", cmd_manifest),
+    ("replay", cmd_replay),
+    ("info", cmd_info),
+];
+
 fn run() -> Result<()> {
     let args = Args::from_env(&[
         "all",
@@ -150,32 +204,21 @@ fn run() -> Result<()> {
         return Ok(());
     }
     match args.positional().first().map(String::as_str) {
-        Some("report") => cmd_report(&args),
-        Some("train") => cmd_train(&args),
-        Some("fleet") => cmd_fleet(&args),
-        Some("mission") => cmd_mission(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("throughput") => cmd_throughput(&args),
-        Some("radiation") => cmd_radiation(&args),
-        Some("validate") => cmd_validate(&args),
-        Some("diff") => cmd_diff(&args),
-        Some("manifest") => cmd_manifest(&args),
-        Some("replay") => cmd_replay(&args),
-        Some("info") => cmd_info(&args),
-        Some("help") => {
+        None | Some("help") => {
             print!("{USAGE}");
             Ok(())
         }
-        None => {
-            print!("{USAGE}");
-            Ok(())
-        }
-        Some(other) => {
-            eprint!("{USAGE}");
-            Err(qfpga::error::Error::Config(format!(
-                "unknown subcommand `{other}`"
-            )))
-        }
+        Some(name) => match COMMANDS.iter().find(|(n, _)| *n == name) {
+            Some((_, handler)) => handler(&args),
+            None => {
+                eprint!("{USAGE}");
+                let known: Vec<&str> = COMMANDS.iter().map(|(n, _)| *n).collect();
+                Err(qfpga::error::Error::Config(format!(
+                    "unknown subcommand `{name}` — expected one of: {}, help",
+                    known.join(", ")
+                )))
+            }
+        },
     }
 }
 
@@ -348,8 +391,13 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = mission_config(args)?;
     let obs = ObsRun::begin(args);
+    shutdown::install();
     println!("mission: {}", cfg.describe());
-    let experiment = Experiment::from_mission(&cfg).run()?;
+    let mut builder = Experiment::from_mission(&cfg).drain_on_signal(true);
+    if let Some(dir) = args.get("checkpoint-dir") {
+        builder = builder.checkpoint(dir, args.get_parse("checkpoint-every", 25usize)?);
+    }
+    let experiment = builder.run()?;
     let report = &experiment.rovers[0];
     let (first, last) = report.train.first_last_mean_reward(20);
     let curve = LearningCurve::from_report(&report.train, 10, 60);
@@ -372,6 +420,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             us / 1e3
         );
     }
+    if experiment.interrupted {
+        println!(
+            "INTERRUPTED: drained on signal after {} episode(s); rerun with the \
+             same --checkpoint-dir to resume",
+            report.train.episodes.len()
+        );
+    }
     let doc = experiment.to_json();
     write_json(args, &doc)?;
     obs.finish("train", cfg.seed, cfg.to_json(), "EXP", &doc)
@@ -382,7 +437,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let rovers = args.get_parse("rovers", 4usize)?;
     let workers = args.get_parse("workers", 0usize)?;
     let obs = ObsRun::begin(args);
-    let mut experiment = Experiment::from_mission(&cfg).rovers(rovers).workers(workers);
+    shutdown::install();
+    let mut experiment = Experiment::from_mission(&cfg)
+        .rovers(rovers)
+        .workers(workers)
+        .drain_on_signal(true);
     if let Some(dir) = args.get("checkpoint-dir") {
         experiment = experiment.checkpoint(dir, args.get_parse("checkpoint-every", 25usize)?);
     }
@@ -460,7 +519,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
 /// kind trained on cpu + fpga-sim through the experiment builder, reported
 /// as table S1 (see SCENARIOS.md for the per-scenario documentation).
 fn cmd_mission(args: &Args) -> Result<()> {
-    use qfpga::coordinator::{scenario_table, ScenarioSpec};
+    use qfpga::coordinator::{scenario_table_with_drain, ScenarioSpec};
 
     let envs: Vec<EnvKind> = match args.get_or("env", "all") {
         "all" => EnvKind::all().to_vec(),
@@ -476,6 +535,7 @@ fn cmd_mission(args: &Args) -> Result<()> {
         batch: args.get_parse("batch", 1usize)?,
     };
     let obs = ObsRun::begin(args);
+    shutdown::install();
     println!(
         "scenario campaign: [{}] × [cpu + fpga-sim], {} {} ({} episodes × ≤{} steps each)",
         spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(", "),
@@ -484,7 +544,7 @@ fn cmd_mission(args: &Args) -> Result<()> {
         spec.episodes,
         spec.max_steps
     );
-    let table = scenario_table(&spec)?;
+    let table = scenario_table_with_drain(&spec, true)?;
     print!("{table}");
     let doc = table.to_json();
     write_json(args, &doc)?;
@@ -730,6 +790,98 @@ fn cmd_validate(args: &Args) -> Result<()> {
     write_json(args, &table.to_json())
 }
 
+/// `serve` — run the mission gateway daemon on a unix socket until a
+/// drain signal (SIGINT/SIGTERM or a `shutdown` frame) lands, then exit 0.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use qfpga::serve::{Gateway, ServeConfig};
+
+    let Some(socket) = args.get("socket") else {
+        return Err(qfpga::error::Error::Config(
+            "usage: qfpga serve --socket PATH [--workers W] [--queue N] [--chunk E]".into(),
+        ));
+    };
+    let mut cfg = ServeConfig::new(socket);
+    cfg.workers = args.get_parse("workers", 2usize)?.max(1);
+    cfg.queue_capacity = args.get_parse("queue", 64usize)?.max(1);
+    cfg.chunk = args.get_parse("chunk", 8usize)?.max(1);
+    shutdown::install();
+    println!(
+        "gateway listening on {} — {} worker(s), queue {}, preemption chunk {} \
+         episode(s); SIGINT/SIGTERM drains",
+        cfg.socket.display(),
+        cfg.workers,
+        cfg.queue_capacity,
+        cfg.chunk
+    );
+    let stats = Gateway::new(cfg)?.run()?;
+    println!(
+        "gateway drained: {} submitted, {} completed ({} cache hit(s)), \
+         {} preemption(s), {} rejected",
+        stats.submitted, stats.completed, stats.cache_hits, stats.preemptions, stats.rejected
+    );
+    Ok(())
+}
+
+/// `loadgen` — drive a gateway (embedded width sweep, or a running daemon
+/// via `--socket`) with a deterministic job mix and print table G1.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use qfpga::serve::{run_loadgen, LoadgenSpec};
+
+    let mut widths = Vec::new();
+    for part in args.get_or("widths", "1,2,4").split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        widths.push(part.parse::<usize>().map_err(|_| {
+            qfpga::error::Error::Config(format!("bad --widths entry `{part}`"))
+        })?);
+    }
+    if widths.is_empty() {
+        return Err(qfpga::error::Error::Config(
+            "--widths needs at least one worker width".into(),
+        ));
+    }
+    let spec = LoadgenSpec {
+        socket: args.get("socket").map(std::path::PathBuf::from),
+        jobs: args.get_parse("jobs", 12usize)?,
+        concurrency: args.get_parse("concurrency", 3usize)?.max(1),
+        widths,
+        episodes: args.get_parse("episodes", 3usize)?,
+        max_steps: args.get_parse("max-steps", 15usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+    };
+    let out = run_loadgen(&spec)?;
+    println!("{}", out.table);
+    if let Some(path) = args.get("fetch-metrics") {
+        // external mode scrapes the daemon's `metrics` verb; embedded
+        // daemons share this process's registry, so snapshot it directly
+        let text = match &out.prometheus {
+            Some(text) => text.clone(),
+            None => MetricsSnapshot::capture().to_prometheus(),
+        };
+        std::fs::write(path, text)?;
+        println!("wrote metrics {path}");
+    }
+    write_json(args, &report::set_to_json(std::slice::from_ref(&out.table)))?;
+    if let Some(raw) = args.get("expect-hits") {
+        let expect: u64 = raw.parse().map_err(|_| {
+            qfpga::error::Error::Config(format!("bad --expect-hits `{raw}`"))
+        })?;
+        if !out.hits_per_pass.iter().all(|&h| h == expect) {
+            return Err(qfpga::error::Error::Config(format!(
+                "cache-hit mismatch: expected {expect} per pass, observed {:?}",
+                out.hits_per_pass
+            )));
+        }
+        println!(
+            "cache hits OK: {expect} per pass × {} pass(es)",
+            out.hits_per_pass.len()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_diff(args: &Args) -> Result<()> {
     let pos = args.positional();
     let (Some(ours), Some(golden)) = (pos.get(1), pos.get(2)) else {
@@ -790,28 +942,18 @@ fn cmd_manifest(args: &Args) -> Result<()> {
 /// document. Only seed-deterministic subcommands are replayable; the
 /// measurement campaigns (`sweep`, `throughput`, `radiation` overheads)
 /// record host-timed results that no re-run can reproduce bit-exactly.
+/// Replay and the gateway share one executor — [`qfpga::serve::JobSpec`] —
+/// so a spec the daemon caches is a spec `replay` can verify.
 fn replay_report(m: &RunManifest) -> Result<Json> {
-    match m.subcommand.as_str() {
-        "train" => {
-            let cfg = MissionConfig::from_json(&m.spec)?;
-            Ok(Experiment::from_mission(&cfg).run()?.to_json())
-        }
-        "fleet" => {
-            let cfg = MissionConfig::from_json(&m.spec)?;
-            let rovers = m.spec.req_usize("rovers")?;
-            Ok(Experiment::from_mission(&cfg).rovers(rovers).run()?.to_json())
-        }
-        "mission" => {
-            use qfpga::coordinator::{scenario_table, ScenarioSpec};
-            let spec = ScenarioSpec::from_json(&m.spec)?;
-            Ok(scenario_table(&spec)?.to_json())
-        }
-        other => Err(qfpga::error::Error::Config(format!(
-            "`{other}` manifests validate but cannot replay: the run records \
+    if !m.is_replayable() {
+        return Err(qfpga::error::Error::Config(format!(
+            "`{}` manifests validate but cannot replay: the run records \
              host-measured results (only train/fleet/mission are \
-             seed-deterministic end to end)"
-        ))),
+             seed-deterministic end to end)",
+            m.subcommand
+        )));
     }
+    qfpga::serve::JobSpec::from_manifest(&m.subcommand, &m.spec)?.run(&|_| {})
 }
 
 /// `replay <manifest.json>` — re-run the recorded spec and require the
@@ -912,4 +1054,56 @@ fn cmd_info(args: &Args) -> Result<()> {
         ("artifacts", artifacts),
     ]);
     write_json(args, &doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{COMMANDS, USAGE};
+
+    /// The `USAGE: qfpga <...>` synopsis must list exactly the dispatchable
+    /// subcommands (plus `help`) — adding an arm to `COMMANDS` without
+    /// updating the help text fails here, and vice versa.
+    #[test]
+    fn usage_synopsis_matches_the_dispatch_table() {
+        let synopsis = USAGE
+            .lines()
+            .find(|l| l.starts_with("USAGE: qfpga <"))
+            .expect("USAGE synopsis line");
+        let inner = synopsis
+            .split_once('<')
+            .and_then(|(_, rest)| rest.split_once('>'))
+            .map(|(inner, _)| inner)
+            .expect("angle-bracketed subcommand list");
+        let mut listed: Vec<&str> = inner.split('|').collect();
+        listed.sort_unstable();
+        let mut known: Vec<&str> = COMMANDS.iter().map(|(n, _)| *n).collect();
+        known.push("help");
+        known.sort_unstable();
+        assert_eq!(listed, known, "USAGE synopsis drifted from COMMANDS");
+    }
+
+    /// Every dispatchable subcommand must open a help block in USAGE —
+    /// a line starting with its name — so `qfpga help` documents all of
+    /// them, not just the ones someone remembered.
+    #[test]
+    fn every_subcommand_has_a_usage_help_block() {
+        for (name, _) in COMMANDS {
+            let has_block = USAGE.lines().any(|l| {
+                let t = l.trim_start();
+                t.starts_with(name)
+                    && t[name.len()..].starts_with(|c: char| c == ' ' || c == '\t')
+            });
+            assert!(has_block, "no USAGE help block for subcommand `{name}`");
+        }
+    }
+
+    /// The dispatch table stays duplicate-free (a duplicate would shadow
+    /// the later handler silently — `find` returns the first match).
+    #[test]
+    fn dispatch_table_has_no_duplicates() {
+        let mut names: Vec<&str> = COMMANDS.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COMMANDS.len());
+    }
 }

@@ -51,6 +51,12 @@ pub const VOLATILE_REPORT_KEYS: [&str; 4] = [
     "workers",
 ];
 
+/// Subcommands whose specs are seed-deterministic end to end — the only
+/// ones `qfpga replay` re-runs and the only job kinds the serve gateway
+/// accepts (a cache keyed on spec sha256 is sound exactly when the spec
+/// determines the report bit-for-bit).
+pub const REPLAYABLE_SUBCOMMANDS: [&str; 3] = ["train", "fleet", "mission"];
+
 /// Fresh process-unique run id (time + pid; uniqueness, not secrecy).
 pub fn new_run_id() -> String {
     let now = SystemTime::now()
@@ -271,6 +277,12 @@ impl RunManifest {
         Ok(m)
     }
 
+    /// Can `qfpga replay` (and the serve gateway) re-run this manifest's
+    /// spec bit-exactly? See [`REPLAYABLE_SUBCOMMANDS`].
+    pub fn is_replayable(&self) -> bool {
+        REPLAYABLE_SUBCOMMANDS.contains(&self.subcommand.as_str())
+    }
+
     /// Load + validate a manifest file.
     pub fn load(path: &Path) -> Result<RunManifest> {
         let text = std::fs::read_to_string(path)?;
@@ -356,6 +368,20 @@ mod tests {
         let mut c = a.clone();
         c.seed = 8;
         assert_ne!(manifest_sha256_of(&a.to_json()), manifest_sha256_of(&c.to_json()));
+    }
+
+    #[test]
+    fn replayability_follows_the_subcommand() {
+        let m = build();
+        assert!(m.is_replayable());
+        let mut s = m.clone();
+        s.subcommand = "sweep".into();
+        assert!(!s.is_replayable());
+        for sub in REPLAYABLE_SUBCOMMANDS {
+            let mut r = m.clone();
+            r.subcommand = sub.into();
+            assert!(r.is_replayable());
+        }
     }
 
     #[test]

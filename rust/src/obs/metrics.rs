@@ -171,6 +171,20 @@ pub struct Metrics {
     pub fault_escaped: Counter,
     /// Scrub passes executed by the protected store.
     pub fault_scrub_bursts: Counter,
+    /// Jobs accepted by the serve gateway.
+    pub serve_jobs_submitted: Counter,
+    /// Jobs completed (executed or served from cache).
+    pub serve_jobs_completed: Counter,
+    /// Submissions rejected by queue backpressure or drain.
+    pub serve_jobs_rejected: Counter,
+    /// Running jobs checkpointed and requeued for a higher-priority job.
+    pub serve_preemptions: Counter,
+    /// Jobs answered from the content-addressed result cache.
+    pub serve_cache_hits: Counter,
+    /// Current depth of the gateway job queue.
+    pub serve_queue_depth: Gauge,
+    /// Jobs currently executing on gateway workers.
+    pub serve_jobs_in_flight: Gauge,
 }
 
 /// Stable row index for a precision arm (order matches [`Precision::all`]).
@@ -216,6 +230,13 @@ impl Metrics {
             fault_masked: C,
             fault_escaped: C,
             fault_scrub_bursts: C,
+            serve_jobs_submitted: C,
+            serve_jobs_completed: C,
+            serve_jobs_rejected: C,
+            serve_preemptions: C,
+            serve_cache_hits: C,
+            serve_queue_depth: Gauge::new(),
+            serve_jobs_in_flight: Gauge::new(),
         }
     }
 
@@ -451,6 +472,49 @@ impl MetricsSnapshot {
             "Scrub passes executed by the protected store",
             &m.fault_scrub_bursts,
         ));
+        families.push(scalar_counter(
+            "qfpga_serve_jobs_submitted_total",
+            "Jobs accepted by the serve gateway",
+            &m.serve_jobs_submitted,
+        ));
+        families.push(scalar_counter(
+            "qfpga_serve_jobs_completed_total",
+            "Jobs completed (executed or served from cache)",
+            &m.serve_jobs_completed,
+        ));
+        families.push(scalar_counter(
+            "qfpga_serve_jobs_rejected_total",
+            "Submissions rejected by queue backpressure or drain",
+            &m.serve_jobs_rejected,
+        ));
+        families.push(scalar_counter(
+            "qfpga_serve_preemptions_total",
+            "Running jobs checkpointed and requeued for a higher-priority job",
+            &m.serve_preemptions,
+        ));
+        families.push(scalar_counter(
+            "qfpga_serve_cache_hits_total",
+            "Jobs answered from the content-addressed result cache",
+            &m.serve_cache_hits,
+        ));
+        families.push(Family {
+            name: "qfpga_serve_queue_depth",
+            kind: MetricKind::Gauge,
+            help: "Current depth of the gateway job queue",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Float(m.serve_queue_depth.get()),
+            }],
+        });
+        families.push(Family {
+            name: "qfpga_serve_jobs_in_flight",
+            kind: MetricKind::Gauge,
+            help: "Jobs currently executing on gateway workers",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Float(m.serve_jobs_in_flight.get()),
+            }],
+        });
 
         MetricsSnapshot { families }
     }
@@ -669,6 +733,20 @@ mod tests {
             SeriesValue::Float(v) => assert!((0.0..=1.0).contains(v)),
             v => panic!("epsilon gauge has wrong shape: {v:?}"),
         }
+    }
+
+    #[test]
+    fn serve_families_are_exposed() {
+        let base = MetricsSnapshot::capture();
+        metrics().serve_jobs_submitted.add(3);
+        metrics().serve_cache_hits.inc();
+        let d = MetricsSnapshot::capture().delta(&base);
+        assert!(d.total("qfpga_serve_jobs_submitted_total") >= 3);
+        assert!(d.total("qfpga_serve_cache_hits_total") >= 1);
+        let prom = d.to_prometheus();
+        assert!(prom.contains("# TYPE qfpga_serve_queue_depth gauge"));
+        assert!(prom.contains("# TYPE qfpga_serve_jobs_in_flight gauge"));
+        assert!(prom.contains("# TYPE qfpga_serve_preemptions_total counter"));
     }
 
     #[test]

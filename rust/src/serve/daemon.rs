@@ -1,0 +1,549 @@
+//! The mission gateway daemon: a unix-socket job server over the
+//! [`super::protocol`] frames.
+//!
+//! Architecture: one nonblocking accept loop, one detached thread per
+//! connection, `workers` executor threads pulling from a shared
+//! [`super::queue::JobQueue`]. Results flow back to the submitting
+//! connection over a per-job mpsc channel, so a preempted-and-requeued job
+//! keeps talking to the same client. SIGTERM/SIGINT (via
+//! [`crate::util::shutdown`]) or a `shutdown` frame start a drain: no new
+//! admissions, every accepted job still runs to completion, then the
+//! socket is unlinked and [`Gateway::run`] returns its tallies.
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::mission::MissionCheckpoint;
+use crate::coordinator::telemetry::RoverProgress;
+use crate::error::{Error, Result};
+use crate::obs::{metrics, report_sha256, MetricsSnapshot};
+use crate::util::{shutdown, Json};
+
+use super::cache::{CachedResult, ResultCache};
+use super::job::{JobSpec, JobStep};
+use super::protocol::{write_frame, FrameReader, Request, Response, MAX_PRIORITY};
+use super::queue::JobQueue;
+
+/// How the accept loop naps when no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Read timeout on connections, so idle readers observe drain requests.
+const READ_POLL: Duration = Duration::from_millis(250);
+/// Progress frames are throttled to every Nth episode (plus the final one).
+const PROGRESS_EVERY: usize = 5;
+
+/// Gateway tunables (see `qfpga serve --help`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Unix socket path; a stale file from a dead daemon is replaced.
+    pub socket: PathBuf,
+    /// Executor threads (jobs running concurrently).
+    pub workers: usize,
+    /// Queue capacity; pushes beyond it are rejected with a retry hint.
+    pub queue_capacity: usize,
+    /// Episodes a preemptible job runs between preemption probes.
+    pub chunk: usize,
+}
+
+impl ServeConfig {
+    pub fn new(socket: impl Into<PathBuf>) -> ServeConfig {
+        ServeConfig { socket: socket.into(), workers: 2, queue_capacity: 64, chunk: 8 }
+    }
+}
+
+/// Tallies returned by [`Gateway::run`] after a drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Submit frames received (including cache hits and rejections).
+    pub submitted: u64,
+    /// Terminal result frames sent by executors (ok or error).
+    pub completed: u64,
+    /// Submissions rejected for backpressure or drain.
+    pub rejected: u64,
+    /// Results answered straight from the content-addressed cache.
+    pub cache_hits: u64,
+    /// Checkpoint-and-requeue events.
+    pub preemptions: u64,
+}
+
+/// One queued execution: the spec plus its client reply channel and any
+/// checkpoint carried over a preemption.
+struct QueuedJob {
+    id: String,
+    key: String,
+    spec: JobSpec,
+    priority: u8,
+    stream: bool,
+    resume: Option<Box<MissionCheckpoint>>,
+    preemptions: u64,
+    reply: Sender<Response>,
+}
+
+/// The daemon. Shared (`Arc`) between the accept loop, connection threads,
+/// and executors.
+pub struct Gateway {
+    cfg: ServeConfig,
+    listener: UnixListener,
+    queue: JobQueue<QueuedJob>,
+    cache: ResultCache,
+    draining: AtomicBool,
+    in_flight: AtomicUsize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    preemptions: AtomicU64,
+    next_job: AtomicU64,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Gateway {
+    /// Bind the socket (unlinking any stale file) and build the daemon.
+    /// The socket is connectable as soon as this returns.
+    pub fn new(cfg: ServeConfig) -> Result<Arc<Gateway>> {
+        if cfg.socket.exists() {
+            std::fs::remove_file(&cfg.socket)?;
+        }
+        let listener = UnixListener::bind(&cfg.socket).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("cannot bind {}: {e}", cfg.socket.display()),
+            ))
+        })?;
+        listener.set_nonblocking(true)?;
+        let queue = JobQueue::new(cfg.queue_capacity);
+        Ok(Arc::new(Gateway {
+            cfg,
+            listener,
+            queue,
+            cache: ResultCache::new(),
+            draining: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            next_job: AtomicU64::new(1),
+            conns: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// Begin draining: stop admitting, finish what's accepted, shut down.
+    /// Safe from any thread; also triggered by SIGINT/SIGTERM.
+    pub fn request_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst) || shutdown::requested()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits(),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Serve until drained. Blocks the calling thread; returns the final
+    /// tallies once every accepted job has its terminal frame sent and the
+    /// socket file is removed.
+    pub fn run(self: Arc<Gateway>) -> Result<ServeStats> {
+        let workers: Vec<_> = (0..self.cfg.workers.max(1))
+            .map(|_| {
+                let g = Arc::clone(&self);
+                thread::spawn(move || {
+                    while let Some(entry) = g.queue.pop() {
+                        g.execute(entry);
+                    }
+                })
+            })
+            .collect();
+
+        while !self.draining() {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let g = Arc::clone(&self);
+                    let h = thread::spawn(move || g.handle_conn(stream));
+                    self.conns.lock().unwrap().push(h);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // Drain: admissions off, let executors empty the queue, then make
+        // sure every connection thread has written its last frame.
+        self.request_drain();
+        self.queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+        let _ = std::fs::remove_file(&self.cfg.socket);
+        Ok(self.stats())
+    }
+
+    /// Executor body: run one queue entry to its next boundary.
+    fn execute(&self, mut entry: QueuedJob) {
+        metrics().serve_queue_depth.set(self.queue.len() as f64);
+        // A twin job may have completed while this one sat queued.
+        if entry.resume.is_none() {
+            if let Some(hit) = self.cache.get(&entry.key) {
+                self.finish(&entry, Ok(hit), true);
+                return;
+            }
+        }
+
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        metrics().serve_jobs_in_flight.set(self.in_flight.load(Ordering::SeqCst) as f64);
+
+        let priority = entry.priority;
+        let preempt = || {
+            !self.draining()
+                && priority < MAX_PRIORITY
+                && self.queue.has_higher_priority_than(priority)
+        };
+        // Sender is !Sync; the Mutex wrapper makes the closure Sync as
+        // `run_with_progress` requires. Send failures mean the client hung
+        // up — the job still runs to completion for the cache.
+        let tx = Mutex::new(entry.reply.clone());
+        let id = entry.id.clone();
+        let stream_on = entry.stream;
+        let progress = move |p: RoverProgress| {
+            if stream_on && (p.is_final() || p.episode % PROGRESS_EVERY == 0) {
+                let _ = tx
+                    .lock()
+                    .unwrap()
+                    .send(Response::Progress { job_id: id.clone(), sample: p });
+            }
+        };
+
+        let outcome = entry.spec.run_step(
+            entry.resume.take().map(|b| *b),
+            &preempt,
+            self.cfg.chunk,
+            &progress,
+        );
+
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        metrics().serve_jobs_in_flight.set(self.in_flight.load(Ordering::SeqCst) as f64);
+
+        match outcome {
+            Ok(JobStep::Done(doc)) => {
+                let value = CachedResult {
+                    report_id: entry.spec.report_id().to_string(),
+                    report_sha256: report_sha256(&doc),
+                    report: doc,
+                };
+                self.cache.insert(entry.key.clone(), value.clone());
+                self.finish(&entry, Ok(value), false);
+            }
+            Ok(JobStep::Preempted(ckpt)) => {
+                entry.resume = Some(ckpt);
+                entry.preemptions += 1;
+                self.preemptions.fetch_add(1, Ordering::Relaxed);
+                metrics().serve_preemptions.inc();
+                self.queue.requeue(entry.priority, entry);
+            }
+            Err(e) => self.finish(&entry, Err(e), false),
+        }
+    }
+
+    /// Send a job's terminal frame and count it.
+    fn finish(&self, entry: &QueuedJob, outcome: Result<CachedResult>, cache_hit: bool) {
+        let resp = match outcome {
+            Ok(v) => Response::JobResult {
+                job_id: entry.id.clone(),
+                ok: true,
+                cache_hit,
+                preemptions: entry.preemptions,
+                report_id: v.report_id,
+                report_sha256: v.report_sha256,
+                report: v.report,
+                error: None,
+            },
+            Err(e) => Response::JobResult {
+                job_id: entry.id.clone(),
+                ok: false,
+                cache_hit: false,
+                preemptions: entry.preemptions,
+                report_id: entry.spec.report_id().to_string(),
+                report_sha256: String::new(),
+                report: Json::Null,
+                error: Some(e.to_string()),
+            },
+        };
+        let _ = entry.reply.send(resp);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        metrics().serve_jobs_completed.inc();
+    }
+
+    /// Connection thread: read request frames until EOF or drain; answer
+    /// each. A `submit` blocks this connection until its terminal frame.
+    fn handle_conn(self: Arc<Gateway>, stream: UnixStream) {
+        let _ = stream.set_read_timeout(Some(READ_POLL));
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let mut reader = FrameReader::new(stream);
+        loop {
+            let frame = match reader.read_frame(&|| !self.draining()) {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(e) => {
+                    let err = Response::ProtocolError { message: e.to_string() };
+                    let _ = write_frame(&mut writer, &err.to_json());
+                    break;
+                }
+            };
+            let req = match Request::from_json(&frame) {
+                Ok(r) => r,
+                Err(e) => {
+                    let err = Response::ProtocolError { message: e.to_string() };
+                    if write_frame(&mut writer, &err.to_json()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+            };
+            let sent = match req {
+                Request::Healthz => write_frame(&mut writer, &self.health().to_json()),
+                Request::Metrics => {
+                    let resp = Response::MetricsText {
+                        prometheus: MetricsSnapshot::capture().to_prometheus(),
+                    };
+                    write_frame(&mut writer, &resp.to_json())
+                }
+                Request::Shutdown => {
+                    self.request_drain();
+                    write_frame(&mut writer, &self.health().to_json())
+                }
+                Request::Submit { job, priority, stream } => {
+                    self.handle_submit(&mut writer, job, priority, stream)
+                }
+            };
+            if sent.is_err() {
+                break;
+            }
+        }
+    }
+
+    fn health(&self) -> Response {
+        Response::Health {
+            status: if self.draining() { "draining" } else { "ok" }.to_string(),
+            queue_depth: self.queue.len(),
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+            workers: self.cfg.workers.max(1),
+            cache_entries: self.cache.len(),
+            completed: self.completed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Admit one submission and relay its frames back to the client.
+    fn handle_submit(
+        &self,
+        writer: &mut UnixStream,
+        job: JobSpec,
+        priority: u8,
+        stream: bool,
+    ) -> std::io::Result<()> {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        metrics().serve_jobs_submitted.inc();
+        let key = job.key();
+        let id = format!("job-{:06}", self.next_job.fetch_add(1, Ordering::Relaxed));
+
+        // Cache check at admission: an identical completed job answers
+        // instantly, bypassing the queue entirely.
+        if let Some(hit) = self.cache.get(&key) {
+            let resp = Response::JobResult {
+                job_id: id,
+                ok: true,
+                cache_hit: true,
+                preemptions: 0,
+                report_id: hit.report_id,
+                report_sha256: hit.report_sha256,
+                report: hit.report,
+                error: None,
+            };
+            return write_frame(writer, &resp.to_json());
+        }
+
+        if self.draining() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            metrics().serve_jobs_rejected.inc();
+            let resp = Response::Rejected { reason: "draining".into(), retry_after_ms: 500 };
+            return write_frame(writer, &resp.to_json());
+        }
+
+        let (reply, frames) = mpsc::channel();
+        let entry = QueuedJob {
+            id: id.clone(),
+            key: key.clone(),
+            spec: job,
+            priority,
+            stream,
+            resume: None,
+            preemptions: 0,
+            reply,
+        };
+        match self.queue.push(priority, entry) {
+            Ok(depth) => {
+                metrics().serve_queue_depth.set(depth as f64);
+                let resp = Response::Accepted { job_id: id, spec_sha256: key, queue_depth: depth };
+                write_frame(writer, &resp.to_json())?;
+                // Relay progress until the terminal result frame. recv()
+                // always terminates: requeue bypasses close, so executors
+                // drain every accepted entry even mid-shutdown.
+                for resp in frames {
+                    let terminal = matches!(resp, Response::JobResult { .. });
+                    write_frame(writer, &resp.to_json())?;
+                    if terminal {
+                        break;
+                    }
+                }
+                Ok(())
+            }
+            Err(full) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                metrics().serve_jobs_rejected.inc();
+                let resp = Response::Rejected {
+                    reason: format!("queue full ({} queued)", full.depth),
+                    retry_after_ms: 100 + 25 * full.depth as u64,
+                };
+                write_frame(writer, &resp.to_json())
+            }
+        }
+    }
+}
+
+/// A gateway running on its own thread — the embedded form used by tests
+/// and `qfpga loadgen`'s self-hosted mode.
+pub struct GatewayHandle {
+    gateway: Arc<Gateway>,
+    thread: JoinHandle<Result<ServeStats>>,
+}
+
+impl GatewayHandle {
+    /// Bind and start serving. The socket accepts connections as soon as
+    /// this returns.
+    pub fn spawn(cfg: ServeConfig) -> Result<GatewayHandle> {
+        let gateway = Gateway::new(cfg)?;
+        let g = Arc::clone(&gateway);
+        let thread = thread::spawn(move || g.run());
+        Ok(GatewayHandle { gateway, thread })
+    }
+
+    pub fn socket(&self) -> PathBuf {
+        self.gateway.cfg.socket.clone()
+    }
+
+    /// Ask the daemon to drain (returns immediately).
+    pub fn drain(&self) {
+        self.gateway.request_drain();
+    }
+
+    /// Live tallies (final ones come from [`GatewayHandle::join`]).
+    pub fn stats(&self) -> ServeStats {
+        self.gateway.stats()
+    }
+
+    /// Wait for the drain to finish and return the final tallies.
+    pub fn join(self) -> Result<ServeStats> {
+        self.thread
+            .join()
+            .map_err(|_| Error::Io(std::io::Error::other("gateway thread panicked")))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn temp_socket(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("qfpga-daemon-{tag}-{}.sock", std::process::id()))
+    }
+
+    /// The daemon polls the process-global drain flag; hold the shared
+    /// guard so the shutdown module's tests can't flip it mid-test.
+    fn flag_guard() -> std::sync::MutexGuard<'static, ()> {
+        let g = shutdown::TEST_FLAG_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        shutdown::reset();
+        g
+    }
+
+    fn roundtrip(stream: &mut UnixStream, req: &Request) -> Response {
+        write_frame(stream, &req.to_json()).unwrap();
+        let mut reader = FrameReader::new(stream.try_clone().unwrap());
+        let frame = reader.read_frame(&|| true).unwrap().unwrap();
+        Response::from_json(&frame).unwrap()
+    }
+
+    #[test]
+    fn healthz_then_drain_returns_stats() {
+        let _guard = flag_guard();
+        let cfg = ServeConfig::new(temp_socket("health"));
+        let handle = GatewayHandle::spawn(cfg).unwrap();
+        let mut conn = UnixStream::connect(handle.socket()).unwrap();
+        match roundtrip(&mut conn, &Request::Healthz) {
+            Response::Health { status, workers, completed, .. } => {
+                assert_eq!(status, "ok");
+                assert_eq!(workers, 2);
+                assert_eq!(completed, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        handle.drain();
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.submitted, 0);
+    }
+
+    #[test]
+    fn shutdown_frame_drains_the_daemon() {
+        let _guard = flag_guard();
+        let cfg = ServeConfig::new(temp_socket("shutdown"));
+        let handle = GatewayHandle::spawn(cfg).unwrap();
+        let mut conn = UnixStream::connect(handle.socket()).unwrap();
+        match roundtrip(&mut conn, &Request::Shutdown) {
+            Response::Health { status, .. } => assert_eq!(status, "draining"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.submitted, 0);
+    }
+
+    #[test]
+    fn garbage_frames_get_a_protocol_error() {
+        let _guard = flag_guard();
+        let cfg = ServeConfig::new(temp_socket("garbage"));
+        let handle = GatewayHandle::spawn(cfg).unwrap();
+        let mut conn = UnixStream::connect(handle.socket()).unwrap();
+        conn.write_all(b"{\"type\":\"warp-drive\"}\n").unwrap();
+        conn.flush().unwrap();
+        let mut reader = FrameReader::new(conn.try_clone().unwrap());
+        let frame = reader.read_frame(&|| true).unwrap().unwrap();
+        match Response::from_json(&frame).unwrap() {
+            Response::ProtocolError { message } => {
+                assert!(message.contains("warp-drive"), "{message}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        handle.drain();
+        handle.join().unwrap();
+    }
+}

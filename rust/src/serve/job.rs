@@ -1,0 +1,315 @@
+//! Gateway job specs: exactly the replayable run specs from
+//! [`crate::obs::manifest::RunManifest`] (train / fleet / mission), plus
+//! chunked execution with checkpoint-backed preemption.
+//!
+//! A job's cache key is the sha256 of its canonical spec JSON — the same
+//! bytes a manifest records as `spec_sha256` input, and the same specs
+//! `qfpga replay` proves deterministic. That is the whole soundness
+//! argument for the result cache: spec bytes → report bytes is a pure
+//! function for these three subcommands.
+
+use std::time::Instant;
+
+use crate::coordinator::mission::{MissionCheckpoint, MissionConfig, MissionRun};
+use crate::coordinator::telemetry::RoverProgress;
+use crate::coordinator::{scenario_table, ScenarioSpec};
+use crate::error::{Error, Result};
+use crate::experiment::{BackendFactory, Experiment, ExperimentReport};
+use crate::obs::manifest::json_sha256;
+use crate::report::Report;
+use crate::util::Json;
+
+/// One schedulable job — the three replayable run shapes.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    /// Single-rover training run (`qfpga train`). Preemptible when
+    /// fault-free: it executes as a resumable [`MissionRun`].
+    Train(MissionConfig),
+    /// Fleet run (`qfpga fleet --rovers N`), executed on the PR 5 worker
+    /// pool. Runs to completion once started.
+    Fleet { cfg: MissionConfig, rovers: usize },
+    /// Scenario campaign (`qfpga mission`, table S1). Runs to completion
+    /// once started.
+    Mission(ScenarioSpec),
+}
+
+/// Outcome of one execution slice of a job.
+pub enum JobStep {
+    /// The job finished; here is its report document.
+    Done(Json),
+    /// A higher-priority job needs the worker: the mission state at the
+    /// last episode boundary, resumable bit-exactly via
+    /// [`JobSpec::run_step`]'s `resume` argument.
+    Preempted(Box<MissionCheckpoint>),
+}
+
+impl JobSpec {
+    /// The manifest subcommand this job replays.
+    pub fn subcommand(&self) -> &'static str {
+        match self {
+            JobSpec::Train(_) => "train",
+            JobSpec::Fleet { .. } => "fleet",
+            JobSpec::Mission(_) => "mission",
+        }
+    }
+
+    /// `Report::id()` of the document this job produces.
+    pub fn report_id(&self) -> &'static str {
+        match self {
+            JobSpec::Train(_) | JobSpec::Fleet { .. } => "EXP",
+            JobSpec::Mission(_) => "S1",
+        }
+    }
+
+    /// The job's base seed (recorded in result frames and manifests).
+    pub fn seed(&self) -> u64 {
+        match self {
+            JobSpec::Train(cfg) | JobSpec::Fleet { cfg, .. } => cfg.seed,
+            JobSpec::Mission(spec) => spec.seed,
+        }
+    }
+
+    /// Can this job be checkpointed and requeued mid-run? Only fault-free
+    /// train jobs: [`MissionRun::checkpoint`] cannot serialize an SEU
+    /// injection stream, and fleet/mission runs span multiple missions.
+    pub fn preemptible(&self) -> bool {
+        matches!(self, JobSpec::Train(cfg) if cfg.fault.is_none())
+    }
+
+    /// One-line description for daemon logs.
+    pub fn describe(&self) -> String {
+        match self {
+            JobSpec::Train(cfg) => format!("train [{}]", cfg.describe()),
+            JobSpec::Fleet { cfg, rovers } => format!("fleet {rovers} × [{}]", cfg.describe()),
+            JobSpec::Mission(spec) => format!(
+                "mission [{}] {} {}",
+                spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(","),
+                spec.arch.as_str(),
+                spec.precision.as_str()
+            ),
+        }
+    }
+
+    /// Wire form: `{"kind": ..., "spec": ...}` where `spec` is exactly
+    /// the replayable spec a [`crate::obs::manifest::RunManifest`] embeds
+    /// for the same run (fleet = mission config + `rovers`).
+    pub fn to_json(&self) -> Json {
+        let (kind, spec) = match self {
+            JobSpec::Train(cfg) => ("train", cfg.to_json()),
+            JobSpec::Fleet { cfg, rovers } => {
+                let mut spec = cfg.to_json();
+                if let Json::Obj(map) = &mut spec {
+                    map.insert("rovers".into(), Json::Num(*rovers as f64));
+                }
+                ("fleet", spec)
+            }
+            JobSpec::Mission(spec) => ("mission", spec.to_json()),
+        };
+        Json::obj(vec![("kind", Json::Str(kind.into())), ("spec", spec)])
+    }
+
+    /// Inverse of [`JobSpec::to_json`].
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let kind = j.req_str("kind")?.to_string();
+        let spec = j
+            .get("spec")
+            .ok_or_else(|| Error::interface("job missing `spec`"))?;
+        Self::from_manifest(&kind, spec)
+    }
+
+    /// Build a job from a manifest-shaped (subcommand, spec) pair — shared
+    /// by the wire decoder and `qfpga replay`.
+    pub fn from_manifest(subcommand: &str, spec: &Json) -> Result<JobSpec> {
+        match subcommand {
+            "train" => Ok(JobSpec::Train(MissionConfig::from_json(spec)?)),
+            "fleet" => Ok(JobSpec::Fleet {
+                cfg: MissionConfig::from_json(spec)?,
+                rovers: spec.req_usize("rovers")?,
+            }),
+            "mission" => Ok(JobSpec::Mission(ScenarioSpec::from_json(spec)?)),
+            other => Err(Error::Config(format!(
+                "`{other}` specs cannot be scheduled: the run records host-measured \
+                 results (only train/fleet/mission are seed-deterministic end to end)"
+            ))),
+        }
+    }
+
+    /// Content-address of this job: sha256 of the canonical spec bytes.
+    /// Seeds live inside the spec, so (spec, seed) collisions are
+    /// impossible by construction.
+    pub fn key(&self) -> String {
+        json_sha256(&self.to_json())
+    }
+
+    /// Execute (a slice of) the job. `resume` continues a previously
+    /// preempted run bit-exactly; `preempt` is polled at episode-chunk
+    /// boundaries on preemptible jobs and, when it returns true, the job
+    /// checkpoints and yields [`JobStep::Preempted`]. Non-preemptible jobs
+    /// ignore `preempt` and always return [`JobStep::Done`].
+    pub fn run_step(
+        &self,
+        resume: Option<MissionCheckpoint>,
+        preempt: &dyn Fn() -> bool,
+        chunk: usize,
+        progress: &(dyn Fn(RoverProgress) + Sync),
+    ) -> Result<JobStep> {
+        match self {
+            JobSpec::Train(cfg) if self.preemptible() => {
+                let start = Instant::now();
+                let factory = BackendFactory::for_kind(cfg.backend)?;
+                let mut run = match resume {
+                    Some(ckpt) => MissionRun::restore(cfg, &factory, ckpt)?,
+                    None => MissionRun::new(cfg, &factory)?,
+                };
+                let episodes = cfg.episodes;
+                while !run.is_complete() {
+                    run.run_episodes(chunk.max(1), &mut |s| {
+                        progress(RoverProgress {
+                            rover: 0,
+                            episode: s.episode,
+                            episodes,
+                            reward: s.total_reward,
+                            epsilon: s.epsilon,
+                        });
+                    })?;
+                    if !run.is_complete() && preempt() {
+                        return Ok(JobStep::Preempted(Box::new(run.checkpoint()?)));
+                    }
+                }
+                let report = run.finish()?;
+                // same wrapper shape cmd_train produces, so the report
+                // hashes identically to a CLI run of the same spec
+                let doc = ExperimentReport {
+                    desc: cfg.describe(),
+                    rovers: vec![report],
+                    workers: 1,
+                    wall_seconds: start.elapsed().as_secs_f64(),
+                    interrupted: false,
+                }
+                .to_json();
+                Ok(JobStep::Done(doc))
+            }
+            JobSpec::Train(cfg) => {
+                // fault-injected train: not checkpointable, run whole
+                let doc = Experiment::from_mission(cfg).run_with_progress(progress)?.to_json();
+                Ok(JobStep::Done(doc))
+            }
+            JobSpec::Fleet { cfg, rovers } => {
+                let doc = Experiment::from_mission(cfg)
+                    .rovers(*rovers)
+                    .run_with_progress(progress)?
+                    .to_json();
+                Ok(JobStep::Done(doc))
+            }
+            JobSpec::Mission(spec) => Ok(JobStep::Done(scenario_table(spec)?.to_json())),
+        }
+    }
+
+    /// Run the whole job with no preemption (replay, tests).
+    pub fn run(&self, progress: &(dyn Fn(RoverProgress) + Sync)) -> Result<Json> {
+        match self.run_step(None, &|| false, usize::MAX, progress)? {
+            JobStep::Done(doc) => Ok(doc),
+            JobStep::Preempted(_) => unreachable!("preempt closure never fires"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvKind, Precision};
+    use crate::obs::manifest::report_sha256;
+
+    fn tiny_cfg() -> MissionConfig {
+        MissionConfig {
+            env: EnvKind::Simple,
+            precision: Precision::Float,
+            episodes: 6,
+            max_steps: 20,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn wire_form_round_trips_bit_exactly() {
+        let jobs = [
+            JobSpec::Train(tiny_cfg()),
+            JobSpec::Fleet { cfg: tiny_cfg(), rovers: 3 },
+            JobSpec::Mission(ScenarioSpec {
+                envs: vec![EnvKind::Crater],
+                episodes: 2,
+                max_steps: 10,
+                ..Default::default()
+            }),
+        ];
+        for job in &jobs {
+            let text = job.to_json().to_string();
+            let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text);
+            assert_eq!(back.key(), job.key());
+            assert_eq!(back.subcommand(), job.subcommand());
+        }
+    }
+
+    #[test]
+    fn keys_are_content_addresses() {
+        let a = JobSpec::Train(tiny_cfg());
+        let mut cfg = tiny_cfg();
+        cfg.seed = 12;
+        let b = JobSpec::Train(cfg);
+        assert_ne!(a.key(), b.key(), "seed is part of the content address");
+        assert_eq!(a.key(), JobSpec::Train(tiny_cfg()).key());
+        // a fleet of 1 is still a different job than a train
+        assert_ne!(a.key(), JobSpec::Fleet { cfg: tiny_cfg(), rovers: 1 }.key());
+    }
+
+    #[test]
+    fn non_replayable_subcommands_are_rejected() {
+        let err = JobSpec::from_manifest("sweep", &Json::obj(vec![])).unwrap_err();
+        assert!(err.to_string().contains("cannot be scheduled"), "{err}");
+    }
+
+    #[test]
+    fn preemptibility_rules() {
+        assert!(JobSpec::Train(tiny_cfg()).preemptible());
+        assert!(!JobSpec::Fleet { cfg: tiny_cfg(), rovers: 2 }.preemptible());
+        assert!(!JobSpec::Mission(ScenarioSpec::default()).preemptible());
+        let mut faulted = tiny_cfg();
+        faulted.fault = Some(crate::fault::FaultPlan {
+            rate: 1e-4,
+            mitigation: crate::fault::Mitigation::None,
+        });
+        assert!(!JobSpec::Train(faulted).preemptible());
+    }
+
+    #[test]
+    fn preempt_resume_equals_uninterrupted() {
+        let job = JobSpec::Train(tiny_cfg());
+        let baseline = job.run(&|_| {}).unwrap();
+
+        // preempt exactly once, at the first chunk boundary
+        let fired = std::sync::atomic::AtomicBool::new(false);
+        let once = || !fired.swap(true, std::sync::atomic::Ordering::SeqCst);
+        let ckpt = match job.run_step(None, &once, 2, &|_| {}).unwrap() {
+            JobStep::Preempted(c) => c,
+            JobStep::Done(_) => panic!("expected a preemption"),
+        };
+        let resumed = match job.run_step(Some(*ckpt), &|| false, 2, &|_| {}).unwrap() {
+            JobStep::Done(doc) => doc,
+            JobStep::Preempted(_) => panic!("preempt closure is off"),
+        };
+        // bit-exact on the deterministic projection (wall time differs)
+        assert_eq!(report_sha256(&resumed), report_sha256(&baseline));
+    }
+
+    #[test]
+    fn progress_streams_final_episode() {
+        let job = JobSpec::Train(tiny_cfg());
+        let seen = std::sync::Mutex::new(Vec::new());
+        job.run(&|p| seen.lock().unwrap().push(p)).unwrap();
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 6);
+        assert!(seen.last().unwrap().is_final());
+    }
+}

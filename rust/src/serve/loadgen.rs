@@ -1,0 +1,490 @@
+//! Gateway load generator + table G1.
+//!
+//! `qfpga loadgen` drives a gateway with a deterministic train/fleet/
+//! mission job mix in two phases — unique jobs first, then exact
+//! duplicates — so the cache-hit count is a *deterministic* column on a
+//! fresh daemon: `floor(jobs/2)` duplicates, every one a hit. Latency
+//! percentiles and sustained throughput are host-measured and tagged
+//! [`crate::report::TableRow::measured`], exactly like table B2's timing
+//! rows.
+//!
+//! Two modes:
+//! * **embedded** (no `--socket`): spawns an in-process
+//!   [`super::daemon::GatewayHandle`] per requested worker width — the
+//!   self-contained benchmark that produces G1's width sweep.
+//! * **external** (`--socket PATH`): drives an already-running daemon —
+//!   what the CI smoke job uses.
+
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::EnvKind;
+use crate::coordinator::mission::MissionConfig;
+use crate::coordinator::ScenarioSpec;
+use crate::error::{Error, Result};
+use crate::report::PaperTable;
+use crate::util::Json;
+
+use super::daemon::{GatewayHandle, ServeConfig};
+use super::job::JobSpec;
+use super::protocol::{write_frame, FrameReader, Request, Response};
+
+/// Give up after this many reject-retry rounds per job.
+const RETRY_LIMIT: usize = 50;
+
+/// Blocking NDJSON client for the gateway socket.
+pub struct Client {
+    writer: UnixStream,
+    reader: FrameReader<UnixStream>,
+}
+
+/// Terminal outcome of one submission as seen by a client.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: String,
+    pub ok: bool,
+    pub cache_hit: bool,
+    pub preemptions: u64,
+    pub report_id: String,
+    pub report_sha256: String,
+    pub report: Json,
+    pub error: Option<String>,
+}
+
+impl Client {
+    pub fn connect(path: &Path) -> Result<Client> {
+        let stream = UnixStream::connect(path).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("cannot connect to {}: {e}", path.display()),
+            ))
+        })?;
+        Ok(Client { writer: stream.try_clone()?, reader: FrameReader::new(stream) })
+    }
+
+    fn send(&mut self, req: &Request) -> Result<()> {
+        write_frame(&mut self.writer, &req.to_json())?;
+        Ok(())
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        let frame = self
+            .reader
+            .read_frame(&|| true)?
+            .ok_or_else(|| Error::interface("gateway closed the connection"))?;
+        Response::from_json(&frame)
+    }
+
+    /// One request, one response (healthz / metrics / shutdown).
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.read_response()
+    }
+
+    /// Submit a job and block until its terminal frame, retrying on
+    /// backpressure rejections after the daemon's hinted delay. Progress
+    /// frames (if `stream`) are passed to `on_progress`.
+    pub fn submit_and_wait(
+        &mut self,
+        job: &JobSpec,
+        priority: u8,
+        stream: bool,
+        on_progress: &mut dyn FnMut(&Response),
+    ) -> Result<JobOutcome> {
+        for _ in 0..RETRY_LIMIT {
+            self.send(&Request::Submit { job: job.clone(), priority, stream })?;
+            match self.read_response()? {
+                Response::Rejected { retry_after_ms, .. } => {
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.min(2_000)));
+                }
+                Response::Accepted { .. } => loop {
+                    match self.read_response()? {
+                        p @ Response::Progress { .. } => on_progress(&p),
+                        Response::JobResult {
+                            job_id,
+                            ok,
+                            cache_hit,
+                            preemptions,
+                            report_id,
+                            report_sha256,
+                            report,
+                            error,
+                        } => {
+                            return Ok(JobOutcome {
+                                job_id,
+                                ok,
+                                cache_hit,
+                                preemptions,
+                                report_id,
+                                report_sha256,
+                                report,
+                                error,
+                            })
+                        }
+                        other => {
+                            return Err(Error::interface(format!(
+                                "unexpected frame while waiting for result: {}",
+                                other.to_json()
+                            )))
+                        }
+                    }
+                },
+                // answered straight from the cache, no queue round-trip
+                Response::JobResult {
+                    job_id,
+                    ok,
+                    cache_hit,
+                    preemptions,
+                    report_id,
+                    report_sha256,
+                    report,
+                    error,
+                } => {
+                    return Ok(JobOutcome {
+                        job_id,
+                        ok,
+                        cache_hit,
+                        preemptions,
+                        report_id,
+                        report_sha256,
+                        report,
+                        error,
+                    })
+                }
+                other => {
+                    return Err(Error::interface(format!(
+                        "unexpected submit reply: {}",
+                        other.to_json()
+                    )))
+                }
+            }
+        }
+        Err(Error::Config(format!(
+            "job rejected {RETRY_LIMIT} times — daemon saturated or draining"
+        )))
+    }
+
+    /// Fetch the daemon's Prometheus metrics text.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.request(&Request::Metrics)? {
+            Response::MetricsText { prometheus } => Ok(prometheus),
+            other => Err(Error::interface(format!("unexpected reply: {}", other.to_json()))),
+        }
+    }
+
+    /// Ask the daemon to drain (the `shutdown` protocol verb).
+    pub fn shutdown_daemon(&mut self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Response::Health { .. } => Ok(()),
+            other => Err(Error::interface(format!("unexpected reply: {}", other.to_json()))),
+        }
+    }
+}
+
+/// Loadgen parameters (`qfpga loadgen --help`).
+#[derive(Debug, Clone)]
+pub struct LoadgenSpec {
+    /// Drive this running daemon; `None` = embedded width sweep.
+    pub socket: Option<PathBuf>,
+    /// Total submissions: `ceil(jobs/2)` unique + `floor(jobs/2)` dupes.
+    pub jobs: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+    /// Worker widths for the embedded sweep (ignored with `--socket`).
+    pub widths: Vec<usize>,
+    /// Episodes per train/fleet/mission job in the mix.
+    pub episodes: usize,
+    pub max_steps: usize,
+    /// Base seed; job `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for LoadgenSpec {
+    fn default() -> Self {
+        LoadgenSpec {
+            socket: None,
+            jobs: 12,
+            concurrency: 3,
+            widths: vec![1, 2, 4],
+            episodes: 3,
+            max_steps: 15,
+            seed: 7,
+        }
+    }
+}
+
+/// What a loadgen run produced: the G1 table plus the raw tallies the CI
+/// smoke job asserts on.
+pub struct LoadgenOutcome {
+    pub table: PaperTable,
+    /// Cache hits observed per pass (one entry per embedded width, or a
+    /// single entry in external mode) — deterministic on a fresh daemon.
+    pub hits_per_pass: Vec<u64>,
+    /// Daemon-side Prometheus text (external mode only).
+    pub prometheus: Option<String>,
+}
+
+/// The deterministic job mix: `unique` distinct specs cycling
+/// train, train, train, fleet(×2 rovers), mission(crater), with seeds
+/// `seed + i`. Two mix calls with equal arguments are bit-identical —
+/// that's what makes resubmission a guaranteed cache hit.
+pub fn job_mix(unique: usize, episodes: usize, max_steps: usize, seed: u64) -> Vec<JobSpec> {
+    (0..unique)
+        .map(|i| {
+            let cfg = MissionConfig {
+                episodes,
+                max_steps,
+                seed: seed + i as u64,
+                ..Default::default()
+            };
+            match i % 5 {
+                4 => JobSpec::Mission(ScenarioSpec {
+                    envs: vec![EnvKind::Crater],
+                    episodes,
+                    max_steps,
+                    seed: seed + i as u64,
+                    ..Default::default()
+                }),
+                3 => JobSpec::Fleet { cfg, rovers: 2 },
+                _ => JobSpec::Train(cfg),
+            }
+        })
+        .collect()
+}
+
+struct PassStats {
+    latencies_ms: Vec<f64>,
+    wall_seconds: f64,
+    cache_hits: u64,
+}
+
+/// Push `jobs` through the gateway on `concurrency` connections; collect
+/// per-job latency and the observed hit count.
+fn run_pass(socket: &Path, jobs: &[JobSpec], concurrency: usize) -> Result<PassStats> {
+    let next = AtomicUsize::new(0);
+    let hits = AtomicU64::new(0);
+    let latencies = Mutex::new(Vec::with_capacity(jobs.len()));
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            s.spawn(|| {
+                let mut client = match Client::connect(socket) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        failures.lock().unwrap().push(e.to_string());
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    match client.submit_and_wait(&jobs[i], 1, false, &mut |_| {}) {
+                        Ok(out) if out.ok => {
+                            if out.cache_hit {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let ms = t0.elapsed().as_secs_f64() * 1e3;
+                            latencies.lock().unwrap().push(ms);
+                        }
+                        Ok(out) => failures.lock().unwrap().push(format!(
+                            "{} failed: {}",
+                            out.job_id,
+                            out.error.unwrap_or_default()
+                        )),
+                        Err(e) => failures.lock().unwrap().push(e.to_string()),
+                    }
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    if let Some(first) = failures.first() {
+        return Err(Error::Config(format!(
+            "{} of {} jobs failed; first: {first}",
+            failures.len(),
+            jobs.len()
+        )));
+    }
+    Ok(PassStats {
+        latencies_ms: latencies.into_inner().unwrap(),
+        wall_seconds: start.elapsed().as_secs_f64(),
+        cache_hits: hits.load(Ordering::Relaxed),
+    })
+}
+
+/// Nearest-rank percentile (p in 0..=100) of an unsorted sample.
+fn percentile(sample: &[f64], p: f64) -> f64 {
+    if sample.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = sample.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Drive one daemon through both phases and append its six G1 rows.
+fn measure_pass(
+    table: PaperTable,
+    prefix: &str,
+    socket: &Path,
+    spec: &LoadgenSpec,
+) -> Result<(PaperTable, u64)> {
+    let unique = job_mix(spec.jobs.div_ceil(2).max(1), spec.episodes, spec.max_steps, spec.seed);
+    let dupes: Vec<JobSpec> = unique.iter().take(spec.jobs / 2).cloned().collect();
+
+    // phase 1: unique jobs; the scope join is the phase barrier, so every
+    // phase-2 duplicate finds its twin already cached on a fresh daemon
+    let first = run_pass(socket, &unique, spec.concurrency)?;
+    let second = if dupes.is_empty() {
+        PassStats { latencies_ms: Vec::new(), wall_seconds: 0.0, cache_hits: 0 }
+    } else {
+        run_pass(socket, &dupes, spec.concurrency)?
+    };
+
+    let completed = (first.latencies_ms.len() + second.latencies_ms.len()) as f64;
+    let hits = first.cache_hits + second.cache_hits;
+    let all_ms: Vec<f64> = first
+        .latencies_ms
+        .iter()
+        .chain(&second.latencies_ms)
+        .copied()
+        .collect();
+    let wall = first.wall_seconds + second.wall_seconds;
+    let table = table
+        .row(format!("{prefix} jobs completed"), completed, None)
+        .row(format!("{prefix} cache hits"), hits as f64, None)
+        .row(format!("{prefix} cache hit rate"), hits as f64 / completed.max(1.0), None)
+        .measured_row(format!("{prefix} p50 job latency (ms)"), percentile(&all_ms, 50.0), None)
+        .measured_row(format!("{prefix} p99 job latency (ms)"), percentile(&all_ms, 99.0), None)
+        .measured_row(format!("{prefix} sustained jobs/s"), completed / wall.max(1e-9), None);
+    Ok((table, hits))
+}
+
+/// Embedded temp sockets must be unique per pass even within one process.
+static PASS_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn temp_socket() -> PathBuf {
+    let n = PASS_COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("qfpga-loadgen-{}-{n}.sock", std::process::id()))
+}
+
+/// Run the load test and build table G1.
+pub fn run_loadgen(spec: &LoadgenSpec) -> Result<LoadgenOutcome> {
+    if spec.jobs == 0 {
+        return Err(Error::Config("loadgen needs --jobs >= 1".into()));
+    }
+    let mut table = PaperTable::new(
+        "G1",
+        format!(
+            "Gateway load test ({} jobs = {} unique + {} duplicate, concurrency {}, \
+             train/fleet/mission mix, {} episodes x {} steps)",
+            spec.jobs,
+            spec.jobs.div_ceil(2),
+            spec.jobs / 2,
+            spec.concurrency,
+            spec.episodes,
+            spec.max_steps
+        ),
+        "mixed",
+    );
+    let mut hits_per_pass = Vec::new();
+    let mut prometheus = None;
+
+    match &spec.socket {
+        Some(path) => {
+            let (t, hits) = measure_pass(table, "external", path, spec)?;
+            table = t;
+            hits_per_pass.push(hits);
+            prometheus = Some(Client::connect(path)?.metrics_text()?);
+        }
+        None => {
+            for &w in &spec.widths {
+                let mut cfg = ServeConfig::new(temp_socket());
+                cfg.workers = w.max(1);
+                // headroom so the benchmark measures latency, not rejects
+                cfg.queue_capacity = spec.jobs + 4;
+                let handle = GatewayHandle::spawn(cfg)?;
+                let socket = handle.socket();
+                let measured = measure_pass(table, &format!("W={w}"), &socket, spec);
+                handle.drain();
+                let stats = handle.join()?;
+                let (t, hits) = measured?;
+                debug_assert_eq!(stats.cache_hits, hits);
+                table = t;
+                hits_per_pass.push(hits);
+            }
+        }
+    }
+
+    table = table.note(
+        "completed/hits/hit-rate columns are deterministic on a fresh daemon \
+         (duplicates always hit the content-addressed cache); latency and jobs/s \
+         rows are measured on this host. Regenerate: qfpga loadgen --jobs N \
+         --concurrency C [--socket PATH | --widths 1,2,4] --json g1.json",
+    );
+    Ok(LoadgenOutcome { table, hits_per_pass, prometheus })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 50.0), 20.0);
+        assert_eq!(percentile(&xs, 99.0), 40.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn job_mix_is_deterministic_and_mixed() {
+        let a = job_mix(6, 3, 10, 7);
+        let b = job_mix(6, 3, 10, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key(), y.key());
+        }
+        let kinds: Vec<&str> = a.iter().map(|j| j.subcommand()).collect();
+        assert_eq!(kinds, ["train", "train", "train", "fleet", "mission", "train"]);
+        // seeds make every job a distinct content address
+        let mut keys: Vec<String> = a.iter().map(|j| j.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 6);
+    }
+
+    #[test]
+    fn embedded_sweep_hits_are_deterministic() {
+        let _guard = crate::util::shutdown::TEST_FLAG_GUARD
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::util::shutdown::reset();
+        let spec = LoadgenSpec {
+            jobs: 4,
+            concurrency: 2,
+            widths: vec![1, 2],
+            episodes: 2,
+            max_steps: 8,
+            ..Default::default()
+        };
+        let out = run_loadgen(&spec).unwrap();
+        // floor(4/2) duplicates hit on each fresh daemon
+        assert_eq!(out.hits_per_pass, vec![2, 2]);
+        let doc = out.table.to_json();
+        let rows = doc.req_arr("rows").unwrap();
+        assert_eq!(rows.len(), 12, "6 rows per width");
+        assert_eq!(rows[2].req_str("label").unwrap(), "W=1 cache hit rate");
+        assert_eq!(rows[2].req_f64("ours").unwrap(), 0.5);
+        assert!(rows[3].get("measured").is_some(), "latency rows are tagged");
+        assert!(rows[0].get("measured").is_none(), "count rows are not");
+    }
+}

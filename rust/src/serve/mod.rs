@@ -1,0 +1,88 @@
+//! `qfpga serve` — the mission gateway daemon.
+//!
+//! A ground-segment (or rover-side) job server: clients submit the same
+//! replayable run specs that [`crate::obs::manifest::RunManifest`] records
+//! (train / fleet / mission), the daemon executes them on a bounded
+//! priority queue with worker threads, streams per-episode
+//! [`crate::coordinator::RoverProgress`] telemetry, answers repeats from a
+//! content-addressed result cache, and drains gracefully on SIGTERM.
+//!
+//! # Wire protocol
+//!
+//! Newline-delimited JSON over a unix socket: each frame is one canonical
+//! JSON object (sorted keys — exactly what [`crate::util::Json`] prints)
+//! terminated by `\n`. Requests carry a `type` tag:
+//!
+//! | request | fields | reply |
+//! |---|---|---|
+//! | `submit` | `job`, `priority` (0–9, default 1), `stream` (bool) | `accepted` → `progress`* → `result`, or `rejected`, or immediate `result` on a cache hit |
+//! | `healthz` | — | `health` |
+//! | `metrics` | — | `metrics` (Prometheus text) |
+//! | `shutdown` | — | `health` (status `draining`), then the daemon drains |
+//!
+//! The `job` object is `{"kind": "train"|"fleet"|"mission", "spec": ...}`
+//! where `spec` is byte-identical to the manifest spec `qfpga replay`
+//! re-runs — see [`job::JobSpec`]. Response frames:
+//!
+//! * `accepted` — `job_id`, `spec_sha256` (the cache key), `queue_depth`.
+//! * `rejected` — `reason`, `retry_after_ms` (backpressure hint; grows
+//!   with queue depth).
+//! * `progress` — `job_id` plus the flat [`crate::coordinator::RoverProgress`]
+//!   fields, throttled to every 5th episode plus the final one.
+//! * `result` — `job_id`, `ok`, `cache_hit`, `preemptions`, `report_id`,
+//!   `report_sha256` (deterministic projection hash), `report` (the full
+//!   document), `error` (only when `ok` is false).
+//! * `health` — `status` (`ok`/`draining`), `queue_depth`, `in_flight`,
+//!   `workers`, `cache_entries`, `completed`.
+//! * `error` — protocol-level failure (unparseable or unknown frame).
+//!
+//! # Guarantees
+//!
+//! * **Determinism**: a job's report depends only on its spec bytes (the
+//!   PR 7 replay property), so the cache may answer any resubmission with
+//!   the recorded document — bit-identical, `cache_hit: true`.
+//! * **Preemption without loss**: a fault-free train job yields its worker
+//!   to a strictly higher-priority submission at an episode-chunk
+//!   boundary via [`crate::coordinator::MissionCheckpoint`]; the resumed
+//!   run's report hashes identically to an uninterrupted one.
+//! * **Drain**: SIGTERM/SIGINT (or a `shutdown` frame) stops admissions;
+//!   every accepted job still runs to its terminal `result` frame before
+//!   the daemon exits 0 and unlinks the socket.
+//!
+//! # Example
+//!
+//! ```
+//! use qfpga::coordinator::MissionConfig;
+//! use qfpga::serve::{Client, GatewayHandle, JobSpec, ServeConfig};
+//!
+//! let socket = std::env::temp_dir().join(format!("qfpga-doc-{}.sock", std::process::id()));
+//! let gateway = GatewayHandle::spawn(ServeConfig::new(&socket)).unwrap();
+//!
+//! let mut client = Client::connect(&gateway.socket()).unwrap();
+//! let job = JobSpec::Train(MissionConfig { episodes: 2, max_steps: 8, ..Default::default() });
+//! let first = client.submit_and_wait(&job, 1, false, &mut |_| {}).unwrap();
+//! assert!(first.ok && !first.cache_hit);
+//!
+//! // identical spec → answered from the cache, bit-identical report
+//! let again = client.submit_and_wait(&job, 1, false, &mut |_| {}).unwrap();
+//! assert!(again.cache_hit);
+//! assert_eq!(again.report.to_string(), first.report.to_string());
+//!
+//! gateway.drain();
+//! let stats = gateway.join().unwrap();
+//! assert_eq!(stats.cache_hits, 1);
+//! ```
+
+pub mod cache;
+pub mod daemon;
+pub mod job;
+pub mod loadgen;
+pub mod protocol;
+pub mod queue;
+
+pub use cache::{CachedResult, ResultCache};
+pub use daemon::{Gateway, GatewayHandle, ServeConfig, ServeStats};
+pub use job::{JobSpec, JobStep};
+pub use loadgen::{job_mix, run_loadgen, Client, JobOutcome, LoadgenOutcome, LoadgenSpec};
+pub use protocol::{Request, Response};
+pub use queue::{JobQueue, QueueFull};

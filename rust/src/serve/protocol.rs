@@ -1,0 +1,475 @@
+//! The gateway wire protocol: newline-delimited canonical JSON frames.
+//!
+//! One request or response per line, each a single JSON object carrying a
+//! `type` tag. Canonical form (sorted keys, compact separators — what
+//! [`Json`]'s `Display` prints) means a frame re-serializes to the exact
+//! bytes it was parsed from, which the property tests pin down. See the
+//! [`crate::serve`] module docs for the full frame-by-frame reference.
+
+use std::io::{self, BufRead, Write};
+
+use crate::coordinator::telemetry::RoverProgress;
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+use super::job::JobSpec;
+
+/// Default priority class for submissions that do not name one.
+pub const DEFAULT_PRIORITY: u8 = 1;
+/// Highest accepted priority class.
+pub const MAX_PRIORITY: u8 = 9;
+
+/// Client → daemon frames.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Submit a job. `stream` asks for progress frames before the result.
+    Submit {
+        job: JobSpec,
+        priority: u8,
+        stream: bool,
+    },
+    /// Liveness + queue occupancy probe.
+    Healthz,
+    /// Prometheus exposition of the full metrics registry.
+    Metrics,
+    /// Ask the daemon to drain and exit (same path as SIGTERM).
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { job, priority, stream } => Json::obj(vec![
+                ("type", Json::Str("submit".into())),
+                ("job", job.to_json()),
+                ("priority", Json::Num(*priority as f64)),
+                ("stream", Json::Bool(*stream)),
+            ]),
+            Request::Healthz => Json::obj(vec![("type", Json::Str("healthz".into()))]),
+            Request::Metrics => Json::obj(vec![("type", Json::Str("metrics".into()))]),
+            Request::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        match j.req_str("type")? {
+            "submit" => {
+                let job = JobSpec::from_json(
+                    j.get("job").ok_or_else(|| Error::interface("submit missing `job`"))?,
+                )?;
+                let priority = match j.get("priority") {
+                    Some(p) => {
+                        let p = p
+                            .as_f64()
+                            .ok_or_else(|| Error::interface("priority must be a number"))?;
+                        if !(0.0..=MAX_PRIORITY as f64).contains(&p) || p.fract() != 0.0 {
+                            return Err(Error::interface(format!(
+                                "priority must be an integer in 0..={MAX_PRIORITY}, got {p}"
+                            )));
+                        }
+                        p as u8
+                    }
+                    None => DEFAULT_PRIORITY,
+                };
+                let stream = matches!(j.get("stream"), Some(Json::Bool(true)));
+                Ok(Request::Submit { job, priority, stream })
+            }
+            "healthz" => Ok(Request::Healthz),
+            "metrics" => Ok(Request::Metrics),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::interface(format!("unknown request type `{other}`"))),
+        }
+    }
+}
+
+/// Daemon → client frames.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// The job was admitted to the queue.
+    Accepted {
+        job_id: String,
+        spec_sha256: String,
+        queue_depth: usize,
+    },
+    /// Backpressure: try again after the hinted delay.
+    Rejected { reason: String, retry_after_ms: u64 },
+    /// One streamed progress sample (only when the submit set `stream`).
+    Progress { job_id: String, sample: RoverProgress },
+    /// Terminal frame for a submission.
+    JobResult {
+        job_id: String,
+        ok: bool,
+        cache_hit: bool,
+        /// Times this job was checkpointed + requeued for a higher-
+        /// priority job before completing.
+        preemptions: u64,
+        report_id: String,
+        report_sha256: String,
+        /// The full report document (`Json::Null` when `ok` is false).
+        report: Json,
+        /// Present exactly when `ok` is false.
+        error: Option<String>,
+    },
+    /// Answer to [`Request::Healthz`].
+    Health {
+        status: String,
+        queue_depth: usize,
+        in_flight: usize,
+        workers: usize,
+        cache_entries: usize,
+        completed: u64,
+    },
+    /// Answer to [`Request::Metrics`]: Prometheus text exposition.
+    MetricsText { prometheus: String },
+    /// Protocol-level failure (unparseable frame, bad spec).
+    ProtocolError { message: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Accepted { job_id, spec_sha256, queue_depth } => Json::obj(vec![
+                ("type", Json::Str("accepted".into())),
+                ("job_id", Json::Str(job_id.clone())),
+                ("spec_sha256", Json::Str(spec_sha256.clone())),
+                ("queue_depth", Json::Num(*queue_depth as f64)),
+            ]),
+            Response::Rejected { reason, retry_after_ms } => Json::obj(vec![
+                ("type", Json::Str("rejected".into())),
+                ("reason", Json::Str(reason.clone())),
+                ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+            ]),
+            Response::Progress { job_id, sample } => {
+                let mut doc = sample.to_json();
+                if let Json::Obj(map) = &mut doc {
+                    map.insert("type".into(), Json::Str("progress".into()));
+                    map.insert("job_id".into(), Json::Str(job_id.clone()));
+                }
+                doc
+            }
+            Response::JobResult {
+                job_id,
+                ok,
+                cache_hit,
+                preemptions,
+                report_id,
+                report_sha256,
+                report,
+                error,
+            } => {
+                let mut fields = vec![
+                    ("type", Json::Str("result".into())),
+                    ("job_id", Json::Str(job_id.clone())),
+                    ("ok", Json::Bool(*ok)),
+                    ("cache_hit", Json::Bool(*cache_hit)),
+                    ("preemptions", Json::Num(*preemptions as f64)),
+                    ("report_id", Json::Str(report_id.clone())),
+                    ("report_sha256", Json::Str(report_sha256.clone())),
+                    ("report", report.clone()),
+                ];
+                if let Some(e) = error {
+                    fields.push(("error", Json::Str(e.clone())));
+                }
+                Json::obj(fields)
+            }
+            Response::Health {
+                status,
+                queue_depth,
+                in_flight,
+                workers,
+                cache_entries,
+                completed,
+            } => Json::obj(vec![
+                ("type", Json::Str("health".into())),
+                ("status", Json::Str(status.clone())),
+                ("queue_depth", Json::Num(*queue_depth as f64)),
+                ("in_flight", Json::Num(*in_flight as f64)),
+                ("workers", Json::Num(*workers as f64)),
+                ("cache_entries", Json::Num(*cache_entries as f64)),
+                ("completed", Json::Num(*completed as f64)),
+            ]),
+            Response::MetricsText { prometheus } => Json::obj(vec![
+                ("type", Json::Str("metrics".into())),
+                ("prometheus", Json::Str(prometheus.clone())),
+            ]),
+            Response::ProtocolError { message } => Json::obj(vec![
+                ("type", Json::Str("error".into())),
+                ("message", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        match j.req_str("type")? {
+            "accepted" => Ok(Response::Accepted {
+                job_id: j.req_str("job_id")?.to_string(),
+                spec_sha256: j.req_str("spec_sha256")?.to_string(),
+                queue_depth: j.req_usize("queue_depth")?,
+            }),
+            "rejected" => Ok(Response::Rejected {
+                reason: j.req_str("reason")?.to_string(),
+                retry_after_ms: j.req_f64("retry_after_ms")? as u64,
+            }),
+            "progress" => Ok(Response::Progress {
+                job_id: j.req_str("job_id")?.to_string(),
+                sample: RoverProgress::from_json(j)?,
+            }),
+            "result" => Ok(Response::JobResult {
+                job_id: j.req_str("job_id")?.to_string(),
+                ok: matches!(j.get("ok"), Some(Json::Bool(true))),
+                cache_hit: matches!(j.get("cache_hit"), Some(Json::Bool(true))),
+                preemptions: j.req_f64("preemptions")? as u64,
+                report_id: j.req_str("report_id")?.to_string(),
+                report_sha256: j.req_str("report_sha256")?.to_string(),
+                report: j
+                    .get("report")
+                    .cloned()
+                    .ok_or_else(|| Error::interface("result missing `report`"))?,
+                error: j.get("error").and_then(|e| e.as_str()).map(String::from),
+            }),
+            "health" => Ok(Response::Health {
+                status: j.req_str("status")?.to_string(),
+                queue_depth: j.req_usize("queue_depth")?,
+                in_flight: j.req_usize("in_flight")?,
+                workers: j.req_usize("workers")?,
+                cache_entries: j.req_usize("cache_entries")?,
+                completed: j.req_f64("completed")? as u64,
+            }),
+            "metrics" => Ok(Response::MetricsText {
+                prometheus: j.req_str("prometheus")?.to_string(),
+            }),
+            "error" => Ok(Response::ProtocolError {
+                message: j.req_str("message")?.to_string(),
+            }),
+            other => Err(Error::interface(format!("unknown response type `{other}`"))),
+        }
+    }
+}
+
+/// Write one frame: canonical JSON + `\n`, flushed (a frame is a unit of
+/// conversation; buffering across frames would deadlock request/reply).
+pub fn write_frame(w: &mut impl Write, doc: &Json) -> io::Result<()> {
+    writeln!(w, "{doc}")?;
+    w.flush()
+}
+
+/// Incremental NDJSON frame reader tolerant of read timeouts.
+///
+/// The daemon sets a read timeout on connections so it can observe drain
+/// requests; a timeout can therefore split one line across several
+/// `read_line` calls. The buffer persists across calls, so partial bytes
+/// are never lost — a frame completes whenever the buffer gains its `\n`.
+pub struct FrameReader<R: io::Read> {
+    reader: io::BufReader<R>,
+    buf: String,
+}
+
+impl<R: io::Read> FrameReader<R> {
+    pub fn new(inner: R) -> FrameReader<R> {
+        FrameReader { reader: io::BufReader::new(inner), buf: String::new() }
+    }
+
+    /// Read the next frame. Returns `Ok(None)` on clean EOF or when
+    /// `keep_waiting` answers false after a read timeout
+    /// (`WouldBlock`/`TimedOut`); any other IO or parse failure is an
+    /// error.
+    pub fn read_frame(&mut self, keep_waiting: &dyn Fn() -> bool) -> Result<Option<Json>> {
+        loop {
+            if let Some(pos) = self.buf.find('\n') {
+                let line: String = self.buf.drain(..=pos).collect();
+                let line = line.trim();
+                if line.is_empty() {
+                    continue; // blank lines between frames are tolerated
+                }
+                return Ok(Some(Json::parse(line)?));
+            }
+            match self.reader.read_line(&mut self.buf) {
+                Ok(0) => {
+                    let tail = self.buf.trim();
+                    if tail.is_empty() {
+                        return Ok(None);
+                    }
+                    // torn final frame without trailing newline: parse it
+                    let doc = Json::parse(tail)?;
+                    self.buf.clear();
+                    return Ok(Some(doc));
+                }
+                Ok(_) => {}
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    if !keep_waiting() {
+                        return Ok(None);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvKind, Precision};
+    use crate::coordinator::mission::MissionConfig;
+    use crate::coordinator::ScenarioSpec;
+    use crate::util::Rng;
+
+    fn arb_job(rng: &mut Rng) -> JobSpec {
+        let cfg = MissionConfig {
+            env: *pick(rng, &EnvKind::all()),
+            precision: *pick(rng, &[Precision::Float, Precision::Fixed]),
+            episodes: rng.range(1, 50),
+            max_steps: rng.range(5, 80),
+            seed: rng.next_u64() % 1000,
+            batch: rng.range(1, 8),
+            ..Default::default()
+        };
+        match rng.below(3) {
+            0 => JobSpec::Train(cfg),
+            1 => JobSpec::Fleet { cfg, rovers: rng.range(1, 6) },
+            _ => JobSpec::Mission(ScenarioSpec {
+                envs: vec![*pick(rng, &EnvKind::all())],
+                episodes: rng.range(1, 20),
+                max_steps: rng.range(5, 40),
+                seed: rng.next_u64() % 1000,
+                ..Default::default()
+            }),
+        }
+    }
+
+    fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+        &xs[rng.below(xs.len())]
+    }
+
+    fn arb_progress(rng: &mut Rng) -> RoverProgress {
+        RoverProgress {
+            rover: rng.below(8),
+            episode: rng.below(100),
+            episodes: rng.range(100, 200),
+            reward: rng.f32_range(-5.0, 5.0),
+            epsilon: rng.f32_range(0.0, 1.0),
+        }
+    }
+
+    /// serialize → parse → serialize must be the identity on bytes.
+    fn assert_fixed_point(doc: &Json) {
+        let text = doc.to_string();
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
+    fn request_frames_round_trip_property() {
+        let mut rng = Rng::seeded(0x5EEDED);
+        for case in 0..100 {
+            let req = match rng.below(4) {
+                0 | 1 => Request::Submit {
+                    job: arb_job(&mut rng),
+                    priority: rng.below(10) as u8,
+                    stream: rng.chance(0.5),
+                },
+                2 => Request::Healthz,
+                _ => match rng.below(2) {
+                    0 => Request::Metrics,
+                    _ => Request::Shutdown,
+                },
+            };
+            let text = req.to_json().to_string();
+            let back = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "case {case}");
+            assert_fixed_point(&req.to_json());
+        }
+    }
+
+    #[test]
+    fn response_frames_round_trip_property() {
+        let mut rng = Rng::seeded(0xCAB1E);
+        for case in 0..100 {
+            let resp = match rng.below(7) {
+                0 => Response::Accepted {
+                    job_id: format!("job-{:06}", rng.below(1_000_000)),
+                    spec_sha256: format!("{:064x}", rng.next_u64()),
+                    queue_depth: rng.below(64),
+                },
+                1 => Response::Rejected {
+                    reason: "queue full".into(),
+                    retry_after_ms: rng.next_u64() % 10_000,
+                },
+                2 => Response::Progress {
+                    job_id: "job-000001".into(),
+                    sample: arb_progress(&mut rng),
+                },
+                3 => Response::JobResult {
+                    job_id: "job-000002".into(),
+                    ok: rng.chance(0.8),
+                    cache_hit: rng.chance(0.3),
+                    preemptions: rng.next_u64() % 4,
+                    report_id: "EXP".into(),
+                    report_sha256: format!("{:064x}", rng.next_u64()),
+                    report: Json::obj(vec![("x", Json::Num(rng.f64()))]),
+                    error: if rng.chance(0.2) { Some("boom".into()) } else { None },
+                },
+                4 => Response::Health {
+                    status: if rng.chance(0.5) { "ok".into() } else { "draining".into() },
+                    queue_depth: rng.below(64),
+                    in_flight: rng.below(8),
+                    workers: rng.range(1, 8),
+                    cache_entries: rng.below(100),
+                    completed: rng.next_u64() % 1000,
+                },
+                5 => Response::MetricsText {
+                    prometheus: "# HELP x y\n# TYPE x counter\nx 1\n".into(),
+                },
+                _ => Response::ProtocolError { message: "bad frame".into() },
+            };
+            let text = resp.to_json().to_string();
+            let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "case {case}");
+            assert_fixed_point(&resp.to_json());
+        }
+    }
+
+    #[test]
+    fn priority_is_validated() {
+        let bad = r#"{"job":{"kind":"mission","spec":{"arch":"mlp","batch":1,"envs":["simple"],"episodes":1,"max_steps":5,"precision":"fixed","seed":7}},"priority":12,"type":"submit"}"#;
+        assert!(Request::from_json(&Json::parse(bad).unwrap()).is_err());
+        let frac = bad.replace("12", "1.5");
+        assert!(Request::from_json(&Json::parse(&frac).unwrap()).is_err());
+        let ok = bad.replace("12", "9");
+        assert!(Request::from_json(&Json::parse(&ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn unknown_types_error_cleanly() {
+        let j = Json::obj(vec![("type", Json::Str("warp".into()))]);
+        assert!(Request::from_json(&j).is_err());
+        assert!(Response::from_json(&j).is_err());
+        assert!(Request::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn frame_reader_splits_lines_and_handles_eof() {
+        let text = "{\"type\":\"healthz\"}\n\n{\"type\":\"metrics\"}\n{\"type\":\"shutdown\"}";
+        let mut r = FrameReader::new(text.as_bytes());
+        let keep = || true;
+        let a = r.read_frame(&keep).unwrap().unwrap();
+        assert_eq!(a.req_str("type").unwrap(), "healthz");
+        let b = r.read_frame(&keep).unwrap().unwrap();
+        assert_eq!(b.req_str("type").unwrap(), "metrics");
+        // final frame lacks its newline (torn write at EOF) — still parsed
+        let c = r.read_frame(&keep).unwrap().unwrap();
+        assert_eq!(c.req_str("type").unwrap(), "shutdown");
+        assert!(r.read_frame(&keep).unwrap().is_none());
+    }
+
+    #[test]
+    fn write_frame_is_one_line_of_canonical_json() {
+        let mut out = Vec::new();
+        write_frame(&mut out, &Request::Healthz.to_json()).unwrap();
+        assert_eq!(String::from_utf8(out).unwrap(), "{\"type\":\"healthz\"}\n");
+    }
+}

@@ -1,0 +1,223 @@
+//! Bounded priority job queue with backpressure.
+//!
+//! The gateway's admission point: `push` is bounded (callers get a
+//! [`QueueFull`] to turn into a reject-with-retry-after frame), `pop`
+//! blocks until work or close, and `requeue` re-admits a preempted job
+//! *above* the capacity bound and the closed flag — an accepted job must
+//! never be lost to its own preemption or to a drain race.
+//!
+//! Ordering is strict: higher priority first, FIFO (submission sequence)
+//! within a priority class. Because every worker pulls from this one
+//! ordered queue, a given submission order reaches the executors in a
+//! deterministic order at any worker width — the queue is what makes the
+//! gateway's determinism test (same jobs, any `--workers`) hold.
+
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+
+/// Push rejection: the queue is at capacity (or closed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull {
+    /// Depth observed at rejection time (feeds the retry-after hint).
+    pub depth: usize,
+}
+
+/// One queued entry: priority class, admission sequence, payload.
+struct Entry<T> {
+    priority: u8,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher priority wins; within a class, *smaller* seq
+        // (earlier admission) must surface first, so compare reversed
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Inner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// Bounded, closable, priority-ordered MPMC queue (mutex + condvar — the
+/// queue guards milliseconds-long jobs, not nanosecond ops).
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(capacity: usize) -> JobQueue<T> {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit a job. Returns the resulting depth, or [`QueueFull`] when at
+    /// capacity or closed (a draining gateway admits nothing new).
+    pub fn push(&self, priority: u8, item: T) -> Result<usize, QueueFull> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.heap.len() >= self.capacity {
+            return Err(QueueFull { depth: inner.heap.len() });
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.heap.push(Entry { priority, seq, item });
+        let depth = inner.heap.len();
+        drop(inner);
+        self.available.notify_one();
+        Ok(depth)
+    }
+
+    /// Re-admit a preempted job, bypassing capacity *and* the closed flag:
+    /// the job was already accepted once and its client is waiting — it
+    /// must drain, never drop. Keeps the original admission order within
+    /// its class (pass the entry's original `seq` via `push` semantics is
+    /// not needed: a preempted job resumes at the same priority and a
+    /// fresh seq, i.e. behind peers admitted meanwhile — documented
+    /// fairness, not starvation).
+    pub fn requeue(&self, priority: u8, item: T) {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.heap.push(Entry { priority, seq, item });
+        drop(inner);
+        self.available.notify_one();
+    }
+
+    /// Block until an entry is available (highest priority, FIFO within
+    /// the class) or the queue is closed *and* empty (→ `None`).
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(e) = inner.heap.pop() {
+                return Some(e.item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.available.wait(inner).unwrap();
+        }
+    }
+
+    /// Stop admitting; wake every blocked `pop` so workers can drain the
+    /// remainder and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is any queued entry strictly higher-priority than `p`? The
+    /// pull-based preemption probe: a running preemptible job checks this
+    /// between episode chunks and yields its worker when true.
+    pub fn has_higher_priority_than(&self, p: u8) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.heap.peek().is_some_and(|e| e.priority > p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_then_fifo_order() {
+        let q = JobQueue::new(16);
+        q.push(1, "a").unwrap();
+        q.push(1, "b").unwrap();
+        q.push(5, "urgent").unwrap();
+        q.push(1, "c").unwrap();
+        q.close();
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, ["urgent", "a", "b", "c"]);
+    }
+
+    #[test]
+    fn capacity_rejects_with_depth() {
+        let q = JobQueue::new(2);
+        q.push(0, 1).unwrap();
+        q.push(0, 2).unwrap();
+        assert_eq!(q.push(0, 3), Err(QueueFull { depth: 2 }));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_returns_none() {
+        let q = JobQueue::new(4);
+        q.push(0, "x").unwrap();
+        q.close();
+        assert!(q.push(0, "y").is_err());
+        assert_eq!(q.pop(), Some("x"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_close() {
+        let q = JobQueue::new(1);
+        q.push(0, "full").unwrap();
+        q.requeue(9, "preempted");
+        assert_eq!(q.len(), 2);
+        q.close();
+        q.requeue(0, "late-preempt");
+        assert_eq!(q.pop(), Some("preempted"));
+        assert_eq!(q.pop(), Some("full"));
+        assert_eq!(q.pop(), Some("late-preempt"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn higher_priority_probe() {
+        let q = JobQueue::new(4);
+        assert!(!q.has_higher_priority_than(0));
+        q.push(1, "low").unwrap();
+        assert!(!q.has_higher_priority_than(1));
+        assert!(q.has_higher_priority_than(0));
+        q.push(7, "high").unwrap();
+        assert!(q.has_higher_priority_than(1));
+        assert!(!q.has_higher_priority_than(7));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        use std::sync::Arc;
+        let q = Arc::new(JobQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(0, 42).unwrap();
+        assert_eq!(t.join().unwrap(), Some(42));
+    }
+}

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod sha256;
+pub mod shutdown;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,106 @@
+//! Cooperative shutdown: one process-global drain flag, settable from a
+//! SIGINT/SIGTERM handler or programmatically.
+//!
+//! Flight software cannot afford to die mid-episode: a signal must turn
+//! into "finish the current chunk, write a checkpoint, exit 0". The
+//! mechanism here is the smallest one that is async-signal-safe — the
+//! handler performs a single atomic store and nothing else; everything
+//! that actually drains (the fleet worker pool, the scenario campaign
+//! loop, the `qfpga serve` accept loop) polls [`requested`] at its own
+//! safe points.
+//!
+//! The crate is zero-dependency, so the handler is registered through the
+//! raw libc `signal(2)` entry point instead of a signal crate. On glibc,
+//! `signal()` installs BSD semantics (`SA_RESTART`), which means blocking
+//! syscalls are *restarted* after the handler runs — pollers must not
+//! rely on `EINTR` to observe the flag. Every drain loop in this repo
+//! polls explicitly (nonblocking accept + sleep, chunked episode runs)
+//! for exactly that reason.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set by [`on_signal`]/[`request`], observed by every drain loop.
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    /// `signal(2)` — the only libc surface this module touches.
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+/// The installed handler: one atomic store, nothing else (the only
+/// operation that is unconditionally async-signal-safe).
+extern "C" fn on_signal(_signum: i32) {
+    REQUESTED.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT/SIGTERM handler. Idempotent; safe to call from any
+/// subcommand that wants drain-on-signal semantics.
+pub fn install() {
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Request a drain programmatically (the daemon's `shutdown` protocol
+/// verb, tests).
+pub fn request() {
+    REQUESTED.store(true, Ordering::SeqCst);
+}
+
+/// Has a drain been requested (by signal or [`request`])?
+pub fn requested() -> bool {
+    REQUESTED.load(Ordering::SeqCst)
+}
+
+/// Clear the flag. Test-harness plumbing: the flag is process-global and
+/// `cargo test` runs many tests in one process.
+pub fn reset() {
+    REQUESTED.store(false, Ordering::SeqCst);
+}
+
+/// Serializes tests that touch the process-global flag (`cargo test` runs
+/// the whole lib suite in one process; a concurrent reader would observe
+/// another test's transient `request`).
+#[cfg(test)]
+pub(crate) static TEST_FLAG_GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    extern "C" {
+        fn raise(signum: i32) -> i32;
+    }
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_FLAG_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn request_and_reset_toggle_the_flag() {
+        let _guard = guard();
+        reset();
+        assert!(!requested());
+        request();
+        assert!(requested());
+        reset();
+        assert!(!requested());
+    }
+
+    #[test]
+    fn a_real_sigterm_sets_the_flag_once_installed() {
+        // `install` replaces the default (terminating) disposition, so
+        // raising SIGTERM here is safe: the process survives and the
+        // handler's store becomes observable.
+        let _guard = guard();
+        install();
+        reset();
+        unsafe { raise(SIGTERM) };
+        assert!(requested());
+        reset();
+    }
+}

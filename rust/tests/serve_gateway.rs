@@ -1,0 +1,245 @@
+//! Gateway end-to-end over a real unix socket: submit → progress →
+//! result, resubmission answered bit-identically from the cache, results
+//! invariant across worker widths, backpressure rejects when the queue is
+//! full, drain completes every accepted job, and a high-priority
+//! submission preempts a running mission without losing work.
+//!
+//! Integration tests run in their own process, so the process-global
+//! shutdown flag is reset defensively at the top of each test; the serve
+//! tests never raise it (drains go through `GatewayHandle::drain`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use qfpga::coordinator::MissionConfig;
+use qfpga::obs::manifest::report_sha256;
+use qfpga::serve::{
+    job_mix, Client, GatewayHandle, JobSpec, Request, Response, ServeConfig,
+};
+use qfpga::util::shutdown;
+
+fn sock(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qfpga-e2e-{}-{tag}.sock", std::process::id()))
+}
+
+fn tiny_train(seed: u64) -> JobSpec {
+    JobSpec::Train(MissionConfig { episodes: 4, max_steps: 12, seed, ..Default::default() })
+}
+
+#[test]
+fn submit_streams_progress_then_result() {
+    shutdown::reset();
+    let handle = GatewayHandle::spawn(ServeConfig::new(sock("stream"))).unwrap();
+    let mut client = Client::connect(&handle.socket()).unwrap();
+    let mut episodes = Vec::new();
+    let out = client
+        .submit_and_wait(&tiny_train(31), 1, true, &mut |resp| {
+            if let Response::Progress { sample, .. } = resp {
+                episodes.push(sample.episode);
+            }
+        })
+        .unwrap();
+    assert!(out.ok, "{:?}", out.error);
+    assert!(!out.cache_hit);
+    assert_eq!(out.report_id, "EXP");
+    // the progress throttle must always include the final episode
+    assert_eq!(episodes.last(), Some(&3));
+    // the advertised hash is the deterministic projection of the document
+    assert_eq!(out.report_sha256, report_sha256(&out.report));
+    handle.drain();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.cache_hits, 0);
+}
+
+#[test]
+fn resubmission_hits_the_cache_bit_identically() {
+    shutdown::reset();
+    let handle = GatewayHandle::spawn(ServeConfig::new(sock("cache"))).unwrap();
+    let mut client = Client::connect(&handle.socket()).unwrap();
+    let job = tiny_train(32);
+    let first = client.submit_and_wait(&job, 1, false, &mut |_| {}).unwrap();
+    let again = client.submit_and_wait(&job, 1, false, &mut |_| {}).unwrap();
+    assert!(first.ok && !first.cache_hit);
+    assert!(again.ok && again.cache_hit);
+    // byte-identical document, not just an equal hash
+    assert_eq!(first.report.to_string(), again.report.to_string());
+    assert_eq!(first.report_sha256, again.report_sha256);
+    // and the gateway's answer is exactly what a local run produces
+    let local = job.run(&|_| {}).unwrap();
+    assert_eq!(report_sha256(&local), first.report_sha256);
+    handle.drain();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn results_are_invariant_across_worker_widths() {
+    shutdown::reset();
+    let jobs = job_mix(5, 2, 10, 900);
+    let mut by_width: Vec<BTreeMap<String, String>> = Vec::new();
+    for (i, &w) in [1usize, 3].iter().enumerate() {
+        let mut cfg = ServeConfig::new(sock(&format!("width{i}")));
+        cfg.workers = w;
+        let handle = GatewayHandle::spawn(cfg).unwrap();
+        let socket = handle.socket();
+        // all five jobs in flight at once, each on its own connection
+        let hashes: BTreeMap<String, String> = std::thread::scope(|s| {
+            let workers: Vec<_> = jobs
+                .iter()
+                .map(|job| {
+                    let socket = socket.clone();
+                    s.spawn(move || {
+                        let mut client = Client::connect(&socket).unwrap();
+                        let out =
+                            client.submit_and_wait(job, 1, false, &mut |_| {}).unwrap();
+                        assert!(out.ok, "{:?}", out.error);
+                        (job.key(), out.report_sha256)
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        handle.drain();
+        handle.join().unwrap();
+        by_width.push(hashes);
+    }
+    assert_eq!(by_width[0], by_width[1], "reports depend on worker width");
+}
+
+#[test]
+fn full_queue_rejects_with_a_retry_hint() {
+    shutdown::reset();
+    let mut cfg = ServeConfig::new(sock("full"));
+    cfg.workers = 1;
+    cfg.queue_capacity = 1;
+    let handle = GatewayHandle::spawn(cfg).unwrap();
+    let busy = |seed: u64| {
+        JobSpec::Train(MissionConfig {
+            episodes: 400,
+            max_steps: 80,
+            seed,
+            ..Default::default()
+        })
+    };
+    // first job occupies the single worker...
+    let mut first = Client::connect(&handle.socket()).unwrap();
+    let accepted = first
+        .request(&Request::Submit { job: busy(50), priority: 1, stream: false })
+        .unwrap();
+    assert!(matches!(accepted, Response::Accepted { .. }), "{}", accepted.to_json());
+    let mut health = Client::connect(&handle.socket()).unwrap();
+    loop {
+        match health.request(&Request::Healthz).unwrap() {
+            Response::Health { in_flight: 1.., .. } => break,
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // ...the second fills the queue...
+    let mut second = Client::connect(&handle.socket()).unwrap();
+    let queued = second
+        .request(&Request::Submit { job: busy(51), priority: 1, stream: false })
+        .unwrap();
+    assert!(matches!(queued, Response::Accepted { .. }), "{}", queued.to_json());
+    loop {
+        match health.request(&Request::Healthz).unwrap() {
+            Response::Health { queue_depth: 1.., .. } => break,
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // ...so the third must bounce with backpressure, not block or drop
+    let mut third = Client::connect(&handle.socket()).unwrap();
+    match third
+        .request(&Request::Submit { job: busy(52), priority: 1, stream: false })
+        .unwrap()
+    {
+        Response::Rejected { reason, retry_after_ms } => {
+            assert!(reason.contains("queue full"), "{reason}");
+            assert!(retry_after_ms >= 100);
+        }
+        other => panic!("expected rejected, got {}", other.to_json()),
+    }
+    handle.drain();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.submitted, 3);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn drain_completes_every_accepted_job() {
+    shutdown::reset();
+    let mut cfg = ServeConfig::new(sock("drain"));
+    cfg.workers = 2;
+    let handle = GatewayHandle::spawn(cfg).unwrap();
+    // accept four unique jobs without waiting for their results, keeping
+    // each connection open so the daemon still owes a terminal frame
+    let mut clients = Vec::new();
+    for i in 0..4u64 {
+        let mut c = Client::connect(&handle.socket()).unwrap();
+        let resp = c
+            .request(&Request::Submit { job: tiny_train(700 + i), priority: 1, stream: false })
+            .unwrap();
+        assert!(matches!(resp, Response::Accepted { .. }), "{}", resp.to_json());
+        clients.push(c);
+    }
+    handle.drain();
+    let stats = handle.join().unwrap();
+    // a drain may not strand accepted work: every job ran to completion
+    assert_eq!(stats.submitted, 4);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.rejected, 0);
+    drop(clients);
+}
+
+#[test]
+fn high_priority_submission_preempts_without_losing_work() {
+    shutdown::reset();
+    let mut cfg = ServeConfig::new(sock("preempt"));
+    cfg.workers = 1;
+    cfg.chunk = 2;
+    let handle = GatewayHandle::spawn(cfg).unwrap();
+    let long = JobSpec::Train(MissionConfig {
+        episodes: 300,
+        max_steps: 100,
+        seed: 77,
+        ..Default::default()
+    });
+    let expected = report_sha256(&long.run(&|_| {}).unwrap());
+    let socket = handle.socket();
+    let (long_out, quick_out) = std::thread::scope(|s| {
+        let long_job = &long;
+        let socket_a = socket.clone();
+        let waiter = s.spawn(move || {
+            Client::connect(&socket_a)
+                .unwrap()
+                .submit_and_wait(long_job, 1, false, &mut |_| {})
+                .unwrap()
+        });
+        // wait until the long mission owns the single worker
+        let mut health = Client::connect(&socket).unwrap();
+        loop {
+            match health.request(&Request::Healthz).unwrap() {
+                Response::Health { in_flight: 1.., .. } => break,
+                _ => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        let quick = tiny_train(78);
+        let quick_out = Client::connect(&socket)
+            .unwrap()
+            .submit_and_wait(&quick, 9, false, &mut |_| {})
+            .unwrap();
+        (waiter.join().unwrap(), quick_out)
+    });
+    assert!(quick_out.ok, "{:?}", quick_out.error);
+    assert!(long_out.ok, "{:?}", long_out.error);
+    handle.drain();
+    let stats = handle.join().unwrap();
+    assert!(stats.preemptions >= 1, "long mission was never preempted ({stats:?})");
+    assert_eq!(long_out.preemptions, stats.preemptions);
+    assert_eq!(quick_out.preemptions, 0);
+    // the checkpoint/resume cycle must not change a single bit
+    assert_eq!(long_out.report_sha256, expected, "preempted+resumed run diverged");
+}
