@@ -1,0 +1,339 @@
+//! Fleet-learning campaign — table **F1**.
+//!
+//! Sweeps fleet size over the scenario library, training each fleet twice
+//! through the [`Experiment`] builder — **shared** (transition exchange +
+//! parameter averaging per a [`SharePlan`]) and **isolated** (the plain
+//! fleet pool) — and reports episodes-to-convergence
+//! ([`convergence_episode`], fleet mean) for both arms. The question the
+//! table answers is the planetary-swarm one: does a fleet that pools its
+//! experience converge in fewer episodes per rover than the same rovers
+//! learning alone?
+//!
+//! Every learned value is seed-deterministic (the shared pool is
+//! bit-identical at every worker width), but only the *structural* rows —
+//! sweep shape and schedule — are pinned by `ci/golden_f1.json`: the
+//! convergence rows depend on training dynamics and are compared run-to-run
+//! by `qfpga diff` self-checks instead. A shared fleet of 1 has nobody to
+//! exchange with and averages only itself, so its rows must equal the
+//! isolated fleet-of-1 rows exactly — a built-in honesty check on the
+//! sharing machinery.
+//!
+//! The `qfpga fleetlearn` subcommand is the CLI front-end.
+
+use crate::config::{Arch, EnvKind, NetConfig, Precision};
+use crate::coordinator::scenario::convergence_episode;
+use crate::error::{Error, Result};
+use crate::experiment::{BackendSpec, Experiment};
+use crate::qlearn::SharePlan;
+use crate::report::PaperTable;
+use crate::util::Json;
+
+/// What to run: which scenarios, which fleet sizes, and the share schedule.
+#[derive(Debug, Clone)]
+pub struct FleetLearnSpec {
+    /// Environment kinds to sweep (default: all five).
+    pub envs: Vec<EnvKind>,
+    pub arch: Arch,
+    pub precision: Precision,
+    /// Episodes **per rover** — the quantity convergence is measured in.
+    pub episodes: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+    /// Flush size for `update_batch` (1 = stepwise).
+    pub batch: usize,
+    /// Fleet sizes to sweep (default 1/2/4/8).
+    pub fleets: Vec<usize>,
+    /// Exchange transitions every this many episodes (0 = never).
+    pub exchange_every: usize,
+    /// Average parameters every this many episodes (0 = never).
+    pub avg_every: usize,
+    /// Max transitions each rover contributes per exchange round.
+    pub pool_cap: usize,
+}
+
+impl Default for FleetLearnSpec {
+    fn default() -> Self {
+        FleetLearnSpec {
+            envs: EnvKind::all().to_vec(),
+            arch: Arch::Mlp,
+            precision: Precision::Fixed,
+            episodes: 60,
+            max_steps: 120,
+            seed: 7,
+            batch: 1,
+            fleets: vec![1, 2, 4, 8],
+            exchange_every: 5,
+            avg_every: 10,
+            pool_cap: 16,
+        }
+    }
+}
+
+impl FleetLearnSpec {
+    /// The share schedule the shared arm trains under.
+    pub fn plan(&self) -> SharePlan {
+        SharePlan {
+            exchange_every: self.exchange_every,
+            avg_every: self.avg_every,
+            pool_cap: self.pool_cap,
+        }
+    }
+
+    /// Full serialization — the spec `qfpga fleetlearn` manifests embed.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "envs",
+                Json::Arr(
+                    self.envs
+                        .iter()
+                        .map(|e| Json::Str(e.as_str().into()))
+                        .collect(),
+                ),
+            ),
+            ("arch", Json::Str(self.arch.as_str().into())),
+            ("precision", Json::Str(self.precision.as_str().into())),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("max_steps", Json::Num(self.max_steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            (
+                "fleets",
+                Json::Arr(self.fleets.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("exchange_every", Json::Num(self.exchange_every as f64)),
+            ("avg_every", Json::Num(self.avg_every as f64)),
+            ("pool_cap", Json::Num(self.pool_cap as f64)),
+        ])
+    }
+
+    /// Inverse of [`FleetLearnSpec::to_json`] (CLI `FromStr` spellings).
+    pub fn from_json(j: &Json) -> Result<FleetLearnSpec> {
+        let envs = j
+            .req_arr("envs")?
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .ok_or_else(|| Error::interface("fleetlearn env not a string"))?
+                    .parse()
+            })
+            .collect::<Result<Vec<EnvKind>>>()?;
+        let fleets = j
+            .req_arr("fleets")?
+            .iter()
+            .map(|n| {
+                n.as_f64()
+                    .map(|v| v as usize)
+                    .ok_or_else(|| Error::interface("fleetlearn fleet size not a number"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(FleetLearnSpec {
+            envs,
+            arch: j.req_str("arch")?.parse()?,
+            precision: j.req_str("precision")?.parse()?,
+            episodes: j.req_usize("episodes")?,
+            max_steps: j.req_usize("max_steps")?,
+            seed: j.req_f64("seed")? as u64,
+            batch: j.req_usize("batch")?,
+            fleets,
+            exchange_every: j.req_usize("exchange_every")?,
+            avg_every: j.req_usize("avg_every")?,
+            pool_cap: j.req_usize("pool_cap")?,
+        })
+    }
+}
+
+/// Run the campaign and fold it into the F1 table.
+pub fn fleetlearn_table(spec: &FleetLearnSpec) -> Result<PaperTable> {
+    fleetlearn_table_with_drain(spec, false)
+}
+
+/// [`fleetlearn_table`] with optional graceful drain: when `drain` is set
+/// and [`crate::util::shutdown::requested`] fires, the campaign stops at
+/// the next scenario boundary and returns the partial table (with a note
+/// naming the cut).
+pub fn fleetlearn_table_with_drain(spec: &FleetLearnSpec, drain: bool) -> Result<PaperTable> {
+    if spec.envs.is_empty() {
+        return Err(Error::Config("fleetlearn campaign needs at least one env".into()));
+    }
+    if spec.fleets.is_empty() || spec.fleets.contains(&0) {
+        return Err(Error::Config(
+            "fleetlearn campaign needs fleet sizes >= 1 (--fleets 1,2,4,8)".into(),
+        ));
+    }
+    let plan = spec.plan();
+    plan.validate()?;
+
+    let mut drained_after: Option<usize> = None;
+    let mut table = PaperTable::new(
+        "F1",
+        format!(
+            "Fleet learning ({} {}, {} episodes × ≤{} steps, seed {})",
+            spec.arch.as_str(),
+            spec.precision.as_str(),
+            spec.episodes,
+            spec.max_steps,
+            spec.seed
+        ),
+        "mixed",
+    )
+    // structural rows: the sweep shape and schedule, golden-gated by
+    // ci/golden_f1.json (the learned rows below are deterministic too but
+    // training-dynamics-dependent, so they are self-diffed instead)
+    .row("fleet sizes swept", spec.fleets.len() as f64, None)
+    .row("scenarios swept", spec.envs.len() as f64, None)
+    .row("episodes per rover", spec.episodes as f64, None)
+    .row("exchange cadence (episodes)", spec.exchange_every as f64, None)
+    .row("averaging cadence (episodes)", spec.avg_every as f64, None)
+    .row("pool cap (transitions per rover)", spec.pool_cap as f64, None);
+
+    for (done, &env) in spec.envs.iter().enumerate() {
+        if drain && crate::util::shutdown::requested() {
+            drained_after = Some(done);
+            break;
+        }
+        let net = NetConfig::new(spec.arch, env);
+        let label = env.as_str();
+        for &fleet in &spec.fleets {
+            let run = |share: Option<SharePlan>| -> Result<f64> {
+                let mut exp = Experiment::train(BackendSpec::cpu(net, spec.precision))
+                    .episodes(spec.episodes)
+                    .max_steps(spec.max_steps)
+                    .seed(spec.seed)
+                    .batch(spec.batch)
+                    .rovers(fleet);
+                if let Some(p) = share {
+                    exp = exp.share(p);
+                }
+                let r = exp.run()?;
+                let mean = r
+                    .rovers
+                    .iter()
+                    .map(|m| convergence_episode(&m.train, 10) as f64)
+                    .sum::<f64>()
+                    / r.rovers.len() as f64;
+                Ok(mean)
+            };
+            let shared = run(Some(plan))?;
+            let isolated = run(None)?;
+            table = table
+                .row(format!("{label} shared convergence @ fleet {fleet}"), shared, None)
+                .row(
+                    format!("{label} isolated convergence @ fleet {fleet}"),
+                    isolated,
+                    None,
+                );
+        }
+    }
+
+    table = table.note(
+        "convergence: first episode from which the 10-episode moving-average reward \
+         stays inside the final 10%-of-range band, averaged over the fleet; shared \
+         arm exchanges transitions and averages parameters per the cadences above; \
+         learned rows are seed-deterministic but not golden-gated (compare with \
+         `qfpga diff` instead)",
+    );
+    if let Some(done) = drained_after {
+        table = table.note(format!(
+            "DRAINED on signal after {done}/{} environments — partial campaign",
+            spec.envs.len()
+        ));
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> FleetLearnSpec {
+        FleetLearnSpec {
+            envs: vec![EnvKind::Simple],
+            precision: Precision::Float,
+            episodes: 4,
+            max_steps: 20,
+            fleets: vec![1, 2],
+            exchange_every: 2,
+            avg_every: 2,
+            pool_cap: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip_is_exact() {
+        let spec = FleetLearnSpec {
+            envs: vec![EnvKind::Crater, EnvKind::Energy],
+            arch: Arch::Perceptron,
+            precision: Precision::Binary,
+            episodes: 9,
+            max_steps: 33,
+            seed: 41,
+            batch: 4,
+            fleets: vec![2, 8],
+            exchange_every: 3,
+            avg_every: 6,
+            pool_cap: 5,
+        };
+        let text = spec.to_json().to_string();
+        let back = FleetLearnSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.envs, spec.envs);
+        assert_eq!(back.fleets, spec.fleets);
+        assert_eq!(back.plan(), spec.plan());
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected() {
+        assert!(fleetlearn_table(&FleetLearnSpec {
+            envs: vec![],
+            ..quick_spec()
+        })
+        .is_err());
+        assert!(fleetlearn_table(&FleetLearnSpec {
+            fleets: vec![],
+            ..quick_spec()
+        })
+        .is_err());
+        assert!(fleetlearn_table(&FleetLearnSpec {
+            fleets: vec![2, 0],
+            ..quick_spec()
+        })
+        .is_err());
+        assert!(fleetlearn_table(&FleetLearnSpec {
+            exchange_every: 0,
+            avg_every: 0,
+            ..quick_spec()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn table_has_structural_rows_and_both_arms() {
+        let t = fleetlearn_table(&quick_spec()).unwrap();
+        // 6 structural + 1 env × 2 fleets × 2 arms
+        assert_eq!(t.rows.len(), 10);
+        assert_eq!(t.rows[0].label, "fleet sizes swept");
+        assert_eq!(t.rows[0].ours, 2.0);
+        assert_eq!(t.rows[3].ours, 2.0); // exchange cadence
+        assert!(t.rows[6].label.contains("simple shared convergence @ fleet 1"));
+        assert!(t.rows[7].label.contains("simple isolated convergence @ fleet 1"));
+        // a shared fleet of 1 has nobody to learn from: both arms must
+        // converge identically, bit for bit
+        assert_eq!(t.rows[6].ours, t.rows[7].ours);
+        // convergence is a 1-based episode index within the run
+        for row in &t.rows[6..] {
+            assert!(row.ours >= 1.0 && row.ours <= 4.0, "{}", row.label);
+        }
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let spec = quick_spec();
+        let a = fleetlearn_table(&spec).unwrap();
+        let b = fleetlearn_table(&spec).unwrap();
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.ours.to_bits(), y.ours.to_bits(), "{}", x.label);
+        }
+    }
+}

@@ -272,6 +272,18 @@ impl MissionRun {
         self.stats.len() >= self.cfg.episodes
     }
 
+    /// Record up to `cap` transitions per fleet-exchange round (see
+    /// [`crate::qlearn::SharePlan`]); pure observation, no trajectory
+    /// effect.
+    pub fn enable_outbox(&mut self, cap: usize) {
+        self.learner.enable_outbox(cap);
+    }
+
+    /// Drain the recorded transitions for this exchange round.
+    pub fn take_outbox(&mut self) -> Vec<crate::qlearn::replay::StoredTransition> {
+        self.learner.take_outbox()
+    }
+
     /// Advance up to `n` more episodes, invoking `observer` after each
     /// (progress streaming). Stops early when the mission completes.
     pub fn run_episodes(

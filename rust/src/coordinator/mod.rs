@@ -20,6 +20,9 @@
 //! * [`scenario`] — the mission scenario campaign: every
 //!   [`crate::config::EnvKind`] trained on cpu + fpga-sim, condensed into
 //!   table S1 (the `qfpga mission` subcommand).
+//! * [`fleetlearn`] — the fleet-learning campaign: shared vs isolated
+//!   fleets swept over fleet size per scenario, condensed into table F1
+//!   (the `qfpga fleetlearn` subcommand).
 //! * [`scheduler`] — the fleet entry point (`run_fleet`); the worker pool
 //!   itself lives in [`crate::experiment::builder`].
 //! * [`telemetry`] — learning curves, per-rover progress streaming,
@@ -32,6 +35,7 @@
 //!   plus the [`sweep::resilience`] campaign mode (rate × mitigation ×
 //!   backend across the fleet).
 
+pub mod fleetlearn;
 pub mod mission;
 pub mod scenario;
 pub mod scheduler;
@@ -39,6 +43,7 @@ pub mod sweep;
 pub mod telemetry;
 pub mod throughput;
 
+pub use fleetlearn::{fleetlearn_table, fleetlearn_table_with_drain, FleetLearnSpec};
 pub use mission::{run_mission, MissionCheckpoint, MissionConfig, MissionReport, MissionRun};
 pub use scenario::{
     convergence_episode, scenario_table, scenario_table_with_drain, ScenarioSpec,

@@ -14,6 +14,11 @@ use crate::coordinator::telemetry::{self, RoverProgress};
 use crate::error::{Error, Result};
 use crate::fault::FaultPlan;
 use crate::fixed::FixedSpec;
+use crate::nn::params::QNetParams;
+use crate::nn::Datapath;
+use crate::qlearn::backend::QBackend;
+use crate::qlearn::replay::StoredTransition;
+use crate::qlearn::{share, SharePlan};
 use crate::report::Report;
 use crate::util::Json;
 
@@ -71,6 +76,9 @@ pub struct Experiment {
     /// checkpoint what ran (when a policy is set) and return early with
     /// `interrupted` flagged instead of training to completion.
     drain_on_signal: bool,
+    /// Fleet-learning schedule (transition exchange + parameter
+    /// averaging); `None` keeps rovers fully isolated.
+    share: Option<SharePlan>,
 }
 
 impl Experiment {
@@ -113,6 +121,7 @@ impl Experiment {
             workers: 0,
             checkpoint: None,
             drain_on_signal: false,
+            share: None,
         }
     }
 
@@ -129,6 +138,7 @@ impl Experiment {
             workers: 0,
             checkpoint: None,
             drain_on_signal: false,
+            share: None,
         }
     }
 
@@ -182,6 +192,16 @@ impl Experiment {
     /// [`CheckpointPolicy`]).
     pub fn checkpoint(mut self, dir: impl Into<PathBuf>, every: usize) -> Experiment {
         self.checkpoint = Some(CheckpointPolicy { dir: dir.into(), every: every.max(1) });
+        self
+    }
+
+    /// Enable fleet learning per `plan` (see [`SharePlan`]): rovers
+    /// exchange transitions and average parameters at fixed episode
+    /// boundaries, rovers always visited in id order — results stay
+    /// bit-identical at every [`Experiment::workers`] width and across
+    /// checkpoint/resume, exactly like isolated fleets.
+    pub fn share(mut self, plan: SharePlan) -> Experiment {
+        self.share = Some(plan);
         self
     }
 
@@ -260,6 +280,20 @@ impl Experiment {
                 canonical.a
             )));
         }
+        if let Some(plan) = &self.share {
+            plan.validate()?;
+            // round barriers move rover state through checkpoints, which
+            // the SEU injection stream cannot serialize — same limit as
+            // CheckpointPolicy, rejected just as early
+            if self.spec.fault.is_some() {
+                return Err(Error::Config(
+                    "fleet sharing is not available for missions under SEU \
+                     injection (the injection stream state is not serializable \
+                     across round barriers)"
+                        .into(),
+                ));
+            }
+        }
         if let Some(ckpt) = &self.checkpoint {
             // fail fast: a fault-injected mission cannot checkpoint (see
             // MissionRun::checkpoint) — reject before any episode runs
@@ -278,12 +312,29 @@ impl Experiment {
         let workers = effective_workers(self.workers, self.rovers);
         let drain = self.drain_on_signal;
         let start = Instant::now();
-        let rovers = if self.rovers == 1 {
+        let (rovers, share) = if let Some(plan) = &self.share {
+            let (rovers, summary) = run_shared_pool(
+                &cfg,
+                self.rovers,
+                workers,
+                plan,
+                self.checkpoint.as_ref(),
+                drain,
+                sink,
+            )?;
+            (rovers, Some(summary))
+        } else if self.rovers == 1 {
             // single rover: stay on the caller's thread (the PJRT client is
             // built and used right here)
-            vec![run_rover(&cfg, 0, self.checkpoint.as_ref(), drain, &mut |p| sink(p))?]
+            (
+                vec![run_rover(&cfg, 0, self.checkpoint.as_ref(), drain, &mut |p| sink(p))?],
+                None,
+            )
         } else {
-            run_pool(&cfg, self.rovers, workers, self.checkpoint.as_ref(), drain, sink)?
+            (
+                run_pool(&cfg, self.rovers, workers, self.checkpoint.as_ref(), drain, sink)?,
+                None,
+            )
         };
         Ok(ExperimentReport {
             desc: cfg.describe(),
@@ -291,6 +342,7 @@ impl Experiment {
             workers,
             wall_seconds: start.elapsed().as_secs_f64(),
             interrupted: drain && crate::util::shutdown::requested(),
+            share,
         })
     }
 }
@@ -469,6 +521,402 @@ fn run_pool(
         .collect()
 }
 
+// ------------------------------------------------------------ shared fleet
+
+/// The mission config rover `i` trains under (seed offset by rover id —
+/// the same derivation the isolated pool uses).
+fn rover_cfg(base: &MissionConfig, rover: usize) -> MissionConfig {
+    let mut cfg = base.clone();
+    cfg.seed = base.seed.wrapping_add(rover as u64);
+    cfg
+}
+
+/// What one rover produced in one fleet round.
+enum RoundOutcome {
+    /// The rover reached its final episode and folded into a report.
+    Finished(Box<MissionReport>),
+    /// The rover paused at a round boundary: its resumable state plus the
+    /// transitions recorded for exchange during the round.
+    Boundary(Box<MissionCheckpoint>, Vec<StoredTransition>),
+}
+
+/// Messages flowing from share-round workers back to the leader.
+enum ShareMsg {
+    Progress(RoverProgress),
+    Done(usize, Result<RoundOutcome>),
+}
+
+/// One rover's slice of a fleet round on the current thread: rebuild from
+/// the snapshot (fresh on the first round), train to `target` absolute
+/// episodes, and hand back either the final report or the next boundary.
+fn run_rover_round(
+    base: &MissionConfig,
+    rover: usize,
+    snapshot: Option<MissionCheckpoint>,
+    plan: &SharePlan,
+    target: usize,
+    progress: &mut dyn FnMut(RoverProgress),
+) -> Result<RoundOutcome> {
+    let cfg = rover_cfg(base, rover);
+    let factory = BackendFactory::for_kind(cfg.backend)?;
+    let mut run = match snapshot {
+        Some(s) => MissionRun::restore(&cfg, &factory, s)?,
+        None => MissionRun::new(&cfg, &factory)?,
+    };
+    if plan.exchange_every > 0 {
+        run.enable_outbox(plan.pool_cap);
+    }
+    let n = target.saturating_sub(run.episodes_done());
+    let episodes = cfg.episodes;
+    run.run_episodes(n, &mut |s| {
+        progress(RoverProgress {
+            rover,
+            episode: s.episode,
+            episodes,
+            reward: s.total_reward,
+            epsilon: s.epsilon,
+        });
+    })?;
+    let outbox = run.take_outbox();
+    if run.is_complete() {
+        Ok(RoundOutcome::Finished(Box::new(run.finish()?)))
+    } else {
+        Ok(RoundOutcome::Boundary(Box::new(run.checkpoint()?), outbox))
+    }
+}
+
+/// One fleet round across all rovers on the worker pool — the same cursor /
+/// claim-metrics / catch_unwind protocol as [`run_pool`], one job per rover
+/// per round, results slotted by rover id. Workers do not poll shutdown
+/// mid-round: the drain granularity for shared fleets is the round
+/// boundary, where the leader holds transform-complete checkpoints.
+fn run_share_round(
+    base: &MissionConfig,
+    snapshots: Vec<Option<MissionCheckpoint>>,
+    plan: &SharePlan,
+    workers: usize,
+    target: usize,
+    sink: &(dyn Fn(RoverProgress) + Sync),
+) -> Result<Vec<RoundOutcome>> {
+    let n_rovers = snapshots.len();
+    let jobs: Vec<std::sync::Mutex<Option<MissionCheckpoint>>> =
+        snapshots.into_iter().map(std::sync::Mutex::new).collect();
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<ShareMsg>();
+    let mut slots: Vec<Option<RoundOutcome>> = (0..n_rovers).map(|_| None).collect();
+    let mut first_err: Option<Error> = None;
+
+    thread::scope(|scope| -> Result<()> {
+        for w in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let jobs = &jobs;
+            thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn_scoped(scope, move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_rovers {
+                        break;
+                    }
+                    let m = crate::obs::metrics();
+                    m.fleet_claim(w);
+                    if i % workers != w {
+                        m.fleet_jobs_stolen.inc();
+                    }
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let snapshot = jobs[i]
+                            .lock()
+                            .map_err(|_| {
+                                Error::Config(format!("rover {i} snapshot lock poisoned"))
+                            })?
+                            .take();
+                        run_rover_round(base, i, snapshot, plan, target, &mut |p| {
+                            let _ = tx.send(ShareMsg::Progress(p));
+                        })
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(Error::Config(format!("rover {i} thread panicked")))
+                    });
+                    if tx.send(ShareMsg::Done(i, result)).is_err() {
+                        break;
+                    }
+                })
+                .map_err(|e| Error::Config(format!("spawn fleet-worker-{w}: {e}")))?;
+        }
+        drop(tx);
+        for msg in rx {
+            match msg {
+                ShareMsg::Progress(p) => sink(p),
+                ShareMsg::Done(i, Ok(outcome)) => slots[i] = Some(outcome),
+                ShareMsg::Done(_, Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.ok_or_else(|| Error::Config("missing rover round result".into())))
+        .collect()
+}
+
+/// Apply the round-boundary transforms on the leader thread, rovers in id
+/// order: transition exchange first, then parameter averaging, both charged
+/// to obs. `done` is the absolute episode count every rover has reached.
+fn apply_share_round(
+    base: &MissionConfig,
+    plan: &SharePlan,
+    state: &mut [MissionCheckpoint],
+    outboxes: &[Vec<StoredTransition>],
+    done: usize,
+) -> Result<()> {
+    let exchange = plan.exchange_at(done);
+    let average = plan.average_at(done);
+    if !exchange && !average {
+        return Ok(());
+    }
+    let span = crate::obs::span(crate::obs::SpanKind::Exchange)
+        .field("episodes", done as f64)
+        .field("rovers", state.len() as f64);
+    let net = base.net();
+    if exchange {
+        let inboxes = share::assemble_inboxes(outboxes, &net, plan.pool_cap)?;
+        let factory = BackendFactory::for_kind(base.backend)?;
+        for (i, (ckpt, inbox)) in state.iter_mut().zip(&inboxes).enumerate() {
+            // a fleet of one (or a round with empty outboxes) exchanges
+            // nothing — the checkpoint passes through untouched, which is
+            // what keeps a shared fleet of 1 bit-identical to an isolated
+            // rover
+            if inbox.is_empty() {
+                continue;
+            }
+            let cfg = rover_cfg(base, i);
+            let mut backend =
+                factory.build_mission(&cfg.spec(), ckpt.params.clone(), cfg.seed)?;
+            let errs = backend.update_batch(inbox)?;
+            ckpt.params = backend.params();
+            ckpt.updates += errs.len() as u64;
+            ckpt.flushes += 1;
+            ckpt.fpga_cycles += backend
+                .accelerator()
+                .map(|acc| acc.stats().cycles)
+                .unwrap_or(0);
+        }
+        crate::obs::metrics().fleet_exchanges.inc();
+    }
+    if average {
+        let dp = Datapath::for_precision_spec(base.precision, base.fixed_spec);
+        let sets: Vec<QNetParams> = state.iter().map(|c| c.params.clone()).collect();
+        let mean = share::average_params(&sets, &net, &dp)?;
+        for ckpt in state.iter_mut() {
+            ckpt.params = mean.clone();
+        }
+        crate::obs::metrics().fleet_avg_rounds.inc();
+    }
+    span.done();
+    Ok(())
+}
+
+/// The shared-fleet driver: rovers advance in lockstep rounds of
+/// [`SharePlan::round_len`] episodes on the worker pool, and between rounds
+/// the leader applies the exchange/averaging transforms in rover-id order.
+/// Rover state crosses round barriers as [`MissionCheckpoint`] values
+/// (backends are not `Send`), which makes every barrier a natural
+/// checkpoint/resume point: disk saves land *after* the transforms, so a
+/// resumed fleet replays the uninterrupted trajectory bit-exactly. With a
+/// [`CheckpointPolicy`] active, shared fleets save at every round boundary
+/// (the policy's `every` is ignored — rounds are the only consistent cut).
+fn run_shared_pool(
+    base: &MissionConfig,
+    n_rovers: usize,
+    workers: usize,
+    plan: &SharePlan,
+    ckpt: Option<&CheckpointPolicy>,
+    drain: bool,
+    sink: &(dyn Fn(RoverProgress) + Sync),
+) -> Result<(Vec<MissionReport>, ShareSummary)> {
+    let round = plan.round_len().max(1);
+    let paths: Option<Vec<PathBuf>> = ckpt
+        .map(|c| (0..n_rovers).map(|i| c.dir.join(format!("rover-{i}.json"))).collect());
+
+    // resume is all-or-nothing: a partial file set means the fleet state is
+    // torn (rovers would disagree on the shared parameters)
+    let mut state: Vec<Option<MissionCheckpoint>> = (0..n_rovers).map(|_| None).collect();
+    let mut done = 0usize;
+    if let Some(paths) = &paths {
+        let present = paths.iter().filter(|p| p.exists()).count();
+        if present > 0 {
+            if present < n_rovers {
+                return Err(Error::Config(format!(
+                    "shared-fleet resume needs all {n_rovers} rover checkpoints; found \
+                     {present} — delete the stale files to start fresh"
+                )));
+            }
+            let suffix = plan.fingerprint_suffix();
+            for (i, path) in paths.iter().enumerate() {
+                let cfg = rover_cfg(base, i);
+                let mut c = MissionCheckpoint::load(&cfg.net(), path)?;
+                let want = format!("{}{}", cfg.fingerprint(), suffix);
+                if c.config != want {
+                    return Err(Error::Config(format!(
+                        "rover {i} checkpoint was taken under a different mission or \
+                         share configuration (`{}` vs `{}`) — delete the stale \
+                         checkpoint file to start fresh",
+                        c.config, want
+                    )));
+                }
+                // strip the share suffix: MissionRun::restore verifies the
+                // plain mission fingerprint
+                c.config = cfg.fingerprint();
+                if i == 0 {
+                    done = c.episodes_done;
+                } else if c.episodes_done != done {
+                    return Err(Error::Config(format!(
+                        "shared-fleet checkpoints disagree on progress (rover 0 at \
+                         {done} episodes, rover {i} at {}) — delete them to start fresh",
+                        c.episodes_done
+                    )));
+                }
+                state[i] = Some(c);
+            }
+            if done % round != 0 {
+                return Err(Error::Config(format!(
+                    "shared-fleet checkpoint at episode {done} is not on a \
+                     {round}-episode round boundary — delete it to start fresh"
+                )));
+            }
+        }
+    }
+
+    loop {
+        let target = ((done / round) + 1) * round;
+        let target = target.min(base.episodes);
+        let outcomes =
+            run_share_round(base, std::mem::take(&mut state), plan, workers, target, sink)?;
+        // lockstep invariant: every rover shares the same episode target, so
+        // a round finishes the whole fleet or none of it
+        let n_finished = outcomes
+            .iter()
+            .filter(|o| matches!(o, RoundOutcome::Finished(_)))
+            .count();
+        if n_finished == outcomes.len() {
+            if let Some(paths) = &paths {
+                for path in paths {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+            let reports = outcomes
+                .into_iter()
+                .map(|o| match o {
+                    RoundOutcome::Finished(r) => *r,
+                    RoundOutcome::Boundary(..) => unreachable!(),
+                })
+                .collect();
+            return Ok((
+                reports,
+                ShareSummary::from_plan(plan, base.episodes, base.episodes),
+            ));
+        }
+        if n_finished > 0 {
+            return Err(Error::Config(
+                "shared fleet desynchronized: some rovers finished while others \
+                 paused at a round boundary"
+                    .into(),
+            ));
+        }
+        let mut checkpoints = Vec::with_capacity(outcomes.len());
+        let mut outboxes = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            match o {
+                RoundOutcome::Boundary(c, outbox) => {
+                    checkpoints.push(*c);
+                    outboxes.push(outbox);
+                }
+                RoundOutcome::Finished(_) => unreachable!(),
+            }
+        }
+        done = target;
+        apply_share_round(base, plan, &mut checkpoints, &outboxes, done)?;
+        if let Some(paths) = &paths {
+            // save after the transforms, so a resume replays the exact
+            // uninterrupted trajectory; the persisted fingerprint carries
+            // the share suffix so a different schedule can never silently
+            // adopt these files
+            let suffix = plan.fingerprint_suffix();
+            for (c, path) in checkpoints.iter().zip(paths) {
+                let mut on_disk = c.clone();
+                on_disk.config = format!("{}{}", on_disk.config, suffix);
+                on_disk.save(path)?;
+            }
+        }
+        if drain && crate::util::shutdown::requested() {
+            // drained at the round boundary: fold the transform-complete
+            // checkpoints into partial reports (the isolated pool's drain
+            // contract; the disk files carry the resumable remainder)
+            let reports = checkpoints
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let cfg = rover_cfg(base, i);
+                    let factory = BackendFactory::for_kind(cfg.backend)?;
+                    MissionRun::restore(&cfg, &factory, c)?.finish()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            return Ok((reports, ShareSummary::from_plan(plan, done, base.episodes)));
+        }
+        state = checkpoints.into_iter().map(Some).collect();
+    }
+}
+
+/// Fleet-learning accounting on an [`ExperimentReport`]: the plan that ran
+/// plus how many transform rounds it applied.
+///
+/// Derived arithmetically from the plan and the final episode count — never
+/// counted at runtime — so a run resumed from checkpoints reports exactly
+/// what the uninterrupted run does and report hashes stay comparable. (The
+/// `qfpga_fleet_exchanges`/`qfpga_fleet_avg_rounds` metrics count the
+/// rounds this process actually applied; those are operational telemetry,
+/// not part of the report.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShareSummary {
+    pub exchange_every: usize,
+    pub avg_every: usize,
+    pub pool_cap: usize,
+    /// Transition-exchange rounds the schedule applied.
+    pub exchanges: u64,
+    /// Parameter-averaging rounds the schedule applied.
+    pub avg_rounds: u64,
+}
+
+impl ShareSummary {
+    /// Rounds a cadence applied by the time `done` of `episodes` episodes
+    /// ran: boundaries fall at multiples of the cadence, and the final
+    /// boundary (mission complete) applies no transform.
+    fn applied(cadence: usize, done: usize, episodes: usize) -> u64 {
+        if cadence == 0 {
+            return 0;
+        }
+        (done.min(episodes.saturating_sub(1)) / cadence) as u64
+    }
+
+    fn from_plan(plan: &SharePlan, done: usize, episodes: usize) -> ShareSummary {
+        ShareSummary {
+            exchange_every: plan.exchange_every,
+            avg_every: plan.avg_every,
+            pool_cap: plan.pool_cap,
+            exchanges: Self::applied(plan.exchange_every, done, episodes),
+            avg_rounds: Self::applied(plan.avg_every, done, episodes),
+        }
+    }
+}
+
 // -------------------------------------------------------- ExperimentReport
 
 /// Typed outcome of an [`Experiment`]: one [`MissionReport`] per rover plus
@@ -484,6 +932,9 @@ pub struct ExperimentReport {
     /// True when a drain request ([`Experiment::drain_on_signal`]) cut the
     /// run short; the per-rover reports cover only the episodes that ran.
     pub interrupted: bool,
+    /// Fleet-learning schedule and accounting when the fleet trained
+    /// shared ([`Experiment::share`]); `None` for isolated fleets.
+    pub share: Option<ShareSummary>,
 }
 
 impl ExperimentReport {
@@ -566,6 +1017,24 @@ impl Report for ExperimentReport {
                 last - first
             ));
         }
+        if let Some(s) = &self.share {
+            let cadence = |n: usize| {
+                if n == 0 {
+                    "off".to_string()
+                } else {
+                    format!("every {n} ep")
+                }
+            };
+            out.push_str(&format!(
+                "  share: exchange {} (cap {}), averaging {} — {} exchange / {} \
+                 averaging rounds\n",
+                cadence(s.exchange_every),
+                s.pool_cap,
+                cadence(s.avg_every),
+                s.exchanges,
+                s.avg_rounds
+            ));
+        }
         out.push_str(&format!(
             "  total: {} steps, {:.0} updates/s aggregate, mean Δreward {:+.3}, wall {:.2}s\n",
             self.total_steps(),
@@ -601,6 +1070,20 @@ impl Report for ExperimentReport {
         // pre-drain JSON shape (report hashes and goldens unchanged)
         if self.interrupted {
             fields.push(("interrupted", Json::Bool(true)));
+        }
+        // likewise only when the fleet trained shared — isolated fleets keep
+        // their exact historical wire form
+        if let Some(s) = &self.share {
+            fields.push((
+                "share",
+                Json::obj(vec![
+                    ("exchange_every", Json::Num(s.exchange_every as f64)),
+                    ("avg_every", Json::Num(s.avg_every as f64)),
+                    ("pool_cap", Json::Num(s.pool_cap as f64)),
+                    ("exchanges", Json::Num(s.exchanges as f64)),
+                    ("avg_rounds", Json::Num(s.avg_rounds as f64)),
+                ]),
+            ));
         }
         Json::obj(fields)
     }
@@ -688,6 +1171,47 @@ mod tests {
         .unwrap();
         let stats = r.rovers[0].fault.expect("fault stats");
         assert!(stats.total_upsets() > 0);
+    }
+
+    #[test]
+    fn share_rejects_faulted_missions_and_degenerate_plans() {
+        let plan = SharePlan { exchange_every: 2, avg_every: 0, pool_cap: 4 };
+        let err = Experiment::train(BackendSpec::cpu(
+            NetConfig::new(Arch::Mlp, EnvKind::Simple),
+            Precision::Fixed,
+        ))
+        .episodes(4)
+        .faults(FaultPlan { rate: 1e-3, mitigation: Mitigation::None })
+        .share(plan)
+        .run()
+        .unwrap_err();
+        assert!(err.to_string().contains("sharing"), "{err}");
+        let degenerate = SharePlan { exchange_every: 0, avg_every: 0, pool_cap: 4 };
+        assert!(Experiment::train(quick_spec()).share(degenerate).run().is_err());
+    }
+
+    #[test]
+    fn shared_fleet_runs_and_reports_the_schedule() {
+        let plan = SharePlan { exchange_every: 2, avg_every: 4, pool_cap: 4 };
+        let r = Experiment::train(quick_spec())
+            .episodes(8)
+            .max_steps(40)
+            .rovers(2)
+            .share(plan)
+            .run()
+            .unwrap();
+        assert_eq!(r.rovers.len(), 2);
+        assert_eq!(r.rovers[0].train.episodes.len(), 8);
+        let s = r.share.expect("share summary");
+        assert_eq!(s.exchanges, 3); // boundaries 2, 4, 6 (8 is the finish)
+        assert_eq!(s.avg_rounds, 1); // boundary 4 (8 is the finish)
+        let text = r.render();
+        assert!(text.contains("share: exchange every 2 ep"), "{text}");
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req("share").unwrap().req_usize("pool_cap").unwrap(), 4);
+        // isolated fleets keep their historical wire form: no share key
+        let isolated = Experiment::train(quick_spec()).episodes(3).max_steps(20).run().unwrap();
+        assert!(Json::parse(&isolated.to_json().to_string()).unwrap().get("share").is_none());
     }
 
     #[test]

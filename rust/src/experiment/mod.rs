@@ -32,5 +32,5 @@
 pub mod builder;
 pub mod spec;
 
-pub use builder::{CheckpointPolicy, Experiment, ExperimentReport};
+pub use builder::{CheckpointPolicy, Experiment, ExperimentReport, ShareSummary};
 pub use spec::{AnyBackend, BackendFactory, BackendSpec, BuiltBackend};

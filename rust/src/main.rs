@@ -9,6 +9,9 @@
 //! * `fleet  [--rovers N ...]` — multi-rover mission via the scheduler.
 //! * `mission [--env all|E ...]` — the scenario-library campaign: train
 //!   every environment kind on cpu + fpga-sim and print table S1.
+//! * `fleetlearn [--fleets 1,2,4,8 ...]` — the fleet-learning campaign:
+//!   shared (transition exchange + parameter averaging) vs isolated
+//!   fleets swept over fleet size per scenario, printed as table F1.
 //! * `sweep  [--updates N]` — measured per-update latency for every
 //!   backend × configuration (the measured side of Tables 3–6).
 //! * `throughput` — table B2: measured CPU updates/s (reference stepwise
@@ -60,7 +63,7 @@ use qfpga::util::{shutdown, Json, Rng};
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|serve|loadgen|diff|manifest|replay|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|fleetlearn|sweep|throughput|radiation|validate|serve|loadgen|diff|manifest|replay|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
@@ -83,9 +86,26 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|ser
             [--checkpoint-dir D]  checkpoint each rover to D/rover-<i>.json
                                   and resume any file already present
             [--checkpoint-every N] episodes between checkpoints (default 25)
+            [--share-every N]     fleet learning: pool transitions across
+                                  rovers every N episodes (0 = off)
+            [--avg-every N]       fleet learning: average parameters across
+                                  rovers every N episodes (0 = off)
+            [--pool-cap N]        transitions each rover contributes per
+                                  exchange round (default 16); sharing is
+                                  active when either cadence is non-zero
   mission   scenario-library campaign: train every env kind on cpu +
             fpga-sim and print table S1 (convergence episodes, final
             reward, fpga-vs-cpu latency advantage)
+            [--env all|E]         one scenario or the whole library (default all)
+            plus --arch/--precision/--episodes/--max-steps/--seed/--batch
+  fleetlearn fleet-learning campaign: shared (transition exchange +
+            parameter averaging) vs isolated fleets swept over fleet size
+            per scenario, printed as table F1 (episodes-to-convergence
+            per arm; a shared fleet of 1 must match isolated exactly)
+            [--fleets 1,2,4,8]    fleet sizes to sweep
+            [--share-every N]     exchange cadence in episodes (default 5)
+            [--avg-every N]       averaging cadence in episodes (default 10)
+            [--pool-cap N]        transitions per rover per exchange (default 16)
             [--env all|E]         one scenario or the whole library (default all)
             plus --arch/--precision/--episodes/--max-steps/--seed/--batch
   sweep     --updates N           per-update latency, all backends/configs
@@ -142,11 +162,11 @@ USAGE: qfpga <report|train|fleet|mission|sweep|throughput|radiation|validate|ser
             match the recorded one bit-exactly; exits non-zero on mismatch
   info                            artifacts, device, cycle model summary
 
-  --json FILE   (report/train/fleet/mission/sweep/throughput/radiation/
-                validate/loadgen/info) also write the subcommand's typed
-                JSON report to FILE
+  --json FILE   (report/train/fleet/mission/fleetlearn/sweep/throughput/
+                radiation/validate/loadgen/info) also write the
+                subcommand's typed JSON report to FILE
 
-observability (train/fleet/mission/sweep/throughput/radiation):
+observability (train/fleet/mission/fleetlearn/sweep/throughput/radiation):
   --manifest FILE   write a versioned run-provenance manifest (schema,
                     run id, git describe, replayable spec + sha256, seed,
                     delta metrics snapshot, report sha256)
@@ -177,6 +197,7 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("train", cmd_train),
     ("fleet", cmd_fleet),
     ("mission", cmd_mission),
+    ("fleetlearn", cmd_fleetlearn),
     ("sweep", cmd_sweep),
     ("throughput", cmd_throughput),
     ("radiation", cmd_radiation),
@@ -433,19 +454,41 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
+    use qfpga::qlearn::SharePlan;
+
     let cfg = mission_config(args)?;
     let rovers = args.get_parse("rovers", 4usize)?;
     let workers = args.get_parse("workers", 0usize)?;
+    let share_every = args.get_parse("share-every", 0usize)?;
+    let avg_every = args.get_parse("avg-every", 0usize)?;
+    let share = (share_every > 0 || avg_every > 0).then_some(SharePlan {
+        exchange_every: share_every,
+        avg_every,
+        pool_cap: args.get_parse("pool-cap", 16usize)?,
+    });
     let obs = ObsRun::begin(args);
     shutdown::install();
     let mut experiment = Experiment::from_mission(&cfg)
         .rovers(rovers)
         .workers(workers)
         .drain_on_signal(true);
+    if let Some(plan) = share {
+        experiment = experiment.share(plan);
+    }
     if let Some(dir) = args.get("checkpoint-dir") {
         experiment = experiment.checkpoint(dir, args.get_parse("checkpoint-every", 25usize)?);
     }
-    println!("fleet: {} × [{}]", rovers, cfg.describe());
+    match &share {
+        Some(p) => println!(
+            "fleet: {} × [{}] shared(ex{},avg{},cap{})",
+            rovers,
+            cfg.describe(),
+            p.exchange_every,
+            p.avg_every,
+            p.pool_cap
+        ),
+        None => println!("fleet: {} × [{}]", rovers, cfg.describe()),
+    }
     let report = if args.flag("progress") {
         // stream per-rover lines live from the worker pool
         experiment.run_with_progress(&|p| println!("  {}", p.render()))?
@@ -468,12 +511,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.mean_learning_delta(),
         report.wall_seconds
     );
-    // the replayable fleet spec is the mission config plus fleet width;
-    // worker count shapes wall time only (seeds/ordering are
-    // worker-invariant), so it stays out of the spec hash
+    // the replayable fleet spec is the mission config plus fleet width and
+    // (when sharing) the share schedule — byte-identical to
+    // `qfpga::serve::JobSpec::Fleet::to_json`, so manifests replay through
+    // the same executor; worker count shapes wall time only (seeds/ordering
+    // are worker-invariant), so it stays out of the spec hash
     let mut spec = cfg.to_json();
     if let Json::Obj(map) = &mut spec {
         map.insert("rovers".into(), Json::Num(rovers as f64));
+        if let Some(plan) = &share {
+            map.insert("share".into(), plan.to_json());
+        }
     }
     let doc = report.to_json();
     write_json(args, &doc)?;
@@ -549,6 +597,61 @@ fn cmd_mission(args: &Args) -> Result<()> {
     let doc = table.to_json();
     write_json(args, &doc)?;
     obs.finish("mission", spec.seed, spec.to_json(), "S1", &doc)
+}
+
+/// `fleetlearn` — the fleet-learning campaign: shared (transition exchange
+/// + parameter averaging) vs isolated fleets swept over fleet size per
+/// scenario, printed as table F1.
+fn cmd_fleetlearn(args: &Args) -> Result<()> {
+    use qfpga::coordinator::{fleetlearn_table_with_drain, FleetLearnSpec};
+
+    let envs: Vec<EnvKind> = match args.get_or("env", "all") {
+        "all" => EnvKind::all().to_vec(),
+        e => vec![e.parse::<EnvKind>()?],
+    };
+    let mut fleets = Vec::new();
+    for part in args.get_or("fleets", "1,2,4,8").split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        fleets.push(part.parse::<usize>().map_err(|_| {
+            qfpga::error::Error::Config(format!("bad --fleets entry `{part}`"))
+        })?);
+    }
+    let spec = FleetLearnSpec {
+        envs,
+        arch: args.get_or("arch", "mlp").parse::<Arch>()?,
+        precision: args.get_or("precision", "fixed").parse::<Precision>()?,
+        episodes: args.get_parse("episodes", 60usize)?,
+        max_steps: args.get_parse("max-steps", 120usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+        batch: args.get_parse("batch", 1usize)?,
+        fleets,
+        exchange_every: args.get_parse("share-every", 5usize)?,
+        avg_every: args.get_parse("avg-every", 10usize)?,
+        pool_cap: args.get_parse("pool-cap", 16usize)?,
+    };
+    let obs = ObsRun::begin(args);
+    shutdown::install();
+    println!(
+        "fleet-learning campaign: [{}] × fleets [{}], shared(ex{},avg{},cap{}) vs \
+         isolated, {} {} ({} episodes × ≤{} steps per rover)",
+        spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(", "),
+        spec.fleets.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(", "),
+        spec.exchange_every,
+        spec.avg_every,
+        spec.pool_cap,
+        spec.arch.as_str(),
+        spec.precision.as_str(),
+        spec.episodes,
+        spec.max_steps
+    );
+    let table = fleetlearn_table_with_drain(&spec, true)?;
+    print!("{table}");
+    let doc = table.to_json();
+    write_json(args, &doc)?;
+    obs.finish("fleetlearn", spec.seed, spec.to_json(), "F1", &doc)
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -947,9 +1050,11 @@ fn cmd_manifest(args: &Args) -> Result<()> {
 fn replay_report(m: &RunManifest) -> Result<Json> {
     if !m.is_replayable() {
         return Err(qfpga::error::Error::Config(format!(
-            "`{}` manifests validate but cannot replay: the run records \
-             host-measured results (only train/fleet/mission are \
-             seed-deterministic end to end)",
+            "`{}` manifests validate but cannot replay: only the \
+             train/fleet/mission job shapes can be scheduled (measurement \
+             campaigns record host-timed results; `fleetlearn` sweeps are \
+             re-checked with `qfpga fleetlearn --json` + `qfpga diff` \
+             instead)",
             m.subcommand
         )));
     }

@@ -764,6 +764,15 @@ impl PreparedNet {
         &self.params
     }
 
+    /// Quantize the cached parameters onto the datapath grid and return
+    /// them — the fleet parameter-averaging entry point: an element-wise
+    /// mean of on-grid weights is generally off-grid and must land back
+    /// on the grid before any rover trains on it.
+    pub fn params_on_grid(&mut self, dp: &Datapath) -> &QNetParams {
+        self.prepare(dp);
+        &self.params
+    }
+
     /// Quantize the parameters onto the grid if the cache is stale.
     #[inline]
     fn prepare(&mut self, dp: &Datapath) {

@@ -157,6 +157,10 @@ pub struct Metrics {
     /// Fleet jobs claimed by a worker other than the round-robin "home"
     /// worker — the work-stealing signal.
     pub fleet_jobs_stolen: Counter,
+    /// Fleet-share transition-exchange rounds applied.
+    pub fleet_exchanges: Counter,
+    /// Fleet-share parameter-averaging rounds applied.
+    pub fleet_avg_rounds: Counter,
     /// Mission checkpoints written to disk.
     pub checkpoint_writes: Counter,
     /// Modeled FPGA cycles charged by the accelerator timing model.
@@ -223,6 +227,8 @@ impl Metrics {
             train_epsilon: Gauge::new(),
             fleet_jobs_claimed: [C; MAX_WORKER_SLOTS],
             fleet_jobs_stolen: C,
+            fleet_exchanges: C,
+            fleet_avg_rounds: C,
             checkpoint_writes: C,
             fpga_cycles: C,
             fpga_fifo_high_water: MaxGauge::new(),
@@ -432,6 +438,16 @@ impl MetricsSnapshot {
             "qfpga_fleet_jobs_stolen_total",
             "Fleet jobs claimed away from their round-robin home worker",
             &m.fleet_jobs_stolen,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fleet_exchanges_total",
+            "Fleet-share transition-exchange rounds applied",
+            &m.fleet_exchanges,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fleet_avg_rounds_total",
+            "Fleet-share parameter-averaging rounds applied",
+            &m.fleet_avg_rounds,
         ));
         families.push(scalar_counter(
             "qfpga_checkpoint_writes_total",

@@ -39,16 +39,19 @@ pub enum SpanKind {
     Flush,
     /// One checkpoint serialization + atomic write.
     Checkpoint,
+    /// One fleet-share round boundary (transition exchange + averaging).
+    Exchange,
     /// One host-timed measurement block (sweep/throughput).
     Measure,
 }
 
 /// Every kind, in summary display order.
-pub const SPAN_KINDS: [SpanKind; 5] = [
+pub const SPAN_KINDS: [SpanKind; 6] = [
     SpanKind::Mission,
     SpanKind::Episode,
     SpanKind::Flush,
     SpanKind::Checkpoint,
+    SpanKind::Exchange,
     SpanKind::Measure,
 ];
 
@@ -59,6 +62,7 @@ impl SpanKind {
             SpanKind::Episode => "episode",
             SpanKind::Flush => "flush",
             SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Exchange => "exchange",
             SpanKind::Measure => "measure",
         }
     }

@@ -13,16 +13,20 @@
 //!   baseline the neural learner is compared against.
 //! * [`trainer`] — episode loop and training statistics.
 //! * [`replay`] — transition buffer backing the microbatch mode.
+//! * [`share`] — deterministic fleet learning: transition exchange +
+//!   order-invariant parameter averaging on a fixed episode schedule.
 
 pub mod backend;
 pub mod neural;
 pub mod policy;
 pub mod replay;
+pub mod share;
 pub mod tabular;
 pub mod trainer;
 
 pub use backend::{CpuBackend, FpgaSimBackend, QBackend, XlaBackend};
 pub use neural::NeuralQLearner;
 pub use policy::Policy;
+pub use share::SharePlan;
 pub use tabular::TabularQ;
 pub use trainer::{train, train_episode, EpisodeStats, TrainReport};

@@ -43,6 +43,11 @@ pub struct NeuralQLearner<B: QBackend> {
     q_buf: Vec<f32>,
     updates: u64,
     flushes: u64,
+    // fleet-share outbox: the first `outbox_cap` transitions of the current
+    // exchange round, recorded as pure data (no RNG use, no trajectory
+    // effect) — 0 disables recording entirely
+    outbox: Vec<StoredTransition>,
+    outbox_cap: usize,
 }
 
 impl<B: QBackend> NeuralQLearner<B> {
@@ -58,6 +63,8 @@ impl<B: QBackend> NeuralQLearner<B> {
             q_buf: Vec::with_capacity(a),
             updates: 0,
             flushes: 0,
+            outbox: Vec::new(),
+            outbox_cap: 0,
         }
     }
 
@@ -94,6 +101,20 @@ impl<B: QBackend> NeuralQLearner<B> {
         self.flushes
     }
 
+    /// Start recording transitions for fleet exchange: up to `cap` per
+    /// round land in the outbox (0 disables). Recording is observation
+    /// only — it never touches the RNG or the training trajectory.
+    pub fn enable_outbox(&mut self, cap: usize) {
+        self.outbox_cap = cap;
+        self.outbox.clear();
+        self.outbox.reserve(cap);
+    }
+
+    /// Drain the outbox for this exchange round (leaves it empty).
+    pub fn take_outbox(&mut self) -> Vec<StoredTransition> {
+        std::mem::take(&mut self.outbox)
+    }
+
     /// One interaction step against `env`.
     pub fn step(&mut self, env: &mut dyn Environment, rng: &mut Rng) -> Result<StepOutcome> {
         env.encode_all(&mut self.sa_cur);
@@ -103,6 +124,15 @@ impl<B: QBackend> NeuralQLearner<B> {
         let action = self.policy.select(&self.q_buf, rng);
         let result = env.step(action);
         env.encode_all(&mut self.sa_next);
+
+        if self.outbox.len() < self.outbox_cap {
+            self.outbox.push(StoredTransition {
+                sa_cur: self.sa_cur.clone(),
+                sa_next: self.sa_next.clone(),
+                action,
+                reward: result.reward,
+            });
+        }
 
         let q_err = if self.batch <= 1 {
             self.updates += 1;
@@ -242,5 +272,26 @@ mod tests {
         l.end_episode().unwrap();
         assert_eq!(l.updates(), steps);
         assert_eq!(l.flushes(), steps.div_ceil(4));
+    }
+
+    #[test]
+    fn outbox_records_capped_prefix_without_perturbing_the_trajectory() {
+        let mut env_a = SimpleRoverEnv::new(6);
+        let mut env_b = SimpleRoverEnv::new(6);
+        let mut plain = learner(Policy::default_training());
+        let mut taped = learner(Policy::default_training());
+        taped.enable_outbox(3);
+        let mut rng_a = Rng::seeded(36);
+        let mut rng_b = Rng::seeded(36);
+        for _ in 0..6 {
+            let a = plain.step(&mut env_a, &mut rng_a).unwrap();
+            let b = taped.step(&mut env_b, &mut rng_b).unwrap();
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+        }
+        assert_eq!(plain.backend.params().max_abs_diff(&taped.backend.params()), 0.0);
+        let outbox = taped.take_outbox();
+        assert_eq!(outbox.len(), 3, "outbox must stop at its cap");
+        assert!(taped.take_outbox().is_empty(), "take_outbox drains");
     }
 }

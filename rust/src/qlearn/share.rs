@@ -1,0 +1,347 @@
+//! Deterministic fleet learning: transition exchange + parameter averaging.
+//!
+//! Rovers in a shared fleet periodically (a) swap recent transitions — each
+//! rover replays what the others just experienced — and (b) average their
+//! network parameters element-wise. Both happen at *round boundaries* the
+//! episode counter alone determines (every [`SharePlan::round_len`]
+//! episodes, rovers in id order — never thread-arrival order), which is
+//! what keeps shared fleets bit-identical at every `--workers` width and
+//! across checkpoint/resume, the same invariant the isolated pool already
+//! guarantees.
+//!
+//! Determinism rules this module enforces:
+//!
+//! * **Inbox assembly** ([`assemble_inboxes`]) visits contributors in
+//!   ascending rover id, capping each contributor at `pool_cap`
+//!   transitions, so the replayed batch order is a pure function of the
+//!   outbox contents.
+//! * **Parameter averaging** ([`average_params`]) sorts each element's
+//!   contributions by [`f32::total_cmp`] before summing in `f64`, making
+//!   the mean exactly permutation-invariant across rover order (plain
+//!   left-to-right float sums are not) and exactly idempotent on identical
+//!   inputs (`n·x / n` is exact in `f64`). The mean is then re-quantized
+//!   through [`PreparedNet::params_on_grid`] so averaged weights land back
+//!   on the datapath grid every rover trains on.
+
+use crate::config::NetConfig;
+use crate::error::{Error, Result};
+use crate::nn::params::QNetParams;
+use crate::nn::{Datapath, PreparedNet};
+use crate::util::Json;
+
+use super::replay::{FlatBatch, StoredTransition, TransitionBuffer};
+
+/// Fleet-learning schedule: how often rovers exchange transitions and
+/// average parameters, in episodes, plus the per-rover outbox bound.
+///
+/// A cadence of 0 disables that mechanism; at least one must be non-zero.
+/// Both cadences are phrased in *absolute* episode counts, so a fleet
+/// resumed from checkpoints lands on exactly the boundaries the
+/// uninterrupted run would have hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharePlan {
+    /// Exchange transitions every this many episodes (0 = never).
+    pub exchange_every: usize,
+    /// Average parameters every this many episodes (0 = never).
+    pub avg_every: usize,
+    /// Max transitions each rover contributes per exchange round.
+    pub pool_cap: usize,
+}
+
+impl SharePlan {
+    /// Sanity-check the schedule before a fleet is built around it.
+    pub fn validate(&self) -> Result<()> {
+        if self.exchange_every == 0 && self.avg_every == 0 {
+            return Err(Error::Config(
+                "share plan disables both exchange and averaging — drop \
+                 --share-every/--avg-every instead of setting both to 0"
+                    .into(),
+            ));
+        }
+        if self.exchange_every > 0 && self.pool_cap == 0 {
+            return Err(Error::Config(
+                "share plan exchanges transitions with pool_cap 0 — every \
+                 exchange would be empty; set --pool-cap >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Episodes per fleet round: the gcd of the non-zero cadences, so every
+    /// exchange and every averaging point falls on a round boundary.
+    pub fn round_len(&self) -> usize {
+        match (self.exchange_every, self.avg_every) {
+            (0, a) => a,
+            (e, 0) => e,
+            (e, a) => gcd(e, a),
+        }
+    }
+
+    /// Does episode count `done` land on an exchange boundary?
+    pub fn exchange_at(&self, done: usize) -> bool {
+        self.exchange_every > 0 && done > 0 && done % self.exchange_every == 0
+    }
+
+    /// Does episode count `done` land on an averaging boundary?
+    pub fn average_at(&self, done: usize) -> bool {
+        self.avg_every > 0 && done > 0 && done % self.avg_every == 0
+    }
+
+    /// Suffix appended to checkpoint config fingerprints: a checkpoint from
+    /// a shared fleet must not silently resume into an isolated one (or
+    /// under a different schedule) — the training trajectory differs.
+    pub fn fingerprint_suffix(&self) -> String {
+        format!(
+            "|share(ex{},avg{},cap{})",
+            self.exchange_every, self.avg_every, self.pool_cap
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("exchange_every", Json::Num(self.exchange_every as f64)),
+            ("avg_every", Json::Num(self.avg_every as f64)),
+            ("pool_cap", Json::Num(self.pool_cap as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SharePlan> {
+        let plan = SharePlan {
+            exchange_every: j.req_usize("exchange_every")?,
+            avg_every: j.req_usize("avg_every")?,
+            pool_cap: j.req_usize("pool_cap")?,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Assemble each rover's exchange inbox from the fleet's outboxes: rover
+/// `i` receives every other rover's transitions, contributors visited in
+/// ascending rover id and each capped at `pool_cap` — a pure function of
+/// the outbox contents, independent of which worker thread ran whom.
+pub fn assemble_inboxes(
+    outboxes: &[Vec<StoredTransition>],
+    net: &NetConfig,
+    pool_cap: usize,
+) -> Result<Vec<FlatBatch>> {
+    let mut inboxes = Vec::with_capacity(outboxes.len());
+    for i in 0..outboxes.len() {
+        let mut buf = TransitionBuffer::new();
+        for (j, outbox) in outboxes.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            for t in outbox.iter().take(pool_cap) {
+                buf.push(t.clone());
+            }
+        }
+        let n = buf.len();
+        inboxes.push(buf.drain_flat(n.max(1), net)?);
+    }
+    Ok(inboxes)
+}
+
+/// Element-wise mean of parameter sets, computed order-invariantly and
+/// re-quantized onto the datapath grid.
+///
+/// Each scalar's contributions are sorted by [`f32::total_cmp`] and summed
+/// in `f64`, so the result is exactly the same for any permutation of
+/// `sets` and exactly `x` when every set equals `x` — the two properties
+/// the proptest suite pins. The grid pass keeps the fleet invariant that
+/// every rover only ever trains on on-grid weights.
+pub fn average_params(
+    sets: &[QNetParams],
+    net: &NetConfig,
+    dp: &Datapath,
+) -> Result<QNetParams> {
+    let Some(first) = sets.first() else {
+        return Err(Error::Config("cannot average an empty parameter set".into()));
+    };
+    let tensor_sets: Vec<Vec<Vec<f32>>> = sets.iter().map(QNetParams::to_tensors).collect();
+    let shape: Vec<usize> = tensor_sets[0].iter().map(Vec::len).collect();
+    for (r, ts) in tensor_sets.iter().enumerate() {
+        let s: Vec<usize> = ts.iter().map(Vec::len).collect();
+        if s != shape {
+            return Err(Error::Config(format!(
+                "cannot average mismatched parameter shapes: rover 0 has \
+                 {:?} ({:?}), rover {r} has {s:?}",
+                shape,
+                first.arch()
+            )));
+        }
+    }
+    let n = sets.len() as f64;
+    let mut contributions = vec![0f32; sets.len()];
+    let mut mean: Vec<Vec<f32>> = shape.iter().map(|&len| vec![0f32; len]).collect();
+    for (t, tensor) in mean.iter_mut().enumerate() {
+        for (e, out) in tensor.iter_mut().enumerate() {
+            for (r, ts) in tensor_sets.iter().enumerate() {
+                contributions[r] = ts[t][e];
+            }
+            contributions.sort_by(f32::total_cmp);
+            let sum: f64 = contributions.iter().map(|&v| v as f64).sum();
+            *out = (sum / n) as f32;
+        }
+    }
+    let averaged = QNetParams::from_tensors(net, &mean)?;
+    Ok(PreparedNet::new(averaged).params_on_grid(dp).clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind, Precision};
+    use crate::fixed::FixedSpec;
+    use crate::util::Rng;
+
+    fn plan(e: usize, a: usize, cap: usize) -> SharePlan {
+        SharePlan { exchange_every: e, avg_every: a, pool_cap: cap }
+    }
+
+    #[test]
+    fn round_len_is_the_gcd_of_active_cadences() {
+        assert_eq!(plan(6, 4, 8).round_len(), 2);
+        assert_eq!(plan(5, 0, 8).round_len(), 5);
+        assert_eq!(plan(0, 7, 8).round_len(), 7);
+        assert_eq!(plan(3, 3, 8).round_len(), 3);
+    }
+
+    #[test]
+    fn boundaries_follow_the_cadences() {
+        let p = plan(4, 6, 8);
+        assert!(!p.exchange_at(0) && !p.average_at(0));
+        assert!(p.exchange_at(4) && !p.average_at(4));
+        assert!(!p.exchange_at(6) && p.average_at(6));
+        assert!(p.exchange_at(12) && p.average_at(12));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_plans() {
+        let err = plan(0, 0, 8).validate().unwrap_err().to_string();
+        assert!(err.contains("disables both"), "{err}");
+        let err = plan(2, 0, 0).validate().unwrap_err().to_string();
+        assert!(err.contains("pool_cap"), "{err}");
+        assert!(plan(0, 2, 0).validate().is_ok());
+        assert!(plan(2, 4, 1).validate().is_ok());
+    }
+
+    #[test]
+    fn plan_round_trips_through_json() {
+        let p = plan(4, 6, 16);
+        let back = SharePlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // from_json validates: a wire-form degenerate plan is rejected
+        assert!(SharePlan::from_json(&plan(0, 0, 16).to_json()).is_err());
+    }
+
+    #[test]
+    fn fingerprint_suffix_distinguishes_schedules() {
+        assert_eq!(plan(2, 4, 16).fingerprint_suffix(), "|share(ex2,avg4,cap16)");
+        assert_ne!(
+            plan(2, 4, 16).fingerprint_suffix(),
+            plan(4, 2, 16).fingerprint_suffix()
+        );
+    }
+
+    fn transition(net: &NetConfig, fill: f32, action: usize) -> StoredTransition {
+        let step = net.a * net.d;
+        StoredTransition {
+            sa_cur: vec![fill; step],
+            sa_next: vec![-fill; step],
+            action,
+            reward: fill,
+        }
+    }
+
+    #[test]
+    fn inboxes_exclude_self_and_order_by_rover_id() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let outboxes: Vec<Vec<StoredTransition>> = (0..3)
+            .map(|r| (0..2).map(|k| transition(&net, r as f32 + k as f32 * 0.1, r)).collect())
+            .collect();
+        let inboxes = assemble_inboxes(&outboxes, &net, 8).unwrap();
+        assert_eq!(inboxes.len(), 3);
+        // rover 1's inbox: rover 0's pair then rover 2's pair, in order
+        assert_eq!(inboxes[1].len(), 4);
+        assert_eq!(inboxes[1].actions, vec![0, 0, 2, 2]);
+        assert_eq!(inboxes[1].rewards, vec![0.0, 0.1, 2.0, 2.1]);
+        // no rover ever receives its own transitions
+        for (i, inbox) in inboxes.iter().enumerate() {
+            assert!(inbox.actions.iter().all(|&a| a != i));
+        }
+    }
+
+    #[test]
+    fn inboxes_cap_each_contributor_not_the_total() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let outboxes: Vec<Vec<StoredTransition>> = (0..3)
+            .map(|r| (0..5).map(|_| transition(&net, r as f32, r)).collect())
+            .collect();
+        let inboxes = assemble_inboxes(&outboxes, &net, 2).unwrap();
+        // 2 contributors × cap 2 each
+        assert!(inboxes.iter().all(|b| b.len() == 4));
+    }
+
+    #[test]
+    fn empty_outboxes_produce_empty_valid_inboxes() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let inboxes = assemble_inboxes(&[Vec::new(), Vec::new()], &net, 8).unwrap();
+        assert!(inboxes.iter().all(FlatBatch::is_empty));
+    }
+
+    #[test]
+    fn averaging_is_exact_on_identical_params_and_matches_hand_mean() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+        let dp = Datapath::for_precision(Precision::Float);
+        let mut rng = Rng::seeded(41);
+        let p = QNetParams::init(&net, 0.3, &mut rng);
+        let same = average_params(&[p.clone(), p.clone(), p.clone()], &net, &dp).unwrap();
+        assert_eq!(same.max_abs_diff(&p), 0.0);
+
+        let q = QNetParams::init(&net, 0.3, &mut rng);
+        let avg = average_params(&[p.clone(), q.clone()], &net, &dp).unwrap();
+        let (pt, qt, at) = (p.to_tensors(), q.to_tensors(), avg.to_tensors());
+        for t in 0..pt.len() {
+            for e in 0..pt[t].len() {
+                let want = ((pt[t][e] as f64 + qt[t][e] as f64) / 2.0) as f32;
+                assert_eq!(at[t][e].to_bits(), dp.q(want).to_bits(), "tensor {t} elem {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn averaging_lands_on_the_fixed_grid() {
+        let net = NetConfig::new(Arch::Perceptron, EnvKind::Simple);
+        let dp = Datapath::for_precision_spec(Precision::Fixed, FixedSpec::default());
+        let mut rng = Rng::seeded(42);
+        let sets: Vec<QNetParams> =
+            (0..4).map(|_| QNetParams::init(&net, 0.3, &mut rng)).collect();
+        let avg = average_params(&sets, &net, &dp).unwrap();
+        for tensor in avg.to_tensors() {
+            for v in tensor {
+                assert_eq!(v.to_bits(), dp.q(v).to_bits(), "averaged weight off-grid: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn averaging_rejects_empty_and_mismatched_sets() {
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let dp = Datapath::for_precision(Precision::Float);
+        assert!(average_params(&[], &net, &dp).is_err());
+        let mut rng = Rng::seeded(43);
+        let a = QNetParams::init(&net, 0.3, &mut rng);
+        let other = NetConfig::new(Arch::Mlp, EnvKind::Complex);
+        let b = QNetParams::init(&other, 0.3, &mut rng);
+        let err = average_params(&[a, b], &net, &dp).unwrap_err().to_string();
+        assert!(err.contains("mismatched"), "{err}");
+    }
+}

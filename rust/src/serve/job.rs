@@ -16,6 +16,7 @@ use crate::coordinator::{scenario_table, ScenarioSpec};
 use crate::error::{Error, Result};
 use crate::experiment::{BackendFactory, Experiment, ExperimentReport};
 use crate::obs::manifest::json_sha256;
+use crate::qlearn::SharePlan;
 use crate::report::Report;
 use crate::util::Json;
 
@@ -26,8 +27,9 @@ pub enum JobSpec {
     /// fault-free: it executes as a resumable [`MissionRun`].
     Train(MissionConfig),
     /// Fleet run (`qfpga fleet --rovers N`), executed on the PR 5 worker
-    /// pool. Runs to completion once started.
-    Fleet { cfg: MissionConfig, rovers: usize },
+    /// pool, optionally under a fleet-learning [`SharePlan`]. Runs to
+    /// completion once started.
+    Fleet { cfg: MissionConfig, rovers: usize, share: Option<SharePlan> },
     /// Scenario campaign (`qfpga mission`, table S1). Runs to completion
     /// once started.
     Mission(ScenarioSpec),
@@ -80,7 +82,17 @@ impl JobSpec {
     pub fn describe(&self) -> String {
         match self {
             JobSpec::Train(cfg) => format!("train [{}]", cfg.describe()),
-            JobSpec::Fleet { cfg, rovers } => format!("fleet {rovers} × [{}]", cfg.describe()),
+            JobSpec::Fleet { cfg, rovers, share } => format!(
+                "fleet {rovers} × [{}]{}",
+                cfg.describe(),
+                match share {
+                    Some(p) => format!(
+                        " shared(ex{},avg{},cap{})",
+                        p.exchange_every, p.avg_every, p.pool_cap
+                    ),
+                    None => String::new(),
+                }
+            ),
             JobSpec::Mission(spec) => format!(
                 "mission [{}] {} {}",
                 spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(","),
@@ -96,10 +108,15 @@ impl JobSpec {
     pub fn to_json(&self) -> Json {
         let (kind, spec) = match self {
             JobSpec::Train(cfg) => ("train", cfg.to_json()),
-            JobSpec::Fleet { cfg, rovers } => {
+            JobSpec::Fleet { cfg, rovers, share } => {
                 let mut spec = cfg.to_json();
                 if let Json::Obj(map) = &mut spec {
                     map.insert("rovers".into(), Json::Num(*rovers as f64));
+                    // only-when-set: isolated fleet specs keep their exact
+                    // historical bytes (cache keys and manifests unchanged)
+                    if let Some(plan) = share {
+                        map.insert("share".into(), plan.to_json());
+                    }
                 }
                 ("fleet", spec)
             }
@@ -125,6 +142,12 @@ impl JobSpec {
             "fleet" => Ok(JobSpec::Fleet {
                 cfg: MissionConfig::from_json(spec)?,
                 rovers: spec.req_usize("rovers")?,
+                share: match spec.get("share") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => Some(SharePlan::from_json(s).map_err(|e| {
+                        Error::Config(format!("fleet spec `share` block: {e}"))
+                    })?),
+                },
             }),
             "mission" => Ok(JobSpec::Mission(ScenarioSpec::from_json(spec)?)),
             other => Err(Error::Config(format!(
@@ -185,6 +208,7 @@ impl JobSpec {
                     workers: 1,
                     wall_seconds: start.elapsed().as_secs_f64(),
                     interrupted: false,
+                    share: None,
                 }
                 .to_json();
                 Ok(JobStep::Done(doc))
@@ -194,11 +218,12 @@ impl JobSpec {
                 let doc = Experiment::from_mission(cfg).run_with_progress(progress)?.to_json();
                 Ok(JobStep::Done(doc))
             }
-            JobSpec::Fleet { cfg, rovers } => {
-                let doc = Experiment::from_mission(cfg)
-                    .rovers(*rovers)
-                    .run_with_progress(progress)?
-                    .to_json();
+            JobSpec::Fleet { cfg, rovers, share } => {
+                let mut exp = Experiment::from_mission(cfg).rovers(*rovers);
+                if let Some(plan) = share {
+                    exp = exp.share(*plan);
+                }
+                let doc = exp.run_with_progress(progress)?.to_json();
                 Ok(JobStep::Done(doc))
             }
             JobSpec::Mission(spec) => Ok(JobStep::Done(scenario_table(spec)?.to_json())),
@@ -235,7 +260,12 @@ mod tests {
     fn wire_form_round_trips_bit_exactly() {
         let jobs = [
             JobSpec::Train(tiny_cfg()),
-            JobSpec::Fleet { cfg: tiny_cfg(), rovers: 3 },
+            JobSpec::Fleet { cfg: tiny_cfg(), rovers: 3, share: None },
+            JobSpec::Fleet {
+                cfg: tiny_cfg(),
+                rovers: 4,
+                share: Some(SharePlan { exchange_every: 2, avg_every: 4, pool_cap: 8 }),
+            },
             JobSpec::Mission(ScenarioSpec {
                 envs: vec![EnvKind::Crater],
                 episodes: 2,
@@ -261,7 +291,15 @@ mod tests {
         assert_ne!(a.key(), b.key(), "seed is part of the content address");
         assert_eq!(a.key(), JobSpec::Train(tiny_cfg()).key());
         // a fleet of 1 is still a different job than a train
-        assert_ne!(a.key(), JobSpec::Fleet { cfg: tiny_cfg(), rovers: 1 }.key());
+        let isolated = JobSpec::Fleet { cfg: tiny_cfg(), rovers: 1, share: None };
+        assert_ne!(a.key(), isolated.key());
+        // the share schedule is part of the content address
+        let shared = JobSpec::Fleet {
+            cfg: tiny_cfg(),
+            rovers: 1,
+            share: Some(SharePlan { exchange_every: 2, avg_every: 0, pool_cap: 4 }),
+        };
+        assert_ne!(isolated.key(), shared.key());
     }
 
     #[test]
@@ -271,9 +309,30 @@ mod tests {
     }
 
     #[test]
+    fn malformed_share_blocks_fail_with_context() {
+        let mut spec = tiny_cfg().to_json();
+        if let Json::Obj(map) = &mut spec {
+            map.insert("rovers".into(), Json::Num(2.0));
+            // degenerate schedule: both cadences zero
+            map.insert(
+                "share".into(),
+                SharePlan { exchange_every: 0, avg_every: 0, pool_cap: 4 }.to_json(),
+            );
+        }
+        let err = JobSpec::from_manifest("fleet", &spec).unwrap_err();
+        assert!(err.to_string().contains("`share` block"), "{err}");
+        // an explicit null reads back as an isolated fleet
+        if let Json::Obj(map) = &mut spec {
+            map.insert("share".into(), Json::Null);
+        }
+        let job = JobSpec::from_manifest("fleet", &spec).unwrap();
+        assert!(matches!(job, JobSpec::Fleet { share: None, .. }));
+    }
+
+    #[test]
     fn preemptibility_rules() {
         assert!(JobSpec::Train(tiny_cfg()).preemptible());
-        assert!(!JobSpec::Fleet { cfg: tiny_cfg(), rovers: 2 }.preemptible());
+        assert!(!JobSpec::Fleet { cfg: tiny_cfg(), rovers: 2, share: None }.preemptible());
         assert!(!JobSpec::Mission(ScenarioSpec::default()).preemptible());
         let mut faulted = tiny_cfg();
         faulted.fault = Some(crate::fault::FaultPlan {

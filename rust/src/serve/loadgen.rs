@@ -248,7 +248,7 @@ pub fn job_mix(unique: usize, episodes: usize, max_steps: usize, seed: u64) -> V
                     seed: seed + i as u64,
                     ..Default::default()
                 }),
-                3 => JobSpec::Fleet { cfg, rovers: 2 },
+                3 => JobSpec::Fleet { cfg, rovers: 2, share: None },
                 _ => JobSpec::Train(cfg),
             }
         })

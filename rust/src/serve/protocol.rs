@@ -330,7 +330,7 @@ mod tests {
         };
         match rng.below(3) {
             0 => JobSpec::Train(cfg),
-            1 => JobSpec::Fleet { cfg, rovers: rng.range(1, 6) },
+            1 => JobSpec::Fleet { cfg, rovers: rng.range(1, 6), share: None },
             _ => JobSpec::Mission(ScenarioSpec {
                 envs: vec![*pick(rng, &EnvKind::all())],
                 episodes: rng.range(1, 20),

@@ -14,6 +14,7 @@ use qfpga::coordinator::{scenario_table_with_drain, MissionConfig, ScenarioSpec}
 use qfpga::experiment::Experiment;
 use qfpga::obs::manifest::report_sha256;
 use qfpga::util::shutdown;
+use qfpga::Report;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 

@@ -249,6 +249,63 @@ fn faulted_missions_refuse_checkpoints() {
     assert!(err.to_string().contains("SEU"), "{err}");
 }
 
+/// A shared fleet drained at a round boundary that lies *between* the
+/// exchange rounds (the round length is the gcd of the cadences, so not
+/// every boundary fires a transform) resumes from its rover checkpoints to
+/// the uninterrupted run's report hash — the cadences count absolute
+/// episodes, so the resumed fleet lands on exactly the boundaries the
+/// uninterrupted run hits.
+#[test]
+fn shared_fleet_resumed_between_exchange_rounds_matches_uninterrupted() {
+    use qfpga::obs::manifest::report_sha256;
+    use qfpga::qlearn::SharePlan;
+    use qfpga::util::shutdown;
+
+    let cfg = quick_cfg(); // 8 episodes
+    // round length gcd(4, 6) = 2: the first boundary (episode 2) fires
+    // neither transform — the drain lands between exchange rounds
+    let plan = SharePlan { exchange_every: 4, avg_every: 6, pool_cap: 3 };
+    let dir = std::env::temp_dir()
+        .join(format!("qfpga-pool-share-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let want = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .workers(2)
+        .share(plan)
+        .run()
+        .unwrap();
+
+    shutdown::request(); // lands before the first 2-episode round finishes
+    let partial = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .workers(2)
+        .share(plan)
+        .checkpoint(&dir, 100)
+        .drain_on_signal(true)
+        .run()
+        .unwrap();
+    shutdown::reset();
+    assert!(partial.interrupted);
+    let done = partial.rovers[0].train.episodes.len();
+    assert!(done > 0 && done < plan.exchange_every, "drained after {done}, not between rounds");
+
+    let got = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .workers(2)
+        .share(plan)
+        .checkpoint(&dir, 100)
+        .run()
+        .unwrap();
+    assert_eq!(fingerprint(&got), fingerprint(&want));
+    assert_eq!(
+        report_sha256(&qfpga::Report::to_json(&got)),
+        report_sha256(&qfpga::Report::to_json(&want))
+    );
+    assert_eq!(got.share, want.share);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Progress streaming: every rover reports every episode, in episode order
 /// per rover, and the stream carries the same rewards the report does.
 #[test]

@@ -1,0 +1,222 @@
+//! Shared-fleet contract: fleet learning (transition exchange + parameter
+//! averaging) is bit-identical at every worker-pool width, the averaging
+//! round is the hand-computable order-invariant mean on every precision
+//! arm, a schedule that never fires leaves the isolated trajectory
+//! untouched (the regression pin for the isolated pool), and a shared
+//! fleet drained at a round boundary resumes to the uninterrupted run's
+//! report hash.
+
+use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
+use qfpga::coordinator::MissionConfig;
+use qfpga::experiment::{Experiment, ExperimentReport};
+use qfpga::nn::params::QNetParams;
+use qfpga::nn::Datapath;
+use qfpga::obs::manifest::report_sha256;
+use qfpga::qlearn::backend::BackendKind;
+use qfpga::qlearn::share::average_params;
+use qfpga::qlearn::SharePlan;
+use qfpga::util::{shutdown, Rng};
+use qfpga::Report;
+
+fn quick_cfg() -> MissionConfig {
+    MissionConfig {
+        episodes: 8,
+        max_steps: 40,
+        backend: BackendKind::Cpu,
+        precision: Precision::Float,
+        ..Default::default()
+    }
+}
+
+fn plan() -> SharePlan {
+    SharePlan { exchange_every: 2, avg_every: 4, pool_cap: 4 }
+}
+
+/// Per-rover fingerprint strict enough to catch any trajectory change:
+/// every episode's (steps, reward bits, ε bits) plus the update count.
+fn fingerprint(r: &ExperimentReport) -> Vec<(String, u64, Vec<(usize, u32, u32)>)> {
+    r.rovers
+        .iter()
+        .map(|m| {
+            (
+                m.config_desc.clone(),
+                m.train.total_updates,
+                m.train
+                    .episodes
+                    .iter()
+                    .map(|e| (e.steps, e.total_reward.to_bits(), e.epsilon.to_bits()))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn shared(cfg: &MissionConfig, rovers: usize, workers: usize, p: SharePlan) -> ExperimentReport {
+    Experiment::from_mission(cfg)
+        .rovers(rovers)
+        .workers(workers)
+        .share(p)
+        .run()
+        .unwrap()
+}
+
+/// The tentpole acceptance contract: a shared fleet reproduces itself
+/// bit-exactly at every `--workers` width, including the single-worker
+/// reference — exchange and averaging happen at episode-counted round
+/// boundaries in rover-id order, never thread-arrival order.
+#[test]
+fn shared_fleet_is_bit_identical_at_every_worker_width() {
+    let cfg = quick_cfg();
+    let want = shared(&cfg, 4, 1, plan()); // fully serial reference
+    assert_eq!(want.rovers.len(), 4);
+    let summary = want.share.expect("shared run must report its schedule");
+    assert_eq!(summary.exchanges, 3); // episodes 2, 4, 6 (not the final 8)
+    assert_eq!(summary.avg_rounds, 1); // episode 4 only
+
+    for workers in [2usize, 4] {
+        let got = shared(&cfg, 4, workers, plan());
+        assert_eq!(
+            fingerprint(&got),
+            fingerprint(&want),
+            "{workers}-worker shared fleet diverged from the serial reference"
+        );
+        assert_eq!(got.share, Some(summary), "{workers}-worker schedule drifted");
+    }
+
+    // sharing changes the trajectory: rovers really learn from each other
+    let isolated = Experiment::from_mission(&cfg).rovers(4).run().unwrap();
+    assert_ne!(
+        fingerprint(&want),
+        fingerprint(&isolated),
+        "the share schedule fired {} exchange(s) yet left trajectories untouched",
+        summary.exchanges
+    );
+}
+
+/// One averaging round equals the hand-computed mean — per element: sort
+/// the contributions by total order, sum in f64, divide, round to f32 and
+/// re-quantize onto the datapath grid — on every precision arm.
+#[test]
+fn averaging_round_matches_the_hand_mean_on_every_precision_arm() {
+    let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+    for prec in Precision::all() {
+        let dp = Datapath::for_precision(prec);
+        let mut rng = Rng::seeded(9102);
+        let sets: Vec<QNetParams> =
+            (0..3).map(|_| QNetParams::init(&net, 0.3, &mut rng)).collect();
+        let avg = average_params(&sets, &net, &dp).unwrap();
+
+        let tensors: Vec<Vec<Vec<f32>>> = sets.iter().map(QNetParams::to_tensors).collect();
+        let got = avg.to_tensors();
+        for t in 0..got.len() {
+            for e in 0..got[t].len() {
+                let mut vals: Vec<f32> = tensors.iter().map(|ts| ts[t][e]).collect();
+                vals.sort_by(f32::total_cmp);
+                let mean = (vals.iter().map(|&v| v as f64).sum::<f64>() / 3.0) as f32;
+                assert_eq!(
+                    got[t][e].to_bits(),
+                    dp.q(mean).to_bits(),
+                    "{prec:?}: tensor {t} elem {e}"
+                );
+            }
+        }
+    }
+}
+
+/// A share schedule whose exchange cadence never lands inside the mission
+/// (and with averaging off) must leave the fleet bit-identical to the
+/// plain isolated pool — the outbox tap may never perturb a trajectory.
+/// This is the regression pin for every pre-sharing fleet user.
+#[test]
+fn never_firing_schedule_is_bit_identical_to_the_isolated_fleet() {
+    let cfg = quick_cfg();
+    let never = SharePlan {
+        exchange_every: cfg.episodes * 10, // far past the mission
+        avg_every: 0,
+        pool_cap: 4,
+    };
+    let isolated = Experiment::from_mission(&cfg).rovers(3).workers(2).run().unwrap();
+    let inert = shared(&cfg, 3, 2, never);
+    assert_eq!(fingerprint(&inert), fingerprint(&isolated));
+    let summary = inert.share.unwrap();
+    assert_eq!((summary.exchanges, summary.avg_rounds), (0, 0));
+    assert!(isolated.share.is_none());
+}
+
+/// A shared fleet of one has nobody to exchange with and averages only
+/// itself: its rover must be bit-identical to the isolated single-rover
+/// reference even though every round boundary still fires.
+#[test]
+fn shared_fleet_of_one_matches_the_isolated_single_rover() {
+    let cfg = quick_cfg();
+    let alone = shared(&cfg, 1, 1, plan());
+    let reference = Experiment::from_mission(&cfg).rovers(1).run().unwrap();
+    assert_eq!(fingerprint(&alone), fingerprint(&reference));
+    // the schedule still ran (and is reported) — it just had no effect
+    assert_eq!(alone.share.unwrap().exchanges, 3);
+}
+
+/// Drain a shared fleet at its first round boundary, then resume from the
+/// on-disk rover checkpoints: the completed run must hash identically to
+/// the uninterrupted one, and checkpoints from a shared fleet must refuse
+/// to resume under a different schedule or into an isolated fleet.
+#[test]
+fn drained_shared_fleet_resumes_to_the_uninterrupted_hash() {
+    let cfg = quick_cfg();
+    let p = plan();
+    let dir = std::env::temp_dir()
+        .join(format!("qfpga-share-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let want = shared(&cfg, 3, 2, p);
+
+    shutdown::request(); // the signal lands before the first round finishes
+    let partial = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .workers(2)
+        .share(p)
+        .checkpoint(&dir, 100) // shared fleets save at round boundaries
+        .drain_on_signal(true)
+        .run()
+        .unwrap();
+    shutdown::reset();
+    assert!(partial.interrupted);
+    let done = partial.rovers[0].train.episodes.len();
+    assert!(done >= 1 && done < cfg.episodes, "drained after {done}/{}", cfg.episodes);
+    for i in 0..3 {
+        assert!(dir.join(format!("rover-{i}.json")).exists(), "rover-{i} not checkpointed");
+    }
+
+    // a different schedule or an isolated resume must be rejected, not
+    // silently blended into a different trajectory
+    let other = SharePlan { exchange_every: 4, ..p };
+    let err = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .share(other)
+        .checkpoint(&dir, 100)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("configuration"), "{err}");
+    let err = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .checkpoint(&dir, 100)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("configuration"), "{err}");
+
+    let got = Experiment::from_mission(&cfg)
+        .rovers(3)
+        .workers(2)
+        .share(p)
+        .checkpoint(&dir, 100)
+        .run()
+        .unwrap();
+    assert!(!got.interrupted);
+    assert_eq!(fingerprint(&got), fingerprint(&want));
+    assert_eq!(report_sha256(&got.to_json()), report_sha256(&want.to_json()));
+    // completion clears the resume state
+    for i in 0..3 {
+        assert!(!dir.join(format!("rover-{i}.json")).exists(), "rover-{i} left behind");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

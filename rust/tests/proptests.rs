@@ -532,6 +532,59 @@ fn random_char(rng: &mut Rng) -> char {
     POOL[rng.below(POOL.len())]
 }
 
+// --------------------------------------------------------- fleet averaging
+
+/// Shared-fleet parameter averaging is exactly permutation-invariant
+/// across rover order (the fleet mean may not depend on which worker
+/// finished first) and exactly idempotent on a fleet that already agrees
+/// on on-grid parameters (an averaging round over identical inputs is the
+/// identity, bit for bit) — over random shapes from the mission grid and
+/// both the float and Q(18,12) datapaths.
+#[test]
+fn prop_fleet_averaging_permutation_invariant_and_idempotent() {
+    use qfpga::nn::Datapath;
+    use qfpga::qlearn::share::average_params;
+
+    let mut rng = Rng::seeded(9102);
+    let grid = NetConfig::grid();
+    for case in 0..60 {
+        let net = grid[rng.below(grid.len())];
+        let fixed = rng.chance(0.5);
+        let dp = if fixed {
+            Datapath::for_precision_spec(Precision::Fixed, FixedSpec::default())
+        } else {
+            Datapath::for_precision(Precision::Float)
+        };
+        let ctx = format!("case {case} ({}, fixed={fixed})", net.name());
+        let n = rng.range(2, 6);
+        let sets: Vec<QNetParams> = (0..n)
+            .map(|_| QNetParams::init(&net, rng.f32_range(0.1, 0.6), &mut rng))
+            .collect();
+        let want = average_params(&sets, &net, &dp).unwrap();
+
+        // permutation invariance: a random shuffle of the rover order
+        // produces the bit-identical mean
+        let mut shuffled = sets.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.below(i + 1));
+        }
+        let got = average_params(&shuffled, &net, &dp).unwrap();
+        let (wt, gt) = (want.to_tensors(), got.to_tensors());
+        for (t, (wv, gv)) in wt.iter().zip(&gt).enumerate() {
+            for (e, (w, g)) in wv.iter().zip(gv).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{ctx}: tensor {t} elem {e}");
+            }
+        }
+
+        // idempotence on an agreeing fleet: averaging n copies of on-grid
+        // parameters returns them unchanged (n·x / n is exact in f64 and
+        // the grid pass is a fixpoint on on-grid values)
+        let on_grid = average_params(&sets[..1], &net, &dp).unwrap();
+        let again = average_params(&vec![on_grid.clone(); n], &net, &dp).unwrap();
+        assert_eq!(again.max_abs_diff(&on_grid), 0.0, "{ctx}: averaging drifted");
+    }
+}
+
 // ------------------------------------------------------------- PreparedNet
 
 /// Cache-invalidation soundness: any interleaving of parameter loads,
