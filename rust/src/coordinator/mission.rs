@@ -80,7 +80,7 @@ impl MissionConfig {
             precision: self.precision,
             hyper: self.hyper,
             fixed_spec: self.fixed_spec,
-            fault: self.fault,
+            fault: self.fault.clone(),
         }
     }
 
@@ -118,10 +118,21 @@ impl MissionConfig {
                 "fault",
                 match &self.fault {
                     None => Json::Null,
-                    Some(plan) => Json::obj(vec![
-                        ("rate", Json::Num(plan.rate)),
-                        ("mitigation", Json::Str(plan.mitigation.label())),
-                    ]),
+                    Some(plan) => {
+                        let mut fields = vec![
+                            ("rate", Json::Num(plan.rate)),
+                            ("mitigation", Json::Str(plan.mitigation.label())),
+                        ];
+                        // only-when-set: constant-rate data-only plans keep
+                        // the historical byte-identical wire form
+                        if let Some(s) = &plan.schedule {
+                            fields.push(("schedule", s.to_json()));
+                        }
+                        if let Some(c) = &plan.cram {
+                            fields.push(("cram", c.to_json()));
+                        }
+                        Json::obj(fields)
+                    }
                 },
             ),
             ("fixed_word", Json::Num(self.fixed_spec.word as f64)),
@@ -138,6 +149,14 @@ impl MissionConfig {
             Some(f) => Some(FaultPlan {
                 rate: f.req_f64("rate")?,
                 mitigation: f.req_str("mitigation")?.parse()?,
+                schedule: match f.get("schedule") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => Some(crate::fault::RateSchedule::from_json(s)?),
+                },
+                cram: match f.get("cram") {
+                    None | Some(Json::Null) => None,
+                    Some(c) => Some(crate::fault::CramPlan::from_json(c)?),
+                },
             }),
         };
         Ok(MissionConfig {
@@ -170,7 +189,7 @@ impl MissionConfig {
     /// the compatibility key stamped into checkpoints so a resume can never
     /// silently mix a stale snapshot into a changed configuration.
     pub fn fingerprint(&self) -> String {
-        format!(
+        let mut fp = format!(
             "{}|{}|{}|{}|ep{}|ms{}|seed{}|b{}|mb{}|Q({},{})",
             self.backend.as_str(),
             self.arch.as_str(),
@@ -183,7 +202,20 @@ impl MissionConfig {
             self.microbatch,
             self.fixed_spec.word,
             self.fixed_spec.frac
-        )
+        );
+        // faulted missions cannot checkpoint, so historical fingerprints
+        // never carried fault components — append them only when present
+        // so every pre-existing fingerprint stays byte-identical
+        if let Some(plan) = &self.fault {
+            fp.push_str(&format!("|seu({:e}@{})", plan.rate, plan.mitigation.label()));
+            if let Some(s) = &plan.schedule {
+                fp.push_str(&format!("|sched({})", s.label()));
+            }
+            if let Some(c) = &plan.cram {
+                fp.push_str(&format!("|cram({})", c.label()));
+            }
+        }
+        fp
     }
 }
 
@@ -433,6 +465,14 @@ impl MissionRun {
                         .mitigation
                         .extra_cycles_per_update(&self.net, cfg.precision, acc.timing())
                         * acc.stats().updates;
+                    // partial reconfiguration stalls the datapath: each
+                    // repaired frame pays a detect + readback + rewrite
+                    // burst through the timing model
+                    if plan.cram.is_some() {
+                        if let Some(s) = &fault {
+                            cycles += acc.timing().cram_repair_cycles() * s.cram_repairs;
+                        }
+                    }
                 }
                 (Some(acc.device().cycles_to_us(cycles)), Some(cycles))
             }
@@ -661,7 +701,7 @@ mod tests {
                 episodes: 6,
                 max_steps: 40,
                 backend,
-                fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+                fault: Some(FaultPlan::constant(1e-4, Mitigation::None)),
                 ..Default::default()
             };
             let r = run_mission(&cfg).unwrap();
@@ -683,11 +723,11 @@ mod tests {
             ..Default::default()
         };
         let none = MissionConfig {
-            fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+            fault: Some(FaultPlan::constant(1e-4, Mitigation::None)),
             ..base.clone()
         };
         let tmr = MissionConfig {
-            fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::Tmr }),
+            fault: Some(FaultPlan::constant(1e-4, Mitigation::Tmr)),
             ..base
         };
         let a = run_mission(&none).unwrap();
@@ -712,7 +752,7 @@ mod tests {
                 episodes: 5,
                 max_steps: 30,
                 backend: BackendKind::FpgaSim,
-                fault: Some(FaultPlan { rate: 5e-4, mitigation }),
+                fault: Some(FaultPlan::constant(5e-4, mitigation)),
                 ..Default::default()
             };
             let a = run_mission(&cfg).unwrap();
@@ -753,7 +793,7 @@ mod tests {
             hyper: Hyper { alpha: 0.21, gamma: 0.93, lr: 0.07 },
             microbatch: true,
             batch: 5,
-            fault: Some(FaultPlan { rate: 3.5e-4, mitigation: Mitigation::Scrub { interval: 17 } }),
+            fault: Some(FaultPlan::constant(3.5e-4, Mitigation::Scrub { interval: 17 })),
             fixed_spec: FixedSpec { word: 24, frac: 16 },
         };
         // through the Json value and through text (what manifests store)
@@ -770,6 +810,27 @@ mod tests {
         // fault-free configs serialize fault: null and read back as None
         let clean = MissionConfig::default();
         assert_eq!(MissionConfig::from_json(&clean.to_json()).unwrap().fault, None);
+        // the schedule + cram extensions survive the text roundtrip too
+        use crate::fault::{CramPlan, RateSchedule};
+        let hardened = MissionConfig {
+            fault: Some(
+                FaultPlan::constant(2e-4, Mitigation::Tmr)
+                    .with_schedule(RateSchedule::Spike {
+                        base: 2e-4,
+                        peak: 4e-3,
+                        start: 25,
+                        len: 60,
+                    })
+                    .with_cram(CramPlan { rate: 3e-3, scrub: Some(32) }),
+            ),
+            ..MissionConfig::default()
+        };
+        let text = hardened.to_json().to_string();
+        let back = MissionConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fault, hardened.fault);
+        assert_eq!(back.fingerprint(), hardened.fingerprint());
+        assert!(back.fingerprint().contains("|sched("));
+        assert!(back.fingerprint().contains("|cram("));
     }
 
     #[test]

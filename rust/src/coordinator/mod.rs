@@ -23,6 +23,9 @@
 //! * [`fleetlearn`] — the fleet-learning campaign: shared vs isolated
 //!   fleets swept over fleet size per scenario, condensed into table F1
 //!   (the `qfpga fleetlearn` subcommand).
+//! * [`harden`] — the radiation-hardening auto-tuner: mitigation placement
+//!   × CRAM scrub interval × word length Pareto-searched per environment,
+//!   condensed into table H1 (the `qfpga harden` subcommand).
 //! * [`scheduler`] — the fleet entry point (`run_fleet`); the worker pool
 //!   itself lives in [`crate::experiment::builder`].
 //! * [`telemetry`] — learning curves, per-rover progress streaming,
@@ -36,6 +39,7 @@
 //!   backend across the fleet).
 
 pub mod fleetlearn;
+pub mod harden;
 pub mod mission;
 pub mod scenario;
 pub mod scheduler;
@@ -44,13 +48,15 @@ pub mod telemetry;
 pub mod throughput;
 
 pub use fleetlearn::{fleetlearn_table, fleetlearn_table_with_drain, FleetLearnSpec};
+pub use harden::{harden_table, harden_table_with_drain, HardenSpec};
 pub use mission::{run_mission, MissionCheckpoint, MissionConfig, MissionReport, MissionRun};
 pub use scenario::{
     convergence_episode, scenario_table, scenario_table_with_drain, ScenarioSpec,
 };
 pub use scheduler::{run_fleet, run_fleet_with_workers, FleetReport};
 pub use sweep::{
-    measure_backend, measure_backend_batched, resilience, SweepReport, WorkloadTiming,
+    measure_backend, measure_backend_batched, resilience, resilience_scheduled, SweepReport,
+    WorkloadTiming,
 };
 pub use telemetry::RoverProgress;
 pub use throughput::{throughput_table, ThroughputSpec};

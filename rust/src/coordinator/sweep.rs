@@ -274,6 +274,20 @@ pub fn resilience(
     mitigations: &[Mitigation],
     rovers: usize,
 ) -> Result<ResilienceReport> {
+    resilience_scheduled(base, backends, rates, mitigations, rovers, None)
+}
+
+/// [`resilience`] under a time-varying rate profile (`--rate-schedule`):
+/// every cell's constant rate becomes the base of a scaled copy of
+/// `schedule`, so one mission profile drives the whole grid.
+pub fn resilience_scheduled(
+    base: &MissionConfig,
+    backends: &[BackendKind],
+    rates: &[f64],
+    mitigations: &[Mitigation],
+    rovers: usize,
+    schedule: Option<crate::fault::RateSchedule>,
+) -> Result<ResilienceReport> {
     if backends.is_empty() || rates.is_empty() || mitigations.is_empty() {
         return Err(Error::Config(
             "resilience sweep needs ≥1 backend, rate and mitigation".into(),
@@ -285,6 +299,7 @@ pub fn resilience(
         rates: rates.to_vec(),
         mitigations: mitigations.to_vec(),
         rovers: rovers.max(1),
+        schedule,
     })
 }
 

@@ -241,7 +241,7 @@ impl Experiment {
             hyper: self.spec.hyper,
             microbatch: self.microbatch,
             batch: self.batch,
-            fault: self.spec.fault,
+            fault: self.spec.fault.clone(),
             fixed_spec: self.spec.fixed_spec,
         }
     }
@@ -976,18 +976,22 @@ impl ExperimentReport {
             fields.push(("fpga_cycles", Json::Num(cycles as f64)));
         }
         if let Some(s) = &r.fault {
-            fields.push((
-                "fault",
-                Json::obj(vec![
-                    ("injected", Json::Num(s.injected as f64)),
-                    ("transient", Json::Num(s.transient as f64)),
-                    ("masked", Json::Num(s.masked as f64)),
-                    ("corrected", Json::Num(s.corrected as f64)),
-                    ("uncorrectable", Json::Num(s.uncorrectable as f64)),
-                    ("scrubbed", Json::Num(s.scrubbed as f64)),
-                    ("total_upsets", Json::Num(s.total_upsets() as f64)),
-                ]),
-            ));
+            let mut fs = vec![
+                ("injected", Json::Num(s.injected as f64)),
+                ("transient", Json::Num(s.transient as f64)),
+                ("masked", Json::Num(s.masked as f64)),
+                ("corrected", Json::Num(s.corrected as f64)),
+                ("uncorrectable", Json::Num(s.uncorrectable as f64)),
+                ("scrubbed", Json::Num(s.scrubbed as f64)),
+                ("total_upsets", Json::Num(s.total_upsets() as f64)),
+            ];
+            // only-when-struck: missions without a CRAM plan keep their
+            // historical byte-identical fault block
+            if s.cram_upsets > 0 || s.cram_repairs > 0 {
+                fs.push(("cram_upsets", Json::Num(s.cram_upsets as f64)));
+                fs.push(("cram_repairs", Json::Num(s.cram_repairs as f64)));
+            }
+            fields.push(("fault", Json::obj(fs)));
         }
         Json::obj(fields)
     }
@@ -1166,7 +1170,7 @@ mod tests {
         ))
         .episodes(5)
         .max_steps(40)
-        .faults(FaultPlan { rate: 1e-3, mitigation: Mitigation::None })
+        .faults(FaultPlan::constant(1e-3, Mitigation::None))
         .run()
         .unwrap();
         let stats = r.rovers[0].fault.expect("fault stats");
@@ -1181,7 +1185,7 @@ mod tests {
             Precision::Fixed,
         ))
         .episodes(4)
-        .faults(FaultPlan { rate: 1e-3, mitigation: Mitigation::None })
+        .faults(FaultPlan::constant(1e-3, Mitigation::None))
         .share(plan)
         .run()
         .unwrap_err();

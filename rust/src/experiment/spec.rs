@@ -2,7 +2,7 @@
 
 use crate::config::{Hyper, NetConfig, Precision};
 use crate::error::{Error, Result};
-use crate::fault::{FaultModel, FaultPlan, FaultStats, FaultyBackend, SeuHook};
+use crate::fault::{CramState, FaultModel, FaultPlan, FaultStats, FaultyBackend, FrameMap, SeuHook};
 use crate::fixed::FixedSpec;
 use crate::fpga::FpgaAccelerator;
 use crate::nn::params::QNetParams;
@@ -14,6 +14,8 @@ use crate::runtime::Runtime;
 pub(crate) const FAULT_STORE_SALT: u64 = 0xFA17_5EED_0000_0001;
 /// Seed diversifier for the datapath-FIFO SEU stream.
 pub(crate) const FAULT_FIFO_SALT: u64 = 0xFA17_5EED_0000_0002;
+/// Seed diversifier for the configuration-memory (CRAM) strike stream.
+pub(crate) const FAULT_CRAM_SALT: u64 = 0xFA17_5EED_0000_0003;
 
 /// Everything needed to construct one backend instance.
 #[derive(Debug, Clone, PartialEq)]
@@ -439,7 +441,7 @@ impl BackendFactory {
         seed: u64,
     ) -> Result<BuiltBackend> {
         let mut backend = self.build(spec, params)?;
-        let Some(plan) = spec.fault else {
+        let Some(plan) = spec.fault.clone() else {
             return Ok(BuiltBackend::Clean(backend));
         };
         // expose the FIFO/datapath words of the integer datapaths (Q(18,12)
@@ -448,20 +450,32 @@ impl BackendFactory {
         // masked/corrected)
         if matches!(spec.precision, Precision::Fixed | Precision::Int8) {
             if let Some(acc) = backend.accelerator_mut() {
-                acc.set_seu_hook(Some(SeuHook::new(
+                acc.set_seu_hook(Some(SeuHook::with_schedule(
                     seed ^ FAULT_FIFO_SALT,
                     plan.rate,
                     plan.mitigation,
+                    plan.schedule.clone(),
                 )));
             }
         }
-        Ok(BuiltBackend::Faulted(Box::new(FaultyBackend::with_spec(
+        let mut faulted = FaultyBackend::with_spec(
             backend,
             spec.precision,
             spec.fixed_spec,
             plan.mitigation,
-            FaultModel::new(seed ^ FAULT_STORE_SALT, plan.rate),
-        ))))
+            FaultModel::with_schedule(seed ^ FAULT_STORE_SALT, plan.rate, plan.schedule.clone()),
+        );
+        if let Some(cp) = plan.cram {
+            // the CRAM process runs at its own base rate but follows the
+            // mission's time profile (cram_schedule rescales it)
+            faulted = faulted.with_cram(CramState::new(
+                seed ^ FAULT_CRAM_SALT,
+                cp,
+                FrameMap::of(&spec.net, spec.precision),
+                plan.cram_schedule(),
+            ));
+        }
+        Ok(BuiltBackend::Faulted(Box::new(faulted)))
     }
 }
 
@@ -575,7 +589,7 @@ mod tests {
         assert!(clean.fault_stats().is_none());
 
         let faulted_spec =
-            clean_spec.with_fault(FaultPlan { rate: 1e-3, mitigation: Mitigation::Tmr });
+            clean_spec.with_fault(FaultPlan::constant(1e-3, Mitigation::Tmr));
         let mut faulted = factory
             .build_mission(&faulted_spec, params_for(&net, 7), 7)
             .unwrap();
@@ -592,7 +606,7 @@ mod tests {
         let factory = BackendFactory::offline();
         let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
         let spec = BackendSpec::fpga_sim(net, Precision::Fixed)
-            .with_fault(FaultPlan { rate: 1e-4, mitigation: Mitigation::None });
+            .with_fault(FaultPlan::constant(1e-4, Mitigation::None));
         let built = factory.build_mission(&spec, params_for(&net, 7), 7).unwrap();
         assert!(built.accelerator().is_some());
         let clean = factory

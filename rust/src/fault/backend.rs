@@ -19,6 +19,11 @@
 //! weight each update anyway. Everything draws from one seeded
 //! [`FaultModel`] stream, so a mission is bit-reproducible from
 //! `(seed, rate, mitigation)`.
+//!
+//! With a CRAM plan attached ([`FaultyBackend::with_cram`]), a second
+//! seeded process ([`CramState`]) strikes the configuration plane each
+//! window; dirty frames structurally warp the loaded parameters until a
+//! partial-reconfiguration scrub pass repairs them.
 
 use crate::config::{NetConfig, Precision};
 use crate::error::Result;
@@ -27,6 +32,7 @@ use crate::nn::params::QNetParams;
 use crate::qlearn::backend::QBackend;
 use crate::qlearn::replay::FlatBatch;
 
+use super::cram::CramState;
 use super::inject::{flatten_params, flip_f32_bit, unflatten_params, WordCodec};
 use super::mitigation::{Mitigation, ProtectedStore};
 use super::model::{strike_window, FaultModel, FaultStats};
@@ -40,6 +46,8 @@ pub struct FaultyBackend<B: QBackend> {
     store: ProtectedStore,
     model: FaultModel,
     mitigation: Mitigation,
+    /// Configuration-memory strike process; `None` strikes data only.
+    cram: Option<CramState>,
 }
 
 impl<B: QBackend> FaultyBackend<B> {
@@ -61,7 +69,20 @@ impl<B: QBackend> FaultyBackend<B> {
         let codec = WordCodec::new(prec, spec);
         let words = codec.encode_all(&flatten_params(&inner.params()));
         let store = ProtectedStore::new(mitigation, codec.bits_per_word(), &words);
-        FaultyBackend { inner, cfg, codec, store, model, mitigation }
+        FaultyBackend { inner, cfg, codec, store, model, mitigation, cram: None }
+    }
+
+    /// Attach a configuration-memory strike process: CRAM upsets corrupt
+    /// the loaded datapath structurally (on top of any data strikes) until
+    /// a scrub pass repairs the struck frames.
+    pub fn with_cram(mut self, cram: CramState) -> Self {
+        self.cram = Some(cram);
+        self
+    }
+
+    /// The CRAM strike state, when a CRAM plan is attached.
+    pub fn cram(&self) -> Option<&CramState> {
+        self.cram.as_ref()
     }
 
     pub fn inner(&self) -> &B {
@@ -76,9 +97,14 @@ impl<B: QBackend> FaultyBackend<B> {
         self.mitigation
     }
 
-    /// Injection + masking accounting so far.
+    /// Injection + masking accounting so far (data process plus any
+    /// attached CRAM process).
     pub fn stats(&self) -> FaultStats {
-        self.model.stats
+        let mut s = self.model.stats;
+        if let Some(c) = &self.cram {
+            s.add(&c.stats());
+        }
+        s
     }
 
     /// Transient upsets on a register file of f32 words (transition
@@ -106,19 +132,35 @@ impl<B: QBackend> FaultyBackend<B> {
     fn expose_and_load(&mut self, steps: u64) -> Result<()> {
         let flips = self.model.upsets(self.store.susceptible_bits(), steps);
         let scrub_due = self.store.tick_scrub(steps);
-        if flips == 0 {
+        // the CRAM clock must advance every window regardless of the data
+        // outcome — its strike process is independent, and a standing
+        // dirty frame forces a (re)corrupted load even on data-clean steps
+        let cram_active = match &mut self.cram {
+            Some(c) => c.advance(steps),
+            None => false,
+        };
+        if flips == 0 && !cram_active {
             // a due scrub pass on an (effectively) freshly written store
             // restores nothing; the timer was advanced above
             return Ok(());
         }
         self.sync_store();
-        self.store.apply_upsets(&mut self.model, flips);
-        if scrub_due {
-            crate::obs::metrics().fault_scrub_bursts.inc();
-            self.store.scrub_now(&mut self.model);
+        if flips > 0 {
+            self.store.apply_upsets(&mut self.model, flips);
+            if scrub_due {
+                crate::obs::metrics().fault_scrub_bursts.inc();
+                self.store.scrub_now(&mut self.model);
+            }
         }
         let words = self.store.read(&mut self.model.stats);
-        let params = unflatten_params(&self.cfg, &self.codec.decode_all(&words))?;
+        let mut flat = self.codec.decode_all(&words);
+        // CRAM corruption warps the *datapath*, not the store: dirty
+        // frames re-apply their structural transform to whatever the
+        // hardware loads this window, and vanish once scrubbed
+        if let Some(c) = &self.cram {
+            c.corrupt(&mut flat);
+        }
+        let params = unflatten_params(&self.cfg, &flat)?;
         self.inner.load_params(&params);
         Ok(())
     }
@@ -331,6 +373,55 @@ mod tests {
         );
         assert!(b.update_batch(&FlatBatch::empty()).unwrap().is_empty());
         assert_eq!(b.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn cram_strikes_warp_training_and_scrubbing_contains_them() {
+        use crate::fault::cram::{CramPlan, CramState, FrameMap};
+        let net = NetConfig::new(Arch::Mlp, EnvKind::Simple);
+        let frames = FrameMap::of(&net, Precision::Fixed);
+        let build = |scrub: Option<u32>| {
+            let plan = CramPlan { rate: 2e-4, scrub };
+            FaultyBackend::new(
+                cpu(net, Precision::Fixed, 5),
+                Precision::Fixed,
+                Mitigation::None,
+                FaultModel::new(51, 0.0), // data plane quiet: isolate CRAM
+            )
+            .with_cram(CramState::new(51, plan, frames, None))
+        };
+        let mut clean = FaultyBackend::new(
+            cpu(net, Precision::Fixed, 5),
+            Precision::Fixed,
+            Mitigation::None,
+            FaultModel::new(51, 0.0),
+        );
+        let mut unscrubbed = build(None);
+        let mut scrubbed = build(Some(0));
+        drive(&mut clean, &net, 80);
+        drive(&mut unscrubbed, &net, 80);
+        drive(&mut scrubbed, &net, 80);
+        let s = unscrubbed.stats();
+        assert!(s.cram_upsets > 0, "the CRAM process must strike");
+        assert_eq!(s.cram_repairs, 0, "no scrubber, no repairs");
+        let sc = scrubbed.stats();
+        // repairs count distinct struck frames per window, so they can
+        // trail the strike count — but never reach zero while strikes land
+        assert!(
+            sc.cram_repairs > 0 && sc.cram_repairs <= sc.cram_upsets,
+            "continuous scrub repairs every struck frame"
+        );
+        // same arrival stream: standing CRAM corruption drags training off
+        // the fault-free trajectory where continuous scrub stays on it
+        let un_drift = clean.params().max_abs_diff(&unscrubbed.params());
+        let sc_drift = clean.params().max_abs_diff(&scrubbed.params());
+        assert!(un_drift > 0.0, "dirty frames must perturb the weights");
+        assert!(sc_drift < un_drift, "scrubbed drift {sc_drift} >= unscrubbed {un_drift}");
+        // and both arms replay bit-identically from their seed
+        let mut replay = build(None);
+        drive(&mut replay, &net, 80);
+        assert_eq!(replay.params(), unscrubbed.params());
+        assert_eq!(replay.stats(), unscrubbed.stats());
     }
 
     #[test]

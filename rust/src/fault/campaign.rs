@@ -18,6 +18,7 @@ use crate::util::Json;
 
 use super::mitigation::Mitigation;
 use super::model::FaultStats;
+use super::schedule::RateSchedule;
 use super::FaultPlan;
 
 /// What to campaign.
@@ -32,6 +33,11 @@ pub struct CampaignSpec {
     pub mitigations: Vec<Mitigation>,
     /// Rovers per cell (the fleet width).
     pub rovers: usize,
+    /// Optional time profile (`--rate-schedule`): each cell's constant
+    /// rate becomes the base of this profile, rescaled so the profile's
+    /// base matches the cell rate (a zero-base profile — a pure solar
+    /// event — is applied as-is). `None` keeps constant rates.
+    pub schedule: Option<RateSchedule>,
 }
 
 /// One campaign cell outcome.
@@ -67,6 +73,8 @@ pub struct ResilienceReport {
     pub episodes: usize,
     pub seed: u64,
     pub precision: Precision,
+    /// The time profile the cells ran under, when not constant.
+    pub schedule: Option<RateSchedule>,
 }
 
 impl ResilienceReport {
@@ -80,6 +88,9 @@ impl ResilienceReport {
             self.precision.as_str(),
             self.seed
         ));
+        if let Some(s) = &self.schedule {
+            out.push_str(&format!("  rate schedule: {} (cell rates scale its base)\n", s.label()));
+        }
         out.push_str(&format!(
             "  {:<9} {:>9} {:<9} {:>8} {:>8} {:>7} {:>8} {:>8} {:>7} {:>7} {:>7}\n",
             "backend",
@@ -142,15 +153,21 @@ impl ResilienceReport {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Str("R2".into())),
             ("campaign", Json::Str("resilience".into())),
             ("rovers", Json::Num(self.rovers as f64)),
             ("episodes", Json::Num(self.episodes as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("precision", Json::Str(self.precision.as_str().into())),
-            ("cells", Json::Arr(cells)),
-        ])
+        ];
+        // only-when-set: constant-rate campaigns keep their historical
+        // byte-identical JSON
+        if let Some(s) = &self.schedule {
+            fields.push(("schedule", s.to_json()));
+        }
+        fields.push(("cells", Json::Arr(cells)));
+        Json::obj(fields)
     }
 }
 
@@ -185,7 +202,20 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<ResilienceReport> {
         for &rate in &spec.rates {
             for &mitigation in &spec.mitigations {
                 let mut cfg = clean_cfg.clone();
-                cfg.fault = Some(FaultPlan { rate, mitigation });
+                let schedule = spec.schedule.clone().map(|s| {
+                    let base = s.base_rate();
+                    if base > 0.0 {
+                        s.scaled(rate / base)
+                    } else {
+                        s
+                    }
+                });
+                cfg.fault = Some(FaultPlan {
+                    rate,
+                    mitigation,
+                    schedule,
+                    cram: None,
+                });
                 let fleet = run_fleet(&cfg, spec.rovers)?;
                 let mut stats = FaultStats::default();
                 for rover in &fleet.rovers {
@@ -216,6 +246,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<ResilienceReport> {
         episodes: spec.base.episodes,
         seed: spec.base.seed,
         precision: spec.base.precision,
+        schedule: spec.schedule.clone(),
     })
 }
 
@@ -239,6 +270,7 @@ mod tests {
             rates: vec![1e-4],
             mitigations: vec![Mitigation::None, Mitigation::Tmr],
             rovers: 2,
+            schedule: None,
         }
     }
 
@@ -276,5 +308,25 @@ mod tests {
         // the typed-report surface pairs campaigns by id
         assert_eq!(parsed.req_str("id").unwrap(), "R2");
         assert_eq!(crate::report::Report::id(&r), "R2");
+        // constant-rate campaigns carry no schedule key (wire back-compat)
+        assert!(j.get("schedule").is_none());
+    }
+
+    #[test]
+    fn scheduled_campaign_is_deterministic_and_labels_its_profile() {
+        let mut spec = quick_spec();
+        // base matches the cell rate, so the scaling factor is exactly 1
+        // and every cell sees the constant profile *plus* the event window
+        spec.schedule = Some(RateSchedule::Spike { base: 1e-4, peak: 5e-3, start: 10, len: 40 });
+        let a = run_campaign(&spec).unwrap();
+        let b = run_campaign(&spec).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.cells.len(), 2);
+        for c in &a.cells {
+            assert!(c.stats.total_upsets() > 0, "{}", c.mitigation.label());
+        }
+        let j = a.to_json();
+        assert_eq!(j.req_str("schedule").unwrap(), spec.schedule.as_ref().unwrap().label());
+        assert!(a.render().contains("rate schedule:"));
     }
 }

@@ -1,0 +1,531 @@
+//! Configuration-memory (CRAM) upsets: structural faults on the modeled
+//! configuration-frame map of the synthesized design.
+//!
+//! Data upsets ([`super::model`]) flip *stored values* — a struck weight is
+//! wrong until the next write-back. CRAM upsets flip *configuration bits*:
+//! the LUT equations, routing muxes and DSP opmodes that define the
+//! datapath itself, so a struck frame makes the hardware **misbehave
+//! deterministically on every operation** until the frame is repaired.
+//! On real SRAM FPGAs the configuration plane dominates the SEU
+//! cross-section (tens of Mb of CRAM vs kilobits of user registers), which
+//! is exactly why space deployments pair TMR with configuration scrubbing.
+//!
+//! The model here:
+//!
+//! * A [`FrameMap`] derived from the [`crate::fpga::area`] unit counts of
+//!   the synthesized design: LUT fabric, DSP columns, BRAM (sigmoid ROM)
+//!   columns and control-FSM registers each map to a deterministic number
+//!   of configuration frames ([`CRAM_FRAME_BITS`] bits each).
+//! * A seeded Poisson strike process over the frame-bit population
+//!   (schedule-aware, same [`super::RateSchedule`] machinery as the data
+//!   process), each strike marking one frame *dirty*.
+//! * While a frame is dirty, [`CramState::corrupt`] applies that frame's
+//!   class-specific structural fault to the datapath's loaded parameters —
+//!   the same deterministic transform every exposure window (a struck
+//!   multiplier keeps producing sign-inverted products; it does not
+//!   re-randomize), until a scrub pass repairs the frame.
+//! * **Partial-reconfiguration scrub** is the mitigation: `scrub: Some(n)`
+//!   runs a readback+repair pass every `n` steps; `Some(0)` models
+//!   continuous readback scrubbing (every upset is detected and repaired
+//!   within its own exposure window, so the corruption never reaches the
+//!   datapath); `None` leaves the design unscrubbed. Detection latency and
+//!   repair cycles are charged through
+//!   [`crate::fpga::TimingModel::cram_repair_cycles`], the scrubber
+//!   hardware through [`crate::fpga::area::cram_scrubber_resources`] and
+//!   [`crate::fpga::power::cram_scrubber_power_w`].
+//!
+//! Every strike and repair is appended to an event log
+//! ([`CramState::log`]) keyed by (step, frame), which is what the
+//! determinism suite compares bit-for-bit across runs and fleet widths.
+
+use std::collections::BTreeMap;
+
+use crate::config::{NetConfig, Precision};
+use crate::error::{Error, Result};
+use crate::fpga::area::accelerator_resources;
+use crate::util::Json;
+
+use super::model::{FaultModel, FaultStats};
+use super::schedule::RateSchedule;
+
+/// Bits per configuration frame (7-series: 101 words × 32 bits).
+pub const CRAM_FRAME_BITS: u64 = 3232;
+
+/// LUTs configured per logic frame (column-granularity abstraction).
+const LUTS_PER_FRAME: u64 = 400;
+
+/// Flip-flop init/control bits configured per control frame.
+const FFS_PER_FRAME: u64 = 800;
+
+/// The CRAM leg of a [`super::FaultPlan`]: strike rate on the
+/// configuration plane plus the scrub mitigation setting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CramPlan {
+    /// Upsets per CRAM bit per step (typically well above the data rate —
+    /// the configuration plane is the larger target).
+    pub rate: f64,
+    /// Partial-reconfiguration scrub interval in steps: `None` leaves the
+    /// design unscrubbed, `Some(0)` is continuous readback scrubbing,
+    /// `Some(n)` runs a pass every `n` steps.
+    pub scrub: Option<u32>,
+}
+
+impl CramPlan {
+    /// Fingerprint/label component, e.g. `3e-3@scrub:64` or
+    /// `3e-3@unscrubbed`.
+    pub fn label(&self) -> String {
+        match self.scrub {
+            Some(n) => format!("{:e}@scrub:{n}", self.rate),
+            None => format!("{:e}@unscrubbed", self.rate),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rate", Json::Num(self.rate)),
+            (
+                "scrub",
+                self.scrub.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CramPlan> {
+        let rate = j.req_f64("rate")?;
+        if !rate.is_finite() || rate < 0.0 {
+            return Err(Error::interface(format!(
+                "cram plan rate {rate} must be a finite non-negative upsets/bit/step"
+            )));
+        }
+        let scrub = match j.get("scrub") {
+            None | Some(Json::Null) => None,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n <= u32::MAX as f64 => {
+                Some(*n as u32)
+            }
+            Some(other) => {
+                return Err(Error::interface(format!(
+                    "cram plan scrub must be null or a step interval, got `{other}`"
+                )))
+            }
+        };
+        Ok(CramPlan { rate, scrub })
+    }
+}
+
+/// What a struck frame configures — selects the deterministic structural
+/// fault the corruption applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameClass {
+    /// LUT fabric (adder trees, comparators): a stuck intermediate line.
+    Logic,
+    /// DSP column (multipliers): opmode corruption, sign-inverted products.
+    Arith,
+    /// BRAM column (sigmoid ROMs): stuck-at-zero output port.
+    Rom,
+    /// Control-FSM registers: a stuck state bit forcing magnitudes.
+    Control,
+}
+
+/// Configuration frames of the synthesized design, by class — derived
+/// deterministically from the [`crate::fpga::area`] resource counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameMap {
+    pub logic: u64,
+    pub arith: u64,
+    pub rom: u64,
+    pub control: u64,
+}
+
+impl FrameMap {
+    /// The frame map of one accelerator configuration: LUTs pack
+    /// [`LUTS_PER_FRAME`] per logic frame, each DSP occupies one arithmetic
+    /// frame, each BRAM36 one ROM frame, and FF init/control bits pack
+    /// [`FFS_PER_FRAME`] per control frame.
+    pub fn of(cfg: &NetConfig, prec: Precision) -> FrameMap {
+        let r = accelerator_resources(cfg, prec);
+        FrameMap {
+            logic: r.luts.div_ceil(LUTS_PER_FRAME).max(1),
+            arith: r.dsps,
+            rom: r.bram36,
+            control: r.ffs.div_ceil(FFS_PER_FRAME).max(1),
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.logic + self.arith + self.rom + self.control
+    }
+
+    /// Total susceptible configuration bits (the strike-process λ driver).
+    pub fn total_bits(&self) -> u64 {
+        self.total() * CRAM_FRAME_BITS
+    }
+
+    /// Which class frame index `frame` (in `[0, total)`) belongs to.
+    pub fn class_of(&self, frame: u64) -> FrameClass {
+        if frame < self.logic {
+            FrameClass::Logic
+        } else if frame < self.logic + self.arith {
+            FrameClass::Arith
+        } else if frame < self.logic + self.arith + self.rom {
+            FrameClass::Rom
+        } else {
+            FrameClass::Control
+        }
+    }
+}
+
+/// One entry of the strike/repair event log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CramEvent {
+    /// Mission step at which the event landed (exposure-window end).
+    pub step: u64,
+    pub frame: u64,
+    pub kind: CramEventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CramEventKind {
+    Upset,
+    /// A scrub pass rewrote the frame `latency` steps after its strike.
+    Repair { latency: u64 },
+}
+
+/// Live CRAM fault state of one accelerator instance: seeded strike
+/// process, dirty-frame set, scrub countdown, and the deterministic event
+/// log.
+#[derive(Debug, Clone)]
+pub struct CramState {
+    model: FaultModel,
+    frames: FrameMap,
+    scrub: Option<u32>,
+    since_scrub: u64,
+    step: u64,
+    /// Dirty frames → the step their (earliest) strike landed.
+    dirty: BTreeMap<u64, u64>,
+    log: Vec<CramEvent>,
+}
+
+impl CramState {
+    /// `schedule` is the (already CRAM-scaled) rate profile; `None` keeps
+    /// the plan's constant rate.
+    pub fn new(
+        seed: u64,
+        plan: CramPlan,
+        frames: FrameMap,
+        schedule: Option<RateSchedule>,
+    ) -> CramState {
+        CramState {
+            model: FaultModel::with_schedule(seed, plan.rate, schedule),
+            frames,
+            scrub: plan.scrub,
+            since_scrub: 0,
+            step: 0,
+            dirty: BTreeMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn frames(&self) -> FrameMap {
+        self.frames
+    }
+
+    pub fn dirty_frames(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// The deterministic strike/repair history (what the determinism suite
+    /// compares across runs and fleet widths).
+    pub fn log(&self) -> &[CramEvent] {
+        &self.log
+    }
+
+    /// Upset/repair accounting (folded into the mission's fault stats).
+    pub fn stats(&self) -> FaultStats {
+        self.model.stats
+    }
+
+    /// Advance `steps` mission steps: sample seeded strikes over the frame
+    /// population, then run any due scrub pass. Returns `true` when the
+    /// datapath needs a (re)load — new strikes landed, frames were
+    /// repaired, or corruption is still standing.
+    pub fn advance(&mut self, steps: u64) -> bool {
+        if steps == 0 || self.frames.total() == 0 {
+            return !self.dirty.is_empty();
+        }
+        let strikes = self.model.upsets(self.frames.total_bits(), steps);
+        self.step += steps;
+        let met = crate::obs::metrics();
+        for _ in 0..strikes {
+            let frame = self.model.pick(self.frames.total() as usize) as u64;
+            self.model.stats.injected += 1;
+            self.model.stats.cram_upsets += 1;
+            met.fault_cram_upsets.inc();
+            self.log.push(CramEvent { step: self.step, frame, kind: CramEventKind::Upset });
+            self.dirty.entry(frame).or_insert(self.step);
+        }
+        let due = match self.scrub {
+            // continuous readback: every strike is caught inside its own
+            // exposure window
+            Some(0) => !self.dirty.is_empty(),
+            Some(n) => {
+                self.since_scrub += steps;
+                if self.since_scrub >= n as u64 {
+                    self.since_scrub %= n as u64;
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false,
+        };
+        let mut repaired = false;
+        if due {
+            for (frame, struck_at) in std::mem::take(&mut self.dirty) {
+                let latency = self.step - struck_at;
+                self.model.stats.cram_repairs += 1;
+                met.fault_cram_repairs.inc();
+                met.fault_cram_scrub_latency.observe(latency);
+                self.log.push(CramEvent {
+                    step: self.step,
+                    frame,
+                    kind: CramEventKind::Repair { latency },
+                });
+                repaired = true;
+            }
+        }
+        strikes > 0 || repaired || !self.dirty.is_empty()
+    }
+
+    /// Apply the structural fault of every dirty frame to the loaded
+    /// parameters. Frames tile the parameter space deterministically, and
+    /// each class applies a fixed transform — the corruption is identical
+    /// every window the frame stays dirty, and vanishes once scrubbed
+    /// (the store itself is never touched; CRAM corrupts the datapath).
+    pub fn corrupt(&self, params: &mut [f32]) {
+        if params.is_empty() || self.dirty.is_empty() {
+            return;
+        }
+        let total = self.frames.total();
+        let n = params.len() as u64;
+        for (&frame, _) in &self.dirty {
+            let lo = (frame * n / total) as usize;
+            let hi = (((frame + 1) * n / total) as usize).clamp(lo + 1, params.len());
+            let class = self.frames.class_of(frame);
+            for w in &mut params[lo..hi] {
+                *w = match class {
+                    // struck multiplier: sign-inverted products
+                    FrameClass::Arith => -*w,
+                    // stuck routing line: one mantissa bit forced
+                    FrameClass::Logic => f32::from_bits(w.to_bits() ^ (1 << 22)),
+                    // ROM output port stuck at zero
+                    FrameClass::Rom => 0.0,
+                    // control mux stuck: magnitudes only
+                    FrameClass::Control => w.abs(),
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, EnvKind};
+
+    fn mlp() -> NetConfig {
+        NetConfig::new(Arch::Mlp, EnvKind::Simple)
+    }
+
+    fn frames() -> FrameMap {
+        FrameMap::of(&mlp(), Precision::Fixed)
+    }
+
+    #[test]
+    fn frame_map_is_deterministic_and_nonempty() {
+        for prec in Precision::all() {
+            for cfg in NetConfig::all() {
+                let a = FrameMap::of(&cfg, prec);
+                assert_eq!(a, FrameMap::of(&cfg, prec));
+                assert!(a.total() > 0, "{}/{prec:?}", cfg.name());
+                assert!(a.logic >= 1 && a.control >= 1, "{}/{prec:?}", cfg.name());
+                // every frame index classifies without panicking, classes
+                // appear in map order
+                let mut last = FrameClass::Logic;
+                for f in 0..a.total() {
+                    let c = a.class_of(f);
+                    if c != last {
+                        last = c;
+                    }
+                }
+                assert_eq!(a.class_of(a.total() - 1), FrameClass::Control);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_mlp_has_arith_and_rom_frames() {
+        let f = frames();
+        assert!(f.arith > 0, "DSP multipliers must map to arith frames");
+        assert!(f.rom > 0, "sigmoid ROMs must map to ROM frames");
+        assert_eq!(f.total_bits(), f.total() * CRAM_FRAME_BITS);
+    }
+
+    #[test]
+    fn same_seed_same_log() {
+        let plan = CramPlan { rate: 2e-5, scrub: Some(16) };
+        let mut a = CramState::new(99, plan, frames(), None);
+        let mut b = CramState::new(99, plan, frames(), None);
+        for _ in 0..200 {
+            a.advance(1);
+            b.advance(1);
+        }
+        assert!(!a.log().is_empty(), "rate 2e-5 over {} bits must strike", frames().total_bits());
+        assert_eq!(a.log(), b.log());
+        assert_eq!(a.stats(), b.stats());
+        // a different seed produces a different history
+        let mut c = CramState::new(100, plan, frames(), None);
+        for _ in 0..200 {
+            c.advance(1);
+        }
+        assert_ne!(a.log(), c.log());
+    }
+
+    #[test]
+    fn window_chunking_does_not_change_the_strike_count_law() {
+        // the strike count per window depends only on the λ integral, so a
+        // constant-rate process sees the same expected totals; the exact
+        // event log legitimately differs with chunking (fewer, larger
+        // windows), but each chunking is individually reproducible
+        let plan = CramPlan { rate: 1e-5, scrub: None };
+        let mut a = CramState::new(7, plan, frames(), None);
+        let mut b = CramState::new(7, plan, frames(), None);
+        for _ in 0..50 {
+            a.advance(4);
+        }
+        for _ in 0..50 {
+            b.advance(4);
+        }
+        assert_eq!(a.log(), b.log());
+    }
+
+    #[test]
+    fn continuous_scrub_masks_every_upset() {
+        let plan = CramPlan { rate: 5e-5, scrub: Some(0) };
+        let mut s = CramState::new(11, plan, frames(), None);
+        let mut params = vec![0.5f32; 64];
+        let clean = params.clone();
+        for _ in 0..300 {
+            s.advance(1);
+            assert_eq!(s.dirty_frames(), 0, "continuous scrub leaves no frame dirty");
+            s.corrupt(&mut params);
+            assert_eq!(params, clean, "masked upsets never reach the datapath");
+        }
+        let st = s.stats();
+        assert!(st.cram_upsets > 0, "the strike process must have fired");
+        // repairs are per frame: same-window strikes on one frame collapse
+        // into a single repair, never into survival
+        assert!(st.cram_repairs > 0 && st.cram_repairs <= st.cram_upsets);
+        // all repairs landed within their own window: latency 0
+        for e in s.log() {
+            if let CramEventKind::Repair { latency } = e.kind {
+                assert_eq!(latency, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn unscrubbed_corruption_stands_until_repair() {
+        let plan = CramPlan { rate: 0.0, scrub: None };
+        let mut s = CramState::new(3, plan, frames(), None);
+        // stage a strike by hand through the public API: advance with a
+        // huge one-off rate via a schedule spike
+        let spiked = CramPlan { rate: 0.0, scrub: None };
+        let schedule = RateSchedule::Spike { base: 0.0, peak: 1e-3, start: 0, len: 1 };
+        let mut struck = CramState::new(3, spiked, frames(), Some(schedule));
+        struck.advance(1);
+        assert!(struck.dirty_frames() > 0, "spike window must strike");
+        let mut params = vec![0.25f32; 128];
+        let clean = params.clone();
+        struck.corrupt(&mut params);
+        assert_ne!(params, clean, "dirty frames corrupt the datapath");
+        // the corruption is the same deterministic transform every window
+        let mut again = clean.clone();
+        struck.corrupt(&mut again);
+        assert_eq!(params, again);
+        // quiet tail: no more strikes, corruption stands
+        for _ in 0..50 {
+            assert!(struck.advance(1), "dirty frames keep forcing reloads");
+        }
+        assert!(struck.dirty_frames() > 0);
+        // the zero-rate control never strikes at all
+        for _ in 0..50 {
+            s.advance(1);
+        }
+        assert_eq!(s.stats().cram_upsets, 0);
+    }
+
+    #[test]
+    fn periodic_scrub_repairs_with_the_right_latency() {
+        let schedule = RateSchedule::Spike { base: 0.0, peak: 1e-3, start: 0, len: 1 };
+        let plan = CramPlan { rate: 0.0, scrub: Some(8) };
+        let mut s = CramState::new(3, plan, frames(), Some(schedule));
+        s.advance(1); // strikes land at step 1
+        let upsets = s.stats().cram_upsets;
+        let struck_frames = s.dirty_frames() as u64;
+        assert!(upsets > 0 && struck_frames > 0);
+        for _ in 0..7 {
+            s.advance(1); // pass comes due at step 8
+        }
+        assert_eq!(s.dirty_frames(), 0, "the step-8 pass repairs everything");
+        // one repair per distinct struck frame (strikes may share a frame)
+        assert_eq!(s.stats().cram_repairs, struck_frames);
+        let latencies: Vec<u64> = s
+            .log()
+            .iter()
+            .filter_map(|e| match e.kind {
+                CramEventKind::Repair { latency } => Some(latency),
+                _ => None,
+            })
+            .collect();
+        assert!(!latencies.is_empty());
+        assert!(latencies.iter().all(|&l| l == 7), "struck at 1, repaired at 8: {latencies:?}");
+        // post-repair the datapath reloads clean
+        let mut params = vec![1.0f32; 32];
+        let clean = params.clone();
+        s.corrupt(&mut params);
+        assert_eq!(params, clean);
+    }
+
+    #[test]
+    fn corruption_transforms_are_class_shaped() {
+        let f = FrameMap { logic: 1, arith: 1, rom: 1, control: 1 };
+        let plan = CramPlan { rate: 0.0, scrub: None };
+        let schedule = RateSchedule::Spike { base: 0.0, peak: 0.5, start: 0, len: 1 };
+        let mut s = CramState::new(5, plan, f, Some(schedule));
+        s.advance(1);
+        assert!(s.dirty_frames() > 0);
+        let mut params = vec![-0.75f32; 4];
+        s.corrupt(&mut params);
+        // at least one quarter of the param space took a class transform
+        assert_ne!(params, vec![-0.75f32; 4]);
+        for w in &params {
+            assert!(w.is_finite(), "corruption must never produce NaN/inf");
+        }
+    }
+
+    #[test]
+    fn plan_labels_and_json_round_trip() {
+        for plan in [
+            CramPlan { rate: 3e-3, scrub: None },
+            CramPlan { rate: 3e-3, scrub: Some(0) },
+            CramPlan { rate: 1e-4, scrub: Some(64) },
+        ] {
+            let back = CramPlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(back, plan, "{}", plan.label());
+        }
+        assert_eq!(CramPlan { rate: 3e-3, scrub: Some(64) }.label(), "3e-3@scrub:64");
+        assert_eq!(CramPlan { rate: 3e-3, scrub: None }.label(), "3e-3@unscrubbed");
+        let bad = Json::obj(vec![("rate", Json::Num(-1.0)), ("scrub", Json::Null)]);
+        assert!(CramPlan::from_json(&bad).is_err());
+    }
+}

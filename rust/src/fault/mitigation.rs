@@ -15,8 +15,9 @@
 //!   into training and legitimized by the next write-back. The campaign
 //!   table makes this visible (scrub degradation ≈ unmitigated at scrub
 //!   cost); scrubbing's classical value is for memory that is **not**
-//!   rewritten every cycle — configuration memory, a modeled follow-on
-//!   (see ROADMAP).
+//!   rewritten every cycle — configuration memory, modeled in
+//!   [`crate::fault::cram`] with its own partial-reconfiguration scrubber
+//!   (`CramPlan`; Pareto-searched by `qfpga harden`).
 //! * **ECC** — SECDED (Hamming + overall parity) on every stored word:
 //!   single-bit errors corrected on read (and written back), double-bit
 //!   errors detected but not corrected.

@@ -11,6 +11,10 @@
 //!   (Poisson arrivals over the protected bit population) plus
 //!   [`FaultStats`] accounting and the [`SeuHook`] that strikes the FPGA
 //!   datapath FIFOs ([`crate::fpga::fifo`]) mid-update.
+//! * [`schedule`] — [`RateSchedule`]: time-varying upset-rate profiles
+//!   (constant / solar-event spikes / per-mission-phase piecewise rates)
+//!   driving both the data and CRAM strike processes through one exact
+//!   piecewise λ integral.
 //! * [`inject`] — bit-level flip primitives for fixed-point words
 //!   ([`crate::fixed::Fixed::flip_bit`]), IEEE f32 words, and the
 //!   [`inject::WordCodec`] that views network weights as raw storage words.
@@ -19,39 +23,89 @@
 //!   state machine, with area/power/timing overheads charged through the
 //!   [`crate::fpga::area`], [`crate::fpga::power`] and
 //!   [`crate::fpga::timing`] hooks.
+//! * [`cram`] — configuration-memory upsets ([`CramState`]): seeded strikes
+//!   on the modeled frame map of the synthesized design that corrupt the
+//!   datapath *structure* until a partial-reconfiguration scrub pass
+//!   repairs the frame (detection latency, repair cycles and scrubber
+//!   area/power charged through the same [`crate::fpga`] hooks).
 //! * [`backend`] — [`FaultyBackend`]: wraps any [`crate::qlearn::QBackend`]
 //!   so missions train *under injection*; weight storage goes through the
 //!   protected store, transition encodings (replay/input registers) take
-//!   transient upsets.
+//!   transient upsets, and CRAM strikes warp the loaded datapath.
 //! * [`campaign`] — resilience campaigns: rate × mitigation × backend
 //!   across the fleet scheduler, reported as learning-delta degradation vs
 //!   hardening overhead.
 //!
-//! Everything is seeded: the same seed, rate and mitigation reproduce the
-//! same injected bits, weights and campaign report (see
-//! `tests/fault_determinism.rs`).
+//! Everything is seeded: the same seed, rate schedule and mitigation
+//! reproduce the same injected bits, weights, strike/repair logs and
+//! campaign report (see `tests/fault_determinism.rs`).
 
 pub mod backend;
 pub mod campaign;
+pub mod cram;
 pub mod env;
 pub mod inject;
 pub mod mitigation;
 pub mod model;
+pub mod schedule;
 
 pub use backend::FaultyBackend;
 pub use campaign::{run_campaign, CampaignSpec, ResilienceCell, ResilienceReport};
+pub use cram::{CramEvent, CramEventKind, CramPlan, CramState, FrameClass, FrameMap};
 pub use env::RadEnvironment;
 pub use inject::{flip_f32_bit, WordCodec};
 pub use mitigation::{Mitigation, ProtectedStore, Secded};
 pub use model::{FaultModel, FaultStats, SeuHook};
+pub use schedule::RateSchedule;
 
 /// Per-mission injection plan carried by
 /// [`crate::coordinator::MissionConfig`].
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// `schedule` and `cram` are optional extensions: a plain
+/// `FaultPlan::constant(rate, mitigation)` keeps the historical
+/// constant-rate data-upset behaviour (and the historical JSON wire form)
+/// exactly.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
-    /// Upsets per bit per environment step.
+    /// Upsets per bit per environment step (the base rate; when a
+    /// `schedule` is set it should equal the schedule's rate at step 0).
     pub rate: f64,
     /// Hardening strategy for the weight store (and, for TMR/ECC, the
     /// datapath registers).
     pub mitigation: Mitigation,
+    /// Time-varying rate profile; `None` keeps the constant `rate`.
+    pub schedule: Option<RateSchedule>,
+    /// Configuration-memory strike plan; `None` strikes data only.
+    pub cram: Option<CramPlan>,
+}
+
+impl FaultPlan {
+    /// The historical constant-rate data-upset plan.
+    pub fn constant(rate: f64, mitigation: Mitigation) -> FaultPlan {
+        FaultPlan { rate, mitigation, schedule: None, cram: None }
+    }
+
+    /// Attach a time-varying rate profile (also syncs the base `rate`).
+    pub fn with_schedule(mut self, schedule: RateSchedule) -> FaultPlan {
+        self.rate = schedule.base_rate();
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Attach a CRAM strike plan.
+    pub fn with_cram(mut self, cram: CramPlan) -> FaultPlan {
+        self.cram = Some(cram);
+        self
+    }
+
+    /// The CRAM-scaled rate profile: the mission's time profile rescaled so
+    /// its base matches the CRAM strike rate (solar events modulate the
+    /// configuration plane and the datapath identically). A zero-base
+    /// profile (pure event) is applied as-is.
+    pub fn cram_schedule(&self) -> Option<RateSchedule> {
+        let cram = self.cram.as_ref()?;
+        let s = self.schedule.as_ref()?;
+        let base = s.base_rate();
+        Some(if base > 0.0 { s.scaled(cram.rate / base) } else { s.clone() })
+    }
 }

@@ -6,11 +6,14 @@ use crate::fpga::fifo::Fifo;
 use crate::util::Rng;
 
 use super::mitigation::Mitigation;
+use super::schedule::RateSchedule;
 
 /// Lifetime fault accounting (per backend / summed per campaign cell).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
-    /// Upsets injected into the persistent weight store.
+    /// Upsets injected into persistent state (the weight store, or — for
+    /// the CRAM process — a configuration frame; those are additionally
+    /// broken out in `cram_upsets`).
     pub injected: u64,
     /// Transient upsets (replay/input registers, datapath FIFO words).
     pub transient: u64,
@@ -22,6 +25,10 @@ pub struct FaultStats {
     pub uncorrectable: u64,
     /// Corrupted bits restored by a scrub pass.
     pub scrubbed: u64,
+    /// Configuration-memory strikes (subset of `injected`).
+    pub cram_upsets: u64,
+    /// CRAM frames rewritten by partial-reconfiguration scrub passes.
+    pub cram_repairs: u64,
 }
 
 impl FaultStats {
@@ -32,6 +39,8 @@ impl FaultStats {
         self.corrected += other.corrected;
         self.uncorrectable += other.uncorrectable;
         self.scrubbed += other.scrubbed;
+        self.cram_upsets += other.cram_upsets;
+        self.cram_repairs += other.cram_repairs;
     }
 
     /// Total upsets that struck anything.
@@ -46,15 +55,35 @@ impl FaultStats {
 #[derive(Debug, Clone)]
 pub struct FaultModel {
     rng: Rng,
-    /// Upsets per bit per step.
+    /// Upsets per bit per step (the constant rate when `schedule` is
+    /// `None`, otherwise the schedule's base rate, kept for labels).
     rate: f64,
+    /// Time-varying rate profile; `None` keeps the exact historical
+    /// constant-λ arithmetic.
+    schedule: Option<RateSchedule>,
+    /// Mission step the process has been advanced to (the schedule clock).
+    cursor: u64,
     pub stats: FaultStats,
 }
 
 impl FaultModel {
     /// `rate` is upsets per bit per step; any seed is valid.
     pub fn new(seed: u64, rate: f64) -> FaultModel {
-        FaultModel { rng: Rng::seeded(seed), rate: rate.max(0.0), stats: FaultStats::default() }
+        FaultModel {
+            rng: Rng::seeded(seed),
+            rate: rate.max(0.0),
+            schedule: None,
+            cursor: 0,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// A model whose λ follows `schedule` over mission steps; `None` is
+    /// exactly [`FaultModel::new`].
+    pub fn with_schedule(seed: u64, rate: f64, schedule: Option<RateSchedule>) -> FaultModel {
+        let mut m = FaultModel::new(seed, rate);
+        m.schedule = schedule;
+        m
     }
 
     pub fn rate(&self) -> f64 {
@@ -89,9 +118,23 @@ impl FaultModel {
     /// capped at the bit population per window — beyond one flip per bit
     /// the memory is fully randomized and extra draws model nothing (the
     /// cap also bounds the injection loop under nonsensical rates).
+    ///
+    /// With a [`RateSchedule`] attached, λ is the exact piecewise integral
+    /// of the schedule over this window of the mission clock; the
+    /// schedule-free path keeps the historical constant-λ expression
+    /// bit-for-bit (multiplication order matters for f64 reproducibility).
     pub fn upsets(&mut self, n_bits: u64, steps: u64) -> u64 {
-        self.poisson(self.rate * n_bits as f64 * steps as f64)
-            .min(n_bits.saturating_mul(steps))
+        let lambda = match &self.schedule {
+            // the Constant arm repeats the None expression (not the
+            // integral × n_bits form) deliberately: f64 multiplication is
+            // not associative, and `Some(Constant(r))` must draw the same
+            // stream as the historical constant-rate model to the last ulp
+            None => self.rate * n_bits as f64 * steps as f64,
+            Some(RateSchedule::Constant(r)) => r * n_bits as f64 * steps as f64,
+            Some(s) => s.expected_upsets(self.cursor, steps) * n_bits as f64,
+        };
+        self.cursor = self.cursor.saturating_add(steps);
+        self.poisson(lambda).min(n_bits.saturating_mul(steps))
     }
 
     /// Uniform site selection in `[0, n)`.
@@ -228,6 +271,17 @@ impl SeuHook {
         SeuHook { model: FaultModel::new(seed, rate), mitigation }
     }
 
+    /// A hook whose arrival rate follows a [`RateSchedule`]; `None` is
+    /// exactly [`SeuHook::new`].
+    pub fn with_schedule(
+        seed: u64,
+        rate: f64,
+        mitigation: Mitigation,
+        schedule: Option<RateSchedule>,
+    ) -> SeuHook {
+        SeuHook { model: FaultModel::with_schedule(seed, rate, schedule), mitigation }
+    }
+
     pub fn stats(&self) -> FaultStats {
         self.model.stats
     }
@@ -292,6 +346,32 @@ mod tests {
         // zero-rate model never fires
         let mut none = FaultModel::new(1, 0.0);
         assert_eq!((0..100).map(|_| none.upsets(u64::MAX / 2, 1)).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn constant_schedule_is_bit_identical_to_no_schedule() {
+        // the compatibility contract: a Constant schedule must reproduce
+        // the historical constant-rate draw stream exactly, so attaching
+        // `schedule: Some(Constant(r))` never perturbs an existing replay
+        let mut plain = FaultModel::new(21, 3e-4);
+        let mut sched =
+            FaultModel::with_schedule(21, 3e-4, Some(RateSchedule::Constant(3e-4)));
+        for steps in [1u64, 3, 1, 7, 2] {
+            assert_eq!(plain.upsets(4096, steps), sched.upsets(4096, steps));
+        }
+    }
+
+    #[test]
+    fn spike_schedule_concentrates_upsets_in_the_event_window() {
+        let spike = RateSchedule::Spike { base: 0.0, peak: 1e-3, start: 10, len: 5 };
+        let mut m = FaultModel::with_schedule(33, 0.0, Some(spike));
+        let mut per_step = Vec::new();
+        for _ in 0..30 {
+            per_step.push(m.upsets(10_000, 1));
+        }
+        assert!(per_step[..10].iter().all(|&u| u == 0), "quiet before the event");
+        assert!(per_step[15..].iter().all(|&u| u == 0), "quiet after the event");
+        assert!(per_step[10..15].iter().sum::<u64>() > 0, "the event must strike");
     }
 
     #[test]

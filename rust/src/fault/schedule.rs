@@ -1,0 +1,346 @@
+//! Time-varying upset-rate schedules.
+//!
+//! A [`RateSchedule`] generalizes the constant per-bit-per-step upset rate
+//! of [`crate::fault::FaultPlan`] to mission-shaped time profiles:
+//!
+//! * **Constant** — the historical behaviour: one rate for the whole run.
+//! * **Spike** — a solar-event transient: a quiet base rate with a
+//!   `peak`-rate window of `len` steps starting at step `start` (SEP events
+//!   raise upset rates by orders of magnitude for hours against a
+//!   months-long cruise).
+//! * **Phases** — piecewise per-mission-phase rates (`R1` for `N1` steps,
+//!   then `R2` for `N2`, …); the final phase's rate holds for the remainder
+//!   of the mission.
+//!
+//! Schedules drive both the data-upset and CRAM strike processes through
+//! the same mechanism: [`crate::fault::FaultModel`] keeps a step cursor and
+//! asks the schedule for the *expected* number of upsets over each exposure
+//! window ([`RateSchedule::expected_upsets`], an exact piecewise integral —
+//! never a per-step loop), so seeded replays stay bit-identical at any
+//! window chunking the training loop happens to use.
+//!
+//! The canonical text form (`R` / `spike:R0,Rpeak,start,len` /
+//! `phases:R1@N1,R2@N2,...`) is both the CLI spelling
+//! (`qfpga radiation --rate-schedule`) and the JSON wire form inside
+//! mission configs, so specs round-trip byte-exactly.
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// A time-varying upset-rate profile (upsets per bit per step).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateSchedule {
+    /// One rate for the whole mission.
+    Constant(f64),
+    /// Solar-event transient: `base` everywhere except a `[start,
+    /// start+len)` window at `peak`.
+    Spike { base: f64, peak: f64, start: u64, len: u64 },
+    /// Per-mission-phase piecewise rates: `(rate, duration_steps)` pairs,
+    /// the last rate holding beyond the final phase boundary.
+    Phases(Vec<(f64, u64)>),
+}
+
+/// Steps of `[a0, a1)` that fall inside `[b0, b1)`.
+fn overlap(a0: u64, a1: u64, b0: u64, b1: u64) -> u64 {
+    a1.min(b1).saturating_sub(a0.max(b0))
+}
+
+impl RateSchedule {
+    /// The instantaneous rate at `step`.
+    pub fn rate_at(&self, step: u64) -> f64 {
+        match self {
+            RateSchedule::Constant(r) => *r,
+            RateSchedule::Spike { base, peak, start, len } => {
+                if step >= *start && step - start < *len {
+                    *peak
+                } else {
+                    *base
+                }
+            }
+            RateSchedule::Phases(phases) => {
+                let mut seg_start = 0u64;
+                let mut rate = 0.0;
+                for &(r, n) in phases {
+                    rate = r;
+                    seg_start += n;
+                    if step < seg_start {
+                        return r;
+                    }
+                }
+                rate // last phase holds for the rest of the mission
+            }
+        }
+    }
+
+    /// Expected upsets **per bit** over the window `[start, start+steps)` —
+    /// the exact piecewise integral of the rate profile, so the value is
+    /// independent of how a caller chunks a mission into exposure windows
+    /// (up to float summation order). `Constant(r)` yields exactly
+    /// `r * steps`, preserving the historical constant-rate λ bit-for-bit.
+    pub fn expected_upsets(&self, start: u64, steps: u64) -> f64 {
+        if steps == 0 {
+            return 0.0;
+        }
+        let end = start + steps;
+        match self {
+            RateSchedule::Constant(r) => r * steps as f64,
+            RateSchedule::Spike { base, peak, start: s0, len } => {
+                base * steps as f64
+                    + (peak - base) * overlap(start, end, *s0, s0.saturating_add(*len)) as f64
+            }
+            RateSchedule::Phases(phases) => {
+                let mut total = 0.0;
+                let mut seg_start = 0u64;
+                let mut last_rate = 0.0;
+                for &(r, n) in phases {
+                    let seg_end = seg_start + n;
+                    total += r * overlap(start, end, seg_start, seg_end) as f64;
+                    seg_start = seg_end;
+                    last_rate = r;
+                }
+                let tail_start = seg_start.max(start);
+                if end > tail_start {
+                    total += last_rate * (end - tail_start) as f64;
+                }
+                total
+            }
+        }
+    }
+
+    /// The largest instantaneous rate the profile reaches — what the CLI
+    /// range-checks against the physical `[0, 1]` upsets/bit/step bound.
+    pub fn max_rate(&self) -> f64 {
+        match self {
+            RateSchedule::Constant(r) => *r,
+            RateSchedule::Spike { base, peak, .. } => base.max(*peak),
+            RateSchedule::Phases(phases) => {
+                phases.iter().fold(0.0, |acc: f64, &(r, _)| acc.max(r))
+            }
+        }
+    }
+
+    /// The rate at step 0 — the `FaultPlan::rate` a schedule-bearing plan
+    /// reports for labels and legacy consumers.
+    pub fn base_rate(&self) -> f64 {
+        self.rate_at(0)
+    }
+
+    /// The same time profile with every rate multiplied by `factor` — how
+    /// one mission profile drives both the data and CRAM strike processes
+    /// at their own base rates (CRAM cross-sections are larger than the
+    /// datapath's, but solar events modulate both identically).
+    pub fn scaled(&self, factor: f64) -> RateSchedule {
+        match self {
+            RateSchedule::Constant(r) => RateSchedule::Constant(r * factor),
+            RateSchedule::Spike { base, peak, start, len } => RateSchedule::Spike {
+                base: base * factor,
+                peak: peak * factor,
+                start: *start,
+                len: *len,
+            },
+            RateSchedule::Phases(phases) => RateSchedule::Phases(
+                phases.iter().map(|&(r, n)| (r * factor, n)).collect(),
+            ),
+        }
+    }
+
+    /// Canonical text form — the CLI spelling, the JSON wire form, and the
+    /// fingerprint component. Round-trips through [`std::str::FromStr`].
+    pub fn label(&self) -> String {
+        match self {
+            RateSchedule::Constant(r) => format!("{r:e}"),
+            RateSchedule::Spike { base, peak, start, len } => {
+                format!("spike:{base:e},{peak:e},{start},{len}")
+            }
+            RateSchedule::Phases(phases) => {
+                let parts: Vec<String> =
+                    phases.iter().map(|(r, n)| format!("{r:e}@{n}")).collect();
+                format!("phases:{}", parts.join(","))
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.label())
+    }
+
+    pub fn from_json(j: &Json) -> Result<RateSchedule> {
+        match j {
+            Json::Str(s) => s.parse(),
+            other => Err(Error::interface(format!(
+                "rate schedule must be a string, got `{other}`"
+            ))),
+        }
+    }
+}
+
+/// The error every malformed schedule gets: it enumerates the three valid
+/// forms, mirroring the env/precision parse-error style.
+fn bad(s: &str) -> Error {
+    Error::Config(format!(
+        "bad rate schedule `{s}`: expected a constant rate `R`, a solar-event \
+         spike `spike:R0,Rpeak,start,len`, or mission phases \
+         `phases:R1@N1,R2@N2,...` (rates in upsets/bit/step, times in steps)"
+    ))
+}
+
+fn parse_rate(part: &str, whole: &str) -> Result<f64> {
+    match part.parse::<f64>() {
+        Ok(r) if r.is_finite() && r >= 0.0 => Ok(r),
+        _ => Err(bad(whole)),
+    }
+}
+
+impl std::str::FromStr for RateSchedule {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        if let Some(rest) = s.strip_prefix("spike:") {
+            let parts: Vec<&str> = rest.split(',').collect();
+            if parts.len() != 4 {
+                return Err(bad(s));
+            }
+            let base = parse_rate(parts[0], s)?;
+            let peak = parse_rate(parts[1], s)?;
+            let start: u64 = parts[2].parse().map_err(|_| bad(s))?;
+            let len: u64 = parts[3].parse().map_err(|_| bad(s))?;
+            if len == 0 {
+                return Err(bad(s));
+            }
+            Ok(RateSchedule::Spike { base, peak, start, len })
+        } else if let Some(rest) = s.strip_prefix("phases:") {
+            let mut phases = Vec::new();
+            for part in rest.split(',') {
+                let Some((r, n)) = part.split_once('@') else {
+                    return Err(bad(s));
+                };
+                let rate = parse_rate(r, s)?;
+                let steps: u64 = n.parse().map_err(|_| bad(s))?;
+                if steps == 0 {
+                    return Err(bad(s));
+                }
+                phases.push((rate, steps));
+            }
+            if phases.is_empty() {
+                return Err(bad(s));
+            }
+            Ok(RateSchedule::Phases(phases))
+        } else {
+            Ok(RateSchedule::Constant(parse_rate(s, s)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_matches_the_historical_lambda_exactly() {
+        let s = RateSchedule::Constant(5e-4);
+        for (start, steps) in [(0u64, 1u64), (17, 200), (1000, 1)] {
+            assert_eq!(s.expected_upsets(start, steps), 5e-4 * steps as f64);
+        }
+        assert_eq!(s.rate_at(0), 5e-4);
+        assert_eq!(s.rate_at(u64::MAX), 5e-4);
+    }
+
+    #[test]
+    fn spike_rate_profile_and_integral() {
+        let s = RateSchedule::Spike { base: 1e-4, peak: 2e-2, start: 10, len: 5 };
+        assert_eq!(s.rate_at(9), 1e-4);
+        assert_eq!(s.rate_at(10), 2e-2);
+        assert_eq!(s.rate_at(14), 2e-2);
+        assert_eq!(s.rate_at(15), 1e-4);
+        // window fully before, straddling, and fully inside the spike
+        assert_eq!(s.expected_upsets(0, 10), 1e-3);
+        let straddle = s.expected_upsets(8, 4); // 2 base + 2 peak steps
+        assert!((straddle - (2.0 * 1e-4 + 2.0 * 2e-2)).abs() < 1e-15, "{straddle}");
+        assert_eq!(s.expected_upsets(11, 2), 2.0 * 2e-2);
+    }
+
+    #[test]
+    fn phases_hold_the_last_rate() {
+        let s = RateSchedule::Phases(vec![(1e-3, 10), (5e-3, 20)]);
+        assert_eq!(s.rate_at(0), 1e-3);
+        assert_eq!(s.rate_at(9), 1e-3);
+        assert_eq!(s.rate_at(10), 5e-3);
+        assert_eq!(s.rate_at(29), 5e-3);
+        assert_eq!(s.rate_at(1000), 5e-3, "final phase holds");
+        let tail = s.expected_upsets(25, 10); // 5 in phase 2 + 5 in the tail
+        assert!((tail - 10.0 * 5e-3).abs() < 1e-15, "{tail}");
+    }
+
+    #[test]
+    fn chunked_integration_matches_one_shot() {
+        let schedules = [
+            RateSchedule::Constant(3e-4),
+            RateSchedule::Spike { base: 1e-4, peak: 3e-2, start: 50, len: 17 },
+            RateSchedule::Phases(vec![(1e-3, 33), (2e-4, 10), (7e-3, 5)]),
+        ];
+        for s in &schedules {
+            let total = s.expected_upsets(0, 200);
+            for chunk in [1u64, 3, 7, 50] {
+                let mut sum = 0.0;
+                let mut at = 0;
+                while at < 200 {
+                    let n = chunk.min(200 - at);
+                    sum += s.expected_upsets(at, n);
+                    at += n;
+                }
+                assert!(
+                    (sum - total).abs() <= 1e-12 * total.max(1.0),
+                    "{}: chunk {chunk}: {sum} vs {total}",
+                    s.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spike_integrates_like_its_equivalent_constant() {
+        // a spike and the constant carrying the same time-averaged rate
+        // must expect the same strike count over the full horizon
+        let (base, peak, start, len, horizon) = (2e-4, 1e-2, 40u64, 25u64, 200u64);
+        let spike = RateSchedule::Spike { base, peak, start, len };
+        let equivalent =
+            (base * horizon as f64 + (peak - base) * len as f64) / horizon as f64;
+        let constant = RateSchedule::Constant(equivalent);
+        let a = spike.expected_upsets(0, horizon);
+        let b = constant.expected_upsets(0, horizon);
+        assert!((a - b).abs() <= 1e-12 * a.max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        let schedules = [
+            RateSchedule::Constant(5e-4),
+            RateSchedule::Spike { base: 1e-4, peak: 2e-2, start: 10, len: 5 },
+            RateSchedule::Phases(vec![(1e-3, 10), (5e-3, 20)]),
+        ];
+        for s in &schedules {
+            let back: RateSchedule = s.label().parse().unwrap();
+            assert_eq!(&back, s, "{}", s.label());
+            let json = RateSchedule::from_json(&s.to_json()).unwrap();
+            assert_eq!(&json, s);
+        }
+    }
+
+    #[test]
+    fn malformed_schedules_enumerate_the_valid_forms() {
+        for s in [
+            "spike:1e-4,2e-2,10",  // missing len
+            "spike:1e-4,2e-2,x,5", // non-numeric start
+            "spike:1e-4,2e-2,0,0", // zero-length spike
+            "phases:",             // empty
+            "phases:1e-3",         // missing @N
+            "phases:1e-3@0",       // zero-length phase
+            "phases:-1@5",         // negative rate
+            "-2e-4",               // negative constant
+            "warp",                // not a number at all
+        ] {
+            let err = s.parse::<RateSchedule>().unwrap_err().to_string();
+            assert!(err.contains("spike:R0,Rpeak,start,len"), "{s}: {err}");
+            assert!(err.contains("phases:R1@N1,R2@N2"), "{s}: {err}");
+        }
+    }
+}

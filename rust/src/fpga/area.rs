@@ -133,6 +133,17 @@ pub fn mitigated_resources(cfg: &NetConfig, prec: Precision, extra: &Resources) 
     r
 }
 
+/// Hardware of the configuration-memory scrubber: a control-FSM-class
+/// readback/repair engine around the ICAP, a frame buffer BRAM, and the
+/// frame-ECC syndrome fabric. Fixed-size — the scrubber walks frames
+/// sequentially, so its footprint does not scale with the design it
+/// protects. Charged when a [`crate::fault::CramPlan`] enables scrubbing.
+pub fn cram_scrubber_resources() -> Resources {
+    let mut r = cost::CONTROL; // readback/repair FSM
+    r.add(Resources::new(150, 120, 0, 1)); // ECC syndrome fabric + frame buffer BRAM
+    r
+}
+
 /// Device-fit check for a mitigated design.
 pub fn check_fit_with(
     cfg: &NetConfig,
@@ -206,6 +217,21 @@ mod tests {
                 assert!(u.max_fraction() > base.max_fraction());
                 assert!(u.max_fraction() < 0.75, "{}/{prec:?}: {u:?}", cfg.name());
             }
+        }
+    }
+
+    #[test]
+    fn cram_scrubber_is_small_and_fits_alongside_tmr() {
+        let s = cram_scrubber_resources();
+        assert_eq!(s.bram36, 1, "one frame-buffer BRAM");
+        assert_eq!(s.dsps, 0, "a scrubber has no arithmetic datapath");
+        assert!(s.luts > 0 && s.ffs > 0);
+        // the scrubber must be a rounding error next to the accelerator
+        let dev = Virtex7::default();
+        for cfg in NetConfig::all() {
+            let u = check_fit_with(&cfg, Precision::Fixed, &dev, &s).unwrap();
+            let base = check_fit(&cfg, Precision::Fixed, &dev).unwrap();
+            assert!(u.max_fraction() < base.max_fraction() + 0.01, "{}", cfg.name());
         }
     }
 

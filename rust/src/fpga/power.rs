@@ -87,6 +87,19 @@ pub fn stream_power_w(cfg: &NetConfig, coeffs: &PowerCoeffs) -> f64 {
     (cfg.a * cfg.d) as f64 * coeffs.per_stream_elem
 }
 
+/// Power of the configuration-memory scrubber, W: its readback/repair
+/// engine toggles continuously (frame walking is precision-independent
+/// control fabric, so the fixed-point coefficient set applies). Charged
+/// on top of [`power_w`] when a [`crate::fault::CramPlan`] enables
+/// scrubbing.
+pub fn cram_scrubber_power_w(coeffs: &PowerCoeffs) -> f64 {
+    dynamic_power_w(
+        &super::area::cram_scrubber_resources(),
+        Precision::Fixed,
+        coeffs,
+    )
+}
+
 /// Power estimate for one configuration, W.
 pub fn power_w(cfg: &NetConfig, prec: Precision, coeffs: &PowerCoeffs) -> f64 {
     let r = accelerator_resources(cfg, prec);
@@ -231,6 +244,16 @@ mod tests {
                 assert!((whole - parts).abs() < 1e-12);
             }
         }
+    }
+
+    /// The scrubber's draw is real but small against any design point.
+    #[test]
+    fn scrubber_power_is_a_small_additive_term() {
+        let c = PowerCoeffs::default();
+        let w = cram_scrubber_power_w(&c);
+        assert!(w > 0.0);
+        assert!(w < 0.2, "scrubber draws {w} W — should be well under a watt");
+        assert!(w < 0.05 * power_w(&mlp(EnvKind::Simple), Precision::Fixed, &c));
     }
 
     /// Energy favors fixed point overwhelmingly (power × time both win).

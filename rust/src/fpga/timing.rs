@@ -270,6 +270,18 @@ impl TimingModel {
         2 * n_words * self.fu.fifo_rw
     }
 
+    /// Cycles one partial-reconfiguration repair of a single CRAM frame
+    /// costs: an ECC/CRC detect pass plus a readback + rewrite of the
+    /// frame's 101 configuration words through the ICAP port (FIFO-class
+    /// read + write per word, same port model as
+    /// [`TimingModel::scrub_burst_cycles`]). Charged per repaired frame by
+    /// the mission accounting when a [`crate::fault::CramPlan`] is active.
+    pub fn cram_repair_cycles(&self) -> u64 {
+        const CRAM_FRAME_WORDS: u64 = 101; // 7-series frame: 101 × 32-bit
+        const DETECT_CYCLES: u64 = 32; // frame-ECC syndrome + address latch
+        DETECT_CYCLES + 2 * CRAM_FRAME_WORDS * self.fu.fifo_rw
+    }
+
     /// Modeled (stepwise, batched) device throughput for one configuration
     /// — the row pair of the model-derived bench trajectory (table `BM1`
     /// in `BENCH_backends.json`, diffed against
@@ -499,6 +511,8 @@ mod tests {
         assert!(t.protected_read_phases(&mlp) * 20 < t.qupdate(&mlp, Precision::Fixed).total());
         assert_eq!(t.scrub_burst_cycles(89), 178);
         assert_eq!(t.scrub_burst_cycles(0), 0);
+        // one frame repair: 32 detect + 2×101 words at fifo_rw (1 cycle)
+        assert_eq!(t.cram_repair_cycles(), 32 + 202);
     }
 
     #[test]

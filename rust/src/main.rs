@@ -12,12 +12,16 @@
 //! * `fleetlearn [--fleets 1,2,4,8 ...]` — the fleet-learning campaign:
 //!   shared (transition exchange + parameter averaging) vs isolated
 //!   fleets swept over fleet size per scenario, printed as table F1.
+//! * `harden [--env all|E ...]` — the radiation-hardening auto-tuner:
+//!   mitigation placement × CRAM scrub interval × word length
+//!   Pareto-searched per environment, printed as table H1.
 //! * `sweep  [--updates N]` — measured per-update latency for every
 //!   backend × configuration (the measured side of Tables 3–6).
 //! * `throughput` — table B2: measured CPU updates/s (reference stepwise
 //!   vs the prepared zero-alloc stepwise path vs batched) plus fleet
 //!   scaling on the worker pool.
-//! * `radiation` — resilience campaign under seeded SEU injection.
+//! * `radiation` — resilience campaign under seeded SEU injection,
+//!   optionally shaped by a `--rate-schedule` mission profile.
 //! * `validate` — cross-backend numeric equivalence over random workloads.
 //! * `serve --socket PATH` — mission gateway daemon: replayable job specs
 //!   over a unix socket, bounded priority queue with preemption, a
@@ -63,7 +67,7 @@ use qfpga::util::{shutdown, Json, Rng};
 const USAGE: &str = "\
 qfpga — FPGA Q-learning accelerator reproduction (Gankidi & Thangavelautham 2017)
 
-USAGE: qfpga <report|train|fleet|mission|fleetlearn|sweep|throughput|radiation|validate|serve|loadgen|diff|manifest|replay|info|help> [options]
+USAGE: qfpga <report|train|fleet|mission|fleetlearn|harden|sweep|throughput|radiation|validate|serve|loadgen|diff|manifest|replay|info|help> [options]
 
   report    --table 1..8|energy|batch|resilience | --headline
             | --ablation pipeline|lut|wordlen | --all
@@ -108,6 +112,23 @@ USAGE: qfpga <report|train|fleet|mission|fleetlearn|sweep|throughput|radiation|v
             [--pool-cap N]        transitions per rover per exchange (default 16)
             [--env all|E]         one scenario or the whole library (default all)
             plus --arch/--precision/--episodes/--max-steps/--seed/--batch
+  harden    radiation-hardening auto-tuner: per environment, Pareto-search
+            data-plane mitigation × CRAM scrub interval × fixed word
+            length under seeded data + configuration-memory strikes and
+            print table H1 (reward retained, escape rate, area/power/
+            latency overhead, rad-optimal pick per environment)
+            [--env all|E]         one scenario or the whole library (default all)
+            [--rate R]            data-plane upsets/bit/step (default 5e-4)
+            [--cram-rate R]       CRAM upsets/bit/step (default 3e-3)
+            [--rate-schedule S]   mission profile for both strike planes:
+                                  R | spike:R0,Rpeak,START,LEN |
+                                  phases:R1@N1,R2@N2,... | none
+                                  (default spike:5e-4,5e-3,40,80)
+            [--mitigations M,..]  data-plane arms (default none,tmr)
+            [--scrubs S,..]       CRAM scrub arms: none|0|N steps
+                                  (default none,0,64; 0 = continuous)
+            [--words W,..]        fixed word lengths (default 8,18)
+            plus --arch/--episodes/--max-steps/--seed
   sweep     --updates N           per-update latency, all backends/configs
             (the full mission grid; xla rows cover the paper configs only)
             [--batch B]           also measure the batched update_batch path
@@ -120,6 +141,10 @@ USAGE: qfpga <report|train|fleet|mission|fleetlearn|sweep|throughput|radiation|v
   radiation resilience campaign: train under seeded SEU injection and print
             learning-delta degradation vs mitigation overhead
             [--rate R]            upsets per bit per step (overrides --rad-env)
+            [--rate-schedule S]   time-varying rate profile; every cell's
+                                  constant rate scales its base:
+                                  R | spike:R0,Rpeak,START,LEN |
+                                  phases:R1@N1,R2@N2,...
             [--rad-env E]         cruise|mars-surface|jupiter-flyby (default
                                   mars-surface; rates are per bit per kilostep)
             [--mitigation M]      none|tmr|scrub[:N]|ecc|all   (default all)
@@ -162,11 +187,12 @@ USAGE: qfpga <report|train|fleet|mission|fleetlearn|sweep|throughput|radiation|v
             match the recorded one bit-exactly; exits non-zero on mismatch
   info                            artifacts, device, cycle model summary
 
-  --json FILE   (report/train/fleet/mission/fleetlearn/sweep/throughput/
-                radiation/validate/loadgen/info) also write the
+  --json FILE   (report/train/fleet/mission/fleetlearn/harden/sweep/
+                throughput/radiation/validate/loadgen/info) also write the
                 subcommand's typed JSON report to FILE
 
-observability (train/fleet/mission/fleetlearn/sweep/throughput/radiation):
+observability (train/fleet/mission/fleetlearn/harden/sweep/throughput/
+radiation):
   --manifest FILE   write a versioned run-provenance manifest (schema,
                     run id, git describe, replayable spec + sha256, seed,
                     delta metrics snapshot, report sha256)
@@ -198,6 +224,7 @@ const COMMANDS: &[(&str, Handler)] = &[
     ("fleet", cmd_fleet),
     ("mission", cmd_mission),
     ("fleetlearn", cmd_fleetlearn),
+    ("harden", cmd_harden),
     ("sweep", cmd_sweep),
     ("throughput", cmd_throughput),
     ("radiation", cmd_radiation),
@@ -654,6 +681,135 @@ fn cmd_fleetlearn(args: &Args) -> Result<()> {
     obs.finish("fleetlearn", spec.seed, spec.to_json(), "F1", &doc)
 }
 
+/// Validate a rate the way `radiation`/`harden` need it: finite, in
+/// [0, 1] upsets/bit/step, with the error spelling out the valid form.
+fn parse_rate(flag: &str, text: &str) -> Result<f64> {
+    let rate = text.parse::<f64>().map_err(|_| {
+        qfpga::error::Error::Config(format!(
+            "bad --{flag} `{text}` (expected upsets/bit/step as a number, e.g. 1e-4)"
+        ))
+    })?;
+    if !rate.is_finite() || rate < 0.0 || rate > 1.0 {
+        return Err(qfpga::error::Error::Config(format!(
+            "--{flag} {rate} out of range [0, 1] upsets/bit/step (1.0 already \
+             randomizes every bit every step)"
+        )));
+    }
+    Ok(rate)
+}
+
+/// Parse `--rate-schedule`, rejecting profiles whose peak leaves [0, 1].
+/// The `FromStr` error already enumerates the valid forms (`R`,
+/// `spike:R0,Rpeak,START,LEN`, `phases:R1@N1,R2@N2,...`).
+fn parse_rate_schedule(text: &str) -> Result<qfpga::fault::RateSchedule> {
+    let schedule = text.parse::<qfpga::fault::RateSchedule>()?;
+    let peak = schedule.max_rate();
+    if !peak.is_finite() || peak < 0.0 || peak > 1.0 {
+        return Err(qfpga::error::Error::Config(format!(
+            "--rate-schedule peak rate {peak} out of range [0, 1] upsets/bit/step \
+             (1.0 already randomizes every bit every step)"
+        )));
+    }
+    Ok(schedule)
+}
+
+/// `harden` — the radiation-hardening auto-tuner: mitigation placement ×
+/// CRAM scrub interval × word length Pareto-searched per environment,
+/// printed as table H1.
+fn cmd_harden(args: &Args) -> Result<()> {
+    use qfpga::coordinator::{harden_table_with_drain, HardenSpec};
+    use qfpga::fault::Mitigation;
+
+    let d = HardenSpec::default();
+    let spec = HardenSpec {
+        envs: match args.get_or("env", "all") {
+            "all" => EnvKind::all().to_vec(),
+            e => vec![e.parse::<EnvKind>()?],
+        },
+        arch: args.get_or("arch", "mlp").parse::<Arch>()?,
+        episodes: args.get_parse("episodes", d.episodes)?,
+        max_steps: args.get_parse("max-steps", d.max_steps)?,
+        seed: args.get_parse("seed", d.seed)?,
+        rate: match args.get("rate") {
+            Some(r) => parse_rate("rate", r)?,
+            None => d.rate,
+        },
+        cram_rate: match args.get("cram-rate") {
+            Some(r) => parse_rate("cram-rate", r)?,
+            None => d.cram_rate,
+        },
+        schedule: match args.get("rate-schedule") {
+            Some("none") => None,
+            Some(s) => Some(parse_rate_schedule(s)?),
+            None => d.schedule,
+        },
+        mitigations: match args.get("mitigations") {
+            Some(list) => list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| p.trim().parse::<Mitigation>())
+                .collect::<Result<Vec<_>>>()?,
+            None => d.mitigations,
+        },
+        scrubs: match args.get("scrubs") {
+            Some(list) => list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| match p.trim() {
+                    "none" => Ok(None),
+                    n => n.parse::<u32>().map(Some).map_err(|_| {
+                        qfpga::error::Error::Config(format!(
+                            "bad --scrubs entry `{n}` (none for unscrubbed, 0 for \
+                             continuous readback, or a step interval)"
+                        ))
+                    }),
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => d.scrubs,
+        },
+        words: match args.get("words") {
+            Some(list) => list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| {
+                    p.trim().parse::<u32>().map_err(|_| {
+                        qfpga::error::Error::Config(format!(
+                            "bad --words entry `{p}` (use 8|12|16|18|24|32)"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => d.words,
+        },
+    };
+
+    let obs = ObsRun::begin(args);
+    shutdown::install();
+    println!(
+        "harden campaign: [{}] × mitigations [{}] × cram scrubs [{}] × words [{}], \
+         data {:.1e} / cram {:.1e} upsets/bit/step{}",
+        spec.envs.iter().map(|e| e.as_str()).collect::<Vec<_>>().join(", "),
+        spec.mitigations.iter().map(Mitigation::label).collect::<Vec<_>>().join(", "),
+        spec.scrubs
+            .iter()
+            .map(|s| s.map(|n| n.to_string()).unwrap_or_else(|| "none".into()))
+            .collect::<Vec<_>>()
+            .join(", "),
+        spec.words.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(", "),
+        spec.rate,
+        spec.cram_rate,
+        spec.schedule
+            .as_ref()
+            .map(|s| format!(", schedule {}", s.label()))
+            .unwrap_or_default(),
+    );
+    let table = harden_table_with_drain(&spec, true)?;
+    print!("{table}");
+    let doc = table.to_json();
+    write_json(args, &doc)?;
+    obs.finish("harden", spec.seed, spec.to_json(), "H1", &doc)
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let n = args.get_parse("updates", 1_000usize)?;
     let batch = args.get_parse("batch", 0usize)?;
@@ -698,7 +854,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// SEU injection and scored as learning-delta degradation vs the modeled
 /// mitigation overheads.
 fn cmd_radiation(args: &Args) -> Result<()> {
-    use qfpga::coordinator::sweep::resilience;
+    use qfpga::coordinator::sweep::resilience_scheduled;
     use qfpga::fault::{Mitigation, RadEnvironment};
 
     let base = MissionConfig {
@@ -714,17 +870,10 @@ fn cmd_radiation(args: &Args) -> Result<()> {
 
     let rad_env = args.get_or("rad-env", "mars-surface").parse::<RadEnvironment>()?;
     let rate = match args.get("rate") {
-        Some(r) => r
-            .parse::<f64>()
-            .map_err(|_| qfpga::error::Error::Config(format!("bad --rate `{r}`")))?,
+        Some(r) => parse_rate("rate", r)?,
         None => rad_env.upsets_per_bit_per_step(),
     };
-    if !rate.is_finite() || rate < 0.0 || rate > 1.0 {
-        return Err(qfpga::error::Error::Config(format!(
-            "--rate {rate} out of range [0, 1] upsets/bit/step (1.0 already \
-             randomizes every bit every step)"
-        )));
-    }
+    let schedule = args.get("rate-schedule").map(parse_rate_schedule).transpose()?;
 
     let mitigations: Vec<Mitigation> = match args.get_or("mitigation", "all") {
         "all" => Mitigation::all().to_vec(),
@@ -738,19 +887,24 @@ fn cmd_radiation(args: &Args) -> Result<()> {
     let obs = ObsRun::begin(args);
 
     println!(
-        "radiation campaign: {} × [{} {} {}] @ {rate:.1e} upsets/bit/step ({}), \
+        "radiation campaign: {} × [{} {} {}] @ {rate:.1e} upsets/bit/step ({}){}, \
          mitigations [{}], {rovers} rovers/cell",
         backends.iter().map(|b| b.as_str()).collect::<Vec<_>>().join("+"),
         base.arch.as_str(),
         base.env.as_str(),
         base.precision.as_str(),
         if args.get("rate").is_some() { "explicit".to_string() } else { rad_env.label() },
+        schedule
+            .as_ref()
+            .map(|s| format!(", schedule {}", s.label()))
+            .unwrap_or_default(),
         mitigations.iter().map(Mitigation::label).collect::<Vec<_>>().join(", "),
     );
 
-    let campaign = resilience(&base, &backends, &[rate], &mitigations, rovers)?;
+    let campaign =
+        resilience_scheduled(&base, &backends, &[rate], &mitigations, rovers, schedule.clone())?;
     print!("{}", campaign.render());
-    let spec_doc = Json::obj(vec![
+    let mut spec_fields = vec![
         ("mission", base.to_json()),
         ("rate", Json::Num(rate)),
         (
@@ -767,7 +921,13 @@ fn cmd_radiation(args: &Args) -> Result<()> {
             ),
         ),
         ("rovers", Json::Num(rovers as f64)),
-    ]);
+    ];
+    // only-when-set keeps constant-rate spec documents byte-identical to
+    // the pre-schedule wire format
+    if let Some(s) = &schedule {
+        spec_fields.push(("schedule", s.to_json()));
+    }
+    let spec_doc = Json::obj(spec_fields);
     let doc = campaign.to_json();
     write_json(args, &doc)?;
     obs.finish("radiation", base.seed, spec_doc, "R2", &doc)
@@ -1052,9 +1212,9 @@ fn replay_report(m: &RunManifest) -> Result<Json> {
         return Err(qfpga::error::Error::Config(format!(
             "`{}` manifests validate but cannot replay: only the \
              train/fleet/mission job shapes can be scheduled (measurement \
-             campaigns record host-timed results; `fleetlearn` sweeps are \
-             re-checked with `qfpga fleetlearn --json` + `qfpga diff` \
-             instead)",
+             campaigns record host-timed results; `fleetlearn` and `harden` \
+             sweeps are re-checked with `qfpga fleetlearn --json` / \
+             `qfpga harden --json` + `qfpga diff` instead)",
             m.subcommand
         )));
     }

@@ -175,6 +175,12 @@ pub struct Metrics {
     pub fault_escaped: Counter,
     /// Scrub passes executed by the protected store.
     pub fault_scrub_bursts: Counter,
+    /// Configuration-memory (CRAM) frame upsets injected.
+    pub fault_cram_upsets: Counter,
+    /// CRAM frames repaired by the configuration scrubber.
+    pub fault_cram_repairs: Counter,
+    /// Steps a corrupted CRAM frame stood before its scrub repair.
+    pub fault_cram_scrub_latency: Histogram,
     /// Jobs accepted by the serve gateway.
     pub serve_jobs_submitted: Counter,
     /// Jobs completed (executed or served from cache).
@@ -236,6 +242,9 @@ impl Metrics {
             fault_masked: C,
             fault_escaped: C,
             fault_scrub_bursts: C,
+            fault_cram_upsets: C,
+            fault_cram_repairs: C,
+            fault_cram_scrub_latency: Histogram::new(),
             serve_jobs_submitted: C,
             serve_jobs_completed: C,
             serve_jobs_rejected: C,
@@ -488,6 +497,38 @@ impl MetricsSnapshot {
             "Scrub passes executed by the protected store",
             &m.fault_scrub_bursts,
         ));
+        families.push(scalar_counter(
+            "qfpga_fault_cram_upsets_total",
+            "Configuration-memory frame upsets injected",
+            &m.fault_cram_upsets,
+        ));
+        families.push(scalar_counter(
+            "qfpga_fault_cram_repairs_total",
+            "CRAM frames repaired by the configuration scrubber",
+            &m.fault_cram_repairs,
+        ));
+        let cram_buckets: Vec<(u64, u64)> = {
+            let mut cum = 0;
+            (0..HIST_BUCKETS)
+                .map(|i| {
+                    cum += m.fault_cram_scrub_latency.buckets[i].load(Ordering::Relaxed);
+                    (Histogram::bound(i), cum)
+                })
+                .collect()
+        };
+        families.push(Family {
+            name: "qfpga_fault_cram_scrub_latency_steps",
+            kind: MetricKind::Histogram,
+            help: "Steps a corrupted CRAM frame stood before its scrub repair",
+            series: vec![Series {
+                labels: Vec::new(),
+                value: SeriesValue::Hist {
+                    buckets: cram_buckets,
+                    sum: m.fault_cram_scrub_latency.sum.load(Ordering::Relaxed),
+                    count: m.fault_cram_scrub_latency.count.load(Ordering::Relaxed),
+                },
+            }],
+        });
         families.push(scalar_counter(
             "qfpga_serve_jobs_submitted_total",
             "Jobs accepted by the serve gateway",
@@ -763,6 +804,22 @@ mod tests {
         assert!(prom.contains("# TYPE qfpga_serve_queue_depth gauge"));
         assert!(prom.contains("# TYPE qfpga_serve_jobs_in_flight gauge"));
         assert!(prom.contains("# TYPE qfpga_serve_preemptions_total counter"));
+    }
+
+    #[test]
+    fn cram_families_are_exposed() {
+        let base = MetricsSnapshot::capture();
+        metrics().fault_cram_upsets.add(2);
+        metrics().fault_cram_repairs.inc();
+        metrics().fault_cram_scrub_latency.observe(5);
+        let d = MetricsSnapshot::capture().delta(&base);
+        assert!(d.total("qfpga_fault_cram_upsets_total") >= 2);
+        assert!(d.total("qfpga_fault_cram_repairs_total") >= 1);
+        assert!(d.total("qfpga_fault_cram_scrub_latency_steps") >= 1);
+        let prom = d.to_prometheus();
+        assert!(prom.contains("# TYPE qfpga_fault_cram_upsets_total counter"));
+        assert!(prom.contains("# TYPE qfpga_fault_cram_scrub_latency_steps histogram"));
+        assert!(prom.contains("qfpga_fault_cram_scrub_latency_steps_bucket{le=\"+Inf\"}"));
     }
 
     #[test]

@@ -335,10 +335,10 @@ mod tests {
         assert!(!JobSpec::Fleet { cfg: tiny_cfg(), rovers: 2, share: None }.preemptible());
         assert!(!JobSpec::Mission(ScenarioSpec::default()).preemptible());
         let mut faulted = tiny_cfg();
-        faulted.fault = Some(crate::fault::FaultPlan {
-            rate: 1e-4,
-            mitigation: crate::fault::Mitigation::None,
-        });
+        faulted.fault = Some(crate::fault::FaultPlan::constant(
+            1e-4,
+            crate::fault::Mitigation::None,
+        ));
         assert!(!JobSpec::Train(faulted).preemptible());
     }
 

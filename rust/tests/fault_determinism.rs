@@ -3,17 +3,20 @@
 //! * same seed + rate + mitigation ⇒ bit-identical injected weights and
 //!   identical campaign reports, across runs and across the fleet
 //!   scheduler;
+//! * same seed + rate schedule ⇒ bit-identical CRAM strike/repair logs,
+//!   across runs and across fleet widths;
 //! * TMR and SECDED fully mask single-bit flips on `Fixed` words at every
-//!   `FixedSpec` the repo uses (seeded-random property sweep, same style
-//!   as `tests/proptests.rs`).
+//!   `FixedSpec` the repo uses, and continuous configuration scrubbing
+//!   masks every single-frame CRAM upset (seeded-random property sweeps,
+//!   same style as `tests/proptests.rs`).
 
 use qfpga::config::{Arch, EnvKind, NetConfig, Precision};
 use qfpga::coordinator::sweep::{resilience, Workload};
 use qfpga::coordinator::{run_fleet, MissionConfig};
 use qfpga::experiment::{AnyBackend, BackendFactory, BackendSpec};
 use qfpga::fault::{
-    FaultModel, FaultPlan, FaultStats, FaultyBackend, Mitigation, ProtectedStore, Secded,
-    WordCodec,
+    CramPlan, CramState, FaultModel, FaultPlan, FaultStats, FaultyBackend, FrameMap,
+    Mitigation, ProtectedStore, RateSchedule, Secded, WordCodec,
 };
 use qfpga::fixed::{Fixed, FixedSpec};
 use qfpga::nn::params::QNetParams;
@@ -148,7 +151,7 @@ fn faulted_fleet_is_reproducible_per_rover() {
         episodes: 5,
         max_steps: 30,
         backend: BackendKind::FpgaSim,
-        fault: Some(FaultPlan { rate: 5e-4, mitigation: Mitigation::Scrub { interval: 16 } }),
+        fault: Some(FaultPlan::constant(5e-4, Mitigation::Scrub { interval: 16 })),
         ..Default::default()
     };
     let a = run_fleet(&cfg, 3).unwrap();
@@ -171,6 +174,139 @@ fn faulted_fleet_is_reproducible_per_rover() {
             || r0.train.episodes[0].total_reward != r1.train.episodes[0].total_reward,
         "rover 0 and 1 are identical"
     );
+}
+
+// ----------------------------------------------------------- CRAM matrix
+
+/// Every schedule shape × scrub arm: same seed + schedule ⇒ bit-identical
+/// CRAM strike/repair logs and stats across runs; a different seed moves
+/// the strikes.
+#[test]
+fn cram_logs_are_bit_identical_across_runs() {
+    let frames = FrameMap::of(&NetConfig::new(Arch::Mlp, EnvKind::Simple), Precision::Fixed);
+    let schedules: [Option<RateSchedule>; 3] = [
+        None,
+        Some(RateSchedule::Spike { base: 2e-6, peak: 2e-4, start: 20, len: 30 }),
+        Some(RateSchedule::Phases(vec![(5e-5, 40), (5e-6, 60)])),
+    ];
+    for schedule in &schedules {
+        for scrub in [None, Some(0), Some(8)] {
+            let plan = CramPlan { rate: 2e-5, scrub };
+            let run = |seed: u64| {
+                let mut c = CramState::new(seed, plan, frames, schedule.clone());
+                for chunk in [7u64, 1, 13, 4, 25, 50] {
+                    c.advance(chunk);
+                }
+                (c.log().to_vec(), c.stats())
+            };
+            let (l1, s1) = run(77);
+            let (l2, s2) = run(77);
+            assert_eq!(l1, l2, "{schedule:?}/{scrub:?}: log diverged across runs");
+            assert_eq!(s1, s2, "{schedule:?}/{scrub:?}: stats diverged");
+            assert!(s1.cram_upsets > 0, "{schedule:?}/{scrub:?}: no strikes drawn");
+            let (l3, _) = run(78);
+            assert_ne!(l1, l3, "{schedule:?}/{scrub:?}: seed does not move strikes");
+        }
+    }
+}
+
+/// The same rover sees the same radiation regardless of fleet width: CRAM
+/// strikes, repairs and trajectories derive from the rover's own seed,
+/// never from the scheduler.
+#[test]
+fn cram_faulted_fleet_is_width_invariant() {
+    let cfg = MissionConfig {
+        episodes: 4,
+        max_steps: 30,
+        backend: BackendKind::FpgaSim,
+        fault: Some(
+            FaultPlan::constant(2e-4, Mitigation::None)
+                .with_schedule(RateSchedule::Spike {
+                    base: 2e-4,
+                    peak: 2e-3,
+                    start: 10,
+                    len: 40,
+                })
+                .with_cram(CramPlan { rate: 2e-3, scrub: Some(16) }),
+        ),
+        ..Default::default()
+    };
+    let solo = run_fleet(&cfg, 1).unwrap();
+    let wide = run_fleet(&cfg, 3).unwrap();
+    let (a, b) = (&solo.rovers[0], &wide.rovers[0]);
+    assert_eq!(a.fault, b.fault, "rover 0 fault exposure depends on fleet width");
+    for (ex, ey) in a.train.episodes.iter().zip(&b.train.episodes) {
+        assert_eq!(ex.total_reward.to_bits(), ey.total_reward.to_bits());
+    }
+    let s = a.fault.unwrap();
+    assert!(s.cram_upsets > 0, "no CRAM strikes at 2e-3/bit/step");
+    assert!(s.cram_repairs > 0, "scrub:16 never ran a repair pass");
+}
+
+/// Continuous readback scrubbing (`scrub: Some(0)`) masks every
+/// single-frame upset: corruption never outlives the exposure window it
+/// landed in, so the datapath transform is always the identity.
+#[test]
+fn prop_continuous_scrub_masks_every_frame_upset() {
+    let frames = FrameMap::of(&NetConfig::new(Arch::Mlp, EnvKind::Simple), Precision::Fixed);
+    let mut rng = Rng::seeded(0xC4A7);
+    let params: Vec<f32> = (0..257).map(|i| (i as f32) * 0.125 - 16.0).collect();
+    let mut total = 0;
+    for case in 0..60 {
+        let rate = [1e-4, 1e-5, 1e-6][rng.below(3)];
+        let mut c = CramState::new(
+            1000 + case as u64,
+            CramPlan { rate, scrub: Some(0) },
+            frames,
+            None,
+        );
+        for _ in 0..rng.range(2, 8) {
+            c.advance(rng.range(1, 40) as u64);
+            assert_eq!(c.dirty_frames(), 0, "case {case}: corruption survived the window");
+            let mut seen = params.clone();
+            c.corrupt(&mut seen);
+            assert_eq!(seen, params, "case {case}: corrupt() was not the identity");
+        }
+        let s = c.stats();
+        // repairs are per frame, upsets per strike: same-window strikes on
+        // one frame collapse into a single repair, never into survival
+        assert!(s.cram_repairs <= s.cram_upsets, "case {case}");
+        assert_eq!(s.cram_repairs > 0, s.cram_upsets > 0, "case {case}: unrepaired upsets");
+        total += s.cram_upsets;
+    }
+    assert!(total > 0, "sweep never drew a strike");
+}
+
+/// A solar-event spike integrates to exactly the fluence of the
+/// equivalent constant — base rate over the horizon plus the excess over
+/// the event window — whether integrated one-shot or in random chunks.
+#[test]
+fn prop_spike_fluence_matches_equivalent_constant() {
+    let mut rng = Rng::seeded(0x5014);
+    for case in 0..CASES {
+        let base = rng.f32_range(0.0, 1e-3) as f64;
+        let peak = base + rng.f32_range(1e-4, 1e-2) as f64;
+        let horizon = rng.range(50, 400) as u64;
+        let start = rng.below(horizon as usize / 2) as u64;
+        let len = rng.range(1, (horizon - start) as usize) as u64; // window ⊆ horizon
+        let spike = RateSchedule::Spike { base, peak, start, len };
+        let fluence = base * horizon as f64 + (peak - base) * len as f64;
+        let tol = fluence.abs() * 1e-9 + 1e-15;
+        let one_shot = spike.expected_upsets(0, horizon);
+        assert!((one_shot - fluence).abs() <= tol, "case {case}: {one_shot} vs {fluence}");
+        // the equivalent constant spreads the same fluence uniformly
+        let flat = RateSchedule::Constant(fluence / horizon as f64).expected_upsets(0, horizon);
+        assert!((one_shot - flat).abs() <= tol, "case {case}: {one_shot} vs flat {flat}");
+        // chunked integration sums to the same fluence
+        let mut cursor = 0u64;
+        let mut sum = 0.0;
+        while cursor < horizon {
+            let chunk = (rng.range(1, 30) as u64).min(horizon - cursor);
+            sum += spike.expected_upsets(cursor, chunk);
+            cursor += chunk;
+        }
+        assert!((sum - one_shot).abs() <= tol, "case {case}: chunked {sum} vs {one_shot}");
+    }
 }
 
 // ------------------------------------------------- masking property sweeps

@@ -220,7 +220,7 @@ fn builder_rejects_faulted_checkpointing_up_front() {
     let err = Experiment::from_mission(&MissionConfig {
         episodes: 50,
         precision: Precision::Fixed,
-        fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+        fault: Some(FaultPlan::constant(1e-4, Mitigation::None)),
         ..quick_cfg()
     })
     .rovers(2)
@@ -239,7 +239,7 @@ fn faulted_missions_refuse_checkpoints() {
         episodes: 4,
         max_steps: 20,
         precision: Precision::Fixed,
-        fault: Some(FaultPlan { rate: 1e-4, mitigation: Mitigation::None }),
+        fault: Some(FaultPlan::constant(1e-4, Mitigation::None)),
         ..Default::default()
     };
     let factory = BackendFactory::for_kind(cfg.backend).unwrap();

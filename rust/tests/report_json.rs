@@ -129,6 +129,7 @@ fn campaign_json_diffs_against_itself_and_flags_degradation_drift() {
         rates: vec![1e-4],
         mitigations: vec![Mitigation::None],
         rovers: 1,
+        schedule: None,
     };
     let r = run_campaign(&spec).unwrap();
     let j = Report::to_json(&r);
